@@ -1,0 +1,126 @@
+//! End-to-end driver (the brief's required validation run): train the
+//! decoder LM on the synthetic corpus through the full three-layer stack
+//! — Rust coordinator -> AOT HLO train step (JAX/Pallas math) -> PJRT —
+//! and log the loss curve.  Compares Full vs WTA-CRS@0.3 backward.
+//!
+//! Run with:
+//!   cargo run --release --example e2e_lm_train -- \
+//!       [--size lm_small] [--steps 300] [--methods full,full-wtacrs30]
+//!
+//! The recorded run for EXPERIMENTS.md uses lm_small (~25M params) for a
+//! few hundred steps; lm_100m (~110M params) is compiled too and runs
+//! with --size lm_100m --steps 20 on this CPU host.
+
+use anyhow::Result;
+use wtacrs::data::Corpus;
+use wtacrs::runtime::{Engine, HostTensor};
+use wtacrs::util::cli::Cli;
+
+fn main() -> Result<()> {
+    wtacrs::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("e2e_lm_train", "end-to-end LM training loss curve")
+        .opt("size", "lm_small", "lm_small | lm_100m")
+        .opt("steps", "300", "training steps")
+        .opt("lr", "0.0006", "base learning rate")
+        .opt("methods", "full,full-wtacrs30", "comma-separated methods")
+        .opt("log-every", "20", "log cadence")
+        .opt("seed", "0", "corpus + init seed")
+        .flag("help", "show options");
+    let p = cli.parse(&args)?;
+    if p.get_flag("help") {
+        println!("{}", cli.usage());
+        return Ok(());
+    }
+
+    let engine = Engine::from_default_dir()?;
+    let size = p.get("size");
+    let model = engine
+        .manifest
+        .models
+        .get(size)
+        .ok_or_else(|| anyhow::anyhow!("unknown model {size:?}"))?
+        .clone();
+    let corpus = Corpus::new(model.vocab, p.get_u64("seed")?);
+    let steps = p.get_usize("steps")?;
+    let log_every = p.get_usize("log-every")?.max(1);
+
+    println!(
+        "# e2e LM: {size} ({:.0}M params, vocab {}, B={}, S={}) — uniform baseline CE = ln(V) = {:.2}",
+        model.param_count as f64 / 1e6,
+        model.vocab,
+        model.batch,
+        model.seq_len,
+        (model.vocab as f64).ln()
+    );
+
+    let mut curves: Vec<(String, Vec<(f64, f64)>)> = vec![];
+    for method in p.get("methods").split(',') {
+        let train_id = format!("train_{size}_{method}");
+        let init_id = format!("init_{size}_full");
+        let train = engine.load(&train_id)?;
+        let init = engine.load(&init_id)?;
+        let spec = &train.spec;
+        let nt = spec.meta_usize("n_trainable")?;
+        let nf = spec.meta_usize("n_frozen")?;
+        let (b, s) = (spec.batch, spec.seq);
+
+        let mut state: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|t| HostTensor::zeros(&t.shape, t.dtype))
+            .collect();
+        for (i, t) in init
+            .run(&[HostTensor::scalar_i32(p.get_u64("seed")? as i32)])?
+            .into_iter()
+            .enumerate()
+        {
+            state[i] = t;
+        }
+        let i_tokens = spec.input_index("tokens")?;
+        let i_znorms = spec.input_index("znorms")?;
+        let i_step = spec.input_index("step")?;
+        let i_lr = spec.input_index("lr")?;
+        state[i_lr] = HostTensor::scalar_f32(p.get_f64("lr")? as f32);
+        state[i_znorms] = HostTensor::ones_f32(&spec.inputs[i_znorms].shape);
+
+        println!("\n== method {method} ==");
+        println!("step\tloss\ttok/s");
+        let t0 = std::time::Instant::now();
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        let mut curve: Vec<(f64, f64)> = vec![];
+        for step in 0..steps {
+            state[i_tokens] =
+                HostTensor::i32(vec![b, s], corpus.batch(b, s, step as u64));
+            let mut outs = train.run(&state)?;
+            let loss = outs[3 * nt + 1].scalar_f32_value()?;
+            wtacrs::coordinator::trainer::advance_state(
+                &mut state, &mut outs, nt, nf, i_step, i_znorms,
+            );
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+            curve.push((step as f64, loss as f64));
+            if (step + 1) % log_every == 0 || step == 0 {
+                let tps = ((step + 1) * b * s) as f64 / t0.elapsed().as_secs_f64();
+                println!("{}\t{loss:.4}\t{tps:.0}", step + 1);
+            }
+            anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+        }
+        println!(
+            "method {method}: loss {first:.3} -> {last:.3} over {steps} steps ({:.1}s)",
+            t0.elapsed().as_secs_f64()
+        );
+        engine.evict(&train_id); // free the compiled graph between methods
+        curves.push((method.to_string(), curve));
+    }
+    let series: Vec<(&str, Vec<(f64, f64)>)> =
+        curves.iter().map(|(n, c)| (n.as_str(), c.clone())).collect();
+    println!(
+        "\n{}",
+        wtacrs::util::plot::line_chart("loss curve (CE vs step)", &series, 72, 16)
+    );
+    Ok(())
+}

@@ -1,0 +1,87 @@
+//! GLUE sweep: fine-tune one model size across tasks and methods and
+//! print a Table-1-style grid (the paper's §5.2 protocol, scaled).
+//!
+//! Run with:
+//!   cargo run --release --example glue_finetune -- \
+//!       [--size tiny] [--steps 200] [--tasks rte,sst2] \
+//!       [--methods full,full-wtacrs30] [--out results/glue.jsonl]
+
+use anyhow::Result;
+use wtacrs::coordinator::{self, ExperimentOptions, TrainOptions};
+use wtacrs::runtime::Engine;
+use wtacrs::util::bench::Table;
+use wtacrs::util::cli::Cli;
+
+fn main() -> Result<()> {
+    wtacrs::util::logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cli = Cli::new("glue_finetune", "Table-1-style GLUE sweep")
+        .opt("size", "tiny", "model size (tiny/small)")
+        .opt("steps", "200", "train steps per task")
+        .opt("lr", "0.001", "base learning rate")
+        .opt("tasks", "rte,sst2,cola", "comma-separated task list, or 'all'")
+        .opt(
+            "methods",
+            "full,lora,full-wtacrs30,lora-wtacrs30",
+            "comma-separated methods, or 'all'",
+        )
+        .opt("out", "", "append JSON-lines results here")
+        .flag("help", "show options");
+    let p = cli.parse(&args)?;
+    if p.get_flag("help") {
+        println!("{}", cli.usage());
+        return Ok(());
+    }
+
+    let tasks: Vec<&str> = if p.get("tasks") == "all" {
+        wtacrs::data::TASKS.iter().map(|t| t.name).collect()
+    } else {
+        p.get("tasks").split(',').collect()
+    };
+    let methods: Vec<&str> = if p.get("methods") == "all" {
+        coordinator::experiment::METHODS.to_vec()
+    } else {
+        p.get("methods").split(',').collect()
+    };
+
+    let engine = Engine::from_default_dir()?;
+    let opts = ExperimentOptions {
+        train: TrainOptions {
+            lr: p.get_f64("lr")? as f32,
+            max_steps: p.get_usize("steps")?,
+            eval_every: 0,
+            patience: 0,
+            seed: 0,
+        },
+        ..Default::default()
+    };
+
+    let mut headers = vec!["method".to_string()];
+    headers.extend(tasks.iter().map(|t| t.to_string()));
+    headers.push("AVG".to_string());
+    let mut table = Table::new(&headers.iter().map(String::as_str).collect::<Vec<_>>());
+
+    let mut all_results = vec![];
+    for method in &methods {
+        let mut cells = vec![method.to_string()];
+        let mut scores = vec![];
+        for task in &tasks {
+            let r = coordinator::run_glue(&engine, task, p.get("size"), method, &opts)?;
+            cells.push(format!("{:.1}", 100.0 * r.score));
+            scores.push(r.score);
+            all_results.push(r);
+        }
+        let avg = 100.0 * scores.iter().sum::<f64>() / scores.len() as f64;
+        cells.push(format!("{avg:.1}"));
+        table.row(&cells);
+    }
+    println!("\nGLUE results ({} size, {} steps):", p.get("size"), p.get("steps"));
+    table.print();
+
+    let out = p.get("out");
+    if !out.is_empty() {
+        coordinator::experiment::write_results(out, &all_results)?;
+        println!("\nwrote {} results to {out}", all_results.len());
+    }
+    Ok(())
+}

@@ -1,0 +1,53 @@
+//! Quickstart: the smallest useful WTA-CRS workflow.
+//!
+//! Loads the AOT artifacts, fine-tunes a tiny transformer on the
+//! synthetic RTE task with WTA-CRS@0.3 (the paper's headline budget),
+//! evaluates, and prints the memory story the method buys you.
+//!
+//! Run with:  cargo run --release --example quickstart
+
+use anyhow::Result;
+use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::memsim::{self, Scope, Workload};
+use wtacrs::runtime::Engine;
+
+fn main() -> Result<()> {
+    wtacrs::util::logging::init();
+
+    // 1. Engine: PJRT CPU client + the artifact manifest.
+    let engine = Engine::from_default_dir()?;
+    println!("platform: {}", engine.platform_name());
+
+    // 2. Fine-tune: tiny encoder, synthetic RTE, WTA-CRS at k = 0.3|D|.
+    let opts = ExperimentOptions {
+        train: TrainOptions {
+            lr: 1e-3,
+            seed: 0,
+            max_steps: 150,
+            eval_every: 50,
+            patience: 0,
+        },
+        ..Default::default()
+    };
+    let result = run_glue(&engine, "rte", "tiny", "full-wtacrs30", &opts)?;
+    println!(
+        "rte acc = {:.3} after {} steps ({:.1} sentences/sec)",
+        result.score, result.report.steps, result.report.throughput
+    );
+    for (step, acc) in &result.report.evals {
+        println!("  eval @ step {step}: acc {acc:.3}");
+    }
+
+    // 3. The memory story (the paper's Table 2, from the memory model):
+    let dims = memsim::Dims::paper("t5-base").unwrap();
+    let w = Workload { batch: 64, seq: 128, bytes: 4 };
+    let full = memsim::peak_bytes(&dims, &memsim::MethodMem::full(), &w, Scope::Paper);
+    let wta = memsim::peak_bytes(&dims, &memsim::MethodMem::wtacrs(0.3), &w, Scope::Paper);
+    println!(
+        "T5-Base @ B=64/S=128: Full {:.1} GB -> WTA-CRS@0.3 {:.1} GB ({:.1}x)",
+        full / 1e9,
+        wta / 1e9,
+        full / wta
+    );
+    Ok(())
+}

@@ -1,0 +1,288 @@
+"""AOT driver: lower every artifact the Rust side needs to HLO text.
+
+Usage (normally via `make artifacts`):
+
+    cd python && python -m compile.aot --out-dir ../artifacts [--only PAT]
+                                        [--force] [--skip-lm100m]
+
+Emits `<id>.hlo.txt` per artifact plus `manifest.json` describing each
+artifact's positional I/O contract (names, shapes, dtypes), the model
+dimension tables for the memory model, and the paper's true T5/BERT dims.
+HLO *text* is the interchange format (see hlo.py).  Python never runs
+again after this step.
+"""
+from __future__ import annotations
+
+import argparse
+import fnmatch
+import json
+import os
+import sys
+import time
+
+import jax.numpy as jnp
+
+from .config import SIZES, PAPER_DIMS, Method, ModelConfig, parse_method
+from .train import OptConfig, build_train_step, build_eval_step, build_init
+from .components import build_component, build_kernel
+from .hlo import lower_to_hlo_text
+
+# ---------------------------------------------------------------------------
+# Artifact catalogue
+# ---------------------------------------------------------------------------
+
+# Methods evaluated in the GLUE experiments (Tables 1-2, Figs 1/7/8).
+CLS_METHODS = [
+    "full",
+    "lora",
+    "lst",
+    "full-wtacrs30",
+    "full-wtacrs10",
+    "lora-wtacrs30",
+    "lora-wtacrs10",
+    "full-crs10",
+    "full-det10",
+]
+CLS_SIZES = ["tiny", "small"]
+CLS_OUTS = [1, 2, 3]  # stsb regression, binary tasks, mnli
+
+# Init/eval graphs do not depend on the sampler, only the tuning family.
+TUNING_REPS = {"full": "full", "lora": "lora", "lst": "lst"}
+
+LM_METHODS = ["full", "full-wtacrs30", "full-wtacrs10"]
+FIG9_BATCHES = [4, 16, 64]
+
+TABLE3_COMPONENTS = ["att", "ff", "block"]
+TABLE3_METHODS = ["full", "full-wtacrs30"]
+
+KERNEL_SHAPES = {
+    # name -> (m, din, dout, k).  k = 1280 (= 10 MXU tiles): block-
+    # divisible budgets keep the Pallas tiler at full 128-row blocks
+    # (EXPERIMENTS.md §Perf L1 iteration 2).
+    "row_norms": (4096, 1024, 1024, 1280),
+    "gather_scale": (4096, 1024, 1024, 1280),
+    "sampled_matmul": (4096, 1024, 1024, 1280),
+    "gather_scale_matmul": (4096, 1024, 1024, 1280),
+    "softmax_xent": (4096, 1024, 1024, 1280),
+}
+
+
+def _dt(dtype_str: str) -> str:
+    return {"float32": "f32", "int32": "i32", "uint32": "u32", "bool": "pred"}[
+        dtype_str
+    ]
+
+
+def _spec_json(spec) -> dict:
+    return {
+        "inputs": [
+            {"name": n, "shape": list(s), "dtype": _dt(d)}
+            for n, s, d in zip(spec.input_names, spec.input_shapes, spec.input_dtypes)
+        ],
+        "outputs": [
+            {"name": n, "shape": list(s), "dtype": _dt(d)}
+            for n, s, d in zip(
+                spec.output_names, spec.output_shapes, spec.output_dtypes
+            )
+        ],
+    }
+
+
+def _model_json(cfg: ModelConfig) -> dict:
+    return {
+        "vocab": cfg.vocab, "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "d_ff": cfg.d_ff, "seq_len": cfg.seq_len,
+        "batch": cfg.batch, "n_out": cfg.n_out, "kind": cfg.kind,
+        "param_count": cfg.param_count(),
+    }
+
+
+def catalogue(skip_lm100m: bool = False):
+    """Yield (artifact_id, builder_thunk, meta_base) for every artifact."""
+    # --- GLUE classification train steps -------------------------------
+    for size in CLS_SIZES:
+        for n_out in CLS_OUTS:
+            cfg = SIZES[size].with_(n_out=n_out)
+            for mname in CLS_METHODS:
+                method = parse_method(mname)
+                aid = f"train_{size}_{mname}_c{n_out}"
+                yield (
+                    aid,
+                    lambda cfg=cfg, method=method: build_train_step(
+                        cfg, method, OptConfig(total_steps=2000)
+                    ),
+                    {
+                        "kind": "train", "model": size, "method": mname,
+                        "n_out": n_out, "batch": cfg.batch, "seq": cfg.seq_len,
+                    },
+                )
+            for fam in TUNING_REPS.values():
+                method = parse_method(fam)
+                yield (
+                    f"eval_{size}_{fam}_c{n_out}",
+                    lambda cfg=cfg, method=method: build_eval_step(cfg, method),
+                    {
+                        "kind": "eval", "model": size, "method": fam,
+                        "n_out": n_out, "batch": cfg.batch, "seq": cfg.seq_len,
+                    },
+                )
+                yield (
+                    f"init_{size}_{fam}_c{n_out}",
+                    lambda cfg=cfg, method=method: build_init(cfg, method),
+                    {
+                        "kind": "init", "model": size, "method": fam,
+                        "n_out": n_out, "batch": cfg.batch, "seq": cfg.seq_len,
+                    },
+                )
+    # --- decoder-LM (end-to-end example + Fig 9) -----------------------
+    lm_sizes = ["lm_small"] + ([] if skip_lm100m else ["lm_100m"])
+    for size in lm_sizes:
+        cfg = SIZES[size]
+        methods = LM_METHODS if size == "lm_small" else ["full", "full-wtacrs30"]
+        for mname in methods:
+            method = parse_method(mname)
+            yield (
+                f"train_{size}_{mname}",
+                lambda cfg=cfg, method=method: build_train_step(
+                    cfg, method, OptConfig(total_steps=100_000)
+                ),
+                {
+                    "kind": "train", "model": size, "method": mname,
+                    "n_out": cfg.vocab, "batch": cfg.batch, "seq": cfg.seq_len,
+                },
+            )
+        yield (
+            f"init_{size}_full",
+            lambda cfg=cfg: build_init(cfg, Method()),
+            {
+                "kind": "init", "model": size, "method": "full",
+                "n_out": cfg.vocab, "batch": cfg.batch, "seq": cfg.seq_len,
+            },
+        )
+    # Fig 9: throughput vs batch size (lm_small at several batch sizes).
+    for b in FIG9_BATCHES:
+        for mname in LM_METHODS:
+            cfg = SIZES["lm_small"].with_(batch=b)
+            method = parse_method(mname)
+            yield (
+                f"train_lm_small_b{b}_{mname}",
+                lambda cfg=cfg, method=method: build_train_step(
+                    cfg, method, OptConfig(total_steps=100_000)
+                ),
+                {
+                    "kind": "train", "model": "lm_small", "method": mname,
+                    "n_out": cfg.vocab, "batch": b, "seq": cfg.seq_len,
+                },
+            )
+        yield (
+            f"init_lm_small_b{b}_full",
+            lambda b=b: build_init(SIZES["lm_small"].with_(batch=b), Method()),
+            {
+                "kind": "init", "model": "lm_small", "method": "full",
+                "n_out": SIZES["lm_small"].vocab, "batch": b,
+                "seq": SIZES["lm_small"].seq_len,
+            },
+        )
+    # --- Table 3 component latency --------------------------------------
+    for comp in TABLE3_COMPONENTS:
+        for mname in TABLE3_METHODS:
+            method = parse_method(mname)
+            for bwd in (False, True):
+                tag = "fb" if bwd else "fwd"
+                yield (
+                    f"comp_{comp}_{mname}_{tag}",
+                    lambda comp=comp, method=method, bwd=bwd: build_component(
+                        comp, method, bwd
+                    ),
+                    {"kind": "component", "model": "component", "method": mname},
+                )
+    # --- kernel micro-artifacts (pallas interpret vs jnp ref) ------------
+    for kname, (m, din, dout, k) in KERNEL_SHAPES.items():
+        for backend in ("ref", "pallas"):
+            yield (
+                f"kernel_{kname}_{backend}",
+                lambda kname=kname, backend=backend, m=m, din=din, dout=dout, k=k:
+                    build_kernel(kname, backend, m, din, dout, k),
+                {"kind": "kernel", "model": "kernel", "method": backend},
+            )
+
+
+# ---------------------------------------------------------------------------
+# Driver
+# ---------------------------------------------------------------------------
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="fnmatch pattern of artifact ids")
+    ap.add_argument("--force", action="store_true", help="re-lower existing files")
+    ap.add_argument("--skip-lm100m", action="store_true")
+    ap.add_argument("--list", action="store_true", help="print ids and exit")
+    args = ap.parse_args(argv)
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "artifacts": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+        manifest.setdefault("artifacts", {})
+
+    entries = list(catalogue(skip_lm100m=args.skip_lm100m))
+    if args.list:
+        for aid, _, meta in entries:
+            print(f"{aid:44s} {meta['kind']}")
+        return 0
+
+    n_done = n_skip = 0
+    t_start = time.time()
+    for aid, thunk, meta in entries:
+        if args.only and not fnmatch.fnmatch(aid, args.only):
+            continue
+        path = os.path.join(args.out_dir, f"{aid}.hlo.txt")
+        if (
+            not args.force
+            and os.path.exists(path)
+            and aid in manifest["artifacts"]
+        ):
+            n_skip += 1
+            continue
+        t0 = time.time()
+        fn, ex_inputs, spec, extra = thunk()
+        text = lower_to_hlo_text(fn, ex_inputs)
+        with open(path, "w") as f:
+            f.write(text)
+        entry = {"path": f"{aid}.hlo.txt", **meta, **_spec_json(spec)}
+        entry["meta"] = {k: v for k, v in extra.items()}
+        manifest["artifacts"][aid] = entry
+        n_done += 1
+        print(
+            f"[aot] {aid:44s} {len(text)/1e6:6.2f} MB  {time.time()-t0:5.1f}s",
+            flush=True,
+        )
+        # Checkpoint the manifest as we go (lowering can be interrupted).
+        _write_manifest(manifest, manifest_path, args.skip_lm100m)
+    _write_manifest(manifest, manifest_path, args.skip_lm100m)
+    print(
+        f"[aot] done: {n_done} lowered, {n_skip} up-to-date "
+        f"({time.time()-t_start:.0f}s total)"
+    )
+    return 0
+
+
+def _write_manifest(manifest: dict, path: str, skip_lm100m: bool) -> None:
+    manifest["models"] = {
+        name: _model_json(cfg)
+        for name, cfg in SIZES.items()
+        if not (skip_lm100m and name == "lm_100m")
+    }
+    manifest["paper_dims"] = PAPER_DIMS
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

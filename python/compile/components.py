@@ -1,0 +1,157 @@
+"""Component-level graphs for Table 3 (layer latency) and kernel benches.
+
+Table 3 measures the forward / forward+backward latency of an isolated
+T5 attention module, FF module, and full block, with and without
+WTA-CRS.  We lower each as its own artifact at T5-Large-ish dimensions
+so the Rust bench can time them apple-to-apple on this host.
+
+Kernel artifacts wrap a single L1 kernel (Pallas interpret vs jnp ref)
+for the kernel micro-benches.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import Method, ModelConfig
+from .train import IoSpec
+from . import model as model_mod
+from .kernels import KernelSet
+
+
+def _component_cfg(batch: int = 8, seq: int = 128) -> ModelConfig:
+    # T5-Large-ish single-block dims (d=1024, ff=4096, 16 heads).
+    return ModelConfig(
+        "component", vocab=128, d_model=1024, n_layers=1, n_heads=16,
+        d_ff=4096, seq_len=seq, batch=batch,
+    )
+
+
+def _block_params(cfg: ModelConfig, seed: int = 0):
+    t, _ = model_mod.init_params(cfg, Method(), seed)
+    return t["base"]["blocks"][0]
+
+
+def build_component(
+    which: str, method: Method, with_backward: bool, batch: int = 8, seq: int = 128
+):
+    """which in {att, ff, block}; returns (flat_fn, ex_inputs, IoSpec, meta).
+
+    Forward-only artifacts return the component output; fwd+bwd artifacts
+    return (loss-ish scalar, grads of the weights) so the whole Eq. 1a-1c
+    pipeline (with the sampled Eq. 1c under WTA-CRS) is inside the graph.
+    """
+    cfg = _component_cfg(batch, seq)
+    blk = _block_params(cfg)
+    n_lin = {"att": 4, "ff": 2, "block": 6}[which]
+
+    names = {"att": ["q", "k", "v", "o"], "ff": ["u", "d"], "block": list("qkvoud")}[
+        which
+    ]
+    weights = [blk[n] for n in names]
+    mask = jnp.ones((cfg.batch, 1, 1, cfg.seq_len), bool)
+
+    def run(x, ws, ctx):
+        b = dict(blk)
+        for n, w in zip(names, ws):
+            b[n] = w
+        if which == "att":
+            return model_mod._attention(x, b, None, ctx, mask)
+        if which == "ff":
+            return model_mod._ffn(x, b, None, ctx)
+        h = x + model_mod._attention(model_mod.layer_norm(x, b["ln1"]), b, None, ctx, mask)
+        return h + model_mod._ffn(model_mod.layer_norm(h, b["ln2"]), b, None, ctx)
+
+    def make_ctx(key, znorms, taps):
+        return model_mod._LinearCtx(cfg, method, key, znorms, taps, True)
+
+    ex_x = jnp.zeros((cfg.batch, cfg.seq_len, cfg.d_model), jnp.float32)
+    ex_seed = jnp.zeros((), jnp.int32)
+    ex_znorms = jnp.ones((n_lin, cfg.batch), jnp.float32)
+
+    if not with_backward:
+
+        def flat_fn(x, seed_arr, znorms, *ws):
+            key = jax.random.fold_in(jax.random.PRNGKey(0), seed_arr)
+            taps = jnp.zeros((n_lin, cfg.batch), jnp.float32)
+            return (run(x, list(ws), make_ctx(key, znorms, taps)),)
+
+        ex_in = [ex_x, ex_seed, ex_znorms] + weights
+        out = flat_fn(*ex_in)
+        spec = IoSpec.of(
+            ["x", "seed", "znorms"] + [f"w_{n}" for n in names],
+            ex_in,
+            ["y"],
+            list(out),
+        )
+    else:
+
+        def flat_fn(x, seed_arr, znorms, *ws):
+            key = jax.random.fold_in(jax.random.PRNGKey(0), seed_arr)
+            taps = jnp.zeros((n_lin, cfg.batch), jnp.float32)
+
+            def loss_of(ws_t):
+                y = run(x, list(ws_t), make_ctx(key, znorms, taps))
+                return jnp.sum(y * y) * 1e-6
+
+            loss, gws = jax.value_and_grad(loss_of)(tuple(ws))
+            return (loss,) + tuple(gws)
+
+        ex_in = [ex_x, ex_seed, ex_znorms] + weights
+        out = flat_fn(*ex_in)
+        spec = IoSpec.of(
+            ["x", "seed", "znorms"] + [f"w_{n}" for n in names],
+            ex_in,
+            ["loss"] + [f"g_{n}" for n in names],
+            list(out),
+        )
+    meta = {
+        "component": which,
+        "with_backward": with_backward,
+        "d_model": cfg.d_model,
+        "d_ff": cfg.d_ff,
+        "batch": cfg.batch,
+        "seq": cfg.seq_len,
+    }
+    return flat_fn, ex_in, spec, meta
+
+
+def build_kernel(name: str, backend: str, m: int, din: int, dout: int, k: int):
+    """Single-kernel artifacts: name in {sampled_matmul, gather_scale,
+    row_norms, gather_scale_matmul, softmax_xent}."""
+    kern = KernelSet(backend)
+    if name == "sampled_matmul":
+        ex = [jnp.zeros((k, din), jnp.float32), jnp.zeros((k, dout), jnp.float32)]
+        fn = lambda a, b: (kern.sampled_matmul(a, b),)
+        names = ["h_sub", "dz_sub"]
+    elif name == "gather_scale":
+        ex = [
+            jnp.zeros((m, din), jnp.float32),
+            jnp.zeros((k,), jnp.int32),
+            jnp.ones((k,), jnp.float32),
+        ]
+        fn = lambda h, i, s: (kern.gather_scale(h, i, s),)
+        names = ["h", "idx", "scales"]
+    elif name == "gather_scale_matmul":
+        ex = [
+            jnp.zeros((m, din), jnp.float32),
+            jnp.zeros((m, dout), jnp.float32),
+            jnp.zeros((k,), jnp.int32),
+            jnp.ones((k,), jnp.float32),
+        ]
+        fn = lambda h, dz, i, s: (kern.gather_scale_matmul(h, dz, i, s),)
+        names = ["h", "dz", "idx", "scales"]
+    elif name == "row_norms":
+        ex = [jnp.zeros((m, din), jnp.float32)]
+        fn = lambda h: (kern.row_norms(h),)
+        names = ["h"]
+    elif name == "softmax_xent":
+        ex = [jnp.zeros((m, dout), jnp.float32), jnp.zeros((m,), jnp.int32)]
+        fn = lambda lg, lb: (kern.softmax_xent(lg, lb),)
+        names = ["logits", "labels"]
+    else:
+        raise ValueError(name)
+    out = fn(*ex)
+    spec = IoSpec.of(names, ex, [f"out{i}" for i in range(len(out))], list(out))
+    meta = {"kernel": name, "backend": backend, "m": m, "din": din, "dout": dout, "k": k}
+    return fn, ex, spec, meta

@@ -1,0 +1,148 @@
+"""Model / method / artifact configuration shared by L2 and `aot.py`.
+
+The Rust side never imports this — everything it needs is serialized into
+``artifacts/manifest.json`` — but the *names* defined here (sizes,
+methods, artifact ids) are the contract between the two worlds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+# ---------------------------------------------------------------------------
+# Methods. "exact" disables sampling; the rest choose the column-row pair
+# selector of `sampling.py`. Tuning modes pick the trainable subset.
+# ---------------------------------------------------------------------------
+
+SAMPLERS = ("exact", "wtacrs", "crs", "det")
+TUNING = ("full", "lora", "lst")
+
+
+@dataclasses.dataclass(frozen=True)
+class Method:
+    """A fine-tuning method = trainable-subset rule + backward estimator.
+
+    Paper naming:  Full == Method("full","exact"),  WTA-CRS@0.3 ==
+    Method("full","wtacrs",0.3),  LoRA+WTA-CRS@0.1 ==
+    Method("lora","wtacrs",0.1),  LST == Method("lst","exact"), etc.
+    """
+
+    tuning: str = "full"  # full | lora | lst
+    sampler: str = "exact"  # exact | wtacrs | crs | det
+    budget: float = 1.0  # k / |D|, the normalized column-row budget
+    lora_rank: int = 32  # paper Appendix F: LoRA dim 32
+    lora_alpha: float = 32.0
+    lst_factor: int = 8  # side-network width reduction (LST paper)
+
+    def __post_init__(self):
+        assert self.tuning in TUNING, self.tuning
+        assert self.sampler in SAMPLERS, self.sampler
+        assert 0.0 < self.budget <= 1.0, self.budget
+        if self.sampler == "exact":
+            assert self.budget == 1.0, "exact sampler has no budget"
+
+    @property
+    def name(self) -> str:
+        parts = [self.tuning]
+        if self.sampler != "exact":
+            parts.append(f"{self.sampler}{int(round(self.budget * 100)):02d}")
+        return "-".join(parts)
+
+
+def parse_method(name: str) -> Method:
+    """Inverse of Method.name, e.g. 'lora-wtacrs30' or 'full'."""
+    parts = name.split("-")
+    tuning = parts[0]
+    if len(parts) == 1:
+        return Method(tuning=tuning)
+    samp = parts[1]
+    for s in ("wtacrs", "crs", "det"):
+        if samp.startswith(s):
+            return Method(tuning=tuning, sampler=s, budget=int(samp[len(s):]) / 100)
+    raise ValueError(f"cannot parse method {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Model sizes. `tiny`/`small`/`base` are the trainable reproductions;
+# `lm_*` are the decoder-LM configs for the end-to-end example. The paper's
+# true T5/BERT dims are kept separately in PAPER_DIMS for the memory model.
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    seq_len: int
+    batch: int
+    n_out: int = 2  # classifier width (ignored for LM)
+    kind: str = "encoder_cls"  # encoder_cls | decoder_lm
+    dropout: float = 0.0
+    dtype: str = "f32"
+
+    @property
+    def d_head(self) -> int:
+        return self.d_model // self.n_heads
+
+    def with_(self, **kw) -> "ModelConfig":
+        return dataclasses.replace(self, **kw)
+
+    def param_count(self) -> int:
+        """Approximate trainable parameter count (full tuning)."""
+        d, f, L, v = self.d_model, self.d_ff, self.n_layers, self.vocab
+        per_block = 4 * d * d + 2 * d * f + 4 * d  # qkvo + ud + 2 LN
+        head = d * self.n_out if self.kind == "encoder_cls" else d * v
+        return v * d + self.seq_len * d + L * per_block + head + 2 * d
+
+
+SIZES: dict[str, ModelConfig] = {
+    "tiny": ModelConfig("tiny", 1024, 64, 2, 2, 256, 64, 32),
+    "small": ModelConfig("small", 1024, 128, 4, 4, 512, 64, 32),
+    "base": ModelConfig("base", 4096, 256, 6, 8, 1024, 128, 16),
+    "lm_small": ModelConfig(
+        "lm_small", 8192, 384, 6, 6, 1536, 128, 8, kind="decoder_lm"
+    ),
+    "lm_100m": ModelConfig(
+        "lm_100m", 16384, 768, 12, 12, 3072, 128, 4, kind="decoder_lm"
+    ),
+}
+
+# Paper model dimensions (for memsim — Table 2 / Fig 2 / Fig 6 use these).
+# (d_model, n_layers(enc+dec for T5), n_heads, d_ff, vocab)
+PAPER_DIMS = {
+    "bert-base": dict(d_model=768, n_layers=12, n_heads=12, d_ff=3072, vocab=30522),
+    "bert-large": dict(d_model=1024, n_layers=24, n_heads=16, d_ff=4096, vocab=30522),
+    "t5-base": dict(d_model=768, n_layers=24, n_heads=12, d_ff=3072, vocab=32128),
+    "t5-large": dict(d_model=1024, n_layers=48, n_heads=16, d_ff=4096, vocab=32128),
+    "t5-3b": dict(d_model=1024, n_layers=48, n_heads=32, d_ff=16384, vocab=32128),
+}
+
+
+def budget_rows(frac: float, m: int) -> int:
+    """Static k for a row count m; always at least 2 and at most m.
+
+    k is rounded to a multiple of 8 (the TPU sublane) when large enough:
+    prime/odd budgets force the Pallas tiler down to degenerate 1-4 row
+    blocks (see perf_model.py / EXPERIMENTS.md §Perf L1 iteration 2); the
+    <=0.4% budget perturbation is immaterial to the estimator.
+    """
+    k = max(2, min(m, int(round(frac * m))))
+    if k >= 16 and m >= 16:
+        k = min(m - (m % 8) if m % 8 else m, max(8, int(round(k / 8)) * 8))
+    return k
+
+
+def approx_layer_count(cfg: ModelConfig, method: Method) -> int:
+    """Number of approx_linear instances (norm-cache rows) in the graph.
+
+    full tuning: 6 per block (Q,K,V,O,U,D).  lora: the adapter-A matmul of
+    the same 6.  lst/exact sampler: 0 (no sampled backward anywhere).
+    """
+    if method.sampler == "exact" or method.tuning == "lst":
+        return 0
+    return 6 * cfg.n_layers

@@ -1,0 +1,29 @@
+"""Lowering helpers: jitted function -> HLO *text*.
+
+HLO text (not serialized HloModuleProto) is the interchange format with
+the Rust runtime: jax >= 0.5 emits protos with 64-bit instruction ids
+which the `xla` crate's xla_extension 0.5.1 rejects (`proto.id() <=
+INT_MAX`); the text parser reassigns ids, so text round-trips cleanly.
+Lowered with return_tuple=True; the Rust side unwraps with to_tuple().
+"""
+from __future__ import annotations
+
+import jax
+from jax._src.lib import xla_client as xc
+
+
+def lower_to_hlo_text(fn, example_args) -> str:
+    """Jit-lower ``fn`` at the example args' shapes and emit HLO text.
+
+    keep_unused=True is load-bearing: the positional manifest contract
+    promises every input a parameter slot, but jit's default prunes
+    arguments the graph ignores (e.g. `znorms`/`seed` in the exact and
+    deterministic variants), desynchronizing Rust's buffer count from
+    the compiled program.
+    """
+    lowered = jax.jit(fn, keep_unused=True).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()

@@ -1,0 +1,58 @@
+"""L1 — Pallas kernels for the WTA-CRS hot spots, plus pure-jnp oracles.
+
+``backend="ref"`` (default for train-step artifacts) routes through the
+jnp oracles in :mod:`ref` so XLA fuses them natively; ``backend="pallas"``
+routes through the interpret-mode Pallas kernels (kernel artifacts,
+Table 3, kernel benches).  Both compute identical math — pytest enforces
+it (tests/test_kernels_*.py).
+"""
+from __future__ import annotations
+
+from . import ref
+from .norms import row_norms as pallas_row_norms
+from .sampled_matmul import (
+    gather_scale as pallas_gather_scale,
+    gather_scale_matmul as pallas_gather_scale_matmul,
+    sampled_matmul as pallas_sampled_matmul,
+)
+from .softmax_xent import softmax_xent as pallas_softmax_xent
+
+_BACKENDS = ("ref", "pallas")
+
+
+class KernelSet:
+    """Dispatch table used by L2 (`linear.py`, `train.py`)."""
+
+    def __init__(self, backend: str = "ref"):
+        if backend not in _BACKENDS:
+            raise ValueError(f"backend must be one of {_BACKENDS}, got {backend!r}")
+        self.backend = backend
+
+    def row_norms(self, x):
+        if self.backend == "pallas":
+            return pallas_row_norms(x)
+        return ref.row_norms(x)
+
+    def gather_scale(self, h, idx, scales):
+        if self.backend == "pallas":
+            return pallas_gather_scale(h, idx, scales)
+        return ref.gather_scale(h, idx, scales)
+
+    def sampled_matmul(self, h_sub, dz_sub):
+        if self.backend == "pallas":
+            return pallas_sampled_matmul(h_sub, dz_sub)
+        return ref.sampled_matmul(h_sub, dz_sub)
+
+    def gather_scale_matmul(self, h, dz, idx, scales):
+        if self.backend == "pallas":
+            return pallas_gather_scale_matmul(h, dz, idx, scales)
+        return ref.gather_scale_matmul(h, dz, idx, scales)
+
+    def softmax_xent(self, logits, labels):
+        if self.backend == "pallas":
+            return pallas_softmax_xent(logits, labels)
+        return ref.softmax_xent(logits, labels)
+
+
+REF = KernelSet("ref")
+PALLAS = KernelSet("pallas")

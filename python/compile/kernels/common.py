@@ -1,0 +1,57 @@
+"""Shared tiling helpers for the Pallas kernels.
+
+TPU-shaped tiling (8x128 VPU lanes, 128x128 MXU tiles) with graceful
+degradation for small problem sizes.  All kernels in this package run in
+interpret mode on this image (CPU PJRT cannot execute Mosaic custom-calls)
+— see DESIGN.md §8; block shapes are still chosen as they would be on a
+real TPU so the VMEM/MXU accounting in EXPERIMENTS.md §Perf is meaningful.
+"""
+from __future__ import annotations
+
+import math
+
+# VMEM budget per core we tile against (bytes). TPUv4 ~ 16 MiB/core; keep
+# headroom for double-buffering.
+VMEM_BUDGET = 16 * 1024 * 1024
+
+# Lane/sublane granularity of the VPU and MXU tile edge.
+LANE = 128
+SUBLANE = 8
+
+
+def cdiv(a: int, b: int) -> int:
+    """Ceiling division."""
+    return -(-a // b)
+
+
+def round_up(x: int, to: int) -> int:
+    """Round ``x`` up to a multiple of ``to``."""
+    return cdiv(x, to) * to
+
+
+def pick_block(dim: int, preferred: int, align: int = SUBLANE) -> int:
+    """Largest block <= preferred that divides ``dim``; falls back to dim.
+
+    Kernels in this package require the grid to tile the array exactly
+    (padding is handled by the callers, which round shapes up at model
+    definition time), so the block must divide the dimension.
+    """
+    if dim <= preferred:
+        return dim
+    # Prefer aligned divisors, largest first.
+    best = None
+    for cand in range(preferred, 0, -1):
+        if dim % cand == 0:
+            if cand % align == 0:
+                return cand
+            if best is None:
+                best = cand
+    return best if best is not None else dim
+
+
+def vmem_bytes(*shapes_dtypes: tuple[tuple[int, ...], int]) -> int:
+    """Total bytes of a set of (shape, itemsize) residents in VMEM."""
+    total = 0
+    for shape, itemsize in shapes_dtypes:
+        total += math.prod(shape) * itemsize
+    return total

@@ -1,0 +1,50 @@
+"""Pallas kernel: fused row L2 norms.
+
+The only extra *forward* work WTA-CRS adds to a linear layer is computing
+``||H_i,:||_2`` for every token row of the activation, which together with
+the cached gradient norms defines the column-row index distribution
+(Eq. 3 of the paper).  On TPU this is a VPU reduction streamed over rows:
+each grid step loads a (BM, D) tile of H into VMEM and reduces along
+lanes; the f32 accumulate keeps bf16 inputs exact enough for sampling.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pick_block, cdiv
+
+
+def _row_norms_kernel(x_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    o_ref[...] = jnp.sqrt(jnp.sum(x * x, axis=1) + eps)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps", "interpret"))
+def row_norms(
+    x: jax.Array,
+    *,
+    block_rows: int = 256,
+    eps: float = 0.0,
+    interpret: bool = True,
+) -> jax.Array:
+    """L2 norm of every row: (M, D) -> (M,) f32.
+
+    ``block_rows`` is the VMEM tile height; the full row (D) is resident
+    per step, which for the model dims used here (D <= 4096 f32) stays
+    well inside the 16 MiB VMEM budget.
+    """
+    m, d = x.shape
+    bm = pick_block(m, block_rows)
+    grid = (cdiv(m, bm),)
+    return pl.pallas_call(
+        functools.partial(_row_norms_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((bm, d), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((bm,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((m,), jnp.float32),
+        interpret=interpret,
+    )(x)

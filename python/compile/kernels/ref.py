@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the CORE correctness signal: pytest sweeps shapes/dtypes with
+hypothesis and asserts the Pallas kernels (interpret=True) match these
+references to tight tolerances.  They are also the implementations that
+the AOT'd *train-step* artifacts use (XLA fuses them natively); the Pallas
+versions are compiled into dedicated kernel artifacts (Table 3 /
+kernel-level benches) — see DESIGN.md §8.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import jax
+
+
+def row_norms(x: jax.Array, eps: float = 0.0) -> jax.Array:
+    """L2 norm of every row of a 2-D matrix: (M, D) -> (M,)."""
+    return jnp.sqrt(jnp.sum(x.astype(jnp.float32) ** 2, axis=-1) + eps)
+
+
+def gather_scale(h: jax.Array, idx: jax.Array, scales: jax.Array) -> jax.Array:
+    """Build the sub-sampled activation H' = diag(scales) @ H[idx, :].
+
+    h: (M, D), idx: (k,) int32, scales: (k,) -> (k, D).
+    This is the tensor that WTA-CRS actually *stores* for the backward
+    pass instead of the full H.
+    """
+    return h[idx, :] * scales[:, None].astype(h.dtype)
+
+
+def sampled_matmul(h_sub: jax.Array, dz_sub: jax.Array) -> jax.Array:
+    """Weight-gradient estimator core:  H'^T @ dZ'  over the k kept rows.
+
+    h_sub: (k, Din), dz_sub: (k, Dout) -> (Din, Dout), accumulated in f32.
+    """
+    return jnp.matmul(
+        h_sub.T.astype(jnp.float32), dz_sub.astype(jnp.float32)
+    ).astype(h_sub.dtype)
+
+
+def gather_scale_matmul(
+    h: jax.Array, dz: jax.Array, idx: jax.Array, scales: jax.Array
+) -> jax.Array:
+    """Fused form: (gather+scale rows of h and dz) then h'^T @ dz'.
+
+    h: (M, Din), dz: (M, Dout), idx: (k,), scales: (k,) -> (Din, Dout).
+    Scaling convention matches Eq. (6): the scale multiplies the
+    column-row *pair*, so it is applied once (to the lhs row).
+    """
+    h_sub = h[idx, :] * scales[:, None].astype(h.dtype)
+    dz_sub = dz[idx, :]
+    return sampled_matmul(h_sub, dz_sub)
+
+
+def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean cross-entropy of (N, C) logits vs (N,) int labels, in f32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    return jnp.mean(lse - picked)
+
+
+def softmax_xent_grad(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """d(mean CE)/d logits — (N, C)."""
+    logits = logits.astype(jnp.float32)
+    p = jax.nn.softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(labels, logits.shape[-1], dtype=jnp.float32)
+    return (p - onehot) / logits.shape[0]

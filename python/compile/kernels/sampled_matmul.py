@@ -1,0 +1,163 @@
+"""Pallas kernels for the WTA-CRS backward hot path.
+
+The paper replaces the weight-gradient GEMM (Eq. 1c) with a product over
+k sub-sampled column-row pairs:
+
+    grad_W  =  H'^T @ dZ'      H' = diag(scales) @ H[idx, :]
+
+Two kernels implement this:
+
+* ``gather_scale`` — builds H' from (H, idx, scales).  On TPU the gather
+  *is* the HBM->VMEM schedule: only the k kept rows ever cross the memory
+  boundary, which is where the paper's CUDA implementation saved memory
+  with per-threadblock gathers (DESIGN.md §8).
+* ``sampled_matmul`` — the (Din x k) @ (k x Dout) contraction, tiled
+  128x128 for the MXU with an f32 VMEM scratch accumulator carried across
+  the k (grid-minor) dimension.
+
+``gather_scale_matmul`` composes them.  All kernels run interpret=True on
+this image (CPU PJRT cannot execute Mosaic custom-calls).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pick_block, cdiv
+
+
+def _vmem_scratch(shape: tuple[int, ...], dtype=jnp.float32) -> pl.MemoryRef:
+    """An f32 VMEM-resident scratch buffer (ANY space in interpret mode)."""
+    return pl.MemoryRef(jax.core.ShapedArray(shape, dtype), pl.MemorySpace.ANY)
+
+
+def _gather_scale_kernel(idx_ref, scale_ref, h_ref, o_ref, *, block_k: int):
+    """One grid step gathers ``block_k`` rows of H into the output tile."""
+
+    def body(i, _):
+        j = idx_ref[i]
+        row = h_ref[pl.dslice(j, 1), :]
+        o_ref[pl.dslice(i, 1), :] = row * scale_ref[i].astype(row.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, block_k, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def gather_scale(
+    h: jax.Array,
+    idx: jax.Array,
+    scales: jax.Array,
+    *,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """H' = diag(scales) @ H[idx, :]:  (M, D), (k,), (k,) -> (k, D)."""
+    m, d = h.shape
+    (k,) = idx.shape
+    bk = pick_block(k, block_k)
+    grid = (cdiv(k, bk),)
+    return pl.pallas_call(
+        functools.partial(_gather_scale_kernel, block_k=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            pl.BlockSpec((bk,), lambda i: (i,)),
+            # Rows are gathered dynamically, so H stays un-tiled (block 0
+            # pinned); on a real TPU this is an HBM/ANY-space ref with a
+            # per-row DMA — the gather is the HBM->VMEM schedule.
+            pl.BlockSpec((m, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bk, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, d), h.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), scales.astype(jnp.float32), h)
+
+
+def _sampled_matmul_kernel(h_ref, dz_ref, o_ref, acc_ref, *, k: int, bk: int):
+    """Grid (I, J, K): accumulate h_tile^T @ dz_tile into acc over K.
+
+    The K remainder block is masked with `where` (out-of-range rows read
+    back NaN in interpret mode, so multiplication cannot zero them) —
+    this keeps full 128-row MXU blocks even when k is odd/prime, which
+    §Perf L1 iteration 2 showed otherwise degrades the tiler to 1-8 row
+    blocks.
+    """
+    kstep = pl.program_id(2)
+
+    @pl.when(kstep == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    rows = kstep * bk + jax.lax.broadcasted_iota(jnp.int32, (bk, 1), 0)
+    keep = rows < k
+    h = jnp.where(keep, h_ref[...].astype(jnp.float32), 0.0)  # (BK, BI)
+    dz = jnp.where(keep, dz_ref[...].astype(jnp.float32), 0.0)  # (BK, BJ)
+    acc_ref[...] += jax.lax.dot_general(
+        h,
+        dz,
+        (((0,), (0,)), ((), ())),  # contract over the k dimension
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(kstep == pl.num_programs(2) - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_i", "block_j", "block_k", "interpret")
+)
+def sampled_matmul(
+    h_sub: jax.Array,
+    dz_sub: jax.Array,
+    *,
+    block_i: int = 128,
+    block_j: int = 128,
+    block_k: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """H'^T @ dZ':  (k, Din), (k, Dout) -> (Din, Dout), f32 accumulate."""
+    k, din = h_sub.shape
+    k2, dout = dz_sub.shape
+    assert k == k2, f"row-count mismatch {k} vs {k2}"
+    bi = pick_block(din, block_i)
+    bj = pick_block(dout, block_j)
+    # K streams through a masked remainder block, so it keeps the full
+    # MXU-height block regardless of divisibility.
+    bk = min(k, block_k)
+    grid = (cdiv(din, bi), cdiv(dout, bj), cdiv(k, bk))
+    return pl.pallas_call(
+        functools.partial(_sampled_matmul_kernel, k=k, bk=bk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bk, bi), lambda i, j, s: (s, i)),
+            pl.BlockSpec((bk, bj), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bi, bj), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((din, dout), h_sub.dtype),
+        scratch_shapes=[_vmem_scratch((bi, bj))],
+        interpret=interpret,
+    )(h_sub, dz_sub)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_scale_matmul(
+    h: jax.Array,
+    dz: jax.Array,
+    idx: jax.Array,
+    scales: jax.Array,
+    *,
+    interpret: bool = True,
+) -> jax.Array:
+    """Fused path: gather+scale the k kept rows of H and dZ, contract.
+
+    (M, Din), (M, Dout), (k,), (k,) -> (Din, Dout).  The Eq. (6) scale
+    multiplies each column-row *pair*, so it is applied once, to the lhs.
+    """
+    h_sub = gather_scale(h, idx, scales, interpret=interpret)
+    dz_sub = gather_scale(dz, idx, jnp.ones_like(scales), interpret=interpret)
+    return sampled_matmul(h_sub, dz_sub, interpret=interpret)

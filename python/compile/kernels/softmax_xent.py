@@ -1,0 +1,55 @@
+"""Pallas kernel: fused log-softmax + cross-entropy.
+
+The forward-loss hot spot.  The paper's released pipeline leans on Liger's
+fused Triton CE kernel for the same reason (§3.2); here the fusion is a
+VPU row reduction: each grid step owns a (BN, C) tile of logits, computes
+a numerically-stable logsumexp, and emits per-row losses without ever
+materializing the (N, C) softmax matrix.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import pick_block, cdiv
+
+
+def _softmax_xent_kernel(logits_ref, labels_ref, loss_ref):
+    logits = logits_ref[...].astype(jnp.float32)  # (BN, C)
+    labels = labels_ref[...]  # (BN,)
+    mx = jnp.max(logits, axis=1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(logits - mx), axis=1)) + mx[:, 0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 1)
+    picked = jnp.sum(
+        jnp.where(cols == labels[:, None], logits, 0.0), axis=1
+    )
+    loss_ref[...] = lse - picked
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def softmax_xent(
+    logits: jax.Array,
+    labels: jax.Array,
+    *,
+    block_rows: int = 256,
+    interpret: bool = True,
+) -> jax.Array:
+    """Mean cross-entropy of (N, C) logits vs (N,) int32 labels -> scalar."""
+    n, c = logits.shape
+    bn = pick_block(n, block_rows)
+    grid = (cdiv(n, bn),)
+    per_row = pl.pallas_call(
+        _softmax_xent_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, c), lambda i: (i, 0)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bn,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+        interpret=interpret,
+    )(logits, labels.astype(jnp.int32))
+    return jnp.mean(per_row)

@@ -1,0 +1,113 @@
+"""`approx_linear`: the paper's drop-in linear layer (Fig. 5, Alg. 1).
+
+Forward is an *exact* GEMM (approximating it would bias the gradient
+through the nonlinearity, §3.2).  Backward:
+
+    dH = dZ @ W^T                      exact        (Eq. 1b)
+    dW = H'^T @ dZ'                    sampled      (Eq. 1c ≈ Eq. 6)
+
+where the k kept column-row pairs are chosen from p_i ∝ ||H_i,:|| * c_i
+and c_i is the *cached* per-sample gradient norm from the previous step
+(Algorithm 1's CPU-side ``Cache``; owned by the Rust coordinator here).
+
+Two pieces of plumbing make this AOT-able:
+
+* the residual saved for backward is the sub-sampled ``H'`` (that is the
+  memory saving — only k of the B*S activation rows survive the forward
+  pass), plus the k indices;
+* the refreshed gradient norms ``||dZ_j||`` per sample are exfiltrated
+  through a **gradient tap**: a zero input whose custom-vjp cotangent is
+  defined to be the new norms, so `jax.grad` w.r.t. the taps harvests the
+  cache update without side channels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import sampling
+from .config import budget_rows
+from .kernels import KernelSet, REF
+
+
+class ApproxSpec(NamedTuple):
+    """Static configuration of one approx_linear instance."""
+
+    sampler: str  # wtacrs | crs | det
+    k: int  # column-row pair budget (rows kept), static
+    batch: int  # B — rows of the per-sample norm cache
+    seq: int  # S — tokens per sample (M = B*S)
+
+
+def _float0_like(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+def make_approx_linear(spec: ApproxSpec, kern: KernelSet = REF):
+    """Build the custom-vjp linear for one (sampler, k, B, S) config.
+
+    Returned callable:  f(h2d, w, key, znorm, tap) -> z2d
+      h2d:   (M, Din) activation rows, M = B*S
+      w:     (Din, Dout)
+      key:   jax PRNG key for this layer/step
+      znorm: (B,) cached gradient norms (previous step; >=0)
+      tap:   (B,) zeros; grad w.r.t. it = refreshed norms
+    """
+
+    @jax.custom_vjp
+    def approx_linear(h2d, w, key, znorm, tap):
+        return jnp.matmul(h2d, w)
+
+    def fwd(h2d, w, key, znorm, tap):
+        z = jnp.matmul(h2d, w)
+        m = h2d.shape[0]
+        # p_i ∝ ||H_i,:|| * cached ||dZ_sample(i)|| (Eq. 3 with the
+        # Algorithm-1 proxy for the unknown dZ norms).
+        hn = kern.row_norms(h2d)
+        zn = jnp.repeat(znorm.astype(jnp.float32) + 1e-6, spec.seq)
+        probs = sampling.colrow_probs(hn, zn)
+        idx, scales = sampling.select(spec.sampler, probs, key, spec.k)
+        h_sub = kern.gather_scale(h2d, idx, scales)
+        return z, (h_sub, idx, w)
+
+    def bwd(res, dz):
+        h_sub, idx, w = res
+        dh = jnp.matmul(dz, w.T)  # Eq. 1b, exact
+        dz_sub = jnp.take(dz, idx, axis=0)
+        dw = kern.sampled_matmul(h_sub, dz_sub).astype(w.dtype)  # Eq. 1c
+        # Refresh the per-sample gradient-norm cache: ||dZ_j|| over the
+        # sample's (S, Dout) block (Algorithm 1's Cache[j] update).
+        new_norms = jnp.sqrt(
+            jnp.sum(
+                dz.astype(jnp.float32).reshape(spec.batch, -1) ** 2, axis=1
+            )
+        )
+        return (
+            dh,
+            dw,
+            None,  # PRNG key: no cotangent
+            jnp.zeros((spec.batch,), jnp.float32),
+            new_norms,  # the gradient tap carries the cache update
+        )
+
+    approx_linear.defvjp(fwd, bwd)
+    return approx_linear
+
+
+@functools.lru_cache(maxsize=None)
+def cached_approx_linear(spec: ApproxSpec, backend: str):
+    return make_approx_linear(spec, KernelSet(backend))
+
+
+def approx_linear_call(
+    h2d, w, key, znorm, tap, *, sampler: str, budget: float, batch: int, seq: int,
+    backend: str = "ref",
+):
+    """Convenience wrapper computing the static k from the budget."""
+    m = h2d.shape[0]
+    spec = ApproxSpec(sampler, budget_rows(budget, m), batch, seq)
+    return cached_approx_linear(spec, backend)(h2d, w, key, znorm, tap)

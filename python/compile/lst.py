@@ -1,0 +1,75 @@
+"""Ladder Side-Tuning baseline (Sung et al., 2022).
+
+LST trains a narrow "side" network that reads *downsampled* frozen-trunk
+activations through ladder connections; no gradient flows through the
+trunk (every trunk read is stop_gradient'ed), which is where its memory
+saving comes from — the trunk stores no activations for backward.
+
+Side network per trunk block: a learned gate mixes the downsampled trunk
+state into the side state, followed by a small FFN:
+
+    s <- sigmoid(gate) * s + (1 - sigmoid(gate)) * down(x_trunk)
+    s <- s + W2 gelu(W1 LN(s))
+
+Side width is d_model / lst_factor (paper uses r=8 reduction).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import Method, ModelConfig
+
+
+def _init_dense(key, din, dout, scale=0.02):
+    return jax.random.normal(key, (din, dout), jnp.float32) * scale
+
+
+def init_side(cfg: ModelConfig, method: Method, key):
+    ds = max(8, cfg.d_model // method.lst_factor)
+    n = cfg.n_layers
+    keys = jax.random.split(key, 4 * n + 3)
+    side = {
+        "down_in": _init_dense(keys[0], cfg.d_model, ds),
+        "up_out": _init_dense(keys[1], ds, cfg.d_model),
+        "blocks": [],
+    }
+    for i in range(n):
+        side["blocks"].append(
+            {
+                "down": _init_dense(keys[2 + 4 * i], cfg.d_model, ds),
+                "gate": jnp.zeros(()),  # sigmoid(0)=0.5 balanced mix
+                "w1": _init_dense(keys[3 + 4 * i], ds, 2 * ds),
+                "w2": _init_dense(keys[4 + 4 * i], 2 * ds, ds),
+                "ln": {"g": jnp.ones((ds,)), "b": jnp.zeros((ds,))},
+            }
+        )
+    return side
+
+
+def _ln(x, p):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * p["g"] + p["b"]
+
+
+def encode_lst(cfg: ModelConfig, method: Method, base, side, x, mask):
+    """Frozen trunk + trainable ladder; returns (B, S, D) upsampled side."""
+    from . import model as model_mod  # avoid import cycle at module load
+
+    s = jax.lax.stop_gradient(x) @ side["down_in"]
+    h = x
+    for blk, sblk in zip(base["blocks"], side["blocks"]):
+        # Frozen trunk step (no grads, no stored activations).
+        h_in = jax.lax.stop_gradient(h)
+        ctx = model_mod._LinearCtx(cfg, Method("full", "exact"), None, None, None, False)
+        h = h_in + model_mod._attention(
+            model_mod.layer_norm(h_in, blk["ln1"]), blk, None, ctx, mask
+        )
+        h = h + model_mod._ffn(model_mod.layer_norm(h, blk["ln2"]), blk, None, ctx)
+        h = jax.lax.stop_gradient(h)
+        # Ladder: mix downsampled trunk state into the side state.
+        g = jax.nn.sigmoid(sblk["gate"])
+        s = g * s + (1.0 - g) * (h @ sblk["down"])
+        s = s + jax.nn.gelu(_ln(s, sblk["ln"]) @ sblk["w1"]) @ sblk["w2"]
+    return s @ side["up_out"]

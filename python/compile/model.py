@@ -1,0 +1,273 @@
+"""L2 — transformer with WTA-CRS linears (Fig. 4 scope).
+
+Two architectures share the block code:
+
+* ``encoder_cls`` — BERT-style bidirectional encoder + [CLS] classifier
+  (the GLUE reproduction, Table 1 / Figs 1,7,8).
+* ``decoder_lm``  — causal decoder LM (the end-to-end loss-curve example).
+
+Every Linear-Q/K/V/O/U/D routes through :mod:`linear`'s ``approx_linear``
+when the method has a non-exact sampler.  TensorMul-1/2 (the two
+attention batched matmuls) are *not* approximated — this matches the
+paper's released implementation, which replaces ``nn.Linear`` only; the
+memory model accounts them as uncompressed (DESIGN.md §5).
+
+Parameters live in plain nested dicts, split into ``trainable`` and
+``frozen`` pytrees according to the tuning mode:
+
+* full: everything trainable, frozen = {}.
+* lora: base weights frozen; rank-r adapters (A, B) + classifier head
+  trainable.  ``z = h @ sg(W) + (alpha/r) * approx_linear(h, A) @ B`` —
+  with W frozen, autodiff stores nothing for the base GEMM and the
+  adapter's dA uses the sub-sampled activations, which is exactly the
+  paper's LoRA+WTA-CRS memory story.
+* lst: frozen trunk under stop_gradient, trainable ladder side network
+  (width d/``lst_factor``) — see :mod:`lst`.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .config import Method, ModelConfig
+from .linear import approx_linear_call
+from . import lst as lst_mod
+
+Params = dict[str, Any]
+
+PAD_ID = 0
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def _dense_init(key, din, dout, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(din)
+    return jax.random.normal(key, (din, dout), jnp.float32) * scale
+
+
+def init_params(cfg: ModelConfig, method: Method, seed) -> tuple[Params, Params]:
+    """Returns (trainable, frozen) pytrees for (cfg, method)."""
+    key = jax.random.PRNGKey(seed)  # accepts python ints and traced scalars
+    keys = jax.random.split(key, 8 + 16 * cfg.n_layers)
+    ki = iter(range(len(keys)))
+
+    def nk():
+        return keys[next(ki)]
+
+    base: Params = {
+        "embed": jax.random.normal(nk(), (cfg.vocab, cfg.d_model)) * 0.02,
+        "pos": jax.random.normal(nk(), (cfg.seq_len, cfg.d_model)) * 0.02,
+        "ln_f": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+        "blocks": [],
+    }
+    for _ in range(cfg.n_layers):
+        blk = {
+            "ln1": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+            "ln2": {"g": jnp.ones((cfg.d_model,)), "b": jnp.zeros((cfg.d_model,))},
+            "q": _dense_init(nk(), cfg.d_model, cfg.d_model),
+            "k": _dense_init(nk(), cfg.d_model, cfg.d_model),
+            "v": _dense_init(nk(), cfg.d_model, cfg.d_model),
+            "o": _dense_init(nk(), cfg.d_model, cfg.d_model),
+            "u": _dense_init(nk(), cfg.d_model, cfg.d_ff),
+            "d": _dense_init(nk(), cfg.d_ff, cfg.d_model),
+        }
+        base["blocks"].append(blk)
+
+    head_out = cfg.vocab if cfg.kind == "decoder_lm" else cfg.n_out
+    head = {"w": _dense_init(nk(), cfg.d_model, head_out, scale=0.02),
+            "b": jnp.zeros((head_out,))}
+
+    if method.tuning == "full":
+        trainable = {"base": base, "head": head}
+        frozen: Params = {}
+    elif method.tuning == "lora":
+        r = method.lora_rank
+        adapters = []
+        for _ in range(cfg.n_layers):
+            ad = {}
+            for nm, dout in (
+                ("q", cfg.d_model), ("k", cfg.d_model), ("v", cfg.d_model),
+                ("o", cfg.d_model), ("u", cfg.d_ff),
+            ):
+                ad[nm] = {
+                    "a": _dense_init(nk(), cfg.d_model, r),
+                    "b": jnp.zeros((r, dout)),
+                }
+            ad["d"] = {
+                "a": _dense_init(nk(), cfg.d_ff, r),
+                "b": jnp.zeros((r, cfg.d_model)),
+            }
+            adapters.append(ad)
+        trainable = {"adapters": adapters, "head": head}
+        frozen = {"base": base}
+    elif method.tuning == "lst":
+        side = lst_mod.init_side(cfg, method, nk())
+        trainable = {"side": side, "head": head}
+        frozen = {"base": base}
+    else:
+        raise ValueError(method.tuning)
+    return trainable, frozen
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+
+def layer_norm(x, p):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6) * p["g"] + p["b"]
+
+
+class _LinearCtx:
+    """Threads sampling state (keys, norm cache, taps) through the blocks.
+
+    Each approx_linear instance claims the next row of the (nA, B) norm
+    cache / tap stack in definition order — the same order the Rust
+    coordinator uses (manifest `norm_cache_layers`).
+    """
+
+    def __init__(self, cfg, method, key, znorms, taps, train):
+        self.cfg, self.method = cfg, method
+        self.key, self.znorms, self.taps = key, znorms, taps
+        self.train = train
+        self.i = 0
+        self.names: list[str] = []
+
+    @property
+    def sampled(self) -> bool:
+        return (
+            self.train
+            and self.method.sampler != "exact"
+            and self.method.tuning != "lst"
+        )
+
+    def dense(self, h2d, w, name):
+        """One Linear-{Q,K,V,O,U,D}: exact or sampled backward."""
+        if not self.sampled:
+            return jnp.matmul(h2d, w)
+        i = self.i
+        self.i += 1
+        self.names.append(name)
+        lk = jax.random.fold_in(self.key, i)
+        return approx_linear_call(
+            h2d, w, lk, self.znorms[i], self.taps[i],
+            sampler=self.method.sampler, budget=self.method.budget,
+            batch=self.cfg.batch, seq=self.cfg.seq_len,
+        )
+
+    def linear(self, h2d, w_base, adapter, name):
+        """Dispatch on tuning mode (full vs lora) for one projection."""
+        if self.method.tuning == "lora" and adapter is not None:
+            z = jnp.matmul(h2d, jax.lax.stop_gradient(w_base))
+            scale = self.method.lora_alpha / self.method.lora_rank
+            za = self.dense(h2d, adapter["a"], name + ".lora_a")
+            return z + scale * jnp.matmul(za, adapter["b"])
+        return self.dense(h2d, w_base, name)
+
+
+def _attention(x, blk, adapters, ctx: _LinearCtx, mask):
+    cfg = ctx.cfg
+    B, S, D = x.shape
+    h2d = x.reshape(B * S, D)
+
+    def proj(nm):
+        ad = adapters[nm] if adapters is not None else None
+        z = ctx.linear(h2d, blk[nm], ad, nm)
+        return z.reshape(B, S, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+
+    q, k, v = proj("q"), proj("k"), proj("v")
+    # TensorMul-1 (scores) and TensorMul-2 (context): exact (see module doc)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k) / math.sqrt(cfg.d_head)
+    scores = jnp.where(mask, scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    ctxv = jnp.einsum("bhst,bhtd->bhsd", attn, v)
+    ctxv = ctxv.transpose(0, 2, 1, 3).reshape(B * S, D)
+    ad_o = adapters["o"] if adapters is not None else None
+    out = ctx.linear(ctxv, blk["o"], ad_o, "o")
+    return out.reshape(B, S, D)
+
+
+def _ffn(x, blk, adapters, ctx: _LinearCtx):
+    B, S, D = x.shape
+    h2d = x.reshape(B * S, D)
+    ad_u = adapters["u"] if adapters is not None else None
+    ad_d = adapters["d"] if adapters is not None else None
+    hidden = ctx.linear(h2d, blk["u"], ad_u, "u")
+    hidden = jax.nn.gelu(hidden)
+    out = ctx.linear(hidden, blk["d"], ad_d, "d")
+    return out.reshape(B, S, D)
+
+
+def encode(
+    cfg: ModelConfig,
+    method: Method,
+    trainable: Params,
+    frozen: Params,
+    tokens: jax.Array,
+    key,
+    znorms,
+    taps,
+    train: bool,
+):
+    """Token ids (B, S) -> final hidden states (B, S, D).
+
+    For LST the trunk runs under stop_gradient and the ladder side network
+    produces the output — handled in :mod:`lst`.
+    """
+    base = trainable.get("base") or frozen.get("base")
+    adapters_all = trainable.get("adapters")
+    ctx = _LinearCtx(cfg, method, key, znorms, taps, train)
+
+    B, S = tokens.shape
+    x = base["embed"][tokens] + base["pos"][None, :S, :]
+
+    pad = tokens != PAD_ID  # (B, S)
+    if cfg.kind == "decoder_lm":
+        causal = jnp.tril(jnp.ones((S, S), bool))
+        mask = causal[None, None, :, :] & pad[:, None, None, :]
+    else:
+        mask = pad[:, None, None, :]
+
+    if method.tuning == "lst":
+        return lst_mod.encode_lst(cfg, method, base, trainable["side"], x, mask)
+
+    for li, blk in enumerate(base["blocks"]):
+        ad = adapters_all[li] if adapters_all is not None else None
+        x = x + _attention(layer_norm(x, blk["ln1"]), blk, ad, ctx, mask)
+        x = x + _ffn(layer_norm(x, blk["ln2"]), blk, ad, ctx)
+    return layer_norm(x, base["ln_f"])
+
+
+def forward(
+    cfg: ModelConfig,
+    method: Method,
+    trainable: Params,
+    frozen: Params,
+    tokens: jax.Array,
+    key=None,
+    znorms=None,
+    taps=None,
+    train: bool = False,
+):
+    """Full forward to logits.
+
+    encoder_cls: (B, n_out) from the [CLS] (position-0) hidden state.
+    decoder_lm:  (B, S, vocab).
+    """
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    h = encode(cfg, method, trainable, frozen, tokens, key, znorms, taps, train)
+    head = trainable["head"]
+    if cfg.kind == "decoder_lm":
+        B, S, D = h.shape
+        return (h.reshape(B * S, D) @ head["w"] + head["b"]).reshape(B, S, -1)
+    cls = h[:, 0, :]
+    return cls @ head["w"] + head["b"]

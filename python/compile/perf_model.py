@@ -1,0 +1,159 @@
+"""L1 performance model: VMEM footprint + MXU utilization estimates.
+
+interpret=True gives CPU-numpy timings, which say nothing about TPU
+behaviour — so the §Perf story for the Pallas kernels is *structural*:
+given a kernel's BlockSpecs we compute the VMEM residency per grid step,
+the arithmetic intensity, and a roofline-based MXU utilization estimate
+for a TPUv4-class core (275 TFLOP/s bf16, 1.2 TB/s HBM, 16 MiB VMEM).
+
+Run as a module for the EXPERIMENTS.md §Perf table:
+
+    python -m compile.perf_model
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .kernels.common import VMEM_BUDGET, cdiv, pick_block
+
+TPU_PEAK_FLOPS = 275e12  # bf16 MXU
+TPU_HBM_BW = 1.2e12  # bytes/s
+TPU_RIDGE = TPU_PEAK_FLOPS / TPU_HBM_BW  # flops per HBM byte at the ridge
+
+
+@dataclasses.dataclass
+class KernelEstimate:
+    name: str
+    grid: tuple
+    vmem_bytes: int
+    flops: float
+    hbm_bytes: float
+    intensity: float
+    mxu_utilization: float  # roofline estimate in [0, 1]
+    note: str = ""
+
+    def row(self) -> list[str]:
+        return [
+            self.name,
+            "x".join(map(str, self.grid)),
+            f"{self.vmem_bytes / 1024:.0f} KiB",
+            f"{self.flops / 1e9:.2f}",
+            f"{self.intensity:.1f}",
+            f"{100 * self.mxu_utilization:.0f}%",
+            self.note,
+        ]
+
+
+def _roofline_util(intensity: float) -> float:
+    """Achievable fraction of MXU peak at a given arithmetic intensity."""
+    return min(1.0, intensity / TPU_RIDGE)
+
+
+def sampled_matmul_estimate(
+    k: int, din: int, dout: int, bi: int = 128, bj: int = 128, bk: int = 128,
+    bytes_per_elem: int = 4,
+) -> KernelEstimate:
+    """(k, Din)^T @ (k, Dout) with the grid (Din/bi, Dout/bj, k/bk) and an
+    f32 VMEM accumulator — the Eq. 1c hot path."""
+    bi = pick_block(din, bi)
+    bj = pick_block(dout, bj)
+    bk = min(k, bk)  # masked remainder keeps full-height K blocks
+    grid = (cdiv(din, bi), cdiv(dout, bj), cdiv(k, bk))
+    # Residency per step: lhs tile, rhs tile, accumulator (+double buffer
+    # on the streamed K operands).
+    vmem = 2 * (bk * bi + bk * bj) * bytes_per_elem + bi * bj * 4
+    flops = 2.0 * k * din * dout
+    # HBM traffic: each lhs tile is read once per j-column of the grid,
+    # each rhs tile once per i-row; output written once.
+    hbm = (
+        k * din * grid[1] * bytes_per_elem
+        + k * dout * grid[0] * bytes_per_elem
+        + din * dout * bytes_per_elem
+    )
+    intensity = flops / hbm
+    return KernelEstimate(
+        "sampled_matmul",
+        grid,
+        vmem,
+        flops,
+        hbm,
+        intensity,
+        _roofline_util(intensity),
+        note=f"k={k} ({k}/{din}x{dout})",
+    )
+
+
+def gather_scale_estimate(
+    m: int, d: int, k: int, bk: int = 128, bytes_per_elem: int = 4
+) -> KernelEstimate:
+    """Row gather+scale: pure-DMA kernel; MXU idle, bandwidth bound.
+
+    Only the k kept rows cross HBM->VMEM — this *is* the memory saving;
+    utilization is reported against bandwidth, not MXU.
+    """
+    bk = pick_block(k, bk)
+    grid = (cdiv(k, bk),)
+    vmem = 2 * bk * d * bytes_per_elem + bk * 8
+    flops = float(k * d)  # one multiply per element (scale)
+    hbm = 2.0 * k * d * bytes_per_elem  # read k rows + write k rows
+    intensity = flops / hbm
+    return KernelEstimate(
+        "gather_scale", grid, vmem, flops, hbm, intensity,
+        _roofline_util(intensity),
+        note=f"streams {k}/{m} rows (budget {k / m:.0%})",
+    )
+
+
+def row_norms_estimate(
+    m: int, d: int, bm: int = 256, bytes_per_elem: int = 4
+) -> KernelEstimate:
+    bm = pick_block(m, bm)
+    grid = (cdiv(m, bm),)
+    vmem = bm * d * bytes_per_elem + bm * 4
+    flops = 2.0 * m * d
+    hbm = m * d * bytes_per_elem + m * 4
+    intensity = flops / hbm
+    return KernelEstimate(
+        "row_norms", grid, vmem, flops, hbm, intensity, _roofline_util(intensity)
+    )
+
+
+def paper_shapes() -> list[KernelEstimate]:
+    """Estimates at the T5-Large-ish Table-3 shape (M=B*S=1024, d=1024,
+    ff=4096) for budgets 0.3 and 0.1, plus the big-batch Fig-9 shape."""
+    from .config import budget_rows
+
+    out = []
+    m = 8 * 128
+    for frac in (0.3, 0.1):
+        k = budget_rows(frac, m)
+        out.append(sampled_matmul_estimate(k, 1024, 1024))
+        out.append(sampled_matmul_estimate(k, 4096, 1024))
+        out.append(gather_scale_estimate(m, 1024, k))
+    out.append(row_norms_estimate(m, 1024))
+    # big-batch regime (B=64): intensity rises with k
+    out.append(sampled_matmul_estimate(budget_rows(0.3, 64 * 128), 1024, 1024))
+    return out
+
+
+def vmem_ok(est: KernelEstimate) -> bool:
+    return est.vmem_bytes <= VMEM_BUDGET
+
+
+def main() -> None:
+    rows = paper_shapes()
+    header = ["kernel", "grid", "VMEM/step", "GFLOP", "flops/B", "MXU util*", "note"]
+    widths = [max(len(header[i]), max(len(r.row()[i]) for r in rows)) for i in range(7)]
+    fmt = "  ".join(f"{{:{w}}}" for w in widths)
+    print(fmt.format(*header))
+    print("-" * (sum(widths) + 12))
+    for r in rows:
+        print(fmt.format(*r.row()), "" if vmem_ok(r) else "  !! VMEM OVER BUDGET")
+    print(
+        "\n* roofline estimate vs TPUv4 bf16 peak; gather_scale/row_norms are\n"
+        "  bandwidth-bound by construction (that is the point of the method)."
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+r"""Column-row pair selection: WTA-CRS (Eq. 6), CRS (Eq. 5), Deterministic.
+
+Everything here is static-shape so it AOT-lowers cleanly: given an
+m-point probability vector and a *static* budget k, each method emits a
+pair ``(indices[k] int32, scales[k] f32)`` such that
+
+    sum_t  scales[t] * X[:, indices[t]] @ Y[indices[t], :]
+
+is the method's estimate of X @ Y.  The dynamic deterministic-set size
+|C| of WTA-CRS is handled with masks over a descending sort, never with
+dynamic shapes.
+
+Conventions (matching the paper exactly):
+
+* CRS (Eq. 5): i.i.d. indices ~ P, scale 1/(k p_i).
+* WTA-CRS (Eq. 6): the |C| largest-probability pairs are kept with
+  scale 1 (their sum is exactly  sum_{c in C} f(c) p_c ), the remaining
+  k-|C| slots are i.i.d. samples from the renormalized tail P^{D\C} with
+  scale  (1 - sum_C p) / ((k-|C|) p_j).
+  |C| = argmin_{0<=|C|<k} (1 - sum_C p)/(k - |C|)  (Theorem 2).
+* Deterministic (Adelman et al. 2021): top-k pairs, scale 1 — *biased*,
+  reproduced for the Fig. 8 ablation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-12
+
+METHODS = ("crs", "wtacrs", "det")
+
+
+def colrow_probs(x_norms: jax.Array, y_norms: jax.Array) -> jax.Array:
+    """Eq. (3): p_i ∝ ||X_:,i|| * ||Y_i,:||, normalized to sum 1."""
+    w = x_norms.astype(jnp.float32) * y_norms.astype(jnp.float32)
+    return w / (jnp.sum(w) + EPS)
+
+
+def _categorical_iid(key: jax.Array, probs: jax.Array, n: int) -> jax.Array:
+    """n i.i.d. (with replacement) draws from an (unnormalized) probability
+    vector via inverse-CDF + searchsorted.
+
+    O(m + n log m) — versus the O(n*m) Gumbel-max matrix, which dominated
+    the whole train step before the §Perf pass (each threefry sample is
+    tens of ops; see EXPERIMENTS.md §Perf L2).  Zero-probability entries
+    own zero-width CDF intervals and are hit with probability 0.
+    """
+    cdf = jnp.cumsum(probs.astype(jnp.float32))
+    total = cdf[-1]
+    u = jax.random.uniform(key, (n,), minval=EPS, maxval=1.0 - EPS) * total
+    idx = jnp.searchsorted(cdf, u, side="left")
+    return jnp.clip(idx, 0, probs.shape[0] - 1).astype(jnp.int32)
+
+
+def crs_select(
+    probs: jax.Array, key: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Eq. (5). Returns (indices[k], scales[k])."""
+    idx = _categorical_iid(key, probs, k)
+    scales = 1.0 / (k * probs[idx] + EPS)
+    return idx, scales.astype(jnp.float32)
+
+
+def det_select(probs: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """Adelman et al.: top-k by probability, no scaling (biased).
+
+    argsort instead of lax.top_k: the latter lowers to an HLO `topk` op
+    whose `largest` attribute the bundled xla_extension 0.5.1 text parser
+    rejects; a descending sort round-trips cleanly.
+    """
+    idx = jnp.argsort(-probs)[:k]
+    return idx.astype(jnp.int32), jnp.ones((k,), jnp.float32)
+
+
+def wtacrs_csize(probs_sorted: jax.Array, k: int) -> jax.Array:
+    """Theorem-2 optimal |C|: argmin_{0<=c<k} (1 - prefix_c) / (k - c).
+
+    ``probs_sorted`` is descending.  Returns a traced int32 scalar.
+    c = k is excluded (it would leave zero stochastic slots; with
+    sum_C p < 1 that estimator is undefined — Eq. 6 requires k-|C| >= 1).
+    """
+    prefix = jnp.concatenate(
+        [jnp.zeros((1,), jnp.float32), jnp.cumsum(probs_sorted)[: k - 1]]
+    )  # prefix[c] = sum of top-c probabilities, c in [0, k)
+    c_grid = jnp.arange(k, dtype=jnp.float32)
+    ratio = (1.0 - prefix) / (k - c_grid)
+    return jnp.argmin(ratio).astype(jnp.int32)
+
+
+def wtacrs_select(
+    probs: jax.Array, key: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Eq. (6). Returns (indices[k], scales[k]) with |C| chosen per Thm 2.
+
+    Slot t < |C|  -> deterministic: index = t-th largest-prob pair,
+                     scale = 1 (contributes f(c) p_c = X_:,c Y_c,: exactly).
+    Slot t >= |C| -> stochastic: index ~ P^{D\\C} i.i.d.,
+                     scale = (1 - sum_C p) / ((k-|C|) p_j).
+    """
+    m = probs.shape[0]
+    order = jnp.argsort(-probs).astype(jnp.int32)  # descending
+    p_sorted = probs[order]
+    csize = wtacrs_csize(p_sorted, k)  # traced scalar in [0, k)
+
+    prefix = jnp.concatenate([jnp.zeros((1,), jnp.float32), jnp.cumsum(p_sorted)])
+    mass_c = prefix[csize]  # sum of the |C| largest probabilities
+    tail_mass = 1.0 - mass_c
+    n_stoc = (k - csize).astype(jnp.float32)
+
+    # Tail distribution: zero out the top-|C| entries (by rank), renormalize.
+    ranks = jnp.zeros((m,), jnp.int32).at[order].set(jnp.arange(m, dtype=jnp.int32))
+    in_tail = ranks >= csize
+    probs_tail = jnp.where(in_tail, probs, 0.0)
+    sampled = _categorical_iid(key, probs_tail, k)  # draws for every slot
+
+    slots = jnp.arange(k, dtype=jnp.int32)
+    is_det = slots < csize
+    idx = jnp.where(is_det, order[slots], sampled)
+    stoc_scale = tail_mass / (n_stoc * probs[sampled] + EPS)
+    scales = jnp.where(is_det, 1.0, stoc_scale)
+    return idx, scales.astype(jnp.float32)
+
+
+def select(
+    method: str, probs: jax.Array, key: jax.Array, k: int
+) -> tuple[jax.Array, jax.Array]:
+    """Dispatch by method name (static)."""
+    if method == "crs":
+        return crs_select(probs, key, k)
+    if method == "wtacrs":
+        return wtacrs_select(probs, key, k)
+    if method == "det":
+        return det_select(probs, k)
+    raise ValueError(f"unknown sampling method {method!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("method", "k"))
+def estimate_matmul(
+    method: str, x: jax.Array, y: jax.Array, key: jax.Array, k: int
+) -> jax.Array:
+    """Reference end-to-end estimator of X @ Y over k column-row pairs.
+
+    X: (n, m), Y: (m, q).  Used by the statistical tests (Theorems 1/2)
+    and mirrored by the pure-Rust `estimator` module.
+    """
+    xn = jnp.sqrt(jnp.sum(x.astype(jnp.float32) ** 2, axis=0))
+    yn = jnp.sqrt(jnp.sum(y.astype(jnp.float32) ** 2, axis=1))
+    probs = colrow_probs(xn, yn)
+    idx, scales = select(method, probs, key, k)
+    xs = x[:, idx] * scales[None, :]
+    ys = y[idx, :]
+    return xs @ ys

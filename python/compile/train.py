@@ -1,0 +1,327 @@
+"""Train/eval/init step builders — the functions that become artifacts.
+
+Each builder returns a *flat* function (list of arrays in, tuple of
+arrays out) plus an IoSpec describing the flattening, so `aot.py` can
+lower it and the Rust runtime can drive it positionally.
+
+train_step(trainable..., frozen..., m..., v..., step, tokens, labels,
+           znorms, seed)
+  -> (trainable'..., m'..., v'..., step', loss, znorms')
+
+The optimizer is AdamW (paper Appendix F: b1=.9 b2=.999 eps=1e-8 wd=0)
+with the paper's LR schedule: constant for the first 500 steps, then
+linear decay to zero over `total_steps`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from .config import Method, ModelConfig, approx_layer_count
+from .kernels import KernelSet, REF
+from . import model as model_mod
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def classification_loss(kern: KernelSet, logits, labels):
+    """Mean CE over (B, C) logits; labels int32 (B,)."""
+    return kern.softmax_xent(logits, labels)
+
+
+def regression_loss(logits, targets):
+    """MSE over (B, 1) predictions; targets f32 (B,). (STS-B style.)"""
+    return jnp.mean((logits[:, 0] - targets) ** 2)
+
+
+def lm_loss(kern: KernelSet, logits, tokens):
+    """Next-token CE, ignoring pad targets. logits (B, S, V), tokens (B, S)."""
+    B, S, V = logits.shape
+    inp = logits[:, :-1, :].reshape(B * (S - 1), V)
+    tgt = tokens[:, 1:].reshape(B * (S - 1))
+    mask = (tgt != model_mod.PAD_ID).astype(jnp.float32)
+    lg = inp.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    picked = jnp.take_along_axis(lg, tgt[:, None], axis=-1)[:, 0]
+    per = (lse - picked) * mask
+    return jnp.sum(per) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# AdamW + LR schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    warmup_const_steps: int = 500  # paper: constant LR for first 500 steps
+    total_steps: int = 10_000
+
+
+def lr_frac_at(oc: OptConfig, step):
+    """Schedule *fraction*: 1.0 for warmup_const_steps, then linear decay.
+
+    The base LR itself is a runtime input of the train-step artifact (so
+    one artifact serves every task's tuned LR, Appendix F Table 5).
+    """
+    s = step.astype(jnp.float32)
+    c = float(oc.warmup_const_steps)
+    t = float(max(oc.total_steps, oc.warmup_const_steps + 1))
+    frac = jnp.clip((t - s) / (t - c), 0.0, 1.0)
+    return jnp.where(s <= c, 1.0, frac)
+
+
+def adamw_update(oc: OptConfig, params, grads, m, v, step, lr_in=None):
+    """One AdamW step over matching pytrees. step is the *new* count."""
+    base_lr = oc.lr if lr_in is None else lr_in
+    lr = base_lr * lr_frac_at(oc, step)
+    b1, b2 = oc.b1, oc.b2
+    sf = step.astype(jnp.float32)
+    bc1 = 1.0 - b1**sf
+    bc2 = 1.0 - b2**sf
+
+    def upd(p, g, mi, vi):
+        mi2 = b1 * mi + (1 - b1) * g
+        vi2 = b2 * vi + (1 - b2) * g * g
+        mhat = mi2 / bc1
+        vhat = vi2 / bc2
+        p2 = p - lr * (mhat / (jnp.sqrt(vhat) + oc.eps) + oc.weight_decay * p)
+        return p2, mi2, vi2
+
+    flat_p, tree = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(m)
+    flat_v = jax.tree_util.tree_leaves(v)
+    out = [upd(p, g, mi, vi) for p, g, mi, vi in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(tree, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(tree, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(tree, [o[2] for o in out])
+    return new_p, new_m, new_v
+
+
+# ---------------------------------------------------------------------------
+# Flat-interface step builders
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class IoSpec:
+    """Positional contract between an artifact and the Rust runtime."""
+
+    input_names: list[str]
+    input_shapes: list[tuple[int, ...]]
+    input_dtypes: list[str]
+    output_names: list[str]
+    output_shapes: list[tuple[int, ...]]
+    output_dtypes: list[str]
+
+    @staticmethod
+    def of(names_in, examples_in, names_out, examples_out):
+        return IoSpec(
+            list(names_in),
+            [tuple(x.shape) for x in examples_in],
+            [str(x.dtype) for x in examples_in],
+            list(names_out),
+            [tuple(x.shape) for x in examples_out],
+            [str(x.dtype) for x in examples_out],
+        )
+
+
+def _tree_names(prefix: str, tree) -> list[str]:
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    return [prefix + jax.tree_util.keystr(p) for p, _ in paths]
+
+
+def label_spec(cfg: ModelConfig):
+    """(shape, dtype) of the per-batch label tensor."""
+    if cfg.kind == "decoder_lm":
+        return None  # LM loss reads the token stream itself
+    if cfg.n_out == 1:
+        return ((cfg.batch,), jnp.float32)
+    return ((cfg.batch,), jnp.int32)
+
+
+def loss_fn_for(cfg: ModelConfig, kern: KernelSet):
+    if cfg.kind == "decoder_lm":
+        return lambda logits, tokens, labels: lm_loss(kern, logits, tokens)
+    if cfg.n_out == 1:
+        return lambda logits, tokens, labels: regression_loss(logits, labels)
+    return lambda logits, tokens, labels: classification_loss(kern, logits, labels)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    method: Method,
+    oc: OptConfig,
+    kern: KernelSet = REF,
+    seed: int = 0,
+):
+    """Returns (flat_fn, example_flat_inputs, IoSpec, meta dict)."""
+    trainable0, frozen0 = model_mod.init_params(cfg, method, seed)
+    n_approx = approx_layer_count(cfg, method)
+    zeros_like_t = jax.tree_util.tree_map(jnp.zeros_like, trainable0)
+    loss_fn = loss_fn_for(cfg, kern)
+
+    t_tree = jax.tree_util.tree_structure(trainable0)
+    f_tree = jax.tree_util.tree_structure(frozen0)
+    nt = t_tree.num_leaves
+    nf = f_tree.num_leaves
+
+    lspec = label_spec(cfg)
+
+    def step_fn(t_flat, f_flat, m_flat, v_flat, step, tokens, labels, znorms, seed_arr, lr_in):
+        trainable = jax.tree_util.tree_unflatten(t_tree, t_flat)
+        frozen = jax.tree_util.tree_unflatten(f_tree, f_flat)
+        m = jax.tree_util.tree_unflatten(t_tree, m_flat)
+        v = jax.tree_util.tree_unflatten(t_tree, v_flat)
+        key = jax.random.fold_in(jax.random.PRNGKey(0), seed_arr)
+        key = jax.random.fold_in(key, step)
+        taps = jnp.zeros((max(n_approx, 1), cfg.batch), jnp.float32)
+
+        def loss_of(trainable, taps):
+            logits = model_mod.forward(
+                cfg, method, trainable, frozen, tokens,
+                key=key, znorms=znorms, taps=taps, train=True,
+            )
+            return loss_fn(logits, tokens, labels)
+
+        loss, (g_train, g_taps) = jax.value_and_grad(loss_of, argnums=(0, 1))(
+            trainable, taps
+        )
+        new_step = step + 1
+        new_t, new_m, new_v = adamw_update(
+            oc, trainable, g_train, m, v, new_step, lr_in
+        )
+        new_znorms = g_taps  # the gradient taps carry ||dZ|| per layer/sample
+        return (
+            jax.tree_util.tree_leaves(new_t),
+            jax.tree_util.tree_leaves(new_m),
+            jax.tree_util.tree_leaves(new_v),
+            new_step,
+            loss,
+            new_znorms,
+        )
+
+    def flat_fn(*args):
+        t_flat = list(args[:nt])
+        f_flat = list(args[nt : nt + nf])
+        m_flat = list(args[nt + nf : 2 * nt + nf])
+        v_flat = list(args[2 * nt + nf : 3 * nt + nf])
+        step, tokens, labels, znorms, seed_arr, lr_in = args[3 * nt + nf :]
+        nt_, nm_, nv_, ns_, loss, nz_ = step_fn(
+            t_flat, f_flat, m_flat, v_flat, step, tokens, labels, znorms,
+            seed_arr, lr_in,
+        )
+        return tuple(nt_) + tuple(nm_) + tuple(nv_) + (ns_, loss, nz_)
+
+    # Example inputs (concrete, also usable to smoke-run the step).
+    ex_t = jax.tree_util.tree_leaves(trainable0)
+    ex_f = jax.tree_util.tree_leaves(frozen0)
+    ex_m = jax.tree_util.tree_leaves(zeros_like_t)
+    ex_v = jax.tree_util.tree_leaves(zeros_like_t)
+    ex_step = jnp.zeros((), jnp.int32)
+    ex_tokens = jnp.ones((cfg.batch, cfg.seq_len), jnp.int32)
+    if lspec is None:
+        ex_labels = jnp.zeros((1,), jnp.float32)  # unused placeholder
+    else:
+        ex_labels = jnp.zeros(lspec[0], lspec[1])
+    ex_znorms = jnp.ones((max(n_approx, 1), cfg.batch), jnp.float32)
+    ex_seed = jnp.zeros((), jnp.int32)
+    ex_lr = jnp.asarray(oc.lr, jnp.float32)
+
+    flat_inputs = (
+        ex_t + ex_f + ex_m + ex_v
+        + [ex_step, ex_tokens, ex_labels, ex_znorms, ex_seed, ex_lr]
+    )
+    in_names = (
+        _tree_names("t", trainable0)
+        + _tree_names("f", frozen0)
+        + _tree_names("m", trainable0)
+        + _tree_names("v", trainable0)
+        + ["step", "tokens", "labels", "znorms", "seed", "lr"]
+    )
+    out_names = (
+        _tree_names("t", trainable0)
+        + _tree_names("m", trainable0)
+        + _tree_names("v", trainable0)
+        + ["step", "loss", "znorms"]
+    )
+    ex_outputs = ex_t + ex_m + ex_v + [ex_step, jnp.zeros((), jnp.float32), ex_znorms]
+    spec = IoSpec.of(in_names, flat_inputs, out_names, ex_outputs)
+    meta = {
+        "n_trainable": nt,
+        "n_frozen": nf,
+        "n_approx_layers": n_approx,
+        "param_count_trainable": int(
+            sum(x.size for x in ex_t)
+        ),
+        "param_count_frozen": int(sum(x.size for x in ex_f)),
+    }
+    return flat_fn, flat_inputs, spec, meta
+
+
+def build_eval_step(cfg: ModelConfig, method: Method, seed: int = 0):
+    """Eval graph: (trainable..., frozen..., tokens) -> logits."""
+    trainable0, frozen0 = model_mod.init_params(cfg, method, seed)
+    t_tree = jax.tree_util.tree_structure(trainable0)
+    f_tree = jax.tree_util.tree_structure(frozen0)
+    nt, nf = t_tree.num_leaves, f_tree.num_leaves
+
+    def flat_fn(*args):
+        trainable = jax.tree_util.tree_unflatten(t_tree, list(args[:nt]))
+        frozen = jax.tree_util.tree_unflatten(f_tree, list(args[nt : nt + nf]))
+        tokens = args[nt + nf]
+        logits = model_mod.forward(cfg, method, trainable, frozen, tokens, train=False)
+        return (logits,)
+
+    ex_t = jax.tree_util.tree_leaves(trainable0)
+    ex_f = jax.tree_util.tree_leaves(frozen0)
+    ex_tokens = jnp.ones((cfg.batch, cfg.seq_len), jnp.int32)
+    flat_inputs = ex_t + ex_f + [ex_tokens]
+    logits = flat_fn(*flat_inputs)[0]
+    spec = IoSpec.of(
+        _tree_names("t", trainable0) + _tree_names("f", frozen0) + ["tokens"],
+        flat_inputs,
+        ["logits"],
+        [logits],
+    )
+    return flat_fn, flat_inputs, spec, {"n_trainable": nt, "n_frozen": nf}
+
+
+def build_init(cfg: ModelConfig, method: Method):
+    """Init graph: (seed,) -> (trainable..., frozen..., m..., v..., step)."""
+
+    def flat_fn(seed_arr):
+        trainable, frozen = model_mod.init_params(cfg, method, seed_arr)
+        zeros = jax.tree_util.tree_map(jnp.zeros_like, trainable)
+        return (
+            tuple(jax.tree_util.tree_leaves(trainable))
+            + tuple(jax.tree_util.tree_leaves(frozen))
+            + tuple(jax.tree_util.tree_leaves(zeros))
+            + tuple(jax.tree_util.tree_leaves(zeros))
+            + (jnp.zeros((), jnp.int32),)
+        )
+
+    ex_seed = jnp.zeros((), jnp.int32)
+    outs = flat_fn(ex_seed)
+    trainable0, frozen0 = model_mod.init_params(cfg, method, 0)
+    out_names = (
+        _tree_names("t", trainable0)
+        + _tree_names("f", frozen0)
+        + _tree_names("m", trainable0)
+        + _tree_names("v", trainable0)
+        + ["step"]
+    )
+    spec = IoSpec.of(["seed"], [ex_seed], out_names, list(outs))
+    return flat_fn, [ex_seed], spec, {}

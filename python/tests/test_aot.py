@@ -1,0 +1,88 @@
+"""AOT catalogue + manifest contract tests (no full lowering here)."""
+import json
+import os
+import tempfile
+
+import pytest
+
+from compile import aot
+from compile.config import SIZES, Method, parse_method
+from compile.hlo import lower_to_hlo_text
+from compile.train import build_eval_step
+
+
+def test_catalogue_ids_unique():
+    ids = [aid for aid, _, _ in aot.catalogue()]
+    assert len(ids) == len(set(ids))
+    assert len(ids) > 100  # the full experiment matrix
+
+
+def test_catalogue_metas_complete():
+    for aid, _, meta in aot.catalogue():
+        assert meta["kind"] in ("train", "eval", "init", "component", "kernel")
+        assert "model" in meta and "method" in meta
+
+
+def test_parse_method_roundtrip():
+    for name in aot.CLS_METHODS + aot.LM_METHODS:
+        m = parse_method(name)
+        assert m.name == name, (m.name, name)
+
+
+def test_parse_method_values():
+    m = parse_method("lora-wtacrs30")
+    assert m.tuning == "lora" and m.sampler == "wtacrs" and m.budget == 0.3
+    m = parse_method("full-det10")
+    assert m.sampler == "det" and m.budget == 0.1
+
+
+def test_lower_eval_tiny_produces_hlo_text():
+    cfg = SIZES["tiny"]
+    fn, ex, spec, _ = build_eval_step(cfg, Method())
+    text = lower_to_hlo_text(fn, ex)
+    assert text.startswith("HloModule")
+    assert "ENTRY" in text
+    # One parameter per flat input.
+    assert text.count("parameter(") >= len(ex)
+
+
+def _entry_param_count(text: str) -> int:
+    entry = text[text.index("ENTRY") :]
+    return entry.count("parameter(")
+
+
+def test_unused_inputs_keep_their_parameter_slots():
+    """The positional contract requires a parameter per manifest input
+    even when the graph ignores it (exact/det variants ignore znorms and
+    seed) — regression test for the keep_unused lowering bug."""
+    from compile.train import OptConfig, build_train_step
+
+    cfg = SIZES["tiny"]
+    for method in [Method(), Method("full", "det", 0.1)]:
+        fn, ex, spec, _ = build_train_step(cfg, method, OptConfig())
+        text = lower_to_hlo_text(fn, ex)
+        assert _entry_param_count(text) == len(ex), method.name
+
+
+def test_manifest_written_and_valid(tmp_path):
+    rc = aot.main(
+        ["--out-dir", str(tmp_path), "--only", "eval_tiny_full_c2"]
+    )
+    assert rc == 0
+    man = json.loads((tmp_path / "manifest.json").read_text())
+    art = man["artifacts"]["eval_tiny_full_c2"]
+    assert art["kind"] == "eval"
+    assert (tmp_path / art["path"]).exists()
+    names = [i["name"] for i in art["inputs"]]
+    assert names[-1] == "tokens"
+    assert art["outputs"][0]["name"] == "logits"
+    assert man["models"]["tiny"]["d_model"] == 64
+    assert "t5-3b" in man["paper_dims"]
+
+
+def test_manifest_skip_existing(tmp_path):
+    aot.main(["--out-dir", str(tmp_path), "--only", "eval_tiny_full_c2"])
+    p = tmp_path / "eval_tiny_full_c2.hlo.txt"
+    mtime = p.stat().st_mtime_ns
+    aot.main(["--out-dir", str(tmp_path), "--only", "eval_tiny_full_c2"])
+    assert p.stat().st_mtime_ns == mtime  # second run skipped the lowering

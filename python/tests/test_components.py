@@ -1,0 +1,91 @@
+"""Component graphs (Table 3) and LST/LoRA structural behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.components import build_component, build_kernel
+from compile.config import Method
+
+
+@pytest.mark.parametrize("which", ["att", "ff", "block"])
+def test_component_forward_shapes(which):
+    fn, ex, spec, meta = build_component(which, Method(), False, batch=2, seq=16)
+    out = jax.jit(fn)(*ex)
+    assert out[0].shape == (2, 16, 1024)
+    assert meta["component"] == which
+
+
+@pytest.mark.parametrize("which", ["att", "ff"])
+def test_component_backward_grads(which):
+    fn, ex, spec, meta = build_component(which, Method(), True, batch=2, seq=16)
+    out = jax.jit(fn)(*ex)
+    # (loss, grads...) — every grad finite, matching weight shapes.
+    assert np.isfinite(float(out[0]))
+    n_w = len(spec.input_names) - 3
+    assert len(out) == 1 + n_w
+    for g, name in zip(out[1:], spec.output_names[1:]):
+        assert np.all(np.isfinite(np.asarray(g))), name
+
+
+def test_component_wtacrs_fwd_matches_exact():
+    """Sampling only changes the backward; fwd outputs must agree."""
+    fn_e, ex_e, _, _ = build_component("ff", Method(), False, batch=2, seq=16)
+    fn_s, ex_s, _, _ = build_component(
+        "ff", Method("full", "wtacrs", 0.3), False, batch=2, seq=16
+    )
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal(ex_e[0].shape).astype(np.float32))
+    ex_e = [x] + list(ex_e[1:])
+    ex_s = [x] + list(ex_s[1:])
+    a = jax.jit(fn_e)(*ex_e)[0]
+    b = jax.jit(fn_s)(*ex_s)[0]
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_component_wtacrs_grad_unbiased_ff():
+    """Mean of sampled FF weight-grads ~ exact grads (smaller instance)."""
+    fn_e, ex_e, spec_e, _ = build_component("ff", Method(), True, batch=2, seq=8)
+    fn_s, ex_s, spec_s, _ = build_component(
+        "ff", Method("full", "wtacrs", 0.3), True, batch=2, seq=8
+    )
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal(ex_e[0].shape).astype(np.float32) * 0.1)
+    ex_e[0] = x
+    exact = jax.jit(fn_e)(*ex_e)
+    g_exact = np.asarray(exact[1])
+
+    jfn = jax.jit(fn_s)
+    acc = np.zeros_like(g_exact)
+    trials = 60
+    for t in range(trials):
+        ex_s[0] = x
+        ex_s[1] = jnp.asarray(t, jnp.int32)  # new seed each trial
+        acc += np.asarray(jfn(*ex_s)[1])
+    err = np.linalg.norm(acc / trials - g_exact) / np.linalg.norm(g_exact)
+    assert err < 0.25, err
+
+
+@pytest.mark.parametrize(
+    "name", ["row_norms", "gather_scale", "sampled_matmul", "softmax_xent"]
+)
+def test_kernel_builders_ref_vs_pallas(name):
+    m, din, dout, k = 64, 32, 16, 20
+    fr, exr, sr, _ = build_kernel(name, "ref", m, din, dout, k)
+    fp, exp_, sp, _ = build_kernel(name, "pallas", m, din, dout, k)
+    rng = np.random.default_rng(2)
+    # Shared random inputs (respect idx/labels domains).
+    ins = []
+    for spec_t, e in zip(sr.input_names, exr):
+        if spec_t == "idx":
+            ins.append(jnp.asarray(rng.integers(0, m, e.shape).astype(np.int32)))
+        elif spec_t == "labels":
+            ins.append(jnp.asarray(rng.integers(0, dout, e.shape).astype(np.int32)))
+        else:
+            ins.append(jnp.asarray(rng.standard_normal(e.shape).astype(np.float32)))
+    a = jax.jit(fr)(*ins)
+    b = jax.jit(fp)(*ins)
+    for x, y in zip(a, b):
+        np.testing.assert_allclose(
+            np.asarray(x), np.asarray(y), rtol=1e-4, atol=1e-4
+        )

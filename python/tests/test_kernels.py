@@ -1,0 +1,201 @@
+"""Pallas kernels (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (divisible and ragged), dtypes, and block sizes;
+every kernel must match its oracle to float32-level tolerances.  This is
+the core L1 correctness signal.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.norms import row_norms
+from compile.kernels.sampled_matmul import (
+    gather_scale,
+    gather_scale_matmul,
+    sampled_matmul,
+)
+from compile.kernels.softmax_xent import softmax_xent
+from compile.kernels.common import pick_block, cdiv, round_up
+
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-5, atol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# row_norms
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(1, 300),
+    d=st.integers(1, 130),
+    dt=st.sampled_from(DTYPES),
+)
+def test_row_norms_matches_ref(m, d, dt):
+    x = _rand(jax.random.PRNGKey(m * 1000 + d), (m, d), dt)
+    got = row_norms(x)
+    want = ref.row_norms(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(dt))
+
+
+def test_row_norms_blocked():
+    x = _rand(jax.random.PRNGKey(0), (512, 64), jnp.float32)
+    for br in (32, 128, 512):
+        got = row_norms(x, block_rows=br)
+        np.testing.assert_allclose(
+            np.asarray(got), np.asarray(ref.row_norms(x)), rtol=1e-5, atol=1e-5
+        )
+
+
+def test_row_norms_zero_rows():
+    x = jnp.zeros((16, 8), jnp.float32)
+    np.testing.assert_allclose(np.asarray(row_norms(x)), np.zeros(16), atol=0)
+
+
+# ---------------------------------------------------------------------------
+# gather_scale
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(2, 200),
+    d=st.integers(1, 70),
+    k=st.integers(1, 64),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**16),
+)
+def test_gather_scale_matches_ref(m, d, k, dt, seed):
+    key = jax.random.PRNGKey(seed)
+    kh, ki, ks = jax.random.split(key, 3)
+    h = _rand(kh, (m, d), dt)
+    idx = jax.random.randint(ki, (k,), 0, m, jnp.int32)
+    scales = jax.random.uniform(ks, (k,), jnp.float32, 0.1, 3.0)
+    got = gather_scale(h, idx, scales)
+    want = ref.gather_scale(h, idx, scales)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dt)
+    )
+
+
+def test_gather_scale_repeated_indices():
+    h = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    idx = jnp.array([2, 2, 0], jnp.int32)
+    s = jnp.array([1.0, 2.0, 0.5], jnp.float32)
+    got = np.asarray(gather_scale(h, idx, s))
+    np.testing.assert_allclose(got[0], h[2])
+    np.testing.assert_allclose(got[1], 2 * h[2])
+    np.testing.assert_allclose(got[2], 0.5 * h[0])
+
+
+# ---------------------------------------------------------------------------
+# sampled_matmul
+# ---------------------------------------------------------------------------
+
+
+@given(
+    k=st.integers(1, 96),
+    din=st.integers(1, 80),
+    dout=st.integers(1, 80),
+    dt=st.sampled_from(DTYPES),
+    seed=st.integers(0, 2**16),
+)
+def test_sampled_matmul_matches_ref(k, din, dout, dt, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    h = _rand(k1, (k, din), dt)
+    dz = _rand(k2, (k, dout), dt)
+    got = sampled_matmul(h, dz)
+    want = ref.sampled_matmul(h, dz)
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dt)
+    )
+
+
+def test_sampled_matmul_blocked_grid():
+    """Multi-step K accumulation (the MXU schedule) must stay exact."""
+    key = jax.random.PRNGKey(7)
+    h = _rand(key, (256, 64), jnp.float32)
+    dz = _rand(jax.random.fold_in(key, 1), (256, 96), jnp.float32)
+    got = sampled_matmul(h, dz, block_i=32, block_j=32, block_k=64)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(ref.sampled_matmul(h, dz)), rtol=1e-4, atol=1e-4
+    )
+
+
+@given(
+    m=st.integers(4, 120),
+    din=st.integers(1, 48),
+    dout=st.integers(1, 48),
+    k=st.integers(1, 32),
+    seed=st.integers(0, 2**16),
+)
+def test_gather_scale_matmul_fused_matches_ref(m, din, dout, k, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    h = _rand(k1, (m, din), jnp.float32)
+    dz = _rand(k2, (m, dout), jnp.float32)
+    idx = jax.random.randint(k3, (k,), 0, m, jnp.int32)
+    scales = jax.random.uniform(k4, (k,), jnp.float32, 0.1, 3.0)
+    got = gather_scale_matmul(h, dz, idx, scales)
+    want = ref.gather_scale_matmul(h, dz, idx, scales)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------------
+
+
+@given(
+    n=st.integers(1, 200),
+    c=st.integers(2, 40),
+    seed=st.integers(0, 2**16),
+)
+def test_softmax_xent_matches_ref(n, c, seed):
+    key = jax.random.PRNGKey(seed)
+    logits = _rand(key, (n, c), jnp.float32) * 5.0
+    labels = jax.random.randint(jax.random.fold_in(key, 1), (n,), 0, c, jnp.int32)
+    got = softmax_xent(logits, labels)
+    want = ref.softmax_xent(logits, labels)
+    np.testing.assert_allclose(float(got), float(want), rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    logits = jnp.array([[1000.0, -1000.0], [-1000.0, 1000.0]], jnp.float32)
+    labels = jnp.array([0, 1], jnp.int32)
+    assert float(softmax_xent(logits, labels)) < 1e-5
+    labels_bad = jnp.array([1, 0], jnp.int32)
+    assert float(softmax_xent(logits, labels_bad)) > 100.0
+
+
+# ---------------------------------------------------------------------------
+# tiling helpers
+# ---------------------------------------------------------------------------
+
+
+@given(dim=st.integers(1, 4096), pref=st.integers(1, 512))
+def test_pick_block_divides(dim, pref):
+    b = pick_block(dim, pref)
+    assert 1 <= b <= dim
+    assert dim % b == 0
+    if dim <= pref:
+        assert b == dim
+
+
+def test_cdiv_round_up():
+    assert cdiv(7, 3) == 3
+    assert cdiv(9, 3) == 3
+    assert round_up(7, 8) == 8
+    assert round_up(16, 8) == 16

@@ -1,0 +1,171 @@
+"""approx_linear: the custom-vjp contract (Fig. 5 / Algorithm 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.linear import approx_linear_call, ApproxSpec, make_approx_linear
+
+B, S, D, DO = 4, 8, 16, 12
+M = B * S
+
+
+def _setup(seed=0):
+    rng = np.random.default_rng(seed)
+    h = jnp.asarray(rng.standard_normal((M, D)).astype(np.float32))
+    w = jnp.asarray(rng.standard_normal((D, DO)).astype(np.float32) * 0.2)
+    zn = jnp.asarray(rng.random(B).astype(np.float32) + 0.5)
+    tap = jnp.zeros((B,), jnp.float32)
+    return h, w, zn, tap
+
+
+def test_forward_is_exact():
+    """The forward pass is never approximated (§3.2 unbiasedness)."""
+    h, w, zn, tap = _setup()
+    key = jax.random.PRNGKey(0)
+    for sampler in ("wtacrs", "crs", "det"):
+        z = approx_linear_call(
+            h, w, key, zn, tap, sampler=sampler, budget=0.1, batch=B, seq=S
+        )
+        np.testing.assert_allclose(np.asarray(z), np.asarray(h @ w), rtol=1e-5)
+
+
+def test_dh_is_exact():
+    """Eq. 1b (input gradient) stays exact under every sampler."""
+    h, w, zn, tap = _setup()
+    key = jax.random.PRNGKey(1)
+    dz = jnp.asarray(np.random.default_rng(2).standard_normal((M, DO)).astype(np.float32))
+
+    def f_exact(h):
+        return jnp.sum((h @ w) * dz)
+
+    dh_exact = jax.grad(f_exact)(h)
+    for sampler in ("wtacrs", "crs", "det"):
+
+        def f(h):
+            z = approx_linear_call(
+                h, w, key, zn, tap, sampler=sampler, budget=0.2, batch=B, seq=S
+            )
+            return jnp.sum(z * dz)
+
+        np.testing.assert_allclose(
+            np.asarray(jax.grad(f)(h)), np.asarray(dh_exact), rtol=1e-4, atol=1e-5
+        )
+
+
+def test_dw_unbiased_wtacrs():
+    """Eq. 1c: E[dW_hat] = dW (Theorem 1 through the layer)."""
+    h, w, zn, tap = _setup()
+    dz_np = np.random.default_rng(3).standard_normal((M, DO)).astype(np.float32)
+    dz = jnp.asarray(dz_np)
+    dw_exact = np.asarray(h).T @ dz_np
+
+    @jax.jit
+    def grad_once(w, key):
+        def f(w):
+            z = approx_linear_call(
+                h, w, key, zn, tap, sampler="wtacrs", budget=0.3, batch=B, seq=S
+            )
+            return jnp.sum(z * dz)
+
+        return jax.grad(f)(w)
+
+    # Monte-Carlo mean must converge to the exact gradient ~ 1/sqrt(N).
+    errs = {}
+    acc = np.zeros_like(dw_exact)
+    for t in range(2000):
+        acc += np.asarray(grad_once(w, jax.random.PRNGKey(t)))
+        if t + 1 in (500, 2000):
+            errs[t + 1] = np.linalg.norm(acc / (t + 1) - dw_exact) / np.linalg.norm(
+                dw_exact
+            )
+    assert errs[2000] < 0.08, errs
+    assert errs[2000] < errs[500], errs  # still shrinking, not floored on a bias
+
+
+def test_dw_variance_wtacrs_below_crs():
+    h, w, zn, tap = _setup(7)
+    # Concentrate activation norms so Thm-2's condition bites.
+    h = h * jnp.asarray(
+        (np.random.default_rng(8).gamma(0.3, size=(M, 1)) + 1e-2).astype(np.float32)
+    )
+    dz = jnp.asarray(np.random.default_rng(9).standard_normal((M, DO)).astype(np.float32))
+
+    def grads(sampler, trials=300):
+        out = []
+        for t in range(trials):
+            key = jax.random.PRNGKey(10_000 + t)
+
+            def f(w):
+                z = approx_linear_call(
+                    h, w, key, zn, tap, sampler=sampler, budget=0.2, batch=B, seq=S
+                )
+                return jnp.sum(z * dz)
+
+            out.append(np.asarray(jax.grad(f)(w)))
+        return np.stack(out)
+
+    v_wta = grads("wtacrs").var(0).sum()
+    v_crs = grads("crs").var(0).sum()
+    assert v_wta < v_crs, (v_wta, v_crs)
+
+
+def test_tap_carries_per_sample_dz_norms():
+    """grad w.r.t. the tap input == ||dZ_j|| per sample (Alg. 1 cache)."""
+    h, w, zn, tap = _setup()
+    key = jax.random.PRNGKey(4)
+
+    def f(h, w, tap):
+        z = approx_linear_call(
+            h, w, key, zn, tap, sampler="wtacrs", budget=0.3, batch=B, seq=S
+        )
+        return jnp.sum(z**2)
+
+    g_tap = jax.grad(f, argnums=2)(h, w, tap)
+    # dz of sum(z^2) is 2z; per-sample norms of 2z over the (S, DO) block.
+    z = np.asarray(h @ w).reshape(B, S, DO)
+    want = np.sqrt((2 * z.reshape(B, -1)) ** 2).sum(1) ** 0  # placeholder
+    want = np.linalg.norm((2 * z).reshape(B, -1), axis=1)
+    np.testing.assert_allclose(np.asarray(g_tap), want, rtol=1e-4)
+
+
+def test_det_full_budget_recovers_exact_dw():
+    """det with k=M keeps every pair unscaled -> exact gradient."""
+    h, w, zn, tap = _setup(5)
+    dz = jnp.asarray(np.random.default_rng(6).standard_normal((M, DO)).astype(np.float32))
+    spec = ApproxSpec("det", M, B, S)
+    lin = make_approx_linear(spec)
+
+    def f(w):
+        return jnp.sum(lin(h, w, jax.random.PRNGKey(0), zn, tap) * dz)
+
+    dw = np.asarray(jax.grad(f)(w))
+    np.testing.assert_allclose(dw, np.asarray(h).T @ np.asarray(dz), rtol=1e-4)
+
+
+def test_cache_proxy_changes_sampling():
+    """Different cached gradient norms must change which rows are kept
+    (the cache is not decorative)."""
+    h, w, _, tap = _setup(11)
+    key = jax.random.PRNGKey(12)
+    spec = ApproxSpec("det", 8, B, S)
+    lin = make_approx_linear(spec)
+
+    def kept_rows(zn):
+        _, f_vjp = jax.vjp(lambda hh: lin(hh, w, key, zn, tap), h)
+        # recover residual indirectly: perturb dz rows one at a time is
+        # overkill; instead use dw sensitivity — rows with zero sampling
+        # weight contribute nothing to dw.
+        return f_vjp
+
+    zn_a = jnp.asarray(np.eye(B, dtype=np.float32)[0] * 10 + 0.01)
+    zn_b = jnp.asarray(np.eye(B, dtype=np.float32)[3] * 10 + 0.01)
+    dz = jnp.ones((M, DO), jnp.float32)
+
+    def dw_for(zn):
+        def f(w):
+            return jnp.sum(lin(h, w, key, zn, tap) * dz)
+
+        return np.asarray(jax.grad(f)(w))
+
+    assert not np.allclose(dw_for(zn_a), dw_for(zn_b))

@@ -1,0 +1,183 @@
+"""Statistical tests of the column-row samplers (Theorems 1 & 2).
+
+These validate the estimator math itself — unbiasedness of CRS and
+WTA-CRS, the bias of Deterministic, the Theorem-2 variance ordering, and
+the structural properties of the index/scale construction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, strategies as st
+
+from compile import sampling
+
+
+def _probs(seed, m, concentration=1.0):
+    rng = np.random.default_rng(seed)
+    w = rng.gamma(concentration, size=m).astype(np.float32) + 1e-6
+    return jnp.asarray(w / w.sum())
+
+
+# ---------------------------------------------------------------------------
+# colrow_probs
+# ---------------------------------------------------------------------------
+
+
+@given(m=st.integers(1, 100), seed=st.integers(0, 2**16))
+def test_colrow_probs_normalized(m, seed):
+    rng = np.random.default_rng(seed)
+    xn = jnp.asarray(rng.random(m).astype(np.float32) + 0.01)
+    yn = jnp.asarray(rng.random(m).astype(np.float32) + 0.01)
+    p = sampling.colrow_probs(xn, yn)
+    assert abs(float(jnp.sum(p)) - 1.0) < 1e-5
+    assert float(jnp.min(p)) >= 0.0
+
+
+def test_colrow_probs_proportional_to_norm_product():
+    xn = jnp.array([1.0, 2.0, 3.0])
+    yn = jnp.array([4.0, 1.0, 2.0])
+    p = np.asarray(sampling.colrow_probs(xn, yn))
+    want = np.array([4.0, 2.0, 6.0])
+    np.testing.assert_allclose(p, want / want.sum(), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# selectors: structure
+# ---------------------------------------------------------------------------
+
+
+@given(
+    m=st.integers(4, 200),
+    frac=st.sampled_from([0.1, 0.3, 0.5]),
+    seed=st.integers(0, 2**16),
+)
+def test_selectors_shapes_and_ranges(m, frac, seed):
+    k = max(2, int(round(frac * m)))
+    p = _probs(seed, m)
+    key = jax.random.PRNGKey(seed)
+    for method in sampling.METHODS:
+        idx, scales = sampling.select(method, p, key, k)
+        assert idx.shape == (k,) and scales.shape == (k,)
+        assert idx.dtype == jnp.int32
+        assert int(jnp.min(idx)) >= 0 and int(jnp.max(idx)) < m
+        assert np.all(np.isfinite(np.asarray(scales)))
+        assert float(jnp.min(scales)) > 0.0
+
+
+def test_det_select_is_topk_unscaled():
+    p = jnp.array([0.1, 0.4, 0.05, 0.3, 0.15])
+    idx, scales = sampling.det_select(p, 3)
+    assert set(np.asarray(idx).tolist()) == {1, 3, 4}
+    np.testing.assert_allclose(np.asarray(scales), 1.0)
+
+
+def test_wtacrs_det_slots_are_top_probs():
+    """The deterministic slots must be the |C| largest-probability pairs
+    with scale exactly 1."""
+    m, k = 50, 15
+    p = _probs(3, m, concentration=0.2)  # concentrated distribution
+    key = jax.random.PRNGKey(0)
+    idx, scales = sampling.wtacrs_select(p, key, k)
+    csize = int(sampling.wtacrs_csize(jnp.sort(p)[::-1], k))
+    top = set(np.argsort(-np.asarray(p))[:csize].tolist())
+    det_slots = np.asarray(idx)[:csize]
+    assert set(det_slots.tolist()) == top
+    np.testing.assert_allclose(np.asarray(scales)[:csize], 1.0)
+    # Stochastic slots never resample the deterministic set.
+    stoc = np.asarray(idx)[csize:]
+    assert not (set(stoc.tolist()) & top)
+
+
+@given(seed=st.integers(0, 2**16), m=st.integers(8, 120))
+def test_wtacrs_csize_in_range(seed, m):
+    k = max(2, m // 3)
+    p = np.sort(np.asarray(_probs(seed, m)))[::-1]
+    c = int(sampling.wtacrs_csize(jnp.asarray(p.copy()), k))
+    assert 0 <= c < k
+
+
+def test_wtacrs_csize_uniform_prefers_zero():
+    """On a uniform distribution there are no winners: (1-c/m)/(k-c) is
+    minimized at c=0 (pure CRS is optimal)."""
+    m, k = 100, 30
+    p = jnp.ones((m,)) / m
+    assert int(sampling.wtacrs_csize(p, k)) == 0
+
+
+def test_wtacrs_csize_concentrated_takes_winners():
+    """One dominant atom => it must enter the deterministic set."""
+    m, k = 100, 30
+    p = np.full(m, 0.2 / 99, np.float32)
+    p[0] = 0.8
+    c = int(sampling.wtacrs_csize(jnp.asarray(np.sort(p)[::-1]), k))
+    assert c >= 1
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: unbiasedness.  Theorem 2: variance ordering.
+# ---------------------------------------------------------------------------
+
+
+def _mc_estimates(method, x, y, k, trials, seed0=0):
+    est = []
+    for t in range(trials):
+        key = jax.random.PRNGKey(seed0 + t)
+        est.append(np.asarray(sampling.estimate_matmul(method, x, y, key, k)))
+    return np.stack(est)
+
+
+@pytest.mark.parametrize("method", ["crs", "wtacrs"])
+def test_unbiasedness(method):
+    rng = np.random.default_rng(0)
+    n, m, q, k = 6, 64, 5, 20
+    x = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    # Skewed column scales -> concentrated column-row distribution.
+    y = jnp.asarray(
+        (rng.standard_normal((m, q)) * rng.gamma(0.5, size=(m, 1))).astype(np.float32)
+    )
+    exact = np.asarray(x @ y)
+    est = _mc_estimates(method, x, y, k, trials=600)
+    err = np.linalg.norm(est.mean(0) - exact) / np.linalg.norm(exact)
+    assert err < 0.08, f"{method} mean deviates {err:.3f} from exact"
+
+
+def test_det_is_biased():
+    rng = np.random.default_rng(1)
+    n, m, q, k = 6, 64, 5, 16
+    x = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((m, q)).astype(np.float32))
+    exact = np.asarray(x @ y)
+    est = _mc_estimates("det", x, y, k, trials=8)
+    # Deterministic: zero variance, systematically off.
+    assert np.allclose(est.std(0), 0.0, atol=1e-5)
+    err = np.linalg.norm(est.mean(0) - exact) / np.linalg.norm(exact)
+    assert err > 0.05
+
+
+def test_variance_ordering_theorem2():
+    """On a concentrated distribution WTA-CRS must beat CRS in variance
+    (Thm 2: sum_C p > |C|/k holds there)."""
+    rng = np.random.default_rng(2)
+    n, m, q, k = 8, 128, 8, 38
+    x = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    scale = rng.gamma(0.3, size=(m, 1)) + 1e-3  # heavy-tailed column norms
+    y = jnp.asarray((rng.standard_normal((m, q)) * scale).astype(np.float32))
+    var_crs = _mc_estimates("crs", x, y, k, 400).var(0).sum()
+    var_wta = _mc_estimates("wtacrs", x, y, k, 400).var(0).sum()
+    assert var_wta < var_crs, f"Var[wta]={var_wta:.4f} !< Var[crs]={var_crs:.4f}"
+
+
+def test_variance_reduction_scales_with_concentration():
+    """More concentrated distribution -> larger CRS/WTA variance ratio."""
+    rng = np.random.default_rng(3)
+    n, m, q, k = 6, 96, 6, 28
+    x = jnp.asarray(rng.standard_normal((n, m)).astype(np.float32))
+    ratios = []
+    for conc in (1.0, 0.2):
+        scale = rng.gamma(conc, size=(m, 1)) + 1e-3
+        y = jnp.asarray((rng.standard_normal((m, q)) * scale).astype(np.float32))
+        v_crs = _mc_estimates("crs", x, y, k, 250, seed0=1000).var(0).sum()
+        v_wta = _mc_estimates("wtacrs", x, y, k, 250, seed0=1000).var(0).sum()
+        ratios.append(v_crs / max(v_wta, 1e-12))
+    assert ratios[1] > ratios[0]

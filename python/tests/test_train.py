@@ -1,0 +1,138 @@
+"""Train-step builders: optimization behaviour + flat I/O contract."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.config import SIZES, Method
+from compile.train import (
+    OptConfig,
+    adamw_update,
+    build_eval_step,
+    build_init,
+    build_train_step,
+    lr_frac_at,
+)
+
+CFG = SIZES["tiny"]
+
+
+def _drive(method, steps=12, lr=1e-3, seed=0):
+    """Run `steps` updates on one fixed batch; return loss trajectory."""
+    fn, ex, spec, meta = build_train_step(CFG, method, OptConfig(total_steps=1000))
+    jfn = jax.jit(fn)
+    rng = np.random.default_rng(seed)
+    toks = rng.integers(1, CFG.vocab, (CFG.batch, CFG.seq_len)).astype(np.int32)
+    labs = rng.integers(0, CFG.n_out, CFG.batch).astype(np.int32)
+    idx = {n: i for i, n in enumerate(spec.input_names)}
+    state = list(ex)
+    state[idx["tokens"]] = jnp.asarray(toks)
+    state[idx["labels"]] = jnp.asarray(labs)
+    state[idx["lr"]] = jnp.asarray(lr, jnp.float32)
+    nt, nf = meta["n_trainable"], meta["n_frozen"]
+    losses = []
+    for _ in range(steps):
+        out = jfn(*state)
+        state[:nt] = out[:nt]
+        state[nt + nf : nt + nf + 2 * nt] = out[nt : 3 * nt]
+        state[idx["step"]] = out[3 * nt]
+        state[idx["znorms"]] = out[3 * nt + 2]
+        losses.append(float(out[3 * nt + 1]))
+    return losses, state, out, spec, meta
+
+
+@pytest.mark.parametrize(
+    "method",
+    [Method(), Method("full", "wtacrs", 0.3), Method("lora", "wtacrs", 0.3),
+     Method("lst")],
+    ids=["full", "wtacrs03", "lora+wtacrs03", "lst"],
+)
+def test_loss_decreases_on_fixed_batch(method):
+    losses, *_ = _drive(method, steps=15)
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(losses))
+
+
+def test_znorms_output_positive_when_sampled():
+    method = Method("full", "wtacrs", 0.3)
+    _, state, out, spec, meta = _drive(method, steps=2)
+    nt = meta["n_trainable"]
+    zn = np.asarray(out[3 * nt + 2])
+    assert zn.shape == (meta["n_approx_layers"], CFG.batch)
+    assert np.all(zn > 0)
+
+
+def test_step_counter_increments():
+    _, state, out, spec, meta = _drive(Method(), steps=3)
+    nt = meta["n_trainable"]
+    assert int(out[3 * nt]) == 3
+
+
+def test_frozen_params_not_updated_lora():
+    method = Method("lora")
+    fn, ex, spec, meta = build_train_step(CFG, method, OptConfig())
+    # Frozen leaves are inputs only: output names contain no 'f' entries.
+    assert not any(n.startswith("f") and "[" in n for n in spec.output_names[: meta["n_trainable"]])
+    assert meta["n_frozen"] > 0
+
+
+def test_regression_head_stsb():
+    cfg = CFG.with_(n_out=1)
+    fn, ex, spec, meta = build_train_step(cfg, Method(), OptConfig())
+    idx = {n: i for i, n in enumerate(spec.input_names)}
+    assert spec.input_shapes[idx["labels"]] == (cfg.batch,)
+    assert spec.input_dtypes[idx["labels"]] == "float32"
+    out = jax.jit(fn)(*ex)
+    assert np.isfinite(float(out[3 * meta["n_trainable"] + 1]))
+
+
+def test_lm_train_step_runs():
+    cfg = SIZES["lm_small"].with_(
+        d_model=64, n_layers=2, n_heads=2, d_ff=128, vocab=256, seq_len=32, batch=4
+    )
+    fn, ex, spec, meta = build_train_step(cfg, Method("full", "wtacrs", 0.3),
+                                          OptConfig())
+    out = jax.jit(fn)(*ex)
+    loss = float(out[3 * meta["n_trainable"] + 1])
+    # Untrained LM on pad-free uniform tokens: loss ~ ln(vocab)
+    assert 2.0 < loss < 8.0
+
+
+# ---------------------------------------------------------------------------
+# Optimizer unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_lr_schedule_constant_then_decay():
+    oc = OptConfig(warmup_const_steps=500, total_steps=1000)
+    assert float(lr_frac_at(oc, jnp.asarray(0))) == 1.0
+    assert float(lr_frac_at(oc, jnp.asarray(500))) == 1.0
+    mid = float(lr_frac_at(oc, jnp.asarray(750)))
+    assert 0.4 < mid < 0.6
+    assert float(lr_frac_at(oc, jnp.asarray(1000))) == 0.0
+
+
+def test_adamw_matches_reference_step():
+    """One AdamW step against a hand-computed update."""
+    oc = OptConfig(lr=0.1, b1=0.9, b2=0.999, eps=1e-8, total_steps=10**9)
+    p = {"w": jnp.asarray([1.0, -2.0])}
+    g = {"w": jnp.asarray([0.5, 0.5])}
+    m = {"w": jnp.zeros(2)}
+    v = {"w": jnp.zeros(2)}
+    step = jnp.asarray(1, jnp.int32)
+    p2, m2, v2 = adamw_update(oc, p, g, m, v, step)
+    m_ref = 0.1 * 0.5
+    v_ref = 0.001 * 0.25
+    mhat = m_ref / (1 - 0.9)
+    vhat = v_ref / (1 - 0.999)
+    want = 1.0 - 0.1 * mhat / (np.sqrt(vhat) + 1e-8)
+    np.testing.assert_allclose(float(p2["w"][0]), want, rtol=1e-5)
+
+
+def test_adamw_weight_decay_pulls_to_zero():
+    oc = OptConfig(lr=0.1, weight_decay=0.1, total_steps=10**9)
+    p = {"w": jnp.asarray([10.0])}
+    g = {"w": jnp.asarray([0.0])}
+    z = {"w": jnp.zeros(1)}
+    p2, _, _ = adamw_update(oc, p, g, z, z, jnp.asarray(1, jnp.int32))
+    assert float(p2["w"][0]) < 10.0

@@ -1,0 +1,59 @@
+//! Shared helpers for the paper-reproduction benches (custom harness).
+
+use std::path::Path;
+
+use wtacrs::util::json::{self, Json};
+
+/// Workload scaling: WTACRS_BENCH_MODE = full | quick (default) | smoke.
+/// `full` runs the paper-sized grids; `smoke` is a single-core-friendly
+/// pass (~1 min/bench) that still exercises every code path.
+pub fn full_mode() -> bool {
+    wtacrs::util::bench::bench_mode_full()
+}
+
+pub fn smoke_mode() -> bool {
+    std::env::var("WTACRS_BENCH_MODE").map(|v| v == "smoke").unwrap_or(false)
+}
+
+/// Steps per fine-tuning run for GLUE-style benches.
+pub fn glue_steps() -> usize {
+    if full_mode() {
+        600
+    } else if smoke_mode() {
+        40
+    } else {
+        150
+    }
+}
+
+/// Task subset for quick/smoke modes.
+pub fn glue_tasks() -> Vec<&'static str> {
+    if full_mode() {
+        wtacrs::data::TASKS.iter().map(|t| t.name).collect()
+    } else if smoke_mode() {
+        vec!["rte"]
+    } else {
+        vec!["rte", "sst2", "cola"]
+    }
+}
+
+/// Write a bench's structured output under results/.
+pub fn write_json(name: &str, value: &Json) {
+    let dir = Path::new("results");
+    let _ = std::fs::create_dir_all(dir);
+    let path = dir.join(format!("{name}.json"));
+    if std::fs::write(&path, json::write(value)).is_ok() {
+        println!("\n[results -> {}]", path.display());
+    }
+}
+
+/// Banner shared by all benches.
+pub fn banner(id: &str, paper_ref: &str) {
+    println!("==============================================================");
+    println!("{id} — reproduces {paper_ref}");
+    println!(
+        "mode: {} (set WTACRS_BENCH_MODE=full for the full grid)",
+        if full_mode() { "full" } else { "quick" }
+    );
+    println!("==============================================================");
+}

@@ -1,0 +1,70 @@
+//! Fig 1: the accuracy-memory frontier.  Joins measured GLUE scores
+//! (scaled reproduction) with the memory model's peak-usage estimates at
+//! the paper's T5-Large dims — WTA-CRS points sit up-and-left of LST and
+//! close to Full/LoRA accuracy at a fraction of the memory.
+
+mod common;
+
+use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::memsim::{self, MethodMem, Scope, Workload};
+use wtacrs::runtime::Engine;
+use wtacrs::util::bench::Table;
+use wtacrs::util::json::{self, Json};
+
+fn main() {
+    common::banner("fig1_tradeoff", "Fig 1 (accuracy vs memory frontier)");
+    let engine = Engine::from_default_dir().expect("engine");
+    let tasks = common::glue_tasks();
+    let opts_for = |method: &str| ExperimentOptions {
+        train: TrainOptions {
+            lr: wtacrs::coordinator::experiment::default_lr(method),
+            seed: 0,
+            max_steps: common::glue_steps(),
+            eval_every: 0,
+            patience: 0,
+        },
+        ..Default::default()
+    };
+    // (method id, memory-model method at T5-Large dims)
+    let points: Vec<(&str, MethodMem)> = vec![
+        ("full", MethodMem::full()),
+        ("lora", MethodMem::lora()),
+        ("lst", MethodMem::lst()),
+        ("full-wtacrs30", MethodMem::wtacrs(0.3)),
+        ("full-wtacrs10", MethodMem::wtacrs(0.1)),
+        ("lora-wtacrs30", MethodMem::lora_wtacrs(0.3)),
+        ("lora-wtacrs10", MethodMem::lora_wtacrs(0.1)),
+    ];
+    let dims = memsim::Dims::paper("t5-large").unwrap();
+    let w = Workload { batch: 64, seq: 128, bytes: 4 };
+
+    let mut t = Table::new(&["method", "avg score", "peak GB (T5-Large)", "ratio"]);
+    let full_peak = memsim::peak_bytes(&dims, &MethodMem::full(), &w, Scope::Paper);
+    let mut out = vec![];
+    for (method, mm) in &points {
+        let mut scores = vec![];
+        for task in &tasks {
+            let r = run_glue(&engine, task, "tiny", method, &opts_for(method)).expect("run");
+            scores.push(r.score);
+        }
+        let avg = 100.0 * scores.iter().sum::<f64>() / scores.len() as f64;
+        let peak = memsim::peak_bytes(&dims, mm, &w, Scope::Paper);
+        t.row(&[
+            method.to_string(),
+            format!("{avg:.1}"),
+            format!("{:.1}", peak / 1e9),
+            format!("{:.1}x", full_peak / peak),
+        ]);
+        out.push(json::obj(vec![
+            ("method", json::s(method)),
+            ("avg_score", json::num(avg)),
+            ("peak_gb", json::num(peak / 1e9)),
+        ]));
+    }
+    t.print();
+    println!(
+        "\npaper shape: WTA-CRS (and +LoRA) hold Full-level accuracy at \
+         2-3x less memory; LST saves more but drops accuracy."
+    );
+    common::write_json("fig1_tradeoff", &Json::Arr(out));
+}

@@ -1,0 +1,44 @@
+//! Fig 2: GPU memory breakdown for fine-tuning T5 at B=64, S in
+//! {128, 256} — parameters vs optimizer vs activations; the activation
+//! share (73-88% in the paper) is the method's motivation.
+
+mod common;
+
+use wtacrs::memsim::tables::fig2_breakdown;
+use wtacrs::util::bench::Table;
+use wtacrs::util::json::{self, Json};
+
+fn main() {
+    common::banner("fig2_breakdown", "Fig 2 (memory usage breakdown)");
+    let mut out = vec![];
+    let mut t = Table::new(&[
+        "model", "S", "params GB", "grads GB", "opt GB", "act GB", "total", "act share",
+    ]);
+    for model in ["t5-base", "t5-large"] {
+        for seq in [128usize, 256] {
+            let bd = fig2_breakdown(model, 64, seq).unwrap();
+            t.row(&[
+                model.into(),
+                seq.to_string(),
+                format!("{:.2}", bd.params / 1e9),
+                format!("{:.2}", bd.grads / 1e9),
+                format!("{:.2}", bd.optimizer / 1e9),
+                format!("{:.2}", bd.activations / 1e9),
+                format!("{:.2}", bd.total() / 1e9),
+                format!("{:.0}%", 100.0 * bd.activation_fraction()),
+            ]);
+            out.push(json::obj(vec![
+                ("model", json::s(model)),
+                ("seq", json::num(seq as f64)),
+                ("params", json::num(bd.params)),
+                ("grads", json::num(bd.grads)),
+                ("optimizer", json::num(bd.optimizer)),
+                ("activations", json::num(bd.activations)),
+                ("activation_fraction", json::num(bd.activation_fraction())),
+            ]));
+        }
+    }
+    t.print();
+    println!("\npaper: activations take ~73-88% depending on B and S.");
+    common::write_json("fig2_breakdown", &Json::Arr(out));
+}

@@ -1,0 +1,41 @@
+//! Fig 6 (+ Fig 13): peak memory vs maximum batch size.  On T5-3B the
+//! paper reads off: LoRA ~1.9x larger batches than Full; adding WTA-CRS
+//! pushes that to ~4.8x (@0.3) and ~6.4x (@0.1).
+
+mod common;
+
+use wtacrs::memsim::tables::fig6_series;
+use wtacrs::util::bench::Table;
+use wtacrs::util::json::{self, Json};
+
+fn main() {
+    common::banner("fig6_batchsize", "Fig 6 / Fig 13 (max batch under budget)");
+    let mut out = vec![];
+    for (model, budget) in [("t5-3b", 80.0), ("t5-large", 80.0), ("t5-base", 80.0)] {
+        println!("\n{model} under {budget:.0}GB (S=128):");
+        let rows = fig6_series(model, budget, 128);
+        let full_b = rows
+            .iter()
+            .find(|r| r.0 == "Full")
+            .map(|r| r.1)
+            .unwrap_or(1)
+            .max(1);
+        let mut t = Table::new(&["method", "max batch", "peak GB", "gain vs Full"]);
+        for (name, b, peak) in &rows {
+            t.row(&[
+                name.clone(),
+                b.to_string(),
+                if peak.is_nan() { "-".into() } else { format!("{peak:.1}") },
+                format!("{:.1}x", *b as f64 / full_b as f64),
+            ]);
+            out.push(json::obj(vec![
+                ("model", json::s(model)),
+                ("method", json::s(name)),
+                ("max_batch", json::num(*b as f64)),
+            ]));
+        }
+        t.print();
+    }
+    println!("\npaper (T5-3B): LoRA ~1.9x, LoRA+WTA@0.3 ~4.8x, LoRA+WTA@0.1 ~6.4x.");
+    common::write_json("fig6_batchsize", &Json::Arr(out));
+}

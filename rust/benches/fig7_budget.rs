@@ -1,0 +1,50 @@
+//! Fig 7 (RQ2): GLUE metric vs the column-row budget k/|D| in
+//! {1.0, 0.3, 0.1} — near-lossless at 0.3, ~1pt drop at 0.1.
+
+mod common;
+
+use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::runtime::Engine;
+use wtacrs::util::bench::Table;
+use wtacrs::util::json::{self, Json};
+
+fn main() {
+    common::banner("fig7_budget", "Fig 7 (metric vs budget k/|D|)");
+    let engine = Engine::from_default_dir().expect("engine");
+    let tasks = common::glue_tasks();
+    let budgets = [("1.0 (Full)", "full"), ("0.3", "full-wtacrs30"), ("0.1", "full-wtacrs10")];
+    let opts = ExperimentOptions {
+        train: TrainOptions {
+            lr: 1e-3,
+            seed: 0,
+            max_steps: common::glue_steps(),
+            eval_every: 0,
+            patience: 0,
+        },
+        ..Default::default()
+    };
+    let mut out = vec![];
+    let mut headers = vec!["budget".to_string()];
+    headers.extend(tasks.iter().map(|t| t.to_string()));
+    headers.push("AVG".into());
+    let mut t = Table::new(&headers.iter().map(String::as_str).collect::<Vec<_>>());
+    for (label, method) in budgets {
+        let mut row = vec![label.to_string()];
+        let mut scores = vec![];
+        for task in &tasks {
+            let r = run_glue(&engine, task, "tiny", method, &opts).expect("run");
+            row.push(format!("{:.1}", 100.0 * r.score));
+            scores.push(r.score);
+            out.push(json::obj(vec![
+                ("budget", json::s(label)),
+                ("task", json::s(task)),
+                ("score", json::num(r.score)),
+            ]));
+        }
+        row.push(format!("{:.1}", 100.0 * scores.iter().sum::<f64>() / scores.len() as f64));
+        t.row(&row);
+    }
+    t.print();
+    println!("\npaper shape: ~no drop at 0.3; ~1pt drop at 0.1.");
+    common::write_json("fig7_budget", &Json::Arr(out));
+}

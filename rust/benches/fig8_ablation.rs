@@ -1,0 +1,72 @@
+//! Fig 8 (RQ3): validation metric across training for WTA-CRS vs CRS vs
+//! Deterministic top-k, all at k = 0.1|D| — both halves of the estimator
+//! matter: Det's bias accumulates, CRS's variance costs accuracy.
+
+mod common;
+
+use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::runtime::Engine;
+use wtacrs::util::bench::Table;
+use wtacrs::util::json::{self, Json};
+
+fn main() {
+    common::banner("fig8_ablation", "Fig 8 (estimator ablation @ 0.1)");
+    let engine = Engine::from_default_dir().expect("engine");
+    let tasks: Vec<&str> = if common::full_mode() {
+        vec!["sst2", "mnli", "qqp"] // the paper's Fig-8 tasks
+    } else {
+        vec!["cola"] // fastest-learning task: separates the estimators soonest
+    };
+    let steps = if common::full_mode() {
+        1200
+    } else if common::smoke_mode() {
+        160
+    } else {
+        800
+    };
+    let eval_every = steps / 8;
+    let opts = ExperimentOptions {
+        train: TrainOptions { lr: 1e-3, seed: 0, max_steps: steps, eval_every, patience: 0 },
+        ..Default::default()
+    };
+    let methods = ["full", "full-wtacrs10", "full-crs10", "full-det10"];
+    let mut out = vec![];
+    for task in &tasks {
+        println!("\n== {task} (tiny, {steps} steps, eval every {eval_every}) ==");
+        let mut rows = vec![];
+        for method in methods {
+            let r = run_glue(&engine, task, "tiny", method, &opts).expect("run");
+            out.push(json::obj(vec![
+                ("task", json::s(task)),
+                ("method", json::s(method)),
+                (
+                    "curve",
+                    json::arr(r.report.evals.iter().map(|&(s, m)| {
+                        json::arr([json::num(s as f64), json::num(m)])
+                    })),
+                ),
+                ("final", json::num(r.report.final_metric)),
+            ]));
+            rows.push((method, r));
+        }
+        let evals: Vec<usize> = rows[0].1.report.evals.iter().map(|&(s, _)| s).collect();
+        let mut headers = vec!["method".to_string()];
+        headers.extend(evals.iter().map(|s| format!("@{s}")));
+        headers.push("final".into());
+        let mut t = Table::new(&headers.iter().map(String::as_str).collect::<Vec<_>>());
+        for (m, r) in &rows {
+            let mut row = vec![m.to_string()];
+            for &(_, v) in &r.report.evals {
+                row.push(format!("{v:.3}"));
+            }
+            row.push(format!("{:.3}", r.report.final_metric));
+            t.row(&row);
+        }
+        t.print();
+    }
+    println!(
+        "\npaper shape: WTA-CRS > CRS (variance) and Det falls behind / \
+         diverges as its bias accumulates with epochs."
+    );
+    common::write_json("fig8_ablation", &Json::Arr(out));
+}

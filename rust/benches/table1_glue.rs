@@ -1,0 +1,73 @@
+//! Table 1: GLUE results across methods and model scales.
+//!
+//! Scaled reproduction: the synthetic GLUE suite (DESIGN.md §4) on the
+//! tiny (+small in full mode) models, methods Full / LoRA / LST /
+//! WTA-CRS@0.3 / LoRA+WTA-CRS@0.3.  The claim under test is the *shape*:
+//! WTA-CRS@0.3 tracks Full/LoRA within noise while LST trails.
+
+mod common;
+
+use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::runtime::Engine;
+use wtacrs::util::bench::Table;
+use wtacrs::util::json::{self, Json};
+
+fn main() {
+    common::banner("table1_glue", "Table 1 (GLUE accuracy by method)");
+    let engine = Engine::from_default_dir().expect("engine (run `make artifacts`)");
+    let tasks = common::glue_tasks();
+    let methods = ["full", "lora", "lst", "full-wtacrs30", "lora-wtacrs30"];
+    let sizes: &[&str] = if common::full_mode() { &["tiny", "small"] } else { &["tiny"] };
+    // Per-family LR, mirroring the paper's Appendix F protocol.
+    let opts_for = |method: &str| ExperimentOptions {
+        train: TrainOptions {
+            lr: wtacrs::coordinator::experiment::default_lr(method),
+            seed: 0,
+            max_steps: common::glue_steps(),
+            eval_every: 0,
+            patience: 0,
+        },
+        ..Default::default()
+    };
+
+    let mut out = vec![];
+    for size in sizes {
+        println!("\n== model size: {size} ==");
+        let mut headers = vec!["method".to_string()];
+        headers.extend(tasks.iter().map(|t| t.to_string()));
+        headers.push("AVG".to_string());
+        let mut t = Table::new(&headers.iter().map(String::as_str).collect::<Vec<_>>());
+        for method in methods {
+            let mut row = vec![method.to_string()];
+            let mut scores = vec![];
+            for task in &tasks {
+                match run_glue(&engine, task, size, method, &opts_for(method)) {
+                    Ok(r) => {
+                        row.push(format!("{:.1}", 100.0 * r.score));
+                        scores.push(r.score);
+                        out.push(json::obj(vec![
+                            ("size", json::s(size)),
+                            ("method", json::s(method)),
+                            ("task", json::s(task)),
+                            ("metric", json::s(r.metric_name)),
+                            ("score", json::num(r.score)),
+                        ]));
+                    }
+                    Err(e) => {
+                        eprintln!("{task}/{size}/{method} failed: {e:#}");
+                        row.push("ERR".into());
+                    }
+                }
+            }
+            let avg = 100.0 * scores.iter().sum::<f64>() / scores.len().max(1) as f64;
+            row.push(format!("{avg:.1}"));
+            t.row(&row);
+        }
+        t.print();
+    }
+    println!(
+        "\npaper shape: WTA-CRS@0.3 within ~0.3pt of Full; LoRA+WTA-CRS@0.3 \
+         within ~0.3pt of LoRA; LST trails by 1-2pt."
+    );
+    common::write_json("table1_glue", &Json::Arr(out));
+}

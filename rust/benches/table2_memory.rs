@@ -1,0 +1,47 @@
+//! Table 2: peak memory (GB) + compression rate of fine-tuning T5-Base
+//! and T5-Large at B=64/S=128 across methods, from the analytic memory
+//! model at the paper's true model dimensions.
+
+mod common;
+
+use wtacrs::memsim::{tables, Dims, Scope, Workload};
+use wtacrs::util::bench::Table;
+use wtacrs::util::json::{self, Json};
+
+fn main() {
+    common::banner("table2_memory", "Table 2 (peak memory & compression)");
+    let w = Workload { batch: 64, seq: 128, bytes: 4 };
+    let mut out = vec![];
+    for model in ["t5-base", "t5-large"] {
+        let dims = Dims::paper(model).unwrap();
+        println!("\n{model} (B=64, S=128, fp32):");
+        let mut t = Table::new(&["method", "peak GB", "ratio", "paper ratio"]);
+        // Paper's reported compression rates for orientation.
+        let paper: &[(&str, &str)] = &[
+            ("Full", "1.0x"),
+            ("LoRA", "1.3x"),
+            ("LST", "~3x"),
+            ("WTA-CRS@0.3", "2.1x"),
+            ("WTA-CRS@0.1", "2.4x"),
+            ("LoRA+WTA-CRS@0.3", "2.7x"),
+            ("LoRA+WTA-CRS@0.1", "3.2x"),
+        ];
+        for m in tables::table2_methods() {
+            let (name, gb, ratio) = tables::table2_row(&dims, &m, &w, Scope::Paper);
+            let pref = paper
+                .iter()
+                .find(|(n, _)| *n == name)
+                .map(|(_, r)| *r)
+                .unwrap_or("-");
+            t.row(&[name.clone(), format!("{gb:.2}"), format!("{ratio:.2}x"), pref.into()]);
+            out.push(json::obj(vec![
+                ("model", json::s(model)),
+                ("method", json::s(&name)),
+                ("peak_gb", json::num(gb)),
+                ("ratio", json::num(ratio)),
+            ]));
+        }
+        t.print();
+    }
+    common::write_json("table2_memory", &Json::Arr(out));
+}

@@ -1,0 +1,145 @@
+//! Checkpointing: serialize the trainer's positional state to a compact
+//! binary file (magic + tensor table) and restore it bit-exactly.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::{DType, HostTensor, TensorData};
+
+const MAGIC: &[u8; 8] = b"WTACRS01";
+
+/// Write tensors to `path` (atomic: tmp + rename).
+pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor]) -> Result<()> {
+    let path = path.as_ref();
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(tensors.len() as u64).to_le_bytes())?;
+        for t in tensors {
+            f.write_all(&[match t.dtype() {
+                DType::F32 => 0u8,
+                DType::I32 => 1u8,
+            }])?;
+            f.write_all(&(t.shape.len() as u8).to_le_bytes())?;
+            for &d in &t.shape {
+                f.write_all(&(d as u64).to_le_bytes())?;
+            }
+            match &t.data {
+                TensorData::F32(v) => {
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+                TensorData::I32(v) => {
+                    for x in v {
+                        f.write_all(&x.to_le_bytes())?;
+                    }
+                }
+            }
+        }
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename to {path:?}"))?;
+    Ok(())
+}
+
+/// Read tensors back.
+pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
+    let mut f = std::io::BufReader::new(
+        std::fs::File::open(path.as_ref())
+            .with_context(|| format!("open {:?}", path.as_ref()))?,
+    );
+    let mut magic = [0u8; 8];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a wtacrs checkpoint (bad magic)");
+    }
+    let mut n8 = [0u8; 8];
+    f.read_exact(&mut n8)?;
+    let n = u64::from_le_bytes(n8) as usize;
+    if n > 1_000_000 {
+        bail!("implausible tensor count {n}");
+    }
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut b1 = [0u8; 1];
+        f.read_exact(&mut b1)?;
+        let dtype = match b1[0] {
+            0 => DType::F32,
+            1 => DType::I32,
+            other => bail!("bad dtype tag {other}"),
+        };
+        f.read_exact(&mut b1)?;
+        let ndim = b1[0] as usize;
+        let mut shape = Vec::with_capacity(ndim);
+        for _ in 0..ndim {
+            f.read_exact(&mut n8)?;
+            shape.push(u64::from_le_bytes(n8) as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut bytes = vec![0u8; numel * 4];
+        f.read_exact(&mut bytes)?;
+        let t = match dtype {
+            DType::F32 => HostTensor::f32(
+                shape,
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::I32 => HostTensor::i32(
+                shape,
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+        };
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("wtacrs-ckpt-{}-{name}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_mixed_tensors() {
+        let tensors = vec![
+            HostTensor::f32(vec![2, 3], vec![1.5, -2.0, 0.0, 3.25, f32::MIN, f32::MAX]),
+            HostTensor::i32(vec![4], vec![-1, 0, 7, i32::MAX]),
+            HostTensor::scalar_f32(0.125),
+            HostTensor::scalar_i32(42),
+        ];
+        let p = tmpfile("rt");
+        save(&p, &tensors).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(tensors, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let p = tmpfile("bad");
+        std::fs::write(&p, b"not a checkpoint at all").unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn empty_list_roundtrips() {
+        let p = tmpfile("empty");
+        save(&p, &[]).unwrap();
+        assert!(load(&p).unwrap().is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+}

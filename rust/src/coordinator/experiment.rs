@@ -1,0 +1,205 @@
+//! Experiment runner: the GLUE protocol of §5.1 as a library.
+//!
+//! Maps (task, model size, method) onto artifact ids, generates the
+//! synthetic splits, runs the trainer, and returns structured results
+//! that the benches print as paper-style rows and serialize as JSON.
+
+use anyhow::{bail, Result};
+
+use crate::data::glue::{self, TaskSpec};
+use crate::runtime::Engine;
+use crate::util::json::{self, Json};
+
+use super::trainer::{TrainOptions, TrainReport, Trainer};
+
+/// The method axis of Table 1 / Figs 7-8 (mirrors compile/config.py).
+pub const METHODS: &[&str] = &[
+    "full",
+    "lora",
+    "lst",
+    "full-wtacrs30",
+    "full-wtacrs10",
+    "lora-wtacrs30",
+    "lora-wtacrs10",
+    "full-crs10",
+    "full-det10",
+];
+
+/// Tuning family prefix ("full-wtacrs30" -> "full") — init/eval graphs
+/// depend only on the family.
+pub fn family(method: &str) -> &str {
+    method.split('-').next().unwrap_or(method)
+}
+
+/// Per-family default learning rate, mirroring the paper's Appendix F
+/// (LoRA/LST train far fewer parameters and want ~10x larger LRs than
+/// full fine-tuning; scaled to this repo's model sizes).
+pub fn default_lr(method: &str) -> f32 {
+    match family(method) {
+        "lora" => 3e-3,
+        "lst" => 3e-3,
+        _ => 1e-3,
+    }
+}
+
+/// Artifact ids for a (size, method, n_out) GLUE config.
+pub fn artifact_ids(size: &str, method: &str, n_out: usize) -> (String, String, String) {
+    (
+        format!("train_{size}_{method}_c{n_out}"),
+        format!("eval_{size}_{}_c{n_out}", family(method)),
+        format!("init_{size}_{}_c{n_out}", family(method)),
+    )
+}
+
+/// One (task, method) outcome.
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: String,
+    pub method: String,
+    pub size: String,
+    pub metric_name: &'static str,
+    pub score: f64,
+    pub report: TrainReport,
+}
+
+impl TaskResult {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("task", json::s(&self.task)),
+            ("method", json::s(&self.method)),
+            ("size", json::s(&self.size)),
+            ("metric", json::s(self.metric_name)),
+            ("score", json::num(self.score)),
+            ("steps", json::num(self.report.steps as f64)),
+            ("train_seconds", json::num(self.report.train_seconds)),
+            ("throughput", json::num(self.report.throughput)),
+            (
+                "losses",
+                json::arr(self.report.losses.iter().map(|&l| json::num(l as f64))),
+            ),
+            (
+                "evals",
+                json::arr(self.report.evals.iter().map(|&(s, m)| {
+                    json::arr([json::num(s as f64), json::num(m)])
+                })),
+            ),
+        ])
+    }
+}
+
+/// Per-run knobs (scaled-down defaults; benches override).
+#[derive(Debug, Clone)]
+pub struct ExperimentOptions {
+    pub train: TrainOptions,
+    /// Override the generated split sizes (0 = task defaults).
+    pub train_size: usize,
+    pub val_size: usize,
+    pub data_seed: u64,
+}
+
+impl Default for ExperimentOptions {
+    fn default() -> Self {
+        ExperimentOptions {
+            train: TrainOptions::default(),
+            train_size: 0,
+            val_size: 0,
+            data_seed: 17,
+        }
+    }
+}
+
+/// Run one (task, size, method) fine-tuning experiment.
+pub fn run_glue(
+    engine: &Engine,
+    task_name: &str,
+    size: &str,
+    method: &str,
+    opts: &ExperimentOptions,
+) -> Result<TaskResult> {
+    let Some(mut spec) = glue::task(task_name) else {
+        bail!("unknown GLUE task {task_name:?}");
+    };
+    if opts.train_size > 0 {
+        spec = TaskSpec { train_size: opts.train_size, ..spec };
+    }
+    if opts.val_size > 0 {
+        spec = TaskSpec { val_size: opts.val_size, ..spec };
+    }
+    let (train_id, eval_id, init_id) = artifact_ids(size, method, spec.n_out);
+    let model = engine
+        .manifest
+        .models
+        .get(size)
+        .ok_or_else(|| anyhow::anyhow!("manifest has no model {size:?}"))?;
+    let (train_ds, val_ds) =
+        glue::train_val(&spec, model.vocab, model.seq_len, opts.data_seed);
+
+    let mut trainer = Trainer::new(
+        engine,
+        &train_id,
+        &eval_id,
+        &init_id,
+        train_ds.len(),
+        opts.train.clone(),
+    )?;
+    let report = trainer.run(&train_ds, &val_ds, spec.metric)?;
+    log::info!(
+        "{task_name}/{size}/{method}: {}={:.4} ({} steps, {:.1}s)",
+        spec.metric.name(),
+        report.best_metric,
+        report.steps,
+        report.train_seconds
+    );
+    Ok(TaskResult {
+        task: task_name.to_string(),
+        method: method.to_string(),
+        size: size.to_string(),
+        metric_name: spec.metric.name(),
+        score: report.best_metric,
+        report,
+    })
+}
+
+/// Append results to a JSON-lines file under `results/`.
+pub fn write_results(path: &str, results: &[TaskResult]) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    let mut body = String::new();
+    for r in results {
+        body.push_str(&json::write(&r.to_json()));
+        body.push('\n');
+    }
+    use std::io::Write;
+    let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+    f.write_all(body.as_bytes())?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn family_extraction() {
+        assert_eq!(family("full"), "full");
+        assert_eq!(family("lora-wtacrs30"), "lora");
+        assert_eq!(family("full-det10"), "full");
+        assert_eq!(family("lst"), "lst");
+    }
+
+    #[test]
+    fn artifact_id_layout() {
+        let (t, e, i) = artifact_ids("tiny", "lora-wtacrs30", 3);
+        assert_eq!(t, "train_tiny_lora-wtacrs30_c3");
+        assert_eq!(e, "eval_tiny_lora_c3");
+        assert_eq!(i, "init_tiny_lora_c3");
+    }
+
+    #[test]
+    fn methods_cover_paper_table1() {
+        for m in ["full", "lora", "lst", "full-wtacrs30", "lora-wtacrs30"] {
+            assert!(METHODS.contains(&m));
+        }
+    }
+}

@@ -1,0 +1,12 @@
+//! L3 coordinator: the fine-tuning framework around the WTA-CRS train
+//! step — trainer loop, Algorithm-1 gradient-norm cache, checkpointing,
+//! and the GLUE experiment runner.
+pub mod checkpoint;
+pub mod experiment;
+pub mod normcache;
+pub mod sweep;
+pub mod trainer;
+
+pub use experiment::{run_glue, ExperimentOptions, TaskResult};
+pub use normcache::NormCache;
+pub use trainer::{TrainOptions, TrainReport, Trainer};

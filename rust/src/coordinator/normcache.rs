@@ -1,0 +1,138 @@
+//! Algorithm 1's gradient-norm cache, owned by the coordinator.
+//!
+//! The paper keeps `Cache ∈ R^N` (one slot per dataset sample, per
+//! approximated linear layer) in CPU memory: the forward pass needs
+//! `||dZ||` to build the column-row distribution, but dZ only exists in
+//! the backward pass — so each step *gathers* the previous-step norms
+//! for the batch and *scatters* the refreshed norms returned by the
+//! train-step graph.  Cold entries start at 1.0 (uniform proxy).
+
+/// Per-layer, per-sample gradient-norm store.
+#[derive(Debug, Clone)]
+pub struct NormCache {
+    n_layers: usize,
+    n_samples: usize,
+    /// Row-major (n_layers, n_samples).
+    data: Vec<f32>,
+    /// How many scatters each sample has received (diagnostics).
+    updates: Vec<u32>,
+}
+
+impl NormCache {
+    pub fn new(n_layers: usize, n_samples: usize) -> Self {
+        NormCache {
+            n_layers: n_layers.max(1),
+            n_samples,
+            data: vec![1.0; n_layers.max(1) * n_samples],
+            updates: vec![0; n_samples],
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+    pub fn n_samples(&self) -> usize {
+        self.n_samples
+    }
+
+    /// Gather the (n_layers, batch) block for a batch of sample indices,
+    /// flattened row-major — exactly the train-step `znorms` input.
+    pub fn gather(&self, indices: &[usize]) -> Vec<f32> {
+        let b = indices.len();
+        let mut out = Vec::with_capacity(self.n_layers * b);
+        for l in 0..self.n_layers {
+            let row = &self.data[l * self.n_samples..(l + 1) * self.n_samples];
+            for &i in indices {
+                out.push(row[i]);
+            }
+        }
+        out
+    }
+
+    /// Scatter refreshed norms (same layout as `gather`) back.
+    ///
+    /// Duplicate indices in a batch (tail wrapping) are allowed: the last
+    /// write wins, matching Algorithm 1's `Cache[j] = ||dZ_j||`.
+    pub fn scatter(&mut self, indices: &[usize], norms: &[f32]) {
+        let b = indices.len();
+        assert_eq!(
+            norms.len(),
+            self.n_layers * b,
+            "scatter shape mismatch: {} != {} * {}",
+            norms.len(),
+            self.n_layers,
+            b
+        );
+        for l in 0..self.n_layers {
+            for (j, &i) in indices.iter().enumerate() {
+                let v = norms[l * b + j];
+                if v.is_finite() && v >= 0.0 {
+                    self.data[l * self.n_samples + i] = v.max(1e-8);
+                }
+            }
+        }
+        for &i in indices {
+            self.updates[i] = self.updates[i].saturating_add(1);
+        }
+    }
+
+    /// Fraction of samples that have been refreshed at least once.
+    pub fn coverage(&self) -> f64 {
+        if self.n_samples == 0 {
+            return 0.0;
+        }
+        self.updates.iter().filter(|&&u| u > 0).count() as f64 / self.n_samples as f64
+    }
+
+    /// Per-layer norm distribution snapshot (Fig 3/12 analyses).
+    pub fn layer_norms(&self, layer: usize) -> &[f32] {
+        &self.data[layer * self.n_samples..(layer + 1) * self.n_samples]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cold_start_is_uniform_ones() {
+        let c = NormCache::new(3, 10);
+        assert_eq!(c.gather(&[0, 5]), vec![1.0; 6]);
+        assert_eq!(c.coverage(), 0.0);
+    }
+
+    #[test]
+    fn gather_scatter_roundtrip() {
+        let mut c = NormCache::new(2, 8);
+        let idx = [1usize, 4, 7];
+        // layer 0 gets 10/11/12, layer 1 gets 20/21/22
+        c.scatter(&idx, &[10.0, 11.0, 12.0, 20.0, 21.0, 22.0]);
+        assert_eq!(c.gather(&idx), vec![10.0, 11.0, 12.0, 20.0, 21.0, 22.0]);
+        // untouched samples keep the cold value
+        assert_eq!(c.gather(&[0]), vec![1.0, 1.0]);
+        assert!((c.coverage() - 3.0 / 8.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn duplicate_indices_last_write_wins() {
+        let mut c = NormCache::new(1, 4);
+        c.scatter(&[2, 2], &[5.0, 9.0]);
+        assert_eq!(c.gather(&[2]), vec![9.0]);
+    }
+
+    #[test]
+    fn rejects_nan_and_clamps_zero() {
+        let mut c = NormCache::new(1, 2);
+        c.scatter(&[0, 1], &[f32::NAN, 0.0]);
+        let g = c.gather(&[0, 1]);
+        assert_eq!(g[0], 1.0); // NaN rejected, cold value kept
+        assert!(g[1] > 0.0); // zero clamped to epsilon
+    }
+
+    #[test]
+    #[should_panic(expected = "scatter shape mismatch")]
+    fn scatter_shape_checked() {
+        let mut c = NormCache::new(2, 4);
+        c.scatter(&[0], &[1.0]);
+    }
+}

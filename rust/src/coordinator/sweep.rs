@@ -1,0 +1,103 @@
+//! Multi-seed / multi-config sweep runner.
+//!
+//! The paper reports every Table-1 cell as mean ± std over three random
+//! trials (§5.1); this module fans seeds out over the worker pool and
+//! aggregates.  Each worker owns its own `Engine` (PJRT clients are not
+//! shared across threads here), so the sweep also exercises the
+//! multi-process-style isolation a bigger deployment would use.
+
+use anyhow::Result;
+
+use crate::runtime::Engine;
+use crate::util::pool::ThreadPool;
+use crate::util::stats::Summary;
+
+use super::experiment::{run_glue, ExperimentOptions};
+
+/// One aggregated cell: mean ± std over seeds.
+#[derive(Debug, Clone)]
+pub struct SweepCell {
+    pub task: String,
+    pub method: String,
+    pub size: String,
+    pub mean: f64,
+    pub std: f64,
+    pub n: usize,
+}
+
+impl SweepCell {
+    pub fn display(&self) -> String {
+        format!("{:.1}±{:.2}", 100.0 * self.mean, 100.0 * self.std)
+    }
+}
+
+/// Run (task, size, method) across seeds; sequential fallback when the
+/// pool is size 1. `artifacts_dir` lets workers build their own engines.
+pub fn sweep_seeds(
+    artifacts_dir: &str,
+    task: &str,
+    size: &str,
+    method: &str,
+    base: &ExperimentOptions,
+    seeds: &[u64],
+    pool: Option<&ThreadPool>,
+) -> Result<SweepCell> {
+    let jobs: Vec<(String, String, String, ExperimentOptions, u64)> = seeds
+        .iter()
+        .map(|&s| {
+            let mut o = base.clone();
+            o.train.seed = s;
+            o.data_seed = base.data_seed; // same data, different init/sampling
+            (task.to_string(), size.to_string(), method.to_string(), o, s)
+        })
+        .collect();
+
+    let dir = artifacts_dir.to_string();
+    let run_one = move |(task, size, method, opts, _seed): (
+        String,
+        String,
+        String,
+        ExperimentOptions,
+        u64,
+    )|
+          -> Result<f64> {
+        let engine = Engine::new(&dir)?;
+        Ok(run_glue(&engine, &task, &size, &method, &opts)?.score)
+    };
+
+    let scores: Vec<Result<f64>> = match pool {
+        Some(p) => p.map(jobs, run_one),
+        None => jobs.into_iter().map(run_one).collect(),
+    };
+
+    let mut summary = Summary::new();
+    for s in scores {
+        summary.push(s?);
+    }
+    Ok(SweepCell {
+        task: task.to_string(),
+        method: method.to_string(),
+        size: size.to_string(),
+        mean: summary.mean(),
+        std: summary.std(),
+        n: summary.count() as usize,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cell_display_format() {
+        let c = SweepCell {
+            task: "rte".into(),
+            method: "full".into(),
+            size: "tiny".into(),
+            mean: 0.7031,
+            std: 0.0123,
+            n: 3,
+        };
+        assert_eq!(c.display(), "70.3±1.23");
+    }
+}

@@ -1,0 +1,174 @@
+//! Batch assembly: epoch shuffling, fixed-size batches, and the sample
+//! indices the gradient-norm cache needs (Algorithm 1 keys its Cache by
+//! dataset sample index, so every batch must carry its provenance).
+
+use crate::util::rng::Rng;
+
+use super::glue::{Dataset, Label};
+
+/// One assembled training/eval batch.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// Row-major (batch, seq) token ids.
+    pub tokens: Vec<i32>,
+    /// Class labels (classification) — empty for regression.
+    pub labels_i32: Vec<i32>,
+    /// Scores (regression) — empty for classification.
+    pub labels_f32: Vec<f32>,
+    /// Dataset indices of the rows (gradient-norm cache keys).
+    pub indices: Vec<usize>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+/// Epoch iterator: shuffles once per epoch, pads the tail batch by
+/// wrapping (the paper's HF pipeline drops/pads similarly; wrapping keeps
+/// shapes static for the AOT graphs).
+pub struct Batcher<'a> {
+    ds: &'a Dataset,
+    batch: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    rng: Rng,
+    pub epoch: usize,
+}
+
+impl<'a> Batcher<'a> {
+    pub fn new(ds: &'a Dataset, batch: usize, seed: u64) -> Self {
+        assert!(ds.len() > 0, "empty dataset");
+        let mut rng = Rng::new(seed);
+        let mut order: Vec<usize> = (0..ds.len()).collect();
+        rng.shuffle(&mut order);
+        Batcher { ds, batch, order, cursor: 0, rng, epoch: 0 }
+    }
+
+    /// Batches per epoch (tail wraps).
+    pub fn batches_per_epoch(&self) -> usize {
+        self.ds.len().div_ceil(self.batch)
+    }
+
+    /// Next training batch; reshuffles on epoch boundary.
+    pub fn next_batch(&mut self) -> Batch {
+        let n = self.ds.len();
+        let mut idxs = Vec::with_capacity(self.batch);
+        for k in 0..self.batch {
+            if self.cursor + k < n {
+                idxs.push(self.order[self.cursor + k]);
+            } else {
+                // wrap within the current epoch's order
+                idxs.push(self.order[(self.cursor + k) % n]);
+            }
+        }
+        self.cursor += self.batch;
+        if self.cursor >= n {
+            self.cursor = 0;
+            self.epoch += 1;
+            self.rng = self.rng.fold_in(self.epoch as u64);
+            self.rng.shuffle(&mut self.order);
+        }
+        self.assemble(&idxs)
+    }
+
+    /// Deterministic sequential batches over the dataset (evaluation);
+    /// the tail is padded by repeating the last row, with `valid` telling
+    /// the caller how many rows are real.
+    pub fn eval_batches(ds: &Dataset, batch: usize) -> Vec<(Batch, usize)> {
+        let mut out = vec![];
+        let mut i = 0;
+        while i < ds.len() {
+            let valid = (ds.len() - i).min(batch);
+            let mut idxs: Vec<usize> = (i..i + valid).collect();
+            while idxs.len() < batch {
+                idxs.push(ds.len() - 1);
+            }
+            out.push((Self::assemble_static(ds, &idxs), valid));
+            i += batch;
+        }
+        out
+    }
+
+    fn assemble(&self, idxs: &[usize]) -> Batch {
+        Self::assemble_static(self.ds, idxs)
+    }
+
+    fn assemble_static(ds: &Dataset, idxs: &[usize]) -> Batch {
+        let b = idxs.len();
+        let s = ds.seq_len;
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut labels_i32 = Vec::new();
+        let mut labels_f32 = Vec::new();
+        for &i in idxs {
+            let ex = &ds.examples[i];
+            debug_assert_eq!(ex.tokens.len(), s);
+            tokens.extend_from_slice(&ex.tokens);
+            match ex.label {
+                Label::Class(c) => labels_i32.push(c as i32),
+                Label::Score(v) => labels_f32.push(v),
+            }
+        }
+        Batch { tokens, labels_i32, labels_f32, indices: idxs.to_vec(), batch: b, seq: s }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::glue::{generate, task};
+
+    fn ds() -> Dataset {
+        generate(&task("rte").unwrap(), 1024, 64, 100, 1)
+    }
+
+    #[test]
+    fn batches_have_static_shape() {
+        let ds = ds();
+        let mut b = Batcher::new(&ds, 32, 0);
+        for _ in 0..7 {
+            let batch = b.next_batch();
+            assert_eq!(batch.tokens.len(), 32 * 64);
+            assert_eq!(batch.labels_i32.len(), 32);
+            assert_eq!(batch.indices.len(), 32);
+        }
+    }
+
+    #[test]
+    fn epoch_covers_every_sample() {
+        let ds = ds();
+        let mut b = Batcher::new(&ds, 25, 3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..b.batches_per_epoch() {
+            seen.extend(b.next_batch().indices);
+        }
+        assert_eq!(seen.len(), 100);
+        assert_eq!(b.epoch, 1);
+    }
+
+    #[test]
+    fn reshuffles_between_epochs() {
+        let ds = ds();
+        let mut b = Batcher::new(&ds, 100, 5);
+        let e0 = b.next_batch().indices;
+        let e1 = b.next_batch().indices;
+        assert_ne!(e0, e1);
+    }
+
+    #[test]
+    fn eval_batches_cover_exactly() {
+        let ds = ds();
+        let bs = Batcher::eval_batches(&ds, 32);
+        assert_eq!(bs.len(), 4);
+        let total: usize = bs.iter().map(|(_, v)| v).sum();
+        assert_eq!(total, 100);
+        assert_eq!(bs[3].1, 4); // 100 = 3*32 + 4
+        assert_eq!(bs[3].0.indices.len(), 32); // padded to full batch
+    }
+
+    #[test]
+    fn regression_labels_in_f32_slot() {
+        let ds = generate(&task("stsb").unwrap(), 1024, 64, 40, 2);
+        let mut b = Batcher::new(&ds, 8, 0);
+        let batch = b.next_batch();
+        assert_eq!(batch.labels_f32.len(), 8);
+        assert!(batch.labels_i32.is_empty());
+    }
+}

@@ -1,0 +1,465 @@
+//! Synthetic GLUE suite (DESIGN.md §4).
+//!
+//! Eight tasks mirroring the GLUE cards the paper evaluates on — same
+//! names, same metric types, matched relative difficulty — each with a
+//! *planted* generative process over a synthetic lexicon.  The suite's
+//! job is to expose the estimator differences (bias of Deterministic,
+//! variance of CRS) the paper's Table 1 / Figs 7-8 measure; per-task
+//! label noise sets sub-100% ceilings so method gaps are visible.
+
+use crate::metrics::MetricKind;
+use crate::util::rng::Rng;
+
+use super::tokenizer::Tokenizer;
+
+/// Gold label: class index or regression score.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Label {
+    Class(usize),
+    Score(f32),
+}
+
+impl Label {
+    pub fn class(&self) -> usize {
+        match self {
+            Label::Class(c) => *c,
+            Label::Score(_) => panic!("regression label"),
+        }
+    }
+    pub fn score(&self) -> f32 {
+        match self {
+            Label::Score(s) => *s,
+            Label::Class(c) => *c as f32,
+        }
+    }
+}
+
+/// One encoded example.
+#[derive(Debug, Clone)]
+pub struct Example {
+    pub tokens: Vec<i32>,
+    pub label: Label,
+}
+
+/// A generated split.
+#[derive(Debug)]
+pub struct Dataset {
+    pub examples: Vec<Example>,
+    pub n_out: usize,
+    pub seq_len: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.examples.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.examples.is_empty()
+    }
+}
+
+/// Task card: everything the trainer/benches need to know.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskSpec {
+    pub name: &'static str,
+    pub n_out: usize, // 1 = regression
+    pub metric: MetricKind,
+    pub train_size: usize,
+    pub val_size: usize,
+    pub label_noise: f64,
+}
+
+pub const TASKS: [TaskSpec; 8] = [
+    TaskSpec { name: "cola", n_out: 2, metric: MetricKind::Matthews, train_size: 2048, val_size: 256, label_noise: 0.08 },
+    TaskSpec { name: "sst2", n_out: 2, metric: MetricKind::Accuracy, train_size: 4096, val_size: 512, label_noise: 0.05 },
+    TaskSpec { name: "mrpc", n_out: 2, metric: MetricKind::F1, train_size: 2048, val_size: 256, label_noise: 0.08 },
+    TaskSpec { name: "qqp", n_out: 2, metric: MetricKind::F1, train_size: 6144, val_size: 768, label_noise: 0.06 },
+    TaskSpec { name: "mnli", n_out: 3, metric: MetricKind::Accuracy, train_size: 6144, val_size: 768, label_noise: 0.08 },
+    TaskSpec { name: "qnli", n_out: 2, metric: MetricKind::Accuracy, train_size: 4096, val_size: 512, label_noise: 0.06 },
+    TaskSpec { name: "rte", n_out: 2, metric: MetricKind::Accuracy, train_size: 1024, val_size: 256, label_noise: 0.12 },
+    TaskSpec { name: "stsb", n_out: 1, metric: MetricKind::PearsonSpearman, train_size: 2048, val_size: 256, label_noise: 0.0 },
+];
+
+pub fn task(name: &str) -> Option<TaskSpec> {
+    TASKS.iter().copied().find(|t| t.name == name)
+}
+
+// ---------------------------------------------------------------------------
+// Lexicon
+// ---------------------------------------------------------------------------
+
+/// The synthetic lexicon all tasks draw from.  Word strings are formed
+/// from a role prefix + index, so the hash tokenizer maps each role to a
+/// (mostly) disjoint id set, the way real lexical classes behave.
+struct Lexicon {
+    tok: Tokenizer,
+}
+
+impl Lexicon {
+    fn new(vocab: usize) -> Self {
+        Lexicon { tok: Tokenizer::new(vocab) }
+    }
+    fn word(&self, role: &str, i: usize) -> i32 {
+        self.tok.word_id(&format!("{role}{i}"))
+    }
+    fn pos(&self, rng: &mut Rng) -> i32 {
+        self.word("pos", rng.usize_below(40))
+    }
+    fn neg(&self, rng: &mut Rng) -> i32 {
+        self.word("neg", rng.usize_below(40))
+    }
+    fn neutral(&self, rng: &mut Rng) -> i32 {
+        self.word("neu", rng.usize_below(300))
+    }
+    fn negation(&self) -> i32 {
+        self.word("not", 0)
+    }
+    fn noun(&self, i: usize) -> i32 {
+        self.word("n", i % 80)
+    }
+    fn verb(&self, i: usize) -> i32 {
+        self.word("v", i % 60)
+    }
+    fn det(&self, i: usize) -> i32 {
+        self.word("d", i % 6)
+    }
+    /// Synonym: a parallel role with the same index (mrpc/qqp paraphrases).
+    fn synonym(&self, base_role: &str, i: usize) -> i32 {
+        self.word(&format!("{base_role}_syn"), i)
+    }
+    /// Antonym pairing for mnli contradictions.
+    fn fact(&self, i: usize) -> i32 {
+        self.word("f", i)
+    }
+    fn anti_fact(&self, i: usize) -> i32 {
+        self.word("g", i)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Generators (one per task)
+// ---------------------------------------------------------------------------
+
+fn maybe_flip(label: usize, n_out: usize, noise: f64, rng: &mut Rng) -> usize {
+    if noise > 0.0 && rng.bool(noise) {
+        (label + 1 + rng.usize_below(n_out - 1)) % n_out
+    } else {
+        label
+    }
+}
+
+fn gen_sst2(lex: &Lexicon, rng: &mut Rng) -> (Vec<i32>, Vec<i32>, usize) {
+    // Sentiment majority with negation flips.
+    let len = 6 + rng.usize_below(10);
+    let mut words = Vec::with_capacity(len);
+    let mut score = 0i32;
+    let mut i = 0;
+    while i < len {
+        let r = rng.f64();
+        if r < 0.18 {
+            // negation + opinion word: flipped polarity
+            words.push(lex.negation());
+            let positive = rng.bool(0.5);
+            words.push(if positive { lex.pos(rng) } else { lex.neg(rng) });
+            score += if positive { -1 } else { 1 };
+            i += 2;
+        } else if r < 0.5 {
+            let positive = rng.bool(0.5);
+            words.push(if positive { lex.pos(rng) } else { lex.neg(rng) });
+            score += if positive { 1 } else { -1 };
+            i += 1;
+        } else {
+            words.push(lex.neutral(rng));
+            i += 1;
+        }
+    }
+    if score == 0 {
+        // force a signal
+        words.push(lex.pos(rng));
+        score = 1;
+    }
+    (words, vec![], (score > 0) as usize)
+}
+
+fn gen_cola(lex: &Lexicon, rng: &mut Rng) -> (Vec<i32>, Vec<i32>, usize) {
+    // Grammar automaton: D N V (D N)? — acceptable; any order violation
+    // (swap / drop / duplicate-verb) -> unacceptable.
+    let n1 = rng.usize_below(80);
+    let v = rng.usize_below(60);
+    let n2 = rng.usize_below(80);
+    let mut s = vec![
+        lex.det(rng.usize_below(6)),
+        lex.noun(n1),
+        lex.verb(v),
+        lex.det(rng.usize_below(6)),
+        lex.noun(n2),
+    ];
+    let grammatical = rng.bool(0.5);
+    if !grammatical {
+        match rng.usize_below(3) {
+            0 => s.swap(1, 2),                 // N/V inversion
+            1 => { s.remove(2); }               // missing verb
+            _ => s.insert(3, lex.verb(rng.usize_below(60))), // double verb
+        }
+    }
+    (s, vec![], grammatical as usize)
+}
+
+fn content_sentence(rng: &mut Rng, n: usize) -> Vec<usize> {
+    (0..n).map(|_| rng.usize_below(500)).collect()
+}
+
+fn gen_mrpc_like(lex: &Lexicon, rng: &mut Rng, syn_rate: f64) -> (Vec<i32>, Vec<i32>, usize) {
+    let n = 6 + rng.usize_below(6);
+    let idxs = content_sentence(rng, n);
+    let a: Vec<i32> = idxs.iter().map(|&i| lex.word("c", i)).collect();
+    let paraphrase = rng.bool(0.5);
+    let b: Vec<i32> = if paraphrase {
+        // Same content, some synonym substitutions, light reorder.
+        let mut b: Vec<i32> = idxs
+            .iter()
+            .map(|&i| {
+                if rng.bool(syn_rate) {
+                    lex.synonym("c", i)
+                } else {
+                    lex.word("c", i)
+                }
+            })
+            .collect();
+        if b.len() > 3 && rng.bool(0.5) {
+            b.swap(0, 1);
+        }
+        b
+    } else {
+        // Different content with partial overlap (hard negatives).
+        idxs.iter()
+            .map(|&i| {
+                if rng.bool(0.3) {
+                    lex.word("c", i)
+                } else {
+                    lex.word("c", rng.usize_below(500))
+                }
+            })
+            .collect()
+    };
+    (a, b, paraphrase as usize)
+}
+
+fn gen_mnli(lex: &Lexicon, rng: &mut Rng) -> (Vec<i32>, Vec<i32>, usize) {
+    // Premise = facts; entail(0): subset; neutral(1): disjoint new facts;
+    // contradict(2): contains an anti-fact.
+    let nf = 4 + rng.usize_below(4);
+    let facts: Vec<usize> = (0..nf).map(|_| rng.usize_below(200)).collect();
+    let a: Vec<i32> = facts.iter().map(|&i| lex.fact(i)).collect();
+    let label = rng.usize_below(3);
+    let b: Vec<i32> = match label {
+        0 => {
+            let k = 1 + rng.usize_below(nf.min(3));
+            (0..k).map(|j| lex.fact(facts[j])).collect()
+        }
+        1 => (0..3).map(|_| lex.fact(200 + rng.usize_below(200))).collect(),
+        _ => {
+            let mut b: Vec<i32> =
+                (0..2).map(|_| lex.fact(facts[rng.usize_below(nf)])).collect();
+            b.push(lex.anti_fact(facts[rng.usize_below(nf)]));
+            b
+        }
+    };
+    (a, b, label)
+}
+
+fn gen_qnli(lex: &Lexicon, rng: &mut Rng) -> (Vec<i32>, Vec<i32>, usize) {
+    // Question about a target word; answer sentence contains it or not.
+    let target = rng.usize_below(300);
+    let q = vec![lex.word("wh", rng.usize_below(6)), lex.word("c", target)];
+    let has_answer = rng.bool(0.5);
+    let mut sent: Vec<i32> =
+        (0..6 + rng.usize_below(4)).map(|_| lex.word("c", rng.usize_below(300))).collect();
+    if has_answer {
+        let pos = rng.usize_below(sent.len());
+        sent[pos] = lex.word("c", target);
+    } else {
+        // ensure absence
+        let tid = lex.word("c", target);
+        for w in sent.iter_mut() {
+            if *w == tid {
+                *w = lex.word("c", (target + 1) % 300);
+            }
+        }
+    }
+    (q, sent, has_answer as usize)
+}
+
+fn gen_stsb(lex: &Lexicon, rng: &mut Rng) -> (Vec<i32>, Vec<i32>, f32) {
+    // Graded overlap: similarity = 5 * jaccard(content(a), content(b)).
+    let na = 6 + rng.usize_below(4);
+    let idxs_a = content_sentence(rng, na);
+    let overlap = rng.usize_below(na + 1);
+    let mut idxs_b: Vec<usize> = idxs_a[..overlap].to_vec();
+    while idxs_b.len() < na {
+        idxs_b.push(500 + rng.usize_below(300)); // disjoint pool
+    }
+    let mut idxs_b2 = idxs_b.clone();
+    rngshuffle(rng, &mut idxs_b2);
+    let a: Vec<i32> = idxs_a.iter().map(|&i| lex.word("c", i)).collect();
+    let b: Vec<i32> = idxs_b2.iter().map(|&i| lex.word("c", i)).collect();
+    let inter = overlap as f32;
+    let union = (2 * na - overlap) as f32;
+    let score = 5.0 * inter / union + (rng.normal() as f32) * 0.25;
+    (a, b, score.clamp(0.0, 5.0))
+}
+
+fn rngshuffle(rng: &mut Rng, v: &mut [usize]) {
+    for i in (1..v.len()).rev() {
+        let j = rng.usize_below(i + 1);
+        v.swap(i, j);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Public entry
+// ---------------------------------------------------------------------------
+
+/// Generate a split deterministically from (task, vocab, seq_len, seed).
+pub fn generate(spec: &TaskSpec, vocab: usize, seq_len: usize, n: usize, seed: u64) -> Dataset {
+    let lex = Lexicon::new(vocab);
+    let mut rng = Rng::new(seed ^ fnv(spec.name));
+    let mut examples = Vec::with_capacity(n);
+    for _ in 0..n {
+        let ex = match spec.name {
+            "sst2" => {
+                let (a, _, y) = gen_sst2(&lex, &mut rng);
+                let y = maybe_flip(y, 2, spec.label_noise, &mut rng);
+                Example { tokens: lex.tok.encode_single(&a, seq_len), label: Label::Class(y) }
+            }
+            "cola" => {
+                let (a, _, y) = gen_cola(&lex, &mut rng);
+                let y = maybe_flip(y, 2, spec.label_noise, &mut rng);
+                Example { tokens: lex.tok.encode_single(&a, seq_len), label: Label::Class(y) }
+            }
+            "mrpc" => {
+                let (a, b, y) = gen_mrpc_like(&lex, &mut rng, 0.6);
+                let y = maybe_flip(y, 2, spec.label_noise, &mut rng);
+                Example { tokens: lex.tok.encode_pair(&a, &b, seq_len), label: Label::Class(y) }
+            }
+            "qqp" => {
+                let (a, b, y) = gen_mrpc_like(&lex, &mut rng, 0.4);
+                let y = maybe_flip(y, 2, spec.label_noise, &mut rng);
+                Example { tokens: lex.tok.encode_pair(&a, &b, seq_len), label: Label::Class(y) }
+            }
+            "mnli" | "rte" => {
+                let (a, b, mut y) = gen_mnli(&lex, &mut rng);
+                if spec.name == "rte" {
+                    y = (y == 0) as usize; // entail vs not-entail
+                }
+                let y = maybe_flip(y, spec.n_out, spec.label_noise, &mut rng);
+                Example { tokens: lex.tok.encode_pair(&a, &b, seq_len), label: Label::Class(y) }
+            }
+            "qnli" => {
+                let (a, b, y) = gen_qnli(&lex, &mut rng);
+                let y = maybe_flip(y, 2, spec.label_noise, &mut rng);
+                Example { tokens: lex.tok.encode_pair(&a, &b, seq_len), label: Label::Class(y) }
+            }
+            "stsb" => {
+                let (a, b, score) = gen_stsb(&lex, &mut rng);
+                Example { tokens: lex.tok.encode_pair(&a, &b, seq_len), label: Label::Score(score) }
+            }
+            other => panic!("unknown task {other}"),
+        };
+        examples.push(ex);
+    }
+    Dataset { examples, n_out: spec.n_out, seq_len }
+}
+
+/// Train/val pair with disjoint seeds.
+pub fn train_val(spec: &TaskSpec, vocab: usize, seq_len: usize, seed: u64) -> (Dataset, Dataset) {
+    (
+        generate(spec, vocab, seq_len, spec.train_size, seed),
+        generate(spec, vocab, seq_len, spec.val_size, seed.wrapping_add(0x5EED)),
+    )
+}
+
+fn fnv(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate() {
+        for spec in TASKS {
+            let ds = generate(&spec, 1024, 64, 50, 1);
+            assert_eq!(ds.len(), 50);
+            for ex in &ds.examples {
+                assert_eq!(ex.tokens.len(), 64);
+                assert_eq!(ex.tokens[0], super::super::tokenizer::CLS);
+                assert!(ex.tokens.iter().all(|&t| t >= 0 && (t as usize) < 1024));
+                match ex.label {
+                    Label::Class(c) => assert!(c < spec.n_out),
+                    Label::Score(s) => assert!((0.0..=5.0).contains(&s)),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let spec = task("rte").unwrap();
+        let a = generate(&spec, 1024, 64, 20, 7);
+        let b = generate(&spec, 1024, 64, 20, 7);
+        for (x, y) in a.examples.iter().zip(&b.examples) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.label, y.label);
+        }
+        let c = generate(&spec, 1024, 64, 20, 8);
+        assert!(a.examples.iter().zip(&c.examples).any(|(x, y)| x.tokens != y.tokens));
+    }
+
+    #[test]
+    fn labels_roughly_balanced() {
+        for name in ["sst2", "cola", "mrpc", "qnli", "rte"] {
+            let spec = task(name).unwrap();
+            let ds = generate(&spec, 1024, 64, 800, 3);
+            let ones = ds.examples.iter().filter(|e| e.label.class() == 1).count();
+            let frac = ones as f64 / 800.0;
+            assert!((0.3..0.7).contains(&frac), "{name}: {frac}");
+        }
+    }
+
+    #[test]
+    fn mnli_three_way() {
+        let spec = task("mnli").unwrap();
+        let ds = generate(&spec, 1024, 64, 900, 4);
+        let mut counts = [0usize; 3];
+        for e in &ds.examples {
+            counts[e.label.class()] += 1;
+        }
+        assert!(counts.iter().all(|&c| c > 200), "{counts:?}");
+    }
+
+    #[test]
+    fn stsb_scores_span_range() {
+        let spec = task("stsb").unwrap();
+        let ds = generate(&spec, 1024, 64, 500, 5);
+        let scores: Vec<f32> = ds.examples.iter().map(|e| e.label.score()).collect();
+        let lo = scores.iter().cloned().fold(f32::INFINITY, f32::min);
+        let hi = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        assert!(lo < 1.0 && hi > 3.5, "lo={lo} hi={hi}");
+    }
+
+    #[test]
+    fn train_val_disjoint() {
+        let spec = task("sst2").unwrap();
+        let (tr, va) = train_val(&spec, 1024, 64, 11);
+        assert_eq!(tr.len(), spec.train_size);
+        assert_eq!(va.len(), spec.val_size);
+        assert!(tr.examples[0].tokens != va.examples[0].tokens);
+    }
+}

@@ -1,0 +1,10 @@
+//! Data pipeline: synthetic GLUE suite, LM corpus, tokenizer, batcher.
+pub mod batcher;
+pub mod corpus;
+pub mod glue;
+pub mod tokenizer;
+
+pub use batcher::{Batch, Batcher};
+pub use corpus::Corpus;
+pub use glue::{Dataset, Example, Label, TaskSpec, TASKS};
+pub use tokenizer::Tokenizer;

@@ -1,0 +1,138 @@
+//! Hash "wordpiece" tokenizer.
+//!
+//! The synthetic GLUE suite needs a deterministic string -> id map with a
+//! fixed vocabulary and the standard BERT-style special tokens.  Real
+//! subword merges add nothing for planted-pattern tasks, so words hash
+//! straight into the vocab (FNV-1a), with collisions acting as a mild,
+//! realistic lexical ambiguity.
+
+pub const PAD: i32 = 0;
+pub const CLS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const UNK: i32 = 3;
+pub const N_SPECIAL: i32 = 4;
+
+#[derive(Debug, Clone)]
+pub struct Tokenizer {
+    pub vocab: usize,
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}
+
+impl Tokenizer {
+    pub fn new(vocab: usize) -> Self {
+        assert!(vocab > N_SPECIAL as usize + 1, "vocab too small");
+        Tokenizer { vocab }
+    }
+
+    /// Deterministic id for a word (never a special id).
+    pub fn word_id(&self, word: &str) -> i32 {
+        N_SPECIAL + (fnv1a(word) % (self.vocab as u64 - N_SPECIAL as u64)) as i32
+    }
+
+    pub fn encode_words<'a, I: IntoIterator<Item = &'a str>>(&self, words: I) -> Vec<i32> {
+        words.into_iter().map(|w| self.word_id(w)).collect()
+    }
+
+    /// BERT-style single-sentence encoding, padded/truncated to `seq_len`:
+    /// `[CLS] a... [SEP] <pad>...`
+    pub fn encode_single(&self, a: &[i32], seq_len: usize) -> Vec<i32> {
+        let mut out = Vec::with_capacity(seq_len);
+        out.push(CLS);
+        out.extend(a.iter().take(seq_len.saturating_sub(2)));
+        out.push(SEP);
+        out.resize(seq_len, PAD);
+        out.truncate(seq_len);
+        out
+    }
+
+    /// Pair encoding: `[CLS] a... [SEP] b... [SEP] <pad>...` with a fair
+    /// budget split when the pair overflows.
+    pub fn encode_pair(&self, a: &[i32], b: &[i32], seq_len: usize) -> Vec<i32> {
+        let budget = seq_len.saturating_sub(3); // CLS + 2 SEP
+        let half = budget / 2;
+        let (ta, tb) = if a.len() + b.len() <= budget {
+            (a.len(), b.len())
+        } else if a.len() <= half {
+            (a.len(), budget - a.len())
+        } else if b.len() <= half {
+            (budget - b.len(), b.len())
+        } else {
+            (half, budget - half)
+        };
+        let mut out = Vec::with_capacity(seq_len);
+        out.push(CLS);
+        out.extend(&a[..ta]);
+        out.push(SEP);
+        out.extend(&b[..tb]);
+        out.push(SEP);
+        out.resize(seq_len, PAD);
+        out.truncate(seq_len);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_ids_deterministic_and_in_range() {
+        let t = Tokenizer::new(1024);
+        let a = t.word_id("hello");
+        assert_eq!(a, t.word_id("hello"));
+        assert!(a >= N_SPECIAL && (a as usize) < 1024);
+        assert_ne!(t.word_id("hello"), t.word_id("world"));
+    }
+
+    #[test]
+    fn single_encoding_layout() {
+        let t = Tokenizer::new(1024);
+        let ids = t.encode_words(["a", "b"]);
+        let e = t.encode_single(&ids, 8);
+        assert_eq!(e.len(), 8);
+        assert_eq!(e[0], CLS);
+        assert_eq!(e[3], SEP);
+        assert_eq!(&e[4..], &[PAD; 4]);
+    }
+
+    #[test]
+    fn pair_encoding_layout() {
+        let t = Tokenizer::new(1024);
+        let a = t.encode_words(["x", "y"]);
+        let b = t.encode_words(["z"]);
+        let e = t.encode_pair(&a, &b, 10);
+        assert_eq!(e[0], CLS);
+        assert_eq!(e[3], SEP);
+        assert_eq!(e[5], SEP);
+        assert_eq!(e.len(), 10);
+    }
+
+    #[test]
+    fn pair_encoding_truncates_fairly() {
+        let t = Tokenizer::new(1024);
+        let a: Vec<i32> = (10..40).collect();
+        let b: Vec<i32> = (50..80).collect();
+        let e = t.encode_pair(&a, &b, 16);
+        assert_eq!(e.len(), 16);
+        assert_eq!(e.iter().filter(|&&x| x == SEP).count(), 2);
+        // Budget 13 split ~6/7 between a and b.
+        let first_sep = e.iter().position(|&x| x == SEP).unwrap();
+        assert!((5..=8).contains(&(first_sep - 1)));
+    }
+
+    #[test]
+    fn never_truncates_below_seq() {
+        let t = Tokenizer::new(64);
+        let a: Vec<i32> = (4..10).collect();
+        let e = t.encode_single(&a, 4);
+        assert_eq!(e.len(), 4);
+    }
+}

@@ -1,0 +1,108 @@
+//! Probability-mass analyses behind Figs. 3, 10, 11 and 12.
+//!
+//! Fig 3/10/11: for a column-row index distribution p and budget k, plot
+//! `sum_{c in C} p_c` against `|C|/k` as |C| sweeps 0..k — Theorem 2's
+//! condition holds wherever the mass curve lies above the diagonal.
+//! Fig 12: the mass of the top-10% pairs across training iterations
+//! (concentration persists through fine-tuning).
+
+/// One point of the Fig-3 curve.
+#[derive(Debug, Clone, Copy)]
+pub struct MassPoint {
+    /// |C| / k (x-axis).
+    pub frac: f64,
+    /// sum of the |C| largest probabilities (y-axis).
+    pub mass: f64,
+    /// Theorem 2 condition: mass > |C|/k.
+    pub condition_holds: bool,
+}
+
+/// Sweep |C| in 0..=k over a (not necessarily sorted) distribution.
+pub fn mass_curve(probs: &[f64], k: usize, points: usize) -> Vec<MassPoint> {
+    let mut p = probs.to_vec();
+    p.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let mut prefix = vec![0.0f64];
+    for v in &p {
+        prefix.push(prefix.last().unwrap() + v);
+    }
+    let points = points.max(2);
+    (0..points)
+        .map(|t| {
+            let c = (t * k) / (points - 1);
+            let frac = c as f64 / k as f64;
+            let mass = prefix[c.min(p.len())];
+            MassPoint { frac, mass, condition_holds: mass > frac }
+        })
+        .collect()
+}
+
+/// Fraction of |C| grid points (excluding |C|=0) where Thm-2's condition
+/// holds — the "does WTA-CRS win here" summary the paper reads off Fig 3.
+pub fn condition_fraction(probs: &[f64], k: usize) -> f64 {
+    let curve = mass_curve(probs, k, k.min(64) + 1);
+    let inner: Vec<_> = curve.iter().skip(1).collect();
+    if inner.is_empty() {
+        return 0.0;
+    }
+    inner.iter().filter(|p| p.condition_holds).count() as f64 / inner.len() as f64
+}
+
+/// Mass of the top `frac` fraction of pairs (Fig 12's y-axis).
+pub fn top_frac_mass(probs: &[f64], frac: f64) -> f64 {
+    let mut p = probs.to_vec();
+    p.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    let n = ((p.len() as f64 * frac).round() as usize).clamp(1, p.len());
+    p[..n].iter().sum()
+}
+
+/// Gini-style concentration index in [0, 1): 0 = uniform.
+pub fn concentration(probs: &[f64]) -> f64 {
+    let m = probs.len() as f64;
+    let uniform_mass = 1.0 / m;
+    probs.iter().map(|p| (p - uniform_mass).abs()).sum::<f64>() / 2.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_mass_curve_is_diagonal() {
+        let p = vec![0.01; 100];
+        for pt in mass_curve(&p, 30, 11) {
+            assert!((pt.mass - pt.frac * 30.0 / 100.0).abs() < 1e-9);
+            assert!(!pt.condition_holds || pt.frac == 0.0);
+        }
+        assert_eq!(condition_fraction(&p, 30), 0.0);
+    }
+
+    #[test]
+    fn concentrated_condition_holds() {
+        let mut p = vec![0.2 / 99.0; 100];
+        p[0] = 0.8;
+        // mass(c) = 0.8 + ~0.002(c-1) vs c/k: holds until c/k ~ 0.81.
+        assert!(condition_fraction(&p, 30) > 0.75);
+        assert!(top_frac_mass(&p, 0.1) > 0.8);
+    }
+
+    #[test]
+    fn mass_curve_monotone() {
+        let p: Vec<f64> = (1..=50).map(|i| i as f64).collect();
+        let total: f64 = p.iter().sum();
+        let p: Vec<f64> = p.iter().map(|v| v / total).collect();
+        let curve = mass_curve(&p, 20, 21);
+        for w in curve.windows(2) {
+            assert!(w[1].mass >= w[0].mass);
+        }
+        assert!((curve.last().unwrap().mass
+            - top_frac_mass(&p, 20.0 / 50.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn concentration_bounds() {
+        assert!(concentration(&vec![0.25; 4]) < 1e-12);
+        let mut p = vec![0.0; 4];
+        p[0] = 1.0;
+        assert!(concentration(&p) > 0.7);
+    }
+}

@@ -1,0 +1,348 @@
+//! Pure-Rust mirror of the paper's estimators (Eq. 2/5, Eq. 6, Adelman's
+//! deterministic top-k), over column-major-free plain `Vec<f32>` matrices.
+//!
+//! Used by (a) property/statistical tests of Theorems 1-2 independent of
+//! JAX, (b) the Fig. 3/10/11/12 probability-mass analyses, and (c) the
+//! coordinator's variance diagnostics.
+
+pub mod analysis;
+pub mod variance;
+
+use crate::util::rng::Rng;
+
+/// Row-major matrix, the minimal thing the estimator math needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f32) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Mat { rows, cols, data }
+    }
+    pub fn randn(rows: usize, cols: usize, rng: &mut Rng) -> Self {
+        Self::from_fn(rows, cols, |_, _| rng.normal() as f32)
+    }
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+    #[inline]
+    pub fn at_mut(&mut self, r: usize, c: usize) -> &mut f32 {
+        &mut self.data[r * self.cols + c]
+    }
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Plain GEMM: self (n x m) * other (m x q).
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (n, m, q) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, q);
+        for i in 0..n {
+            for k in 0..m {
+                let a = self.at(i, k);
+                if a == 0.0 {
+                    continue;
+                }
+                let orow = other.row(k);
+                let dst = &mut out.data[i * q..(i + 1) * q];
+                for (d, &b) in dst.iter_mut().zip(orow) {
+                    *d += a * b;
+                }
+            }
+        }
+        out
+    }
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().zip(&other.data).map(|(a, b)| a - b).collect(),
+        }
+    }
+
+    pub fn scale(&self, s: f32) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|x| x * s).collect(),
+        }
+    }
+
+    pub fn add_assign(&mut self, other: &Mat) {
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+}
+
+/// Eq. 3: p_i ∝ ||X_:,i||·||Y_i,:|| over the shared (inner) dimension.
+pub fn colrow_probs(x: &Mat, y: &Mat) -> Vec<f64> {
+    assert_eq!(x.cols, y.rows);
+    let m = x.cols;
+    let mut w = vec![0.0f64; m];
+    for i in 0..m {
+        let xn: f64 = (0..x.rows).map(|r| (x.at(r, i) as f64).powi(2)).sum::<f64>().sqrt();
+        let yn: f64 = y.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt();
+        w[i] = xn * yn;
+    }
+    let total: f64 = w.iter().sum();
+    if total <= 0.0 {
+        return vec![1.0 / m as f64; m];
+    }
+    w.iter_mut().for_each(|v| *v /= total);
+    w
+}
+
+/// The column-row pair selection: (indices, scales), |result| = k.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Sampler {
+    Crs,
+    WtaCrs,
+    Det,
+}
+
+/// Theorem-2 optimal deterministic-set size for a *descending* p and
+/// budget k: argmin_{0<=c<k} (1 - prefix_c)/(k - c).
+pub fn wtacrs_csize(p_desc: &[f64], k: usize) -> usize {
+    assert!(k >= 1 && k <= p_desc.len());
+    let mut best = 0usize;
+    let mut best_ratio = f64::INFINITY;
+    let mut prefix = 0.0f64;
+    for c in 0..k {
+        let ratio = (1.0 - prefix) / (k - c) as f64;
+        if ratio < best_ratio {
+            best_ratio = ratio;
+            best = c;
+        }
+        prefix += p_desc[c];
+    }
+    best
+}
+
+/// Select k column-row pairs; mirrors python/compile/sampling.py exactly
+/// in semantics (not in RNG stream).
+pub fn select(
+    sampler: Sampler,
+    probs: &[f64],
+    k: usize,
+    rng: &mut Rng,
+) -> (Vec<usize>, Vec<f64>) {
+    let m = probs.len();
+    assert!(k >= 1 && k <= m);
+    match sampler {
+        Sampler::Crs => {
+            let mut idx = Vec::with_capacity(k);
+            let mut sc = Vec::with_capacity(k);
+            for _ in 0..k {
+                let i = rng.categorical(probs);
+                idx.push(i);
+                sc.push(1.0 / (k as f64 * probs[i].max(1e-300)));
+            }
+            (idx, sc)
+        }
+        Sampler::Det => {
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            order.truncate(k);
+            let sc = vec![1.0; k];
+            (order, sc)
+        }
+        Sampler::WtaCrs => {
+            let mut order: Vec<usize> = (0..m).collect();
+            order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            let p_desc: Vec<f64> = order.iter().map(|&i| probs[i]).collect();
+            let csize = wtacrs_csize(&p_desc, k);
+            let mass_c: f64 = p_desc[..csize].iter().sum();
+            let tail_mass = 1.0 - mass_c;
+            let n_stoc = k - csize;
+            let mut idx: Vec<usize> = order[..csize].to_vec();
+            let mut sc = vec![1.0f64; csize];
+            // Tail distribution: remaining indices, renormalized.
+            let tail: Vec<usize> = order[csize..].to_vec();
+            let tail_w: Vec<f64> = tail.iter().map(|&i| probs[i]).collect();
+            for _ in 0..n_stoc {
+                let t = rng.categorical(&tail_w);
+                let j = tail[t];
+                idx.push(j);
+                sc.push(tail_mass / (n_stoc as f64 * probs[j].max(1e-300)));
+            }
+            (idx, sc)
+        }
+    }
+}
+
+/// End-to-end estimate of X @ Y over k column-row pairs.
+pub fn estimate_matmul(
+    sampler: Sampler,
+    x: &Mat,
+    y: &Mat,
+    k: usize,
+    rng: &mut Rng,
+) -> Mat {
+    let probs = colrow_probs(x, y);
+    let (idx, sc) = select(sampler, &probs, k, rng);
+    let mut out = Mat::zeros(x.rows, y.cols);
+    for (&i, &s) in idx.iter().zip(&sc) {
+        for r in 0..x.rows {
+            let a = x.at(r, i) * s as f32;
+            if a == 0.0 {
+                continue;
+            }
+            let yrow = y.row(i);
+            let dst = &mut out.data[r * y.cols..(r + 1) * y.cols];
+            for (d, &b) in dst.iter_mut().zip(yrow) {
+                *d += a * b;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn skewed_xy(rng: &mut Rng, n: usize, m: usize, q: usize) -> (Mat, Mat) {
+        let x = Mat::randn(n, m, rng);
+        let mut y = Mat::randn(m, q, rng);
+        for i in 0..m {
+            // heavy-tailed row scales -> concentrated distribution
+            let s = (-(rng.f64().max(1e-12)).ln()).powf(2.0) as f32;
+            for c in 0..q {
+                *y.at_mut(i, c) *= s;
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn matmul_matches_manual() {
+        let a = Mat { rows: 2, cols: 3, data: vec![1., 2., 3., 4., 5., 6.] };
+        let b = Mat { rows: 3, cols: 2, data: vec![7., 8., 9., 10., 11., 12.] };
+        let c = a.matmul(&b);
+        assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn probs_normalized() {
+        let mut rng = Rng::new(1);
+        let (x, y) = skewed_xy(&mut rng, 4, 32, 5);
+        let p = colrow_probs(&x, &y);
+        assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        assert!(p.iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn csize_uniform_is_zero() {
+        let p = vec![0.01f64; 100];
+        assert_eq!(wtacrs_csize(&p, 30), 0);
+    }
+
+    #[test]
+    fn csize_concentrated_positive() {
+        let mut p = vec![0.002f64; 100];
+        p[0] = 0.802;
+        assert!(wtacrs_csize(&p, 30) >= 1);
+    }
+
+    #[test]
+    fn unbiasedness_crs_and_wtacrs() {
+        let mut rng = Rng::new(2);
+        let (x, y) = skewed_xy(&mut rng, 4, 64, 4);
+        let exact = x.matmul(&y);
+        for sampler in [Sampler::Crs, Sampler::WtaCrs] {
+            let mut acc = Mat::zeros(4, 4);
+            let trials = 3000;
+            for _ in 0..trials {
+                acc.add_assign(&estimate_matmul(sampler, &x, &y, 20, &mut rng));
+            }
+            let mean = acc.scale(1.0 / trials as f32);
+            let rel = mean.sub(&exact).frob_norm() / exact.frob_norm();
+            assert!(rel < 0.08, "{sampler:?} rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn det_zero_variance_but_biased() {
+        let mut rng = Rng::new(3);
+        let (x, y) = skewed_xy(&mut rng, 4, 64, 4);
+        let exact = x.matmul(&y);
+        let a = estimate_matmul(Sampler::Det, &x, &y, 16, &mut rng);
+        let b = estimate_matmul(Sampler::Det, &x, &y, 16, &mut rng);
+        assert_eq!(a, b); // deterministic
+        let rel = a.sub(&exact).frob_norm() / exact.frob_norm();
+        assert!(rel > 0.01, "det unexpectedly exact: {rel}");
+    }
+
+    #[test]
+    fn det_full_budget_exact() {
+        let mut rng = Rng::new(4);
+        let (x, y) = skewed_xy(&mut rng, 3, 24, 3);
+        let exact = x.matmul(&y);
+        let est = estimate_matmul(Sampler::Det, &x, &y, 24, &mut rng);
+        let rel = est.sub(&exact).frob_norm() / exact.frob_norm().max(1e-9);
+        assert!(rel < 1e-5, "{rel}");
+    }
+
+    #[test]
+    fn variance_ordering_theorem2() {
+        let mut rng = Rng::new(5);
+        let (x, y) = skewed_xy(&mut rng, 4, 96, 4);
+        let var_of = |sampler: Sampler, rng: &mut Rng| {
+            let trials = 1200;
+            let mut mean = Mat::zeros(4, 4);
+            let mut samples = Vec::with_capacity(trials);
+            for _ in 0..trials {
+                let e = estimate_matmul(sampler, &x, &y, 28, rng);
+                mean.add_assign(&e);
+                samples.push(e);
+            }
+            let mean = mean.scale(1.0 / trials as f32);
+            samples
+                .iter()
+                .map(|s| s.sub(&mean).frob_norm().powi(2))
+                .sum::<f64>()
+                / trials as f64
+        };
+        let v_crs = var_of(Sampler::Crs, &mut rng);
+        let v_wta = var_of(Sampler::WtaCrs, &mut rng);
+        assert!(v_wta < v_crs, "Var[wta]={v_wta} !< Var[crs]={v_crs}");
+    }
+
+    #[test]
+    fn wtacrs_det_part_is_top_probs() {
+        let mut rng = Rng::new(6);
+        let (x, y) = skewed_xy(&mut rng, 3, 50, 3);
+        let probs = colrow_probs(&x, &y);
+        let (idx, sc) = select(Sampler::WtaCrs, &probs, 15, &mut rng);
+        let mut order: Vec<usize> = (0..50).collect();
+        order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+        let p_desc: Vec<f64> = order.iter().map(|&i| probs[i]).collect();
+        let csize = wtacrs_csize(&p_desc, 15);
+        assert_eq!(&idx[..csize], &order[..csize]);
+        assert!(sc[..csize].iter().all(|&s| s == 1.0));
+        // stochastic part never re-picks the deterministic set
+        let top: std::collections::HashSet<_> = order[..csize].iter().collect();
+        assert!(idx[csize..].iter().all(|i| !top.contains(i)));
+    }
+}

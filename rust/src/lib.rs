@@ -1,0 +1,24 @@
+//! # wtacrs — Winner-Take-All Column-Row Sampling (NeurIPS 2023)
+//!
+//! A three-layer reproduction of *"Winner-Take-All Column Row Sampling
+//! for Memory Efficient Adaptation of Language Model"*:
+//!
+//! * **L3 (this crate)** — the fine-tuning coordinator: data pipeline,
+//!   trainer, the paper's Algorithm-1 gradient-norm cache, memory model,
+//!   metrics, experiment runner.
+//! * **L2** — JAX train/eval graphs AOT-lowered to `artifacts/*.hlo.txt`
+//!   (built once by `make artifacts`; Python never runs at runtime).
+//! * **L1** — Pallas kernels for the sampled weight-gradient GEMM.
+//!
+//! Entry points: [`runtime`] loads artifacts onto the PJRT CPU client,
+//! [`coordinator`] drives training, [`memsim`] reproduces the paper's
+//! memory tables, [`estimator`] is a pure-Rust mirror of the estimator
+//! math used for property tests and the Fig. 3 analyses.
+pub mod coordinator;
+pub mod data;
+pub mod estimator;
+pub mod memsim;
+pub mod metrics;
+pub mod runtime;
+pub mod testing;
+pub mod util;

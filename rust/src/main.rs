@@ -1,0 +1,319 @@
+//! `wtacrs` — CLI launcher for the WTA-CRS fine-tuning framework.
+//!
+//! Subcommands:
+//!   train     fine-tune on a synthetic GLUE task
+//!   lm        train the decoder LM (end-to-end loss curve)
+//!   memsim    reproduce the paper's memory tables for a model
+//!   inspect   list artifacts / models from the manifest
+//!
+//! Python never runs here: all compute graphs come from `artifacts/`
+//! (see `make artifacts`).
+
+use anyhow::{bail, Result};
+
+use wtacrs::coordinator::{self, ExperimentOptions, TrainOptions};
+use wtacrs::data::Corpus;
+use wtacrs::memsim::{self, tables, Scope, Workload};
+use wtacrs::runtime::{Engine, HostTensor};
+use wtacrs::util::bench::Table;
+use wtacrs::util::cli::Cli;
+use wtacrs::util::logging;
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first().map(String::as_str) else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd {
+        "train" => cmd_train(rest),
+        "lm" => cmd_lm(rest),
+        "memsim" => cmd_memsim(rest),
+        "inspect" => cmd_inspect(rest),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand {other:?} (try `wtacrs help`)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "wtacrs — Winner-Take-All Column-Row Sampling (NeurIPS 2023) reproduction\n\n\
+         usage: wtacrs <subcommand> [options]\n\n\
+         subcommands:\n\
+         \x20 train    fine-tune on a synthetic GLUE task\n\
+         \x20 lm       train the decoder LM (loss curve)\n\
+         \x20 memsim   paper memory tables (Table 2 / Fig 2 / Fig 6)\n\
+         \x20 inspect  list compiled artifacts and models\n\n\
+         run `wtacrs <subcommand> --help` for options"
+    );
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let cli = Cli::new("wtacrs train", "fine-tune on a synthetic GLUE task")
+        .opt("task", "rte", "GLUE task (cola/sst2/mrpc/qqp/mnli/qnli/rte/stsb)")
+        .opt("size", "tiny", "model size (tiny/small)")
+        .opt("method", "full-wtacrs30", "method (full, lora, lst, full-wtacrs30, ...)")
+        .opt("steps", "300", "training steps")
+        .opt("lr", "0.0003", "base learning rate")
+        .opt("seed", "0", "seed")
+        .opt("eval-every", "100", "eval cadence in steps (0 = end only)")
+        .opt("patience", "0", "early-stop patience in evals (0 = off)")
+        .opt("out", "", "append JSON result to this file")
+        .flag("help", "show options");
+    let p = cli.parse(args)?;
+    if p.get_flag("help") {
+        println!("{}", cli.usage());
+        return Ok(());
+    }
+    let engine = Engine::from_default_dir()?;
+    let opts = ExperimentOptions {
+        train: TrainOptions {
+            lr: p.get_f64("lr")? as f32,
+            seed: p.get_u64("seed")?,
+            max_steps: p.get_usize("steps")?,
+            eval_every: p.get_usize("eval-every")?,
+            patience: p.get_usize("patience")?,
+        },
+        ..Default::default()
+    };
+    let res = coordinator::run_glue(
+        &engine,
+        p.get("task"),
+        p.get("size"),
+        p.get("method"),
+        &opts,
+    )?;
+    println!(
+        "{}/{}/{}: {} = {:.4}  ({} steps, {:.1}s, {:.1} sent/s, cache coverage {:.0}%)",
+        res.task,
+        res.size,
+        res.method,
+        res.metric_name,
+        res.score,
+        res.report.steps,
+        res.report.train_seconds,
+        res.report.throughput,
+        100.0 * res.report.norm_cache_coverage,
+    );
+    let out = p.get("out");
+    if !out.is_empty() {
+        coordinator::experiment::write_results(out, std::slice::from_ref(&res))?;
+        println!("appended result to {out}");
+    }
+    Ok(())
+}
+
+fn cmd_lm(args: &[String]) -> Result<()> {
+    let cli = Cli::new("wtacrs lm", "train the decoder LM on the synthetic corpus")
+        .opt("size", "lm_small", "model size (lm_small/lm_100m)")
+        .opt("method", "full-wtacrs30", "full | full-wtacrs30 | full-wtacrs10")
+        .opt("steps", "200", "training steps")
+        .opt("lr", "0.0003", "base learning rate")
+        .opt("seed", "0", "seed")
+        .opt("log-every", "10", "print loss every N steps")
+        .opt("batch-tag", "", "use a batch-variant artifact, e.g. b4/b16/b64")
+        .flag("help", "show options");
+    let p = cli.parse(args)?;
+    if p.get_flag("help") {
+        println!("{}", cli.usage());
+        return Ok(());
+    }
+    let engine = Engine::from_default_dir()?;
+    let size = p.get("size");
+    let tag = p.get("batch-tag");
+    let (train_id, init_id) = if tag.is_empty() {
+        (format!("train_{size}_{}", p.get("method")), format!("init_{size}_full"))
+    } else {
+        (
+            format!("train_{size}_{tag}_{}", p.get("method")),
+            format!("init_{size}_{tag}_full"),
+        )
+    };
+    let steps = p.get_usize("steps")?;
+    let log_every = p.get_usize("log-every")?.max(1);
+
+    let train = engine.load(&train_id)?;
+    let init = engine.load(&init_id)?;
+    let spec = &train.spec;
+    let nt = spec.meta_usize("n_trainable")?;
+    let nf = spec.meta_usize("n_frozen")?;
+    let model = &engine.manifest.models[size];
+    let corpus = Corpus::new(model.vocab, p.get_u64("seed")?);
+
+    let mut state: Vec<HostTensor> = spec
+        .inputs
+        .iter()
+        .map(|t| HostTensor::zeros(&t.shape, t.dtype))
+        .collect();
+    let init_out = init.run(&[HostTensor::scalar_i32(p.get_u64("seed")? as i32)])?;
+    for (i, t) in init_out.into_iter().enumerate() {
+        state[i] = t;
+    }
+    let i_tokens = spec.input_index("tokens")?;
+    let i_znorms = spec.input_index("znorms")?;
+    let i_step = spec.input_index("step")?;
+    let i_lr = spec.input_index("lr")?;
+    state[i_lr] = HostTensor::scalar_f32(p.get_f64("lr")? as f32);
+    state[i_znorms] = HostTensor::ones_f32(&spec.inputs[i_znorms].shape);
+
+    let (b, s) = (spec.batch, spec.seq);
+    println!(
+        "# lm size={size} method={} params={}M batch={b} seq={s}",
+        p.get("method"),
+        model.param_count / 1_000_000
+    );
+    println!("step\tloss\ttokens_per_s");
+    let t0 = std::time::Instant::now();
+    let mut tokens_done = 0usize;
+    for step in 0..steps {
+        state[i_tokens] = HostTensor::i32(vec![b, s], corpus.batch(b, s, step as u64));
+        let mut outs = train.run(&state)?;
+        let loss = outs[3 * nt + 1].scalar_f32_value()?;
+        wtacrs::coordinator::trainer::advance_state(
+            &mut state, &mut outs, nt, nf, i_step, i_znorms,
+        );
+        tokens_done += b * s;
+        if (step + 1) % log_every == 0 || step == 0 {
+            println!(
+                "{}\t{loss:.4}\t{:.0}",
+                step + 1,
+                tokens_done as f64 / t0.elapsed().as_secs_f64()
+            );
+        }
+        if !loss.is_finite() {
+            bail!("loss diverged at step {step}");
+        }
+    }
+    Ok(())
+}
+
+fn cmd_memsim(args: &[String]) -> Result<()> {
+    let cli = Cli::new("wtacrs memsim", "paper memory model (no artifacts needed)")
+        .opt("model", "t5-base", "bert-base|bert-large|t5-base|t5-large|t5-3b")
+        .opt("batch", "64", "batch size")
+        .opt("seq", "128", "sequence length")
+        .opt("budget-gb", "80", "GPU budget for max-batch (Fig 6)")
+        .flag("help", "show options");
+    let p = cli.parse(args)?;
+    if p.get_flag("help") {
+        println!("{}", cli.usage());
+        return Ok(());
+    }
+    let model = p.get("model");
+    let Some(dims) = memsim::Dims::paper(model) else {
+        bail!("unknown model {model:?}");
+    };
+    let w = Workload { batch: p.get_usize("batch")?, seq: p.get_usize("seq")?, bytes: 4 };
+
+    println!("# {} — params {:.0}M", model, dims.param_count() as f64 / 1e6);
+    let bd = memsim::breakdown(&dims, &memsim::MethodMem::full(), &w, Scope::Paper);
+    println!(
+        "breakdown (Full, B={}, S={}): params {:.2}GB grads {:.2}GB opt {:.2}GB act {:.2}GB ws {:.2}GB ({}% activations)",
+        w.batch,
+        w.seq,
+        bd.params / 1e9,
+        bd.grads / 1e9,
+        bd.optimizer / 1e9,
+        bd.activations / 1e9,
+        bd.workspace / 1e9,
+        (100.0 * bd.activation_fraction()) as u32
+    );
+    let mut t = Table::new(&["method", "peak GB", "ratio", "max batch @budget"]);
+    for m in tables::table2_methods() {
+        let (name, gb, ratio) = tables::table2_row(&dims, &m, &w, Scope::Paper);
+        let mb = memsim::max_batch(&dims, &m, w.seq, 4, p.get_f64("budget-gb")? * 1e9, Scope::Paper);
+        t.row(&[name, format!("{gb:.2}"), format!("{ratio:.2}x"), format!("{mb}")]);
+    }
+    t.print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &[String]) -> Result<()> {
+    let cli = Cli::new("wtacrs inspect", "list compiled artifacts")
+        .opt("kind", "", "filter by kind (train/eval/init/component/kernel)")
+        .opt("analyze", "", "HLO op/FLOP analysis of one artifact id")
+        .flag("help", "show options");
+    let p = cli.parse(args)?;
+    if p.get_flag("help") {
+        println!("{}", cli.usage());
+        return Ok(());
+    }
+    let engine = Engine::from_default_dir()?;
+    if !p.get("analyze").is_empty() {
+        return analyze_artifact(&engine, p.get("analyze"));
+    }
+    println!("platform: {}", engine.platform_name());
+    let mut t = Table::new(&["artifact", "kind", "model", "method", "B", "S", "inputs", "outputs"]);
+    for a in engine.manifest.artifacts.values() {
+        if !p.get("kind").is_empty() && a.kind != p.get("kind") {
+            continue;
+        }
+        t.row(&[
+            a.id.clone(),
+            a.kind.clone(),
+            a.model.clone(),
+            a.method.clone(),
+            a.batch.to_string(),
+            a.seq.to_string(),
+            a.inputs.len().to_string(),
+            a.outputs.len().to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nmodels:");
+    for (name, m) in &engine.manifest.models {
+        println!(
+            "  {name}: d={} L={} H={} ff={} V={} B={} S={} ({}M params, {})",
+            m.d_model,
+            m.n_layers,
+            m.n_heads,
+            m.d_ff,
+            m.vocab,
+            m.batch,
+            m.seq_len,
+            m.param_count / 1_000_000,
+            m.kind
+        );
+    }
+    Ok(())
+}
+
+/// HLO fusion audit of one artifact (DESIGN.md §9 L2): op census, dot
+/// FLOPs, parameter bytes, sampling-machinery footprint.
+fn analyze_artifact(engine: &Engine, id: &str) -> Result<()> {
+    let spec = engine.manifest.get(id)?;
+    let st = wtacrs::runtime::hlo_info::analyze_file(&spec.path)?;
+    println!("artifact {id} ({})", spec.path.display());
+    println!("  instructions:       {}", st.n_instructions);
+    println!("  dot FLOPs/step:     {:.3} G", st.dot_flops / 1e9);
+    println!("  parameter bytes:    {:.2} MB", st.param_bytes as f64 / 1e6);
+    println!("  largest tensor:     {:.2} MB", st.largest_tensor_bytes as f64 / 1e6);
+    println!(
+        "  sampling machinery: {} ops (sort/iota/rng)",
+        st.sampling_ops()
+    );
+    let mut tops: Vec<(&String, &usize)> = st.op_counts.iter().collect();
+    tops.sort_by(|a, b| b.1.cmp(a.1));
+    let mut t = Table::new(&["op", "count"]);
+    for (op, n) in tops.iter().take(18) {
+        t.row(&[op.to_string(), n.to_string()]);
+    }
+    t.print();
+    Ok(())
+}

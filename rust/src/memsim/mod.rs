@@ -1,0 +1,461 @@
+//! Analytic GPU-memory model (DESIGN.md §5).
+//!
+//! The paper's memory numbers (Fig 2, Table 2, Fig 6/13) are produced on
+//! an A100; this environment has no GPU, but training-memory is an
+//! accounting identity over *which tensors are stored*: parameters,
+//! gradients, optimizer states, and the activations each op saves for
+//! backward.  This module enumerates those tensors per transformer block
+//! (Fig 4's green / blue / gray classification) for every method and
+//! reports totals, breakdowns, compression ratios, and max-batch curves.
+//!
+//! Two scopes are modeled:
+//! * `Scope::Paper` — the paper's Fig-4 green set (linears + the two
+//!   attention TensorMuls are sub-sampled);
+//! * `Scope::LinearOnly` — this repo's implementation scope (linears
+//!   only; TensorMuls stay exact), reported alongside for honesty.
+
+pub mod tables;
+
+/// Architecture family (decoder blocks carry cross-attention).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Encoder,
+    /// Half the blocks are decoder blocks (T5: n_layers = enc + dec).
+    EncDec,
+}
+
+/// Model dimension card.  `d_attn` is the attention inner width
+/// (heads x d_kv) — T5-3B famously uses 32 x 128 = 4096 over d_model 1024.
+#[derive(Debug, Clone, Copy)]
+pub struct Dims {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub d_attn: usize,
+    pub vocab: usize,
+    pub arch: Arch,
+}
+
+impl Dims {
+    /// Paper models by name (dims from the papers' configs).
+    pub fn paper(name: &str) -> Option<Dims> {
+        let (d, l, h, f, da, v, arch) = match name {
+            "bert-base" => (768, 12, 12, 3072, 768, 30522, Arch::Encoder),
+            "bert-large" => (1024, 24, 16, 4096, 1024, 30522, Arch::Encoder),
+            "t5-base" => (768, 24, 12, 3072, 768, 32128, Arch::EncDec),
+            "t5-large" => (1024, 48, 16, 4096, 1024, 32128, Arch::EncDec),
+            "t5-3b" => (1024, 48, 32, 16384, 4096, 32128, Arch::EncDec),
+            _ => return None,
+        };
+        Some(Dims {
+            d_model: d,
+            n_layers: l,
+            n_heads: h,
+            d_ff: f,
+            d_attn: da,
+            vocab: v,
+            arch,
+        })
+    }
+
+    /// Linear-layer weights per block: Q,K,V,O (+ cross-attn for dec) + U,D.
+    fn block_params(&self, decoder: bool) -> usize {
+        let d = self.d_model;
+        let attn = 4 * d * self.d_attn;
+        let cross = if decoder { 4 * d * self.d_attn } else { 0 };
+        let ff = 2 * d * self.d_ff;
+        let ln = 2 * d * if decoder { 3 } else { 2 };
+        attn + cross + ff + ln
+    }
+
+    fn n_dec(&self) -> usize {
+        match self.arch {
+            Arch::Encoder => 0,
+            Arch::EncDec => self.n_layers / 2,
+        }
+    }
+
+    /// Total parameter count.
+    pub fn param_count(&self) -> usize {
+        let n_dec = self.n_dec();
+        let n_enc = self.n_layers - n_dec;
+        self.vocab * self.d_model
+            + n_enc * self.block_params(false)
+            + n_dec * self.block_params(true)
+            + 2 * self.d_model
+    }
+}
+
+/// Tuning mode + sampler budget (k/|D|; 1.0 = exact backward).
+#[derive(Debug, Clone, Copy)]
+pub struct MethodMem {
+    pub name: &'static str,
+    pub lora: bool,
+    pub lst: bool,
+    pub budget: f64,
+    pub lora_rank: usize,
+    pub lst_factor: usize,
+}
+
+impl MethodMem {
+    pub fn full() -> Self {
+        MethodMem { name: "Full", lora: false, lst: false, budget: 1.0, lora_rank: 32, lst_factor: 8 }
+    }
+    pub fn lora() -> Self {
+        MethodMem { name: "LoRA", lora: true, ..Self::full() }
+    }
+    pub fn lst() -> Self {
+        MethodMem { name: "LST", lst: true, ..Self::full() }
+    }
+    pub fn wtacrs(budget: f64) -> Self {
+        let name: &'static str = if budget == 0.3 {
+            "WTA-CRS@0.3"
+        } else if budget == 0.1 {
+            "WTA-CRS@0.1"
+        } else {
+            "WTA-CRS"
+        };
+        MethodMem { name, budget, ..Self::full() }
+    }
+    pub fn lora_wtacrs(budget: f64) -> Self {
+        let name: &'static str = if budget == 0.3 {
+            "LoRA+WTA-CRS@0.3"
+        } else if budget == 0.1 {
+            "LoRA+WTA-CRS@0.1"
+        } else {
+            "LoRA+WTA-CRS"
+        };
+        MethodMem { name, lora: true, budget, ..Self::full() }
+    }
+}
+
+/// Which ops the sampler compresses (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    Paper,
+    LinearOnly,
+}
+
+/// Workload: batch, sequence, element width.
+#[derive(Debug, Clone, Copy)]
+pub struct Workload {
+    pub batch: usize,
+    pub seq: usize,
+    pub bytes: usize, // 4 = fp32
+}
+
+/// Byte totals per category (the Fig-2 breakdown).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Breakdown {
+    pub params: f64,
+    pub grads: f64,
+    pub optimizer: f64,
+    pub activations: f64,
+    pub workspace: f64,
+}
+
+impl Breakdown {
+    pub fn total(&self) -> f64 {
+        self.params + self.grads + self.optimizer + self.activations + self.workspace
+    }
+    pub fn activation_fraction(&self) -> f64 {
+        self.activations / self.total()
+    }
+}
+
+/// Stored-activation bytes for ONE block, per token row.
+///
+/// Categories follow Fig 4: green tensors are sub-sampled to `budget`
+/// when sampled (and, for Scope::Paper, include the TensorMul operands
+/// and the softmax output); blue tensors (GELU/dropout) are losslessly
+/// compressed to ~1 byte/elem; gray (LayerNorm saves) stay f32.
+fn block_act_bytes_per_row(
+    dims: &Dims,
+    w: &Workload,
+    budget: f64,
+    scope: Scope,
+    decoder: bool,
+    backward: bool,
+) -> f64 {
+    let d = dims.d_model as f64;
+    let da = dims.d_attn as f64;
+    let ff = dims.d_ff as f64;
+    let hs = (dims.n_heads * w.seq) as f64; // attention-prob row per token
+    let b = w.bytes as f64;
+    if !backward {
+        // Forward-only trunk (LST): nothing stored for backward.
+        return 0.0;
+    }
+    let n_attn = if decoder { 2.0 } else { 1.0 }; // self (+ cross) attention
+
+    // --- green: sub-sampled by WTA-CRS -------------------------------
+    // Linear inputs: the shared QKV input (one tensor when exact; one
+    // subsample per linear when sampled), O input (d_attn wide), U input,
+    // D input (ff wide).
+    let lin_green_exact = n_attn * (d + da) + d + ff;
+    let lin_green_sampled =
+        (n_attn * (3.0 * d + da) + d + ff) * budget;
+    // TensorMul saves: q,k,v projections + softmax output + the dropped
+    // attention probs feeding TensorMul-2 (paper scope compresses these).
+    let tm_green_exact = n_attn * (3.0 * da + 2.0 * hs);
+    let tm_green_sampled = match scope {
+        Scope::Paper => tm_green_exact * budget,
+        Scope::LinearOnly => tm_green_exact,
+    };
+    let green = if budget < 1.0 {
+        lin_green_sampled + tm_green_sampled
+    } else {
+        lin_green_exact + tm_green_exact
+    } * b;
+
+    // --- gray: LayerNorm input + residual-stream save ------------------
+    let gray = 2.0 * d * b;
+
+    // --- blue: lossless <=1 byte/elem (GELU save + dropout masks) ------
+    let blue = ff * 0.5 + (n_attn * hs + 2.0 * d) / 8.0;
+
+    green + gray + blue
+}
+
+/// LST side-network activations per row (trainable ladder only).
+fn lst_side_act_bytes_per_row(dims: &Dims, w: &Workload, factor: usize) -> f64 {
+    let ds = (dims.d_model / factor) as f64;
+    // Trunk reads feeding trainable matmuls + side FFN saves.
+    (dims.d_model as f64 + 5.0 * ds) * w.bytes as f64
+}
+
+/// Full breakdown for (model, method, workload).
+pub fn breakdown(dims: &Dims, m: &MethodMem, w: &Workload, scope: Scope) -> Breakdown {
+    let p_total = dims.param_count() as f64;
+    let d = dims.d_model as f64;
+    let rows = (w.batch * w.seq) as f64;
+    let b = w.bytes as f64;
+
+    // Trainable parameter count.
+    let p_train = if m.lst {
+        let ds = d / m.lst_factor as f64;
+        dims.n_layers as f64 * (d * ds + 4.0 * ds * ds) + 2.0 * d * ds
+    } else if m.lora {
+        // rank-r adapters on the 6 linears per block (paper: dim 32).
+        let r = m.lora_rank as f64;
+        let da = dims.d_attn as f64;
+        let per_block = 4.0 * (d + da) * r
+            + (d + dims.d_ff as f64) * r
+            + (dims.d_ff as f64 + d) * r;
+        dims.n_layers as f64 * per_block
+    } else {
+        p_total
+    };
+
+    let params = p_total * b + if m.lora || m.lst { p_train * b } else { 0.0 };
+    let grads = p_train * b;
+    let optimizer = 2.0 * p_train * b; // AdamW m+v
+
+    // Activations.
+    let n_dec = dims.n_dec();
+    let n_enc = dims.n_layers - n_dec;
+    let activations = if m.lst {
+        rows * lst_side_act_bytes_per_row(dims, w, m.lst_factor) * dims.n_layers as f64
+    } else {
+        let enc = block_act_bytes_per_row(dims, w, m.budget, scope, false, true);
+        let dec = block_act_bytes_per_row(dims, w, m.budget, scope, true, true);
+        rows * (n_enc as f64 * enc + n_dec as f64 * dec)
+            // embeddings output + final LN stored once
+            + rows * 2.0 * d * b
+    };
+
+    // Workspace: the largest transient.  GLUE fine-tuning decodes short
+    // target strings (~8 tokens for text-to-text labels), so the LM-head
+    // logits transient is B x 8 x vocab; the attention-scores scratch is
+    // the other candidate.
+    let logits = (w.batch * 8 * dims.vocab) as f64 * b;
+    let attn_scratch = (w.batch * dims.n_heads * w.seq * w.seq) as f64 * b;
+    let workspace = logits.max(attn_scratch);
+
+    Breakdown { params, grads, optimizer, activations, workspace }
+}
+
+/// Peak memory in bytes.
+pub fn peak_bytes(dims: &Dims, m: &MethodMem, w: &Workload, scope: Scope) -> f64 {
+    breakdown(dims, m, w, scope).total()
+}
+
+/// Largest batch size fitting a byte budget (Fig 6/13).
+pub fn max_batch(
+    dims: &Dims,
+    m: &MethodMem,
+    seq: usize,
+    bytes: usize,
+    budget_bytes: f64,
+    scope: Scope,
+) -> usize {
+    let fits = |b: usize| {
+        b >= 1
+            && peak_bytes(dims, m, &Workload { batch: b, seq, bytes }, scope)
+                <= budget_bytes
+    };
+    if !fits(1) {
+        return 0;
+    }
+    let mut lo = 1usize;
+    let mut hi = 2usize;
+    while fits(hi) {
+        lo = hi;
+        hi *= 2;
+        if hi > 1 << 20 {
+            break;
+        }
+    }
+    while lo + 1 < hi {
+        let mid = (lo + hi) / 2;
+        if fits(mid) {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const GB: f64 = 1e9;
+
+    fn t5b() -> Dims {
+        Dims::paper("t5-base").unwrap()
+    }
+
+    fn w64() -> Workload {
+        Workload { batch: 64, seq: 128, bytes: 4 }
+    }
+
+    #[test]
+    fn param_counts_near_published() {
+        let within = |got: usize, want_m: f64, tol: f64| {
+            let got_m = got as f64 / 1e6;
+            assert!(
+                (got_m - want_m).abs() / want_m < tol,
+                "params {got_m:.0}M vs published {want_m:.0}M"
+            );
+        };
+        within(Dims::paper("bert-base").unwrap().param_count(), 110.0, 0.15);
+        within(Dims::paper("bert-large").unwrap().param_count(), 340.0, 0.15);
+        within(t5b().param_count(), 220.0, 0.15);
+        within(Dims::paper("t5-large").unwrap().param_count(), 770.0, 0.15);
+        within(Dims::paper("t5-3b").unwrap().param_count(), 2800.0, 0.15);
+    }
+
+    #[test]
+    fn activations_dominate_full_finetune() {
+        // Fig 2: activations are 73-88% of footprint for T5 at B=64.
+        let bd = breakdown(&t5b(), &MethodMem::full(), &w64(), Scope::Paper);
+        let f = bd.activation_fraction();
+        assert!((0.6..0.95).contains(&f), "activation fraction {f}");
+    }
+
+    #[test]
+    fn compression_ratios_match_paper_shape() {
+        // Table 2 ratios (T5-Base): LoRA ~1.3x, WTA@0.3 ~2.1x,
+        // WTA@0.1 ~2.4x, LoRA+WTA@0.3 ~2.7x, LoRA+WTA@0.1 ~3.2x.
+        let dims = t5b();
+        let w = w64();
+        let full = peak_bytes(&dims, &MethodMem::full(), &w, Scope::Paper);
+        let ratio = |m: MethodMem| full / peak_bytes(&dims, &m, &w, Scope::Paper);
+        let r_lora = ratio(MethodMem::lora());
+        let r_w3 = ratio(MethodMem::wtacrs(0.3));
+        let r_w1 = ratio(MethodMem::wtacrs(0.1));
+        let r_lw3 = ratio(MethodMem::lora_wtacrs(0.3));
+        let r_lw1 = ratio(MethodMem::lora_wtacrs(0.1));
+        assert!((1.05..1.7).contains(&r_lora), "LoRA ratio {r_lora}");
+        assert!((1.6..2.7).contains(&r_w3), "WTA@0.3 ratio {r_w3}");
+        assert!(r_w1 > r_w3, "{r_w1} !> {r_w3}");
+        assert!(r_lw3 > r_w3, "{r_lw3} !> {r_w3}");
+        assert!(r_lw1 > r_lw3, "{r_lw1} !> {r_lw3}");
+        assert!((2.0..3.6).contains(&r_lw3), "LoRA+WTA@0.3 ratio {r_lw3}");
+    }
+
+    #[test]
+    fn linear_only_scope_saves_less() {
+        let dims = t5b();
+        let w = w64();
+        let m = MethodMem::wtacrs(0.3);
+        let paper = peak_bytes(&dims, &m, &w, Scope::Paper);
+        let impl_ = peak_bytes(&dims, &m, &w, Scope::LinearOnly);
+        assert!(impl_ > paper);
+    }
+
+    #[test]
+    fn lst_cuts_activations_hard() {
+        let dims = t5b();
+        let w = w64();
+        let full = breakdown(&dims, &MethodMem::full(), &w, Scope::Paper);
+        let lst = breakdown(&dims, &MethodMem::lst(), &w, Scope::Paper);
+        assert!(lst.activations < 0.35 * full.activations);
+        assert!(lst.optimizer < 0.05 * full.optimizer);
+    }
+
+    #[test]
+    fn t5_3b_fits_the_paper_hardware_claims() {
+        // §5.2: LoRA+WTA-CRS@0.3 tunes T5-3B at batch 32 in ~21.6GB
+        // (24GB-class GPU); full tuning cannot fit the same hardware.
+        let dims = Dims::paper("t5-3b").unwrap();
+        let w = Workload { batch: 32, seq: 128, bytes: 4 };
+        let full = peak_bytes(&dims, &MethodMem::full(), &w, Scope::Paper) / GB;
+        let lw3 = peak_bytes(&dims, &MethodMem::lora_wtacrs(0.3), &w, Scope::Paper) / GB;
+        assert!((60.0..115.0).contains(&full), "full T5-3B peak {full:.1}GB");
+        assert!(lw3 < 35.0, "LoRA+WTA-CRS@0.3 T5-3B peak {lw3:.1}GB");
+        assert!(full / lw3 > 2.5, "ratio {:.2}", full / lw3);
+    }
+
+    #[test]
+    fn max_batch_scales_like_fig6() {
+        // Fig 6: on T5-3B, LoRA ~1.9x larger batches; +WTA-CRS@0.3 ~4.8x;
+        // +WTA-CRS@0.1 ~6.4x.
+        let dims = Dims::paper("t5-3b").unwrap();
+        let budget = 80.0 * GB;
+        let b_full = max_batch(&dims, &MethodMem::full(), 128, 4, budget, Scope::Paper);
+        let b_lora = max_batch(&dims, &MethodMem::lora(), 128, 4, budget, Scope::Paper);
+        let b_lw3 =
+            max_batch(&dims, &MethodMem::lora_wtacrs(0.3), 128, 4, budget, Scope::Paper);
+        let b_lw1 =
+            max_batch(&dims, &MethodMem::lora_wtacrs(0.1), 128, 4, budget, Scope::Paper);
+        assert!(b_full >= 1);
+        let r_lora = b_lora as f64 / b_full as f64;
+        let r_lw3 = b_lw3 as f64 / b_full as f64;
+        let r_lw1 = b_lw1 as f64 / b_full as f64;
+        assert!((1.5..2.6).contains(&r_lora), "LoRA batch gain {r_lora}");
+        assert!((4.0..7.0).contains(&r_lw3), "LoRA+WTA@0.3 batch gain {r_lw3}");
+        assert!(r_lw1 > r_lw3, "{r_lw1} !> {r_lw3}");
+    }
+
+    #[test]
+    fn peak_monotone_in_batch_and_budget() {
+        let dims = t5b();
+        let m3 = MethodMem::wtacrs(0.3);
+        let m5 = MethodMem::wtacrs(0.5);
+        for b in [1, 8, 32] {
+            let w1 = Workload { batch: b, seq: 128, bytes: 4 };
+            let w2 = Workload { batch: b * 2, seq: 128, bytes: 4 };
+            assert!(
+                peak_bytes(&dims, &m3, &w2, Scope::Paper)
+                    > peak_bytes(&dims, &m3, &w1, Scope::Paper)
+            );
+            assert!(
+                peak_bytes(&dims, &m5, &w1, Scope::Paper)
+                    > peak_bytes(&dims, &m3, &w1, Scope::Paper)
+            );
+        }
+    }
+
+    #[test]
+    fn max_batch_zero_when_params_overflow() {
+        let dims = Dims::paper("t5-3b").unwrap();
+        assert_eq!(
+            max_batch(&dims, &MethodMem::full(), 128, 4, 10.0 * GB, Scope::Paper),
+            0
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! Paper-table producers over the memory model: the exact rows/series of
+//! Table 2, Fig 2, and Fig 6/13.  Benches print these; tests pin shapes.
+
+use super::{breakdown, max_batch, peak_bytes, Breakdown, Dims, MethodMem, Scope, Workload};
+
+/// Table 2 row: (method name, peak GB, compression ratio vs Full).
+pub fn table2_row(dims: &Dims, m: &MethodMem, w: &Workload, scope: Scope) -> (String, f64, f64) {
+    let full = peak_bytes(dims, &MethodMem::full(), w, scope);
+    let peak = peak_bytes(dims, m, w, scope);
+    (m.name.to_string(), peak / 1e9, full / peak)
+}
+
+/// The standard method list of Table 2 / Fig 1.
+pub fn table2_methods() -> Vec<MethodMem> {
+    vec![
+        MethodMem::full(),
+        MethodMem::lora(),
+        MethodMem::lst(),
+        MethodMem::wtacrs(0.3),
+        MethodMem::wtacrs(0.1),
+        MethodMem::lora_wtacrs(0.3),
+        MethodMem::lora_wtacrs(0.1),
+    ]
+}
+
+/// Fig 2: breakdown at B, S for a model (params/grads/opt/act/workspace).
+pub fn fig2_breakdown(model: &str, batch: usize, seq: usize) -> Option<Breakdown> {
+    let dims = Dims::paper(model)?;
+    Some(breakdown(&dims, &MethodMem::full(), &Workload { batch, seq, bytes: 4 }, Scope::Paper))
+}
+
+/// Fig 6/13 series: (method, max batch, peak GB at that batch).
+pub fn fig6_series(model: &str, budget_gb: f64, seq: usize) -> Vec<(String, usize, f64)> {
+    let dims = match Dims::paper(model) {
+        Some(d) => d,
+        None => return vec![],
+    };
+    table2_methods()
+        .into_iter()
+        .map(|m| {
+            let b = max_batch(&dims, &m, seq, 4, budget_gb * 1e9, Scope::Paper);
+            let peak = if b == 0 {
+                f64::NAN
+            } else {
+                peak_bytes(&dims, &m, &Workload { batch: b, seq, bytes: 4 }, Scope::Paper) / 1e9
+            };
+            (m.name.to_string(), b, peak)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_full_ratio_is_one() {
+        let dims = Dims::paper("t5-base").unwrap();
+        let w = Workload { batch: 64, seq: 128, bytes: 4 };
+        let (_, _, r) = table2_row(&dims, &MethodMem::full(), &w, Scope::Paper);
+        assert!((r - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fig6_series_ordered_by_method_strength() {
+        let rows = fig6_series("t5-3b", 80.0, 128);
+        let get = |name: &str| rows.iter().find(|r| r.0 == name).unwrap().1;
+        assert!(get("LoRA") >= get("Full"));
+        assert!(get("LoRA+WTA-CRS@0.3") > get("LoRA"));
+        assert!(get("LoRA+WTA-CRS@0.1") > get("LoRA+WTA-CRS@0.3"));
+    }
+
+    #[test]
+    fn fig2_activation_share_grows_with_seq() {
+        let a = fig2_breakdown("t5-base", 64, 128).unwrap();
+        let b = fig2_breakdown("t5-base", 64, 256).unwrap();
+        assert!(b.activation_fraction() > a.activation_fraction());
+    }
+}

@@ -1,0 +1,161 @@
+//! GLUE evaluation metrics (paper §5.1): accuracy, F1, Matthews
+//! correlation, Pearson and Spearman correlation — one per task family.
+
+use crate::util::stats;
+
+/// Which metric a task reports (mirrors the paper's protocol).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MetricKind {
+    Accuracy,
+    F1,
+    Matthews,
+    PearsonSpearman,
+}
+
+impl MetricKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            MetricKind::Accuracy => "acc",
+            MetricKind::F1 => "f1",
+            MetricKind::Matthews => "mcc",
+            MetricKind::PearsonSpearman => "pearson",
+        }
+    }
+}
+
+/// Classification accuracy.
+pub fn accuracy(pred: &[usize], gold: &[usize]) -> f64 {
+    assert_eq!(pred.len(), gold.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    pred.iter().zip(gold).filter(|(p, g)| p == g).count() as f64 / pred.len() as f64
+}
+
+/// Binary-confusion counts (positive class = 1).
+fn confusion(pred: &[usize], gold: &[usize]) -> (f64, f64, f64, f64) {
+    let (mut tp, mut fp, mut fne, mut tn) = (0.0, 0.0, 0.0, 0.0);
+    for (&p, &g) in pred.iter().zip(gold) {
+        match (p, g) {
+            (1, 1) => tp += 1.0,
+            (1, 0) => fp += 1.0,
+            (0, 1) => fne += 1.0,
+            _ => tn += 1.0,
+        }
+    }
+    (tp, fp, fne, tn)
+}
+
+/// F1 of the positive class (MRPC/QQP protocol).
+pub fn f1(pred: &[usize], gold: &[usize]) -> f64 {
+    let (tp, fp, fne, _) = confusion(pred, gold);
+    if tp == 0.0 {
+        return 0.0;
+    }
+    let prec = tp / (tp + fp);
+    let rec = tp / (tp + fne);
+    2.0 * prec * rec / (prec + rec)
+}
+
+/// Matthews correlation coefficient (CoLA protocol).
+pub fn matthews(pred: &[usize], gold: &[usize]) -> f64 {
+    let (tp, fp, fne, tn) = confusion(pred, gold);
+    let denom = ((tp + fp) * (tp + fne) * (tn + fp) * (tn + fne)).sqrt();
+    if denom == 0.0 {
+        return 0.0;
+    }
+    (tp * tn - fp * fne) / denom
+}
+
+pub fn pearson(x: &[f64], y: &[f64]) -> f64 {
+    stats::pearson(x, y)
+}
+
+pub fn spearman(x: &[f64], y: &[f64]) -> f64 {
+    stats::spearman(x, y)
+}
+
+/// The STS-B combined score: mean of Pearson and Spearman.
+pub fn pearson_spearman(pred: &[f64], gold: &[f64]) -> f64 {
+    0.5 * (pearson(pred, gold) + spearman(pred, gold))
+}
+
+/// Evaluate the metric appropriate for a task on classifier outputs.
+/// For regression tasks `pred_scores`/`gold_scores` are used; otherwise
+/// argmax predictions/labels.
+pub fn evaluate(
+    kind: MetricKind,
+    pred_labels: &[usize],
+    gold_labels: &[usize],
+    pred_scores: &[f64],
+    gold_scores: &[f64],
+) -> f64 {
+    match kind {
+        MetricKind::Accuracy => accuracy(pred_labels, gold_labels),
+        MetricKind::F1 => f1(pred_labels, gold_labels),
+        MetricKind::Matthews => matthews(pred_labels, gold_labels),
+        MetricKind::PearsonSpearman => pearson_spearman(pred_scores, gold_scores),
+    }
+}
+
+/// Argmax over a row-major (n, c) logits buffer.
+pub fn argmax_rows(logits: &[f32], n: usize, c: usize) -> Vec<usize> {
+    assert_eq!(logits.len(), n * c);
+    (0..n)
+        .map(|i| {
+            let row = &logits[i * c..(i + 1) * c];
+            // First-max semantics (numpy argmax) for deterministic ties.
+            let mut best = 0;
+            for (j, &v) in row.iter().enumerate().skip(1) {
+                if v > row[best] {
+                    best = j;
+                }
+            }
+            best
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_basic() {
+        assert_eq!(accuracy(&[0, 1, 1], &[0, 1, 0]), 2.0 / 3.0);
+        assert_eq!(accuracy(&[], &[]), 0.0);
+    }
+
+    #[test]
+    fn f1_perfect_and_degenerate() {
+        assert_eq!(f1(&[1, 0, 1], &[1, 0, 1]), 1.0);
+        assert_eq!(f1(&[0, 0], &[1, 1]), 0.0);
+    }
+
+    #[test]
+    fn f1_known_value() {
+        // tp=1 fp=1 fn=1 -> prec=rec=0.5 -> f1=0.5
+        assert!((f1(&[1, 1, 0, 0], &[1, 0, 1, 0]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn matthews_range_and_sign() {
+        assert!((matthews(&[1, 0, 1, 0], &[1, 0, 1, 0]) - 1.0).abs() < 1e-12);
+        assert!((matthews(&[0, 1, 0, 1], &[1, 0, 1, 0]) + 1.0).abs() < 1e-12);
+        assert_eq!(matthews(&[1, 1, 1, 1], &[1, 0, 1, 0]), 0.0);
+    }
+
+    #[test]
+    fn pearson_spearman_combined() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        let y = [2.0, 4.0, 6.0, 8.0];
+        assert!((pearson_spearman(&x, &y) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn argmax_rows_works() {
+        let logits = [0.1f32, 0.9, 0.8, 0.2, 0.3, 0.3];
+        let p = argmax_rows(&logits, 3, 2);
+        assert_eq!(p, vec![1, 0, 0]);
+    }
+}

@@ -1,0 +1,159 @@
+//! PJRT execution engine: compile HLO-text artifacts once, run them many
+//! times from the coordinator's hot loop.
+//!
+//! Wire format notes (see /opt/xla-example/README.md):
+//! * artifacts are HLO *text*; `HloModuleProto::from_text_file` reparses
+//!   and reassigns instruction ids (jax>=0.5 emits 64-bit ids the bundled
+//!   xla_extension 0.5.1 rejects in proto form);
+//! * graphs are lowered with `return_tuple=True`, so each execution
+//!   returns one tuple buffer which we decompose on the host.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, Manifest};
+use super::tensor::HostTensor;
+
+/// Owns the PJRT client and a cache of compiled executables.
+pub struct Engine {
+    client: xla::PjRtClient,
+    cache: Mutex<HashMap<String, std::sync::Arc<Executable>>>,
+    pub manifest: Manifest,
+}
+
+/// One compiled graph plus its manifest contract.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+    pub compile_time_s: f64,
+}
+
+impl Engine {
+    /// CPU PJRT client + manifest from the given artifacts dir.
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        log::info!(
+            "PJRT platform={} devices={} artifacts={}",
+            client.platform_name(),
+            client.device_count(),
+            manifest.artifacts.len()
+        );
+        Ok(Engine { client, cache: Mutex::new(HashMap::new()), manifest })
+    }
+
+    /// Engine rooted at the default artifacts dir.
+    pub fn from_default_dir() -> Result<Self> {
+        Self::new(Manifest::default_dir())
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) the artifact with this id.
+    pub fn load(&self, id: &str) -> Result<std::sync::Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(id) {
+            return Ok(e.clone());
+        }
+        let spec = self.manifest.get(id)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&spec.path)
+            .map_err(|e| anyhow!("parse {:?}: {e:?}", spec.path))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {id}: {e:?}"))?;
+        let compile_time_s = t0.elapsed().as_secs_f64();
+        log::debug!("compiled {id} in {compile_time_s:.2}s");
+        let exe = std::sync::Arc::new(Executable { exe, spec, compile_time_s });
+        self.cache.lock().unwrap().insert(id.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Drop a compiled executable (memory hygiene for bench sweeps).
+    pub fn evict(&self, id: &str) {
+        self.cache.lock().unwrap().remove(id);
+    }
+}
+
+impl Executable {
+    /// Validate inputs against the manifest contract.
+    fn check_inputs(&self, inputs: &[HostTensor]) -> Result<()> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "artifact {}: expected {} inputs, got {}",
+                self.spec.id,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, s)) in inputs.iter().zip(&self.spec.inputs).enumerate() {
+            if t.shape != s.shape || t.dtype() != s.dtype {
+                bail!(
+                    "artifact {} input #{i} ({}): expected {:?} {}, got {:?} {}",
+                    self.spec.id,
+                    s.name,
+                    s.shape,
+                    s.dtype.name(),
+                    t.shape,
+                    t.dtype().name(),
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Execute with host tensors; returns host tensors per the contract.
+    pub fn run(&self, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        self.check_inputs(inputs)?;
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        self.run_literals(&literals)
+    }
+
+    /// Execute with prebuilt literals (hot path: callers keep state as
+    /// literals between steps to skip rebuilds of unchanged inputs).
+    pub fn run_literals(&self, literals: &[xla::Literal]) -> Result<Vec<HostTensor>> {
+        let outs = self
+            .exe
+            .execute::<xla::Literal>(literals)
+            .map_err(|e| anyhow!("execute {}: {e:?}", self.spec.id))?;
+        let buf = outs
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("execute {} returned no buffers", self.spec.id))?;
+        let lit = buf
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal {}: {e:?}", self.spec.id))?;
+        let parts = lit
+            .to_tuple()
+            .map_err(|e| anyhow!("untuple {}: {e:?}", self.spec.id))?;
+        if parts.len() != self.spec.outputs.len() {
+            bail!(
+                "artifact {}: manifest promises {} outputs, graph returned {}",
+                self.spec.id,
+                self.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        parts
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                HostTensor::from_literal(l).with_context(|| {
+                    format!("decoding output #{i} ({})", self.spec.outputs[i].name)
+                })
+            })
+            .collect()
+    }
+
+    pub fn id(&self) -> &str {
+        &self.spec.id
+    }
+}

@@ -1,0 +1,237 @@
+//! HLO-text analysis: the L2 "fusion audit" of DESIGN.md §9.
+//!
+//! Parses the AOT artifacts' HLO text (no XLA needed) and reports
+//! per-module op statistics, parameter/output byte totals, estimated
+//! FLOPs for dot/convolution ops, and the sampling-machinery footprint
+//! (sort/iota/rng ops) — enough to verify that (a) the sampled graph
+//! adds only O(m log m + k) work over the exact one and (b) XLA fused
+//! the estimator math rather than materializing intermediates.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+/// Parsed per-module statistics.
+#[derive(Debug, Clone, Default)]
+pub struct HloStats {
+    /// op name -> count, over all computations in the module.
+    pub op_counts: BTreeMap<String, usize>,
+    /// Estimated FLOPs of all `dot` ops (2*M*N*K each).
+    pub dot_flops: f64,
+    /// Number of fusion computations (post-optimization modules only).
+    pub n_computations: usize,
+    /// Total bytes of ENTRY parameters.
+    pub param_bytes: u64,
+    /// Largest single instruction output, bytes.
+    pub largest_tensor_bytes: u64,
+    pub n_instructions: usize,
+}
+
+impl HloStats {
+    pub fn count(&self, op: &str) -> usize {
+        self.op_counts.get(op).copied().unwrap_or(0)
+    }
+
+    /// Ops belonging to the sampling machinery.
+    pub fn sampling_ops(&self) -> usize {
+        ["sort", "iota", "rng", "rng-bit-generator"]
+            .iter()
+            .map(|o| self.count(o))
+            .sum()
+    }
+}
+
+/// Parse `f32[64,128]{1,0}` -> (elem_bytes, numel). Tuples return the sum.
+fn shape_bytes(s: &str) -> u64 {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('(') {
+        // tuple: split top-level commas
+        let inner = inner.strip_suffix(')').unwrap_or(inner);
+        let mut depth = 0usize;
+        let mut start = 0usize;
+        let mut total = 0u64;
+        for (i, c) in inner.char_indices() {
+            match c {
+                '(' | '[' => depth += 1,
+                ')' | ']' => depth = depth.saturating_sub(1),
+                ',' if depth == 0 => {
+                    total += shape_bytes(&inner[start..i]);
+                    start = i + 1;
+                }
+                _ => {}
+            }
+        }
+        total += shape_bytes(&inner[start..]);
+        return total;
+    }
+    let elem = if s.starts_with("f64") || s.starts_with("s64") || s.starts_with("u64") {
+        8
+    } else if s.starts_with("f32") || s.starts_with("s32") || s.starts_with("u32") {
+        4
+    } else if s.starts_with("f16") || s.starts_with("bf16") || s.starts_with("s16") {
+        2
+    } else if s.starts_with("pred") || s.starts_with("s8") || s.starts_with("u8") {
+        1
+    } else {
+        4
+    };
+    let numel = match (s.find('['), s.find(']')) {
+        (Some(a), Some(b)) if b > a => s[a + 1..b]
+            .split(',')
+            .filter(|d| !d.trim().is_empty())
+            .map(|d| d.trim().parse::<u64>().unwrap_or(1))
+            .product::<u64>(),
+        _ => 1,
+    };
+    elem * numel
+}
+
+/// Dims of `f32[64,128]{1,0}` (empty for scalars).
+fn shape_dims(s: &str) -> Vec<u64> {
+    match (s.find('['), s.find(']')) {
+        (Some(a), Some(b)) if b > a => s[a + 1..b]
+            .split(',')
+            .filter(|d| !d.trim().is_empty())
+            .map(|d| d.trim().parse::<u64>().unwrap_or(1))
+            .collect(),
+        _ => vec![],
+    }
+}
+
+/// Extract the op name of an instruction line:
+/// `  %x.1 = f32[2,3]{1,0} add(%a, %b), metadata=...` -> "add".
+fn parse_instruction(line: &str) -> Option<(&str, &str)> {
+    let (_, rhs) = line.split_once(" = ")?;
+    // rhs: "f32[2,3]{1,0} add(...)" — shape then op.
+    let rhs = rhs.trim_start();
+    let shape_end = rhs.find(' ')?;
+    let (shape, rest) = rhs.split_at(shape_end);
+    let rest = rest.trim_start();
+    let op_end = rest.find('(')?;
+    let op = &rest[..op_end];
+    Some((shape, op))
+}
+
+/// Analyze one HLO text file.
+pub fn analyze_file(path: impl AsRef<Path>) -> Result<HloStats> {
+    let text = std::fs::read_to_string(path.as_ref())
+        .with_context(|| format!("reading {:?}", path.as_ref()))?;
+    Ok(analyze(&text))
+}
+
+/// Analyze HLO text.
+pub fn analyze(text: &str) -> HloStats {
+    let mut st = HloStats::default();
+    let mut in_entry = false;
+    for line in text.lines() {
+        let lt = line.trim_start();
+        if lt.starts_with("ENTRY ") {
+            in_entry = true;
+        } else if lt.starts_with('}') {
+            in_entry = false;
+        }
+        if lt.contains(" = ") && (lt.starts_with('%') || lt.contains("= ")) {
+            if let Some((shape, op)) = parse_instruction(lt) {
+                // Filter computation headers etc.: op must be identifier-ish
+                if op.is_empty()
+                    || !op.chars().all(|c| c.is_ascii_alphanumeric() || c == '-' || c == '_')
+                {
+                    continue;
+                }
+                st.n_instructions += 1;
+                *st.op_counts.entry(op.to_string()).or_insert(0) += 1;
+                let bytes = shape_bytes(shape);
+                st.largest_tensor_bytes = st.largest_tensor_bytes.max(bytes);
+                if in_entry && op == "parameter" {
+                    st.param_bytes += bytes;
+                }
+                if op == "dot" {
+                    // FLOPs = 2 * prod(out_dims) * K, with K read from the
+                    // lhs operand shape at the lhs_contracting_dims index.
+                    let out_n: u64 = shape_dims(shape).iter().product();
+                    let kdim = lt
+                        .split("lhs_contracting_dims={")
+                        .nth(1)
+                        .and_then(|s| s.split('}').next())
+                        .and_then(|d| d.split(',').next())
+                        .and_then(|d| d.trim().parse::<usize>().ok());
+                    // The lhs operand reads "f32[4,8]{1,0} %a, ..." — the
+                    // shape is the first whitespace token (splitting on
+                    // ',' would cut inside the dims list).
+                    let lhs_shape = lt
+                        .split('(')
+                        .nth(1)
+                        .and_then(|args| args.split_whitespace().next())
+                        .unwrap_or("");
+                    let lhs_dims = shape_dims(lhs_shape);
+                    let k = kdim
+                        .and_then(|i| lhs_dims.get(i).copied())
+                        .unwrap_or_else(|| *lhs_dims.last().unwrap_or(&1));
+                    st.dot_flops += 2.0 * out_n as f64 * k as f64;
+                }
+            }
+        }
+        if lt.starts_with("%") && lt.contains("(param") {
+            // computation definition line; counted via braces instead
+        }
+        if lt.starts_with("HloModule") {
+            st.n_computations = 0;
+        }
+        if lt.contains('{') && (lt.starts_with('%') || lt.starts_with("ENTRY")) {
+            st.n_computations += 1;
+        }
+    }
+    st
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"HloModule test
+%fused (p: f32[4,8]) -> f32[4] {
+  %p = f32[4,8]{1,0} parameter(0)
+  ROOT %r = f32[4]{0} reduce(%p), dimensions={1}, to_apply=%add
+}
+ENTRY %main (a: f32[4,8], b: f32[8,16]) -> (f32[4,16]) {
+  %a = f32[4,8]{1,0} parameter(0)
+  %b = f32[8,16]{1,0} parameter(1)
+  %d = f32[4,16]{1,0} dot(f32[4,8]{1,0} %a, f32[8,16]{1,0} %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+  %s = f32[4,16]{1,0} sort(%d), dimensions={1}
+  ROOT %t = (f32[4,16]) tuple(%s)
+}
+"#;
+
+    #[test]
+    fn counts_ops_and_params() {
+        let st = analyze(SAMPLE);
+        assert_eq!(st.count("parameter"), 3);
+        assert_eq!(st.count("dot"), 1);
+        assert_eq!(st.count("sort"), 1);
+        assert_eq!(st.sampling_ops(), 1);
+        // ENTRY params: 4*8*4 + 8*16*4 = 128 + 512
+        assert_eq!(st.param_bytes, 640);
+    }
+
+    #[test]
+    fn dot_flops_estimate() {
+        let st = analyze(SAMPLE);
+        // 2 * (4*16) * 8 = 1024
+        assert_eq!(st.dot_flops, 1024.0);
+    }
+
+    #[test]
+    fn shape_bytes_variants() {
+        assert_eq!(shape_bytes("f32[2,3]{1,0}"), 24);
+        assert_eq!(shape_bytes("pred[8]"), 8);
+        assert_eq!(shape_bytes("f32[]"), 4);
+        assert_eq!(shape_bytes("(f32[2], s32[3])"), 20);
+    }
+
+    #[test]
+    fn largest_tensor_tracked() {
+        let st = analyze(SAMPLE);
+        assert_eq!(st.largest_tensor_bytes, 512);
+    }
+}

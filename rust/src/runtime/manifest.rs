@@ -1,0 +1,265 @@
+//! `artifacts/manifest.json` — the positional I/O contract emitted by
+//! `python -m compile.aot`.  Everything the Rust side knows about the
+//! compiled graphs (shapes, dtypes, model dims, paper dims) comes from
+//! here; Python is never imported at runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::tensor::DType;
+use crate::util::json::{self, Json};
+
+/// One tensor slot of an artifact's positional interface.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn size_bytes(&self) -> usize {
+        self.numel() * self.dtype.bytes()
+    }
+}
+
+/// One AOT-compiled graph.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub id: String,
+    pub path: PathBuf,
+    pub kind: String, // train | eval | init | component | kernel
+    pub model: String,
+    pub method: String,
+    pub n_out: usize,
+    pub batch: usize,
+    pub seq: usize,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: BTreeMap<String, f64>,
+}
+
+impl ArtifactSpec {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no input named {name:?}", self.id))
+    }
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|t| t.name == name)
+            .ok_or_else(|| anyhow!("artifact {}: no output named {name:?}", self.id))
+    }
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta
+            .get(key)
+            .map(|&v| v as usize)
+            .ok_or_else(|| anyhow!("artifact {}: no meta key {key:?}", self.id))
+    }
+    /// Total bytes of all inputs (the resident state for a train loop).
+    pub fn input_bytes(&self) -> usize {
+        self.inputs.iter().map(|t| t.size_bytes()).sum()
+    }
+}
+
+/// Model dimension card (mirrors compile/config.py ModelConfig).
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+    pub n_out: usize,
+    pub kind: String,
+    pub param_count: usize,
+}
+
+/// The full manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+    pub models: BTreeMap<String, ModelDims>,
+    /// Paper's true model dims for the memory model (name -> key -> value).
+    pub paper_dims: BTreeMap<String, BTreeMap<String, usize>>,
+}
+
+fn tensor_specs(j: &Json, what: &str) -> Result<Vec<TensorSpec>> {
+    j.as_arr()
+        .with_context(|| format!("{what} not an array"))?
+        .iter()
+        .map(|t| {
+            Ok(TensorSpec {
+                name: t
+                    .get("name")
+                    .and_then(Json::as_str)
+                    .context("tensor name")?
+                    .to_string(),
+                shape: t
+                    .get("shape")
+                    .and_then(Json::as_arr)
+                    .context("tensor shape")?
+                    .iter()
+                    .map(|d| d.as_usize().context("dim"))
+                    .collect::<Result<_>>()?,
+                dtype: DType::parse(
+                    t.get("dtype").and_then(Json::as_str).context("dtype")?,
+                )?,
+            })
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} (run `make artifacts`)"))?;
+        let j = json::parse(&text).context("parsing manifest.json")?;
+
+        let mut artifacts = BTreeMap::new();
+        for (id, a) in j.get("artifacts").and_then(Json::as_obj).context("artifacts")? {
+            let meta = a
+                .get("meta")
+                .and_then(Json::as_obj)
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            let spec = ArtifactSpec {
+                id: id.clone(),
+                path: dir.join(a.get("path").and_then(Json::as_str).context("path")?),
+                kind: a.get("kind").and_then(Json::as_str).unwrap_or("").to_string(),
+                model: a.get("model").and_then(Json::as_str).unwrap_or("").to_string(),
+                method: a.get("method").and_then(Json::as_str).unwrap_or("").to_string(),
+                n_out: a.get("n_out").and_then(Json::as_usize).unwrap_or(0),
+                batch: a.get("batch").and_then(Json::as_usize).unwrap_or(0),
+                seq: a.get("seq").and_then(Json::as_usize).unwrap_or(0),
+                inputs: tensor_specs(a.get("inputs").context("inputs")?, "inputs")?,
+                outputs: tensor_specs(a.get("outputs").context("outputs")?, "outputs")?,
+                meta,
+            };
+            artifacts.insert(id.clone(), spec);
+        }
+
+        let mut models = BTreeMap::new();
+        if let Some(ms) = j.get("models").and_then(Json::as_obj) {
+            for (name, m) in ms {
+                let g = |k: &str| -> Result<usize> {
+                    m.get(k).and_then(Json::as_usize).with_context(|| format!("model {name}.{k}"))
+                };
+                models.insert(
+                    name.clone(),
+                    ModelDims {
+                        vocab: g("vocab")?,
+                        d_model: g("d_model")?,
+                        n_layers: g("n_layers")?,
+                        n_heads: g("n_heads")?,
+                        d_ff: g("d_ff")?,
+                        seq_len: g("seq_len")?,
+                        batch: g("batch")?,
+                        n_out: g("n_out")?,
+                        kind: m.get("kind").and_then(Json::as_str).unwrap_or("").into(),
+                        param_count: g("param_count")?,
+                    },
+                );
+            }
+        }
+
+        let mut paper_dims = BTreeMap::new();
+        if let Some(pd) = j.get("paper_dims").and_then(Json::as_obj) {
+            for (name, dims) in pd {
+                let mut card = BTreeMap::new();
+                if let Some(o) = dims.as_obj() {
+                    for (k, v) in o {
+                        if let Some(n) = v.as_usize() {
+                            card.insert(k.clone(), n);
+                        }
+                    }
+                }
+                paper_dims.insert(name.clone(), card);
+            }
+        }
+
+        if artifacts.is_empty() {
+            bail!("manifest at {path:?} lists no artifacts");
+        }
+        Ok(Manifest { dir, artifacts, models, paper_dims })
+    }
+
+    pub fn get(&self, id: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(id)
+            .ok_or_else(|| anyhow!("manifest has no artifact {id:?} (re-run `make artifacts`)"))
+    }
+
+    /// Ids matching a predicate (used by benches to enumerate configs).
+    pub fn ids_where<F: Fn(&ArtifactSpec) -> bool>(&self, pred: F) -> Vec<String> {
+        self.artifacts.values().filter(|a| pred(a)).map(|a| a.id.clone()).collect()
+    }
+
+    /// Default artifacts directory: $WTACRS_ARTIFACTS or ./artifacts.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("WTACRS_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const MINI: &str = r#"{
+      "artifacts": {
+        "eval_x": {
+          "path": "eval_x.hlo.txt", "kind": "eval", "model": "tiny",
+          "method": "full", "n_out": 2, "batch": 4, "seq": 8,
+          "inputs": [{"name": "w", "shape": [3, 2], "dtype": "f32"},
+                      {"name": "tokens", "shape": [4, 8], "dtype": "i32"}],
+          "outputs": [{"name": "logits", "shape": [4, 2], "dtype": "f32"}],
+          "meta": {"n_trainable": 1}
+        }
+      },
+      "models": {"tiny": {"vocab": 10, "d_model": 4, "n_layers": 1,
+        "n_heads": 1, "d_ff": 8, "seq_len": 8, "batch": 4, "n_out": 2,
+        "kind": "encoder_cls", "param_count": 123}},
+      "paper_dims": {"t5-base": {"d_model": 768, "n_layers": 24,
+        "n_heads": 12, "d_ff": 3072, "vocab": 32128}}
+    }"#;
+
+    fn write_mini(dir: &std::path::Path) {
+        std::fs::write(dir.join("manifest.json"), MINI).unwrap();
+    }
+
+    #[test]
+    fn parse_mini_manifest() {
+        let dir = std::env::temp_dir().join(format!("wtacrs-man-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        write_mini(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        let a = m.get("eval_x").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.input_index("tokens").unwrap(), 1);
+        assert_eq!(a.inputs[0].numel(), 6);
+        assert_eq!(a.meta_usize("n_trainable").unwrap(), 1);
+        assert_eq!(m.models["tiny"].d_ff, 8);
+        assert_eq!(m.paper_dims["t5-base"]["d_model"], 768);
+        assert!(m.get("nope").is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,10 @@
+//! Runtime — load AOT artifacts (HLO text) onto the PJRT CPU client and
+//! execute them from the coordinator's hot path.
+pub mod engine;
+pub mod hlo_info;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, Executable};
+pub use manifest::{ArtifactSpec, Manifest, ModelDims, TensorSpec};
+pub use tensor::{DType, HostTensor, TensorData};

@@ -1,0 +1,207 @@
+//! Host tensors + conversion to/from `xla::Literal`.
+//!
+//! The positional artifact contract only uses f32 and i32 (the manifest's
+//! `dtype` field); this module keeps data in typed Vecs and handles the
+//! byte-level bridging with the PJRT literals.
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// The two dtypes the artifact contract uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(DType::F32),
+            "i32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other:?} in manifest"),
+        }
+    }
+    pub fn name(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+    pub fn element_type(&self) -> xla::ElementType {
+        match self {
+            DType::F32 => xla::ElementType::F32,
+            DType::I32 => xla::ElementType::S32,
+        }
+    }
+    pub fn bytes(&self) -> usize {
+        4
+    }
+}
+
+/// Typed tensor payload.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+/// A host-side dense tensor (row-major).
+#[derive(Debug, Clone, PartialEq)]
+pub struct HostTensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: TensorData::F32(data) }
+    }
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        HostTensor { shape, data: TensorData::I32(data) }
+    }
+    pub fn scalar_f32(v: f32) -> Self {
+        HostTensor::f32(vec![], vec![v])
+    }
+    pub fn scalar_i32(v: i32) -> Self {
+        HostTensor::i32(vec![], vec![v])
+    }
+    pub fn zeros(shape: &[usize], dtype: DType) -> Self {
+        let n = shape.iter().product();
+        match dtype {
+            DType::F32 => HostTensor::f32(shape.to_vec(), vec![0.0; n]),
+            DType::I32 => HostTensor::i32(shape.to_vec(), vec![0; n]),
+        }
+    }
+    pub fn ones_f32(shape: &[usize]) -> Self {
+        HostTensor::f32(shape.to_vec(), vec![1.0; shape.iter().product()])
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self.data {
+            TensorData::F32(_) => DType::F32,
+            TensorData::I32(_) => DType::I32,
+        }
+    }
+    pub fn len(&self) -> usize {
+        match &self.data {
+            TensorData::F32(v) => v.len(),
+            TensorData::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn size_bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is f32, expected i32")),
+        }
+    }
+    pub fn as_f32_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => Err(anyhow!("tensor is i32, expected f32")),
+        }
+    }
+    pub fn scalar_f32_value(&self) -> Result<f32> {
+        Ok(self.as_f32()?.first().copied().context("empty tensor")?)
+    }
+    pub fn scalar_i32_value(&self) -> Result<i32> {
+        Ok(self.as_i32()?.first().copied().context("empty tensor")?)
+    }
+
+    /// Build the PJRT literal (copies).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let bytes: &[u8] = match &self.data {
+            TensorData::F32(v) => bytemuck_f32(v),
+            TensorData::I32(v) => bytemuck_i32(v),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(
+            self.dtype().element_type(),
+            &self.shape,
+            bytes,
+        )
+        .map_err(|e| anyhow!("literal create failed: {e:?}"))
+    }
+
+    /// Read a literal back into a host tensor.
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        match shape.ty() {
+            xla::ElementType::F32 => {
+                let v: Vec<f32> =
+                    lit.to_vec().map_err(|e| anyhow!("to_vec f32: {e:?}"))?;
+                Ok(HostTensor::f32(dims, v))
+            }
+            xla::ElementType::S32 => {
+                let v: Vec<i32> =
+                    lit.to_vec().map_err(|e| anyhow!("to_vec i32: {e:?}"))?;
+                Ok(HostTensor::i32(dims, v))
+            }
+            other => bail!("unsupported literal element type {other:?}"),
+        }
+    }
+}
+
+fn bytemuck_f32(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+fn bytemuck_i32(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(DType::parse("f32").unwrap(), DType::F32);
+        assert_eq!(DType::parse("i32").unwrap(), DType::I32);
+        assert!(DType::parse("f64").is_err());
+    }
+
+    #[test]
+    fn shape_len_checks() {
+        let t = HostTensor::f32(vec![2, 3], vec![0.0; 6]);
+        assert_eq!(t.len(), 6);
+        assert_eq!(t.size_bytes(), 24);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_shape_panics() {
+        HostTensor::f32(vec![2, 3], vec![0.0; 5]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(t, back);
+    }
+
+    #[test]
+    fn literal_roundtrip_i32_scalar() {
+        let t = HostTensor::scalar_i32(42);
+        let lit = t.to_literal().unwrap();
+        let back = HostTensor::from_literal(&lit).unwrap();
+        assert_eq!(back.scalar_i32_value().unwrap(), 42);
+        assert!(back.shape.is_empty());
+    }
+}

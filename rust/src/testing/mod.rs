@@ -1,0 +1,2 @@
+//! In-repo test substrates (property testing; see DESIGN.md §7).
+pub mod prop;

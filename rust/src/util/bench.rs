@@ -1,0 +1,198 @@
+//! Criterion-style micro/macro bench harness (criterion is unavailable
+//! offline; `cargo bench` targets use `harness = false` and this module).
+//!
+//! Features: warmup, adaptive iteration count targeting a measurement
+//! budget, mean/std/percentiles, throughput units, and aligned table
+//! printing shared by the paper-reproduction benches.
+
+use std::time::{Duration, Instant};
+
+use super::stats::{percentile, Summary};
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup: Duration,
+    pub measure: Duration,
+    pub min_iters: u32,
+    pub max_iters: u32,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(300),
+            measure: Duration::from_secs(2),
+            min_iters: 5,
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl BenchConfig {
+    /// Scale budgets down for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        BenchConfig {
+            warmup: Duration::from_millis(50),
+            measure: Duration::from_millis(500),
+            min_iters: 3,
+            max_iters: 1_000,
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub std: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e3
+    }
+    /// items/sec given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` under warmup + adaptive measurement; returns timing stats.
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    // Warmup.
+    let t0 = Instant::now();
+    let mut warm_iters = 0u32;
+    while t0.elapsed() < cfg.warmup && warm_iters < cfg.max_iters {
+        f();
+        warm_iters += 1;
+    }
+    // Measure.
+    let mut samples: Vec<f64> = Vec::new();
+    let mut summary = Summary::new();
+    let t1 = Instant::now();
+    let mut iters = 0u32;
+    while (t1.elapsed() < cfg.measure || iters < cfg.min_iters) && iters < cfg.max_iters
+    {
+        let s = Instant::now();
+        f();
+        let dt = s.elapsed().as_secs_f64();
+        samples.push(dt);
+        summary.push(dt);
+        iters += 1;
+    }
+    let p50 = percentile(&mut samples, 50.0);
+    let p99 = percentile(&mut samples, 99.0);
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        mean: Duration::from_secs_f64(summary.mean()),
+        std: Duration::from_secs_f64(summary.std()),
+        p50: Duration::from_secs_f64(p50),
+        p99: Duration::from_secs_f64(p99),
+        min: Duration::from_secs_f64(summary.min()),
+    }
+}
+
+/// Fixed-width table printer for paper-style result rows.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Self {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells.to_vec());
+    }
+    pub fn row_strs(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+    pub fn print(&self) {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(c.chars().count());
+            }
+        }
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    s.push_str("  ");
+                }
+                s.push_str(c);
+                for _ in c.chars().count()..w[i] {
+                    s.push(' ');
+                }
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", w.iter().map(|n| "-".repeat(*n)).collect::<Vec<_>>().join("--"));
+        for r in &self.rows {
+            line(r);
+        }
+    }
+}
+
+/// Reads WTACRS_BENCH_MODE ("quick"|"full", default quick) — the paper
+/// benches scale their workloads by this.
+pub fn bench_mode_full() -> bool {
+    std::env::var("WTACRS_BENCH_MODE").map(|v| v == "full").unwrap_or(false)
+}
+
+pub fn fmt_ms(d: Duration) -> String {
+    format!("{:.2}", d.as_secs_f64() * 1e3)
+}
+
+pub fn fmt_gb(bytes: f64) -> String {
+    format!("{:.2}", bytes / 1e9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_sleep() {
+        let cfg = BenchConfig {
+            warmup: Duration::from_millis(1),
+            measure: Duration::from_millis(50),
+            min_iters: 3,
+            max_iters: 100,
+        };
+        let r = bench("sleep", &cfg, || std::thread::sleep(Duration::from_millis(2)));
+        assert!(r.mean >= Duration::from_millis(2));
+        assert!(r.iters >= 3);
+        assert!(r.p99 >= r.p50);
+        assert!(r.mean_ms() >= 2.0);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            iters: 1,
+            mean: Duration::from_millis(100),
+            std: Duration::ZERO,
+            p50: Duration::from_millis(100),
+            p99: Duration::from_millis(100),
+            min: Duration::from_millis(100),
+        };
+        assert!((r.throughput(10.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn table_prints() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row_strs(&["1", "2"]);
+        t.print(); // just exercise the alignment code
+    }
+}

@@ -1,0 +1,213 @@
+//! Tiny declarative CLI argument parser (no `clap` offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text.  Sub-commands are handled by the caller peeling
+//! the first positional.
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<String>,
+    pub is_flag: bool,
+    pub required: bool,
+}
+
+#[derive(Debug, Default)]
+pub struct Cli {
+    pub program: String,
+    pub about: String,
+    specs: Vec<ArgSpec>,
+}
+
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl std::fmt::Display for CliError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+impl std::error::Error for CliError {}
+
+impl Cli {
+    pub fn new(program: &str, about: &str) -> Self {
+        Cli { program: program.into(), about: about.into(), specs: vec![] }
+    }
+
+    pub fn opt(mut self, name: &'static str, default: &str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec {
+            name,
+            help,
+            default: Some(default.into()),
+            is_flag: false,
+            required: false,
+        });
+        self
+    }
+
+    pub fn req(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: false, required: true });
+        self
+    }
+
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Self {
+        self.specs.push(ArgSpec { name, help, default: None, is_flag: true, required: false });
+        self
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "{} — {}", self.program, self.about);
+        let _ = writeln!(s, "\noptions:");
+        for a in &self.specs {
+            let kind = if a.is_flag {
+                String::new()
+            } else if let Some(d) = &a.default {
+                format!(" <value, default {d}>")
+            } else {
+                " <value, required>".to_string()
+            };
+            let _ = writeln!(s, "  --{}{}\n      {}", a.name, kind, a.help);
+        }
+        s
+    }
+
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, CliError> {
+        let mut values = BTreeMap::new();
+        let mut flags = BTreeMap::new();
+        let mut positional = Vec::new();
+        for a in &self.specs {
+            if a.is_flag {
+                flags.insert(a.name.to_string(), false);
+            } else if let Some(d) = &a.default {
+                values.insert(a.name.to_string(), d.clone());
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(body) = a.strip_prefix("--") {
+                let (key, inline) = match body.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (body.to_string(), None),
+                };
+                let spec = self
+                    .specs
+                    .iter()
+                    .find(|s| s.name == key)
+                    .ok_or_else(|| CliError(format!("unknown option --{key}")))?;
+                if spec.is_flag {
+                    if inline.is_some() {
+                        return Err(CliError(format!("--{key} takes no value")));
+                    }
+                    flags.insert(key, true);
+                } else {
+                    let v = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i)
+                                .cloned()
+                                .ok_or_else(|| CliError(format!("--{key} needs a value")))?
+                        }
+                    };
+                    values.insert(key, v);
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        for s in &self.specs {
+            if s.required && !values.contains_key(s.name) {
+                return Err(CliError(format!("missing required --{}", s.name)));
+            }
+        }
+        Ok(Parsed { values, flags, positional })
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> &str {
+        self.values
+            .get(name)
+            .unwrap_or_else(|| panic!("option {name} not declared"))
+    }
+    pub fn get_flag(&self, name: &str) -> bool {
+        *self.flags.get(name).unwrap_or(&false)
+    }
+    pub fn get_usize(&self, name: &str) -> Result<usize, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects an integer")))
+    }
+    pub fn get_u64(&self, name: &str) -> Result<u64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects an integer")))
+    }
+    pub fn get_f64(&self, name: &str) -> Result<f64, CliError> {
+        self.get(name)
+            .parse()
+            .map_err(|_| CliError(format!("--{name} expects a number")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    fn cli() -> Cli {
+        Cli::new("t", "test")
+            .opt("steps", "100", "steps")
+            .req("task", "task name")
+            .flag("verbose", "noisy")
+    }
+
+    #[test]
+    fn defaults_and_required() {
+        let p = cli().parse(&args(&["--task", "rte"])).unwrap();
+        assert_eq!(p.get("steps"), "100");
+        assert_eq!(p.get("task"), "rte");
+        assert!(!p.get_flag("verbose"));
+    }
+
+    #[test]
+    fn equals_form_and_flags() {
+        let p = cli()
+            .parse(&args(&["--task=qqp", "--steps=5", "--verbose", "pos1"]))
+            .unwrap();
+        assert_eq!(p.get_usize("steps").unwrap(), 5);
+        assert!(p.get_flag("verbose"));
+        assert_eq!(p.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn errors() {
+        assert!(cli().parse(&args(&[])).is_err()); // missing required
+        assert!(cli().parse(&args(&["--task", "x", "--bogus", "1"])).is_err());
+        assert!(cli().parse(&args(&["--task"])).is_err()); // value missing
+        assert!(cli().parse(&args(&["--task=x", "--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn usage_mentions_options() {
+        let u = cli().usage();
+        assert!(u.contains("--steps") && u.contains("--task") && u.contains("--verbose"));
+    }
+}

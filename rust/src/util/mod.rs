@@ -1,0 +1,11 @@
+//! Infrastructure substrates built in-repo (the offline build environment
+//! ships no serde/clap/criterion/tokio/proptest — see DESIGN.md §7).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod plot;
+pub mod pool;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,98 @@
+//! Terminal ASCII line plots for the figure benches and the e2e loss
+//! curve (the paper's figures are line charts; a quick visual in the
+//! bench output beats eyeballing JSON).
+
+/// Render one or more named series into an ASCII chart.
+///
+/// Each series is a list of (x, y); x need not be uniform. Series are
+/// drawn with distinct glyphs; overlapping points show the last series.
+pub fn line_chart(
+    title: &str,
+    series: &[(&str, Vec<(f64, f64)>)],
+    width: usize,
+    height: usize,
+) -> String {
+    let width = width.max(16);
+    let height = height.max(4);
+    let glyphs = ['*', 'o', '+', 'x', '#', '@'];
+    let all: Vec<(f64, f64)> =
+        series.iter().flat_map(|(_, pts)| pts.iter().copied()).collect();
+    if all.is_empty() {
+        return format!("{title}\n(no data)\n");
+    }
+    let (mut xmin, mut xmax) = (f64::INFINITY, f64::NEG_INFINITY);
+    let (mut ymin, mut ymax) = (f64::INFINITY, f64::NEG_INFINITY);
+    for &(x, y) in &all {
+        xmin = xmin.min(x);
+        xmax = xmax.max(x);
+        ymin = ymin.min(y);
+        ymax = ymax.max(y);
+    }
+    if (xmax - xmin).abs() < 1e-12 {
+        xmax = xmin + 1.0;
+    }
+    if (ymax - ymin).abs() < 1e-12 {
+        ymax = ymin + 1.0;
+    }
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, pts)) in series.iter().enumerate() {
+        let g = glyphs[si % glyphs.len()];
+        for &(x, y) in pts {
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            grid[height - 1 - cy][cx.min(width - 1)] = g;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    for (r, row) in grid.iter().enumerate() {
+        let yv = ymax - (ymax - ymin) * r as f64 / (height - 1) as f64;
+        out.push_str(&format!("{yv:>9.3} |"));
+        out.extend(row.iter());
+        out.push('\n');
+    }
+    out.push_str(&format!(
+        "{:>9} +{}\n{:>10}{:<.6}{}{:>.6}\n",
+        "",
+        "-".repeat(width),
+        "",
+        format_args!("{xmin:.0}"),
+        " ".repeat(width.saturating_sub(12)),
+        format_args!("{xmax:.0}"),
+    ));
+    let legend: Vec<String> = series
+        .iter()
+        .enumerate()
+        .map(|(i, (name, _))| format!("{} {name}", glyphs[i % glyphs.len()]))
+        .collect();
+    out.push_str(&format!("  legend: {}\n", legend.join("   ")));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_without_panicking() {
+        let s1: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, (i as f64).sqrt())).collect();
+        let s2: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, 7.0 - (i as f64) * 0.1)).collect();
+        let chart = line_chart("test", &[("sqrt", s1), ("line", s2)], 60, 12);
+        assert!(chart.contains("legend"));
+        assert!(chart.contains('*') && chart.contains('o'));
+        assert!(chart.lines().count() >= 14);
+    }
+
+    #[test]
+    fn constant_series_ok() {
+        let s: Vec<(f64, f64)> = (0..5).map(|i| (i as f64, 1.0)).collect();
+        let chart = line_chart("const", &[("c", s)], 20, 5);
+        assert!(chart.contains('*'));
+    }
+
+    #[test]
+    fn empty_series_ok() {
+        assert!(line_chart("e", &[], 20, 5).contains("no data"));
+    }
+}

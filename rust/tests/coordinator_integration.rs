@@ -1,0 +1,140 @@
+//! Integration: the full coordinator stack over real artifacts —
+//! trainer + norm cache + eval metrics + checkpointing + the LoRA and
+//! LST tuning families.  Skips gracefully when artifacts/ is missing.
+
+use wtacrs::coordinator::{checkpoint, run_glue, ExperimentOptions, TrainOptions, Trainer};
+use wtacrs::data::{glue, Batcher};
+use wtacrs::metrics::MetricKind;
+use wtacrs::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return None;
+    }
+    Some(Engine::new("artifacts").expect("engine"))
+}
+
+fn opts(steps: usize) -> ExperimentOptions {
+    ExperimentOptions {
+        train: TrainOptions { lr: 1e-3, seed: 0, max_steps: steps, eval_every: 0, patience: 0 },
+        train_size: 256,
+        val_size: 64,
+        data_seed: 5,
+    }
+}
+
+#[test]
+fn glue_run_learns_above_chance() {
+    let Some(eng) = engine() else { return };
+    let r = run_glue(&eng, "sst2", "tiny", "full-wtacrs30", &opts(80)).unwrap();
+    assert!(r.score > 0.55, "sst2 acc {} not above chance", r.score);
+    assert_eq!(r.metric_name, "acc");
+    assert!(r.report.norm_cache_coverage > 0.9);
+    assert!(r.report.losses.first().unwrap() > r.report.losses.last().unwrap());
+}
+
+#[test]
+fn lora_and_lst_families_run() {
+    let Some(eng) = engine() else { return };
+    for method in ["lora", "lst", "lora-wtacrs30"] {
+        let r = run_glue(&eng, "rte", "tiny", method, &opts(40)).unwrap();
+        assert!(
+            r.report.losses.iter().all(|l| l.is_finite()),
+            "{method} produced non-finite loss"
+        );
+    }
+}
+
+#[test]
+fn regression_task_reports_correlation() {
+    let Some(eng) = engine() else { return };
+    let r = run_glue(&eng, "stsb", "tiny", "full-wtacrs30", &opts(120)).unwrap();
+    assert_eq!(r.metric_name, "pearson");
+    assert!(r.score > 0.1, "stsb pearson {} shows no learning", r.score);
+}
+
+#[test]
+fn mnli_three_class_path() {
+    let Some(eng) = engine() else { return };
+    let r = run_glue(&eng, "mnli", "tiny", "full-wtacrs30", &opts(60)).unwrap();
+    assert!(r.score > 0.34, "mnli acc {} below chance", r.score);
+}
+
+#[test]
+fn exact_and_det_families_run() {
+    // Regression test for the keep_unused lowering bug: graphs that
+    // ignore znorms/seed must still accept the full positional input set.
+    let Some(eng) = engine() else { return };
+    for method in ["full", "full-det10", "full-crs10"] {
+        let r = run_glue(&eng, "rte", "tiny", method, &opts(20)).unwrap();
+        assert!(r.report.losses.iter().all(|l| l.is_finite()), "{method}");
+    }
+}
+
+#[test]
+fn checkpoint_roundtrip_resumes_identically() {
+    let Some(eng) = engine() else { return };
+    let spec = glue::task("rte").unwrap();
+    let model = &eng.manifest.models["tiny"];
+    let ds = glue::generate(&spec, model.vocab, model.seq_len, 128, 3);
+
+    let topts =
+        TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
+    let mut t1 = Trainer::new(
+        &eng,
+        "train_tiny_full-wtacrs30_c2",
+        "eval_tiny_full_c2",
+        "init_tiny_full_c2",
+        ds.len(),
+        topts.clone(),
+    )
+    .unwrap();
+    let mut batcher = Batcher::new(&ds, t1.batch_size(), 1);
+    for _ in 0..5 {
+        let b = batcher.next_batch();
+        t1.train_step(&b).unwrap();
+    }
+    let path = std::env::temp_dir().join(format!("wtacrs-it-{}.ckpt", std::process::id()));
+    checkpoint::save(&path, t1.state()).unwrap();
+
+    // Fresh trainer restored from the checkpoint must produce the same
+    // loss on the same next batch as the original.
+    let mut t2 = Trainer::new(
+        &eng,
+        "train_tiny_full-wtacrs30_c2",
+        "eval_tiny_full_c2",
+        "init_tiny_full_c2",
+        ds.len(),
+        topts,
+    )
+    .unwrap();
+    t2.restore_state(checkpoint::load(&path).unwrap()).unwrap();
+    // share the cache so sampling distributions agree
+    t2.norm_cache = t1.norm_cache.clone();
+    let next = batcher.next_batch();
+    let l1 = t1.train_step(&next).unwrap();
+    let l2 = t2.train_step(&next).unwrap();
+    assert!((l1 - l2).abs() < 1e-6, "resume mismatch: {l1} vs {l2}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn evaluate_is_deterministic() {
+    let Some(eng) = engine() else { return };
+    let spec = glue::task("rte").unwrap();
+    let model = &eng.manifest.models["tiny"];
+    let (_, val) = glue::train_val(&spec, model.vocab, model.seq_len, 5);
+    let trainer = Trainer::new(
+        &eng,
+        "train_tiny_full-wtacrs30_c2",
+        "eval_tiny_full_c2",
+        "init_tiny_full_c2",
+        64,
+        TrainOptions::default(),
+    )
+    .unwrap();
+    let a = trainer.evaluate(&val, MetricKind::Accuracy).unwrap();
+    let b = trainer.evaluate(&val, MetricKind::Accuracy).unwrap();
+    assert_eq!(a, b);
+}

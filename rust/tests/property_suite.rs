@@ -1,0 +1,225 @@
+//! Property-based tests over the coordinator substrates, using the
+//! in-repo prop framework (DESIGN.md §7): estimator invariants
+//! (Theorems 1-2 structure), norm-cache state management, batcher
+//! coverage, tokenizer layout, metrics ranges, memsim monotonicity.
+
+use wtacrs::coordinator::NormCache;
+use wtacrs::data::glue;
+use wtacrs::data::tokenizer::{Tokenizer, CLS, PAD, SEP};
+use wtacrs::data::Batcher;
+use wtacrs::estimator::{colrow_probs, select, wtacrs_csize, Mat, Sampler};
+use wtacrs::memsim::{self, MethodMem, Scope, Workload};
+use wtacrs::metrics;
+use wtacrs::testing::prop::{check, Gen, Pair, UsizeIn, VecF64};
+use wtacrs::util::rng::Rng;
+
+/// Random probability vectors (normalized positive weights).
+struct ProbVec {
+    min_m: usize,
+    max_m: usize,
+}
+impl Gen for ProbVec {
+    type Value = Vec<f64>;
+    fn generate(&self, rng: &mut Rng) -> Vec<f64> {
+        let m = self.min_m + rng.usize_below(self.max_m - self.min_m + 1);
+        // heavy-tailed weights so concentrated and flat cases both appear
+        let mut w: Vec<f64> =
+            (0..m).map(|_| (-rng.f64().max(1e-12).ln()).powf(rng.range_f64(0.5, 3.0))).collect();
+        let s: f64 = w.iter().sum();
+        w.iter_mut().for_each(|x| *x /= s);
+        w
+    }
+}
+
+#[test]
+fn prop_selectors_emit_valid_indices_and_scales() {
+    let gen = Pair(ProbVec { min_m: 4, max_m: 200 }, UsizeIn(0, 1 << 30));
+    check("selector validity", &gen, |(p, seed)| {
+        let mut rng = Rng::new(*seed as u64);
+        let k = (p.len() / 3).max(2);
+        for sampler in [Sampler::Crs, Sampler::WtaCrs, Sampler::Det] {
+            let (idx, sc) = select(sampler, p, k, &mut rng);
+            if idx.len() != k || sc.len() != k {
+                return false;
+            }
+            if idx.iter().any(|&i| i >= p.len()) {
+                return false;
+            }
+            if sc.iter().any(|&s| !s.is_finite() || s <= 0.0) {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_wtacrs_deterministic_slots_unscaled_and_disjoint() {
+    let gen = Pair(ProbVec { min_m: 8, max_m: 150 }, UsizeIn(0, 1 << 30));
+    check("wtacrs det-slot structure", &gen, |(p, seed)| {
+        let mut rng = Rng::new(*seed as u64);
+        let k = (p.len() / 3).max(2);
+        let (idx, sc) = select(Sampler::WtaCrs, p, k, &mut rng);
+        let mut order: Vec<usize> = (0..p.len()).collect();
+        order.sort_by(|&a, &b| p[b].partial_cmp(&p[a]).unwrap());
+        let p_desc: Vec<f64> = order.iter().map(|&i| p[i]).collect();
+        let c = wtacrs_csize(&p_desc, k);
+        if c >= k {
+            return false; // must leave >=1 stochastic slot
+        }
+        // det slots are the top-c indices with scale exactly 1
+        let top: std::collections::HashSet<_> = order[..c].iter().collect();
+        idx[..c].iter().all(|i| top.contains(i))
+            && sc[..c].iter().all(|&s| s == 1.0)
+            && idx[c..].iter().all(|i| !top.contains(i))
+    });
+}
+
+#[test]
+fn prop_csize_minimizes_ratio() {
+    let gen = ProbVec { min_m: 8, max_m: 120 };
+    check("csize is the argmin of (1-prefix)/(k-c)", &gen, |p| {
+        let mut pd = p.clone();
+        pd.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let k = (p.len() / 3).max(2);
+        let c = wtacrs_csize(&pd, k);
+        let ratio = |c: usize| {
+            let prefix: f64 = pd[..c].iter().sum();
+            (1.0 - prefix) / (k - c) as f64
+        };
+        let best = ratio(c);
+        (0..k).all(|other| best <= ratio(other) + 1e-12)
+    });
+}
+
+#[test]
+fn prop_estimator_probs_are_distribution() {
+    let gen = Pair(UsizeIn(1, 40), UsizeIn(0, 1 << 30));
+    check("colrow_probs normalizes", &gen, |(m, seed)| {
+        let mut rng = Rng::new(*seed as u64);
+        let x = Mat::randn(3, *m, &mut rng);
+        let y = Mat::randn(*m, 4, &mut rng);
+        let p = colrow_probs(&x, &y);
+        let sum: f64 = p.iter().sum();
+        (sum - 1.0).abs() < 1e-6 && p.iter().all(|&v| v >= 0.0)
+    });
+}
+
+#[test]
+fn prop_normcache_gather_reflects_last_scatter() {
+    let gen = Pair(UsizeIn(1, 6), UsizeIn(4, 64));
+    check("normcache roundtrip", &gen, |(layers, samples)| {
+        let mut cache = NormCache::new(*layers, *samples);
+        let mut rng = Rng::new((*layers * 1000 + *samples) as u64);
+        let b = (*samples / 2).max(1);
+        let idx: Vec<usize> = (0..b).map(|_| rng.usize_below(*samples)).collect();
+        let norms: Vec<f32> =
+            (0..*layers * b).map(|i| 0.5 + (i as f32) * 0.25).collect();
+        cache.scatter(&idx, &norms);
+        let got = cache.gather(&idx);
+        // every gathered value must be one of the scattered values for
+        // that (layer, sample) — with duplicates, the *last* write.
+        for l in 0..*layers {
+            for (j, &i) in idx.iter().enumerate() {
+                let last = idx.iter().rposition(|&x| x == i).unwrap();
+                if got[l * b + j] != norms[l * b + last] {
+                    return false;
+                }
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_batcher_epoch_is_permutation() {
+    let gen = Pair(UsizeIn(10, 120), UsizeIn(1, 40));
+    check("batcher covers epoch", &gen, |(n, b)| {
+        let spec = glue::task("sst2").unwrap();
+        let ds = glue::generate(&spec, 512, 32, *n, 3);
+        let mut batcher = Batcher::new(&ds, *b, 9);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..batcher.batches_per_epoch() {
+            let batch = batcher.next_batch();
+            if batch.indices.len() != *b || batch.tokens.len() != b * 32 {
+                return false;
+            }
+            seen.extend(batch.indices);
+        }
+        seen.len() == *n
+    });
+}
+
+#[test]
+fn prop_tokenizer_pair_layout() {
+    let gen = Pair(Pair(UsizeIn(0, 30), UsizeIn(0, 30)), UsizeIn(12, 64));
+    check("pair encoding invariants", &gen, |((la, lb), seq)| {
+        let t = Tokenizer::new(512);
+        let a: Vec<i32> = (0..*la).map(|i| t.word_id(&format!("a{i}"))).collect();
+        let b: Vec<i32> = (0..*lb).map(|i| t.word_id(&format!("b{i}"))).collect();
+        let e = t.encode_pair(&a, &b, *seq);
+        e.len() == *seq
+            && e[0] == CLS
+            && e.iter().filter(|&&x| x == SEP).count() == 2
+            && !e.iter().any(|&x| x < 0 || x as usize >= 512)
+            // padding only after the second SEP
+            && {
+                let last_sep = e.iter().rposition(|&x| x == SEP).unwrap();
+                e[last_sep + 1..].iter().all(|&x| x == PAD)
+            }
+    });
+}
+
+#[test]
+fn prop_metrics_in_range() {
+    let gen = Pair(VecF64 { min_len: 2, max_len: 60, lo: 0.0, hi: 1.0 }, UsizeIn(0, 1 << 30));
+    check("metric ranges", &gen, |(vals, seed)| {
+        let mut rng = Rng::new(*seed as u64);
+        let pred: Vec<usize> = vals.iter().map(|&v| (v > 0.5) as usize).collect();
+        let gold: Vec<usize> = (0..vals.len()).map(|_| rng.usize_below(2)).collect();
+        let acc = metrics::accuracy(&pred, &gold);
+        let f1 = metrics::f1(&pred, &gold);
+        let mcc = metrics::matthews(&pred, &gold);
+        (0.0..=1.0).contains(&acc) && (0.0..=1.0).contains(&f1) && (-1.0..=1.0).contains(&mcc)
+    });
+}
+
+#[test]
+fn prop_memsim_budget_monotone() {
+    let gen = Pair(UsizeIn(1, 64), UsizeIn(0, 2));
+    check("smaller budget never raises peak", &gen, |(batch, which)| {
+        let model = ["t5-base", "t5-large", "bert-large"][*which];
+        let dims = memsim::Dims::paper(model).unwrap();
+        let w = Workload { batch: *batch, seq: 128, bytes: 4 };
+        let p10 = memsim::peak_bytes(&dims, &MethodMem::wtacrs(0.1), &w, Scope::Paper);
+        let p30 = memsim::peak_bytes(&dims, &MethodMem::wtacrs(0.3), &w, Scope::Paper);
+        let p100 = memsim::peak_bytes(&dims, &MethodMem::full(), &w, Scope::Paper);
+        p10 <= p30 && p30 <= p100
+    });
+}
+
+#[test]
+fn prop_estimator_unbiased_small() {
+    // Cheap statistical check over random instances: the Monte-Carlo mean
+    // over 600 trials must land within a loose band of the exact product.
+    let gen = UsizeIn(0, 1000);
+    let cfg = wtacrs::testing::prop::PropConfig { cases: 5, seed: 7, max_shrink_steps: 0 };
+    wtacrs::testing::prop::check_cfg("estimator unbiased", &gen, |seed| {
+        let mut rng = Rng::new(*seed as u64 + 99);
+        let x = Mat::randn(3, 48, &mut rng);
+        let y = Mat::randn(48, 3, &mut rng);
+        let exact = x.matmul(&y);
+        let mut acc = Mat::zeros(3, 3);
+        for _ in 0..600 {
+            acc.add_assign(&wtacrs::estimator::estimate_matmul(
+                Sampler::WtaCrs,
+                &x,
+                &y,
+                16,
+                &mut rng,
+            ));
+        }
+        let mean = acc.scale(1.0 / 600.0);
+        mean.sub(&exact).frob_norm() / exact.frob_norm() < 0.25
+    }, &cfg);
+}
