@@ -7,11 +7,11 @@
 //!   cargo run --release --example ablation -- \
 //!       [--task sst2] [--steps 400] [--eval-every 50]
 
-use anyhow::Result;
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
-use wtacrs::runtime::Engine;
+use wtacrs::runtime::NativeBackend;
 use wtacrs::util::bench::Table;
 use wtacrs::util::cli::Cli;
+use wtacrs::util::error::Result;
 
 fn main() -> Result<()> {
     wtacrs::util::logging::init();
@@ -29,7 +29,7 @@ fn main() -> Result<()> {
         return Ok(());
     }
 
-    let engine = Engine::from_default_dir()?;
+    let backend = NativeBackend::new();
     let opts = ExperimentOptions {
         train: TrainOptions {
             lr: p.get_f64("lr")? as f32,
@@ -51,7 +51,7 @@ fn main() -> Result<()> {
     let mut curves = vec![];
     for (method, desc) in methods {
         println!("running {method} — {desc}");
-        let r = run_glue(&engine, p.get("task"), p.get("size"), method, &opts)?;
+        let r = run_glue(&backend, p.get("task"), p.get("size"), method, &opts)?;
         curves.push((method, r));
     }
 

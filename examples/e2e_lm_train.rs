@@ -11,8 +11,8 @@
 //! few hundred steps; lm_100m (~110M params) is compiled too and runs
 //! with --size lm_100m --steps 20 on this CPU host.
 
-use anyhow::Result;
 use wtacrs::data::Corpus;
+use wtacrs::util::error::Result;
 use wtacrs::runtime::{Engine, HostTensor};
 use wtacrs::util::cli::Cli;
 
@@ -39,7 +39,7 @@ fn main() -> Result<()> {
         .manifest
         .models
         .get(size)
-        .ok_or_else(|| anyhow::anyhow!("unknown model {size:?}"))?
+        .ok_or_else(|| wtacrs::anyhow!("unknown model {size:?}"))?
         .clone();
     let corpus = Corpus::new(model.vocab, p.get_u64("seed")?);
     let steps = p.get_usize("steps")?;
@@ -95,7 +95,7 @@ fn main() -> Result<()> {
                 HostTensor::i32(vec![b, s], corpus.batch(b, s, step as u64));
             let mut outs = train.run(&state)?;
             let loss = outs[3 * nt + 1].scalar_f32_value()?;
-            wtacrs::coordinator::trainer::advance_state(
+            wtacrs::runtime::pjrt::advance_state(
                 &mut state, &mut outs, nt, nf, i_step, i_znorms,
             );
             if step == 0 {
@@ -107,7 +107,7 @@ fn main() -> Result<()> {
                 let tps = ((step + 1) * b * s) as f64 / t0.elapsed().as_secs_f64();
                 println!("{}\t{loss:.4}\t{tps:.0}", step + 1);
             }
-            anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+            wtacrs::ensure!(loss.is_finite(), "loss diverged at step {step}");
         }
         println!(
             "method {method}: loss {first:.3} -> {last:.3} over {steps} steps ({:.1}s)",

@@ -6,11 +6,11 @@
 //!       [--size tiny] [--steps 200] [--tasks rte,sst2] \
 //!       [--methods full,full-wtacrs30] [--out results/glue.jsonl]
 
-use anyhow::Result;
 use wtacrs::coordinator::{self, ExperimentOptions, TrainOptions};
-use wtacrs::runtime::Engine;
+use wtacrs::runtime::NativeBackend;
 use wtacrs::util::bench::Table;
 use wtacrs::util::cli::Cli;
+use wtacrs::util::error::Result;
 
 fn main() -> Result<()> {
     wtacrs::util::logging::init();
@@ -44,7 +44,7 @@ fn main() -> Result<()> {
         p.get("methods").split(',').collect()
     };
 
-    let engine = Engine::from_default_dir()?;
+    let backend = NativeBackend::new();
     let opts = ExperimentOptions {
         train: TrainOptions {
             lr: p.get_f64("lr")? as f32,
@@ -66,7 +66,7 @@ fn main() -> Result<()> {
         let mut cells = vec![method.to_string()];
         let mut scores = vec![];
         for task in &tasks {
-            let r = coordinator::run_glue(&engine, task, p.get("size"), method, &opts)?;
+            let r = coordinator::run_glue(&backend, task, p.get("size"), method, &opts)?;
             cells.push(format!("{:.1}", 100.0 * r.score));
             scores.push(r.score);
             all_results.push(r);

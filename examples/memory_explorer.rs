@@ -8,7 +8,8 @@
 //! Run with:
 //!   cargo run --release --example memory_explorer -- [--model t5-3b]
 
-use anyhow::{bail, Result};
+use wtacrs::bail;
+use wtacrs::util::error::Result;
 use wtacrs::memsim::{self, tables, MethodMem, Scope, Workload};
 use wtacrs::util::bench::Table;
 use wtacrs::util::cli::Cli;

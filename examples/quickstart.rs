@@ -1,22 +1,23 @@
 //! Quickstart: the smallest useful WTA-CRS workflow.
 //!
-//! Loads the AOT artifacts, fine-tunes a tiny transformer on the
-//! synthetic RTE task with WTA-CRS@0.3 (the paper's headline budget),
-//! evaluates, and prints the memory story the method buys you.
+//! Fine-tunes the tiny native model on the synthetic RTE task with
+//! WTA-CRS@0.3 (the paper's headline budget), evaluates, and prints the
+//! memory story the method buys you.  Runs fully offline — no
+//! artifacts, no XLA.
 //!
 //! Run with:  cargo run --release --example quickstart
 
-use anyhow::Result;
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
 use wtacrs::memsim::{self, Scope, Workload};
-use wtacrs::runtime::Engine;
+use wtacrs::runtime::{Backend, NativeBackend};
+use wtacrs::util::error::Result;
 
 fn main() -> Result<()> {
     wtacrs::util::logging::init();
 
-    // 1. Engine: PJRT CPU client + the artifact manifest.
-    let engine = Engine::from_default_dir()?;
-    println!("platform: {}", engine.platform_name());
+    // 1. Backend: the pure-Rust native kernels (no artifacts needed).
+    let backend = NativeBackend::new();
+    println!("backend: {}", backend.name());
 
     // 2. Fine-tune: tiny encoder, synthetic RTE, WTA-CRS at k = 0.3|D|.
     let opts = ExperimentOptions {
@@ -29,7 +30,7 @@ fn main() -> Result<()> {
         },
         ..Default::default()
     };
-    let result = run_glue(&engine, "rte", "tiny", "full-wtacrs30", &opts)?;
+    let result = run_glue(&backend, "rte", "tiny", "full-wtacrs30", &opts)?;
     println!(
         "rte acc = {:.3} after {} steps ({:.1} sentences/sec)",
         result.score, result.report.steps, result.report.throughput

@@ -1,8 +1,23 @@
 //! Shared helpers for the paper-reproduction benches (custom harness).
+#![allow(dead_code)] // each bench target compiles its own copy
 
 use std::path::Path;
 
+use wtacrs::runtime::{Backend, NativeBackend};
 use wtacrs::util::json::{self, Json};
+
+/// Execution backend for the benches: the pure-Rust native backend by
+/// default; with the `pjrt` feature, `WTACRS_BENCH_BACKEND=pjrt` swaps
+/// in the artifact engine.
+pub fn backend() -> Box<dyn Backend> {
+    #[cfg(feature = "pjrt")]
+    if std::env::var("WTACRS_BENCH_BACKEND").as_deref() == Ok("pjrt") {
+        return Box::new(
+            wtacrs::runtime::PjrtBackend::from_default_dir().expect("pjrt backend"),
+        );
+    }
+    Box::new(NativeBackend::new())
+}
 
 /// Workload scaling: WTACRS_BENCH_MODE = full | quick (default) | smoke.
 /// `full` runs the paper-sized grids; `smoke` is a single-core-friendly

@@ -8,22 +8,22 @@ mod common;
 use wtacrs::coordinator::{TrainOptions, Trainer};
 use wtacrs::data::{glue, Batcher};
 use wtacrs::estimator::analysis::top_frac_mass;
-use wtacrs::runtime::Engine;
+use wtacrs::runtime::Backend;
 use wtacrs::util::bench::Table;
 use wtacrs::util::json::{self, Json};
 
 fn main() {
     common::banner("fig12_concentration", "Fig 12 (top-10% mass vs iterations)");
-    let engine = Engine::from_default_dir().expect("engine");
+    let backend = common::backend();
     let spec = glue::task("rte").unwrap();
-    let model = &engine.manifest.models["tiny"];
-    let (train_ds, _val) = glue::train_val(&spec, model.vocab, model.seq_len, 17);
+    let dims = backend.model_dims("tiny").expect("model dims");
+    let (train_ds, _val) = glue::train_val(&spec, dims.vocab, dims.seq_len, 17);
 
     let mut trainer = Trainer::new(
-        &engine,
-        "train_tiny_full-wtacrs30_c2",
-        "eval_tiny_full_c2",
-        "init_tiny_full_c2",
+        backend.as_ref(),
+        "tiny",
+        "full-wtacrs30",
+        spec.n_out,
         train_ds.len(),
         TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 },
     )
@@ -32,7 +32,7 @@ fn main() {
     let steps = if common::full_mode() { 320 } else { 120 };
     let snap_every = steps / 8;
     let mut batcher = Batcher::new(&train_ds, trainer.batch_size(), 0);
-    let layers = [(0usize, "query"), (1, "key"), (2, "value")];
+    let layers = [(0usize, "hidden1"), (1, "hidden2"), (2, "head")];
     let mut series: Vec<(usize, Vec<f64>)> = vec![];
     for step in 0..steps {
         let b = batcher.next_batch();
@@ -52,7 +52,7 @@ fn main() {
         }
     }
 
-    let mut t = Table::new(&["iteration", "query", "key", "value"]);
+    let mut t = Table::new(&["iteration", "hidden1", "hidden2", "head"]);
     let mut out = vec![];
     for (step, masses) in &series {
         t.row(&[
@@ -63,9 +63,9 @@ fn main() {
         ]);
         out.push(json::obj(vec![
             ("step", json::num(*step as f64)),
-            ("query", json::num(masses[0])),
-            ("key", json::num(masses[1])),
-            ("value", json::num(masses[2])),
+            ("hidden1", json::num(masses[0])),
+            ("hidden2", json::num(masses[1])),
+            ("head", json::num(masses[2])),
         ]));
     }
     t.print();

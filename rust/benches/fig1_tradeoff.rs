@@ -7,13 +7,12 @@ mod common;
 
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
 use wtacrs::memsim::{self, MethodMem, Scope, Workload};
-use wtacrs::runtime::Engine;
 use wtacrs::util::bench::Table;
 use wtacrs::util::json::{self, Json};
 
 fn main() {
     common::banner("fig1_tradeoff", "Fig 1 (accuracy vs memory frontier)");
-    let engine = Engine::from_default_dir().expect("engine");
+    let backend = common::backend();
     let tasks = common::glue_tasks();
     let opts_for = |method: &str| ExperimentOptions {
         train: TrainOptions {
@@ -44,7 +43,7 @@ fn main() {
     for (method, mm) in &points {
         let mut scores = vec![];
         for task in &tasks {
-            let r = run_glue(&engine, task, "tiny", method, &opts_for(method)).expect("run");
+            let r = run_glue(backend.as_ref(), task, "tiny", method, &opts_for(method)).expect("run");
             scores.push(r.score);
         }
         let avg = 100.0 * scores.iter().sum::<f64>() / scores.len() as f64;

@@ -12,24 +12,24 @@ mod common;
 use wtacrs::coordinator::{ExperimentOptions, TrainOptions, Trainer};
 use wtacrs::data::{glue, Batcher};
 use wtacrs::estimator::analysis::{condition_fraction, mass_curve, top_frac_mass};
-use wtacrs::runtime::Engine;
+use wtacrs::runtime::Backend;
 use wtacrs::util::bench::Table;
 use wtacrs::util::json::{self, Json};
 
 fn main() {
     common::banner("fig3_probmass", "Fig 3/10/11 (Thm-2 condition during tuning)");
-    let engine = Engine::from_default_dir().expect("engine");
+    let backend = common::backend();
     let opts = ExperimentOptions::default();
     let _ = &opts;
     let spec = glue::task("rte").unwrap();
-    let model = &engine.manifest.models["tiny"];
-    let (train_ds, _val) = glue::train_val(&spec, model.vocab, model.seq_len, 17);
+    let dims = backend.model_dims("tiny").expect("model dims");
+    let (train_ds, _val) = glue::train_val(&spec, dims.vocab, dims.seq_len, 17);
 
     let mut trainer = Trainer::new(
-        &engine,
-        "train_tiny_full-wtacrs30_c2",
-        "eval_tiny_full_c2",
-        "init_tiny_full_c2",
+        backend.as_ref(),
+        "tiny",
+        "full-wtacrs30",
+        spec.n_out,
         train_ds.len(),
         TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 },
     )
@@ -44,9 +44,9 @@ fn main() {
     }
     assert!(trainer.norm_cache.coverage() > 0.9, "cache barely populated");
 
-    // Q/K/V of block 0 are approx-layers 0,1,2 (definition order).
+    // Approx-layers 0,1,2: the two hidden weight-grad GEMMs + the head.
     let mut out = vec![];
-    for (li, name) in [(0usize, "query"), (1, "key"), (2, "value")] {
+    for (li, name) in [(0usize, "hidden1"), (1, "hidden2"), (2, "head")] {
         let norms = trainer.norm_cache.layer_norms(li);
         let total: f64 = norms.iter().map(|&x| x as f64).sum();
         let probs: Vec<f64> = norms.iter().map(|&x| x as f64 / total).collect();

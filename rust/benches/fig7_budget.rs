@@ -4,13 +4,12 @@
 mod common;
 
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
-use wtacrs::runtime::Engine;
 use wtacrs::util::bench::Table;
 use wtacrs::util::json::{self, Json};
 
 fn main() {
     common::banner("fig7_budget", "Fig 7 (metric vs budget k/|D|)");
-    let engine = Engine::from_default_dir().expect("engine");
+    let backend = common::backend();
     let tasks = common::glue_tasks();
     let budgets = [("1.0 (Full)", "full"), ("0.3", "full-wtacrs30"), ("0.1", "full-wtacrs10")];
     let opts = ExperimentOptions {
@@ -32,7 +31,7 @@ fn main() {
         let mut row = vec![label.to_string()];
         let mut scores = vec![];
         for task in &tasks {
-            let r = run_glue(&engine, task, "tiny", method, &opts).expect("run");
+            let r = run_glue(backend.as_ref(), task, "tiny", method, &opts).expect("run");
             row.push(format!("{:.1}", 100.0 * r.score));
             scores.push(r.score);
             out.push(json::obj(vec![

@@ -5,13 +5,12 @@
 mod common;
 
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
-use wtacrs::runtime::Engine;
 use wtacrs::util::bench::Table;
 use wtacrs::util::json::{self, Json};
 
 fn main() {
     common::banner("fig8_ablation", "Fig 8 (estimator ablation @ 0.1)");
-    let engine = Engine::from_default_dir().expect("engine");
+    let backend = common::backend();
     let tasks: Vec<&str> = if common::full_mode() {
         vec!["sst2", "mnli", "qqp"] // the paper's Fig-8 tasks
     } else {
@@ -35,7 +34,7 @@ fn main() {
         println!("\n== {task} (tiny, {steps} steps, eval every {eval_every}) ==");
         let mut rows = vec![];
         for method in methods {
-            let r = run_glue(&engine, task, "tiny", method, &opts).expect("run");
+            let r = run_glue(backend.as_ref(), task, "tiny", method, &opts).expect("run");
             out.push(json::obj(vec![
                 ("task", json::s(task)),
                 ("method", json::s(method)),

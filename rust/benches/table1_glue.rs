@@ -8,13 +8,12 @@
 mod common;
 
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
-use wtacrs::runtime::Engine;
 use wtacrs::util::bench::Table;
 use wtacrs::util::json::{self, Json};
 
 fn main() {
     common::banner("table1_glue", "Table 1 (GLUE accuracy by method)");
-    let engine = Engine::from_default_dir().expect("engine (run `make artifacts`)");
+    let backend = common::backend();
     let tasks = common::glue_tasks();
     let methods = ["full", "lora", "lst", "full-wtacrs30", "lora-wtacrs30"];
     let sizes: &[&str] = if common::full_mode() { &["tiny", "small"] } else { &["tiny"] };
@@ -41,7 +40,7 @@ fn main() {
             let mut row = vec![method.to_string()];
             let mut scores = vec![];
             for task in &tasks {
-                match run_glue(&engine, task, size, method, &opts_for(method)) {
+                match run_glue(backend.as_ref(), task, size, method, &opts_for(method)) {
                     Ok(r) => {
                         row.push(format!("{:.1}", 100.0 * r.score));
                         scores.push(r.score);

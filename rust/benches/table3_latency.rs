@@ -1,134 +1,78 @@
-//! Table 3: forward / backward / fwd+bwd latency of an isolated T5
-//! attention module, FF module, and transformer block (T5-Large dims,
-//! B=8, S=128), Full vs WTA-CRS — the apple-to-apple op-level overhead
-//! measurement, plus the L1 kernel microbenches (Pallas-interpret vs
-//! XLA-fused reference).
+//! Table 3: per-step component latency (ms) of the train/eval step
+//! across estimator budgets, on the execution backend.
+//!
+//! The paper's Table 3 decomposes forward vs backward: WTA-CRS pays a
+//! sampling overhead in forward (building the column-row distribution
+//! and sub-sampling) and wins it back in backward (smaller GEMM).  Here
+//! we time the native backend's forward-only pass and the full
+//! forward+backward+update step, reporting the difference as the
+//! backward+update share.
 
 mod common;
 
-use wtacrs::runtime::{Engine, HostTensor};
+use wtacrs::data::Corpus;
+use wtacrs::runtime::{Backend, SessionConfig, TrainSession};
 use wtacrs::util::bench::{bench, BenchConfig, Table};
 use wtacrs::util::json::{self, Json};
-use wtacrs::util::rng::Rng;
-
-fn rand_inputs(spec: &wtacrs::runtime::ArtifactSpec, rng: &mut Rng) -> Vec<HostTensor> {
-    spec.inputs
-        .iter()
-        .map(|t| match t.dtype {
-            wtacrs::runtime::DType::F32 => {
-                let mut v = vec![0f32; t.numel()];
-                // znorm-ish inputs must be positive; plain normals are fine
-                // elsewhere, abs() is harmless for timing.
-                v.iter_mut().for_each(|x| *x = rng.normal().abs() as f32 + 0.01);
-                HostTensor::f32(t.shape.clone(), v)
-            }
-            wtacrs::runtime::DType::I32 => {
-                let v = (0..t.numel())
-                    .map(|_| rng.below(64) as i32)
-                    .collect();
-                HostTensor::i32(t.shape.clone(), v)
-            }
-        })
-        .collect()
-}
 
 fn main() {
     common::banner("table3_latency", "Table 3 (component latency, ms)");
-    let engine = Engine::from_default_dir().expect("engine (run `make artifacts`)");
+    let backend = common::backend();
     let cfg = if common::full_mode() { BenchConfig::default() } else { BenchConfig::quick() };
-    let mut rng = Rng::new(0);
     let mut out = vec![];
 
-    println!("\ncomponents (T5-Large-ish dims: d=1024 ff=4096 h=16, B=8 S=128):");
-    let mut t = Table::new(&["component", "method", "fwd ms", "F-B ms", "bwd ms (F-B − fwd)"]);
-    let comps: &[&str] = if common::smoke_mode() { &["ff"] } else { &["att", "ff", "block"] };
-    for &comp in comps {
-        for method in ["full", "full-wtacrs30"] {
-            let mut ms = vec![];
-            for tag in ["fwd", "fb"] {
-                let id = format!("comp_{comp}_{method}_{tag}");
-                let exe = engine.load(&id).expect("load component artifact");
-                let inputs = rand_inputs(&exe.spec, &mut rng);
-                let r = bench(&id, &cfg, || {
-                    exe.run(&inputs).expect("component run");
-                });
-                ms.push(r.mean_ms());
-                engine.evict(&id);
-            }
-            let bwd = (ms[1] - ms[0]).max(0.0);
-            t.row(&[
-                comp.into(),
-                method.into(),
-                format!("{:.1}", ms[0]),
-                format!("{:.1}", ms[1]),
-                format!("{bwd:.1}"),
-            ]);
-            out.push(json::obj(vec![
-                ("component", json::s(comp)),
-                ("method", json::s(method)),
-                ("fwd_ms", json::num(ms[0])),
-                ("fb_ms", json::num(ms[1])),
-            ]));
-        }
-    }
-    t.print();
-    println!(
-        "\npaper shape: WTA-CRS forward pays the sampling overhead (slower \
-         fwd), backward is faster (smaller GEMM); total F-B ~10-40% over Full \
-         at the same batch — the end-to-end win comes from bigger batches (Fig 9)."
-    );
+    let sizes: &[&str] = if common::full_mode() { &["tiny", "small"] } else { &["tiny"] };
+    let methods: &[&str] = if common::smoke_mode() {
+        &["full", "full-wtacrs30"]
+    } else {
+        &["full", "full-wtacrs30", "full-wtacrs10", "full-crs10", "full-det10"]
+    };
 
-    println!("\nL1 kernels (m=4096, d=1024, k=1280):");
-    let mut t = Table::new(&["kernel", "backend", "mean ms", "p99 ms"]);
-    for kname in ["row_norms", "gather_scale", "sampled_matmul", "gather_scale_matmul", "softmax_xent"] {
-        for backend in ["ref", "pallas"] {
-            let id = format!("kernel_{kname}_{backend}");
-            let exe = engine.load(&id).expect("load kernel artifact");
-            let inputs = rand_inputs(&exe.spec, &mut rng);
-            // kernel idx inputs must be valid row indices
-            let inputs: Vec<HostTensor> = exe
-                .spec
-                .inputs
-                .iter()
-                .zip(inputs)
-                .map(|(spec, t)| {
-                    if spec.name == "idx" {
-                        let m = 4096i32;
-                        HostTensor::i32(
-                            spec.shape.clone(),
-                            (0..spec.numel()).map(|i| (i as i32 * 37) % m).collect(),
-                        )
-                    } else if spec.name == "labels" {
-                        HostTensor::i32(
-                            spec.shape.clone(),
-                            (0..spec.numel()).map(|i| (i as i32) % 1024).collect(),
-                        )
-                    } else {
-                        t
-                    }
-                })
-                .collect();
-            let r = bench(&id, &cfg, || {
-                exe.run(&inputs).expect("kernel run");
+    for &size in sizes {
+        let dims = backend.model_dims(size).expect("model dims");
+        let corpus = Corpus::new(dims.vocab, 0);
+        println!("\n== size {size} (B={}, S={}) ==", dims.batch, dims.seq_len);
+        let mut t = Table::new(&["method", "fwd ms", "step ms", "bwd+update ms"]);
+        for &method in methods {
+            let mut scfg = SessionConfig::new(size, method, 2);
+            scfg.lr = 1e-3;
+            let mut session = backend.open(&scfg).expect("session");
+            let b = session.batch_size();
+            let seq = session.seq_len();
+            let zn = vec![1.0f32; session.n_approx_layers() * b];
+            let labels: Vec<i32> = (0..b as i32).map(|i| i % 2).collect();
+            let toks = corpus.batch(b, seq, 0);
+
+            let fwd = bench(&format!("{size}_{method}_fwd"), &cfg, || {
+                session.eval_logits(&toks).expect("eval");
             });
+            let mut step_i = 1u64;
+            let step = bench(&format!("{size}_{method}_step"), &cfg, || {
+                let toks = corpus.batch(b, seq, step_i);
+                step_i += 1;
+                session.train_step(&toks, &labels, &[], &zn).expect("step");
+            });
+            let bwd = (step.mean_ms() - fwd.mean_ms()).max(0.0);
             t.row(&[
-                kname.into(),
-                backend.into(),
-                format!("{:.2}", r.mean_ms()),
-                format!("{:.2}", r.p99.as_secs_f64() * 1e3),
+                method.into(),
+                format!("{:.3}", fwd.mean_ms()),
+                format!("{:.3}", step.mean_ms()),
+                format!("{bwd:.3}"),
             ]);
             out.push(json::obj(vec![
-                ("kernel", json::s(kname)),
-                ("backend", json::s(backend)),
-                ("mean_ms", json::num(r.mean_ms())),
+                ("size", json::s(size)),
+                ("method", json::s(method)),
+                ("fwd_ms", json::num(fwd.mean_ms())),
+                ("step_ms", json::num(step.mean_ms())),
+                ("bwd_ms", json::num(bwd)),
             ]));
-            engine.evict(&id);
         }
+        t.print();
     }
-    t.print();
     println!(
-        "\n(pallas rows run interpret-mode on CPU — structure, not TPU speed; \
-         see DESIGN.md §8 for the VMEM/MXU accounting.)"
+        "\npaper shape: at equal batch the sampled step carries the \
+         distribution-building overhead in forward and a smaller GEMM in \
+         backward; the end-to-end win comes from bigger batches (Fig 9)."
     );
     common::write_json("table3_latency", &Json::Arr(out));
 }

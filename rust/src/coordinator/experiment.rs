@@ -4,10 +4,10 @@
 //! synthetic splits, runs the trainer, and returns structured results
 //! that the benches print as paper-style rows and serialize as JSON.
 
-use anyhow::{bail, Result};
-
+use crate::bail;
 use crate::data::glue::{self, TaskSpec};
-use crate::runtime::Engine;
+use crate::runtime::Backend;
+use crate::util::error::Result;
 use crate::util::json::{self, Json};
 
 use super::trainer::{TrainOptions, TrainReport, Trainer};
@@ -42,14 +42,8 @@ pub fn default_lr(method: &str) -> f32 {
     }
 }
 
-/// Artifact ids for a (size, method, n_out) GLUE config.
-pub fn artifact_ids(size: &str, method: &str, n_out: usize) -> (String, String, String) {
-    (
-        format!("train_{size}_{method}_c{n_out}"),
-        format!("eval_{size}_{}_c{n_out}", family(method)),
-        format!("init_{size}_{}_c{n_out}", family(method)),
-    )
-}
+// NOTE: the (size, method, n_out) -> artifact-id mapping lives with its
+// only consumer, `runtime::pjrt::artifact_ids` (feature `pjrt`).
 
 /// One (task, method) outcome.
 #[derive(Debug, Clone)]
@@ -108,9 +102,9 @@ impl Default for ExperimentOptions {
     }
 }
 
-/// Run one (task, size, method) fine-tuning experiment.
+/// Run one (task, size, method) fine-tuning experiment on a backend.
 pub fn run_glue(
-    engine: &Engine,
+    backend: &dyn Backend,
     task_name: &str,
     size: &str,
     method: &str,
@@ -125,25 +119,20 @@ pub fn run_glue(
     if opts.val_size > 0 {
         spec = TaskSpec { val_size: opts.val_size, ..spec };
     }
-    let (train_id, eval_id, init_id) = artifact_ids(size, method, spec.n_out);
-    let model = engine
-        .manifest
-        .models
-        .get(size)
-        .ok_or_else(|| anyhow::anyhow!("manifest has no model {size:?}"))?;
+    let dims = backend.model_dims(size)?;
     let (train_ds, val_ds) =
-        glue::train_val(&spec, model.vocab, model.seq_len, opts.data_seed);
+        glue::train_val(&spec, dims.vocab, dims.seq_len, opts.data_seed);
 
     let mut trainer = Trainer::new(
-        engine,
-        &train_id,
-        &eval_id,
-        &init_id,
+        backend,
+        size,
+        method,
+        spec.n_out,
         train_ds.len(),
         opts.train.clone(),
     )?;
     let report = trainer.run(&train_ds, &val_ds, spec.metric)?;
-    log::info!(
+    crate::log_info!(
         "{task_name}/{size}/{method}: {}={:.4} ({} steps, {:.1}s)",
         spec.metric.name(),
         report.best_metric,
@@ -186,14 +175,6 @@ mod tests {
         assert_eq!(family("lora-wtacrs30"), "lora");
         assert_eq!(family("full-det10"), "full");
         assert_eq!(family("lst"), "lst");
-    }
-
-    #[test]
-    fn artifact_id_layout() {
-        let (t, e, i) = artifact_ids("tiny", "lora-wtacrs30", 3);
-        assert_eq!(t, "train_tiny_lora-wtacrs30_c3");
-        assert_eq!(e, "eval_tiny_lora_c3");
-        assert_eq!(i, "init_tiny_lora_c3");
     }
 
     #[test]

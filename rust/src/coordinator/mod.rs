@@ -1,6 +1,8 @@
 //! L3 coordinator: the fine-tuning framework around the WTA-CRS train
 //! step — trainer loop, Algorithm-1 gradient-norm cache, checkpointing,
-//! and the GLUE experiment runner.
+//! and the GLUE experiment runner.  Everything here is written against
+//! [`crate::runtime::Backend`], so the same coordinator drives both the
+//! pure-Rust native kernels and (with the `pjrt` feature) the XLA engine.
 pub mod checkpoint;
 pub mod experiment;
 pub mod normcache;

@@ -2,13 +2,13 @@
 //!
 //! The paper reports every Table-1 cell as mean ± std over three random
 //! trials (§5.1); this module fans seeds out over the worker pool and
-//! aggregates.  Each worker owns its own `Engine` (PJRT clients are not
-//! shared across threads here), so the sweep also exercises the
+//! aggregates.  Each worker builds its own backend through the supplied
+//! factory (PJRT clients must not be shared across threads; native
+//! backends are cheap to construct), so the sweep also exercises the
 //! multi-process-style isolation a bigger deployment would use.
 
-use anyhow::Result;
-
-use crate::runtime::Engine;
+use crate::runtime::Backend;
+use crate::util::error::Result;
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Summary;
 
@@ -31,38 +31,40 @@ impl SweepCell {
     }
 }
 
-/// Run (task, size, method) across seeds; sequential fallback when the
-/// pool is size 1. `artifacts_dir` lets workers build their own engines.
-pub fn sweep_seeds(
-    artifacts_dir: &str,
+/// Run (task, size, method) across seeds; sequential fallback when no
+/// pool is given.  `make_backend` builds a fresh backend per run so
+/// workers never share execution state.
+pub fn sweep_seeds<F>(
+    make_backend: F,
     task: &str,
     size: &str,
     method: &str,
     base: &ExperimentOptions,
     seeds: &[u64],
     pool: Option<&ThreadPool>,
-) -> Result<SweepCell> {
-    let jobs: Vec<(String, String, String, ExperimentOptions, u64)> = seeds
+) -> Result<SweepCell>
+where
+    F: Fn() -> Result<Box<dyn Backend>> + Send + Sync + 'static,
+{
+    let jobs: Vec<(String, String, String, ExperimentOptions)> = seeds
         .iter()
         .map(|&s| {
             let mut o = base.clone();
             o.train.seed = s;
             o.data_seed = base.data_seed; // same data, different init/sampling
-            (task.to_string(), size.to_string(), method.to_string(), o, s)
+            (task.to_string(), size.to_string(), method.to_string(), o)
         })
         .collect();
 
-    let dir = artifacts_dir.to_string();
-    let run_one = move |(task, size, method, opts, _seed): (
+    let run_one = move |(task, size, method, opts): (
         String,
         String,
         String,
         ExperimentOptions,
-        u64,
     )|
           -> Result<f64> {
-        let engine = Engine::new(&dir)?;
-        Ok(run_glue(&engine, &task, &size, &method, &opts)?.score)
+        let backend = make_backend()?;
+        Ok(run_glue(backend.as_ref(), &task, &size, &method, &opts)?.score)
     };
 
     let scores: Vec<Result<f64>> = match pool {
@@ -87,6 +89,7 @@ pub fn sweep_seeds(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::NativeBackend;
 
     #[test]
     fn cell_display_format() {
@@ -99,5 +102,46 @@ mod tests {
             n: 3,
         };
         assert_eq!(c.display(), "70.3±1.23");
+    }
+
+    #[test]
+    fn native_sweep_aggregates_two_seeds() {
+        let mut base = ExperimentOptions::default();
+        base.train.max_steps = 5;
+        base.train.lr = 1e-3;
+        base.train_size = 64;
+        base.val_size = 32;
+        let cell = sweep_seeds(
+            || Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>),
+            "rte",
+            "tiny",
+            "full-wtacrs30",
+            &base,
+            &[0, 1],
+            None,
+        )
+        .unwrap();
+        assert_eq!(cell.n, 2);
+        assert!(cell.mean.is_finite() && cell.std.is_finite());
+    }
+
+    #[test]
+    fn native_sweep_parallel_pool() {
+        let pool = ThreadPool::new(2);
+        let mut base = ExperimentOptions::default();
+        base.train.max_steps = 3;
+        base.train_size = 64;
+        base.val_size = 32;
+        let cell = sweep_seeds(
+            || Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>),
+            "sst2",
+            "tiny",
+            "full",
+            &base,
+            &[0, 1, 2],
+            Some(&pool),
+        )
+        .unwrap();
+        assert_eq!(cell.n, 3);
     }
 }

@@ -1,16 +1,20 @@
-//! The training loop: drives an AOT train-step executable over batches,
-//! owns the optimizer/model state tensors, the gradient-norm cache, and
-//! evaluation — the L3 counterpart of a HF `Trainer`.
+//! The training loop: drives a backend [`TrainSession`] over batches,
+//! owns the Algorithm-1 gradient-norm cache, and evaluation — the L3
+//! counterpart of a HF `Trainer`.
+//!
+//! The trainer is backend-agnostic: it gathers the per-sample gradient
+//! norms for each batch, hands them to the session (which uses them as
+//! the sampling distribution for the WTA-CRS weight-gradient GEMMs),
+//! and scatters the refreshed norms the step returns.
 
-use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
 use crate::data::batcher::{Batch, Batcher};
 use crate::data::glue::Dataset;
 use crate::metrics::{self, MetricKind};
-use crate::runtime::{Engine, Executable, HostTensor};
+use crate::runtime::{Backend, HostTensor, SessionConfig, TrainSession};
+use crate::util::error::Result;
 
 use super::normcache::NormCache;
 
@@ -47,199 +51,99 @@ pub struct TrainReport {
     pub norm_cache_coverage: f64,
 }
 
-/// Advance the positional train-loop state from a step's outputs without
-/// copying tensor payloads (outputs t/m/v/step are *swapped* into the
-/// input slots — at lm_100m scale a clone here costs ~1.2GB of memcpy
-/// per step; see EXPERIMENTS.md §Perf L3).
-///
-/// Output layout contract: t(nt), m(nt), v(nt), step, loss, znorms.
-pub fn advance_state(
-    state: &mut [HostTensor],
-    outs: &mut [HostTensor],
-    nt: usize,
-    nf: usize,
-    step_slot: usize,
-    znorms_slot: usize,
-) {
-    for i in 0..nt {
-        std::mem::swap(&mut state[i], &mut outs[i]);
-        std::mem::swap(&mut state[nt + nf + i], &mut outs[nt + i]);
-        std::mem::swap(&mut state[nt + nf + nt + i], &mut outs[2 * nt + i]);
-    }
-    std::mem::swap(&mut state[step_slot], &mut outs[3 * nt]);
-    std::mem::swap(&mut state[znorms_slot], &mut outs[3 * nt + 2]);
-}
-
-/// Positional indices of the non-state train inputs.
-struct Slots {
-    nt: usize,
-    nf: usize,
-    step: usize,
-    tokens: usize,
-    labels: usize,
-    znorms: usize,
-    seed: usize,
-    lr: usize,
-}
-
-/// A live training session bound to (train, eval, init) artifacts.
+/// A live training session bound to an execution backend.
 pub struct Trainer {
-    train: Arc<Executable>,
-    eval: Arc<Executable>,
-    slots: Slots,
-    /// Full positional input vector for the train step (mutated in place).
-    state: Vec<HostTensor>,
+    session: Box<dyn TrainSession>,
     pub norm_cache: NormCache,
     opts: TrainOptions,
     step: usize,
 }
 
 impl Trainer {
-    /// Initialize from artifacts: runs the init graph to produce params.
+    /// Open a session on `backend` for (size, method, n_out) and wrap it.
     pub fn new(
-        engine: &Engine,
-        train_id: &str,
-        eval_id: &str,
-        init_id: &str,
+        backend: &dyn Backend,
+        size: &str,
+        method: &str,
+        n_out: usize,
         n_samples: usize,
         opts: TrainOptions,
     ) -> Result<Self> {
-        let train = engine.load(train_id)?;
-        let eval = engine.load(eval_id)?;
-        let init = engine.load(init_id)?;
+        let mut cfg = SessionConfig::new(size, method, n_out);
+        cfg.seed = opts.seed;
+        cfg.lr = opts.lr;
+        let session = backend.open(&cfg)?;
+        Ok(Self::from_session(session, n_samples, opts))
+    }
 
-        let spec = &train.spec;
-        let nt = spec.meta_usize("n_trainable")?;
-        let nf = spec.meta_usize("n_frozen")?;
-        let n_approx = spec.meta_usize("n_approx_layers")?;
-        let slots = Slots {
-            nt,
-            nf,
-            step: spec.input_index("step")?,
-            tokens: spec.input_index("tokens")?,
-            labels: spec.input_index("labels")?,
-            znorms: spec.input_index("znorms")?,
-            seed: spec.input_index("seed")?,
-            lr: spec.input_index("lr")?,
-        };
-
-        // init outputs: t(nt), f(nf), m(nt), v(nt), step — exactly the
-        // leading train inputs.
-        let init_out = init
-            .run(&[HostTensor::scalar_i32(opts.seed as i32)])
-            .context("running init graph")?;
-        if init_out.len() != 3 * nt + nf + 1 {
-            bail!(
-                "init graph of {init_id} returned {} outputs, expected {}",
-                init_out.len(),
-                3 * nt + nf + 1
-            );
-        }
-
-        let mut state: Vec<HostTensor> = spec
-            .inputs
-            .iter()
-            .map(|t| HostTensor::zeros(&t.shape, t.dtype))
-            .collect();
-        for (i, t) in init_out.into_iter().enumerate() {
-            state[i] = t; // t, f, m, v, step line up with input order
-        }
-        state[slots.lr] = HostTensor::scalar_f32(opts.lr);
-        state[slots.seed] = HostTensor::scalar_i32(opts.seed as i32);
-        state[slots.znorms] =
-            HostTensor::ones_f32(&spec.inputs[slots.znorms].shape);
-
-        Ok(Trainer {
-            train,
-            eval,
-            slots,
-            state,
+    /// Wrap an already-open session (e.g. one opened with a non-default
+    /// `SessionConfig`, such as a batch override).
+    pub fn from_session(
+        session: Box<dyn TrainSession>,
+        n_samples: usize,
+        opts: TrainOptions,
+    ) -> Self {
+        let n_approx = session.n_approx_layers();
+        Trainer {
+            session,
             norm_cache: NormCache::new(n_approx, n_samples),
             opts,
             step: 0,
-        })
+        }
     }
 
     pub fn step_count(&self) -> usize {
         self.step
     }
 
+    pub fn batch_size(&self) -> usize {
+        self.session.batch_size()
+    }
+
+    pub fn seq_len(&self) -> usize {
+        self.session.seq_len()
+    }
+
     /// Apply one batch; returns the training loss.
     pub fn train_step(&mut self, batch: &Batch) -> Result<f32> {
-        let s = &self.slots;
-        self.state[s.tokens] =
-            HostTensor::i32(vec![batch.batch, batch.seq], batch.tokens.clone());
-        self.state[s.labels] = self.labels_tensor(batch)?;
         // Gather the cached gradient norms for this batch (Algorithm 1).
-        let zn_shape = self.train.spec.inputs[s.znorms].shape.clone();
-        self.state[s.znorms] =
-            HostTensor::f32(zn_shape, self.norm_cache.gather(&batch.indices));
-
-        let mut outs = self.train.run(&self.state)?;
-        // outputs: t(nt), m(nt), v(nt), step, loss, znorms
-        let nt = s.nt;
-        let nf = s.nf;
-        let loss = outs[3 * nt + 1].scalar_f32_value()?;
-        let (step_slot, znorms_slot) = (s.step, s.znorms);
-        advance_state(&mut self.state, &mut outs, nt, nf, step_slot, znorms_slot);
-        // znorms now lives in state (swapped in); scatter from there.
-        let new_norms = self.state[znorms_slot].as_f32()?.to_vec();
-        self.norm_cache.scatter(&batch.indices, &new_norms);
+        let znorms = self.norm_cache.gather(&batch.indices);
+        let (loss, refreshed) = self.session.train_step(
+            &batch.tokens,
+            &batch.labels_i32,
+            &batch.labels_f32,
+            &znorms,
+        )?;
+        self.norm_cache.scatter(&batch.indices, &refreshed);
         self.step += 1;
         Ok(loss)
     }
 
-    fn labels_tensor(&self, batch: &Batch) -> Result<HostTensor> {
-        let spec = &self.train.spec.inputs[self.slots.labels];
-        match spec.dtype {
-            crate::runtime::DType::I32 => {
-                if batch.labels_i32.len() != spec.numel() {
-                    bail!(
-                        "batch has {} class labels, artifact wants {}",
-                        batch.labels_i32.len(),
-                        spec.numel()
-                    );
-                }
-                Ok(HostTensor::i32(spec.shape.clone(), batch.labels_i32.clone()))
-            }
-            crate::runtime::DType::F32 => {
-                if spec.numel() == batch.labels_f32.len() {
-                    Ok(HostTensor::f32(spec.shape.clone(), batch.labels_f32.clone()))
-                } else {
-                    // LM artifacts carry a placeholder label slot.
-                    Ok(HostTensor::zeros(&spec.shape, spec.dtype))
-                }
-            }
-        }
-    }
-
-    /// Run the eval graph over a dataset; returns the task metric.
-    pub fn evaluate(&self, ds: &Dataset, metric: MetricKind) -> Result<f64> {
-        let s = &self.slots;
-        let n_in = self.eval.spec.inputs.len();
-        // eval inputs: t(nt), f(nf), tokens — reuse the live state.
-        let mut inputs: Vec<HostTensor> = self.state[..s.nt + s.nf].to_vec();
-        inputs.push(HostTensor::zeros(
-            &self.eval.spec.inputs[n_in - 1].shape,
-            crate::runtime::DType::I32,
-        ));
+    /// Run forward-only evaluation over a dataset; returns the metric.
+    pub fn evaluate(&mut self, ds: &Dataset, metric: MetricKind) -> Result<f64> {
+        let n_out = self.session.n_out();
+        let batch_size = self.session.batch_size();
         let mut preds: Vec<usize> = vec![];
         let mut golds: Vec<usize> = vec![];
         let mut pred_scores: Vec<f64> = vec![];
         let mut gold_scores: Vec<f64> = vec![];
-        for (batch, valid) in Batcher::eval_batches(ds, self.eval.spec.batch) {
-            inputs[n_in - 1] =
-                HostTensor::i32(vec![batch.batch, batch.seq], batch.tokens.clone());
-            let outs = self.eval.run(&inputs)?;
-            let logits = outs[0].as_f32()?;
-            let n_out = self.eval.spec.outputs[0].shape[1];
+        for (batch, valid) in Batcher::eval_batches(ds, batch_size) {
+            let logits = self.session.eval_logits(&batch.tokens)?;
+            if logits.len() != batch.batch * n_out {
+                bail!(
+                    "eval logits: expected {}x{} values, got {}",
+                    batch.batch,
+                    n_out,
+                    logits.len()
+                );
+            }
             if n_out == 1 {
                 for r in 0..valid {
                     pred_scores.push(logits[r] as f64);
                     gold_scores.push(batch.labels_f32[r] as f64);
                 }
             } else {
-                let pred = metrics::argmax_rows(logits, batch.batch, n_out);
+                let pred = metrics::argmax_rows(&logits, batch.batch, n_out);
                 for r in 0..valid {
                     preds.push(pred[r]);
                     golds.push(batch.labels_i32[r] as usize);
@@ -256,7 +160,7 @@ impl Trainer {
         val_ds: &Dataset,
         metric: MetricKind,
     ) -> Result<TrainReport> {
-        let mut batcher = Batcher::new(train_ds, self.train.spec.batch, self.opts.seed);
+        let mut batcher = Batcher::new(train_ds, self.batch_size(), self.opts.seed);
         let mut losses = Vec::with_capacity(self.opts.max_steps);
         let mut evals = vec![];
         let mut best = f64::NEG_INFINITY;
@@ -284,7 +188,11 @@ impl Trainer {
                 } else {
                     stale += 1;
                     if self.opts.patience > 0 && stale >= self.opts.patience {
-                        log::info!("early stop at step {} (best {:.4})", step + 1, best);
+                        crate::log_info!(
+                            "early stop at step {} (best {:.4})",
+                            step + 1,
+                            best
+                        );
                         break;
                     }
                 }
@@ -302,25 +210,17 @@ impl Trainer {
             final_metric,
             steps,
             train_seconds: t0.elapsed().as_secs_f64(),
-            throughput: steps as f64 * self.train.spec.batch as f64 / train_time.max(1e-9),
+            throughput: steps as f64 * self.batch_size() as f64 / train_time.max(1e-9),
             norm_cache_coverage: self.norm_cache.coverage(),
         })
     }
 
-    /// Borrow the live state (checkpointing).
-    pub fn state(&self) -> &[HostTensor] {
-        &self.state
+    /// Snapshot the session state (checkpointing).
+    pub fn state(&self) -> Vec<HostTensor> {
+        self.session.state()
     }
-    /// Replace the live state (checkpoint restore).
+    /// Restore a snapshot (checkpoint restore).
     pub fn restore_state(&mut self, state: Vec<HostTensor>) -> Result<()> {
-        if state.len() != self.state.len() {
-            bail!("checkpoint has {} tensors, expected {}", state.len(), self.state.len());
-        }
-        self.state = state;
-        Ok(())
-    }
-
-    pub fn batch_size(&self) -> usize {
-        self.train.spec.batch
+        self.session.restore_state(state)
     }
 }

@@ -46,25 +46,46 @@ impl Mat {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// Plain GEMM: self (n x m) * other (m x q).
+    /// GEMM: self (n x m) * other (m x q) — k-blocked for cache reuse and
+    /// row-parallel across std threads once the problem is large enough
+    /// to amortize spawning.  Each output row is accumulated in ascending
+    /// k order regardless of the worker count, so results are bitwise
+    /// identical to the serial kernel.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows);
         let (n, m, q) = (self.rows, self.cols, other.cols);
         let mut out = Mat::zeros(n, q);
-        for i in 0..n {
-            for k in 0..m {
-                let a = self.at(i, k);
-                if a == 0.0 {
-                    continue;
-                }
-                let orow = other.row(k);
-                let dst = &mut out.data[i * q..(i + 1) * q];
-                for (d, &b) in dst.iter_mut().zip(orow) {
-                    *d += a * b;
-                }
-            }
+        if n == 0 || m == 0 || q == 0 {
+            return out;
         }
+        // Threads are spawned per call (no pool), so demand enough work
+        // per worker (~4M flops) to amortize spawn cost; small GEMMs —
+        // including every per-step product of the tiny native model —
+        // stay serial.
+        let flops = n.saturating_mul(m).saturating_mul(q);
+        let by_work = (flops >> 22).max(1);
+        let workers = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+            .min(by_work)
+            .min(n);
+        if workers <= 1 {
+            matmul_rows(self, other, 0, &mut out.data);
+            return out;
+        }
+        let rows_per = n.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (w, chunk) in out.data.chunks_mut(rows_per * q).enumerate() {
+                let r0 = w * rows_per;
+                s.spawn(move || matmul_rows(self, other, r0, chunk));
+            }
+        });
         out
+    }
+
+    /// Transposed copy (column-row estimator operands are row-major).
+    pub fn transpose(&self) -> Mat {
+        Mat::from_fn(self.cols, self.rows, |r, c| self.at(c, r))
     }
 
     pub fn frob_norm(&self) -> f64 {
@@ -92,6 +113,35 @@ impl Mat {
         for (a, b) in self.data.iter_mut().zip(&other.data) {
             *a += b;
         }
+    }
+}
+
+/// Shared-dimension block size of the GEMM kernel (fits L1 alongside a
+/// handful of output rows at the model widths this repo uses).
+const KBLOCK: usize = 64;
+
+/// Compute `out` = rows `r0..r0+out.len()/q` of `a * b`, k-blocked.
+/// Per-row accumulation stays in ascending-k order (determinism).
+fn matmul_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f32]) {
+    let (m, q) = (a.cols, b.cols);
+    let rows = out.len() / q;
+    let mut kb = 0;
+    while kb < m {
+        let kend = (kb + KBLOCK).min(m);
+        for i in 0..rows {
+            let arow = a.row(r0 + i);
+            let dst = &mut out[i * q..(i + 1) * q];
+            for (k, &aik) in arow[kb..kend].iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(kb + k);
+                for (d, &bv) in dst.iter_mut().zip(brow) {
+                    *d += aik * bv;
+                }
+            }
+        }
+        kb = kend;
     }
 }
 
@@ -241,6 +291,48 @@ mod tests {
         let b = Mat { rows: 3, cols: 2, data: vec![7., 8., 9., 10., 11., 12.] };
         let c = a.matmul(&b);
         assert_eq!(c.data, vec![58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn blocked_matmul_matches_naive_reference() {
+        // Exercise the k-blocked (and, above the flops threshold, the
+        // row-parallel) kernel against a naive triple loop.  Accumulation
+        // order is ascending-k in both, so equality is bitwise.
+        let mut rng = Rng::new(11);
+        // The last case crosses the ~4M-flops-per-worker bar, so the
+        // row-parallel path runs (on multi-core hosts).
+        for (n, m, q) in [(7, 130, 5), (70, 90, 40), (64, 256, 64), (256, 512, 80)] {
+            let a = Mat::randn(n, m, &mut rng);
+            let b = Mat::randn(m, q, &mut rng);
+            let fast = a.matmul(&b);
+            let mut naive = Mat::zeros(n, q);
+            for i in 0..n {
+                for j in 0..q {
+                    let mut acc = 0.0f32;
+                    for k in 0..m {
+                        acc += a.at(i, k) * b.at(k, j);
+                    }
+                    *naive.at_mut(i, j) = acc;
+                }
+            }
+            let max_abs = fast
+                .data
+                .iter()
+                .zip(&naive.data)
+                .map(|(x, y)| (x - y).abs())
+                .fold(0.0f32, f32::max);
+            assert!(max_abs < 1e-4, "({n},{m},{q}): deviation {max_abs}");
+        }
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Rng::new(12);
+        let a = Mat::randn(5, 9, &mut rng);
+        let t = a.transpose();
+        assert_eq!((t.rows, t.cols), (9, 5));
+        assert_eq!(t.at(3, 2), a.at(2, 3));
+        assert_eq!(t.transpose(), a);
     }
 
     #[test]

@@ -161,6 +161,66 @@ mod tests {
     }
 
     #[test]
+    fn theorem1_closed_form_matches_empirical_variance() {
+        // Statistical check of the Theorem-1/Eq.-18 closed form: the
+        // Monte-Carlo variance of the CRS estimator must match the
+        // analytic prediction across budgets (calibrated band: the
+        // MC/analytic ratio sits within a few percent of 1 at 4000
+        // trials for these instances).
+        for (seed, k) in [(11u64, 8usize), (11, 16), (11, 32), (12, 12)] {
+            let (x, y) = skewed(seed, 4, 48, 4);
+            let predicted = crs_variance(&x, &y, k);
+            let measured = mc_variance(Sampler::Crs, &x, &y, k, 4000);
+            let ratio = measured / predicted;
+            assert!(
+                (0.8..1.2).contains(&ratio),
+                "seed {seed} k {k}: MC/analytic = {ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn wtacrs_empirical_variance_matches_analytic() {
+        // Same check for WTA-CRS at the Theorem-2 |C| (the analytic
+        // formula keeps only the dominant E[h^2] term, so it slightly
+        // overestimates: measured/analytic lands just below 1).
+        for seed in [2u64, 3] {
+            let (x, y) = skewed(seed, 4, 64, 4);
+            let k = 20;
+            let (predicted, csize) = wtacrs_variance(&x, &y, k);
+            assert!(csize > 0);
+            let measured = mc_variance(Sampler::WtaCrs, &x, &y, k, 3000);
+            let ratio = measured / predicted;
+            assert!(
+                (0.7..1.1).contains(&ratio),
+                "seed {seed}: MC/analytic = {ratio} (csize {csize})"
+            );
+        }
+    }
+
+    #[test]
+    fn variance_monotone_nonincreasing_up_to_theorem2_csize() {
+        // Growing the winner set never hurts on the way to the Theorem-2
+        // optimum: Var[|C| = c+1] <= Var[|C| = c] for all c < |C|*.
+        for seed in [2u64, 3, 7, 9] {
+            let (x, y) = skewed(seed, 4, 64, 4);
+            let k = 20;
+            let (v_opt, csize) = wtacrs_variance(&x, &y, k);
+            let mut prev = wtacrs_variance_at_csize(&x, &y, k, 0);
+            for c in 1..=csize {
+                let v = wtacrs_variance_at_csize(&x, &y, k, c);
+                assert!(
+                    v <= prev * (1.0 + 1e-9),
+                    "seed {seed}: Var[C={c}] = {v} > Var[C={}] = {prev}",
+                    c - 1
+                );
+                prev = v;
+            }
+            assert!((prev - v_opt).abs() <= v_opt.max(1e-12) * 1e-9);
+        }
+    }
+
+    #[test]
     fn variance_decreases_with_budget() {
         let (x, y) = skewed(4, 4, 64, 4);
         let v8 = crs_variance(&x, &y, 8);

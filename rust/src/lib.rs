@@ -8,12 +8,44 @@
 //!   metrics, experiment runner.
 //! * **L2** — JAX train/eval graphs AOT-lowered to `artifacts/*.hlo.txt`
 //!   (built once by `make artifacts`; Python never runs at runtime).
-//! * **L1** — Pallas kernels for the sampled weight-gradient GEMM.
+//! * **L1** — execution backends behind the [`runtime::Backend`] trait.
 //!
-//! Entry points: [`runtime`] loads artifacts onto the PJRT CPU client,
-//! [`coordinator`] drives training, [`memsim`] reproduces the paper's
-//! memory tables, [`estimator`] is a pure-Rust mirror of the estimator
-//! math used for property tests and the Fig. 3 analyses.
+//! ## Execution backends
+//!
+//! The coordinator is written against [`runtime::Backend`] /
+//! [`runtime::TrainSession`] and ships two implementations:
+//!
+//! * [`runtime::NativeBackend`] (default) — pure-Rust reference kernels
+//!   for the train/eval step: frozen-embedding mean-pool encoder, linear
+//!   forward, softmax cross-entropy, and the WTA-CRS *sampled
+//!   weight-gradient GEMM*.  Column-row pairs are drawn with
+//!   [`estimator::select`] from `p_i ∝ ||H_i,:|| · cache_i` — the
+//!   Eq.-3 form with the Algorithm-1 gradient-norm cache standing in
+//!   for `||dZ_i,:||`, which does not exist yet at forward time.  No
+//!   artifacts, no XLA, no network: `cargo build --release &&
+//!   cargo test -q` runs the full suite offline.
+//! * `runtime::PjrtBackend` (behind the **`pjrt`** cargo feature) — the
+//!   original PJRT/XLA engine executing AOT-lowered HLO artifacts.
+//!   The feature declares no dependency by itself: enabling it
+//!   additionally requires adding the vendored `xla` crate to
+//!   `rust/Cargo.toml` (see the note there) and running
+//!   `make artifacts`; the `runtime_integration` tests and the
+//!   `e2e_lm_train` example are gated on it.
+//!
+//! Run the suite offline with default features:
+//!
+//! ```text
+//! cargo build --release
+//! cargo test -q
+//! cargo bench --bench table2_memory   # paper tables, no artifacts needed
+//! cargo run --release -- train --task sst2 --method full-wtacrs30
+//! ```
+//!
+//! Entry points: [`runtime`] hosts the backend abstraction (and, with
+//! `pjrt`, the artifact engine), [`coordinator`] drives training,
+//! [`memsim`] reproduces the paper's memory tables, [`estimator`] is the
+//! pure-Rust estimator math shared by the native backend, the property
+//! tests and the Fig. 3 analyses.
 pub mod coordinator;
 pub mod data;
 pub mod estimator;

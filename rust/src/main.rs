@@ -1,22 +1,19 @@
 //! `wtacrs` — CLI launcher for the WTA-CRS fine-tuning framework.
 //!
 //! Subcommands:
-//!   train     fine-tune on a synthetic GLUE task
-//!   lm        train the decoder LM (end-to-end loss curve)
+//!   train     fine-tune on a synthetic GLUE task (native backend by
+//!             default; `--backend pjrt` with the `pjrt` feature)
+//!   lm        train the decoder LM (PJRT artifacts; `pjrt` feature)
 //!   memsim    reproduce the paper's memory tables for a model
-//!   inspect   list artifacts / models from the manifest
-//!
-//! Python never runs here: all compute graphs come from `artifacts/`
-//! (see `make artifacts`).
+//!   inspect   list artifacts / models from the manifest (pure parser)
 
-use anyhow::{bail, Result};
-
+use wtacrs::bail;
 use wtacrs::coordinator::{self, ExperimentOptions, TrainOptions};
-use wtacrs::data::Corpus;
 use wtacrs::memsim::{self, tables, Scope, Workload};
-use wtacrs::runtime::{Engine, HostTensor};
+use wtacrs::runtime::{Backend, Manifest, NativeBackend};
 use wtacrs::util::bench::Table;
 use wtacrs::util::cli::Cli;
+use wtacrs::util::error::Result;
 use wtacrs::util::logging;
 
 fn main() {
@@ -57,11 +54,27 @@ fn print_usage() {
          usage: wtacrs <subcommand> [options]\n\n\
          subcommands:\n\
          \x20 train    fine-tune on a synthetic GLUE task\n\
-         \x20 lm       train the decoder LM (loss curve)\n\
+         \x20 lm       train the decoder LM (loss curve; needs the pjrt feature)\n\
          \x20 memsim   paper memory tables (Table 2 / Fig 2 / Fig 6)\n\
          \x20 inspect  list compiled artifacts and models\n\n\
          run `wtacrs <subcommand> --help` for options"
     );
+}
+
+/// Build the requested execution backend ("native" or "pjrt").
+fn make_backend(name: &str) -> Result<Box<dyn Backend>> {
+    match name {
+        "native" => Ok(Box::new(NativeBackend::new())),
+        #[cfg(feature = "pjrt")]
+        "pjrt" => Ok(Box::new(wtacrs::runtime::PjrtBackend::from_default_dir()?)),
+        #[cfg(not(feature = "pjrt"))]
+        "pjrt" => bail!(
+            "this binary was built without the `pjrt` feature; add the \
+             vendored `xla` crate to rust/Cargo.toml, then rebuild with \
+             `--features pjrt`"
+        ),
+        other => bail!("unknown backend {other:?} (native|pjrt)"),
+    }
 }
 
 fn cmd_train(args: &[String]) -> Result<()> {
@@ -69,8 +82,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("task", "rte", "GLUE task (cola/sst2/mrpc/qqp/mnli/qnli/rte/stsb)")
         .opt("size", "tiny", "model size (tiny/small)")
         .opt("method", "full-wtacrs30", "method (full, lora, lst, full-wtacrs30, ...)")
+        .opt("backend", "native", "execution backend (native|pjrt)")
         .opt("steps", "300", "training steps")
-        .opt("lr", "0.0003", "base learning rate")
+        .opt("lr", "0.001", "base learning rate")
         .opt("seed", "0", "seed")
         .opt("eval-every", "100", "eval cadence in steps (0 = end only)")
         .opt("patience", "0", "early-stop patience in evals (0 = off)")
@@ -81,7 +95,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         println!("{}", cli.usage());
         return Ok(());
     }
-    let engine = Engine::from_default_dir()?;
+    let backend = make_backend(p.get("backend"))?;
     let opts = ExperimentOptions {
         train: TrainOptions {
             lr: p.get_f64("lr")? as f32,
@@ -93,7 +107,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         ..Default::default()
     };
     let res = coordinator::run_glue(
-        &engine,
+        backend.as_ref(),
         p.get("task"),
         p.get("size"),
         p.get("method"),
@@ -119,7 +133,20 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+#[cfg(not(feature = "pjrt"))]
+fn cmd_lm(_args: &[String]) -> Result<()> {
+    bail!(
+        "`wtacrs lm` drives the AOT LM artifacts and needs the `pjrt` \
+         feature; add the vendored `xla` crate to rust/Cargo.toml, then \
+         rebuild with `--features pjrt`"
+    )
+}
+
+#[cfg(feature = "pjrt")]
 fn cmd_lm(args: &[String]) -> Result<()> {
+    use wtacrs::data::Corpus;
+    use wtacrs::runtime::{Engine, HostTensor};
+
     let cli = Cli::new("wtacrs lm", "train the decoder LM on the synthetic corpus")
         .opt("size", "lm_small", "model size (lm_small/lm_100m)")
         .opt("method", "full-wtacrs30", "full | full-wtacrs30 | full-wtacrs10")
@@ -185,7 +212,7 @@ fn cmd_lm(args: &[String]) -> Result<()> {
         state[i_tokens] = HostTensor::i32(vec![b, s], corpus.batch(b, s, step as u64));
         let mut outs = train.run(&state)?;
         let loss = outs[3 * nt + 1].scalar_f32_value()?;
-        wtacrs::coordinator::trainer::advance_state(
+        wtacrs::runtime::pjrt::advance_state(
             &mut state, &mut outs, nt, nf, i_step, i_znorms,
         );
         tokens_done += b * s;
@@ -254,13 +281,13 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
         println!("{}", cli.usage());
         return Ok(());
     }
-    let engine = Engine::from_default_dir()?;
+    // The manifest and HLO analyses are pure parsers — no PJRT needed.
+    let manifest = Manifest::load(Manifest::default_dir())?;
     if !p.get("analyze").is_empty() {
-        return analyze_artifact(&engine, p.get("analyze"));
+        return analyze_artifact(&manifest, p.get("analyze"));
     }
-    println!("platform: {}", engine.platform_name());
     let mut t = Table::new(&["artifact", "kind", "model", "method", "B", "S", "inputs", "outputs"]);
-    for a in engine.manifest.artifacts.values() {
+    for a in manifest.artifacts.values() {
         if !p.get("kind").is_empty() && a.kind != p.get("kind") {
             continue;
         }
@@ -277,7 +304,7 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
     }
     t.print();
     println!("\nmodels:");
-    for (name, m) in &engine.manifest.models {
+    for (name, m) in &manifest.models {
         println!(
             "  {name}: d={} L={} H={} ff={} V={} B={} S={} ({}M params, {})",
             m.d_model,
@@ -296,8 +323,8 @@ fn cmd_inspect(args: &[String]) -> Result<()> {
 
 /// HLO fusion audit of one artifact (DESIGN.md §9 L2): op census, dot
 /// FLOPs, parameter bytes, sampling-machinery footprint.
-fn analyze_artifact(engine: &Engine, id: &str) -> Result<()> {
-    let spec = engine.manifest.get(id)?;
+fn analyze_artifact(manifest: &Manifest, id: &str) -> Result<()> {
+    let spec = manifest.get(id)?;
     let st = wtacrs::runtime::hlo_info::analyze_file(&spec.path)?;
     println!("artifact {id} ({})", spec.path.display());
     println!("  instructions:       {}", st.n_instructions);

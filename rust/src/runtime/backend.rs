@@ -1,0 +1,99 @@
+//! Execution-backend abstraction.
+//!
+//! The coordinator (trainer, experiment runner, sweeps, benches) is
+//! written against these traits.  Two implementations exist:
+//!
+//! * [`super::NativeBackend`] — pure-Rust reference kernels (default;
+//!   no artifacts, no XLA, fully offline);
+//! * `super::PjrtBackend` (cargo feature `pjrt`) — the PJRT/XLA engine
+//!   executing AOT-lowered HLO artifacts.
+//!
+//! The session owns model/optimizer state; the coordinator owns the
+//! data pipeline and the Algorithm-1 gradient-norm cache, passing the
+//! gathered per-sample norms into each step and scattering the refreshed
+//! norms the step returns.
+
+use super::tensor::HostTensor;
+use crate::util::error::Result;
+
+/// Everything a backend needs to open a training session.
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    /// Model size name ("tiny", "small", ...).
+    pub size: String,
+    /// Method string, `family[-sampler]`: "full", "lora-wtacrs30", ...
+    pub method: String,
+    /// Classifier width (1 = regression head).
+    pub n_out: usize,
+    /// Parameter-init / sampling seed.
+    pub seed: u64,
+    /// Learning rate.
+    pub lr: f32,
+    /// Batch-size override (0 = backend default).
+    pub batch: usize,
+}
+
+impl SessionConfig {
+    pub fn new(size: &str, method: &str, n_out: usize) -> Self {
+        SessionConfig {
+            size: size.to_string(),
+            method: method.to_string(),
+            n_out,
+            seed: 0,
+            lr: 1e-3,
+            batch: 0,
+        }
+    }
+}
+
+/// Model dims the data pipeline needs before a session exists.
+#[derive(Debug, Clone, Copy)]
+pub struct BackendModelDims {
+    pub vocab: usize,
+    pub seq_len: usize,
+    pub batch: usize,
+}
+
+/// A live training session: owns parameters and optimizer state.
+pub trait TrainSession {
+    /// Rows per train/eval batch.
+    fn batch_size(&self) -> usize;
+    /// Token columns per row.
+    fn seq_len(&self) -> usize;
+    /// Classifier width (1 = regression).
+    fn n_out(&self) -> usize;
+    /// Number of approximated (sampled) linear layers — the norm cache
+    /// keeps one row per layer (Algorithm 1).
+    fn n_approx_layers(&self) -> usize;
+
+    /// One optimizer step over a (batch, seq) token block.
+    ///
+    /// `znorms` is the gathered gradient-norm cache block, laid out
+    /// `[layer * batch + row]`; the returned vector is the refreshed
+    /// block in the same layout (scattered back by the coordinator).
+    /// Returns `(loss, refreshed_znorms)`.
+    fn train_step(
+        &mut self,
+        tokens: &[i32],
+        labels_i32: &[i32],
+        labels_f32: &[f32],
+        znorms: &[f32],
+    ) -> Result<(f32, Vec<f32>)>;
+
+    /// Forward-only logits, row-major (batch, n_out).
+    fn eval_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Positional state snapshot (checkpointing).
+    fn state(&self) -> Vec<HostTensor>;
+    /// Restore a snapshot taken from an identically-configured session.
+    fn restore_state(&mut self, state: Vec<HostTensor>) -> Result<()>;
+}
+
+/// Factory for training sessions over one execution substrate.
+pub trait Backend {
+    fn name(&self) -> &'static str;
+    /// Model dims for a size name (drives synthetic data generation).
+    fn model_dims(&self, size: &str) -> Result<BackendModelDims>;
+    /// Open a training session.
+    fn open(&self, cfg: &SessionConfig) -> Result<Box<dyn TrainSession>>;
+}

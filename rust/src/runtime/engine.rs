@@ -12,7 +12,8 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Instant;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 use super::manifest::{ArtifactSpec, Manifest};
 use super::tensor::HostTensor;
@@ -37,7 +38,7 @@ impl Engine {
         let manifest = Manifest::load(artifacts_dir)?;
         let client =
             xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
-        log::info!(
+        crate::log_info!(
             "PJRT platform={} devices={} artifacts={}",
             client.platform_name(),
             client.device_count(),
@@ -70,7 +71,7 @@ impl Engine {
             .compile(&comp)
             .map_err(|e| anyhow!("compile {id}: {e:?}"))?;
         let compile_time_s = t0.elapsed().as_secs_f64();
-        log::debug!("compiled {id} in {compile_time_s:.2}s");
+        crate::log_debug!("compiled {id} in {compile_time_s:.2}s");
         let exe = std::sync::Arc::new(Executable { exe, spec, compile_time_s });
         self.cache.lock().unwrap().insert(id.to_string(), exe.clone());
         Ok(exe)

@@ -1,10 +1,26 @@
-//! Runtime — load AOT artifacts (HLO text) onto the PJRT CPU client and
-//! execute them from the coordinator's hot path.
+//! Runtime — the execution-backend abstraction and its implementations.
+//!
+//! [`Backend`] / [`TrainSession`] decouple the coordinator from the
+//! execution substrate.  [`NativeBackend`] (always available) runs
+//! pure-Rust reference kernels; the PJRT/XLA [`Engine`](engine::Engine)
+//! executing AOT HLO artifacts lives behind the `pjrt` cargo feature
+//! (`PjrtBackend` adapts it to the trait).  [`manifest`] and
+//! [`hlo_info`] are pure parsers and stay available either way.
+pub mod backend;
+#[cfg(feature = "pjrt")]
 pub mod engine;
 pub mod hlo_info;
 pub mod manifest;
+pub mod native;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 pub mod tensor;
 
+pub use backend::{Backend, BackendModelDims, SessionConfig, TrainSession};
+#[cfg(feature = "pjrt")]
 pub use engine::{Engine, Executable};
 pub use manifest::{ArtifactSpec, Manifest, ModelDims, TensorSpec};
+pub use native::NativeBackend;
+#[cfg(feature = "pjrt")]
+pub use pjrt::PjrtBackend;
 pub use tensor::{DType, HostTensor, TensorData};

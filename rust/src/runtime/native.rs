@@ -1,0 +1,854 @@
+//! `NativeBackend` — pure-Rust reference kernels for the train/eval step.
+//!
+//! The model is a GLUE-shaped classifier small enough to train on CPU in
+//! test time yet structured like the paper's workload: a frozen random
+//! embedding table mean-pooled over non-PAD tokens feeds a two-hidden-
+//! layer MLP whose **weight-gradient GEMMs are the sampled operations**.
+//! For `dW = H^T dZ` (contracted over the batch dimension) the sampler
+//! draws column-row pairs from `p_i ∝ ||H_i,:|| · cache[i]` where
+//! `cache` is the coordinator's Algorithm-1 gradient-norm cache — the
+//! forward pass cannot see `dZ`, exactly the constraint the paper's
+//! cache exists to work around.  Each step returns the refreshed norms
+//! `||dZ_i,:||` for the coordinator to scatter back.
+//!
+//! Families mirror the experiment grid: `full` trains the whole MLP,
+//! `lora` freezes the trunk and trains rank-8 adapters + head, `lst`
+//! trains a ladder side network.  Sampler suffixes (`-wtacrs30`,
+//! `-crs10`, `-det10`, ...) select estimator and budget k/|B|.
+
+use crate::estimator::{select, Mat, Sampler};
+use crate::util::error::{Context, Result};
+use crate::util::rng::Rng;
+use crate::{anyhow, bail};
+
+use super::backend::{Backend, BackendModelDims, SessionConfig, TrainSession};
+use super::tensor::HostTensor;
+
+/// LoRA adapter rank.
+const LORA_RANK: usize = 8;
+/// LST ladder width divisor (side width = d_model / LST_FACTOR).
+const LST_FACTOR: usize = 4;
+/// Stream-splitting constant for the per-step sampling RNG.
+const SAMPLE_STREAM: u64 = 0xA11CE;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Family {
+    Full,
+    Lora,
+    Lst,
+}
+
+/// `(family, sampler, budget)` from a method string like "lora-wtacrs30".
+fn parse_method(method: &str) -> Result<(Family, Option<Sampler>, f64)> {
+    let (fam, suffix) = match method.split_once('-') {
+        Some((f, s)) => (f, Some(s)),
+        None => (method, None),
+    };
+    let family = match fam {
+        "full" => Family::Full,
+        "lora" => Family::Lora,
+        "lst" => Family::Lst,
+        other => bail!("native backend: unknown tuning family {other:?} in {method:?}"),
+    };
+    let Some(suffix) = suffix else {
+        return Ok((family, None, 1.0));
+    };
+    let (sampler, digits) = if let Some(d) = suffix.strip_prefix("wtacrs") {
+        (Sampler::WtaCrs, d)
+    } else if let Some(d) = suffix.strip_prefix("crs") {
+        (Sampler::Crs, d)
+    } else if let Some(d) = suffix.strip_prefix("det") {
+        (Sampler::Det, d)
+    } else {
+        bail!("native backend: unknown sampler suffix {suffix:?} in {method:?}");
+    };
+    let pct: u32 = digits
+        .parse()
+        .map_err(|_| anyhow!("native backend: bad sampler budget in {method:?}"))?;
+    if pct == 0 || pct > 100 {
+        bail!("native backend: budget must be in 1..=100, got {pct}");
+    }
+    if family == Family::Lst {
+        // LST trains only the ladder side network; its backward never
+        // runs the sampled trunk GEMMs, so a sampler suffix would be
+        // silently ignored — reject it instead.
+        bail!("native backend: LST does not compose with a sampler ({method:?})");
+    }
+    Ok((family, Some(sampler), pct as f64 / 100.0))
+}
+
+/// (vocab, seq, batch, d_model, d_ff) for a size name.
+fn size_dims(size: &str) -> Option<(usize, usize, usize, usize, usize)> {
+    match size {
+        "tiny" => Some((1024, 64, 32, 128, 256)),
+        "small" => Some((2048, 64, 32, 192, 384)),
+        _ => None,
+    }
+}
+
+/// One trainable tensor with its AdamW-free Adam state.
+#[derive(Debug, Clone)]
+struct Param {
+    w: Mat,
+    m: Mat,
+    v: Mat,
+}
+
+impl Param {
+    fn new(w: Mat) -> Self {
+        let m = Mat::zeros(w.rows, w.cols);
+        let v = Mat::zeros(w.rows, w.cols);
+        Param { w, m, v }
+    }
+}
+
+/// Pure-Rust execution backend (the default; no artifacts, no XLA).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NativeBackend;
+
+impl NativeBackend {
+    pub fn new() -> Self {
+        NativeBackend
+    }
+}
+
+impl Backend for NativeBackend {
+    fn name(&self) -> &'static str {
+        "native"
+    }
+
+    fn model_dims(&self, size: &str) -> Result<BackendModelDims> {
+        let (vocab, seq, batch, _, _) = size_dims(size)
+            .ok_or_else(|| anyhow!("native backend: unknown model size {size:?}"))?;
+        Ok(BackendModelDims { vocab, seq_len: seq, batch })
+    }
+
+    fn open(&self, cfg: &SessionConfig) -> Result<Box<dyn TrainSession>> {
+        Ok(Box::new(NativeSession::new(cfg)?))
+    }
+}
+
+/// Live native training session.
+pub struct NativeSession {
+    family: Family,
+    sampler: Option<Sampler>,
+    budget: f64,
+    seq: usize,
+    batch: usize,
+    d: usize,
+    n_out: usize,
+    seed: u64,
+    lr: f32,
+    step: i32,
+    /// Frozen embedding table (vocab, d).
+    embed: Mat,
+    /// Frozen trunk tensors (family-dependent; empty for `full`).
+    frozen: Vec<Mat>,
+    /// Trainable tensors in a fixed per-family order.
+    params: Vec<Param>,
+}
+
+// Trainable indices per family (fixed order; state() relies on it).
+const P_W1: usize = 0; // full: w1      lora: a1      lst: s1
+const P_B1: usize = 1; // full: b1      lora: bb1     lst: bs1
+const P_W2: usize = 2; // full: w2      lora: a2      lst: s2
+const P_B2: usize = 3; // full: b2      lora: bb2     lst: bs2
+const P_W3: usize = 4; // full: w3      lora: w3      lst: -
+const P_B3: usize = 5; // full: b3      lora: b3      lst: -
+
+// Frozen trunk indices for the LoRA family.
+const F_W1: usize = 0;
+const F_B1: usize = 1;
+const F_W2: usize = 2;
+const F_B2: usize = 3;
+
+impl NativeSession {
+    pub fn new(cfg: &SessionConfig) -> Result<Self> {
+        let (family, sampler, budget) = parse_method(&cfg.method)?;
+        let (vocab, seq, def_batch, d, f) = size_dims(&cfg.size)
+            .ok_or_else(|| anyhow!("native backend: unknown model size {:?}", cfg.size))?;
+        let batch = if cfg.batch > 0 { cfg.batch } else { def_batch };
+        if cfg.n_out == 0 {
+            bail!("n_out must be >= 1");
+        }
+        let n_out = cfg.n_out;
+        let mut rng = Rng::new(cfg.seed);
+        let embed = Mat::randn(vocab, d, &mut rng);
+        let he_d = (2.0 / d as f64).sqrt() as f32;
+        let he_f = (2.0 / f as f64).sqrt() as f32;
+        let head_d = (1.0 / d as f64).sqrt() as f32;
+        let (frozen, params) = match family {
+            Family::Full => {
+                let w1 = Mat::randn(d, f, &mut rng).scale(he_d);
+                let w2 = Mat::randn(f, d, &mut rng).scale(he_f);
+                let w3 = Mat::randn(d, n_out, &mut rng).scale(head_d);
+                (
+                    vec![],
+                    vec![
+                        Param::new(w1),
+                        Param::new(Mat::zeros(1, f)),
+                        Param::new(w2),
+                        Param::new(Mat::zeros(1, d)),
+                        Param::new(w3),
+                        Param::new(Mat::zeros(1, n_out)),
+                    ],
+                )
+            }
+            Family::Lora => {
+                let w1 = Mat::randn(d, f, &mut rng).scale(he_d);
+                let w2 = Mat::randn(f, d, &mut rng).scale(he_f);
+                let w3 = Mat::randn(d, n_out, &mut rng).scale(head_d);
+                let a1 = Mat::randn(d, LORA_RANK, &mut rng).scale(head_d);
+                let a2 = Mat::randn(f, LORA_RANK, &mut rng)
+                    .scale((1.0 / f as f64).sqrt() as f32);
+                (
+                    vec![w1, Mat::zeros(1, f), w2, Mat::zeros(1, d)],
+                    vec![
+                        Param::new(a1),
+                        Param::new(Mat::zeros(LORA_RANK, f)),
+                        Param::new(a2),
+                        Param::new(Mat::zeros(LORA_RANK, d)),
+                        Param::new(w3),
+                        Param::new(Mat::zeros(1, n_out)),
+                    ],
+                )
+            }
+            Family::Lst => {
+                let ds = d / LST_FACTOR;
+                let s1 = Mat::randn(d, ds, &mut rng).scale(he_d);
+                let s2 = Mat::randn(ds, n_out, &mut rng)
+                    .scale((1.0 / ds as f64).sqrt() as f32);
+                (
+                    vec![],
+                    vec![
+                        Param::new(s1),
+                        Param::new(Mat::zeros(1, ds)),
+                        Param::new(s2),
+                        Param::new(Mat::zeros(1, n_out)),
+                    ],
+                )
+            }
+        };
+        Ok(NativeSession {
+            family,
+            sampler,
+            budget,
+            seq,
+            batch,
+            d,
+            n_out,
+            seed: cfg.seed,
+            lr: cfg.lr,
+            step: 0,
+            embed,
+            frozen,
+            params,
+        })
+    }
+
+    /// Mean-pool the frozen embeddings of each row's non-PAD tokens.
+    fn pool(&self, tokens: &[i32]) -> Result<Mat> {
+        let (b, s, d) = (self.batch, self.seq, self.d);
+        if tokens.len() != b * s {
+            bail!("tokens: expected {}x{} = {} ids, got {}", b, s, b * s, tokens.len());
+        }
+        let mut x = Mat::zeros(b, d);
+        for r in 0..b {
+            let row = &tokens[r * s..(r + 1) * s];
+            let mut count = 0usize;
+            for &t in row {
+                if t == 0 {
+                    continue; // PAD
+                }
+                let t = t as usize;
+                if t >= self.embed.rows {
+                    bail!("token id {t} out of vocab {}", self.embed.rows);
+                }
+                let erow = self.embed.row(t);
+                let dst = &mut x.data[r * d..(r + 1) * d];
+                for (xd, &ev) in dst.iter_mut().zip(erow) {
+                    *xd += ev;
+                }
+                count += 1;
+            }
+            let inv = 1.0 / count.max(1) as f32;
+            for xd in &mut x.data[r * d..(r + 1) * d] {
+                *xd *= inv;
+            }
+        }
+        Ok(x)
+    }
+
+    fn trunk_w1(&self) -> &Mat {
+        match self.family {
+            Family::Lora => &self.frozen[F_W1],
+            _ => &self.params[P_W1].w,
+        }
+    }
+    fn trunk_b1(&self) -> &Mat {
+        match self.family {
+            Family::Lora => &self.frozen[F_B1],
+            _ => &self.params[P_B1].w,
+        }
+    }
+    fn trunk_w2(&self) -> &Mat {
+        match self.family {
+            Family::Lora => &self.frozen[F_W2],
+            _ => &self.params[P_W2].w,
+        }
+    }
+    fn trunk_b2(&self) -> &Mat {
+        match self.family {
+            Family::Lora => &self.frozen[F_B2],
+            _ => &self.params[P_B2].w,
+        }
+    }
+
+    /// MLP forward (full/lora): returns (z1, a1, z2, a2, logits).
+    fn forward_mlp(&self, x: &Mat) -> (Mat, Mat, Mat, Mat, Mat) {
+        let mut z1 = x.matmul(self.trunk_w1());
+        add_bias(&mut z1, self.trunk_b1());
+        if self.family == Family::Lora {
+            let xa = x.matmul(&self.params[P_W1].w);
+            z1.add_assign(&xa.matmul(&self.params[P_B1].w));
+        }
+        let a1 = relu(&z1);
+        let mut z2 = a1.matmul(self.trunk_w2());
+        add_bias(&mut z2, self.trunk_b2());
+        if self.family == Family::Lora {
+            let aa = a1.matmul(&self.params[P_W2].w);
+            z2.add_assign(&aa.matmul(&self.params[P_B2].w));
+        }
+        let a2 = relu(&z2);
+        let mut logits = a2.matmul(&self.params[P_W3].w);
+        add_bias(&mut logits, &self.params[P_B3].w);
+        (z1, a1, z2, a2, logits)
+    }
+
+    /// Ladder-side forward (lst): returns (z1, a1, logits).
+    fn forward_lst(&self, x: &Mat) -> (Mat, Mat, Mat) {
+        let mut z1 = x.matmul(&self.params[P_W1].w);
+        add_bias(&mut z1, &self.params[P_B1].w);
+        let a1 = relu(&z1);
+        let mut logits = a1.matmul(&self.params[P_W2].w);
+        add_bias(&mut logits, &self.params[P_B2].w);
+        (z1, a1, logits)
+    }
+
+    fn logits(&self, x: &Mat) -> Mat {
+        match self.family {
+            Family::Lst => self.forward_lst(x).2,
+            _ => self.forward_mlp(x).4,
+        }
+    }
+
+    /// Loss and dlogits for a batch; classification (softmax-xent) or
+    /// regression (squared error) by head width.
+    fn loss_and_dlogits(
+        &self,
+        logits: &Mat,
+        labels_i32: &[i32],
+        labels_f32: &[f32],
+    ) -> Result<(f32, Mat)> {
+        let b = self.batch;
+        let c = self.n_out;
+        let mut dl = Mat::zeros(b, c);
+        if c == 1 {
+            if labels_f32.len() < b {
+                bail!("regression batch: {} labels for {} rows", labels_f32.len(), b);
+            }
+            let mut loss = 0.0f64;
+            for r in 0..b {
+                let pred = logits.at(r, 0);
+                let diff = pred - labels_f32[r];
+                loss += 0.5 * (diff as f64) * (diff as f64);
+                *dl.at_mut(r, 0) = diff / b as f32;
+            }
+            Ok(((loss / b as f64) as f32, dl))
+        } else {
+            if labels_i32.len() < b {
+                bail!("classification batch: {} labels for {} rows", labels_i32.len(), b);
+            }
+            let mut loss = 0.0f64;
+            for r in 0..b {
+                let y = labels_i32[r];
+                if y < 0 || y as usize >= c {
+                    bail!("label {y} out of range for {c} classes");
+                }
+                let row = logits.row(r);
+                let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut denom = 0.0f64;
+                for &v in row {
+                    denom += ((v - maxv) as f64).exp();
+                }
+                for j in 0..c {
+                    let p = (((logits.at(r, j) - maxv) as f64).exp() / denom) as f32;
+                    let t = if j == y as usize { 1.0 } else { 0.0 };
+                    *dl.at_mut(r, j) = (p - t) / b as f32;
+                    if j == y as usize {
+                        loss -= (p.max(1e-12) as f64).ln();
+                    }
+                }
+            }
+            Ok(((loss / b as f64) as f32, dl))
+        }
+    }
+
+    /// The paper's sampled weight-gradient GEMM: `acts^T @ delta`
+    /// contracted over the batch dimension, with column-row pairs drawn
+    /// from `p_i ∝ ||acts_i,:|| · znorm_i` (Algorithm 1's cached proxy
+    /// for `||dZ_i,:||`, unavailable in forward).  Exact when no sampler
+    /// is configured or the budget covers the whole batch.
+    fn weight_grad(
+        &self,
+        acts: &Mat,
+        delta: &Mat,
+        layer: usize,
+        znorms: &[f32],
+        rng: &mut Rng,
+    ) -> Mat {
+        let b = acts.rows;
+        let k = ((self.budget * b as f64).round() as usize).clamp(1, b);
+        let Some(sampler) = self.sampler else {
+            return acts.transpose().matmul(delta);
+        };
+        if k >= b {
+            return acts.transpose().matmul(delta);
+        }
+        let mut w = vec![0.0f64; b];
+        let mut total = 0.0f64;
+        for (i, wi) in w.iter_mut().enumerate() {
+            let an: f64 = acts.row(i).iter().map(|&v| (v as f64) * (v as f64)).sum();
+            // Floor at a tiny positive mass: all-PAD rows pool to zero
+            // activations, and a zero-probability tail would leave the
+            // WTA-CRS stochastic draw with no support (rows with zero
+            // acts contribute nothing to the GEMM either way, so the
+            // floor does not bias the estimate).
+            *wi = (an.sqrt() * znorms[layer * b + i].max(0.0) as f64).max(1e-12);
+            total += *wi;
+        }
+        let probs: Vec<f64> = w.iter().map(|v| v / total).collect();
+        let (idx, sc) = select(sampler, &probs, k, rng);
+        let (din, dout) = (acts.cols, delta.cols);
+        let mut out = Mat::zeros(din, dout);
+        for (&i, &s) in idx.iter().zip(&sc) {
+            let drow = delta.row(i);
+            for ci in 0..din {
+                let av = acts.at(i, ci) * s as f32;
+                if av == 0.0 {
+                    continue;
+                }
+                let dst = &mut out.data[ci * dout..(ci + 1) * dout];
+                for (d, &dv) in dst.iter_mut().zip(drow) {
+                    *d += av * dv;
+                }
+            }
+        }
+        out
+    }
+
+    fn adam_step(&mut self, grads: Vec<(usize, Mat)>) {
+        self.step += 1;
+        let t = self.step;
+        let bc = ((1.0 - 0.999f64.powi(t)).sqrt() / (1.0 - 0.9f64.powi(t))) as f32;
+        let lr_t = self.lr * bc;
+        for (pi, g) in grads {
+            let p = &mut self.params[pi];
+            debug_assert_eq!((p.w.rows, p.w.cols), (g.rows, g.cols));
+            for ((w, m), (v, gv)) in p
+                .w
+                .data
+                .iter_mut()
+                .zip(p.m.data.iter_mut())
+                .zip(p.v.data.iter_mut().zip(&g.data))
+            {
+                *m = 0.9 * *m + 0.1 * gv;
+                *v = 0.999 * *v + 0.001 * gv * gv;
+                *w -= lr_t * *m / (v.sqrt() + 1e-8);
+            }
+        }
+    }
+}
+
+/// Add a (1, cols) bias row to every row of `z`.
+fn add_bias(z: &mut Mat, b: &Mat) {
+    debug_assert_eq!(z.cols, b.cols);
+    for r in 0..z.rows {
+        let dst = &mut z.data[r * z.cols..(r + 1) * z.cols];
+        for (d, &bv) in dst.iter_mut().zip(&b.data) {
+            *d += bv;
+        }
+    }
+}
+
+fn relu(z: &Mat) -> Mat {
+    Mat {
+        rows: z.rows,
+        cols: z.cols,
+        data: z.data.iter().map(|&v| v.max(0.0)).collect(),
+    }
+}
+
+/// dz ⊙ 1[z > 0].
+fn relu_backward(dz: &Mat, z: &Mat) -> Mat {
+    Mat {
+        rows: dz.rows,
+        cols: dz.cols,
+        data: dz
+            .data
+            .iter()
+            .zip(&z.data)
+            .map(|(&d, &zv)| if zv > 0.0 { d } else { 0.0 })
+            .collect(),
+    }
+}
+
+/// Column sums as a (1, cols) row (bias gradients).
+fn col_sums(m: &Mat) -> Mat {
+    let mut out = Mat::zeros(1, m.cols);
+    for r in 0..m.rows {
+        let row = m.row(r);
+        for (o, &v) in out.data.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Per-row L2 norms (f64 accumulation, f32 result).
+fn row_norms(m: &Mat) -> Vec<f32> {
+    (0..m.rows)
+        .map(|r| {
+            m.row(r)
+                .iter()
+                .map(|&v| (v as f64) * (v as f64))
+                .sum::<f64>()
+                .sqrt() as f32
+        })
+        .collect()
+}
+
+impl TrainSession for NativeSession {
+    fn batch_size(&self) -> usize {
+        self.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.seq
+    }
+    fn n_out(&self) -> usize {
+        self.n_out
+    }
+    fn n_approx_layers(&self) -> usize {
+        match self.family {
+            Family::Lst => 2,
+            _ => 3,
+        }
+    }
+
+    fn train_step(
+        &mut self,
+        tokens: &[i32],
+        labels_i32: &[i32],
+        labels_f32: &[f32],
+        znorms: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let b = self.batch;
+        let need = self.n_approx_layers() * b;
+        if znorms.len() != need {
+            bail!("znorms: expected {need} values, got {}", znorms.len());
+        }
+        let x = self.pool(tokens)?;
+        let mut rng = Rng::new(self.seed ^ SAMPLE_STREAM).fold_in(self.step as u64);
+
+        match self.family {
+            Family::Lst => {
+                let (z1, a1, logits) = self.forward_lst(&x);
+                let (loss, dlogits) = self.loss_and_dlogits(&logits, labels_i32, labels_f32)?;
+                let g_s2 = a1.transpose().matmul(&dlogits);
+                let g_bs2 = col_sums(&dlogits);
+                let da1 = dlogits.matmul(&self.params[P_W2].w.transpose());
+                let dz1 = relu_backward(&da1, &z1);
+                let g_s1 = x.transpose().matmul(&dz1);
+                let g_bs1 = col_sums(&dz1);
+                let mut norms = row_norms(&dz1);
+                norms.extend(row_norms(&dlogits));
+                self.adam_step(vec![
+                    (P_W2, g_s2),
+                    (P_B2, g_bs2),
+                    (P_W1, g_s1),
+                    (P_B1, g_bs1),
+                ]);
+                Ok((loss, norms))
+            }
+            Family::Full => {
+                let (z1, a1, z2, a2, logits) = self.forward_mlp(&x);
+                let (loss, dlogits) = self.loss_and_dlogits(&logits, labels_i32, labels_f32)?;
+                let g_w3 = self.weight_grad(&a2, &dlogits, 2, znorms, &mut rng);
+                let g_b3 = col_sums(&dlogits);
+                let da2 = dlogits.matmul(&self.params[P_W3].w.transpose());
+                let dz2 = relu_backward(&da2, &z2);
+                let g_w2 = self.weight_grad(&a1, &dz2, 1, znorms, &mut rng);
+                let g_b2 = col_sums(&dz2);
+                let da1 = dz2.matmul(&self.params[P_W2].w.transpose());
+                let dz1 = relu_backward(&da1, &z1);
+                let g_w1 = self.weight_grad(&x, &dz1, 0, znorms, &mut rng);
+                let g_b1 = col_sums(&dz1);
+                let mut norms = row_norms(&dz1);
+                norms.extend(row_norms(&dz2));
+                norms.extend(row_norms(&dlogits));
+                self.adam_step(vec![
+                    (P_W3, g_w3),
+                    (P_B3, g_b3),
+                    (P_W2, g_w2),
+                    (P_B2, g_b2),
+                    (P_W1, g_w1),
+                    (P_B1, g_b1),
+                ]);
+                Ok((loss, norms))
+            }
+            Family::Lora => {
+                let (z1, a1, z2, a2, logits) = self.forward_mlp(&x);
+                let (loss, dlogits) = self.loss_and_dlogits(&logits, labels_i32, labels_f32)?;
+                let g_w3 = self.weight_grad(&a2, &dlogits, 2, znorms, &mut rng);
+                let g_b3 = col_sums(&dlogits);
+                let da2 = dlogits.matmul(&self.params[P_W3].w.transpose());
+                let dz2 = relu_backward(&da2, &z2);
+                // dz1 flows through both the frozen trunk and the adapter.
+                let mut da1 = dz2.matmul(&self.frozen[F_W2].transpose());
+                da1.add_assign(
+                    &dz2.matmul(&self.params[P_B2].w.transpose())
+                        .matmul(&self.params[P_W2].w.transpose()),
+                );
+                let dz1 = relu_backward(&da1, &z1);
+                // Adapter grads: dB = (x A)^T dz (sampled), dA = x^T (dz B^T).
+                let xa1 = x.matmul(&self.params[P_W1].w);
+                let a1a2 = a1.matmul(&self.params[P_W2].w);
+                let g_bb2 = self.weight_grad(&a1a2, &dz2, 1, znorms, &mut rng);
+                let g_a2 = a1
+                    .transpose()
+                    .matmul(&dz2.matmul(&self.params[P_B2].w.transpose()));
+                let g_bb1 = self.weight_grad(&xa1, &dz1, 0, znorms, &mut rng);
+                let g_a1 = x
+                    .transpose()
+                    .matmul(&dz1.matmul(&self.params[P_B1].w.transpose()));
+                let mut norms = row_norms(&dz1);
+                norms.extend(row_norms(&dz2));
+                norms.extend(row_norms(&dlogits));
+                self.adam_step(vec![
+                    (P_W3, g_w3),
+                    (P_B3, g_b3),
+                    (P_B2, g_bb2),
+                    (P_W2, g_a2),
+                    (P_B1, g_bb1),
+                    (P_W1, g_a1),
+                ]);
+                Ok((loss, norms))
+            }
+        }
+    }
+
+    fn eval_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let x = self.pool(tokens)?;
+        Ok(self.logits(&x).data)
+    }
+
+    fn state(&self) -> Vec<HostTensor> {
+        let mut out = vec![HostTensor::scalar_i32(self.step)];
+        for p in &self.params {
+            for m in [&p.w, &p.m, &p.v] {
+                out.push(HostTensor::f32(vec![m.rows, m.cols], m.data.clone()));
+            }
+        }
+        out
+    }
+
+    fn restore_state(&mut self, state: Vec<HostTensor>) -> Result<()> {
+        let expect = 1 + 3 * self.params.len();
+        if state.len() != expect {
+            bail!("native state: expected {expect} tensors, got {}", state.len());
+        }
+        let step = state[0].scalar_i32_value().context("state step slot")?;
+        let mut it = state.into_iter().skip(1);
+        let mut restored = Vec::with_capacity(self.params.len());
+        for (pi, p) in self.params.iter().enumerate() {
+            let mut mats = Vec::with_capacity(3);
+            for what in ["w", "m", "v"] {
+                let t = it.next().ok_or_else(|| anyhow!("state truncated"))?;
+                if t.shape != vec![p.w.rows, p.w.cols] {
+                    bail!(
+                        "native state: param #{pi} {what} shape {:?}, expected [{}, {}]",
+                        t.shape,
+                        p.w.rows,
+                        p.w.cols
+                    );
+                }
+                let data = t.as_f32().context("state tensor dtype")?.to_vec();
+                mats.push(Mat { rows: p.w.rows, cols: p.w.cols, data });
+            }
+            let v = mats.pop().unwrap();
+            let m = mats.pop().unwrap();
+            let w = mats.pop().unwrap();
+            restored.push(Param { w, m, v });
+        }
+        self.params = restored;
+        self.step = step;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(method: &str, n_out: usize) -> SessionConfig {
+        let mut c = SessionConfig::new("tiny", method, n_out);
+        c.lr = 1e-3;
+        c
+    }
+
+    fn toy_batch(sess: &NativeSession) -> (Vec<i32>, Vec<i32>) {
+        let (b, s) = (sess.batch, sess.seq);
+        let mut toks = vec![0i32; b * s];
+        let mut labs = vec![0i32; b];
+        for r in 0..b {
+            let t = 4 + ((r * 37) % 1000) as i32;
+            for c in 0..8 {
+                toks[r * s + c] = t;
+            }
+            labs[r] = (t > 512) as i32;
+        }
+        (toks, labs)
+    }
+
+    #[test]
+    fn parse_method_grid() {
+        assert!(matches!(parse_method("full").unwrap(), (Family::Full, None, _)));
+        let (f, s, b) = parse_method("lora-wtacrs30").unwrap();
+        assert_eq!(f, Family::Lora);
+        assert_eq!(s, Some(Sampler::WtaCrs));
+        assert!((b - 0.3).abs() < 1e-12);
+        let (_, s, b) = parse_method("full-crs10").unwrap();
+        assert_eq!(s, Some(Sampler::Crs));
+        assert!((b - 0.1).abs() < 1e-12);
+        let (_, s, _) = parse_method("full-det10").unwrap();
+        assert_eq!(s, Some(Sampler::Det));
+        assert!(matches!(parse_method("lst").unwrap(), (Family::Lst, None, _)));
+        assert!(parse_method("adapter").is_err());
+        assert!(parse_method("full-wtacrs0").is_err());
+        assert!(parse_method("full-bogus10").is_err());
+        assert!(parse_method("lst-wtacrs30").is_err(), "LST + sampler must be rejected");
+    }
+
+    #[test]
+    fn session_shapes_and_determinism() {
+        let backend = NativeBackend::new();
+        let dims = backend.model_dims("tiny").unwrap();
+        assert_eq!(dims.vocab, 1024);
+        let mut s1 = NativeSession::new(&cfg("full-wtacrs30", 2)).unwrap();
+        let mut s2 = NativeSession::new(&cfg("full-wtacrs30", 2)).unwrap();
+        let (toks, labs) = toy_batch(&s1);
+        let zn = vec![1.0f32; s1.n_approx_layers() * s1.batch];
+        let (l1, n1) = s1.train_step(&toks, &labs, &[], &zn).unwrap();
+        let (l2, n2) = s2.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert_eq!(l1, l2, "same seed, same step, same loss");
+        assert_eq!(n1, n2);
+        assert_eq!(n1.len(), 3 * s1.batch);
+        assert!(n1.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn toy_task_loss_decreases_all_families() {
+        for method in ["full", "full-wtacrs30", "lora", "lst", "full-crs10"] {
+            let mut sess = NativeSession::new(&cfg(method, 2)).unwrap();
+            let (toks, labs) = toy_batch(&sess);
+            let zn = vec![1.0f32; sess.n_approx_layers() * sess.batch];
+            let mut first = f32::NAN;
+            let mut last = f32::NAN;
+            for step in 0..30 {
+                let (loss, _) = sess.train_step(&toks, &labs, &[], &zn).unwrap();
+                assert!(loss.is_finite(), "{method} step {step}");
+                if step == 0 {
+                    first = loss;
+                }
+                last = loss;
+            }
+            assert!(last < first, "{method}: loss {first} -> {last}");
+        }
+    }
+
+    #[test]
+    fn eval_logits_shape_and_determinism() {
+        let mut sess = NativeSession::new(&cfg("full", 3)).unwrap();
+        let (toks, _) = toy_batch(&sess);
+        let a = sess.eval_logits(&toks).unwrap();
+        let b = sess.eval_logits(&toks).unwrap();
+        assert_eq!(a.len(), sess.batch * 3);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn state_roundtrip_resumes_identically() {
+        let mut s1 = NativeSession::new(&cfg("full-wtacrs30", 2)).unwrap();
+        let (toks, labs) = toy_batch(&s1);
+        let zn = vec![1.0f32; s1.n_approx_layers() * s1.batch];
+        for _ in 0..3 {
+            s1.train_step(&toks, &labs, &[], &zn).unwrap();
+        }
+        let snap = s1.state();
+        let mut s2 = NativeSession::new(&cfg("full-wtacrs30", 2)).unwrap();
+        s2.restore_state(snap).unwrap();
+        let (l1, _) = s1.train_step(&toks, &labs, &[], &zn).unwrap();
+        let (l2, _) = s2.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn restore_rejects_wrong_shapes() {
+        let mut s = NativeSession::new(&cfg("full", 2)).unwrap();
+        assert!(s.restore_state(vec![]).is_err());
+        let mut bad = s.state();
+        bad[1] = HostTensor::f32(vec![2, 2], vec![0.0; 4]);
+        assert!(s.restore_state(bad).is_err());
+    }
+
+    #[test]
+    fn regression_head_trains() {
+        let mut sess = NativeSession::new(&cfg("full-wtacrs30", 1)).unwrap();
+        let (toks, _) = toy_batch(&sess);
+        let labs: Vec<f32> = (0..sess.batch).map(|r| (r % 5) as f32).collect();
+        let zn = vec![1.0f32; sess.n_approx_layers() * sess.batch];
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..40 {
+            let (loss, _) = sess.train_step(&toks, &[], &labs, &zn).unwrap();
+            assert!(loss.is_finite());
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first, "regression loss {first} -> {last}");
+    }
+
+    #[test]
+    fn weight_grad_exact_vs_sampled_unbiased_shape() {
+        let sess = NativeSession::new(&cfg("full-wtacrs30", 2)).unwrap();
+        let mut rng = Rng::new(3);
+        let acts = Mat::randn(sess.batch, 6, &mut rng);
+        let delta = Mat::randn(sess.batch, 4, &mut rng);
+        let zn = vec![1.0f32; 3 * sess.batch];
+        let g = sess.weight_grad(&acts, &delta, 0, &zn, &mut rng);
+        assert_eq!((g.rows, g.cols), (6, 4));
+        // Averaged over many redraws, the sampled GEMM approximates the
+        // exact product (unbiasedness of Eq. 5 over the batch dimension).
+        let exact = acts.transpose().matmul(&delta);
+        let mut acc = Mat::zeros(6, 4);
+        for _ in 0..800 {
+            acc.add_assign(&sess.weight_grad(&acts, &delta, 0, &zn, &mut rng));
+        }
+        let mean = acc.scale(1.0 / 800.0);
+        let rel = mean.sub(&exact).frob_norm() / exact.frob_norm();
+        assert!(rel < 0.2, "sampled weight-grad biased: rel {rel}");
+    }
+}

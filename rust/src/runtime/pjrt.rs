@@ -1,0 +1,277 @@
+//! PJRT adapter: the AOT-artifact [`Engine`] behind the [`Backend`]
+//! trait (cargo feature `pjrt`).
+//!
+//! Sessions own the positional input vector of the train-step graph and
+//! swap step outputs back into the input slots without copying tensor
+//! payloads (at lm_100m scale a clone costs ~1.2GB of memcpy per step).
+
+use std::sync::Arc;
+
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
+
+use super::backend::{Backend, BackendModelDims, SessionConfig, TrainSession};
+use super::engine::{Engine, Executable};
+use super::tensor::HostTensor;
+
+/// Artifact ids for a (size, method, n_out) GLUE config — the eval/init
+/// graphs depend only on the tuning family (method prefix).
+pub fn artifact_ids(size: &str, method: &str, n_out: usize) -> (String, String, String) {
+    let family = method.split('-').next().unwrap_or(method);
+    (
+        format!("train_{size}_{method}_c{n_out}"),
+        format!("eval_{size}_{family}_c{n_out}"),
+        format!("init_{size}_{family}_c{n_out}"),
+    )
+}
+
+/// Advance the positional train-loop state from a step's outputs by
+/// swapping (outputs t/m/v/step/znorms into the input slots).
+///
+/// Output layout contract: t(nt), m(nt), v(nt), step, loss, znorms.
+pub fn advance_state(
+    state: &mut [HostTensor],
+    outs: &mut [HostTensor],
+    nt: usize,
+    nf: usize,
+    step_slot: usize,
+    znorms_slot: usize,
+) {
+    for i in 0..nt {
+        std::mem::swap(&mut state[i], &mut outs[i]);
+        std::mem::swap(&mut state[nt + nf + i], &mut outs[nt + i]);
+        std::mem::swap(&mut state[nt + nf + nt + i], &mut outs[2 * nt + i]);
+    }
+    std::mem::swap(&mut state[step_slot], &mut outs[3 * nt]);
+    std::mem::swap(&mut state[znorms_slot], &mut outs[3 * nt + 2]);
+}
+
+/// PJRT/XLA execution backend over an artifact directory.
+pub struct PjrtBackend {
+    engine: Arc<Engine>,
+}
+
+impl PjrtBackend {
+    pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
+        Ok(PjrtBackend { engine: Arc::new(Engine::new(artifacts_dir)?) })
+    }
+
+    pub fn from_default_dir() -> Result<Self> {
+        Ok(PjrtBackend { engine: Arc::new(Engine::from_default_dir()?) })
+    }
+
+    pub fn from_engine(engine: Arc<Engine>) -> Self {
+        PjrtBackend { engine }
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+}
+
+impl Backend for PjrtBackend {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn model_dims(&self, size: &str) -> Result<BackendModelDims> {
+        let m = self
+            .engine
+            .manifest
+            .models
+            .get(size)
+            .ok_or_else(|| anyhow!("manifest has no model {size:?}"))?;
+        Ok(BackendModelDims { vocab: m.vocab, seq_len: m.seq_len, batch: m.batch })
+    }
+
+    fn open(&self, cfg: &SessionConfig) -> Result<Box<dyn TrainSession>> {
+        if cfg.batch != 0 {
+            bail!("pjrt backend: batch size is fixed by the compiled artifact");
+        }
+        let (train_id, eval_id, init_id) = artifact_ids(&cfg.size, &cfg.method, cfg.n_out);
+        Ok(Box::new(PjrtSession::new(&self.engine, &train_id, &eval_id, &init_id, cfg)?))
+    }
+}
+
+/// Positional indices of the non-state train inputs.
+struct Slots {
+    nt: usize,
+    nf: usize,
+    step: usize,
+    tokens: usize,
+    labels: usize,
+    znorms: usize,
+    lr: usize,
+}
+
+/// A live PJRT training session bound to (train, eval, init) artifacts.
+pub struct PjrtSession {
+    train: Arc<Executable>,
+    eval: Arc<Executable>,
+    slots: Slots,
+    n_approx: usize,
+    n_out: usize,
+    /// Full positional input vector for the train step (mutated in place).
+    state: Vec<HostTensor>,
+}
+
+impl PjrtSession {
+    pub fn new(
+        engine: &Engine,
+        train_id: &str,
+        eval_id: &str,
+        init_id: &str,
+        cfg: &SessionConfig,
+    ) -> Result<Self> {
+        let train = engine.load(train_id)?;
+        let eval = engine.load(eval_id)?;
+        let init = engine.load(init_id)?;
+
+        let spec = &train.spec;
+        let nt = spec.meta_usize("n_trainable")?;
+        let nf = spec.meta_usize("n_frozen")?;
+        let n_approx = spec.meta_usize("n_approx_layers")?;
+        let slots = Slots {
+            nt,
+            nf,
+            step: spec.input_index("step")?,
+            tokens: spec.input_index("tokens")?,
+            labels: spec.input_index("labels")?,
+            znorms: spec.input_index("znorms")?,
+            lr: spec.input_index("lr")?,
+        };
+        let seed_slot = spec.input_index("seed")?;
+
+        // init outputs: t(nt), f(nf), m(nt), v(nt), step — exactly the
+        // leading train inputs.
+        let init_out = init
+            .run(&[HostTensor::scalar_i32(cfg.seed as i32)])
+            .context("running init graph")?;
+        if init_out.len() != 3 * nt + nf + 1 {
+            bail!(
+                "init graph of {init_id} returned {} outputs, expected {}",
+                init_out.len(),
+                3 * nt + nf + 1
+            );
+        }
+
+        let mut state: Vec<HostTensor> = spec
+            .inputs
+            .iter()
+            .map(|t| HostTensor::zeros(&t.shape, t.dtype))
+            .collect();
+        for (i, t) in init_out.into_iter().enumerate() {
+            state[i] = t; // t, f, m, v, step line up with input order
+        }
+        state[slots.lr] = HostTensor::scalar_f32(cfg.lr);
+        state[seed_slot] = HostTensor::scalar_i32(cfg.seed as i32);
+        state[slots.znorms] = HostTensor::ones_f32(&spec.inputs[slots.znorms].shape);
+
+        Ok(PjrtSession { train, eval, slots, n_approx, n_out: cfg.n_out, state })
+    }
+
+    fn labels_tensor(&self, labels_i32: &[i32], labels_f32: &[f32]) -> Result<HostTensor> {
+        let spec = &self.train.spec.inputs[self.slots.labels];
+        match spec.dtype {
+            super::tensor::DType::I32 => {
+                if labels_i32.len() != spec.numel() {
+                    bail!(
+                        "batch has {} class labels, artifact wants {}",
+                        labels_i32.len(),
+                        spec.numel()
+                    );
+                }
+                Ok(HostTensor::i32(spec.shape.clone(), labels_i32.to_vec()))
+            }
+            super::tensor::DType::F32 => {
+                if spec.numel() == labels_f32.len() {
+                    Ok(HostTensor::f32(spec.shape.clone(), labels_f32.to_vec()))
+                } else {
+                    // LM artifacts carry a placeholder label slot.
+                    Ok(HostTensor::zeros(&spec.shape, spec.dtype))
+                }
+            }
+        }
+    }
+}
+
+impl TrainSession for PjrtSession {
+    fn batch_size(&self) -> usize {
+        self.train.spec.batch
+    }
+    fn seq_len(&self) -> usize {
+        self.train.spec.seq
+    }
+    fn n_out(&self) -> usize {
+        self.n_out
+    }
+    fn n_approx_layers(&self) -> usize {
+        self.n_approx
+    }
+
+    fn train_step(
+        &mut self,
+        tokens: &[i32],
+        labels_i32: &[i32],
+        labels_f32: &[f32],
+        znorms: &[f32],
+    ) -> Result<(f32, Vec<f32>)> {
+        let s = &self.slots;
+        let (b, q) = (self.train.spec.batch, self.train.spec.seq);
+        if tokens.len() != b * q {
+            bail!("tokens: expected {}x{} ids, got {}", b, q, tokens.len());
+        }
+        self.state[s.tokens] = HostTensor::i32(vec![b, q], tokens.to_vec());
+        self.state[s.labels] = self.labels_tensor(labels_i32, labels_f32)?;
+        let zn_shape = self.train.spec.inputs[s.znorms].shape.clone();
+        self.state[s.znorms] = HostTensor::f32(zn_shape, znorms.to_vec());
+
+        let mut outs = self.train.run(&self.state)?;
+        // outputs: t(nt), m(nt), v(nt), step, loss, znorms
+        let (nt, nf) = (s.nt, s.nf);
+        let loss = outs[3 * nt + 1].scalar_f32_value()?;
+        let (step_slot, znorms_slot) = (s.step, s.znorms);
+        advance_state(&mut self.state, &mut outs, nt, nf, step_slot, znorms_slot);
+        let refreshed = self.state[znorms_slot].as_f32()?.to_vec();
+        Ok((loss, refreshed))
+    }
+
+    fn eval_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let s = &self.slots;
+        let n_in = self.eval.spec.inputs.len();
+        // eval inputs: t(nt), f(nf), tokens — reuse the live state.
+        let mut inputs: Vec<HostTensor> = self.state[..s.nt + s.nf].to_vec();
+        let tok_spec = &self.eval.spec.inputs[n_in - 1];
+        if tokens.len() != tok_spec.numel() {
+            bail!("eval tokens: expected {} ids, got {}", tok_spec.numel(), tokens.len());
+        }
+        inputs.push(HostTensor::i32(tok_spec.shape.clone(), tokens.to_vec()));
+        let outs = self.eval.run(&inputs)?;
+        Ok(outs[0].as_f32()?.to_vec())
+    }
+
+    fn state(&self) -> Vec<HostTensor> {
+        self.state.clone()
+    }
+
+    fn restore_state(&mut self, state: Vec<HostTensor>) -> Result<()> {
+        if state.len() != self.state.len() {
+            bail!("checkpoint has {} tensors, expected {}", state.len(), self.state.len());
+        }
+        self.state = state;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_id_layout() {
+        let (t, e, i) = artifact_ids("tiny", "lora-wtacrs30", 3);
+        assert_eq!(t, "train_tiny_lora-wtacrs30_c3");
+        assert_eq!(e, "eval_tiny_lora_c3");
+        assert_eq!(i, "init_tiny_lora_c3");
+    }
+}

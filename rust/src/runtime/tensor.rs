@@ -1,10 +1,13 @@
-//! Host tensors + conversion to/from `xla::Literal`.
+//! Host tensors (+ conversion to/from `xla::Literal` under the `pjrt`
+//! feature).
 //!
 //! The positional artifact contract only uses f32 and i32 (the manifest's
-//! `dtype` field); this module keeps data in typed Vecs and handles the
-//! byte-level bridging with the PJRT literals.
+//! `dtype` field); this module keeps data in typed Vecs.  The byte-level
+//! bridging with PJRT literals is feature-gated so the default build has
+//! no XLA dependency.
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::util::error::{Context, Result};
+use crate::{anyhow, bail};
 
 /// The two dtypes the artifact contract uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -27,6 +30,7 @@ impl DType {
             DType::I32 => "i32",
         }
     }
+    #[cfg(feature = "pjrt")]
     pub fn element_type(&self) -> xla::ElementType {
         match self {
             DType::F32 => xla::ElementType::F32,
@@ -123,6 +127,7 @@ impl HostTensor {
     }
 
     /// Build the PJRT literal (copies).
+    #[cfg(feature = "pjrt")]
     pub fn to_literal(&self) -> Result<xla::Literal> {
         let bytes: &[u8] = match &self.data {
             TensorData::F32(v) => bytemuck_f32(v),
@@ -137,6 +142,7 @@ impl HostTensor {
     }
 
     /// Read a literal back into a host tensor.
+    #[cfg(feature = "pjrt")]
     pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
         let shape = lit.array_shape().map_err(|e| anyhow!("shape: {e:?}"))?;
         let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
@@ -156,9 +162,11 @@ impl HostTensor {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn bytemuck_f32(v: &[f32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
+#[cfg(feature = "pjrt")]
 fn bytemuck_i32(v: &[i32]) -> &[u8] {
     unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
 }
@@ -188,6 +196,7 @@ mod tests {
         HostTensor::f32(vec![2, 3], vec![0.0; 5]);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_f32() {
         let t = HostTensor::f32(vec![2, 2], vec![1.0, 2.0, 3.0, 4.0]);
@@ -196,6 +205,7 @@ mod tests {
         assert_eq!(t, back);
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn literal_roundtrip_i32_scalar() {
         let t = HostTensor::scalar_i32(42);

@@ -126,7 +126,14 @@ impl Gen for VecF64 {
     fn shrink(&self, v: &Vec<f64>) -> Vec<Vec<f64>> {
         let mut out = vec![];
         if v.len() > self.min_len {
-            out.push(v[..v.len() / 2.max(self.min_len)].to_vec());
+            // Truncate to max(len/2, min_len).  NB: the unparenthesized
+            // form `v.len() / 2.max(self.min_len)` parses as
+            // `v.len() / max(2, min_len)` — a division, not a floor —
+            // and used to discard the halving candidate whenever
+            // min_len > 2 (it produced vectors shorter than min_len
+            // that `retain` then dropped).
+            let cut = (v.len() / 2).max(self.min_len);
+            out.push(v[..cut].to_vec());
             let mut shorter = v.clone();
             shorter.pop();
             out.push(shorter);
@@ -185,6 +192,27 @@ mod tests {
         assert!(shrunk >= 50);
         // ...and be much smaller than the max.
         assert!(shrunk <= 500, "poor shrink: {shrunk}");
+    }
+
+    #[test]
+    fn vec_shrink_respects_min_len_and_keeps_halving() {
+        // Regression: with min_len > 2 the old precedence bug divided by
+        // min_len instead of flooring at it, so the halving candidate
+        // fell below min_len and was dropped — shrinking stalled.
+        let g = VecF64 { min_len: 3, max_len: 20, lo: 0.0, hi: 1.0 };
+        let v = vec![0.5; 8];
+        let cands = g.shrink(&v);
+        assert!(!cands.is_empty());
+        assert!(cands.iter().all(|c| c.len() >= 3), "candidate below min_len");
+        // The halving candidate max(8/2, 3) = 4 must be present.
+        assert!(cands.iter().any(|c| c.len() == 4), "halving candidate missing: {cands:?}");
+        // At min_len the floor binds: max(6/2, 5) = 5.
+        let g5 = VecF64 { min_len: 5, max_len: 20, lo: 0.0, hi: 1.0 };
+        let c5 = g5.shrink(&vec![0.1; 6]);
+        assert!(c5.iter().any(|c| c.len() == 5));
+        assert!(c5.iter().all(|c| c.len() >= 5));
+        // Nothing shrinks at min_len.
+        assert!(g5.shrink(&vec![0.1; 5]).is_empty());
     }
 
     #[test]

@@ -1,56 +1,113 @@
-//! `log`-crate backend: leveled, timestamped stderr logger.
+//! Leveled, timestamped stderr logger (the offline build ships no `log`
+//! crate; the `log_error!`/`log_warn!`/`log_info!`/`log_debug!` macros
+//! are the crate-wide logging surface).
 
-use log::{Level, LevelFilter, Metadata, Record};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
 use std::time::Instant;
 
-struct StderrLogger {
-    start: Instant,
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 0,
+    Warn = 1,
+    Info = 2,
+    Debug = 3,
+    Trace = 4,
 }
 
-impl log::Log for StderrLogger {
-    fn enabled(&self, metadata: &Metadata) -> bool {
-        metadata.level() <= log::max_level()
-    }
-    fn log(&self, record: &Record) {
-        if !self.enabled(record.metadata()) {
-            return;
-        }
-        let t = self.start.elapsed().as_secs_f64();
-        let lvl = match record.level() {
+impl Level {
+    fn tag(self) -> &'static str {
+        match self {
             Level::Error => "ERROR",
             Level::Warn => "WARN ",
             Level::Info => "INFO ",
             Level::Debug => "DEBUG",
             Level::Trace => "TRACE",
-        };
-        eprintln!("[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+        }
     }
-    fn flush(&self) {}
 }
+
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(Level::Info as usize);
+static START: OnceLock<Instant> = OnceLock::new();
 
 /// Install the logger once; level from WTACRS_LOG (error..trace, default info).
 pub fn init() {
-    static ONCE: std::sync::Once = std::sync::Once::new();
-    ONCE.call_once(|| {
-        let level = match std::env::var("WTACRS_LOG").as_deref() {
-            Ok("error") => LevelFilter::Error,
-            Ok("warn") => LevelFilter::Warn,
-            Ok("debug") => LevelFilter::Debug,
-            Ok("trace") => LevelFilter::Trace,
-            _ => LevelFilter::Info,
-        };
-        let logger = Box::leak(Box::new(StderrLogger { start: Instant::now() }));
-        let _ = log::set_logger(logger);
-        log::set_max_level(level);
-    });
+    START.get_or_init(Instant::now);
+    let level = match std::env::var("WTACRS_LOG").as_deref() {
+        Ok("error") => Level::Error,
+        Ok("warn") => Level::Warn,
+        Ok("debug") => Level::Debug,
+        Ok("trace") => Level::Trace,
+        _ => Level::Info,
+    };
+    MAX_LEVEL.store(level as usize, Ordering::Relaxed);
+}
+
+pub fn enabled(level: Level) -> bool {
+    (level as usize) <= MAX_LEVEL.load(Ordering::Relaxed)
+}
+
+/// Emit one record; `target` is usually `module_path!()`.
+pub fn log(level: Level, target: &str, args: std::fmt::Arguments<'_>) {
+    if !enabled(level) {
+        return;
+    }
+    let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
+    eprintln!("[{t:9.3}s {} {target}] {args}", level.tag());
+}
+
+/// Emit at an explicit [`Level`] variant; the per-level macros below
+/// are thin wrappers over this.
+#[macro_export]
+macro_rules! log_at {
+    ($lvl:ident, $($arg:tt)*) => {
+        $crate::util::logging::log(
+            $crate::util::logging::Level::$lvl,
+            module_path!(),
+            format_args!($($arg)*),
+        )
+    };
+}
+
+#[macro_export]
+macro_rules! log_error {
+    ($($arg:tt)*) => { $crate::log_at!(Error, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_warn {
+    ($($arg:tt)*) => { $crate::log_at!(Warn, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_info {
+    ($($arg:tt)*) => { $crate::log_at!(Info, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_debug {
+    ($($arg:tt)*) => { $crate::log_at!(Debug, $($arg)*) };
+}
+
+#[macro_export]
+macro_rules! log_trace {
+    ($($arg:tt)*) => { $crate::log_at!(Trace, $($arg)*) };
 }
 
 #[cfg(test)]
 mod tests {
+    use super::*;
+
     #[test]
     fn init_is_idempotent() {
-        super::init();
-        super::init();
-        log::info!("logging smoke");
+        init();
+        init();
+        crate::log_info!("logging smoke");
+    }
+
+    #[test]
+    fn level_order() {
+        assert!(Level::Error < Level::Trace);
+        assert!(Level::Info <= Level::Info);
     }
 }

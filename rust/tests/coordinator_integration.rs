@@ -1,34 +1,29 @@
-//! Integration: the full coordinator stack over real artifacts —
-//! trainer + norm cache + eval metrics + checkpointing + the LoRA and
-//! LST tuning families.  Skips gracefully when artifacts/ is missing.
+//! Integration: the full coordinator stack over the pure-Rust
+//! [`NativeBackend`] — trainer + norm cache + eval metrics +
+//! checkpointing + the LoRA and LST tuning families.  Runs offline with
+//! default features (no artifacts, no XLA); thresholds are calibrated
+//! against the planted synthetic-GLUE generative processes.
 
 use wtacrs::coordinator::{checkpoint, run_glue, ExperimentOptions, TrainOptions, Trainer};
 use wtacrs::data::{glue, Batcher};
 use wtacrs::metrics::MetricKind;
-use wtacrs::runtime::Engine;
+use wtacrs::runtime::{Backend, NativeBackend};
 
-fn engine() -> Option<Engine> {
-    if !std::path::Path::new("artifacts/manifest.json").exists() {
-        eprintln!("skipping: artifacts/ not built");
-        return None;
-    }
-    Some(Engine::new("artifacts").expect("engine"))
-}
-
-fn opts(steps: usize) -> ExperimentOptions {
+fn opts(steps: usize, lr: f32, train_size: usize, val_size: usize) -> ExperimentOptions {
     ExperimentOptions {
-        train: TrainOptions { lr: 1e-3, seed: 0, max_steps: steps, eval_every: 0, patience: 0 },
-        train_size: 256,
-        val_size: 64,
+        train: TrainOptions { lr, seed: 0, max_steps: steps, eval_every: 0, patience: 0 },
+        train_size,
+        val_size,
         data_seed: 5,
     }
 }
 
 #[test]
 fn glue_run_learns_above_chance() {
-    let Some(eng) = engine() else { return };
-    let r = run_glue(&eng, "sst2", "tiny", "full-wtacrs30", &opts(80)).unwrap();
-    assert!(r.score > 0.55, "sst2 acc {} not above chance", r.score);
+    let backend = NativeBackend::new();
+    let r = run_glue(&backend, "sst2", "tiny", "full-wtacrs30", &opts(300, 1e-3, 2048, 256))
+        .unwrap();
+    assert!(r.score > 0.54, "sst2 acc {} not above chance", r.score);
     assert_eq!(r.metric_name, "acc");
     assert!(r.report.norm_cache_coverage > 0.9);
     assert!(r.report.losses.first().unwrap() > r.report.losses.last().unwrap());
@@ -36,9 +31,9 @@ fn glue_run_learns_above_chance() {
 
 #[test]
 fn lora_and_lst_families_run() {
-    let Some(eng) = engine() else { return };
-    for method in ["lora", "lst", "lora-wtacrs30"] {
-        let r = run_glue(&eng, "rte", "tiny", method, &opts(40)).unwrap();
+    let backend = NativeBackend::new();
+    for (method, lr) in [("lora", 3e-3), ("lst", 3e-3), ("lora-wtacrs30", 3e-3)] {
+        let r = run_glue(&backend, "rte", "tiny", method, &opts(40, lr, 512, 128)).unwrap();
         assert!(
             r.report.losses.iter().all(|l| l.is_finite()),
             "{method} produced non-finite loss"
@@ -48,67 +43,55 @@ fn lora_and_lst_families_run() {
 
 #[test]
 fn regression_task_reports_correlation() {
-    let Some(eng) = engine() else { return };
-    let r = run_glue(&eng, "stsb", "tiny", "full-wtacrs30", &opts(120)).unwrap();
+    let backend = NativeBackend::new();
+    let r = run_glue(&backend, "stsb", "tiny", "full-wtacrs30", &opts(200, 1e-3, 1024, 256))
+        .unwrap();
     assert_eq!(r.metric_name, "pearson");
-    assert!(r.score > 0.1, "stsb pearson {} shows no learning", r.score);
+    assert!(r.score > 0.25, "stsb pearson {} shows no learning", r.score);
 }
 
 #[test]
 fn mnli_three_class_path() {
-    let Some(eng) = engine() else { return };
-    let r = run_glue(&eng, "mnli", "tiny", "full-wtacrs30", &opts(60)).unwrap();
-    assert!(r.score > 0.34, "mnli acc {} below chance", r.score);
+    let backend = NativeBackend::new();
+    let r = run_glue(&backend, "mnli", "tiny", "full-wtacrs30", &opts(200, 1e-3, 1024, 256))
+        .unwrap();
+    assert!(r.score > 0.40, "mnli acc {} near chance", r.score);
 }
 
 #[test]
 fn exact_and_det_families_run() {
-    // Regression test for the keep_unused lowering bug: graphs that
-    // ignore znorms/seed must still accept the full positional input set.
-    let Some(eng) = engine() else { return };
+    // The exact, deterministic-top-k and plain-CRS estimators must all
+    // drive the trainer without numerical blowups.
+    let backend = NativeBackend::new();
     for method in ["full", "full-det10", "full-crs10"] {
-        let r = run_glue(&eng, "rte", "tiny", method, &opts(20)).unwrap();
+        let r = run_glue(&backend, "rte", "tiny", method, &opts(20, 1e-3, 512, 128)).unwrap();
         assert!(r.report.losses.iter().all(|l| l.is_finite()), "{method}");
     }
 }
 
 #[test]
 fn checkpoint_roundtrip_resumes_identically() {
-    let Some(eng) = engine() else { return };
+    let backend = NativeBackend::new();
     let spec = glue::task("rte").unwrap();
-    let model = &eng.manifest.models["tiny"];
-    let ds = glue::generate(&spec, model.vocab, model.seq_len, 128, 3);
+    let dims = backend.model_dims("tiny").unwrap();
+    let ds = glue::generate(&spec, dims.vocab, dims.seq_len, 128, 3);
 
     let topts =
         TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
-    let mut t1 = Trainer::new(
-        &eng,
-        "train_tiny_full-wtacrs30_c2",
-        "eval_tiny_full_c2",
-        "init_tiny_full_c2",
-        ds.len(),
-        topts.clone(),
-    )
-    .unwrap();
+    let mut t1 = Trainer::new(&backend, "tiny", "full-wtacrs30", 2, ds.len(), topts.clone())
+        .unwrap();
     let mut batcher = Batcher::new(&ds, t1.batch_size(), 1);
     for _ in 0..5 {
         let b = batcher.next_batch();
         t1.train_step(&b).unwrap();
     }
     let path = std::env::temp_dir().join(format!("wtacrs-it-{}.ckpt", std::process::id()));
-    checkpoint::save(&path, t1.state()).unwrap();
+    checkpoint::save(&path, &t1.state()).unwrap();
 
     // Fresh trainer restored from the checkpoint must produce the same
     // loss on the same next batch as the original.
-    let mut t2 = Trainer::new(
-        &eng,
-        "train_tiny_full-wtacrs30_c2",
-        "eval_tiny_full_c2",
-        "init_tiny_full_c2",
-        ds.len(),
-        topts,
-    )
-    .unwrap();
+    let mut t2 =
+        Trainer::new(&backend, "tiny", "full-wtacrs30", 2, ds.len(), topts).unwrap();
     t2.restore_state(checkpoint::load(&path).unwrap()).unwrap();
     // share the cache so sampling distributions agree
     t2.norm_cache = t1.norm_cache.clone();
@@ -121,15 +104,15 @@ fn checkpoint_roundtrip_resumes_identically() {
 
 #[test]
 fn evaluate_is_deterministic() {
-    let Some(eng) = engine() else { return };
+    let backend = NativeBackend::new();
     let spec = glue::task("rte").unwrap();
-    let model = &eng.manifest.models["tiny"];
-    let (_, val) = glue::train_val(&spec, model.vocab, model.seq_len, 5);
-    let trainer = Trainer::new(
-        &eng,
-        "train_tiny_full-wtacrs30_c2",
-        "eval_tiny_full_c2",
-        "init_tiny_full_c2",
+    let dims = backend.model_dims("tiny").unwrap();
+    let (_, val) = glue::train_val(&spec, dims.vocab, dims.seq_len, 5);
+    let mut trainer = Trainer::new(
+        &backend,
+        "tiny",
+        "full-wtacrs30",
+        2,
         64,
         TrainOptions::default(),
     )
@@ -137,4 +120,23 @@ fn evaluate_is_deterministic() {
     let a = trainer.evaluate(&val, MetricKind::Accuracy).unwrap();
     let b = trainer.evaluate(&val, MetricKind::Accuracy).unwrap();
     assert_eq!(a, b);
+}
+
+#[test]
+fn wtacrs_tracks_exact_training_loss() {
+    // The estimator story of Table 1: with a 30% budget the sampled
+    // trainer should track exact training rather than diverge — final
+    // smoothed loss within a loose band of the exact trainer's.
+    let backend = NativeBackend::new();
+    let exact = run_glue(&backend, "sst2", "tiny", "full", &opts(120, 1e-3, 1024, 128))
+        .unwrap();
+    let wta = run_glue(&backend, "sst2", "tiny", "full-wtacrs30", &opts(120, 1e-3, 1024, 128))
+        .unwrap();
+    let tail = |r: &wtacrs::coordinator::TrainReport| {
+        let n = r.losses.len();
+        r.losses[n - 10..].iter().sum::<f32>() / 10.0
+    };
+    let (le, lw) = (tail(&exact.report), tail(&wta.report));
+    assert!(lw.is_finite() && le.is_finite());
+    assert!(lw < le + 0.35, "wtacrs tail loss {lw} far above exact {le}");
 }

@@ -1,164 +1,182 @@
 //! Integration: load real AOT artifacts, compile on PJRT, execute, and
 //! check the numerical contracts end-to-end (init -> train -> eval).
 //!
-//! Requires `make artifacts` (skips gracefully when absent so `cargo
-//! test` works on a fresh checkout, but CI/Makefile always builds them).
+//! Gated on the `pjrt` cargo feature: the default offline build has no
+//! XLA/PJRT engine.  Build with `--features pjrt` (requires the vendored
+//! `xla` crate) and run `make artifacts` first.
 
-use wtacrs::runtime::{Engine, HostTensor};
-
-fn engine() -> Option<Engine> {
-    let dir = std::path::Path::new("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: artifacts/ not built");
-        return None;
-    }
-    Some(Engine::new(dir).expect("engine"))
-}
-
-fn zeros_for(spec: &wtacrs::runtime::ArtifactSpec) -> Vec<HostTensor> {
-    spec.inputs
-        .iter()
-        .map(|t| HostTensor::zeros(&t.shape, t.dtype))
-        .collect()
-}
-
+/// With the default feature set this suite is intentionally empty; this
+/// placeholder documents how to enable it.
+#[cfg(not(feature = "pjrt"))]
 #[test]
-fn init_then_eval_tiny() {
-    let Some(eng) = engine() else { return };
-    let init = eng.load("init_tiny_full_c2").expect("load init");
-    let outs = init.run(&[HostTensor::scalar_i32(7)]).expect("run init");
-    assert_eq!(outs.len(), init.spec.outputs.len());
-    // Params must be initialized (non-zero embedding).
-    let embed = &outs[0];
-    let sum: f32 = embed.as_f32().unwrap().iter().map(|x| x.abs()).sum();
-    assert!(sum > 0.0, "init produced all-zero params");
-
-    let eval = eng.load("eval_tiny_full_c2").expect("load eval");
-    let nt = init.spec.outputs.iter().filter(|o| o.name.starts_with("t")).count();
-    // Feed the trainable params (first nt init outputs) + tokens.
-    let n_in = eval.spec.inputs.len();
-    let mut inputs: Vec<HostTensor> = outs[..n_in - 1].to_vec();
-    let tok_spec = &eval.spec.inputs[n_in - 1];
-    inputs.push(HostTensor::i32(
-        tok_spec.shape.clone(),
-        vec![1; tok_spec.numel()],
-    ));
-    let logits = eval.run(&inputs).expect("run eval");
-    assert_eq!(logits.len(), 1);
-    assert_eq!(logits[0].shape, vec![eval.spec.batch, 2]);
-    assert!(logits[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
-    let _ = nt;
-}
-
-#[test]
-fn train_step_decreases_loss_wtacrs() {
-    let Some(eng) = engine() else { return };
-    let init = eng.load("init_tiny_full_c2").unwrap();
-    let train = eng.load("train_tiny_full-wtacrs30_c2").unwrap();
-    let spec = &train.spec;
-    let state0 = init.run(&[HostTensor::scalar_i32(3)]).unwrap();
-
-    let nt = spec.meta_usize("n_trainable").unwrap();
-    let nf = spec.meta_usize("n_frozen").unwrap();
-    assert_eq!(nf, 0);
-
-    // Assemble train inputs per the manifest contract.
-    let mut inputs = zeros_for(spec);
-    // init outputs: t..(nt), f..(nf), m..(nt), v..(nt), step
-    for i in 0..state0.len() {
-        inputs[i] = state0[i].clone();
-    }
-    let i_tokens = spec.input_index("tokens").unwrap();
-    let i_labels = spec.input_index("labels").unwrap();
-    let i_znorms = spec.input_index("znorms").unwrap();
-    let i_seed = spec.input_index("seed").unwrap();
-    let i_lr = spec.input_index("lr").unwrap();
-    let b = spec.batch;
-    let s = spec.seq;
-    // A linearly-separable toy batch: label = token[0] > vocab/2.
-    let mut toks = vec![0i32; b * s];
-    let mut labs = vec![0i32; b];
-    for r in 0..b {
-        let t = 1 + (r * 31) % 1023;
-        toks[r * s..(r + 1) * s].fill(t as i32);
-        labs[r] = (t > 512) as i32;
-    }
-    inputs[i_tokens] = HostTensor::i32(vec![b, s], toks);
-    inputs[i_labels] = HostTensor::i32(vec![b], labs);
-    inputs[i_znorms] = HostTensor::ones_f32(&spec.inputs[i_znorms].shape);
-    inputs[i_seed] = HostTensor::scalar_i32(0);
-    inputs[i_lr] = HostTensor::scalar_f32(1e-3);
-
-    let mut first_loss = f32::NAN;
-    let mut last_loss = f32::NAN;
-    for step in 0..10 {
-        let outs = train.run(&inputs).unwrap();
-        // outputs: t(nt), m(nt), v(nt), step, loss, znorms
-        let loss = outs[3 * nt + 1].scalar_f32_value().unwrap();
-        assert!(loss.is_finite());
-        if step == 0 {
-            first_loss = loss;
-        }
-        last_loss = loss;
-        for i in 0..nt {
-            inputs[i] = outs[i].clone(); // params
-            inputs[nt + nf + i] = outs[nt + i].clone(); // m
-            inputs[nt + nf + nt + i] = outs[2 * nt + i].clone(); // v
-        }
-        let i_step = spec.input_index("step").unwrap();
-        inputs[i_step] = outs[3 * nt].clone();
-        inputs[i_znorms] = outs[3 * nt + 2].clone();
-    }
-    assert!(
-        last_loss < first_loss,
-        "loss did not decrease: {first_loss} -> {last_loss}"
+fn runtime_integration_requires_pjrt_feature() {
+    eprintln!(
+        "runtime_integration skipped: the PJRT/XLA engine is gated behind \
+         the `pjrt` cargo feature; enabling it requires adding the \
+         vendored `xla` crate to rust/Cargo.toml and running `make \
+         artifacts` first (then: cargo test --features pjrt)"
     );
-    // The refreshed gradient-norm cache must be strictly positive.
-    let zn = &inputs[i_znorms];
-    assert!(zn.as_f32().unwrap().iter().all(|&x| x > 0.0));
 }
 
-#[test]
-fn kernel_artifact_pallas_matches_ref() {
-    let Some(eng) = engine() else { return };
-    let refk = eng.load("kernel_sampled_matmul_ref").unwrap();
-    let palk = eng.load("kernel_sampled_matmul_pallas").unwrap();
-    let k = refk.spec.inputs[0].shape[0];
-    let din = refk.spec.inputs[0].shape[1];
-    let dout = refk.spec.inputs[1].shape[1];
-    // Deterministic pseudo-random inputs.
-    let mut h = vec![0f32; k * din];
-    let mut dz = vec![0f32; k * dout];
-    let mut x = 1u64;
-    let mut next = || {
-        x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
-        ((x >> 33) as f64 / 2f64.powi(31) - 1.0) as f32
-    };
-    h.iter_mut().for_each(|v| *v = next());
-    dz.iter_mut().for_each(|v| *v = next());
-    let inputs = [
-        HostTensor::f32(vec![k, din], h),
-        HostTensor::f32(vec![k, dout], dz),
-    ];
-    let a = refk.run(&inputs).unwrap();
-    let b = palk.run(&inputs).unwrap();
-    let (av, bv) = (a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
-    assert_eq!(av.len(), bv.len());
-    let max_abs = av
-        .iter()
-        .zip(bv)
-        .map(|(x, y)| (x - y).abs())
-        .fold(0f32, f32::max);
-    assert!(max_abs < 1e-3, "pallas vs ref kernel deviate: {max_abs}");
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_suite {
+    use wtacrs::runtime::{Engine, HostTensor};
 
-#[test]
-fn manifest_shapes_match_graph_outputs() {
-    let Some(eng) = engine() else { return };
-    let eval = eng.load("eval_tiny_full_c2").unwrap();
-    let inputs = zeros_for(&eval.spec);
-    let outs = eval.run(&inputs).unwrap();
-    for (o, spec) in outs.iter().zip(&eval.spec.outputs) {
-        assert_eq!(o.shape, spec.shape, "output {} shape mismatch", spec.name);
+    fn engine() -> Option<Engine> {
+        let dir = std::path::Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts/ not built");
+            return None;
+        }
+        Some(Engine::new(dir).expect("engine"))
     }
+
+    fn zeros_for(spec: &wtacrs::runtime::ArtifactSpec) -> Vec<HostTensor> {
+        spec.inputs
+            .iter()
+            .map(|t| HostTensor::zeros(&t.shape, t.dtype))
+            .collect()
+    }
+
+    #[test]
+    fn init_then_eval_tiny() {
+        let Some(eng) = engine() else { return };
+        let init = eng.load("init_tiny_full_c2").expect("load init");
+        let outs = init.run(&[HostTensor::scalar_i32(7)]).expect("run init");
+        assert_eq!(outs.len(), init.spec.outputs.len());
+        // Params must be initialized (non-zero embedding).
+        let embed = &outs[0];
+        let sum: f32 = embed.as_f32().unwrap().iter().map(|x| x.abs()).sum();
+        assert!(sum > 0.0, "init produced all-zero params");
+
+        let eval = eng.load("eval_tiny_full_c2").expect("load eval");
+        let nt = init.spec.outputs.iter().filter(|o| o.name.starts_with("t")).count();
+        // Feed the trainable params (first nt init outputs) + tokens.
+        let n_in = eval.spec.inputs.len();
+        let mut inputs: Vec<HostTensor> = outs[..n_in - 1].to_vec();
+        let tok_spec = &eval.spec.inputs[n_in - 1];
+        inputs.push(HostTensor::i32(
+            tok_spec.shape.clone(),
+            vec![1; tok_spec.numel()],
+        ));
+        let logits = eval.run(&inputs).expect("run eval");
+        assert_eq!(logits.len(), 1);
+        assert_eq!(logits[0].shape, vec![eval.spec.batch, 2]);
+        assert!(logits[0].as_f32().unwrap().iter().all(|x| x.is_finite()));
+        let _ = nt;
+    }
+
+    #[test]
+    fn train_step_decreases_loss_wtacrs() {
+        let Some(eng) = engine() else { return };
+        let init = eng.load("init_tiny_full_c2").unwrap();
+        let train = eng.load("train_tiny_full-wtacrs30_c2").unwrap();
+        let spec = &train.spec;
+        let state0 = init.run(&[HostTensor::scalar_i32(3)]).unwrap();
+
+        let nt = spec.meta_usize("n_trainable").unwrap();
+        let nf = spec.meta_usize("n_frozen").unwrap();
+        assert_eq!(nf, 0);
+
+        // Assemble train inputs per the manifest contract.
+        let mut inputs = zeros_for(spec);
+        // init outputs: t..(nt), f..(nf), m..(nt), v..(nt), step
+        for i in 0..state0.len() {
+            inputs[i] = state0[i].clone();
+        }
+        let i_tokens = spec.input_index("tokens").unwrap();
+        let i_labels = spec.input_index("labels").unwrap();
+        let i_znorms = spec.input_index("znorms").unwrap();
+        let i_seed = spec.input_index("seed").unwrap();
+        let i_lr = spec.input_index("lr").unwrap();
+        let b = spec.batch;
+        let s = spec.seq;
+        // A linearly-separable toy batch: label = token[0] > vocab/2.
+        let mut toks = vec![0i32; b * s];
+        let mut labs = vec![0i32; b];
+        for r in 0..b {
+            let t = 1 + (r * 31) % 1023;
+            toks[r * s..(r + 1) * s].fill(t as i32);
+            labs[r] = (t > 512) as i32;
+        }
+        inputs[i_tokens] = HostTensor::i32(vec![b, s], toks);
+        inputs[i_labels] = HostTensor::i32(vec![b], labs);
+        inputs[i_znorms] = HostTensor::ones_f32(&spec.inputs[i_znorms].shape);
+        inputs[i_seed] = HostTensor::scalar_i32(0);
+        inputs[i_lr] = HostTensor::scalar_f32(1e-3);
+
+        let mut first_loss = f32::NAN;
+        let mut last_loss = f32::NAN;
+        for step in 0..10 {
+            let outs = train.run(&inputs).unwrap();
+            // outputs: t(nt), m(nt), v(nt), step, loss, znorms
+            let loss = outs[3 * nt + 1].scalar_f32_value().unwrap();
+            assert!(loss.is_finite());
+            if step == 0 {
+                first_loss = loss;
+            }
+            last_loss = loss;
+            for i in 0..nt {
+                inputs[i] = outs[i].clone(); // params
+                inputs[nt + nf + i] = outs[nt + i].clone(); // m
+                inputs[nt + nf + nt + i] = outs[2 * nt + i].clone(); // v
+            }
+            let i_step = spec.input_index("step").unwrap();
+            inputs[i_step] = outs[3 * nt].clone();
+            inputs[i_znorms] = outs[3 * nt + 2].clone();
+        }
+        assert!(
+            last_loss < first_loss,
+            "loss did not decrease: {first_loss} -> {last_loss}"
+        );
+        // The refreshed gradient-norm cache must be strictly positive.
+        let zn = &inputs[i_znorms];
+        assert!(zn.as_f32().unwrap().iter().all(|&x| x > 0.0));
+    }
+
+    #[test]
+    fn kernel_artifact_pallas_matches_ref() {
+        let Some(eng) = engine() else { return };
+        let refk = eng.load("kernel_sampled_matmul_ref").unwrap();
+        let palk = eng.load("kernel_sampled_matmul_pallas").unwrap();
+        let k = refk.spec.inputs[0].shape[0];
+        let din = refk.spec.inputs[0].shape[1];
+        let dout = refk.spec.inputs[1].shape[1];
+        // Deterministic pseudo-random inputs.
+        let mut h = vec![0f32; k * din];
+        let mut dz = vec![0f32; k * dout];
+        let mut x = 1u64;
+        let mut next = || {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1);
+            ((x >> 33) as f64 / 2f64.powi(31) - 1.0) as f32
+        };
+        h.iter_mut().for_each(|v| *v = next());
+        dz.iter_mut().for_each(|v| *v = next());
+        let inputs = [
+            HostTensor::f32(vec![k, din], h),
+            HostTensor::f32(vec![k, dout], dz),
+        ];
+        let a = refk.run(&inputs).unwrap();
+        let b = palk.run(&inputs).unwrap();
+        let (av, bv) = (a[0].as_f32().unwrap(), b[0].as_f32().unwrap());
+        assert_eq!(av.len(), bv.len());
+        let max_abs = av
+            .iter()
+            .zip(bv)
+            .map(|(x, y)| (x - y).abs())
+            .fold(0f32, f32::max);
+        assert!(max_abs < 1e-3, "pallas vs ref kernel deviate: {max_abs}");
+    }
+
+    #[test]
+    fn manifest_shapes_match_graph_outputs() {
+        let Some(eng) = engine() else { return };
+        let eval = eng.load("eval_tiny_full_c2").unwrap();
+        let inputs = zeros_for(&eval.spec);
+        let outs = eval.run(&inputs).unwrap();
+        for (o, spec) in outs.iter().zip(&eval.spec.outputs) {
+            assert_eq!(o.shape, spec.shape, "output {} shape mismatch", spec.name);
+        }
+    }
+
 }
