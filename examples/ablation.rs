@@ -51,7 +51,8 @@ fn main() -> Result<()> {
     let mut curves = vec![];
     for (method, desc) in methods {
         println!("running {method} — {desc}");
-        let r = run_glue(&backend, p.get("task"), p.get("size"), method, &opts)?;
+        let spec: wtacrs::ops::MethodSpec = method.parse()?;
+        let r = run_glue(&backend, p.get("task"), p.get("size"), &spec, &opts)?;
         curves.push((method, r));
     }
 

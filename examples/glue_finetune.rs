@@ -7,6 +7,7 @@
 //!       [--methods full,full-wtacrs30] [--out results/glue.jsonl]
 
 use wtacrs::coordinator::{self, ExperimentOptions, TrainOptions};
+use wtacrs::ops::MethodSpec;
 use wtacrs::runtime::NativeBackend;
 use wtacrs::util::bench::Table;
 use wtacrs::util::cli::Cli;
@@ -38,11 +39,15 @@ fn main() -> Result<()> {
     } else {
         p.get("tasks").split(',').collect()
     };
-    let methods: Vec<&str> = if p.get("methods") == "all" {
+    let method_names: Vec<&str> = if p.get("methods") == "all" {
         coordinator::experiment::METHODS.to_vec()
     } else {
         p.get("methods").split(',').collect()
     };
+    let methods = method_names
+        .iter()
+        .map(|m| m.parse())
+        .collect::<Result<Vec<MethodSpec>>>()?;
 
     let backend = NativeBackend::new();
     let opts = ExperimentOptions {

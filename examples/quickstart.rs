@@ -1,25 +1,57 @@
-//! Quickstart: the smallest useful WTA-CRS workflow.
+//! Quickstart: the smallest useful WTA-CRS workflow, on the new
+//! `ops::SampledLinear` / `MethodSpec` API.
 //!
-//! Fine-tunes the tiny native model on the synthetic RTE task with
-//! WTA-CRS@0.3 (the paper's headline budget), evaluates, and prints the
-//! memory story the method buys you.  Runs fully offline — no
-//! artifacts, no XLA.
+//! 1. Parse a typed method spec and run the sampled linear op directly,
+//!    printing the *measured* bytes the saved context holds.
+//! 2. Fine-tune the tiny native model on the synthetic RTE task with
+//!    WTA-CRS@0.3 (the paper's headline budget) and print the measured
+//!    per-layer activation storage next to the accuracy.
+//! 3. Compare with the analytic memory model (the paper's Table 2).
+//!
+//! Runs fully offline — no artifacts, no XLA.
 //!
 //! Run with:  cargo run --release --example quickstart
 
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::estimator::Mat;
 use wtacrs::memsim::{self, Scope, Workload};
+use wtacrs::ops::{Contraction, MethodSpec, SampledLinear};
 use wtacrs::runtime::{Backend, NativeBackend};
 use wtacrs::util::error::Result;
+use wtacrs::util::rng::Rng;
 
 fn main() -> Result<()> {
     wtacrs::util::logging::init();
 
-    // 1. Backend: the pure-Rust native kernels (no artifacts needed).
-    let backend = NativeBackend::new();
-    println!("backend: {}", backend.name());
+    // 1. The operator itself: forward saves only k column-row pairs.
+    let method: MethodSpec = "full-wtacrs30".parse()?;
+    println!("method spec: {method} (family {}, sampler {:?})", method.family, method.sampler);
+    let op = SampledLinear::new(method.sampler, Contraction::Rows);
+    let mut rng = Rng::new(0);
+    let h = Mat::randn(64, 128, &mut rng); // activations (64 rows)
+    let w = Mat::randn(128, 32, &mut rng); // weight
+    let znorms = vec![1.0f32; 64]; // cold gradient-norm cache
+    let (z, ctx) = op.forward(&h, &w, &znorms, &mut rng);
+    println!(
+        "SampledLinear: Z is exact ({}x{}); saved context keeps k={} of 64 rows \
+         -> {} of {} bytes ({:.2}x)",
+        z.rows,
+        z.cols,
+        ctx.k(),
+        ctx.saved_bytes(),
+        ctx.full_bytes(),
+        ctx.full_bytes() as f64 / ctx.saved_bytes() as f64,
+    );
+    let dz = Mat::randn(64, 32, &mut rng);
+    let bw = ctx.backward(&dz);
+    println!(
+        "backward from the saved pairs: dW {}x{}, dH {}x{}, {} refreshed norms",
+        bw.dw.rows, bw.dw.cols, bw.dh.rows, bw.dh.cols, bw.refreshed_norms.len(),
+    );
 
-    // 2. Fine-tune: tiny encoder, synthetic RTE, WTA-CRS at k = 0.3|D|.
+    // 2. Fine-tune: tiny encoder, synthetic RTE, WTA-CRS at k = 0.3|B|.
+    let backend = NativeBackend::new();
+    println!("\nbackend: {}", backend.name());
     let opts = ExperimentOptions {
         train: TrainOptions {
             lr: 1e-3,
@@ -30,7 +62,7 @@ fn main() -> Result<()> {
         },
         ..Default::default()
     };
-    let result = run_glue(&backend, "rte", "tiny", "full-wtacrs30", &opts)?;
+    let result = run_glue(&backend, "rte", "tiny", &method, &opts)?;
     println!(
         "rte acc = {:.3} after {} steps ({:.1} sentences/sec)",
         result.score, result.report.steps, result.report.throughput
@@ -38,14 +70,23 @@ fn main() -> Result<()> {
     for (step, acc) in &result.report.evals {
         println!("  eval @ step {step}: acc {acc:.3}");
     }
+    // The measured memory story: bytes each sampled layer actually
+    // stored for backward (SavedContext::saved_bytes), not a model.
+    for (layer, bytes) in result.report.saved_bytes_per_layer.iter().enumerate() {
+        println!("  layer {layer}: saved_bytes = {bytes} per step");
+    }
+    println!(
+        "  peak measured activation storage: {} bytes/step",
+        result.report.peak_saved_bytes
+    );
 
-    // 3. The memory story (the paper's Table 2, from the memory model):
+    // 3. The analytic memory story (the paper's Table 2, from memsim):
     let dims = memsim::Dims::paper("t5-base").unwrap();
     let w = Workload { batch: 64, seq: 128, bytes: 4 };
     let full = memsim::peak_bytes(&dims, &memsim::MethodMem::full(), &w, Scope::Paper);
     let wta = memsim::peak_bytes(&dims, &memsim::MethodMem::wtacrs(0.3), &w, Scope::Paper);
     println!(
-        "T5-Base @ B=64/S=128: Full {:.1} GB -> WTA-CRS@0.3 {:.1} GB ({:.1}x)",
+        "\nT5-Base @ B=64/S=128: Full {:.1} GB -> WTA-CRS@0.3 {:.1} GB ({:.1}x)",
         full / 1e9,
         wta / 1e9,
         full / wta

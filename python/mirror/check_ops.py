@@ -1,0 +1,56 @@
+"""Calibrate thresholds for the `ops::sampled_linear` unit tests.
+
+Mirrors the SavedContext backward: probabilities p_i ∝ ||H_i|| · zn_i
+(floored at 1e-12), WTA-CRS selection at budget k, dW accumulated from
+the k selected (scaled) column-row pairs.  Prints the relative error of
+the Monte-Carlo mean against the exact H^T dZ so the Rust test bands
+can be set with margin.
+"""
+import numpy as np
+
+from rng import Rng
+from estimator import select, randn
+
+
+def probs_for(h, zn):
+    anorm = np.sqrt((h.astype(np.float64) ** 2).sum(axis=1))
+    w = np.maximum(anorm * np.maximum(zn.astype(np.float64), 0.0), 1e-12)
+    return w / w.sum()
+
+
+def sampled_dw(h, dz, zn, k, rng, sampler="wtacrs"):
+    idx, sc = select(sampler, list(probs_for(h, zn)), k, rng)
+    g = np.zeros((h.shape[1], dz.shape[1]), dtype=np.float32)
+    for i, s in zip(idx, sc):
+        g += np.outer(h[i] * np.float32(s), dz[i]).astype(np.float32)
+    return g
+
+
+def rel_err_of_mean(h, dz, zn, k, trials, seed, sampler="wtacrs"):
+    rng = Rng(seed)
+    exact = (h.astype(np.float64).T @ dz.astype(np.float64))
+    acc = np.zeros_like(exact)
+    for _ in range(trials):
+        acc += sampled_dw(h, dz, zn, k, rng, sampler)
+    mean = acc / trials
+    return float(np.linalg.norm(mean - exact) / np.linalg.norm(exact))
+
+
+if __name__ == "__main__":
+    rng = Rng(11)
+    h = randn(64, 32, rng)
+    dz = randn(64, 8, rng)
+    zn = np.sqrt((dz.astype(np.float64) ** 2).sum(axis=1)).astype(np.float32)
+    k = max(1, round(0.30 * 64))
+    for seed in [3, 4, 5]:
+        r = rel_err_of_mean(h, dz, zn, k, 600, seed)
+        print(f"rows  wtacrs30 seed={seed}: rel={r:.4f}")
+    # tokens mode: 16 samples x 4 tokens; per-sample norms broadcast
+    zn_s = np.abs(randn(16, 1, rng)[:, 0]) + np.float32(0.1)
+    zn_tok = np.repeat(zn_s, 4)
+    for seed in [3, 4]:
+        r = rel_err_of_mean(h, dz, zn_tok, k, 600, seed)
+        print(f"token wtacrs30 seed={seed}: rel={r:.4f}")
+    # crs for comparison (noisier)
+    r = rel_err_of_mean(h, dz, zn, k, 600, 3, sampler="crs")
+    print(f"rows  crs30    seed=3: rel={r:.4f}")

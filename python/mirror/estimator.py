@@ -1,0 +1,131 @@
+"""Mirror of rust/src/estimator (Mat in float32, estimator math in f64)."""
+import numpy as np
+from rng import Rng
+
+
+def randn(rows, cols, rng):
+    data = np.empty((rows, cols), dtype=np.float32)
+    for r in range(rows):
+        for c in range(cols):
+            data[r, c] = np.float32(rng.normal())
+    return data
+
+
+def skewed_xy(rng, n, m, q):
+    x = randn(n, m, rng)
+    y = randn(m, q, rng)
+    for i in range(m):
+        s = np.float32((-np.log(max(rng.f64(), 1e-12))) ** 2.0)
+        y[i, :] = (y[i, :] * s).astype(np.float32)
+    return x, y
+
+
+def colrow_probs(x, y):
+    m = x.shape[1]
+    w = np.zeros(m)
+    for i in range(m):
+        xn = np.sqrt(np.sum(x[:, i].astype(np.float64) ** 2))
+        yn = np.sqrt(np.sum(y[i, :].astype(np.float64) ** 2))
+        w[i] = xn * yn
+    total = w.sum()
+    if total <= 0:
+        return np.full(m, 1.0 / m)
+    return w / total
+
+
+def wtacrs_csize(p_desc, k):
+    best, best_ratio, prefix = 0, np.inf, 0.0
+    for c in range(k):
+        ratio = (1.0 - prefix) / (k - c)
+        if ratio < best_ratio:
+            best_ratio, best = ratio, c
+        prefix += p_desc[c]
+    return best
+
+
+def select(sampler, probs, k, rng):
+    m = len(probs)
+    if sampler == "crs":
+        idx, sc = [], []
+        for _ in range(k):
+            i = rng.categorical(probs)
+            idx.append(i)
+            sc.append(1.0 / (k * max(probs[i], 1e-300)))
+        return idx, sc
+    if sampler == "det":
+        order = sorted(range(m), key=lambda i: -probs[i])
+        return order[:k], [1.0] * k
+    # wtacrs
+    order = sorted(range(m), key=lambda i: -probs[i])
+    if k == m:
+        # full budget: exact product, no stochastic slots, no rng draws
+        return order, [1.0] * k
+    p_desc = [probs[i] for i in order]
+    csize = wtacrs_csize(p_desc, k)
+    mass_c = sum(p_desc[:csize])
+    tail_mass = 1.0 - mass_c
+    n_stoc = k - csize
+    idx = list(order[:csize])
+    sc = [1.0] * csize
+    tail = order[csize:]
+    tail_w = [probs[i] for i in tail]
+    if tail_mass <= 0.0 or sum(tail_w) <= 0.0:
+        # all mass in the deterministic set: pad with zero-scale pairs
+        return idx + list(order[csize:k]), sc + [0.0] * n_stoc
+    for _ in range(n_stoc):
+        t = rng.categorical(tail_w)
+        j = tail[t]
+        idx.append(j)
+        sc.append(tail_mass / (n_stoc * max(probs[j], 1e-300)))
+    return idx, sc
+
+
+def estimate_matmul(sampler, x, y, k, rng):
+    probs = colrow_probs(x, y)
+    idx, sc = select(sampler, probs, k, rng)
+    out = np.zeros((x.shape[0], y.shape[1]), dtype=np.float32)
+    for i, s in zip(idx, sc):
+        a = (x[:, i] * np.float32(s)).astype(np.float32)
+        out += np.outer(a, y[i, :]).astype(np.float32)
+    return out
+
+
+def frob(m):
+    return np.sqrt(np.sum(m.astype(np.float64) ** 2))
+
+
+def pair_sq_norms(x, y):
+    m = x.shape[1]
+    return np.array([
+        np.sum(x[:, i].astype(np.float64) ** 2) * np.sum(y[i, :].astype(np.float64) ** 2)
+        for i in range(m)
+    ])
+
+
+def crs_variance(x, y, k):
+    p = colrow_probs(x, y)
+    a = pair_sq_norms(x, y)
+    exact = (x.astype(np.float32) @ y.astype(np.float32)).astype(np.float32)
+    single = np.sum(np.where(p > 0, a / np.maximum(p, 1e-300), 0.0)) - frob(exact) ** 2
+    return single / k
+
+
+def wtacrs_variance_at_csize(x, y, k, csize):
+    p = colrow_probs(x, y)
+    a = pair_sq_norms(x, y)
+    order = sorted(range(len(p)), key=lambda i: -p[i])
+    mass_c = sum(p[i] for i in order[:csize])
+    tail_mass = max(1.0 - mass_c, 0.0)
+    if tail_mass <= 0:
+        return 0.0
+    tail = order[csize:]
+    e_h2 = tail_mass * sum(a[j] / p[j] if p[j] > 0 else 0.0 for j in tail)
+    return max(e_h2 / (k - csize), 0.0)
+
+
+def wtacrs_variance(x, y, k):
+    p = colrow_probs(x, y)
+    order = sorted(range(len(p)), key=lambda i: -p[i])
+    p_desc = [p[i] for i in order]
+    csize = wtacrs_csize(p_desc, k)
+    return wtacrs_variance_at_csize(x, y, k, csize), csize

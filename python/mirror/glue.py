@@ -1,0 +1,188 @@
+"""Mirror of rust/src/data/{tokenizer,glue,batcher}.rs (exact integer ops)."""
+import numpy as np
+from rng import Rng
+
+M64 = (1 << 64) - 1
+PAD, CLS, SEP, UNK, N_SPECIAL = 0, 1, 2, 3, 4
+
+
+def fnv1a(s):
+    h = 0xCBF29CE484222325
+    for b in s.encode():
+        h ^= b
+        h = (h * 0x100000001B3) & M64
+    return h
+
+
+class Tokenizer:
+    def __init__(self, vocab):
+        self.vocab = vocab
+
+    def word_id(self, word):
+        return N_SPECIAL + fnv1a(word) % (self.vocab - N_SPECIAL)
+
+    def encode_single(self, a, seq_len):
+        out = [CLS] + list(a[: max(seq_len - 2, 0)]) + [SEP]
+        out = (out + [PAD] * seq_len)[:seq_len]
+        return out
+
+    def encode_pair(self, a, b, seq_len):
+        budget = max(seq_len - 3, 0)
+        half = budget // 2
+        if len(a) + len(b) <= budget:
+            ta, tb = len(a), len(b)
+        elif len(a) <= half:
+            ta, tb = len(a), budget - len(a)
+        elif len(b) <= half:
+            ta, tb = budget - len(b), len(b)
+        else:
+            ta, tb = half, budget - half
+        out = [CLS] + list(a[:ta]) + [SEP] + list(b[:tb]) + [SEP]
+        out = (out + [PAD] * seq_len)[:seq_len]
+        return out
+
+
+class Lexicon:
+    def __init__(self, vocab):
+        self.tok = Tokenizer(vocab)
+
+    def word(self, role, i):
+        return self.tok.word_id(f"{role}{i}")
+
+    def pos(self, rng):
+        return self.word("pos", rng.usize_below(40))
+
+    def neg(self, rng):
+        return self.word("neg", rng.usize_below(40))
+
+    def neutral(self, rng):
+        return self.word("neu", rng.usize_below(300))
+
+    def negation(self):
+        return self.word("not", 0)
+
+    def fact(self, i):
+        return self.word("f", i)
+
+    def anti_fact(self, i):
+        return self.word("g", i)
+
+
+def maybe_flip(label, n_out, noise, rng):
+    if noise > 0.0 and rng.bool(noise):
+        return (label + 1 + rng.usize_below(n_out - 1)) % n_out
+    return label
+
+
+def gen_sst2(lex, rng):
+    ln = 6 + rng.usize_below(10)
+    words, score, i = [], 0, 0
+    while i < ln:
+        r = rng.f64()
+        if r < 0.18:
+            words.append(lex.negation())
+            positive = rng.bool(0.5)
+            words.append(lex.pos(rng) if positive else lex.neg(rng))
+            score += -1 if positive else 1
+            i += 2
+        elif r < 0.5:
+            positive = rng.bool(0.5)
+            words.append(lex.pos(rng) if positive else lex.neg(rng))
+            score += 1 if positive else -1
+            i += 1
+        else:
+            words.append(lex.neutral(rng))
+            i += 1
+    if score == 0:
+        words.append(lex.pos(rng))
+        score = 1
+    return words, [], int(score > 0)
+
+
+def gen_mnli(lex, rng):
+    nf = 4 + rng.usize_below(4)
+    facts = [rng.usize_below(200) for _ in range(nf)]
+    a = [lex.fact(i) for i in facts]
+    label = rng.usize_below(3)
+    if label == 0:
+        k = 1 + rng.usize_below(min(nf, 3))
+        b = [lex.fact(facts[j]) for j in range(k)]
+    elif label == 1:
+        b = [lex.fact(200 + rng.usize_below(200)) for _ in range(3)]
+    else:
+        b = [lex.fact(facts[rng.usize_below(nf)]) for _ in range(2)]
+        b.append(lex.anti_fact(facts[rng.usize_below(nf)]))
+    return a, b, label
+
+
+def gen_stsb(lex, rng):
+    na = 6 + rng.usize_below(4)
+    idxs_a = [rng.usize_below(500) for _ in range(na)]
+    overlap = rng.usize_below(na + 1)
+    idxs_b = idxs_a[:overlap]
+    while len(idxs_b) < na:
+        idxs_b.append(500 + rng.usize_below(300))
+    idxs_b2 = list(idxs_b)
+    rng.shuffle(idxs_b2)
+    a = [lex.word("c", i) for i in idxs_a]
+    b = [lex.word("c", i) for i in idxs_b2]
+    inter = float(overlap)
+    union = float(2 * na - overlap)
+    score = np.float32(5.0 * inter / union) + np.float32(rng.normal()) * np.float32(0.25)
+    return a, b, float(np.clip(np.float32(score), 0.0, 5.0))
+
+
+TASKS = {
+    "sst2": dict(n_out=2, noise=0.05, train=4096, val=512),
+    "rte": dict(n_out=2, noise=0.12, train=1024, val=256),
+    "mnli": dict(n_out=3, noise=0.08, train=6144, val=768),
+    "stsb": dict(n_out=1, noise=0.0, train=2048, val=256),
+}
+
+
+def generate(name, vocab, seq_len, n, seed):
+    spec = TASKS[name]
+    lex = Lexicon(vocab)
+    rng = Rng(seed ^ fnv1a(name))
+    examples = []
+    for _ in range(n):
+        if name == "sst2":
+            a, _, y = gen_sst2(lex, rng)
+            y = maybe_flip(y, 2, spec["noise"], rng)
+            examples.append((lex.tok.encode_single(a, seq_len), ("c", y)))
+        elif name in ("mnli", "rte"):
+            a, b, y = gen_mnli(lex, rng)
+            if name == "rte":
+                y = int(y == 0)
+            y = maybe_flip(y, spec["n_out"], spec["noise"], rng)
+            examples.append((lex.tok.encode_pair(a, b, seq_len), ("c", y)))
+        elif name == "stsb":
+            a, b, s = gen_stsb(lex, rng)
+            examples.append((lex.tok.encode_pair(a, b, seq_len), ("s", s)))
+    return examples
+
+
+def train_val(name, vocab, seq_len, seed):
+    spec = TASKS[name]
+    return (generate(name, vocab, seq_len, spec["train"], seed),
+            generate(name, vocab, seq_len, spec["val"], (seed + 0x5EED) & M64))
+
+
+class Batcher:
+    def __init__(self, n, batch, seed):
+        self.n, self.batch = n, batch
+        self.rng = Rng(seed)
+        self.order = list(range(n))
+        self.rng.shuffle(self.order)
+        self.cursor, self.epoch = 0, 0
+
+    def next_indices(self):
+        idxs = [self.order[(self.cursor + k) % self.n] if self.cursor + k >= self.n
+                else self.order[self.cursor + k] for k in range(self.batch)]
+        self.cursor += self.batch
+        if self.cursor >= self.n:
+            self.cursor = 0
+            self.epoch += 1
+            self.rng = self.rng.fold_in(self.epoch)
+            self.rng.shuffle(self.order)
+        return idxs

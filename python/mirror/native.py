@@ -1,0 +1,307 @@
+"""Mirror of the NativeBackend (numpy float32) to calibrate test thresholds.
+
+`ORDER` selects when the per-layer column-row selections consume the
+step RNG: "backward" mirrors the pre-ops code (selection inside the
+backward pass, layer 2 -> 0); "forward" mirrors the `ops::SampledLinear`
+design (selection at forward/save time, layer 0 -> 2).  Float math is
+numpy float32, statistically faithful rather than bitwise.
+"""
+import numpy as np
+from rng import Rng
+import glue
+from estimator import select
+
+SIZES = {"tiny": dict(vocab=1024, seq=64, batch=32, d=128, f=256),
+         "small": dict(vocab=2048, seq=64, batch=32, d=192, f=384)}
+
+ORDER = "forward"
+
+
+def randn_mat(rows, cols, rng, scale=1.0):
+    m = np.empty((rows, cols), dtype=np.float32)
+    for r in range(rows):
+        for c in range(cols):
+            m[r, c] = np.float32(rng.normal())
+    return (m * np.float32(scale)).astype(np.float32)
+
+
+def parse_method(method):
+    parts = method.split("-", 1)
+    family = parts[0]
+    sampler, budget = None, 1.0
+    if len(parts) == 2:
+        suf = parts[1]
+        for pre, name in [("wtacrs", "wtacrs"), ("crs", "crs"), ("det", "det")]:
+            if suf.startswith(pre):
+                sampler = name
+                budget = int(suf[len(pre):]) / 100.0
+                break
+    return family, sampler, budget
+
+
+class Adam:
+    def __init__(self, shape):
+        self.m = np.zeros(shape, dtype=np.float32)
+        self.v = np.zeros(shape, dtype=np.float32)
+
+    def update(self, w, g, lr, t):
+        b1, b2, eps = np.float32(0.9), np.float32(0.999), np.float32(1e-8)
+        self.m = (b1 * self.m + (np.float32(1) - b1) * g).astype(np.float32)
+        self.v = (b2 * self.v + (np.float32(1) - b2) * g * g).astype(np.float32)
+        lr_t = np.float32(lr) * np.float32(np.sqrt(1.0 - 0.999 ** t) / (1.0 - 0.9 ** t))
+        return (w - lr_t * self.m / (np.sqrt(self.v) + eps)).astype(np.float32)
+
+
+class Session:
+    def __init__(self, size, method, n_out, seed, lr, batch=0):
+        cfg = SIZES[size]
+        self.vocab, self.seq = cfg["vocab"], cfg["seq"]
+        self.batch = batch or cfg["batch"]
+        self.d, self.f = cfg["d"], cfg["f"]
+        self.n_out, self.seed, self.lr = n_out, seed, lr
+        self.family, self.sampler, self.budget = parse_method(method)
+        self.step = 0
+        rng = Rng(seed)
+        d, f = self.d, self.f
+        self.embed = randn_mat(self.vocab, d, rng)
+        import math
+        if self.family in ("full", "lora"):
+            self.w1 = randn_mat(d, f, rng, math.sqrt(2.0 / d))
+            self.b1 = np.zeros(f, dtype=np.float32)
+            self.w2 = randn_mat(f, d, rng, math.sqrt(2.0 / f))
+            self.b2 = np.zeros(d, dtype=np.float32)
+            self.w3 = randn_mat(d, n_out, rng, math.sqrt(1.0 / d))
+            self.b3 = np.zeros(n_out, dtype=np.float32)
+            if self.family == "lora":
+                r = 8
+                self.a1 = randn_mat(d, r, rng, math.sqrt(1.0 / d))
+                self.bb1 = np.zeros((r, f), dtype=np.float32)
+                self.a2 = randn_mat(f, r, rng, math.sqrt(1.0 / f))
+                self.bb2 = np.zeros((r, d), dtype=np.float32)
+                names = ["a1", "bb1", "a2", "bb2", "w3", "b3"]
+            else:
+                names = ["w1", "b1", "w2", "b2", "w3", "b3"]
+        else:  # lst
+            ds = d // 4
+            self.s1 = randn_mat(d, ds, rng, math.sqrt(2.0 / d))
+            self.bs1 = np.zeros(ds, dtype=np.float32)
+            self.s2 = randn_mat(ds, n_out, rng, math.sqrt(1.0 / ds))
+            self.bs2 = np.zeros(n_out, dtype=np.float32)
+            names = ["s1", "bs1", "s2", "bs2"]
+        self.trainable = names
+        self.opt = {n: Adam(getattr(self, n).shape) for n in names}
+        self.n_approx = 3 if self.family in ("full", "lora") else 2
+
+    def pool(self, tokens):
+        B = tokens.shape[0]
+        x = np.zeros((B, self.d), dtype=np.float32)
+        for i in range(B):
+            row = tokens[i]
+            nz = row[row != 0]
+            if len(nz) == 0:
+                nz = row[:1]
+            x[i] = self.embed[nz].sum(axis=0, dtype=np.float32) / np.float32(len(nz))
+        return x
+
+    def forward(self, x):
+        if self.family == "lst":
+            z1 = (x @ self.s1 + self.bs1).astype(np.float32)
+            a1 = np.maximum(z1, 0)
+            logits = (a1 @ self.s2 + self.bs2).astype(np.float32)
+            return dict(z1=z1, a1=a1, logits=logits)
+        z1 = (x @ self.w1 + self.b1).astype(np.float32)
+        if self.family == "lora":
+            z1 = (z1 + (x @ self.a1) @ self.bb1).astype(np.float32)
+        a1 = np.maximum(z1, 0)
+        z2 = (a1 @ self.w2 + self.b2).astype(np.float32)
+        if self.family == "lora":
+            z2 = (z2 + (a1 @ self.a2) @ self.bb2).astype(np.float32)
+        a2 = np.maximum(z2, 0)
+        logits = (a2 @ self.w3 + self.b3).astype(np.float32)
+        return dict(z1=z1, a1=a1, z2=z2, a2=a2, logits=logits)
+
+    def select_for(self, acts, layer, zn, rng):
+        """Column-row selection for one layer (None = exact path)."""
+        B = acts.shape[0]
+        k = max(1, round(self.budget * B))
+        if self.sampler is None or k >= B:
+            return None
+        anorm = np.sqrt((acts.astype(np.float64) ** 2).sum(axis=1))
+        w = np.maximum(
+            anorm * np.maximum(zn[layer * B:(layer + 1) * B].astype(np.float64), 0.0),
+            1e-12,
+        )
+        probs = w / w.sum()
+        return select(self.sampler, list(probs), k, rng)
+
+    def grad_from(self, acts, delta, sel):
+        if sel is None:
+            return (acts.T @ delta).astype(np.float32)
+        idx, sc = sel
+        g = np.zeros((acts.shape[1], delta.shape[1]), dtype=np.float32)
+        for i, s in zip(idx, sc):
+            g += np.outer(acts[i] * np.float32(s), delta[i]).astype(np.float32)
+        return g
+
+    def sampled_grad(self, acts, delta, layer, zn, rng):
+        return self.grad_from(acts, delta, self.select_for(acts, layer, zn, rng))
+
+    def train_step(self, tokens, labels_i, labels_f, zn):
+        B = self.batch
+        x = self.pool(tokens)
+        fw = self.forward(x)
+        logits = fw["logits"]
+        if self.n_out == 1:
+            pred = logits[:, 0]
+            y = np.asarray(labels_f, dtype=np.float32)
+            loss = float(np.mean(0.5 * (pred - y) ** 2))
+            dlogits = ((pred - y) / np.float32(B)).reshape(B, 1).astype(np.float32)
+        else:
+            z = logits - logits.max(axis=1, keepdims=True)
+            e = np.exp(z.astype(np.float64))
+            p = (e / e.sum(axis=1, keepdims=True)).astype(np.float32)
+            y = np.asarray(labels_i)
+            loss = float(-np.mean(np.log(np.maximum(p[np.arange(B), y], 1e-12))))
+            dlogits = p.copy()
+            dlogits[np.arange(B), y] -= 1.0
+            dlogits = (dlogits / np.float32(B)).astype(np.float32)
+
+        rng = Rng(self.seed ^ 0xA11CE).fold_in(self.step)
+        grads = {}
+        if self.family == "lst":
+            a1, z1 = fw["a1"], fw["z1"]
+            grads["s2"] = (a1.T @ dlogits).astype(np.float32)
+            grads["bs2"] = dlogits.sum(axis=0)
+            da1 = (dlogits @ self.s2.T).astype(np.float32)
+            dz1 = (da1 * (z1 > 0)).astype(np.float32)
+            grads["s1"] = (x.T @ dz1).astype(np.float32)
+            grads["bs1"] = dz1.sum(axis=0)
+            norms = np.concatenate([
+                np.sqrt((dz1.astype(np.float64) ** 2).sum(axis=1)),
+                np.sqrt((dlogits.astype(np.float64) ** 2).sum(axis=1)),
+            ]).astype(np.float32)
+            dz_layers = None
+        else:
+            a1, z1, a2, z2 = fw["a1"], fw["z1"], fw["a2"], fw["z2"]
+            if self.family == "full":
+                acts = [x, a1, a2]
+            else:
+                xa1 = (x @ self.a1).astype(np.float32)
+                a1a2 = (a1 @ self.a2).astype(np.float32)
+                acts = [xa1, a1a2, a2]
+            if ORDER == "forward":
+                # ops::SampledLinear — selection at save time, layer 0..2
+                sels = [self.select_for(acts[l], l, zn, rng) for l in range(3)]
+            else:
+                # seed behaviour — selection inside backward, layer 2..0
+                sels = [None, None, None]
+                sels[2] = self.select_for(acts[2], 2, zn, rng)
+            grads_w3 = self.grad_from(acts[2], dlogits, sels[2])
+            da2 = (dlogits @ self.w3.T).astype(np.float32)
+            dz2 = (da2 * (z2 > 0)).astype(np.float32)
+            if ORDER != "forward":
+                sels[1] = self.select_for(acts[1], 1, zn, rng)
+            da1_from2 = (dz2 @ self.w2.T).astype(np.float32)
+            if self.family == "lora":
+                da1_from2 = (da1_from2 + (dz2 @ self.bb2.T) @ self.a2.T).astype(np.float32)
+            dz1 = (da1_from2 * (z1 > 0)).astype(np.float32)
+            if ORDER != "forward":
+                sels[0] = self.select_for(acts[0], 0, zn, rng)
+            if self.family == "full":
+                grads["w3"] = grads_w3
+                grads["b3"] = dlogits.sum(axis=0)
+                grads["w2"] = self.grad_from(a1, dz2, sels[1])
+                grads["b2"] = dz2.sum(axis=0)
+                grads["w1"] = self.grad_from(x, dz1, sels[0])
+                grads["b1"] = dz1.sum(axis=0)
+            else:
+                grads["w3"] = grads_w3
+                grads["b3"] = dlogits.sum(axis=0)
+                grads["bb2"] = self.grad_from(a1a2, dz2, sels[1])
+                grads["a2"] = (a1.T @ (dz2 @ self.bb2.T)).astype(np.float32)
+                grads["bb1"] = self.grad_from(xa1, dz1, sels[0])
+                grads["a1"] = (x.T @ (dz1 @ self.bb1.T)).astype(np.float32)
+            norms = np.concatenate([
+                np.sqrt((dz1.astype(np.float64) ** 2).sum(axis=1)),
+                np.sqrt((dz2.astype(np.float64) ** 2).sum(axis=1)),
+                np.sqrt((dlogits.astype(np.float64) ** 2).sum(axis=1)),
+            ]).astype(np.float32)
+        self.step += 1
+        t = self.step
+        for n in self.trainable:
+            if n in grads:
+                setattr(self, n, self.opt[n].update(getattr(self, n), grads[n], self.lr, t))
+            elif n == "w3" and "w3" not in grads:
+                pass
+        return loss, norms
+
+    def eval_logits(self, tokens):
+        return self.forward(self.pool(tokens))["logits"]
+
+
+class NormCache:
+    def __init__(self, n_layers, n_samples):
+        self.nl, self.ns = max(n_layers, 1), n_samples
+        self.data = np.ones((self.nl, n_samples), dtype=np.float32)
+
+    def gather(self, idxs):
+        return np.concatenate([self.data[l, idxs] for l in range(self.nl)])
+
+    def scatter(self, idxs, norms):
+        b = len(idxs)
+        for l in range(self.nl):
+            for j, i in enumerate(idxs):
+                v = norms[l * b + j]
+                if np.isfinite(v) and v >= 0:
+                    self.data[l, i] = max(v, 1e-8)
+
+
+def run_glue(task, size, method, steps, lr, seed=0, data_seed=17,
+             train_size=0, val_size=0, eval_every=0):
+    spec = dict(glue.TASKS[task])
+    if train_size:
+        spec["train"] = train_size
+    if val_size:
+        spec["val"] = val_size
+    cfg = SIZES[size]
+    train = glue.generate(task, cfg["vocab"], cfg["seq"], spec["train"], data_seed)
+    val = glue.generate(task, cfg["vocab"], cfg["seq"], spec["val"],
+                        (data_seed + 0x5EED))
+    sess = Session(size, method, spec["n_out"], seed, lr)
+    cache = NormCache(sess.n_approx, len(train))
+    bat = glue.Batcher(len(train), sess.batch, seed)
+    losses = []
+    for _ in range(steps):
+        idxs = bat.next_indices()
+        toks = np.array([train[i][0] for i in idxs], dtype=np.int32)
+        li = [train[i][1][1] if train[i][1][0] == "c" else 0 for i in idxs]
+        lf = [train[i][1][1] if train[i][1][0] == "s" else 0.0 for i in idxs]
+        zn = cache.gather(idxs)
+        loss, norms = sess.train_step(toks, li, lf, zn)
+        cache.scatter(idxs, norms)
+        losses.append(loss)
+    # eval
+    preds, golds, ps, gs = [], [], [], []
+    i = 0
+    n = len(val)
+    while i < n:
+        valid = min(n - i, sess.batch)
+        idxs = list(range(i, i + valid)) + [n - 1] * (sess.batch - valid)
+        toks = np.array([val[j][0] for j in idxs], dtype=np.int32)
+        logits = sess.eval_logits(toks)
+        if sess.n_out == 1:
+            for r in range(valid):
+                ps.append(float(logits[r, 0]))
+                gs.append(float(val[idxs[r]][1][1]))
+        else:
+            pr = logits.argmax(axis=1)
+            for r in range(valid):
+                preds.append(int(pr[r]))
+                golds.append(int(val[idxs[r]][1][1]))
+        i += sess.batch
+    if sess.n_out == 1:
+        from scipy_free import pearson, spearman
+        score = 0.5 * (pearson(ps, gs) + spearman(ps, gs))
+    else:
+        score = float(np.mean(np.array(preds) == np.array(golds)))
+    return score, losses

@@ -1,0 +1,90 @@
+"""Exact Python mirror of rust/src/util/rng.rs (xoshiro256** + splitmix64)."""
+M64 = (1 << 64) - 1
+
+
+def _splitmix64(state):
+    state = (state + 0x9E3779B97F4A7C15) & M64
+    z = state
+    z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & M64
+    z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & M64
+    return state, (z ^ (z >> 31)) & M64
+
+
+def _rotl(x, k):
+    return ((x << k) | (x >> (64 - k))) & M64
+
+
+class Rng:
+    def __init__(self, seed):
+        sm = seed & M64
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        self.s = s
+
+    def fold_in(self, data):
+        sm = self.s[0] ^ ((data * 0x9E3779B97F4A7C15) & M64)
+        r = Rng.__new__(Rng)
+        s = []
+        for _ in range(4):
+            sm, v = _splitmix64(sm)
+            s.append(v)
+        r.s = s
+        return r
+
+    def next_u64(self):
+        s = self.s
+        r = (_rotl((s[1] * 5) & M64, 7) * 9) & M64
+        t = (s[1] << 17) & M64
+        s[2] ^= s[0]
+        s[3] ^= s[1]
+        s[1] ^= s[2]
+        s[0] ^= s[3]
+        s[2] ^= t
+        s[3] = _rotl(s[3], 45)
+        return r
+
+    def below(self, n):
+        x = self.next_u64()
+        m = x * n
+        lo = m & M64
+        if lo < n:
+            t = ((M64 + 1) - n) % n
+            while lo < t:
+                x = self.next_u64()
+                m = x * n
+                lo = m & M64
+        return m >> 64
+
+    def usize_below(self, n):
+        return self.below(n)
+
+    def f64(self):
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))
+
+    def range_f64(self, lo, hi):
+        return lo + (hi - lo) * self.f64()
+
+    def normal(self):
+        import math
+        u1 = max(self.f64(), 1e-300)
+        u2 = self.f64()
+        return math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2)
+
+    def bool(self, p):
+        return self.f64() < p
+
+    def shuffle(self, xs):
+        for i in range(len(xs) - 1, 0, -1):
+            j = self.usize_below(i + 1)
+            xs[i], xs[j] = xs[j], xs[i]
+
+    def categorical(self, weights):
+        total = sum(weights)
+        u = self.f64() * total
+        for i, w in enumerate(weights):
+            u -= w
+            if u <= 0.0:
+                return i
+        return len(weights) - 1

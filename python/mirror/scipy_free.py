@@ -1,0 +1,34 @@
+import numpy as np
+
+
+def pearson(x, y):
+    x, y = np.asarray(x, dtype=np.float64), np.asarray(y, dtype=np.float64)
+    if len(x) < 2:
+        return 0.0
+    mx, my = x.mean(), y.mean()
+    sxy = ((x - mx) * (y - my)).sum()
+    sxx = ((x - mx) ** 2).sum()
+    syy = ((y - my) ** 2).sum()
+    if sxx == 0 or syy == 0:
+        return 0.0
+    return float(sxy / np.sqrt(sxx * syy))
+
+
+def ranks(x):
+    x = np.asarray(x)
+    idx = np.argsort(x, kind="stable")
+    out = np.zeros(len(x))
+    i = 0
+    while i < len(idx):
+        j = i
+        while j + 1 < len(idx) and x[idx[j + 1]] == x[idx[i]]:
+            j += 1
+        avg = (i + j) / 2.0 + 1.0
+        for k in idx[i:j + 1]:
+            out[k] = avg
+        i = j + 1
+    return out
+
+
+def spearman(x, y):
+    return pearson(ranks(x), ranks(y))

@@ -22,7 +22,7 @@ fn main() {
     let mut trainer = Trainer::new(
         backend.as_ref(),
         "tiny",
-        "full-wtacrs30",
+        &"full-wtacrs30".parse().expect("method"),
         spec.n_out,
         train_ds.len(),
         TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 },

@@ -7,6 +7,7 @@ mod common;
 
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
 use wtacrs::memsim::{self, MethodMem, Scope, Workload};
+use wtacrs::ops::MethodSpec;
 use wtacrs::util::bench::Table;
 use wtacrs::util::json::{self, Json};
 
@@ -14,7 +15,7 @@ fn main() {
     common::banner("fig1_tradeoff", "Fig 1 (accuracy vs memory frontier)");
     let backend = common::backend();
     let tasks = common::glue_tasks();
-    let opts_for = |method: &str| ExperimentOptions {
+    let opts_for = |method: &MethodSpec| ExperimentOptions {
         train: TrainOptions {
             lr: wtacrs::coordinator::experiment::default_lr(method),
             seed: 0,
@@ -41,9 +42,11 @@ fn main() {
     let full_peak = memsim::peak_bytes(&dims, &MethodMem::full(), &w, Scope::Paper);
     let mut out = vec![];
     for (method, mm) in &points {
+        let spec: MethodSpec = method.parse().expect("method");
         let mut scores = vec![];
         for task in &tasks {
-            let r = run_glue(backend.as_ref(), task, "tiny", method, &opts_for(method)).expect("run");
+            let r = run_glue(backend.as_ref(), task, "tiny", &spec, &opts_for(&spec))
+                .expect("run");
             scores.push(r.score);
         }
         let avg = 100.0 * scores.iter().sum::<f64>() / scores.len() as f64;

@@ -28,10 +28,11 @@ fn main() {
     headers.push("AVG".into());
     let mut t = Table::new(&headers.iter().map(String::as_str).collect::<Vec<_>>());
     for (label, method) in budgets {
+        let method: wtacrs::ops::MethodSpec = method.parse().expect("method");
         let mut row = vec![label.to_string()];
         let mut scores = vec![];
         for task in &tasks {
-            let r = run_glue(backend.as_ref(), task, "tiny", method, &opts).expect("run");
+            let r = run_glue(backend.as_ref(), task, "tiny", &method, &opts).expect("run");
             row.push(format!("{:.1}", 100.0 * r.score));
             scores.push(r.score);
             out.push(json::obj(vec![

@@ -34,7 +34,8 @@ fn main() {
         println!("\n== {task} (tiny, {steps} steps, eval every {eval_every}) ==");
         let mut rows = vec![];
         for method in methods {
-            let r = run_glue(backend.as_ref(), task, "tiny", method, &opts).expect("run");
+            let spec: wtacrs::ops::MethodSpec = method.parse().expect("method");
+            let r = run_glue(backend.as_ref(), task, "tiny", &spec, &opts).expect("run");
             out.push(json::obj(vec![
                 ("task", json::s(task)),
                 ("method", json::s(method)),

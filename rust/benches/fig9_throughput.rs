@@ -41,9 +41,10 @@ fn main() {
     let mut out = vec![];
     let mut t = Table::new(&["method", "batch", "step ms", "sentences/s"]);
     for &method in methods {
+        let spec: wtacrs::ops::MethodSpec = method.parse().expect("method");
         let mut measured_default = false;
         for &b in batches {
-            let mut scfg = SessionConfig::new("tiny", method, 2);
+            let mut scfg = SessionConfig::new("tiny", spec, 2);
             scfg.batch = b;
             scfg.lr = 1e-3;
             // Backends with compiled-in batch sizes (pjrt) reject the

@@ -8,6 +8,7 @@
 mod common;
 
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::ops::MethodSpec;
 use wtacrs::util::bench::Table;
 use wtacrs::util::json::{self, Json};
 
@@ -15,10 +16,13 @@ fn main() {
     common::banner("table1_glue", "Table 1 (GLUE accuracy by method)");
     let backend = common::backend();
     let tasks = common::glue_tasks();
-    let methods = ["full", "lora", "lst", "full-wtacrs30", "lora-wtacrs30"];
+    let methods: Vec<MethodSpec> = ["full", "lora", "lst", "full-wtacrs30", "lora-wtacrs30"]
+        .iter()
+        .map(|m| m.parse().expect("method"))
+        .collect();
     let sizes: &[&str] = if common::full_mode() { &["tiny", "small"] } else { &["tiny"] };
     // Per-family LR, mirroring the paper's Appendix F protocol.
-    let opts_for = |method: &str| ExperimentOptions {
+    let opts_for = |method: &MethodSpec| ExperimentOptions {
         train: TrainOptions {
             lr: wtacrs::coordinator::experiment::default_lr(method),
             seed: 0,
@@ -36,7 +40,7 @@ fn main() {
         headers.extend(tasks.iter().map(|t| t.to_string()));
         headers.push("AVG".to_string());
         let mut t = Table::new(&headers.iter().map(String::as_str).collect::<Vec<_>>());
-        for method in methods {
+        for method in &methods {
             let mut row = vec![method.to_string()];
             let mut scores = vec![];
             for task in &tasks {
@@ -46,7 +50,7 @@ fn main() {
                         scores.push(r.score);
                         out.push(json::obj(vec![
                             ("size", json::s(size)),
-                            ("method", json::s(method)),
+                            ("method", json::s(&method.to_string())),
                             ("task", json::s(task)),
                             ("metric", json::s(r.metric_name)),
                             ("score", json::num(r.score)),

@@ -34,7 +34,8 @@ fn main() {
         println!("\n== size {size} (B={}, S={}) ==", dims.batch, dims.seq_len);
         let mut t = Table::new(&["method", "fwd ms", "step ms", "bwd+update ms"]);
         for &method in methods {
-            let mut scfg = SessionConfig::new(size, method, 2);
+            let spec: wtacrs::ops::MethodSpec = method.parse().expect("method");
+            let mut scfg = SessionConfig::new(size, spec, 2);
             scfg.lr = 1e-3;
             let mut session = backend.open(&scfg).expect("session");
             let b = session.batch_size();

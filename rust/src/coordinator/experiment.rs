@@ -6,6 +6,7 @@
 
 use crate::bail;
 use crate::data::glue::{self, TaskSpec};
+use crate::ops::{Family, MethodSpec};
 use crate::runtime::Backend;
 use crate::util::error::Result;
 use crate::util::json::{self, Json};
@@ -13,6 +14,7 @@ use crate::util::json::{self, Json};
 use super::trainer::{TrainOptions, TrainReport, Trainer};
 
 /// The method axis of Table 1 / Figs 7-8 (mirrors compile/config.py).
+/// Display names; parse with [`MethodSpec::from_str`](std::str::FromStr).
 pub const METHODS: &[&str] = &[
     "full",
     "lora",
@@ -25,20 +27,13 @@ pub const METHODS: &[&str] = &[
     "full-det10",
 ];
 
-/// Tuning family prefix ("full-wtacrs30" -> "full") — init/eval graphs
-/// depend only on the family.
-pub fn family(method: &str) -> &str {
-    method.split('-').next().unwrap_or(method)
-}
-
 /// Per-family default learning rate, mirroring the paper's Appendix F
 /// (LoRA/LST train far fewer parameters and want ~10x larger LRs than
 /// full fine-tuning; scaled to this repo's model sizes).
-pub fn default_lr(method: &str) -> f32 {
-    match family(method) {
-        "lora" => 3e-3,
-        "lst" => 3e-3,
-        _ => 1e-3,
+pub fn default_lr(method: &MethodSpec) -> f32 {
+    match method.family {
+        Family::Lora | Family::Lst => 3e-3,
+        Family::Full => 1e-3,
     }
 }
 
@@ -107,7 +102,7 @@ pub fn run_glue(
     backend: &dyn Backend,
     task_name: &str,
     size: &str,
-    method: &str,
+    method: &MethodSpec,
     opts: &ExperimentOptions,
 ) -> Result<TaskResult> {
     let Some(mut spec) = glue::task(task_name) else {
@@ -141,7 +136,7 @@ pub fn run_glue(
     );
     Ok(TaskResult {
         task: task_name.to_string(),
-        method: method.to_string(),
+        method: method.to_string(), // MethodSpec::Display round-trips
         size: size.to_string(),
         metric_name: spec.metric.name(),
         score: report.best_metric,
@@ -170,11 +165,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn family_extraction() {
-        assert_eq!(family("full"), "full");
-        assert_eq!(family("lora-wtacrs30"), "lora");
-        assert_eq!(family("full-det10"), "full");
-        assert_eq!(family("lst"), "lst");
+    fn methods_grid_parses_and_round_trips() {
+        for m in METHODS {
+            let spec: MethodSpec = m.parse().unwrap();
+            assert_eq!(spec.to_string(), *m, "round trip of {m:?}");
+        }
+    }
+
+    #[test]
+    fn default_lr_by_family() {
+        let lr = |s: &str| default_lr(&s.parse().unwrap());
+        assert_eq!(lr("full"), 1e-3);
+        assert_eq!(lr("full-wtacrs30"), 1e-3);
+        assert_eq!(lr("lora-wtacrs30"), 3e-3);
+        assert_eq!(lr("lst"), 3e-3);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! backends are cheap to construct), so the sweep also exercises the
 //! multi-process-style isolation a bigger deployment would use.
 
+use crate::ops::MethodSpec;
 use crate::runtime::Backend;
 use crate::util::error::Result;
 use crate::util::pool::ThreadPool;
@@ -38,7 +39,7 @@ pub fn sweep_seeds<F>(
     make_backend: F,
     task: &str,
     size: &str,
-    method: &str,
+    method: &MethodSpec,
     base: &ExperimentOptions,
     seeds: &[u64],
     pool: Option<&ThreadPool>,
@@ -46,20 +47,20 @@ pub fn sweep_seeds<F>(
 where
     F: Fn() -> Result<Box<dyn Backend>> + Send + Sync + 'static,
 {
-    let jobs: Vec<(String, String, String, ExperimentOptions)> = seeds
+    let jobs: Vec<(String, String, MethodSpec, ExperimentOptions)> = seeds
         .iter()
         .map(|&s| {
             let mut o = base.clone();
             o.train.seed = s;
             o.data_seed = base.data_seed; // same data, different init/sampling
-            (task.to_string(), size.to_string(), method.to_string(), o)
+            (task.to_string(), size.to_string(), *method, o)
         })
         .collect();
 
     let run_one = move |(task, size, method, opts): (
         String,
         String,
-        String,
+        MethodSpec,
         ExperimentOptions,
     )|
           -> Result<f64> {
@@ -115,7 +116,7 @@ mod tests {
             || Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>),
             "rte",
             "tiny",
-            "full-wtacrs30",
+            &"full-wtacrs30".parse().unwrap(),
             &base,
             &[0, 1],
             None,
@@ -136,7 +137,7 @@ mod tests {
             || Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>),
             "sst2",
             "tiny",
-            "full",
+            &"full".parse().unwrap(),
             &base,
             &[0, 1, 2],
             Some(&pool),

@@ -13,6 +13,7 @@ use crate::bail;
 use crate::data::batcher::{Batch, Batcher};
 use crate::data::glue::Dataset;
 use crate::metrics::{self, MetricKind};
+use crate::ops::MethodSpec;
 use crate::runtime::{Backend, HostTensor, SessionConfig, TrainSession};
 use crate::util::error::Result;
 
@@ -49,6 +50,12 @@ pub struct TrainReport {
     /// Sentences (batch rows) processed per second of train-step time.
     pub throughput: f64,
     pub norm_cache_coverage: f64,
+    /// Measured activation bytes the last step's sampled ops stored,
+    /// per approximated layer (`SavedContext::saved_bytes`; empty when
+    /// the backend does not measure).
+    pub saved_bytes_per_layer: Vec<usize>,
+    /// Peak over steps of the summed per-layer measured bytes.
+    pub peak_saved_bytes: usize,
 }
 
 /// A live training session bound to an execution backend.
@@ -57,6 +64,7 @@ pub struct Trainer {
     pub norm_cache: NormCache,
     opts: TrainOptions,
     step: usize,
+    peak_saved_bytes: usize,
 }
 
 impl Trainer {
@@ -64,12 +72,12 @@ impl Trainer {
     pub fn new(
         backend: &dyn Backend,
         size: &str,
-        method: &str,
+        method: &MethodSpec,
         n_out: usize,
         n_samples: usize,
         opts: TrainOptions,
     ) -> Result<Self> {
-        let mut cfg = SessionConfig::new(size, method, n_out);
+        let mut cfg = SessionConfig::new(size, *method, n_out);
         cfg.seed = opts.seed;
         cfg.lr = opts.lr;
         let session = backend.open(&cfg)?;
@@ -89,6 +97,7 @@ impl Trainer {
             norm_cache: NormCache::new(n_approx, n_samples),
             opts,
             step: 0,
+            peak_saved_bytes: 0,
         }
     }
 
@@ -116,7 +125,20 @@ impl Trainer {
         )?;
         self.norm_cache.scatter(&batch.indices, &refreshed);
         self.step += 1;
+        let saved: usize = self.session.saved_bytes_per_layer().iter().sum();
+        self.peak_saved_bytes = self.peak_saved_bytes.max(saved);
         Ok(loss)
+    }
+
+    /// Measured activation bytes the last step's sampled ops stored,
+    /// per approximated layer (empty before the first step).
+    pub fn saved_bytes_per_layer(&self) -> Vec<usize> {
+        self.session.saved_bytes_per_layer()
+    }
+
+    /// Peak over steps of the summed per-layer measured bytes.
+    pub fn peak_saved_bytes(&self) -> usize {
+        self.peak_saved_bytes
     }
 
     /// Run forward-only evaluation over a dataset; returns the metric.
@@ -212,6 +234,8 @@ impl Trainer {
             train_seconds: t0.elapsed().as_secs_f64(),
             throughput: steps as f64 * self.batch_size() as f64 / train_time.max(1e-9),
             norm_cache_coverage: self.norm_cache.coverage(),
+            saved_bytes_per_layer: self.session.saved_bytes_per_layer(),
+            peak_saved_bytes: self.peak_saved_bytes,
         })
     }
 

@@ -191,6 +191,12 @@ pub fn wtacrs_csize(p_desc: &[f64], k: usize) -> usize {
 
 /// Select k column-row pairs; mirrors python/compile/sampling.py exactly
 /// in semantics (not in RNG stream).
+///
+/// WTA-CRS edge cases resolve deterministically: `k == m` returns every
+/// pair once at scale 1 (the exact product), and when the tail mass
+/// underflows to zero (all mass inside the deterministic set) the
+/// deterministic set is returned padded to `k` with zero-scale pairs
+/// instead of sampling an empty tail distribution.
 pub fn select(
     sampler: Sampler,
     probs: &[f64],
@@ -220,6 +226,11 @@ pub fn select(
         Sampler::WtaCrs => {
             let mut order: Vec<usize> = (0..m).collect();
             order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            if k == m {
+                // Full budget: every pair kept once at scale 1 is the
+                // exact product — no stochastic slots to fill.
+                return (order, vec![1.0; k]);
+            }
             let p_desc: Vec<f64> = order.iter().map(|&i| probs[i]).collect();
             let csize = wtacrs_csize(&p_desc, k);
             let mass_c: f64 = p_desc[..csize].iter().sum();
@@ -230,6 +241,19 @@ pub fn select(
             // Tail distribution: remaining indices, renormalized.
             let tail: Vec<usize> = order[csize..].to_vec();
             let tail_w: Vec<f64> = tail.iter().map(|&i| probs[i]).collect();
+            if tail_mass <= 0.0 || tail_w.iter().sum::<f64>() <= 0.0 {
+                // All probability mass sits in the deterministic set
+                // (single-spike distributions, or prefix mass rounding
+                // to 1): the top-|C| pairs already reproduce the
+                // estimator exactly, and the stochastic draw would
+                // sample an empty distribution.  Return the
+                // deterministic set cleanly, padded to k with the next
+                // zero-mass pairs at scale 0 (they contribute nothing,
+                // keeping the estimate exact and unbiased).
+                idx.extend_from_slice(&order[csize..k]);
+                sc.resize(k, 0.0);
+                return (idx, sc);
+            }
             for _ in 0..n_stoc {
                 let t = rng.categorical(&tail_w);
                 let j = tail[t];
@@ -419,6 +443,65 @@ mod tests {
         let v_crs = var_of(Sampler::Crs, &mut rng);
         let v_wta = var_of(Sampler::WtaCrs, &mut rng);
         assert!(v_wta < v_crs, "Var[wta]={v_wta} !< Var[crs]={v_crs}");
+    }
+
+    #[test]
+    fn wtacrs_full_budget_is_exact_and_consumes_no_rng() {
+        // k == m regression: the selection must be the deterministic
+        // all-pairs set at scale 1 (an exact estimate), drawing nothing
+        // from the rng stream.
+        let mut rng = Rng::new(21);
+        let (x, y) = skewed_xy(&mut rng, 3, 24, 3);
+        let probs = colrow_probs(&x, &y);
+        let before = rng.clone().next_u64();
+        let (idx, sc) = select(Sampler::WtaCrs, &probs, 24, &mut rng);
+        assert_eq!(rng.next_u64(), before, "k == m must not draw from the rng");
+        let mut sorted = idx.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..24).collect::<Vec<_>>());
+        assert!(sc.iter().all(|&s| s == 1.0));
+        let est = estimate_matmul(Sampler::WtaCrs, &x, &y, 24, &mut rng);
+        let exact = x.matmul(&y);
+        let rel = est.sub(&exact).frob_norm() / exact.frob_norm().max(1e-9);
+        assert!(rel < 1e-5, "full-budget WTA-CRS not exact: {rel}");
+    }
+
+    #[test]
+    fn wtacrs_uniform_probs_all_stochastic() {
+        // Uniform distribution: csize = 0, every slot stochastic, all
+        // scales finite and positive (the m/(k) importance weight).
+        let probs = vec![1.0 / 40.0; 40];
+        let mut rng = Rng::new(22);
+        let (idx, sc) = select(Sampler::WtaCrs, &probs, 12, &mut rng);
+        assert_eq!(idx.len(), 12);
+        assert_eq!(sc.len(), 12);
+        assert!(idx.iter().all(|&i| i < 40));
+        assert!(sc.iter().all(|&s| s.is_finite() && s > 0.0));
+        // uniform tail scale = 1/(k p m/m) = m/k
+        for &s in &sc {
+            assert!((s - 40.0 / 12.0).abs() < 1e-9, "uniform scale {s}");
+        }
+    }
+
+    #[test]
+    fn wtacrs_single_spike_returns_deterministic_set() {
+        // All-mass-in-C regression: previously the zero-mass tail fed
+        // an empty categorical (debug-assert panic); now the
+        // deterministic set comes back cleanly, padded to k with
+        // zero-scale (zero-probability) pairs.
+        let mut probs = vec![0.0f64; 30];
+        probs[7] = 1.0;
+        let mut rng = Rng::new(23);
+        let (idx, sc) = select(Sampler::WtaCrs, &probs, 5, &mut rng);
+        assert_eq!(idx.len(), 5);
+        assert_eq!(sc.len(), 5);
+        assert_eq!(idx[0], 7, "the spike must lead the deterministic set");
+        assert_eq!(sc[0], 1.0);
+        assert!(sc[1..].iter().all(|&s| s == 0.0), "padding must be zero-scale");
+        // deterministic: a second call returns the same selection
+        let (idx2, sc2) = select(Sampler::WtaCrs, &probs, 5, &mut Rng::new(99));
+        assert_eq!(idx, idx2);
+        assert_eq!(sc, sc2);
     }
 
     #[test]

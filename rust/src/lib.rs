@@ -1,14 +1,40 @@
 //! # wtacrs — Winner-Take-All Column-Row Sampling (NeurIPS 2023)
 //!
-//! A three-layer reproduction of *"Winner-Take-All Column Row Sampling
-//! for Memory Efficient Adaptation of Language Model"*:
+//! A reproduction of *"Winner-Take-All Column Row Sampling for Memory
+//! Efficient Adaptation of Language Model"*.  The paper's claim is that
+//! activation memory — not parameter count — is the fine-tuning
+//! bottleneck, and that replacing linear ops with an unbiased
+//! column-row-sampled estimator lets training store only a sub-sampled
+//! slice of each activation.
 //!
-//! * **L3 (this crate)** — the fine-tuning coordinator: data pipeline,
-//!   trainer, the paper's Algorithm-1 gradient-norm cache, memory model,
-//!   metrics, experiment runner.
-//! * **L2** — JAX train/eval graphs AOT-lowered to `artifacts/*.hlo.txt`
-//!   (built once by `make artifacts`; Python never runs at runtime).
-//! * **L1** — execution backends behind the [`runtime::Backend`] trait.
+//! ## The operator API (start here)
+//!
+//! The claim is embodied by [`ops::SampledLinear`]:
+//!
+//! * `forward(&H, &W, znorms, rng) -> (Z, SavedContext)` computes the
+//!   exact `Z = H W` but saves only the k selected column-row pairs —
+//!   indices, the pre-scaled sub-sampled activation rows, and the
+//!   selection scales — chosen by [`estimator::select`] from
+//!   `p_i ∝ ||H_i,:|| · cache_i` (Eq. 3, with the Algorithm-1
+//!   gradient-norm cache standing in for `||dZ_i,:||`, which does not
+//!   exist yet at forward time);
+//! * [`ops::SavedContext::backward`] reconstructs the unbiased
+//!   weight-gradient estimate `dW ≈ Hᵀ dZ` from the stored pairs
+//!   (Eq. 5/6), returns the exact `dH = dZ Wᵀ`, and refreshes the
+//!   per-sample gradient norms for the coordinator's cache scatter;
+//! * [`ops::SavedContext::saved_bytes`] measures the activation bytes
+//!   actually held, so the paper's Table-2 memory story is observed per
+//!   step, not only modelled by [`memsim`];
+//! * [`ops::Contraction`] picks the contraction axis: one cache slot
+//!   per row, or batch×seq tokens sharing a per-sample slot (the
+//!   paper's scope for sequence models).
+//!
+//! Method strings (`"full"`, `"lora-wtacrs30"`, ...) are parsed in
+//! exactly one place: [`ops::MethodSpec`], a typed
+//! `{ family, sampler: Option<{kind, budget}> }` value implementing
+//! `FromStr`/`Display` (round-trip).  It flows through
+//! [`runtime::SessionConfig`] and the coordinator, benches and
+//! examples as a value — nothing else splits method strings.
 //!
 //! ## Execution backends
 //!
@@ -16,14 +42,12 @@
 //! [`runtime::TrainSession`] and ships two implementations:
 //!
 //! * [`runtime::NativeBackend`] (default) — pure-Rust reference kernels
-//!   for the train/eval step: frozen-embedding mean-pool encoder, linear
-//!   forward, softmax cross-entropy, and the WTA-CRS *sampled
-//!   weight-gradient GEMM*.  Column-row pairs are drawn with
-//!   [`estimator::select`] from `p_i ∝ ||H_i,:|| · cache_i` — the
-//!   Eq.-3 form with the Algorithm-1 gradient-norm cache standing in
-//!   for `||dZ_i,:||`, which does not exist yet at forward time.  No
-//!   artifacts, no XLA, no network: `cargo build --release &&
-//!   cargo test -q` runs the full suite offline.
+//!   for the train/eval step: frozen-embedding mean-pool encoder and a
+//!   two-hidden-layer MLP whose trainable linears all run through
+//!   [`ops::SampledLinear`] (`full` samples the trunk GEMMs, `lora` the
+//!   adapter-B GEMMs, `lst` uses the exact op).  No artifacts, no XLA,
+//!   no network: `cargo build --release && cargo test -q` runs the full
+//!   suite offline.
 //! * `runtime::PjrtBackend` (behind the **`pjrt`** cargo feature) — the
 //!   original PJRT/XLA engine executing AOT-lowered HLO artifacts.
 //!   The feature declares no dependency by itself: enabling it
@@ -37,20 +61,30 @@
 //! ```text
 //! cargo build --release
 //! cargo test -q
-//! cargo bench --bench table2_memory   # paper tables, no artifacts needed
+//! cargo run --release --example quickstart   # SampledLinear + measured saved_bytes
+//! cargo bench --bench table2_memory          # paper tables, no artifacts needed
 //! cargo run --release -- train --task sst2 --method full-wtacrs30
 //! ```
 //!
-//! Entry points: [`runtime`] hosts the backend abstraction (and, with
-//! `pjrt`, the artifact engine), [`coordinator`] drives training,
-//! [`memsim`] reproduces the paper's memory tables, [`estimator`] is the
-//! pure-Rust estimator math shared by the native backend, the property
-//! tests and the Fig. 3 analyses.
+//! Entry points: [`ops`] is the operator layer, [`runtime`] hosts the
+//! backend abstraction (and, with `pjrt`, the artifact engine),
+//! [`coordinator`] drives training, [`memsim`] reproduces the paper's
+//! analytic memory tables, [`estimator`] is the pure-Rust estimator
+//! math shared by the ops layer, the property tests and the Fig. 3
+//! analyses.
+// Numeric-kernel style: index loops over matrix dims read as the math
+// they implement, and coordinator plumbing passes wide tuples; the
+// pedantic rewrites clippy suggests would obscure both.  Everything
+// else is denied in CI (`cargo clippy --all-targets -- -D warnings`).
+#![allow(clippy::needless_range_loop)]
+#![allow(clippy::type_complexity)]
+
 pub mod coordinator;
 pub mod data;
 pub mod estimator;
 pub mod memsim;
 pub mod metrics;
+pub mod ops;
 pub mod runtime;
 pub mod testing;
 pub mod util;

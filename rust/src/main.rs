@@ -10,6 +10,7 @@
 use wtacrs::bail;
 use wtacrs::coordinator::{self, ExperimentOptions, TrainOptions};
 use wtacrs::memsim::{self, tables, Scope, Workload};
+use wtacrs::ops::MethodSpec;
 use wtacrs::runtime::{Backend, Manifest, NativeBackend};
 use wtacrs::util::bench::Table;
 use wtacrs::util::cli::Cli;
@@ -96,6 +97,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         return Ok(());
     }
     let backend = make_backend(p.get("backend"))?;
+    // Validate the method string up front — the typed spec flows from
+    // here through SessionConfig into the backend.
+    let method: MethodSpec = p.get("method").parse()?;
     let opts = ExperimentOptions {
         train: TrainOptions {
             lr: p.get_f64("lr")? as f32,
@@ -110,7 +114,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         backend.as_ref(),
         p.get("task"),
         p.get("size"),
-        p.get("method"),
+        &method,
         &opts,
     )?;
     println!(
@@ -125,6 +129,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         res.report.throughput,
         100.0 * res.report.norm_cache_coverage,
     );
+    if res.report.peak_saved_bytes > 0 {
+        println!(
+            "measured saved-activation peak: {:.1} KiB/step (per layer: {:?})",
+            res.report.peak_saved_bytes as f64 / 1024.0,
+            res.report.saved_bytes_per_layer,
+        );
+    }
     let out = p.get("out");
     if !out.is_empty() {
         coordinator::experiment::write_results(out, std::slice::from_ref(&res))?;
@@ -164,11 +175,13 @@ fn cmd_lm(args: &[String]) -> Result<()> {
     let engine = Engine::from_default_dir()?;
     let size = p.get("size");
     let tag = p.get("batch-tag");
+    // Validate the method string; artifact ids use its canonical form.
+    let method: MethodSpec = p.get("method").parse()?;
     let (train_id, init_id) = if tag.is_empty() {
-        (format!("train_{size}_{}", p.get("method")), format!("init_{size}_full"))
+        (format!("train_{size}_{method}"), format!("init_{size}_full"))
     } else {
         (
-            format!("train_{size}_{tag}_{}", p.get("method")),
+            format!("train_{size}_{tag}_{method}"),
             format!("init_{size}_{tag}_full"),
         )
     };

@@ -1,0 +1,15 @@
+//! Operator layer: the typed method specification and the first-class
+//! sampled linear op every execution backend builds on.
+//!
+//! * [`MethodSpec`] / [`Family`] / [`SamplerSpec`] — the typed form of
+//!   method strings like `"lora-wtacrs30"`; the only module that parses
+//!   or formats them.
+//! * [`SampledLinear`] / [`SavedContext`] — `Z = H W` with sub-sampled
+//!   activation storage for the backward weight-gradient GEMM, plus
+//!   measured [`SavedContext::saved_bytes`] and the
+//!   [`Contraction`] (rows vs batch×seq tokens) knob.
+pub mod sampled_linear;
+pub mod spec;
+
+pub use sampled_linear::{Contraction, LinearBackward, SampledLinear, SavedContext};
+pub use spec::{Family, MethodSpec, SamplerSpec};

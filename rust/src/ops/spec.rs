@@ -1,0 +1,256 @@
+//! The typed method specification: tuning family + optional sampler.
+//!
+//! Method strings (`"full"`, `"lora-wtacrs30"`, `"full-det10"`, ...)
+//! appear on the CLI, in experiment grids, result JSON and artifact
+//! ids.  This module is the *only* place they are parsed or formatted:
+//! [`MethodSpec`] implements [`FromStr`] and [`fmt::Display`] and
+//! round-trips exactly, so everything downstream — `SessionConfig`, the
+//! coordinator, benches, examples — passes the typed value around
+//! instead of re-splitting strings.
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::estimator::Sampler;
+use crate::util::error::{Context, Error, Result};
+use crate::{anyhow, bail};
+
+/// Tuning family: which parameters train (the experiment grid's rows).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Family {
+    /// Full fine-tuning of the whole trunk + head.
+    Full,
+    /// Frozen trunk with rank-8 LoRA adapters + trained head.
+    Lora,
+    /// Ladder side network (its backward never runs the trunk GEMMs,
+    /// so it does not compose with a sampler).
+    Lst,
+}
+
+impl Family {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Family::Full => "full",
+            Family::Lora => "lora",
+            Family::Lst => "lst",
+        }
+    }
+}
+
+impl fmt::Display for Family {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Column-row sampler choice + budget for the weight-gradient GEMMs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SamplerSpec {
+    pub kind: Sampler,
+    /// Budget as a percentage of the contraction dimension (1..=100).
+    pub budget: u8,
+}
+
+impl SamplerSpec {
+    pub fn new(kind: Sampler, budget: u8) -> Result<Self> {
+        if budget == 0 || budget > 100 {
+            bail!("sampler budget must be in 1..=100, got {budget}");
+        }
+        Ok(SamplerSpec { kind, budget })
+    }
+
+    /// Budget as a fraction of the contraction dimension (k/|D|).
+    pub fn fraction(self) -> f64 {
+        self.budget as f64 / 100.0
+    }
+
+    /// Column-row pairs to keep for a contraction dimension of `m`.
+    pub fn k_for(self, m: usize) -> usize {
+        ((self.fraction() * m as f64).round() as usize).clamp(1, m)
+    }
+
+    fn kind_str(self) -> &'static str {
+        match self.kind {
+            Sampler::WtaCrs => "wtacrs",
+            Sampler::Crs => "crs",
+            Sampler::Det => "det",
+        }
+    }
+}
+
+impl fmt::Display for SamplerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}{}", self.kind_str(), self.budget)
+    }
+}
+
+/// A fully-specified tuning method: `family[-sampler<budget>]`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MethodSpec {
+    pub family: Family,
+    pub sampler: Option<SamplerSpec>,
+}
+
+impl MethodSpec {
+    /// Exact (unsampled) variant of a family.
+    pub fn exact(family: Family) -> Self {
+        MethodSpec { family, sampler: None }
+    }
+
+    /// Validated constructor (rejects LST + sampler).
+    pub fn new(family: Family, sampler: Option<SamplerSpec>) -> Result<Self> {
+        if family == Family::Lst && sampler.is_some() {
+            bail!(
+                "LST does not compose with a sampler (the ladder backward \
+                 never runs the sampled trunk GEMMs)"
+            );
+        }
+        Ok(MethodSpec { family, sampler })
+    }
+}
+
+impl fmt::Display for MethodSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self.sampler {
+            None => write!(f, "{}", self.family),
+            Some(sp) => write!(f, "{}-{}", self.family, sp),
+        }
+    }
+}
+
+impl FromStr for MethodSpec {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        parse_method(s)
+    }
+}
+
+/// Parse a method string — the single parser for method strings in the
+/// crate (everything else goes through `MethodSpec::from_str`).
+fn parse_method(method: &str) -> Result<MethodSpec> {
+    let (fam, suffix) = match method.split_once('-') {
+        Some((f, s)) => (f, Some(s)),
+        None => (method, None),
+    };
+    let family = match fam {
+        "full" => Family::Full,
+        "lora" => Family::Lora,
+        "lst" => Family::Lst,
+        other => {
+            bail!("method {method:?}: unknown tuning family {other:?} (full|lora|lst)")
+        }
+    };
+    let Some(suffix) = suffix else {
+        return Ok(MethodSpec { family, sampler: None });
+    };
+    let (kind, digits) = if let Some(d) = suffix.strip_prefix("wtacrs") {
+        (Sampler::WtaCrs, d)
+    } else if let Some(d) = suffix.strip_prefix("crs") {
+        (Sampler::Crs, d)
+    } else if let Some(d) = suffix.strip_prefix("det") {
+        (Sampler::Det, d)
+    } else {
+        bail!(
+            "method {method:?}: unknown sampler suffix {suffix:?} \
+             (wtacrs<pct>|crs<pct>|det<pct>)"
+        );
+    };
+    let budget: u8 = digits
+        .parse()
+        .map_err(|_| anyhow!("method {method:?}: bad sampler budget {digits:?}"))?;
+    let sampler =
+        SamplerSpec::new(kind, budget).with_context(|| format!("method {method:?}"))?;
+    MethodSpec::new(family, Some(sampler)).with_context(|| format!("method {method:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> MethodSpec {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn parse_grid() {
+        assert_eq!(parse("full"), MethodSpec::exact(Family::Full));
+        assert_eq!(parse("lst"), MethodSpec::exact(Family::Lst));
+        let m = parse("lora-wtacrs30");
+        assert_eq!(m.family, Family::Lora);
+        assert_eq!(m.sampler, Some(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }));
+        let m = parse("full-crs10");
+        assert_eq!(m.sampler.unwrap().kind, Sampler::Crs);
+        assert!((m.sampler.unwrap().fraction() - 0.1).abs() < 1e-12);
+        assert_eq!(parse("full-det10").sampler.unwrap().kind, Sampler::Det);
+        assert_eq!(parse("full-wtacrs100").sampler.unwrap().budget, 100);
+    }
+
+    #[test]
+    fn display_round_trips() {
+        for s in [
+            "full",
+            "lora",
+            "lst",
+            "full-wtacrs30",
+            "full-wtacrs10",
+            "lora-wtacrs30",
+            "lora-wtacrs10",
+            "full-crs10",
+            "full-det10",
+            "full-wtacrs100",
+            "lora-det1",
+        ] {
+            assert_eq!(parse(s).to_string(), s, "round trip of {s:?}");
+        }
+    }
+
+    #[test]
+    fn bad_family_message() {
+        let e = "adapter".parse::<MethodSpec>().unwrap_err().to_string();
+        assert!(e.contains("unknown tuning family"), "{e}");
+        assert!(e.contains("adapter"), "{e}");
+    }
+
+    #[test]
+    fn bad_sampler_suffix_message() {
+        let e = "full-bogus10".parse::<MethodSpec>().unwrap_err().to_string();
+        assert!(e.contains("unknown sampler suffix"), "{e}");
+        let e = "full-wtacrsXY".parse::<MethodSpec>().unwrap_err().to_string();
+        assert!(e.contains("bad sampler budget"), "{e}");
+    }
+
+    #[test]
+    fn budget_out_of_range_messages() {
+        for s in ["full-wtacrs0", "full-crs0"] {
+            let e = s.parse::<MethodSpec>().unwrap_err().to_string();
+            assert!(e.contains("must be in 1..=100"), "{s}: {e}");
+        }
+        let e = "full-wtacrs101".parse::<MethodSpec>().unwrap_err().to_string();
+        assert!(e.contains("must be in 1..=100") && e.contains("101"), "{e}");
+        assert!(SamplerSpec::new(Sampler::WtaCrs, 0).is_err());
+        assert!(SamplerSpec::new(Sampler::WtaCrs, 101).is_err());
+    }
+
+    #[test]
+    fn lst_rejects_sampler() {
+        let e = "lst-wtacrs30".parse::<MethodSpec>().unwrap_err().to_string();
+        assert!(e.contains("does not compose"), "{e}");
+        assert!(MethodSpec::new(
+            Family::Lst,
+            Some(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 })
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn k_for_budget_arithmetic() {
+        let sp = SamplerSpec { kind: Sampler::WtaCrs, budget: 30 };
+        assert_eq!(sp.k_for(32), 10); // round(9.6)
+        assert_eq!(sp.k_for(64), 19); // round(19.2)
+        assert_eq!(sp.k_for(1), 1);
+        let one = SamplerSpec { kind: Sampler::Crs, budget: 1 };
+        assert_eq!(one.k_for(10), 1); // clamped to >= 1
+        let all = SamplerSpec { kind: Sampler::Det, budget: 100 };
+        assert_eq!(all.k_for(10), 10);
+    }
+}

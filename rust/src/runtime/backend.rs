@@ -4,7 +4,8 @@
 //! written against these traits.  Two implementations exist:
 //!
 //! * [`super::NativeBackend`] — pure-Rust reference kernels (default;
-//!   no artifacts, no XLA, fully offline);
+//!   no artifacts, no XLA, fully offline), built on
+//!   [`crate::ops::SampledLinear`];
 //! * `super::PjrtBackend` (cargo feature `pjrt`) — the PJRT/XLA engine
 //!   executing AOT-lowered HLO artifacts.
 //!
@@ -12,6 +13,8 @@
 //! data pipeline and the Algorithm-1 gradient-norm cache, passing the
 //! gathered per-sample norms into each step and scattering the refreshed
 //! norms the step returns.
+
+use crate::ops::{Contraction, MethodSpec};
 
 use super::tensor::HostTensor;
 use crate::util::error::Result;
@@ -21,8 +24,9 @@ use crate::util::error::Result;
 pub struct SessionConfig {
     /// Model size name ("tiny", "small", ...).
     pub size: String,
-    /// Method string, `family[-sampler]`: "full", "lora-wtacrs30", ...
-    pub method: String,
+    /// Typed tuning method (family + optional sampler) — parse method
+    /// strings with [`MethodSpec::from_str`](std::str::FromStr).
+    pub method: MethodSpec,
     /// Classifier width (1 = regression head).
     pub n_out: usize,
     /// Parameter-init / sampling seed.
@@ -31,17 +35,20 @@ pub struct SessionConfig {
     pub lr: f32,
     /// Batch-size override (0 = backend default).
     pub batch: usize,
+    /// Contraction axis of the sampled weight-gradient GEMMs.
+    pub contraction: Contraction,
 }
 
 impl SessionConfig {
-    pub fn new(size: &str, method: &str, n_out: usize) -> Self {
+    pub fn new(size: &str, method: MethodSpec, n_out: usize) -> Self {
         SessionConfig {
             size: size.to_string(),
-            method: method.to_string(),
+            method,
             n_out,
             seed: 0,
             lr: 1e-3,
             batch: 0,
+            contraction: Contraction::Rows,
         }
     }
 }
@@ -82,6 +89,14 @@ pub trait TrainSession {
 
     /// Forward-only logits, row-major (batch, n_out).
     fn eval_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
+
+    /// Measured activation bytes the last train step stored for its
+    /// weight-gradient GEMMs, one entry per approximated layer (empty
+    /// before the first step, or when the backend cannot measure —
+    /// see [`crate::ops::SavedContext::saved_bytes`]).
+    fn saved_bytes_per_layer(&self) -> Vec<usize> {
+        vec![]
+    }
 
     /// Positional state snapshot (checkpointing).
     fn state(&self) -> Vec<HostTensor>;

@@ -102,7 +102,8 @@ fn shape_dims(s: &str) -> Vec<u64> {
 /// Extract the op name of an instruction line:
 /// `  %x.1 = f32[2,3]{1,0} add(%a, %b), metadata=...` -> "add".
 fn parse_instruction(line: &str) -> Option<(&str, &str)> {
-    let (_, rhs) = line.split_once(" = ")?;
+    let eq = line.find(" = ")?;
+    let rhs = &line[eq + 3..];
     // rhs: "f32[2,3]{1,0} add(...)" — shape then op.
     let rhs = rhs.trim_start();
     let shape_end = rhs.find(' ')?;

@@ -7,6 +7,7 @@
 
 use std::sync::Arc;
 
+use crate::ops::MethodSpec;
 use crate::util::error::{Context, Result};
 use crate::{anyhow, bail};
 
@@ -15,9 +16,9 @@ use super::engine::{Engine, Executable};
 use super::tensor::HostTensor;
 
 /// Artifact ids for a (size, method, n_out) GLUE config — the eval/init
-/// graphs depend only on the tuning family (method prefix).
-pub fn artifact_ids(size: &str, method: &str, n_out: usize) -> (String, String, String) {
-    let family = method.split('-').next().unwrap_or(method);
+/// graphs depend only on the tuning family.
+pub fn artifact_ids(size: &str, method: &MethodSpec, n_out: usize) -> (String, String, String) {
+    let family = method.family.as_str();
     (
         format!("train_{size}_{method}_c{n_out}"),
         format!("eval_{size}_{family}_c{n_out}"),
@@ -87,6 +88,9 @@ impl Backend for PjrtBackend {
     fn open(&self, cfg: &SessionConfig) -> Result<Box<dyn TrainSession>> {
         if cfg.batch != 0 {
             bail!("pjrt backend: batch size is fixed by the compiled artifact");
+        }
+        if cfg.contraction.per_sample() != 1 {
+            bail!("pjrt backend: the contraction axis is fixed by the compiled artifact");
         }
         let (train_id, eval_id, init_id) = artifact_ids(&cfg.size, &cfg.method, cfg.n_out);
         Ok(Box::new(PjrtSession::new(&self.engine, &train_id, &eval_id, &init_id, cfg)?))
@@ -269,7 +273,7 @@ mod tests {
 
     #[test]
     fn artifact_id_layout() {
-        let (t, e, i) = artifact_ids("tiny", "lora-wtacrs30", 3);
+        let (t, e, i) = artifact_ids("tiny", &"lora-wtacrs30".parse().unwrap(), 3);
         assert_eq!(t, "train_tiny_lora-wtacrs30_c3");
         assert_eq!(e, "eval_tiny_lora_c3");
         assert_eq!(i, "init_tiny_lora_c3");

@@ -98,8 +98,8 @@ impl Cli {
         while i < args.len() {
             let a = &args[i];
             if let Some(body) = a.strip_prefix("--") {
-                let (key, inline) = match body.split_once('=') {
-                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                let (key, inline) = match body.find('=') {
+                    Some(eq) => (body[..eq].to_string(), Some(body[eq + 1..].to_string())),
                     None => (body.to_string(), None),
                 };
                 let spec = self

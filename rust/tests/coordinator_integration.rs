@@ -7,7 +7,12 @@
 use wtacrs::coordinator::{checkpoint, run_glue, ExperimentOptions, TrainOptions, Trainer};
 use wtacrs::data::{glue, Batcher};
 use wtacrs::metrics::MetricKind;
+use wtacrs::ops::MethodSpec;
 use wtacrs::runtime::{Backend, NativeBackend};
+
+fn m(s: &str) -> MethodSpec {
+    s.parse().unwrap()
+}
 
 fn opts(steps: usize, lr: f32, train_size: usize, val_size: usize) -> ExperimentOptions {
     ExperimentOptions {
@@ -21,19 +26,22 @@ fn opts(steps: usize, lr: f32, train_size: usize, val_size: usize) -> Experiment
 #[test]
 fn glue_run_learns_above_chance() {
     let backend = NativeBackend::new();
-    let r = run_glue(&backend, "sst2", "tiny", "full-wtacrs30", &opts(300, 1e-3, 2048, 256))
+    let r = run_glue(&backend, "sst2", "tiny", &m("full-wtacrs30"), &opts(300, 1e-3, 2048, 256))
         .unwrap();
     assert!(r.score > 0.54, "sst2 acc {} not above chance", r.score);
     assert_eq!(r.metric_name, "acc");
     assert!(r.report.norm_cache_coverage > 0.9);
     assert!(r.report.losses.first().unwrap() > r.report.losses.last().unwrap());
+    // The sampled run reports measured sub-sampled activation storage.
+    assert_eq!(r.report.saved_bytes_per_layer.len(), 3);
+    assert!(r.report.peak_saved_bytes > 0);
 }
 
 #[test]
 fn lora_and_lst_families_run() {
     let backend = NativeBackend::new();
     for (method, lr) in [("lora", 3e-3), ("lst", 3e-3), ("lora-wtacrs30", 3e-3)] {
-        let r = run_glue(&backend, "rte", "tiny", method, &opts(40, lr, 512, 128)).unwrap();
+        let r = run_glue(&backend, "rte", "tiny", &m(method), &opts(40, lr, 512, 128)).unwrap();
         assert!(
             r.report.losses.iter().all(|l| l.is_finite()),
             "{method} produced non-finite loss"
@@ -44,7 +52,7 @@ fn lora_and_lst_families_run() {
 #[test]
 fn regression_task_reports_correlation() {
     let backend = NativeBackend::new();
-    let r = run_glue(&backend, "stsb", "tiny", "full-wtacrs30", &opts(200, 1e-3, 1024, 256))
+    let r = run_glue(&backend, "stsb", "tiny", &m("full-wtacrs30"), &opts(200, 1e-3, 1024, 256))
         .unwrap();
     assert_eq!(r.metric_name, "pearson");
     assert!(r.score > 0.25, "stsb pearson {} shows no learning", r.score);
@@ -53,7 +61,7 @@ fn regression_task_reports_correlation() {
 #[test]
 fn mnli_three_class_path() {
     let backend = NativeBackend::new();
-    let r = run_glue(&backend, "mnli", "tiny", "full-wtacrs30", &opts(200, 1e-3, 1024, 256))
+    let r = run_glue(&backend, "mnli", "tiny", &m("full-wtacrs30"), &opts(200, 1e-3, 1024, 256))
         .unwrap();
     assert!(r.score > 0.40, "mnli acc {} near chance", r.score);
 }
@@ -64,7 +72,7 @@ fn exact_and_det_families_run() {
     // drive the trainer without numerical blowups.
     let backend = NativeBackend::new();
     for method in ["full", "full-det10", "full-crs10"] {
-        let r = run_glue(&backend, "rte", "tiny", method, &opts(20, 1e-3, 512, 128)).unwrap();
+        let r = run_glue(&backend, "rte", "tiny", &m(method), &opts(20, 1e-3, 512, 128)).unwrap();
         assert!(r.report.losses.iter().all(|l| l.is_finite()), "{method}");
     }
 }
@@ -78,7 +86,7 @@ fn checkpoint_roundtrip_resumes_identically() {
 
     let topts =
         TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
-    let mut t1 = Trainer::new(&backend, "tiny", "full-wtacrs30", 2, ds.len(), topts.clone())
+    let mut t1 = Trainer::new(&backend, "tiny", &m("full-wtacrs30"), 2, ds.len(), topts.clone())
         .unwrap();
     let mut batcher = Batcher::new(&ds, t1.batch_size(), 1);
     for _ in 0..5 {
@@ -91,7 +99,7 @@ fn checkpoint_roundtrip_resumes_identically() {
     // Fresh trainer restored from the checkpoint must produce the same
     // loss on the same next batch as the original.
     let mut t2 =
-        Trainer::new(&backend, "tiny", "full-wtacrs30", 2, ds.len(), topts).unwrap();
+        Trainer::new(&backend, "tiny", &m("full-wtacrs30"), 2, ds.len(), topts).unwrap();
     t2.restore_state(checkpoint::load(&path).unwrap()).unwrap();
     // share the cache so sampling distributions agree
     t2.norm_cache = t1.norm_cache.clone();
@@ -111,7 +119,7 @@ fn evaluate_is_deterministic() {
     let mut trainer = Trainer::new(
         &backend,
         "tiny",
-        "full-wtacrs30",
+        &m("full-wtacrs30"),
         2,
         64,
         TrainOptions::default(),
@@ -128,9 +136,9 @@ fn wtacrs_tracks_exact_training_loss() {
     // trainer should track exact training rather than diverge — final
     // smoothed loss within a loose band of the exact trainer's.
     let backend = NativeBackend::new();
-    let exact = run_glue(&backend, "sst2", "tiny", "full", &opts(120, 1e-3, 1024, 128))
+    let exact = run_glue(&backend, "sst2", "tiny", &m("full"), &opts(120, 1e-3, 1024, 128))
         .unwrap();
-    let wta = run_glue(&backend, "sst2", "tiny", "full-wtacrs30", &opts(120, 1e-3, 1024, 128))
+    let wta = run_glue(&backend, "sst2", "tiny", &m("full-wtacrs30"), &opts(120, 1e-3, 1024, 128))
         .unwrap();
     let tail = |r: &wtacrs::coordinator::TrainReport| {
         let n = r.losses.len();

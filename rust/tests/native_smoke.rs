@@ -15,8 +15,15 @@ fn ten_steps_decrease_loss_on_synthetic_glue() {
     let ds = glue::generate(&spec, dims.vocab, dims.seq_len, 256, 5);
 
     let opts = TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
-    let mut trainer =
-        Trainer::new(&backend, "tiny", "full-wtacrs30", spec.n_out, ds.len(), opts).unwrap();
+    let mut trainer = Trainer::new(
+        &backend,
+        "tiny",
+        &"full-wtacrs30".parse().unwrap(),
+        spec.n_out,
+        ds.len(),
+        opts,
+    )
+    .unwrap();
     let mut batcher = Batcher::new(&ds, trainer.batch_size(), 0);
 
     let mut losses = Vec::with_capacity(10);
@@ -38,6 +45,10 @@ fn ten_steps_decrease_loss_on_synthetic_glue() {
     // The cache must have been refreshed for every sample the ten
     // batches touched.
     assert!(trainer.norm_cache.coverage() > 0.0);
+    // The sampled session must measure its sub-sampled activation
+    // storage (SavedContext::saved_bytes) — one entry per layer.
+    assert_eq!(trainer.saved_bytes_per_layer().len(), 3);
+    assert!(trainer.peak_saved_bytes() > 0, "no measured activation storage");
 }
 
 #[test]
@@ -49,9 +60,10 @@ fn smoke_all_method_grid_one_step() {
     let spec = glue::task("rte").unwrap();
     let ds = glue::generate(&spec, dims.vocab, dims.seq_len, 64, 7);
     for method in wtacrs::coordinator::experiment::METHODS {
+        let spec_m: wtacrs::ops::MethodSpec = method.parse().unwrap();
         let opts = TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
         let mut trainer =
-            Trainer::new(&backend, "tiny", method, spec.n_out, ds.len(), opts).unwrap();
+            Trainer::new(&backend, "tiny", &spec_m, spec.n_out, ds.len(), opts).unwrap();
         let mut batcher = Batcher::new(&ds, trainer.batch_size(), 0);
         let loss = trainer.train_step(&batcher.next_batch()).unwrap();
         assert!(loss.is_finite(), "{method}: non-finite loss");
