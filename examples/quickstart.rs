@@ -1,12 +1,15 @@
-//! Quickstart: the smallest useful WTA-CRS workflow, on the new
-//! `ops::SampledLinear` / `MethodSpec` API.
+//! Quickstart: the smallest useful WTA-CRS workflow, on the
+//! `ops::SampledLinear` / `nn::ModelBuilder` API.
 //!
 //! 1. Parse a typed method spec and run the sampled linear op directly,
 //!    printing the *measured* bytes the saved context holds.
 //! 2. Fine-tune the tiny native model on the synthetic RTE task with
 //!    WTA-CRS@0.3 (the paper's headline budget) and print the measured
 //!    per-layer activation storage next to the accuracy.
-//! 3. Compare with the analytic memory model (the paper's Table 2).
+//! 3. Build a custom deep stack with `ModelBuilder` — 4 sampled trunk
+//!    linears contracting over batch×token rows — and train a few
+//!    steps, printing the whole-tape measured memory.
+//! 4. Compare with the analytic memory model (the paper's Table 2).
 //!
 //! Runs fully offline — no artifacts, no XLA.
 //!
@@ -15,8 +18,9 @@
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
 use wtacrs::estimator::Mat;
 use wtacrs::memsim::{self, Scope, Workload};
+use wtacrs::nn::ModelSpec;
 use wtacrs::ops::{Contraction, MethodSpec, SampledLinear};
-use wtacrs::runtime::{Backend, NativeBackend};
+use wtacrs::runtime::{Backend, NativeBackend, SessionConfig, TrainSession};
 use wtacrs::util::error::Result;
 use wtacrs::util::rng::Rng;
 
@@ -43,7 +47,7 @@ fn main() -> Result<()> {
         ctx.full_bytes() as f64 / ctx.saved_bytes() as f64,
     );
     let dz = Mat::randn(64, 32, &mut rng);
-    let bw = ctx.backward(&dz);
+    let bw = ctx.backward(&dz, &w);
     println!(
         "backward from the saved pairs: dW {}x{}, dH {}x{}, {} refreshed norms",
         bw.dw.rows, bw.dw.cols, bw.dh.rows, bw.dh.cols, bw.refreshed_norms.len(),
@@ -71,16 +75,62 @@ fn main() -> Result<()> {
         println!("  eval @ step {step}: acc {acc:.3}");
     }
     // The measured memory story: bytes each sampled layer actually
-    // stored for backward (SavedContext::saved_bytes), not a model.
+    // stored for backward (Tape::stats), not a model.
     for (layer, bytes) in result.report.saved_bytes_per_layer.iter().enumerate() {
         println!("  layer {layer}: saved_bytes = {bytes} per step");
     }
     println!(
-        "  peak measured activation storage: {} bytes/step",
-        result.report.peak_saved_bytes
+        "  whole tape: {} bytes/step (peak {} bytes/step)",
+        result.report.tape_bytes, result.report.peak_saved_bytes
     );
 
-    // 3. The analytic memory story (the paper's Table 2, from memsim):
+    // 3. A custom architecture from the same parts: the ModelSpec rides
+    //    SessionConfig, so any depth trains with no backend changes.
+    //    Here: 4 sampled trunk linears over 32x4 token rows
+    //    (Contraction::Tokens) plus the sampled head = 5 cache layers.
+    let spec = ModelSpec {
+        depth: 4,
+        width: 128,
+        contraction: Contraction::Tokens { per_sample: 4 },
+    };
+    let mut cfg = SessionConfig::new("tiny", method, 2);
+    cfg.lr = 1e-3;
+    cfg.model = spec;
+    let mut sess = backend.open(&cfg)?;
+    println!(
+        "\ndeep stack: depth {} width {} -> {} sampled linears",
+        spec.depth,
+        spec.width,
+        sess.n_approx_layers()
+    );
+    let (b, s) = (sess.batch_size(), sess.seq_len());
+    let mut toks = vec![0i32; b * s];
+    let mut labs = vec![0i32; b];
+    for r in 0..b {
+        let t = 4 + ((r * 37) % 1000) as i32;
+        for c in 0..s {
+            toks[r * s + c] = t;
+        }
+        labs[r] = (t > 512) as i32;
+    }
+    let zn = vec![1.0f32; sess.n_approx_layers() * b];
+    let mut first = 0.0f32;
+    let mut last = 0.0f32;
+    for step in 0..10 {
+        let (loss, _norms) = sess.train_step(&toks, &labs, &[], &zn)?;
+        if step == 0 {
+            first = loss;
+        }
+        last = loss;
+    }
+    let stats = sess.tape_stats();
+    println!("  toy loss {first:.3} -> {last:.3} over 10 steps");
+    println!(
+        "  measured tape: {} bytes total, per sampled linear {:?}",
+        stats.total, stats.per_layer
+    );
+
+    // 4. The analytic memory story (the paper's Table 2, from memsim):
     let dims = memsim::Dims::paper("t5-base").unwrap();
     let w = Workload { batch: 64, seq: 128, bytes: 4 };
     let full = memsim::peak_bytes(&dims, &memsim::MethodMem::full(), &w, Scope::Paper);

@@ -1,0 +1,100 @@
+"""Calibrate the PR-3 deep-stack thresholds before committing Rust.
+
+Scenarios mirrored:
+  * native.rs `deep_stack_trains_under_token_contraction` — 30 toy
+    steps, asserts last < 0.5 * first.
+  * native_smoke `deep_token_contracted_stack_learns_through_trainer`
+    — 30 sst2 steps at lr 2e-3 with the live norm cache, asserts
+    mean(losses[15:]) < losses[0].
+  * coordinator_integration `deep_token_contracted_stack_through_run_glue`
+    — 60 sst2 steps at lr 2e-3, asserts mean(last 10) < first.
+
+Plus the deterministic tape-byte arithmetic for both pins (legacy MLP
+and the deep stack) — these have no stochastic component (k is fixed by
+the budget), so the script just re-derives the numbers the tests assert.
+
+Usage: python3 check_pr3.py
+"""
+import time
+
+import numpy as np
+
+import nn_deep
+
+
+def banner(name):
+    print(f"\n== {name} ==")
+
+
+def tape_arithmetic():
+    banner("tape byte arithmetic (deterministic)")
+
+    def ctx_bytes(k, d_in):
+        return k * d_in * 4 + k * 8 + k * 8  # rows + usize idx + f64 scales
+
+    def mask_bytes(elems):
+        return ((elems + 63) // 64) * 8
+
+    # Legacy tiny full MLP: b=32, d=128, f=256, k = round(0.3*32) = 10.
+    b, d, f = 32, 128, 256
+    k = nn_deep.k_for(0.3, b)
+    sampled = ctx_bytes(k, d) + ctx_bytes(k, f) + ctx_bytes(k, d)
+    masks = mask_bytes(b * f) + mask_bytes(b * d)
+    exact = b * d * 4 + b * f * 4 + b * d * 4
+    ratio = (sampled + masks) / (exact + masks)
+    print(f"  legacy MLP: k={k}, tape ratio {ratio:.4f} (pin < 0.35)")
+    assert ratio < 0.35
+
+    # Deep stack: depth 4, width 128, ps 4 -> 128 token rows per trunk
+    # layer; head over 32 pooled rows.
+    n, w = 32 * 4, 128
+    kt, kh = nn_deep.k_for(0.3, n), nn_deep.k_for(0.3, 32)
+    sampled = 4 * ctx_bytes(kt, w) + ctx_bytes(kh, w)
+    masks = 4 * mask_bytes(n * w)
+    exact = 4 * (n * w * 4) + 32 * w * 4
+    ratio = (sampled + masks) / (exact + masks)
+    print(f"  deep stack: k_trunk={kt} k_head={kh}, tape ratio {ratio:.4f} "
+          f"(pin < 0.35); per-trunk-layer {ctx_bytes(kt, w) / (n * w * 4):.4f}")
+    assert ratio < 0.35
+    assert ctx_bytes(kt, w) / (n * w * 4) < 0.35
+
+
+def main():
+    tape_arithmetic()
+
+    banner("native.rs deep toy (30 steps, wtacrs30)")
+    t0 = time.time()
+    losses = nn_deep.run_toy(budget=0.3, steps=30)
+    first, last = losses[0], losses[-1]
+    print(f"  loss {first:.4f} -> {last:.4f} "
+          f"(ratio {last / first:.3f}, pin last < 0.5*first) "
+          f"[{time.time() - t0:.0f}s]")
+    print(f"  losses: {[round(x, 4) for x in losses[::5]]}")
+
+    banner("native_smoke deep sst2 (30 steps, lr 2e-3, live cache)")
+    t0 = time.time()
+    for seed in (0, 1, 2, 3, 4):
+        losses = nn_deep.run_glue_deep("sst2", 30, lr=2e-3, seed=seed,
+                                       train_size=256, val_size=64,
+                                       data_seed=5)
+        tail = float(np.mean(losses[15:]))
+        print(f"  seed {seed}: first {losses[0]:.4f} tail-mean {tail:.4f} "
+              f"(pin tail < first; margin {losses[0] - tail:.4f})")
+    print(f"  [{time.time() - t0:.0f}s]")
+
+    banner("coordinator deep sst2 via run_glue (60 steps, lr 2e-3)")
+    t0 = time.time()
+    for seed in (0, 1, 2, 3, 4):
+        losses = nn_deep.run_glue_deep("sst2", 60, lr=2e-3, seed=seed,
+                                       train_size=512, val_size=128,
+                                       data_seed=5)
+        tail10 = float(np.mean(losses[-10:]))
+        print(f"  seed {seed}: first {losses[0]:.4f} tail10 {tail10:.4f} "
+              f"(pin tail10 < first; margin {losses[0] - tail10:.4f})")
+    print(f"  [{time.time() - t0:.0f}s]")
+
+    print("\nall scenarios printed; compare margins before trusting pins")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,198 @@
+"""Mirror of the nn deep token-contracted stack (PR 3) for threshold
+calibration.
+
+Replicates `nn::ModelBuilder::build_deep` for the `full` family: a
+chunked mean-pool embed emitting `per_sample` token rows per sample,
+`depth` trunk linears whose weight-gradient GEMMs are column-row sampled
+under `Contraction::Tokens { per_sample }` (per-sample cache slots
+broadcast over each sample's token rows), a mean-pool back to one row
+per sample, and a `Rows`-contracted sampled head.  Parameter draw order
+matches the Rust builder: embed, trunk weights 0..depth, head.
+
+Float math is numpy float32 — statistically faithful, not bitwise.
+"""
+import numpy as np
+
+import glue
+from estimator import select
+from native import Adam, NormCache, randn_mat
+from rng import Rng
+
+SIZES = {"tiny": dict(vocab=1024, seq=64, batch=32, d=128, f=256)}
+SAMPLE_STREAM = 0xA11CE
+
+
+def k_for(budget, m):
+    return max(1, min(m, int(np.floor(budget * m + 0.5))))
+
+
+class DeepSession:
+    def __init__(self, size, budget, n_out, seed, lr,
+                 depth=4, width=128, per_sample=4, sampler="wtacrs"):
+        cfg = SIZES[size]
+        self.vocab, self.seq, self.batch = cfg["vocab"], cfg["seq"], cfg["batch"]
+        self.d = cfg["d"]
+        self.depth, self.width, self.ps = depth, width, per_sample
+        self.n_out, self.seed, self.lr = n_out, seed, lr
+        self.budget, self.sampler = budget, sampler
+        self.n_approx = depth + 1
+        self.step = 0
+        import math
+        rng = Rng(seed)
+        self.embed = randn_mat(self.vocab, self.d, rng)
+        self.trunk, self.biases = [], []
+        in_dim = self.d
+        for _ in range(depth):
+            self.trunk.append(randn_mat(in_dim, width, rng,
+                                        math.sqrt(2.0 / in_dim)))
+            self.biases.append(np.zeros(width, dtype=np.float32))
+            in_dim = width
+        self.head = randn_mat(width, n_out, rng, math.sqrt(1.0 / width))
+        self.head_b = np.zeros(n_out, dtype=np.float32)
+        self.opt = {}
+        for l in range(depth):
+            self.opt[f"w{l}"] = Adam(self.trunk[l].shape)
+            self.opt[f"b{l}"] = Adam(self.biases[l].shape)
+        self.opt["head"] = Adam(self.head.shape)
+        self.opt["head_b"] = Adam(self.head_b.shape)
+
+    def chunk_pool(self, tokens):
+        """(B, seq) ids -> (B * ps, d) chunk-pooled embeddings."""
+        B, s, ps = tokens.shape[0], self.seq, self.ps
+        chunk = s // ps
+        out = np.zeros((B * ps, self.d), dtype=np.float32)
+        for r in range(B):
+            for c in range(ps):
+                seg = tokens[r, c * chunk:(c + 1) * chunk]
+                nz = seg[seg != 0]
+                if len(nz):
+                    out[r * ps + c] = (self.embed[nz].sum(axis=0, dtype=np.float32)
+                                       / np.float32(len(nz)))
+        return out
+
+    def select_for(self, acts, layer, zn, rng, per_sample):
+        """Tokens-broadcast column-row selection (None = exact/full)."""
+        n = acts.shape[0]
+        k = k_for(self.budget, n)
+        if self.sampler is None or k >= n:
+            return None
+        B = self.batch
+        anorm = np.sqrt((acts.astype(np.float64) ** 2).sum(axis=1))
+        zl = zn[layer * B:(layer + 1) * B].astype(np.float64)
+        w = np.maximum(anorm * np.maximum(zl[np.arange(n) // per_sample], 0.0),
+                       1e-12)
+        probs = w / w.sum()
+        return select(self.sampler, list(probs), k, rng)
+
+    @staticmethod
+    def grad_from(acts, delta, sel):
+        if sel is None:
+            return (acts.T @ delta).astype(np.float32)
+        idx, sc = sel
+        g = np.zeros((acts.shape[1], delta.shape[1]), dtype=np.float32)
+        for i, s in zip(idx, sc):
+            g += np.outer(acts[i] * np.float32(s), delta[i]).astype(np.float32)
+        return g
+
+    def forward(self, x_tok):
+        acts, zs = [x_tok], []
+        h = x_tok
+        for l in range(self.depth):
+            z = (h @ self.trunk[l] + self.biases[l]).astype(np.float32)
+            h = np.maximum(z, 0)
+            zs.append(z)
+            acts.append(h)
+        B, ps = self.batch, self.ps
+        pooled = h.reshape(B, ps, -1).mean(axis=1, dtype=np.float32)
+        logits = (pooled @ self.head + self.head_b).astype(np.float32)
+        return acts, zs, pooled, logits
+
+    def train_step(self, tokens, labels_i, zn):
+        B, ps = self.batch, self.ps
+        x_tok = self.chunk_pool(tokens)
+        rng = Rng(self.seed ^ SAMPLE_STREAM).fold_in(self.step)
+        # forward with selections drawn layer 0..depth (then head)
+        acts, zs, pooled, logits = self.forward(x_tok)
+        sels = [self.select_for(acts[l], l, zn, rng, ps)
+                for l in range(self.depth)]
+        sel_head = self.select_for(pooled, self.depth, zn, rng, 1)
+        # softmax xent
+        z = logits - logits.max(axis=1, keepdims=True)
+        e = np.exp(z.astype(np.float64))
+        p = (e / e.sum(axis=1, keepdims=True)).astype(np.float32)
+        y = np.asarray(labels_i)
+        loss = float(-np.mean(np.log(np.maximum(p[np.arange(B), y], 1e-12))))
+        dlogits = p.copy()
+        dlogits[np.arange(B), y] -= 1.0
+        dlogits = (dlogits / np.float32(B)).astype(np.float32)
+
+        grads = {}
+        grads["head"] = self.grad_from(pooled, dlogits, sel_head)
+        grads["head_b"] = dlogits.sum(axis=0)
+        dpool = (dlogits @ self.head.T).astype(np.float32)
+        # mean-pool backward: broadcast / ps
+        da = (np.repeat(dpool, ps, axis=0) / np.float32(ps)).astype(np.float32)
+        norms = np.zeros(self.n_approx * B, dtype=np.float32)
+        norms[self.depth * B:] = np.sqrt(
+            (dlogits.astype(np.float64) ** 2).sum(axis=1))
+        for l in range(self.depth - 1, -1, -1):
+            dz = (da * (zs[l] > 0)).astype(np.float32)
+            grads[f"w{l}"] = self.grad_from(acts[l], dz, sels[l])
+            grads[f"b{l}"] = dz.sum(axis=0)
+            norms[l * B:(l + 1) * B] = np.sqrt(
+                (dz.astype(np.float64) ** 2).reshape(B, ps, -1).sum(axis=(1, 2)))
+            if l > 0:
+                da = (dz @ self.trunk[l].T).astype(np.float32)
+        self.step += 1
+        t = self.step
+        for l in range(self.depth):
+            self.trunk[l] = self.opt[f"w{l}"].update(
+                self.trunk[l], grads[f"w{l}"], self.lr, t)
+            self.biases[l] = self.opt[f"b{l}"].update(
+                self.biases[l], grads[f"b{l}"], self.lr, t)
+        self.head = self.opt["head"].update(self.head, grads["head"], self.lr, t)
+        self.head_b = self.opt["head_b"].update(
+            self.head_b, grads["head_b"], self.lr, t)
+        return loss, norms
+
+
+def toy_batch_dense(sess):
+    b, s = sess.batch, sess.seq
+    toks = np.zeros((b, s), dtype=np.int32)
+    labs = []
+    for r in range(b):
+        t = 4 + ((r * 37) % 1000)
+        toks[r, :] = t
+        labs.append(int(t > 512))
+    return toks, labs
+
+
+def run_toy(budget=0.3, steps=30, sampler="wtacrs"):
+    sess = DeepSession("tiny", budget, 2, seed=0, lr=1e-3, sampler=sampler)
+    toks, labs = toy_batch_dense(sess)
+    zn = np.ones(sess.n_approx * sess.batch, dtype=np.float32)
+    losses = []
+    for _ in range(steps):
+        loss, _ = sess.train_step(toks, labs, zn)
+        losses.append(loss)
+    return losses
+
+
+def run_glue_deep(task, steps, lr=1e-3, seed=0, data_seed=5,
+                  train_size=256, val_size=64, budget=0.3):
+    spec = dict(glue.TASKS[task])
+    cfg = SIZES["tiny"]
+    train = glue.generate(task, cfg["vocab"], cfg["seq"], train_size, data_seed)
+    sess = DeepSession("tiny", budget, spec["n_out"], seed, lr)
+    cache = NormCache(sess.n_approx, len(train))
+    bat = glue.Batcher(len(train), sess.batch, seed)
+    losses = []
+    for _ in range(steps):
+        idxs = bat.next_indices()
+        toks = np.array([train[i][0] for i in idxs], dtype=np.int32)
+        li = [train[i][1][1] if train[i][1][0] == "c" else 0 for i in idxs]
+        zn = cache.gather(idxs)
+        loss, norms = sess.train_step(toks, li, zn)
+        cache.scatter(idxs, norms)
+        losses.append(loss)
+    return losses

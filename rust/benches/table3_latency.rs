@@ -70,6 +70,66 @@ fn main() {
         }
         t.print();
     }
+
+    // The deep token-contracted stack (nn::ModelBuilder): 4 sampled
+    // trunk linears over batch×token rows + the sampled head — the
+    // paper-scope contraction axis, timed on the same harness.
+    if !common::smoke_mode() {
+        use wtacrs::nn::ModelSpec;
+        use wtacrs::ops::Contraction;
+        let dims = backend.model_dims("tiny").expect("model dims");
+        let corpus = Corpus::new(dims.vocab, 0);
+        println!("\n== deep stack (tiny, depth 4, tokens/sample 4) ==");
+        let mut t = Table::new(&["method", "fwd ms", "step ms", "bwd+update ms"]);
+        for &method in ["full", "full-wtacrs30"].iter() {
+            let spec: wtacrs::ops::MethodSpec = method.parse().expect("method");
+            let mut scfg = SessionConfig::new("tiny", spec, 2);
+            scfg.lr = 1e-3;
+            scfg.model = ModelSpec {
+                depth: 4,
+                width: 128,
+                contraction: Contraction::Tokens { per_sample: 4 },
+            };
+            // Backends with compiled-in architectures (pjrt) reject the
+            // deep spec; skip the section rather than abort the sweep.
+            let mut session = match backend.open(&scfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("deep stack not supported by this backend ({e}); skipping");
+                    break;
+                }
+            };
+            let b = session.batch_size();
+            let seq = session.seq_len();
+            let zn = vec![1.0f32; session.n_approx_layers() * b];
+            let labels: Vec<i32> = (0..b as i32).map(|i| i % 2).collect();
+            let toks = corpus.batch(b, seq, 0);
+            let fwd = bench(&format!("deep_{method}_fwd"), &cfg, || {
+                session.eval_logits(&toks).expect("eval");
+            });
+            let mut step_i = 1u64;
+            let step = bench(&format!("deep_{method}_step"), &cfg, || {
+                let toks = corpus.batch(b, seq, step_i);
+                step_i += 1;
+                session.train_step(&toks, &labels, &[], &zn).expect("step");
+            });
+            let bwd = (step.mean_ms() - fwd.mean_ms()).max(0.0);
+            t.row(&[
+                method.into(),
+                format!("{:.3}", fwd.mean_ms()),
+                format!("{:.3}", step.mean_ms()),
+                format!("{bwd:.3}"),
+            ]);
+            out.push(json::obj(vec![
+                ("size", json::s("tiny-deep4")),
+                ("method", json::s(method)),
+                ("fwd_ms", json::num(fwd.mean_ms())),
+                ("step_ms", json::num(step.mean_ms())),
+                ("bwd_ms", json::num(bwd)),
+            ]));
+        }
+        t.print();
+    }
     println!(
         "\npaper shape: at equal batch the sampled step carries the \
          distribution-building overhead in forward and a smaller GEMM in \

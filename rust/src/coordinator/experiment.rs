@@ -6,6 +6,7 @@
 
 use crate::bail;
 use crate::data::glue::{self, TaskSpec};
+use crate::nn::ModelSpec;
 use crate::ops::{Family, MethodSpec};
 use crate::runtime::Backend;
 use crate::util::error::Result;
@@ -84,6 +85,9 @@ pub struct ExperimentOptions {
     pub train_size: usize,
     pub val_size: usize,
     pub data_seed: u64,
+    /// Architecture knobs (stack depth / width / contraction axis);
+    /// the default is each family's classic graph.
+    pub model: ModelSpec,
 }
 
 impl Default for ExperimentOptions {
@@ -93,6 +97,7 @@ impl Default for ExperimentOptions {
             train_size: 0,
             val_size: 0,
             data_seed: 17,
+            model: ModelSpec::default(),
         }
     }
 }
@@ -118,10 +123,11 @@ pub fn run_glue(
     let (train_ds, val_ds) =
         glue::train_val(&spec, dims.vocab, dims.seq_len, opts.data_seed);
 
-    let mut trainer = Trainer::new(
+    let mut trainer = Trainer::new_with_model(
         backend,
         size,
         method,
+        opts.model,
         spec.n_out,
         train_ds.len(),
         opts.train.clone(),

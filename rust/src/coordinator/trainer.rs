@@ -13,6 +13,7 @@ use crate::bail;
 use crate::data::batcher::{Batch, Batcher};
 use crate::data::glue::Dataset;
 use crate::metrics::{self, MetricKind};
+use crate::nn::{ModelSpec, TapeStats};
 use crate::ops::MethodSpec;
 use crate::runtime::{Backend, HostTensor, SessionConfig, TrainSession};
 use crate::util::error::Result;
@@ -51,10 +52,13 @@ pub struct TrainReport {
     pub throughput: f64,
     pub norm_cache_coverage: f64,
     /// Measured activation bytes the last step's sampled ops stored,
-    /// per approximated layer (`SavedContext::saved_bytes`; empty when
-    /// the backend does not measure).
+    /// per approximated layer (`Tape::stats`; empty when the backend
+    /// does not measure).
     pub saved_bytes_per_layer: Vec<usize>,
-    /// Peak over steps of the summed per-layer measured bytes.
+    /// Last step's whole-tape saved-for-backward bytes (contexts, kept
+    /// activations, ReLU masks — `Tape::saved_bytes`).
+    pub tape_bytes: usize,
+    /// Peak over steps of the whole-tape measured bytes.
     pub peak_saved_bytes: usize,
 }
 
@@ -68,7 +72,8 @@ pub struct Trainer {
 }
 
 impl Trainer {
-    /// Open a session on `backend` for (size, method, n_out) and wrap it.
+    /// Open a session on `backend` for (size, method, n_out) with each
+    /// family's classic graph and wrap it.
     pub fn new(
         backend: &dyn Backend,
         size: &str,
@@ -77,9 +82,24 @@ impl Trainer {
         n_samples: usize,
         opts: TrainOptions,
     ) -> Result<Self> {
+        Self::new_with_model(backend, size, method, ModelSpec::default(), n_out, n_samples, opts)
+    }
+
+    /// Open a session with an explicit architecture spec — the single
+    /// place a `SessionConfig` is assembled from `TrainOptions`.
+    pub fn new_with_model(
+        backend: &dyn Backend,
+        size: &str,
+        method: &MethodSpec,
+        model: ModelSpec,
+        n_out: usize,
+        n_samples: usize,
+        opts: TrainOptions,
+    ) -> Result<Self> {
         let mut cfg = SessionConfig::new(size, *method, n_out);
         cfg.seed = opts.seed;
         cfg.lr = opts.lr;
+        cfg.model = model;
         let session = backend.open(&cfg)?;
         Ok(Self::from_session(session, n_samples, opts))
     }
@@ -125,18 +145,23 @@ impl Trainer {
         )?;
         self.norm_cache.scatter(&batch.indices, &refreshed);
         self.step += 1;
-        let saved: usize = self.session.saved_bytes_per_layer().iter().sum();
-        self.peak_saved_bytes = self.peak_saved_bytes.max(saved);
+        self.peak_saved_bytes = self.peak_saved_bytes.max(self.session.tape_stats().total);
         Ok(loss)
+    }
+
+    /// Measured tape accounting of the last train step (empty before
+    /// the first step, or when the backend cannot measure).
+    pub fn tape_stats(&self) -> TapeStats {
+        self.session.tape_stats()
     }
 
     /// Measured activation bytes the last step's sampled ops stored,
     /// per approximated layer (empty before the first step).
     pub fn saved_bytes_per_layer(&self) -> Vec<usize> {
-        self.session.saved_bytes_per_layer()
+        self.session.tape_stats().per_layer
     }
 
-    /// Peak over steps of the summed per-layer measured bytes.
+    /// Peak over steps of the whole-tape measured bytes.
     pub fn peak_saved_bytes(&self) -> usize {
         self.peak_saved_bytes
     }
@@ -225,6 +250,7 @@ impl Trainer {
             best = best.max(final_metric);
         }
         let steps = losses.len();
+        let stats = self.session.tape_stats();
         Ok(TrainReport {
             losses,
             evals,
@@ -234,7 +260,8 @@ impl Trainer {
             train_seconds: t0.elapsed().as_secs_f64(),
             throughput: steps as f64 * self.batch_size() as f64 / train_time.max(1e-9),
             norm_cache_coverage: self.norm_cache.coverage(),
-            saved_bytes_per_layer: self.session.saved_bytes_per_layer(),
+            saved_bytes_per_layer: stats.per_layer,
+            tape_bytes: stats.total,
             peak_saved_bytes: self.peak_saved_bytes,
         })
     }

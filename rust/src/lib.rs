@@ -7,71 +7,77 @@
 //! column-row-sampled estimator lets training store only a sub-sampled
 //! slice of each activation.
 //!
-//! ## The operator API (start here)
+//! ## The layer stack (start here)
 //!
-//! The claim is embodied by [`ops::SampledLinear`]:
+//! Three levels, each built on the one below:
 //!
-//! * `forward(&H, &W, znorms, rng) -> (Z, SavedContext)` computes the
-//!   exact `Z = H W` but saves only the k selected column-row pairs —
-//!   indices, the pre-scaled sub-sampled activation rows, and the
-//!   selection scales — chosen by [`estimator::select`] from
-//!   `p_i ∝ ||H_i,:|| · cache_i` (Eq. 3, with the Algorithm-1
-//!   gradient-norm cache standing in for `||dZ_i,:||`, which does not
-//!   exist yet at forward time);
-//! * [`ops::SavedContext::backward`] reconstructs the unbiased
-//!   weight-gradient estimate `dW ≈ Hᵀ dZ` from the stored pairs
-//!   (Eq. 5/6), returns the exact `dH = dZ Wᵀ`, and refreshes the
-//!   per-sample gradient norms for the coordinator's cache scatter;
-//! * [`ops::SavedContext::saved_bytes`] measures the activation bytes
-//!   actually held, so the paper's Table-2 memory story is observed per
-//!   step, not only modelled by [`memsim`];
-//! * [`ops::Contraction`] picks the contraction axis: one cache slot
-//!   per row, or batch×seq tokens sharing a per-sample slot (the
-//!   paper's scope for sequence models).
+//! 1. **[`ops`] — the operator.**  [`ops::SampledLinear`] computes the
+//!    exact `Z = H W` but saves only k selected column-row pairs
+//!    (indices, pre-scaled sub-sampled activation rows, selection
+//!    scales) drawn by [`estimator::select`] from
+//!    `p_i ∝ ||H_i,:|| · cache_i` (Eq. 3 with the Algorithm-1
+//!    gradient-norm cache standing in for the not-yet-existing
+//!    `||dZ_i,:||`).  The returned [`ops::SavedContext`] is fully
+//!    owned; `backward(dz, w)` rebuilds the unbiased `dW` (Eq. 5/6),
+//!    the exact `dH`, and the refreshed cache norms.
+//!    [`ops::Contraction`] picks the contraction axis: batch rows, or
+//!    batch×seq tokens sharing one cache slot per sample (the paper's
+//!    sequence-model scope).
+//! 2. **[`nn`] — the model layer.**  Models are graphs of modules, not
+//!    hard-coded architectures: [`nn::Module`]s push saved state onto
+//!    a [`nn::Tape`] in forward and pop it in backward, and
+//!    [`nn::Tape::saved_bytes`] *measures* the whole saved-for-backward
+//!    footprint (sampled contexts + genuinely-kept activations + packed
+//!    1-bit ReLU masks) — the live Table-2 number for any architecture.
+//!    [`nn::ModelBuilder`] assembles the experiment families
+//!    (full / lora / lst) and arbitrary-depth token-contracted stacks
+//!    from a [`nn::ModelSpec`] `{ depth, width, contraction }`:
+//!
+//!    ```text
+//!    // 4 sampled trunk linears over batch×token rows + sampled head:
+//!    let spec = ModelSpec { depth: 4, width: 128,
+//!                           contraction: Contraction::Tokens { per_sample: 4 } };
+//!    let built = ModelBuilder::new(dims, "full-wtacrs30".parse()?, spec)
+//!        .build(&mut Rng::new(0))?;        // built.n_approx == 5
+//!    ```
+//!
+//!    or hand-rolled: `Sequential::new().push(MeanPoolEmbed::new(..)?)
+//!    .push(Linear::new(w, op, 0, false))...` — each op-run linear
+//!    names its own norm-cache layer slot, so Algorithm 1 follows the
+//!    graph.
+//! 3. **[`runtime`] / [`coordinator`] — execution and training.**
+//!    [`runtime::NativeBackend`] (default) drives the module graph
+//!    pure-Rust: [`runtime::SessionConfig`] carries the
+//!    [`nn::ModelSpec`], the session derives `n_approx_layers` from the
+//!    graph, runs one Adam step over the graph's parameter visitors,
+//!    and surfaces measured [`nn::TapeStats`] through
+//!    `TrainSession::tape_stats`.  The [`coordinator`] owns data,
+//!    evaluation, checkpoints and the gradient-norm cache.
+//!    `runtime::PjrtBackend` (behind the **`pjrt`** cargo feature)
+//!    executes AOT-lowered HLO artifacts instead; the feature alone
+//!    does not compile — it additionally needs the vendored `xla`
+//!    crate plus `make artifacts`.
 //!
 //! Method strings (`"full"`, `"lora-wtacrs30"`, ...) are parsed in
 //! exactly one place: [`ops::MethodSpec`], a typed
 //! `{ family, sampler: Option<{kind, budget}> }` value implementing
-//! `FromStr`/`Display` (round-trip).  It flows through
-//! [`runtime::SessionConfig`] and the coordinator, benches and
-//! examples as a value — nothing else splits method strings.
-//!
-//! ## Execution backends
-//!
-//! The coordinator is written against [`runtime::Backend`] /
-//! [`runtime::TrainSession`] and ships two implementations:
-//!
-//! * [`runtime::NativeBackend`] (default) — pure-Rust reference kernels
-//!   for the train/eval step: frozen-embedding mean-pool encoder and a
-//!   two-hidden-layer MLP whose trainable linears all run through
-//!   [`ops::SampledLinear`] (`full` samples the trunk GEMMs, `lora` the
-//!   adapter-B GEMMs, `lst` uses the exact op).  No artifacts, no XLA,
-//!   no network: `cargo build --release && cargo test -q` runs the full
-//!   suite offline.
-//! * `runtime::PjrtBackend` (behind the **`pjrt`** cargo feature) — the
-//!   original PJRT/XLA engine executing AOT-lowered HLO artifacts.
-//!   The feature declares no dependency by itself: enabling it
-//!   additionally requires adding the vendored `xla` crate to
-//!   `rust/Cargo.toml` (see the note there) and running
-//!   `make artifacts`; the `runtime_integration` tests and the
-//!   `e2e_lm_train` example are gated on it.
+//! `FromStr`/`Display` (round-trip).
 //!
 //! Run the suite offline with default features:
 //!
 //! ```text
 //! cargo build --release
 //! cargo test -q
-//! cargo run --release --example quickstart   # SampledLinear + measured saved_bytes
+//! cargo run --release --example quickstart   # op + ModelBuilder + measured tape
 //! cargo bench --bench table2_memory          # paper tables, no artifacts needed
 //! cargo run --release -- train --task sst2 --method full-wtacrs30
+//! cargo run --release -- train --task sst2 --method full-wtacrs30 \
+//!     --depth 4 --tokens-per-sample 4        # deep token-contracted stack
 //! ```
 //!
-//! Entry points: [`ops`] is the operator layer, [`runtime`] hosts the
-//! backend abstraction (and, with `pjrt`, the artifact engine),
-//! [`coordinator`] drives training, [`memsim`] reproduces the paper's
-//! analytic memory tables, [`estimator`] is the pure-Rust estimator
-//! math shared by the ops layer, the property tests and the Fig. 3
-//! analyses.
+//! [`memsim`] reproduces the paper's analytic memory tables;
+//! [`estimator`] is the pure-Rust estimator math shared by the ops
+//! layer, the property tests and the Fig. 3 analyses.
 // Numeric-kernel style: index loops over matrix dims read as the math
 // they implement, and coordinator plumbing passes wide tuples; the
 // pedantic rewrites clippy suggests would obscure both.  Everything
@@ -84,6 +90,7 @@ pub mod data;
 pub mod estimator;
 pub mod memsim;
 pub mod metrics;
+pub mod nn;
 pub mod ops;
 pub mod runtime;
 pub mod testing;

@@ -10,7 +10,8 @@
 use wtacrs::bail;
 use wtacrs::coordinator::{self, ExperimentOptions, TrainOptions};
 use wtacrs::memsim::{self, tables, Scope, Workload};
-use wtacrs::ops::MethodSpec;
+use wtacrs::nn::ModelSpec;
+use wtacrs::ops::{Contraction, MethodSpec};
 use wtacrs::runtime::{Backend, Manifest, NativeBackend};
 use wtacrs::util::bench::Table;
 use wtacrs::util::cli::Cli;
@@ -89,6 +90,13 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("seed", "0", "seed")
         .opt("eval-every", "100", "eval cadence in steps (0 = end only)")
         .opt("patience", "0", "early-stop patience in evals (0 = off)")
+        .opt("depth", "0", "sampled trunk depth (0 = the classic family graph)")
+        .opt("width", "0", "trunk hidden width (0 = the size default)")
+        .opt(
+            "tokens-per-sample",
+            "1",
+            "token rows per sample for the Tokens contraction (needs --depth >= 1)",
+        )
         .opt("out", "", "append JSON result to this file")
         .flag("help", "show options");
     let p = cli.parse(args)?;
@@ -100,6 +108,17 @@ fn cmd_train(args: &[String]) -> Result<()> {
     // Validate the method string up front — the typed spec flows from
     // here through SessionConfig into the backend.
     let method: MethodSpec = p.get("method").parse()?;
+    let tps = p.get_usize("tokens-per-sample")?;
+    let contraction = match tps {
+        0 => bail!("--tokens-per-sample must be >= 1"),
+        1 => Contraction::Rows,
+        n => Contraction::Tokens { per_sample: n },
+    };
+    let model = ModelSpec {
+        depth: p.get_usize("depth")?,
+        width: p.get_usize("width")?,
+        contraction,
+    };
     let opts = ExperimentOptions {
         train: TrainOptions {
             lr: p.get_f64("lr")? as f32,
@@ -108,6 +127,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             eval_every: p.get_usize("eval-every")?,
             patience: p.get_usize("patience")?,
         },
+        model,
         ..Default::default()
     };
     let res = coordinator::run_glue(
@@ -131,8 +151,10 @@ fn cmd_train(args: &[String]) -> Result<()> {
     );
     if res.report.peak_saved_bytes > 0 {
         println!(
-            "measured saved-activation peak: {:.1} KiB/step (per layer: {:?})",
+            "measured saved-for-backward peak: {:.1} KiB/step \
+             (last tape {:.1} KiB; sampled linears: {:?})",
             res.report.peak_saved_bytes as f64 / 1024.0,
+            res.report.tape_bytes as f64 / 1024.0,
             res.report.saved_bytes_per_layer,
         );
     }

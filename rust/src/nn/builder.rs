@@ -1,0 +1,351 @@
+//! [`ModelBuilder`] — assembles the experiment families (full / lora /
+//! lst) *and* arbitrary-depth sampled stacks as [`Sequential`] graphs
+//! from a [`ModelSpec`].
+//!
+//! `depth == 0` reproduces the classic graphs exactly (same parameter
+//! draw order and shapes as the historical hard-coded model, so
+//! seeded runs are bit-identical): a mean-pooled frozen encoder into a
+//! two-hidden-layer MLP, with the family deciding which linears train
+//! and which run through the sampled op.
+//!
+//! `depth >= 1` builds the token-contracted deep stack — the paper's
+//! batch×seq scope: the encoder emits `per_sample` pooled token rows
+//! per sample (`Contraction::Tokens`), `depth` sampled trunk linears
+//! transform the token rows, a [`MeanPool`] collapses them back to one
+//! row per sample, and a `Rows`-contracted sampled head classifies.
+//! Every op-run linear holds its own norm-cache layer slot, so the
+//! Algorithm-1 cache scales to any depth with no backend changes.
+
+use crate::bail;
+use crate::estimator::Mat;
+use crate::ops::{Contraction, Family, MethodSpec, SampledLinear};
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+use super::layers::{Bias, Linear, LoraAdapter, MeanPool, MeanPoolEmbed, Relu};
+use super::sequential::Sequential;
+
+/// LoRA adapter rank.
+pub const LORA_RANK: usize = 8;
+/// LST ladder width divisor (side width = trunk width / LST_FACTOR).
+pub const LST_FACTOR: usize = 4;
+
+/// Architecture knobs carried on
+/// [`SessionConfig`](crate::runtime::SessionConfig).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ModelSpec {
+    /// Sampled trunk linears.  `0` = the classic two-hidden-layer MLP
+    /// family graphs; `>= 1` = the deep token-contracted stack.
+    pub depth: usize,
+    /// Trunk hidden width (`0` = the size table's d_ff).
+    pub width: usize,
+    /// Contraction axis of the trunk's sampled weight-gradient GEMMs.
+    pub contraction: Contraction,
+}
+
+impl Default for ModelSpec {
+    fn default() -> Self {
+        ModelSpec { depth: 0, width: 0, contraction: Contraction::Rows }
+    }
+}
+
+/// Dimensions the builder needs (backends map their size names here).
+#[derive(Debug, Clone, Copy)]
+pub struct StackDims {
+    pub vocab: usize,
+    pub seq: usize,
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub n_out: usize,
+}
+
+/// A built graph plus the derived approx-layer count (the norm cache's
+/// row count).
+pub struct BuiltModel {
+    pub graph: Sequential,
+    pub n_approx: usize,
+}
+
+/// Assembles family graphs and deep stacks from `(dims, method, spec)`.
+#[derive(Debug, Clone, Copy)]
+pub struct ModelBuilder {
+    dims: StackDims,
+    method: MethodSpec,
+    spec: ModelSpec,
+}
+
+impl ModelBuilder {
+    pub fn new(dims: StackDims, method: MethodSpec, spec: ModelSpec) -> Self {
+        ModelBuilder { dims, method, spec }
+    }
+
+    /// Build the graph, drawing parameters from `rng` (embedding table
+    /// first, then trunk weights in layer order, then the head, then
+    /// any adapters — the layout seeds and checkpoints rely on).
+    pub fn build(&self, rng: &mut Rng) -> Result<BuiltModel> {
+        if self.method.family == Family::Lst && self.method.sampler.is_some() {
+            bail!("LST does not compose with a sampler");
+        }
+        let ps = self.spec.contraction.per_sample();
+        if ps == 0 {
+            bail!("Tokens {{ per_sample: 0 }} is not a valid contraction");
+        }
+        if self.spec.depth == 0 {
+            if ps != 1 {
+                bail!(
+                    "the classic mean-pooled family graphs contract over batch \
+                     rows (one pooled token per sample); Tokens {{ per_sample: \
+                     {ps} }} needs a deep stack (ModelSpec.depth >= 1)"
+                );
+            }
+            self.build_classic(rng)
+        } else {
+            if self.dims.seq % ps != 0 {
+                bail!(
+                    "deep stack: seq {} not divisible into {ps} token chunks \
+                     per sample",
+                    self.dims.seq
+                );
+            }
+            self.build_deep(rng)
+        }
+    }
+
+    /// The historical two-hidden-layer family graphs (`depth == 0`).
+    fn build_classic(&self, rng: &mut Rng) -> Result<BuiltModel> {
+        let StackDims { vocab, seq, d_model: d, d_ff, n_out } = self.dims;
+        let f = if self.spec.width > 0 { self.spec.width } else { d_ff };
+        let op = SampledLinear::new(self.method.sampler, self.spec.contraction);
+        let embed = Mat::randn(vocab, d, rng);
+        let he_d = (2.0 / d as f64).sqrt() as f32;
+        let he_f = (2.0 / f as f64).sqrt() as f32;
+        let head_d = (1.0 / d as f64).sqrt() as f32;
+        let graph = match self.method.family {
+            Family::Full => {
+                let w1 = Mat::randn(d, f, rng).scale(he_d);
+                let w2 = Mat::randn(f, d, rng).scale(he_f);
+                let w3 = Mat::randn(d, n_out, rng).scale(head_d);
+                Sequential::new()
+                    .push(MeanPoolEmbed::new(embed, seq, 1)?)
+                    .push(Linear::new(w1, op, 0, false))
+                    .push(Bias::new(f))
+                    .push(Relu)
+                    .push(Linear::new(w2, op, 1, true))
+                    .push(Bias::new(d))
+                    .push(Relu)
+                    .push(Linear::new(w3, op, 2, true))
+                    .push(Bias::new(n_out))
+            }
+            Family::Lora => {
+                let w1 = Mat::randn(d, f, rng).scale(he_d);
+                let w2 = Mat::randn(f, d, rng).scale(he_f);
+                let w3 = Mat::randn(d, n_out, rng).scale(head_d);
+                let a1 = Mat::randn(d, LORA_RANK, rng).scale(head_d);
+                let a2 =
+                    Mat::randn(f, LORA_RANK, rng).scale((1.0 / f as f64).sqrt() as f32);
+                Sequential::new()
+                    .push(MeanPoolEmbed::new(embed, seq, 1)?)
+                    .push(LoraAdapter::new(
+                        w1,
+                        Mat::zeros(1, f),
+                        a1,
+                        Mat::zeros(LORA_RANK, f),
+                        op,
+                        0,
+                        false,
+                    ))
+                    .push(Relu)
+                    .push(LoraAdapter::new(
+                        w2,
+                        Mat::zeros(1, d),
+                        a2,
+                        Mat::zeros(LORA_RANK, d),
+                        op,
+                        1,
+                        true,
+                    ))
+                    .push(Relu)
+                    .push(Linear::new(w3, op, 2, true))
+                    .push(Bias::new(n_out))
+            }
+            Family::Lst => {
+                let ds = d / LST_FACTOR;
+                let s1 = Mat::randn(d, ds, rng).scale(he_d);
+                let s2 =
+                    Mat::randn(ds, n_out, rng).scale((1.0 / ds as f64).sqrt() as f32);
+                Sequential::new()
+                    .push(MeanPoolEmbed::new(embed, seq, 1)?)
+                    .push(Linear::new(s1, op, 0, false))
+                    .push(Bias::new(ds))
+                    .push(Relu)
+                    .push(Linear::new(s2, op, 1, true))
+                    .push(Bias::new(n_out))
+            }
+        };
+        let n_approx = graph.n_approx();
+        Ok(BuiltModel { graph, n_approx })
+    }
+
+    /// The token-contracted deep stack (`depth >= 1`).
+    fn build_deep(&self, rng: &mut Rng) -> Result<BuiltModel> {
+        let StackDims { vocab, seq, d_model: d, d_ff, n_out } = self.dims;
+        let depth = self.spec.depth;
+        let ps = self.spec.contraction.per_sample();
+        let mut width = if self.spec.width > 0 { self.spec.width } else { d_ff };
+        if self.method.family == Family::Lst {
+            width = (width / LST_FACTOR).max(1);
+        }
+        let trunk_op = SampledLinear::new(self.method.sampler, self.spec.contraction);
+        let head_op = SampledLinear::new(self.method.sampler, Contraction::Rows);
+
+        // Draw order: embed, trunk weights 0..depth, head, adapters.
+        let embed = Mat::randn(vocab, d, rng);
+        let mut trunk_dims = Vec::with_capacity(depth);
+        let mut trunk_w = Vec::with_capacity(depth);
+        let mut in_dim = d;
+        for _ in 0..depth {
+            let scale = (2.0 / in_dim as f64).sqrt() as f32;
+            trunk_w.push(Mat::randn(in_dim, width, rng).scale(scale));
+            trunk_dims.push(in_dim);
+            in_dim = width;
+        }
+        let head =
+            Mat::randn(width, n_out, rng).scale((1.0 / width as f64).sqrt() as f32);
+
+        let mut graph = Sequential::new().push(MeanPoolEmbed::new(embed, seq, ps)?);
+        match self.method.family {
+            Family::Full | Family::Lst => {
+                for (l, w) in trunk_w.into_iter().enumerate() {
+                    graph = graph
+                        .push(Linear::new(w, trunk_op, l, l > 0))
+                        .push(Bias::new(width))
+                        .push(Relu);
+                }
+            }
+            Family::Lora => {
+                let adapters: Vec<Mat> = trunk_dims
+                    .iter()
+                    .map(|&din| {
+                        Mat::randn(din, LORA_RANK, rng)
+                            .scale((1.0 / din as f64).sqrt() as f32)
+                    })
+                    .collect();
+                for (l, (w, a)) in trunk_w.into_iter().zip(adapters).enumerate() {
+                    graph = graph
+                        .push(LoraAdapter::new(
+                            w,
+                            Mat::zeros(1, width),
+                            a,
+                            Mat::zeros(LORA_RANK, width),
+                            trunk_op,
+                            l,
+                            l > 0,
+                        ))
+                        .push(Relu);
+                }
+            }
+        }
+        let graph = graph
+            .push(MeanPool::new(ps)?)
+            .push(Linear::new(head, head_op, depth, true))
+            .push(Bias::new(n_out));
+        let n_approx = graph.n_approx();
+        Ok(BuiltModel { graph, n_approx })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> StackDims {
+        StackDims { vocab: 64, seq: 8, d_model: 16, d_ff: 32, n_out: 2 }
+    }
+
+    fn m(s: &str) -> MethodSpec {
+        s.parse().unwrap()
+    }
+
+    #[test]
+    fn classic_families_layer_counts() {
+        for (method, n_approx, n_params) in
+            [("full", 3, 6), ("full-wtacrs30", 3, 6), ("lora", 3, 6), ("lst", 2, 4)]
+        {
+            let b = ModelBuilder::new(dims(), m(method), ModelSpec::default());
+            let built = b.build(&mut Rng::new(0)).unwrap();
+            assert_eq!(built.n_approx, n_approx, "{method}");
+            assert_eq!(built.graph.n_params(), n_params, "{method}");
+        }
+    }
+
+    #[test]
+    fn deep_stack_counts_scale_with_depth() {
+        for depth in [1, 4] {
+            let spec = ModelSpec {
+                depth,
+                width: 16,
+                contraction: Contraction::Tokens { per_sample: 4 },
+            };
+            let b = ModelBuilder::new(dims(), m("full-wtacrs30"), spec);
+            let built = b.build(&mut Rng::new(0)).unwrap();
+            assert_eq!(built.n_approx, depth + 1);
+            // depth * (linear + bias) + head linear + head bias
+            assert_eq!(built.graph.n_params(), 2 * depth + 2);
+        }
+    }
+
+    #[test]
+    fn deep_lora_and_lst_build() {
+        let spec = ModelSpec {
+            depth: 2,
+            width: 16,
+            contraction: Contraction::Tokens { per_sample: 2 },
+        };
+        let lora = ModelBuilder::new(dims(), m("lora-wtacrs30"), spec)
+            .build(&mut Rng::new(0))
+            .unwrap();
+        assert_eq!(lora.n_approx, 3);
+        // 2 adapters x (a, b) + head linear + head bias
+        assert_eq!(lora.graph.n_params(), 6);
+        let lst =
+            ModelBuilder::new(dims(), m("lst"), spec).build(&mut Rng::new(0)).unwrap();
+        assert_eq!(lst.n_approx, 3);
+    }
+
+    #[test]
+    fn invalid_specs_report() {
+        let b = ModelBuilder::new(
+            dims(),
+            m("full-wtacrs30"),
+            ModelSpec {
+                depth: 0,
+                width: 0,
+                contraction: Contraction::Tokens { per_sample: 4 },
+            },
+        );
+        let e = b.build(&mut Rng::new(0)).unwrap_err().to_string();
+        assert!(e.contains("deep stack"), "{e}");
+        // seq 8 does not split into 3 chunks
+        let b = ModelBuilder::new(
+            dims(),
+            m("full-wtacrs30"),
+            ModelSpec {
+                depth: 2,
+                width: 0,
+                contraction: Contraction::Tokens { per_sample: 3 },
+            },
+        );
+        let e = b.build(&mut Rng::new(0)).unwrap_err().to_string();
+        assert!(e.contains("not divisible"), "{e}");
+        let b = ModelBuilder::new(
+            dims(),
+            m("full-wtacrs30"),
+            ModelSpec {
+                depth: 1,
+                width: 0,
+                contraction: Contraction::Tokens { per_sample: 0 },
+            },
+        );
+        assert!(b.build(&mut Rng::new(0)).is_err());
+    }
+}

@@ -1,0 +1,582 @@
+//! Concrete modules: the pieces [`super::ModelBuilder`] assembles and
+//! the vocabulary users compose custom stacks from.
+//!
+//! * [`MeanPoolEmbed`] — frozen embedding lookup + chunked mean-pool
+//!   (the token front-end; `per_sample` chunks per row feed the
+//!   `Tokens` contraction, `per_sample = 1` is the classic pooled
+//!   encoder).
+//! * [`Linear`] — a (possibly sampled) [`SampledLinear`] weight GEMM
+//!   holding one norm-cache layer slot.
+//! * [`Bias`], [`Relu`] — the elementwise pieces; ReLU saves a packed
+//!   1-bit sign mask instead of the float pre-activation.
+//! * [`LoraAdapter`] — frozen trunk linear + trainable low-rank side
+//!   path whose B GEMM runs through the sampled op.
+//! * [`MeanPool`] — collapses each sample's token rows back to one row
+//!   ahead of the classifier head.
+
+use crate::bail;
+use crate::estimator::Mat;
+use crate::ops::SampledLinear;
+use crate::util::error::Result;
+
+use super::module::{BackwardCtx, ForwardCtx, Module, Param};
+use super::tape::{BitMask, Saved};
+
+/// Add a (1, cols) bias row to every row of `z`.
+pub(crate) fn add_bias(z: &mut Mat, b: &Mat) {
+    debug_assert_eq!(z.cols, b.cols);
+    for r in 0..z.rows {
+        let dst = &mut z.data[r * z.cols..(r + 1) * z.cols];
+        for (d, &bv) in dst.iter_mut().zip(&b.data) {
+            *d += bv;
+        }
+    }
+}
+
+/// Column sums as a (1, cols) row (bias gradients).
+pub(crate) fn col_sums(m: &Mat) -> Mat {
+    let mut out = Mat::zeros(1, m.cols);
+    for r in 0..m.rows {
+        let row = m.row(r);
+        for (o, &v) in out.data.iter_mut().zip(row) {
+            *o += v;
+        }
+    }
+    out
+}
+
+/// Frozen embedding table + chunked mean-pool encoder.
+///
+/// Input convention: a `(batch, seq)` matrix of token ids stored as
+/// `f32` (exact for any realistic vocab; id 0 is PAD).  Each row's
+/// `seq` tokens are split into `per_sample` contiguous chunks and the
+/// non-PAD embeddings of each chunk are mean-pooled, producing
+/// `(batch * per_sample, d)` token rows — the contraction rows of a
+/// `Tokens { per_sample }` trunk.  `per_sample = 1` reproduces the
+/// classic one-row-per-sample pooled encoder exactly.
+///
+/// The table is frozen: backward consumes nothing and produces no
+/// input gradient.
+#[derive(Debug, Clone)]
+pub struct MeanPoolEmbed {
+    embed: Mat,
+    seq: usize,
+    per_sample: usize,
+}
+
+impl MeanPoolEmbed {
+    pub fn new(embed: Mat, seq: usize, per_sample: usize) -> Result<Self> {
+        if per_sample == 0 {
+            bail!("mean-pool embed: per_sample must be >= 1");
+        }
+        if seq % per_sample != 0 {
+            bail!(
+                "mean-pool embed: seq {seq} not divisible into {per_sample} \
+                 chunks per sample"
+            );
+        }
+        Ok(MeanPoolEmbed { embed, seq, per_sample })
+    }
+
+    pub fn d_model(&self) -> usize {
+        self.embed.cols
+    }
+}
+
+impl Module for MeanPoolEmbed {
+    fn name(&self) -> &'static str {
+        "mean_pool_embed"
+    }
+
+    fn forward(&self, x: Mat, _ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        let (b, s, d) = (x.rows, self.seq, self.embed.cols);
+        if x.cols != s {
+            bail!("tokens: expected {s} columns per row, got {}", x.cols);
+        }
+        let chunk = s / self.per_sample;
+        let mut out = Mat::zeros(b * self.per_sample, d);
+        for r in 0..b {
+            for c in 0..self.per_sample {
+                let orow = r * self.per_sample + c;
+                let mut count = 0usize;
+                for j in c * chunk..(c + 1) * chunk {
+                    let tf = x.at(r, j);
+                    if tf == 0.0 {
+                        continue; // PAD
+                    }
+                    let t = tf as i64;
+                    if t < 0 || t as usize >= self.embed.rows {
+                        bail!("token id {tf} out of vocab {}", self.embed.rows);
+                    }
+                    let erow = self.embed.row(t as usize);
+                    let dst = &mut out.data[orow * d..(orow + 1) * d];
+                    for (xd, &ev) in dst.iter_mut().zip(erow) {
+                        *xd += ev;
+                    }
+                    count += 1;
+                }
+                let inv = 1.0 / count.max(1) as f32;
+                for xd in &mut out.data[orow * d..(orow + 1) * d] {
+                    *xd *= inv;
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn backward(&mut self, _dy: Mat, _ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        // Frozen table at the graph root: nothing upstream wants dx.
+        Ok(Mat::zeros(0, 0))
+    }
+
+    fn visit_params(&self, _f: &mut dyn FnMut(&Param)) {}
+    fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
+}
+
+/// A trainable linear whose weight-gradient GEMM runs through
+/// [`SampledLinear`], holding norm-cache layer slot `layer`.
+#[derive(Debug, Clone)]
+pub struct Linear {
+    pub p: Param,
+    op: SampledLinear,
+    layer: usize,
+    input_grad: bool,
+}
+
+impl Linear {
+    /// `input_grad: false` skips the `dZ Wᵀ` GEMM — for the first
+    /// trainable layer over a frozen encoder, whose input gradient
+    /// nothing consumes.
+    pub fn new(w: Mat, op: SampledLinear, layer: usize, input_grad: bool) -> Self {
+        Linear { p: Param::new(w), op, layer, input_grad }
+    }
+}
+
+impl Module for Linear {
+    fn name(&self) -> &'static str {
+        "linear"
+    }
+
+    fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        if ctx.training() {
+            let zn = ctx.layer_norms(self.layer)?;
+            let (z, sctx) = self.op.forward(&x, &self.p.w, zn, &mut ctx.rng);
+            if let Some(tape) = ctx.tape.as_deref_mut() {
+                tape.push(self.name(), Saved::Linear { layer: self.layer, ctx: sctx });
+            }
+            Ok(z)
+        } else {
+            Ok(x.matmul(&self.p.w))
+        }
+    }
+
+    fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        let Saved::Linear { layer, ctx: sctx } = ctx.tape.pop(self.name())? else {
+            bail!("linear: tape entry is not a saved linear context");
+        };
+        debug_assert_eq!(layer, self.layer);
+        if self.input_grad {
+            let bw = sctx.backward(&dy, &self.p.w);
+            ctx.store_norms(self.layer, &bw.refreshed_norms)?;
+            self.p.set_grad(bw.dw);
+            Ok(bw.dh)
+        } else {
+            let (dw, norms) = sctx.backward_dw(&dy);
+            ctx.store_norms(self.layer, &norms)?;
+            self.p.set_grad(dw);
+            Ok(Mat::zeros(0, 0))
+        }
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&Param)) {
+        f(&self.p);
+    }
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.p);
+    }
+    fn n_approx(&self) -> usize {
+        1
+    }
+}
+
+/// A trainable (1, cols) bias row added to every input row.
+#[derive(Debug, Clone)]
+pub struct Bias {
+    pub p: Param,
+}
+
+impl Bias {
+    pub fn new(cols: usize) -> Self {
+        Bias { p: Param::new(Mat::zeros(1, cols)) }
+    }
+}
+
+impl Module for Bias {
+    fn name(&self) -> &'static str {
+        "bias"
+    }
+
+    fn forward(&self, mut x: Mat, _ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        if x.cols != self.p.w.cols {
+            bail!("bias: input has {} cols, bias has {}", x.cols, self.p.w.cols);
+        }
+        add_bias(&mut x, &self.p.w);
+        Ok(x)
+    }
+
+    fn backward(&mut self, dy: Mat, _ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        self.p.set_grad(col_sums(&dy));
+        Ok(dy)
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&Param)) {
+        f(&self.p);
+    }
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.p);
+    }
+}
+
+/// ReLU.  Training saves only the packed 1-bit sign mask of the output
+/// (`y > 0 ⇔ z > 0`), 1/32 of what keeping the pre-activation alive
+/// would cost — and the masked backward is bit-identical to masking on
+/// the float pre-activation.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Relu;
+
+impl Module for Relu {
+    fn name(&self) -> &'static str {
+        "relu"
+    }
+
+    fn forward(&self, mut x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        for v in &mut x.data {
+            *v = v.max(0.0);
+        }
+        if let Some(tape) = ctx.tape.as_deref_mut() {
+            tape.push(self.name(), Saved::Mask(BitMask::positive(&x)));
+        }
+        Ok(x)
+    }
+
+    fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        let Saved::Mask(mask) = ctx.tape.pop(self.name())? else {
+            bail!("relu: tape entry is not a sign mask");
+        };
+        Ok(mask.apply(&dy))
+    }
+
+    fn visit_params(&self, _f: &mut dyn FnMut(&Param)) {}
+    fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
+}
+
+/// Frozen trunk linear + trainable rank-r adapter (`y = x Wf + bf +
+/// (x A) B`), the B GEMM running through [`SampledLinear`].
+///
+/// The adapter input is genuinely needed for `dA = xᵀ (dZ Bᵀ)`, so the
+/// tape keeps it as a full activation — measured honestly by
+/// `Tape::saved_bytes`.
+#[derive(Debug, Clone)]
+pub struct LoraAdapter {
+    frozen_w: Mat,
+    frozen_b: Mat,
+    /// Down-projection (d_in, r); trained exactly.
+    pub a: Param,
+    /// Up-projection (r, d_out); its weight-gradient GEMM is sampled.
+    pub b: Param,
+    op: SampledLinear,
+    layer: usize,
+    input_grad: bool,
+}
+
+impl LoraAdapter {
+    pub fn new(
+        frozen_w: Mat,
+        frozen_b: Mat,
+        a: Mat,
+        b: Mat,
+        op: SampledLinear,
+        layer: usize,
+        input_grad: bool,
+    ) -> Self {
+        LoraAdapter {
+            frozen_w,
+            frozen_b,
+            a: Param::new(a),
+            b: Param::new(b),
+            op,
+            layer,
+            input_grad,
+        }
+    }
+}
+
+impl Module for LoraAdapter {
+    fn name(&self) -> &'static str {
+        "lora_adapter"
+    }
+
+    fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        let mut z = x.matmul(&self.frozen_w);
+        add_bias(&mut z, &self.frozen_b);
+        let xa = x.matmul(&self.a.w);
+        if ctx.training() {
+            let zn = ctx.layer_norms(self.layer)?;
+            let (adj, sctx) = self.op.forward(&xa, &self.b.w, zn, &mut ctx.rng);
+            z.add_assign(&adj);
+            if let Some(tape) = ctx.tape.as_deref_mut() {
+                tape.push(self.name(), Saved::Linear { layer: self.layer, ctx: sctx });
+                tape.push(self.name(), Saved::Acts(x));
+            }
+        } else {
+            z.add_assign(&xa.matmul(&self.b.w));
+        }
+        Ok(z)
+    }
+
+    fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        let Saved::Acts(x) = ctx.tape.pop(self.name())? else {
+            bail!("lora adapter: expected the saved input activation");
+        };
+        let Saved::Linear { layer, ctx: sctx } = ctx.tape.pop(self.name())? else {
+            bail!("lora adapter: expected the saved linear context");
+        };
+        debug_assert_eq!(layer, self.layer);
+        // dB = (x A)ᵀ dZ (the sampled estimate); dh = dZ Bᵀ.
+        let bw = sctx.backward(&dy, &self.b.w);
+        ctx.store_norms(self.layer, &bw.refreshed_norms)?;
+        self.b.set_grad(bw.dw);
+        self.a.set_grad(x.transpose().matmul(&bw.dh));
+        if self.input_grad {
+            // dx flows through both the frozen trunk and the adapter.
+            let mut dx = dy.matmul(&self.frozen_w.transpose());
+            dx.add_assign(&bw.dh.matmul(&self.a.w.transpose()));
+            Ok(dx)
+        } else {
+            Ok(Mat::zeros(0, 0))
+        }
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&Param)) {
+        f(&self.a);
+        f(&self.b);
+    }
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        f(&mut self.a);
+        f(&mut self.b);
+    }
+    fn n_approx(&self) -> usize {
+        1
+    }
+}
+
+/// Collapse each sample's `per_sample` token rows to their mean — the
+/// bridge from a token-contracted trunk back to one row per sample
+/// ahead of the classifier head.  Saves nothing: backward is a uniform
+/// broadcast of `dy / per_sample`.
+#[derive(Debug, Clone, Copy)]
+pub struct MeanPool {
+    per_sample: usize,
+}
+
+impl MeanPool {
+    pub fn new(per_sample: usize) -> Result<Self> {
+        if per_sample == 0 {
+            bail!("mean-pool: per_sample must be >= 1");
+        }
+        Ok(MeanPool { per_sample })
+    }
+}
+
+impl Module for MeanPool {
+    fn name(&self) -> &'static str {
+        "mean_pool"
+    }
+
+    fn forward(&self, x: Mat, _ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        let ps = self.per_sample;
+        if x.rows % ps != 0 {
+            bail!("mean-pool: {} rows not a multiple of per_sample {ps}", x.rows);
+        }
+        let (b, d) = (x.rows / ps, x.cols);
+        let inv = 1.0 / ps as f32;
+        let mut out = Mat::zeros(b, d);
+        for s in 0..b {
+            let dst = &mut out.data[s * d..(s + 1) * d];
+            for r in s * ps..(s + 1) * ps {
+                for (o, &v) in dst.iter_mut().zip(x.row(r)) {
+                    *o += v;
+                }
+            }
+            for o in dst.iter_mut() {
+                *o *= inv;
+            }
+        }
+        Ok(out)
+    }
+
+    fn backward(&mut self, dy: Mat, _ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        let ps = self.per_sample;
+        let (b, d) = (dy.rows, dy.cols);
+        let inv = 1.0 / ps as f32;
+        let mut dx = Mat::zeros(b * ps, d);
+        for s in 0..b {
+            let src = dy.row(s);
+            for r in s * ps..(s + 1) * ps {
+                let dst = &mut dx.data[r * d..(r + 1) * d];
+                for (o, &v) in dst.iter_mut().zip(src) {
+                    *o = v * inv;
+                }
+            }
+        }
+        Ok(dx)
+    }
+
+    fn visit_params(&self, _f: &mut dyn FnMut(&Param)) {}
+    fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::tape::Tape;
+    use crate::util::rng::Rng;
+
+    fn eval_fwd(m: &dyn Module, x: Mat) -> Mat {
+        m.forward(x, &mut ForwardCtx::eval()).unwrap()
+    }
+
+    #[test]
+    fn bias_adds_row_and_grads_col_sums() {
+        let mut b = Bias::new(3);
+        b.p.w.data = vec![1.0, 2.0, 3.0];
+        let x = Mat { rows: 2, cols: 3, data: vec![0.0; 6] };
+        let y = eval_fwd(&b, x);
+        assert_eq!(y.data, vec![1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+        let mut tape = Tape::new();
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut [], slots: 0 };
+        let dy = Mat { rows: 2, cols: 3, data: vec![1.0, 1.0, 1.0, 2.0, 2.0, 2.0] };
+        let dx = b.backward(dy, &mut bctx).unwrap();
+        assert_eq!(dx.rows, 2);
+        assert_eq!(b.p.g.as_ref().unwrap().data, vec![3.0, 3.0, 3.0]);
+    }
+
+    #[test]
+    fn relu_mask_backward_matches_float_masking() {
+        let relu = Relu;
+        let x = Mat { rows: 2, cols: 2, data: vec![1.0, -1.0, 0.0, 2.0] };
+        let mut tape = Tape::new();
+        let mut fctx =
+            ForwardCtx::train(&mut tape, &[], 0, Rng::new(0));
+        let y = relu.forward(x, &mut fctx).unwrap();
+        assert_eq!(y.data, vec![1.0, 0.0, 0.0, 2.0]);
+        assert_eq!(tape.len(), 1);
+        let mut r = Relu;
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut [], slots: 0 };
+        let dy = Mat { rows: 2, cols: 2, data: vec![5.0, 6.0, 7.0, 8.0] };
+        let dx = r.backward(dy, &mut bctx).unwrap();
+        assert_eq!(dx.data, vec![5.0, 0.0, 0.0, 8.0]);
+        assert!(tape.is_empty());
+    }
+
+    #[test]
+    fn mean_pool_roundtrip_is_uniform() {
+        let mp = MeanPool::new(2).unwrap();
+        let x = Mat { rows: 4, cols: 1, data: vec![1.0, 3.0, 5.0, 7.0] };
+        let y = eval_fwd(&mp, x);
+        assert_eq!(y.data, vec![2.0, 6.0]);
+        let mut mp2 = MeanPool::new(2).unwrap();
+        let mut tape = Tape::new();
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut [], slots: 0 };
+        let dx = mp2
+            .backward(Mat { rows: 2, cols: 1, data: vec![4.0, 8.0] }, &mut bctx)
+            .unwrap();
+        assert_eq!(dx.data, vec![2.0, 2.0, 4.0, 4.0]);
+    }
+
+    #[test]
+    fn mean_pool_embed_chunks_and_skips_pad() {
+        // vocab 4, d 2: embed rows are [r, r] for easy arithmetic.
+        let embed = Mat::from_fn(4, 2, |r, _| r as f32);
+        let enc = MeanPoolEmbed::new(embed, 4, 2).unwrap();
+        assert_eq!(enc.d_model(), 2);
+        // one sample, tokens [1, 3 | 0, 0]: chunk 0 pools to 2.0, chunk
+        // 1 is all-PAD and stays zero.
+        let toks = Mat { rows: 1, cols: 4, data: vec![1.0, 3.0, 0.0, 0.0] };
+        let y = eval_fwd(&enc, toks);
+        assert_eq!((y.rows, y.cols), (2, 2));
+        assert_eq!(y.data, vec![2.0, 2.0, 0.0, 0.0]);
+        // out-of-vocab id reports
+        let bad = Mat { rows: 1, cols: 4, data: vec![9.0, 0.0, 0.0, 0.0] };
+        let e = enc.forward(bad, &mut ForwardCtx::eval()).unwrap_err().to_string();
+        assert!(e.contains("out of vocab"), "{e}");
+    }
+
+    #[test]
+    fn linear_train_matches_eval_forward_and_stores_ctx() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(4, 3, &mut rng);
+        let lin = Linear::new(w.clone(), SampledLinear::exact(), 0, true);
+        let x = Mat::randn(8, 4, &mut rng);
+        let want = x.matmul(&w);
+        let y_eval = lin.forward(x.clone(), &mut ForwardCtx::eval()).unwrap();
+        assert_eq!(y_eval, want);
+        let zn = vec![1.0f32; 8];
+        let mut tape = Tape::new();
+        let mut fctx = ForwardCtx::train(&mut tape, &zn, 8, Rng::new(2));
+        let y_train = lin.forward(x.clone(), &mut fctx).unwrap();
+        assert_eq!(y_train, want);
+        assert_eq!(tape.len(), 1);
+        // exact path stores the full activation
+        assert_eq!(tape.saved_bytes(), 8 * 4 * 4);
+        let mut lin2 = lin.clone();
+        let mut norms = vec![0.0f32; 8];
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut norms, slots: 8 };
+        let dy = Mat::randn(8, 3, &mut rng);
+        let dx = lin2.backward(dy.clone(), &mut bctx).unwrap();
+        assert_eq!(dx, dy.matmul(&w.transpose()));
+        assert_eq!(lin2.p.g.as_ref().unwrap(), &x.transpose().matmul(&dy));
+        assert!(norms.iter().all(|v| *v >= 0.0 && v.is_finite()));
+    }
+
+    #[test]
+    fn lora_adapter_train_and_eval_agree() {
+        let mut rng = Rng::new(3);
+        let wf = Mat::randn(4, 5, &mut rng);
+        let bf = Mat::zeros(1, 5);
+        let a = Mat::randn(4, 2, &mut rng);
+        let bu = Mat::randn(2, 5, &mut rng);
+        let ad = LoraAdapter::new(
+            wf.clone(),
+            bf,
+            a.clone(),
+            bu.clone(),
+            SampledLinear::exact(),
+            0,
+            true,
+        );
+        let x = Mat::randn(6, 4, &mut rng);
+        let mut want = x.matmul(&wf);
+        want.add_assign(&x.matmul(&a).matmul(&bu));
+        let y_eval = ad.forward(x.clone(), &mut ForwardCtx::eval()).unwrap();
+        assert_eq!(y_eval, want);
+        let zn = vec![1.0f32; 6];
+        let mut tape = Tape::new();
+        let mut fctx = ForwardCtx::train(&mut tape, &zn, 6, Rng::new(4));
+        let y_train = ad.forward(x.clone(), &mut fctx).unwrap();
+        assert_eq!(y_train, want);
+        // ctx + kept input on the tape
+        assert_eq!(tape.len(), 2);
+        let mut ad2 = ad.clone();
+        let mut norms = vec![0.0f32; 6];
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut norms, slots: 6 };
+        let dy = Mat::randn(6, 5, &mut rng);
+        let dx = ad2.backward(dy.clone(), &mut bctx).unwrap();
+        let dh = dy.matmul(&bu.transpose());
+        assert_eq!(ad2.b.g.as_ref().unwrap(), &x.matmul(&a).transpose().matmul(&dy));
+        assert_eq!(ad2.a.g.as_ref().unwrap(), &x.transpose().matmul(&dh));
+        let mut want_dx = dy.matmul(&wf.transpose());
+        want_dx.add_assign(&dh.matmul(&a.transpose()));
+        assert_eq!(dx, want_dx);
+    }
+}

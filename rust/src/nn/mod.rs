@@ -1,0 +1,46 @@
+//! Composable model layer: build training graphs from WTA-CRS modules
+//! instead of hard-coding one architecture per backend.
+//!
+//! The pieces:
+//!
+//! * [`Module`] — `forward(x, ctx)` pushes saved state onto a [`Tape`];
+//!   `backward(dy, ctx)` pops it, deposits gradients into its
+//!   [`Param`]s and refreshed gradient norms into the norm block.
+//! * [`Tape`] — the LIFO store of saved-for-backward state with
+//!   *measured* memory accounting: [`Tape::saved_bytes`] sums sampled
+//!   [`SavedContext`](crate::ops::SavedContext)s, genuinely-kept
+//!   activations, and packed 1-bit ReLU masks — the live Table-2
+//!   number for any architecture.
+//! * Concrete modules — [`Linear`], [`Bias`], [`Relu`],
+//!   [`LoraAdapter`], [`MeanPoolEmbed`], [`MeanPool`] — and the
+//!   [`Sequential`] container.
+//! * [`ModelBuilder`] — assembles the full/lora/lst family graphs and
+//!   arbitrary-depth token-contracted stacks from a [`ModelSpec`].
+//!
+//! A custom stack is a few lines:
+//!
+//! ```text
+//! let spec = ModelSpec { depth: 4, width: 128,
+//!                        contraction: Contraction::Tokens { per_sample: 4 } };
+//! let built = ModelBuilder::new(dims, "full-wtacrs30".parse()?, spec)
+//!     .build(&mut Rng::new(0))?;
+//! // built.graph: MeanPoolEmbed -> [Linear/Bias/Relu] x4 -> MeanPool
+//! //              -> Linear head -> Bias; built.n_approx == 5
+//! ```
+//!
+//! or, fully manual, `Sequential::new().push(MeanPoolEmbed::new(..)?)
+//! .push(Linear::new(w, op, 0, false))...` — every op-run linear names
+//! its own norm-cache layer slot, so the Algorithm-1 cache follows the
+//! graph instead of a fixed architecture.
+
+pub mod builder;
+pub mod layers;
+pub mod module;
+pub mod sequential;
+pub mod tape;
+
+pub use builder::{BuiltModel, ModelBuilder, ModelSpec, StackDims, LORA_RANK, LST_FACTOR};
+pub use layers::{Bias, Linear, LoraAdapter, MeanPool, MeanPoolEmbed, Relu};
+pub use module::{BackwardCtx, ForwardCtx, Module, Param};
+pub use sequential::Sequential;
+pub use tape::{BitMask, Saved, Tape, TapeEntry, TapeStats};

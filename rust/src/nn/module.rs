@@ -1,0 +1,146 @@
+//! The `Module` trait and the contexts threaded through a graph's
+//! forward and backward walks.
+//!
+//! A module's contract is the classic tape discipline: `forward` pushes
+//! exactly what its `backward` pops (LIFO), `backward` deposits
+//! parameter gradients into its own [`Param`]s and refreshed gradient
+//! norms into the [`BackwardCtx`] norm block, and the parameter
+//! visitors expose every trainable tensor in a stable order (the
+//! checkpoint layout and the optimizer's update set).
+
+use crate::estimator::Mat;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+use crate::{anyhow, bail};
+
+use super::tape::Tape;
+
+/// One trainable tensor with its Adam state and (after a backward walk)
+/// its pending gradient.
+#[derive(Debug, Clone)]
+pub struct Param {
+    pub w: Mat,
+    pub m: Mat,
+    pub v: Mat,
+    /// Gradient deposited by the latest backward; `take()`n by the
+    /// optimizer step.
+    pub g: Option<Mat>,
+}
+
+impl Param {
+    pub fn new(w: Mat) -> Self {
+        let m = Mat::zeros(w.rows, w.cols);
+        let v = Mat::zeros(w.rows, w.cols);
+        Param { w, m, v, g: None }
+    }
+
+    pub fn set_grad(&mut self, g: Mat) {
+        debug_assert_eq!((self.w.rows, self.w.cols), (g.rows, g.cols));
+        self.g = Some(g);
+    }
+}
+
+/// Forward-walk context: the tape (training only), the gathered
+/// gradient-norm cache block, and the per-step sampling RNG.
+pub struct ForwardCtx<'a> {
+    /// `Some` = training (modules save state, sampled ops consume the
+    /// RNG); `None` = inference (exact GEMMs, nothing saved).
+    pub tape: Option<&'a mut Tape>,
+    /// Gathered norm-cache block, laid out `[layer * slots + slot]`.
+    pub znorms: &'a [f32],
+    /// Cache slots per approximated layer (= batch rows).
+    pub slots: usize,
+    /// Per-step sampling RNG (consumed only by sampling ops).
+    pub rng: Rng,
+}
+
+impl<'a> ForwardCtx<'a> {
+    /// Training-mode context over a tape and a gathered norm block.
+    pub fn train(tape: &'a mut Tape, znorms: &'a [f32], slots: usize, rng: Rng) -> Self {
+        ForwardCtx { tape: Some(tape), znorms, slots, rng }
+    }
+
+    /// Inference-mode context: no tape, no norms, no sampling.
+    pub fn eval() -> Self {
+        ForwardCtx { tape: None, znorms: &[], slots: 0, rng: Rng::new(0) }
+    }
+
+    pub fn training(&self) -> bool {
+        self.tape.is_some()
+    }
+
+    /// The norm-cache slice for one approximated layer.  Returns the
+    /// context lifetime (not `&self`'s), so callers can hold it across
+    /// a mutable borrow of the tape.
+    pub fn layer_norms(&self, layer: usize) -> Result<&'a [f32]> {
+        let (a, b) = (layer * self.slots, (layer + 1) * self.slots);
+        self.znorms.get(a..b).ok_or_else(|| {
+            anyhow!(
+                "znorms block has {} entries; layer {layer} needs {a}..{b} \
+                 (graph and norm cache disagree on the approx-layer count?)",
+                self.znorms.len()
+            )
+        })
+    }
+}
+
+/// Backward-walk context: the tape to pop and the refreshed-norm block
+/// being assembled (same `[layer * slots + slot]` layout as `znorms`).
+pub struct BackwardCtx<'a> {
+    pub tape: &'a mut Tape,
+    /// Refreshed `||dZ||` per (layer, slot); zero-filled by the driver,
+    /// written by each sampled linear's backward.
+    pub norms: &'a mut [f32],
+    /// Cache slots per approximated layer.
+    pub slots: usize,
+}
+
+impl BackwardCtx<'_> {
+    /// Deposit one layer's refreshed per-slot gradient norms.
+    pub fn store_norms(&mut self, layer: usize, vals: &[f32]) -> Result<()> {
+        if vals.len() != self.slots {
+            bail!(
+                "layer {layer} refreshed {} norms, expected {} cache slots",
+                vals.len(),
+                self.slots
+            );
+        }
+        let (a, b) = (layer * self.slots, (layer + 1) * self.slots);
+        let dst = self.norms.get_mut(a..b).ok_or_else(|| {
+            anyhow!("norm block too short for layer {layer} ({a}..{b})")
+        })?;
+        dst.copy_from_slice(vals);
+        Ok(())
+    }
+}
+
+/// A differentiable graph node.
+///
+/// `forward` consumes its input and produces its output, pushing saved
+/// state onto `ctx`'s tape in training mode; `backward` consumes the
+/// output gradient and produces the input gradient, popping exactly
+/// what forward pushed.  Modules whose input needs no gradient (first
+/// trainable layer over a frozen encoder) return an empty `Mat`.
+pub trait Module {
+    /// Display name; doubles as the tape label.
+    fn name(&self) -> &'static str;
+
+    /// Forward walk.  `x` is row-major `(n, d_in)` except for embedding
+    /// modules, which document their own input convention.
+    fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat>;
+
+    /// Backward walk: pop saved state, deposit gradients, return `dx`.
+    fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat>;
+
+    /// Visit trainable parameters in a stable order (checkpoint layout).
+    fn visit_params(&self, f: &mut dyn FnMut(&Param));
+
+    /// Mutable parameter visitor (optimizer step, checkpoint restore);
+    /// must walk the same order as [`Module::visit_params`].
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut Param));
+
+    /// Approximated (op-run, norm-cache-slotted) linears in this module.
+    fn n_approx(&self) -> usize {
+        0
+    }
+}

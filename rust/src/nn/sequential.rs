@@ -1,0 +1,150 @@
+//! [`Sequential`] — the ordered-module container.  Forward walks the
+//! modules front to back; backward walks them back to front, so the
+//! tape's LIFO discipline lines up by construction.  Being a module
+//! itself, containers nest.
+
+use crate::estimator::Mat;
+use crate::util::error::{Context, Result};
+
+use super::module::{BackwardCtx, ForwardCtx, Module, Param};
+
+/// An ordered chain of boxed modules, itself a [`Module`].
+#[derive(Default)]
+pub struct Sequential {
+    mods: Vec<Box<dyn Module>>,
+}
+
+impl Sequential {
+    pub fn new() -> Self {
+        Sequential { mods: Vec::new() }
+    }
+
+    /// Append a module (builder style).
+    pub fn push(mut self, m: impl Module + 'static) -> Self {
+        self.mods.push(Box::new(m));
+        self
+    }
+
+    /// Append an already-boxed module.
+    pub fn push_boxed(mut self, m: Box<dyn Module>) -> Self {
+        self.mods.push(m);
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.mods.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.mods.is_empty()
+    }
+
+    /// Trainable parameter count (tensors, not scalars).
+    pub fn n_params(&self) -> usize {
+        let mut n = 0;
+        self.visit_params(&mut |_| n += 1);
+        n
+    }
+}
+
+impl Module for Sequential {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        let mut h = x;
+        for (i, m) in self.mods.iter().enumerate() {
+            h = m
+                .forward(h, ctx)
+                .with_context(|| format!("forward of module #{i} ({})", m.name()))?;
+        }
+        Ok(h)
+    }
+
+    fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        let mut d = dy;
+        for (i, m) in self.mods.iter_mut().enumerate().rev() {
+            d = m
+                .backward(d, ctx)
+                .with_context(|| format!("backward of module #{i} ({})", m.name()))?;
+        }
+        Ok(d)
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&Param)) {
+        for m in &self.mods {
+            m.visit_params(f);
+        }
+    }
+
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        for m in &mut self.mods {
+            m.visit_params_mut(f);
+        }
+    }
+
+    fn n_approx(&self) -> usize {
+        self.mods.iter().map(|m| m.n_approx()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::layers::{Bias, Linear, Relu};
+    use crate::nn::tape::Tape;
+    use crate::ops::SampledLinear;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn forward_backward_roundtrip_counts() {
+        let mut rng = Rng::new(1);
+        let w1 = Mat::randn(4, 6, &mut rng);
+        let w2 = Mat::randn(6, 2, &mut rng);
+        let mut seq = Sequential::new()
+            .push(Linear::new(w1, SampledLinear::exact(), 0, false))
+            .push(Bias::new(6))
+            .push(Relu)
+            .push(Linear::new(w2, SampledLinear::exact(), 1, true))
+            .push(Bias::new(2));
+        assert_eq!(seq.len(), 5);
+        assert!(!seq.is_empty());
+        assert_eq!(seq.n_approx(), 2);
+        assert_eq!(seq.n_params(), 4);
+
+        let x = Mat::randn(8, 4, &mut rng);
+        let zn = vec![1.0f32; 16];
+        let mut tape = Tape::new();
+        let mut fctx = ForwardCtx::train(&mut tape, &zn, 8, Rng::new(2));
+        let y = seq.forward(x, &mut fctx).unwrap();
+        assert_eq!((y.rows, y.cols), (8, 2));
+        // two linear contexts + one relu mask
+        assert_eq!(tape.len(), 3);
+
+        let mut norms = vec![0.0f32; 16];
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut norms, slots: 8 };
+        let dy = Mat::randn(8, 2, &mut rng);
+        seq.backward(dy, &mut bctx).unwrap();
+        assert!(tape.is_empty(), "backward must drain the tape");
+        // every param received a gradient
+        let mut with_grads = 0;
+        seq.visit_params(&mut |p| {
+            if p.g.is_some() {
+                with_grads += 1;
+            }
+        });
+        assert_eq!(with_grads, 4);
+        assert!(norms.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn error_context_names_failing_module() {
+        // A bias whose width disagrees with its input reports the
+        // module index and name.
+        let seq = Sequential::new().push(Bias::new(3));
+        let x = Mat::zeros(2, 5);
+        let e = seq.forward(x, &mut ForwardCtx::eval()).unwrap_err().to_string();
+        assert!(e.contains("module #0") && e.contains("bias"), "{e}");
+    }
+}

@@ -1,0 +1,226 @@
+//! The autograd tape: everything the module graph saves for backward,
+//! with *measured* memory accounting.
+//!
+//! Each [`Module`](super::Module) pushes whatever its backward needs
+//! onto the [`Tape`] during forward and pops it back (LIFO, label
+//! checked) during backward.  [`Tape::saved_bytes`] sums the bytes the
+//! entries actually hold — the live counterpart of the paper's Table-2
+//! activation-memory column, generalized from "per sampled linear" to
+//! the whole graph: sampled/exact [`SavedContext`]s, full activation
+//! matrices a layer genuinely needs (e.g. a LoRA adapter's input), and
+//! packed 1-bit ReLU sign masks.
+
+use crate::estimator::Mat;
+use crate::ops::SavedContext;
+use crate::util::error::Result;
+use crate::{anyhow, bail};
+
+/// Packed 1-bit sign mask (`v > 0`), the only thing a ReLU backward
+/// needs — 1/32 of the float bytes keeping the pre-activation alive
+/// would cost.
+#[derive(Debug, Clone)]
+pub struct BitMask {
+    bits: Vec<u64>,
+    len: usize,
+}
+
+impl BitMask {
+    /// Mask of the strictly-positive entries of `m`.
+    pub fn positive(m: &Mat) -> Self {
+        let len = m.data.len();
+        let mut bits = vec![0u64; len.div_ceil(64)];
+        for (i, &v) in m.data.iter().enumerate() {
+            if v > 0.0 {
+                bits[i / 64] |= 1u64 << (i % 64);
+            }
+        }
+        BitMask { bits, len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize) -> bool {
+        debug_assert!(i < self.len);
+        (self.bits[i / 64] >> (i % 64)) & 1 == 1
+    }
+
+    /// `dy ⊙ mask` — zero wherever the forward value was not positive.
+    pub fn apply(&self, dy: &Mat) -> Mat {
+        assert_eq!(dy.data.len(), self.len, "mask length must match dY");
+        Mat {
+            rows: dy.rows,
+            cols: dy.cols,
+            data: dy
+                .data
+                .iter()
+                .enumerate()
+                .map(|(i, &d)| if self.get(i) { d } else { 0.0 })
+                .collect(),
+        }
+    }
+
+    /// Bytes the packed mask occupies.
+    pub fn bytes(&self) -> usize {
+        self.bits.len() * std::mem::size_of::<u64>()
+    }
+}
+
+/// One module's saved-for-backward state.
+#[derive(Debug, Clone)]
+pub enum Saved {
+    /// A linear op's saved context (sub-sampled pairs, or the full
+    /// activation on the exact path), tagged with its approx-layer slot
+    /// in the gradient-norm cache.
+    Linear { layer: usize, ctx: SavedContext },
+    /// A full activation matrix a module genuinely has to keep (e.g.
+    /// the input a LoRA adapter needs for its A-gradient).
+    Acts(Mat),
+    /// A packed ReLU sign mask.
+    Mask(BitMask),
+}
+
+impl Saved {
+    /// Bytes this entry holds.
+    pub fn bytes(&self) -> usize {
+        match self {
+            Saved::Linear { ctx, .. } => ctx.saved_bytes(),
+            Saved::Acts(m) => m.data.len() * std::mem::size_of::<f32>(),
+            Saved::Mask(b) => b.bytes(),
+        }
+    }
+}
+
+/// A labelled tape entry (the label is the pushing module's name, so a
+/// mismatched pop reports *which* layer desynchronized).
+#[derive(Debug, Clone)]
+pub struct TapeEntry {
+    pub label: &'static str,
+    pub saved: Saved,
+}
+
+/// Measured memory accounting of one training step's tape.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TapeStats {
+    /// `SavedContext::saved_bytes` per approximated (op-run) linear,
+    /// indexed by its norm-cache layer slot (forward order).
+    pub per_layer: Vec<usize>,
+    /// Total bytes of *everything* saved for backward: linear contexts,
+    /// kept activations, packed ReLU masks.
+    pub total: usize,
+}
+
+/// LIFO store of module-saved state for one forward/backward pass.
+#[derive(Debug, Clone, Default)]
+pub struct Tape {
+    entries: Vec<TapeEntry>,
+}
+
+impl Tape {
+    pub fn new() -> Self {
+        Tape { entries: Vec::new() }
+    }
+
+    pub fn push(&mut self, label: &'static str, saved: Saved) {
+        self.entries.push(TapeEntry { label, saved });
+    }
+
+    /// Pop the top entry, checking it was pushed by `label` — a
+    /// mismatch means the graph's forward and backward walked different
+    /// module sequences.
+    pub fn pop(&mut self, label: &'static str) -> Result<Saved> {
+        let e = self
+            .entries
+            .pop()
+            .ok_or_else(|| anyhow!("tape underflow: {label} has nothing to pop"))?;
+        if e.label != label {
+            bail!("tape mismatch: {label} popped an entry pushed by {}", e.label);
+        }
+        Ok(e.saved)
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Total bytes currently held for backward.
+    pub fn saved_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.saved.bytes()).sum()
+    }
+
+    /// Full accounting snapshot: per approx-layer linear bytes (slots
+    /// beyond `n_layers` are ignored) plus the all-entries total.
+    pub fn stats(&self, n_layers: usize) -> TapeStats {
+        let mut per_layer = vec![0usize; n_layers];
+        for e in &self.entries {
+            if let Saved::Linear { layer, ctx } = &e.saved {
+                if *layer < n_layers {
+                    per_layer[*layer] = ctx.saved_bytes();
+                }
+            }
+        }
+        TapeStats { per_layer, total: self.saved_bytes() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bitmask_roundtrip_and_apply() {
+        let m = Mat {
+            rows: 2,
+            cols: 3,
+            data: vec![1.5, -2.0, 0.0, 0.25, -0.0, 3.0],
+        };
+        let mask = BitMask::positive(&m);
+        assert_eq!(mask.len(), 6);
+        assert!(!mask.is_empty());
+        let want = [true, false, false, true, false, true];
+        for (i, &w) in want.iter().enumerate() {
+            assert_eq!(mask.get(i), w, "bit {i}");
+        }
+        let dy = Mat { rows: 2, cols: 3, data: vec![1.0; 6] };
+        let dx = mask.apply(&dy);
+        assert_eq!(dx.data, vec![1.0, 0.0, 0.0, 1.0, 0.0, 1.0]);
+        // 6 bits pack into one u64 word.
+        assert_eq!(mask.bytes(), 8);
+    }
+
+    #[test]
+    fn tape_is_lifo_and_label_checked() {
+        let mut t = Tape::new();
+        assert!(t.is_empty());
+        t.push("a", Saved::Acts(Mat::zeros(2, 2)));
+        t.push("b", Saved::Mask(BitMask::positive(&Mat::zeros(1, 4))));
+        assert_eq!(t.len(), 2);
+        assert!(matches!(t.pop("b").unwrap(), Saved::Mask(_)));
+        let e = t.pop("wrong").unwrap_err().to_string();
+        assert!(e.contains("tape mismatch") && e.contains("wrong"), "{e}");
+        // the mismatching pop consumed the entry: underflow next
+        let e = t.pop("a").unwrap_err().to_string();
+        assert!(e.contains("tape underflow"), "{e}");
+    }
+
+    #[test]
+    fn saved_bytes_sums_entries() {
+        let mut t = Tape::new();
+        t.push("acts", Saved::Acts(Mat::zeros(4, 8))); // 128 bytes
+        t.push("mask", Saved::Mask(BitMask::positive(&Mat::zeros(4, 8)))); // 8
+        assert_eq!(t.saved_bytes(), 4 * 8 * 4 + 8);
+        let stats = t.stats(2);
+        assert_eq!(stats.per_layer, vec![0, 0]);
+        assert_eq!(stats.total, t.saved_bytes());
+    }
+}

@@ -75,13 +75,13 @@ impl SampledLinear {
     /// `znorms` holds the cached gradient norms, one per cache slot
     /// (`H.rows / per_sample` entries); `rng` drives the column-row
     /// selection (consumed only when the op actually samples).
-    pub fn forward<'w>(
+    pub fn forward(
         &self,
         h: &Mat,
-        w: &'w Mat,
+        w: &Mat,
         znorms: &[f32],
         rng: &mut Rng,
-    ) -> (Mat, SavedContext<'w>) {
+    ) -> (Mat, SavedContext) {
         assert_eq!(h.cols, w.rows, "H (.. x {}) @ W ({} x ..)", h.cols, w.rows);
         let n = h.rows;
         let ps = self.contraction.per_sample();
@@ -122,11 +122,11 @@ impl SampledLinear {
             _ => SavedActs::Full(h.clone()),
         };
         let ctx = SavedContext {
-            w,
             saved,
             contraction: self.contraction,
             n,
             d_in: h.cols,
+            d_out: w.cols,
         };
         (z, ctx)
     }
@@ -157,19 +157,21 @@ enum SavedActs {
 
 /// Everything backward needs, saved by [`SampledLinear::forward`].
 ///
-/// Borrows the weight matrix (a parameter — not activation memory);
-/// the activation storage it owns is exactly what
-/// [`Self::saved_bytes`] measures, and on the sampled path that is
-/// only the k sub-sampled pairs — `H` itself can be dropped right
-/// after forward.
-#[derive(Debug)]
-pub struct SavedContext<'w> {
-    w: &'w Mat,
+/// Fully owned — no borrow of `H` *or* of the weight matrix (the
+/// weight is a parameter the caller keeps anyway and re-supplies to
+/// [`Self::backward`]), so a context can be pushed onto a module
+/// graph's tape and outlive the forward call.  The activation storage
+/// it owns is exactly what [`Self::saved_bytes`] measures, and on the
+/// sampled path that is only the k sub-sampled pairs — `H` itself can
+/// be dropped right after forward.
+#[derive(Debug, Clone)]
+pub struct SavedContext {
     saved: SavedActs,
     contraction: Contraction,
     /// Contraction length (rows of the original `H`).
     n: usize,
     d_in: usize,
+    d_out: usize,
 }
 
 /// The backward outputs of one sampled linear op.
@@ -183,12 +185,18 @@ pub struct LinearBackward {
     pub refreshed_norms: Vec<f32>,
 }
 
-impl SavedContext<'_> {
+impl SavedContext {
     /// Backward: reconstruct `(dW, dH, refreshed_norms)` from the saved
-    /// column-row pairs and the upstream gradient `dZ`.
-    pub fn backward(&self, dz: &Mat) -> LinearBackward {
+    /// column-row pairs, the upstream gradient `dZ`, and the weight the
+    /// forward ran with (the caller's parameter — not saved here).
+    pub fn backward(&self, dz: &Mat, w: &Mat) -> LinearBackward {
+        assert_eq!(
+            (w.rows, w.cols),
+            (self.d_in, self.d_out),
+            "backward weight must match the forward weight's shape"
+        );
         let (dw, refreshed_norms) = self.backward_dw(dz);
-        let dh = dz.matmul(&self.w.transpose());
+        let dh = dz.matmul(&w.transpose());
         LinearBackward { dw, dh, refreshed_norms }
     }
 
@@ -197,7 +205,7 @@ impl SavedContext<'_> {
     /// frozen embeddings).  Returns `(dW, refreshed_norms)`.
     pub fn backward_dw(&self, dz: &Mat) -> (Mat, Vec<f32>) {
         assert_eq!(dz.rows, self.n, "dZ rows must match the contraction length");
-        assert_eq!(dz.cols, self.w.cols, "dZ cols must match the output width");
+        assert_eq!(dz.cols, self.d_out, "dZ cols must match the output width");
         let dw = match &self.saved {
             SavedActs::Full(h) => h.transpose().matmul(dz),
             SavedActs::Sampled { indices, rows, .. } => {
@@ -320,7 +328,7 @@ mod tests {
         let dz = Mat::randn(16, 4, &mut rng);
         let zn = vec![1.0f32; 16];
         let (_, ctx) = SampledLinear::exact().forward(&h, &w, &zn, &mut rng);
-        let bw = ctx.backward(&dz);
+        let bw = ctx.backward(&dz, &w);
         assert_eq!(bw.dw, h.transpose().matmul(&dz));
         assert_eq!(bw.dh, dz.matmul(&w.transpose()));
         assert_eq!(bw.refreshed_norms, row_norms_f32(&dz));
@@ -342,7 +350,7 @@ mod tests {
         let zn = vec![1.0f32; 8];
         let (_, ctx) = wta(100).forward(&h, &w, &zn, &mut rng);
         assert_eq!(ctx.saved_bytes(), ctx.full_bytes());
-        assert_eq!(ctx.backward(&dz).dw, h.transpose().matmul(&dz));
+        assert_eq!(ctx.backward(&dz, &w).dw, h.transpose().matmul(&dz));
     }
 
     #[test]
@@ -384,7 +392,7 @@ mod tests {
         let mut draw = Rng::new(3);
         for _ in 0..600 {
             let (_, ctx) = op.forward(&h, &w, &zn, &mut draw);
-            acc.add_assign(&ctx.backward(&dz).dw);
+            acc.add_assign(&ctx.backward(&dz, &w).dw);
         }
         let mean = acc.scale(1.0 / 600.0);
         let rel = mean.sub(&exact).frob_norm() / exact.frob_norm();
@@ -408,7 +416,7 @@ mod tests {
         let (z, ctx) = op.forward(&h, &w, &zn, &mut rng);
         assert_eq!(z, h.matmul(&w));
         assert_eq!(ctx.k(), 10); // round(0.3 * 32)
-        let bw = ctx.backward(&dz);
+        let bw = ctx.backward(&dz, &w);
         assert_eq!(bw.refreshed_norms.len(), 8);
         for (s, &got) in bw.refreshed_norms.iter().enumerate() {
             let mut acc = 0.0f64;
@@ -437,7 +445,7 @@ mod tests {
         let mut draw = Rng::new(4);
         for _ in 0..600 {
             let (_, ctx) = op.forward(&h, &w, &zn, &mut draw);
-            acc.add_assign(&ctx.backward(&dz).dw);
+            acc.add_assign(&ctx.backward(&dz, &w).dw);
         }
         let mean = acc.scale(1.0 / 600.0);
         let rel = mean.sub(&exact).frob_norm() / exact.frob_norm();
@@ -461,7 +469,7 @@ mod tests {
         let (za, ca) = rows_op.forward(&h, &w, &zn, &mut r1);
         let (zb, cb) = tok_op.forward(&h, &w, &zn, &mut r2);
         assert_eq!(za, zb);
-        let (ba, bb) = (ca.backward(&dz), cb.backward(&dz));
+        let (ba, bb) = (ca.backward(&dz, &w), cb.backward(&dz, &w));
         assert_eq!(ba.dw, bb.dw);
         assert_eq!(ba.dh, bb.dh);
         assert_eq!(ba.refreshed_norms, bb.refreshed_norms);
@@ -478,6 +486,6 @@ mod tests {
         let op = wta(30);
         let (_, c1) = op.forward(&h, &w, &zn, &mut Rng::new(42));
         let (_, c2) = op.forward(&h, &w, &zn, &mut Rng::new(42));
-        assert_eq!(c1.backward(&dz).dw, c2.backward(&dz).dw);
+        assert_eq!(c1.backward(&dz, &w).dw, c2.backward(&dz, &w).dw);
     }
 }

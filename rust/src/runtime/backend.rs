@@ -4,8 +4,9 @@
 //! written against these traits.  Two implementations exist:
 //!
 //! * [`super::NativeBackend`] — pure-Rust reference kernels (default;
-//!   no artifacts, no XLA, fully offline), built on
-//!   [`crate::ops::SampledLinear`];
+//!   no artifacts, no XLA, fully offline), a thin driver over a
+//!   [`crate::nn`] module graph assembled by
+//!   [`crate::nn::ModelBuilder`];
 //! * `super::PjrtBackend` (cargo feature `pjrt`) — the PJRT/XLA engine
 //!   executing AOT-lowered HLO artifacts.
 //!
@@ -14,7 +15,8 @@
 //! gathered per-sample norms into each step and scattering the refreshed
 //! norms the step returns.
 
-use crate::ops::{Contraction, MethodSpec};
+use crate::nn::{ModelSpec, TapeStats};
+use crate::ops::MethodSpec;
 
 use super::tensor::HostTensor;
 use crate::util::error::Result;
@@ -35,8 +37,10 @@ pub struct SessionConfig {
     pub lr: f32,
     /// Batch-size override (0 = backend default).
     pub batch: usize,
-    /// Contraction axis of the sampled weight-gradient GEMMs.
-    pub contraction: Contraction,
+    /// Architecture knobs: stack depth, trunk width, and the
+    /// contraction axis of the sampled weight-gradient GEMMs
+    /// (`depth: 0` = the classic family graphs).
+    pub model: ModelSpec,
 }
 
 impl SessionConfig {
@@ -48,7 +52,7 @@ impl SessionConfig {
             seed: 0,
             lr: 1e-3,
             batch: 0,
-            contraction: Contraction::Rows,
+            model: ModelSpec::default(),
         }
     }
 }
@@ -70,7 +74,8 @@ pub trait TrainSession {
     /// Classifier width (1 = regression).
     fn n_out(&self) -> usize;
     /// Number of approximated (sampled) linear layers — the norm cache
-    /// keeps one row per layer (Algorithm 1).
+    /// keeps one row per layer (Algorithm 1).  Derived from the module
+    /// graph on backends that have one.
     fn n_approx_layers(&self) -> usize;
 
     /// One optimizer step over a (batch, seq) token block.
@@ -90,12 +95,12 @@ pub trait TrainSession {
     /// Forward-only logits, row-major (batch, n_out).
     fn eval_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
 
-    /// Measured activation bytes the last train step stored for its
-    /// weight-gradient GEMMs, one entry per approximated layer (empty
-    /// before the first step, or when the backend cannot measure —
-    /// see [`crate::ops::SavedContext::saved_bytes`]).
-    fn saved_bytes_per_layer(&self) -> Vec<usize> {
-        vec![]
+    /// Measured saved-for-backward memory of the last train step: bytes
+    /// per approximated linear plus the whole-tape total (contexts,
+    /// kept activations, ReLU masks).  Default (and pre-first-step)
+    /// value is empty/zero — backends that cannot measure report that.
+    fn tape_stats(&self) -> TapeStats {
+        TapeStats::default()
     }
 
     /// Positional state snapshot (checkpointing).

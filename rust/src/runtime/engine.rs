@@ -33,6 +33,17 @@ pub struct Executable {
 }
 
 impl Engine {
+    /// The executable cache, recovering from a poisoned lock: a panic
+    /// in some earlier caller (e.g. a bench thread that died mid-load)
+    /// cannot tear the map itself — entries are inserted whole as
+    /// `Arc`s — so the data is still sound and every later caller
+    /// should keep working rather than inherit the panic.
+    fn cache_lock(
+        &self,
+    ) -> std::sync::MutexGuard<'_, HashMap<String, std::sync::Arc<Executable>>> {
+        self.cache.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
     /// CPU PJRT client + manifest from the given artifacts dir.
     pub fn new(artifacts_dir: impl AsRef<std::path::Path>) -> Result<Self> {
         let manifest = Manifest::load(artifacts_dir)?;
@@ -58,7 +69,7 @@ impl Engine {
 
     /// Compile (or fetch from cache) the artifact with this id.
     pub fn load(&self, id: &str) -> Result<std::sync::Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(id) {
+        if let Some(e) = self.cache_lock().get(id) {
             return Ok(e.clone());
         }
         let spec = self.manifest.get(id)?.clone();
@@ -73,13 +84,13 @@ impl Engine {
         let compile_time_s = t0.elapsed().as_secs_f64();
         crate::log_debug!("compiled {id} in {compile_time_s:.2}s");
         let exe = std::sync::Arc::new(Executable { exe, spec, compile_time_s });
-        self.cache.lock().unwrap().insert(id.to_string(), exe.clone());
+        self.cache_lock().insert(id.to_string(), exe.clone());
         Ok(exe)
     }
 
     /// Drop a compiled executable (memory hygiene for bench sweeps).
     pub fn evict(&self, id: &str) {
-        self.cache.lock().unwrap().remove(id);
+        self.cache_lock().remove(id);
     }
 }
 

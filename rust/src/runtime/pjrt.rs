@@ -89,8 +89,11 @@ impl Backend for PjrtBackend {
         if cfg.batch != 0 {
             bail!("pjrt backend: batch size is fixed by the compiled artifact");
         }
-        if cfg.contraction.per_sample() != 1 {
+        if cfg.model.contraction.per_sample() != 1 {
             bail!("pjrt backend: the contraction axis is fixed by the compiled artifact");
+        }
+        if cfg.model.depth != 0 {
+            bail!("pjrt backend: the stack depth is fixed by the compiled artifact");
         }
         let (train_id, eval_id, init_id) = artifact_ids(&cfg.size, &cfg.method, cfg.n_out);
         Ok(Box::new(PjrtSession::new(&self.engine, &train_id, &eval_id, &init_id, cfg)?))

@@ -7,7 +7,8 @@
 use wtacrs::coordinator::{checkpoint, run_glue, ExperimentOptions, TrainOptions, Trainer};
 use wtacrs::data::{glue, Batcher};
 use wtacrs::metrics::MetricKind;
-use wtacrs::ops::MethodSpec;
+use wtacrs::nn::ModelSpec;
+use wtacrs::ops::{Contraction, MethodSpec};
 use wtacrs::runtime::{Backend, NativeBackend};
 
 fn m(s: &str) -> MethodSpec {
@@ -20,6 +21,7 @@ fn opts(steps: usize, lr: f32, train_size: usize, val_size: usize) -> Experiment
         train_size,
         val_size,
         data_seed: 5,
+        model: ModelSpec::default(),
     }
 }
 
@@ -34,7 +36,36 @@ fn glue_run_learns_above_chance() {
     assert!(r.report.losses.first().unwrap() > r.report.losses.last().unwrap());
     // The sampled run reports measured sub-sampled activation storage.
     assert_eq!(r.report.saved_bytes_per_layer.len(), 3);
+    assert!(r.report.tape_bytes >= r.report.saved_bytes_per_layer.iter().sum::<usize>());
     assert!(r.report.peak_saved_bytes > 0);
+}
+
+#[test]
+fn deep_token_contracted_stack_through_run_glue() {
+    // The ModelSpec rides ExperimentOptions end-to-end: run_glue opens
+    // a 4-deep token-contracted sampled stack (5 norm-cache layers) and
+    // the report carries its per-layer and whole-tape measurements.
+    // Loss-decrease threshold mirror-calibrated (check_pr3.py).
+    let backend = NativeBackend::new();
+    // lr 2e-3 / 60 steps: mirror margins 0.09-0.16 across seeds.
+    let mut o = opts(60, 2e-3, 512, 128);
+    o.model = ModelSpec {
+        depth: 4,
+        width: 128,
+        contraction: Contraction::Tokens { per_sample: 4 },
+    };
+    let r = run_glue(&backend, "sst2", "tiny", &m("full-wtacrs30"), &o).unwrap();
+    assert!(r.report.losses.iter().all(|l| l.is_finite()));
+    let tail = |ls: &[f32]| ls[ls.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(
+        tail(&r.report.losses) < *r.report.losses.first().unwrap(),
+        "deep run_glue did not learn: {:?}",
+        &r.report.losses[..5]
+    );
+    assert_eq!(r.report.saved_bytes_per_layer.len(), 5);
+    assert!(r.report.tape_bytes > 0);
+    assert!(r.report.peak_saved_bytes >= r.report.tape_bytes);
+    assert!(r.report.norm_cache_coverage > 0.9);
 }
 
 #[test]
