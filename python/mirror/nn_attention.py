@@ -1,0 +1,337 @@
+"""Mirror of the nn transformer stack (PR 4) for threshold calibration.
+
+Replicates `nn::ModelBuilder::build_transformer` for the `full` family:
+a chunked mean-pool embed emitting `per_sample` token rows per sample,
+`depth` pre-norm residual transformer blocks — parameter-free LayerNorm,
+multi-head attention with q/k/v/proj as four column-row-sampled linears
+under `Contraction::Tokens { per_sample }`, a sampled two-linear FFN —
+then a mean-pool back to one row per sample and a `Rows`-contracted
+sampled head.  Parameter draw order matches the Rust builder: embed,
+per block (wq, wk, wv, wproj, ff1, ff2), head.  Per-step selections are
+drawn at forward time in module order (q, k, v, proj, ff1, ff2 per
+block, then the head), like the Rust graph walk.
+
+Float math is numpy float32 — statistically faithful, not bitwise.
+"""
+import math
+
+import numpy as np
+
+import glue
+from estimator import select
+from native import Adam, NormCache, randn_mat
+from rng import Rng
+
+SIZES = {"tiny": dict(vocab=1024, seq=64, batch=32, d=128, f=256)}
+SAMPLE_STREAM = 0xA11CE
+LN_EPS = 1e-5
+
+
+def k_for(budget, m):
+    return max(1, min(m, int(np.floor(budget * m + 0.5))))
+
+
+def layer_norm(x):
+    """Row-wise parameter-free LN; returns (xhat, mean, inv_std)."""
+    x64 = x.astype(np.float64)
+    mu = x64.mean(axis=1, keepdims=True)
+    var = ((x64 - mu) ** 2).mean(axis=1, keepdims=True)
+    s = 1.0 / np.sqrt(var + LN_EPS)
+    xhat = ((x64 - mu) * s).astype(np.float32)
+    return xhat, mu[:, 0].astype(np.float32), s[:, 0].astype(np.float32)
+
+
+def layer_norm_grad(dy, xhat, inv_std):
+    """dx = s * (dy - mean(dy) - xhat * mean(dy * xhat)) per row."""
+    g = dy.astype(np.float64)
+    h = xhat.astype(np.float64)
+    m1 = g.mean(axis=1, keepdims=True)
+    m2 = (g * h).mean(axis=1, keepdims=True)
+    return (inv_std[:, None].astype(np.float64) * (g - m1 - h * m2)).astype(
+        np.float32)
+
+
+def sdpa_forward(q, k, v, heads, per_sample):
+    """Per-head attention within each sample's token rows.
+
+    Returns (out, attn) with attn shaped (B, h, T, T).
+    """
+    n, d = q.shape
+    t = per_sample
+    b, dh = n // t, d // heads
+    scale = 1.0 / math.sqrt(dh)
+    q4 = q.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    k4 = k.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    v4 = v.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    s = q4 @ k4.transpose(0, 1, 3, 2) * scale
+    s -= s.max(axis=3, keepdims=True)
+    e = np.exp(s)
+    a = e / e.sum(axis=3, keepdims=True)
+    out = (a @ v4).astype(np.float32)
+    out = out.transpose(0, 2, 1, 3).reshape(n, d)
+    return out, a.astype(np.float32)
+
+
+def sdpa_backward(dout, q, k, v, attn, heads, per_sample):
+    n, d = q.shape
+    t = per_sample
+    b, dh = n // t, d // heads
+    scale = 1.0 / math.sqrt(dh)
+    go = dout.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    q4 = q.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    k4 = k.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    v4 = v.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    a = attn.astype(np.float64)
+    dv = a.transpose(0, 1, 3, 2) @ go
+    da = go @ v4.transpose(0, 1, 3, 2)
+    ds = a * (da - (da * a).sum(axis=3, keepdims=True))
+    dq = ds @ k4 * scale
+    dk = ds.transpose(0, 1, 3, 2) @ q4 * scale
+
+    def back(x4):
+        return x4.transpose(0, 2, 1, 3).reshape(n, d).astype(np.float32)
+
+    return back(dq), back(dk), back(dv)
+
+
+class AttnSession:
+    """Mirror of NativeSession over the Arch::Transformer graph."""
+
+    def __init__(self, size, budget, n_out, seed, lr,
+                 depth=2, width=0, per_sample=4, heads=4, sampler="wtacrs"):
+        cfg = SIZES[size]
+        self.vocab, self.seq, self.batch = cfg["vocab"], cfg["seq"], cfg["batch"]
+        self.d = cfg["d"]
+        self.f = width or cfg["f"]
+        self.depth, self.ps, self.heads = depth, per_sample, heads
+        self.n_out, self.seed, self.lr = n_out, seed, lr
+        self.budget, self.sampler = budget, sampler
+        self.n_approx = 6 * depth + 1
+        self.step = 0
+        d, f = self.d, self.f
+        rng = Rng(seed)
+        self.embed = randn_mat(self.vocab, d, rng)
+        a_sc = math.sqrt(1.0 / d)
+        self.blocks = []
+        for _ in range(depth):
+            blk = dict(
+                wq=randn_mat(d, d, rng, a_sc),
+                wk=randn_mat(d, d, rng, a_sc),
+                wv=randn_mat(d, d, rng, a_sc),
+                wp=randn_mat(d, d, rng, a_sc),
+                w1=randn_mat(d, f, rng, math.sqrt(2.0 / d)),
+                w2=randn_mat(f, d, rng, math.sqrt(1.0 / f)),
+                b1=np.zeros(f, dtype=np.float32),
+                b2=np.zeros(d, dtype=np.float32),
+            )
+            self.blocks.append(blk)
+        self.head = randn_mat(d, n_out, rng, math.sqrt(1.0 / d))
+        self.head_b = np.zeros(n_out, dtype=np.float32)
+        self.opt = {}
+        for l, blk in enumerate(self.blocks):
+            for name in ("wq", "wk", "wv", "wp", "w1", "b1", "w2", "b2"):
+                self.opt[f"{l}.{name}"] = Adam(blk[name].shape)
+        self.opt["head"] = Adam(self.head.shape)
+        self.opt["head_b"] = Adam(self.head_b.shape)
+
+    def chunk_pool(self, tokens):
+        """(B, seq) ids -> (B * ps, d) chunk-pooled embeddings."""
+        B, s, ps = tokens.shape[0], self.seq, self.ps
+        chunk = s // ps
+        out = np.zeros((B * ps, self.d), dtype=np.float32)
+        for r in range(B):
+            for c in range(ps):
+                seg = tokens[r, c * chunk:(c + 1) * chunk]
+                nz = seg[seg != 0]
+                if len(nz):
+                    out[r * ps + c] = (self.embed[nz].sum(axis=0, dtype=np.float32)
+                                       / np.float32(len(nz)))
+        return out
+
+    def select_for(self, acts, layer, zn, rng, per_sample):
+        """Tokens-broadcast column-row selection (None = exact/full)."""
+        if self.sampler is None:
+            return None
+        n = acts.shape[0]
+        k = k_for(self.budget, n)
+        if k >= n:
+            return None
+        B = self.batch
+        anorm = np.sqrt((acts.astype(np.float64) ** 2).sum(axis=1))
+        zl = zn[layer * B:(layer + 1) * B].astype(np.float64)
+        w = np.maximum(anorm * np.maximum(zl[np.arange(n) // per_sample], 0.0),
+                       1e-12)
+        probs = w / w.sum()
+        return select(self.sampler, list(probs), k, rng)
+
+    @staticmethod
+    def grad_from(acts, delta, sel):
+        if sel is None:
+            return (acts.T @ delta).astype(np.float32)
+        idx, sc = sel
+        g = np.zeros((acts.shape[1], delta.shape[1]), dtype=np.float32)
+        for i, s in zip(idx, sc):
+            g += np.outer(acts[i] * np.float32(s), delta[i]).astype(np.float32)
+        return g
+
+    def forward_block(self, blk, x):
+        """One pre-norm block; returns (out, cache-for-backward)."""
+        h1, _, s1 = layer_norm(x)
+        q = (h1 @ blk["wq"]).astype(np.float32)
+        k = (h1 @ blk["wk"]).astype(np.float32)
+        v = (h1 @ blk["wv"]).astype(np.float32)
+        ao, attn = sdpa_forward(q, k, v, self.heads, self.ps)
+        p_out = (ao @ blk["wp"]).astype(np.float32)
+        x2 = (x + p_out).astype(np.float32)
+        h2, _, s2 = layer_norm(x2)
+        z1 = (h2 @ blk["w1"] + blk["b1"]).astype(np.float32)
+        a1 = np.maximum(z1, 0)
+        z2 = (a1 @ blk["w2"] + blk["b2"]).astype(np.float32)
+        out = (x2 + z2).astype(np.float32)
+        cache = dict(h1=h1, s1=s1, q=q, k=k, v=v, attn=attn, ao=ao,
+                     x2=x2, h2=h2, s2=s2, z1=z1, a1=a1)
+        return out, cache
+
+    def forward(self, x_tok, zn, rng):
+        """Full forward, drawing selections in Rust module order."""
+        x = x_tok
+        caches, sels = [], []
+        for l, blk in enumerate(self.blocks):
+            out, c = self.forward_block(blk, x)
+            base = 6 * l
+            sel = dict(
+                q=self.select_for(c["h1"], base, zn, rng, self.ps),
+                k=self.select_for(c["h1"], base + 1, zn, rng, self.ps),
+                v=self.select_for(c["h1"], base + 2, zn, rng, self.ps),
+                p=self.select_for(c["ao"], base + 3, zn, rng, self.ps),
+                f1=self.select_for(c["h2"], base + 4, zn, rng, self.ps),
+                f2=self.select_for(c["a1"], base + 5, zn, rng, self.ps),
+            )
+            c["x"] = x
+            caches.append(c)
+            sels.append(sel)
+            x = out
+        B, ps = self.batch, self.ps
+        pooled = x.reshape(B, ps, -1).mean(axis=1, dtype=np.float32)
+        sel_head = self.select_for(pooled, 6 * self.depth, zn, rng, 1)
+        logits = (pooled @ self.head + self.head_b).astype(np.float32)
+        return caches, sels, pooled, sel_head, logits
+
+    def backward_block(self, blk, c, sel, dout, grads, norms, l):
+        """Backward of one block; returns dx and fills grads/norms."""
+        B, ps = self.batch, self.ps
+
+        def store(slot, dz):
+            norms[slot * B:(slot + 1) * B] = np.sqrt(
+                (dz.astype(np.float64) ** 2).reshape(B, ps, -1).sum(axis=(1, 2)))
+
+        base = 6 * l
+        # out = x2 + ffn(ln2(x2)); dz2 = dout
+        dz2 = dout
+        grads[f"{l}.w2"] = self.grad_from(c["a1"], dz2, sel["f2"])
+        grads[f"{l}.b2"] = dz2.sum(axis=0)
+        store(base + 5, dz2)
+        da1 = (dz2 @ blk["w2"].T).astype(np.float32)
+        dz1 = (da1 * (c["z1"] > 0)).astype(np.float32)
+        grads[f"{l}.w1"] = self.grad_from(c["h2"], dz1, sel["f1"])
+        grads[f"{l}.b1"] = dz1.sum(axis=0)
+        store(base + 4, dz1)
+        dh2 = (dz1 @ blk["w1"].T).astype(np.float32)
+        xhat2, _, s2 = layer_norm(c["x2"])
+        d_x2 = (dout + layer_norm_grad(dh2, xhat2, s2)).astype(np.float32)
+        # x2 = x + proj(attn); d at proj output = d_x2
+        grads[f"{l}.wp"] = self.grad_from(c["ao"], d_x2, sel["p"])
+        store(base + 3, d_x2)
+        d_ao = (d_x2 @ blk["wp"].T).astype(np.float32)
+        dq, dk, dv = sdpa_backward(d_ao, c["q"], c["k"], c["v"], c["attn"],
+                                   self.heads, self.ps)
+        grads[f"{l}.wq"] = self.grad_from(c["h1"], dq, sel["q"])
+        grads[f"{l}.wk"] = self.grad_from(c["h1"], dk, sel["k"])
+        grads[f"{l}.wv"] = self.grad_from(c["h1"], dv, sel["v"])
+        store(base, dq)
+        store(base + 1, dk)
+        store(base + 2, dv)
+        d_h1 = (dq @ blk["wq"].T + dk @ blk["wk"].T
+                + dv @ blk["wv"].T).astype(np.float32)
+        dx = (d_x2 + layer_norm_grad(d_h1, c["h1"], c["s1"])).astype(np.float32)
+        return dx
+
+    def train_step(self, tokens, labels_i, zn):
+        B, ps = self.batch, self.ps
+        x_tok = self.chunk_pool(tokens)
+        rng = Rng(self.seed ^ SAMPLE_STREAM).fold_in(self.step)
+        caches, sels, pooled, sel_head, logits = self.forward(x_tok, zn, rng)
+        # softmax xent
+        z = logits - logits.max(axis=1, keepdims=True)
+        e = np.exp(z.astype(np.float64))
+        p = (e / e.sum(axis=1, keepdims=True)).astype(np.float32)
+        y = np.asarray(labels_i)
+        loss = float(-np.mean(np.log(np.maximum(p[np.arange(B), y], 1e-12))))
+        dlogits = p.copy()
+        dlogits[np.arange(B), y] -= 1.0
+        dlogits = (dlogits / np.float32(B)).astype(np.float32)
+
+        grads = {}
+        norms = np.zeros(self.n_approx * B, dtype=np.float32)
+        grads["head"] = self.grad_from(pooled, dlogits, sel_head)
+        grads["head_b"] = dlogits.sum(axis=0)
+        norms[6 * self.depth * B:] = np.sqrt(
+            (dlogits.astype(np.float64) ** 2).sum(axis=1))
+        dpool = (dlogits @ self.head.T).astype(np.float32)
+        d = (np.repeat(dpool, ps, axis=0) / np.float32(ps)).astype(np.float32)
+        for l in range(self.depth - 1, -1, -1):
+            d = self.backward_block(self.blocks[l], caches[l], sels[l], d,
+                                    grads, norms, l)
+        self.step += 1
+        t = self.step
+        for l, blk in enumerate(self.blocks):
+            for name in ("wq", "wk", "wv", "wp", "w1", "b1", "w2", "b2"):
+                blk[name] = self.opt[f"{l}.{name}"].update(
+                    blk[name], grads[f"{l}.{name}"], self.lr, t)
+        self.head = self.opt["head"].update(self.head, grads["head"], self.lr, t)
+        self.head_b = self.opt["head_b"].update(
+            self.head_b, grads["head_b"], self.lr, t)
+        return loss, norms
+
+
+def toy_batch_dense(sess):
+    b, s = sess.batch, sess.seq
+    toks = np.zeros((b, s), dtype=np.int32)
+    labs = []
+    for r in range(b):
+        t = 4 + ((r * 37) % 1000)
+        toks[r, :] = t
+        labs.append(int(t > 512))
+    return toks, labs
+
+
+def run_toy(budget=0.3, steps=30, sampler="wtacrs", lr=1e-3, depth=2):
+    sess = AttnSession("tiny", budget, 2, seed=0, lr=lr, depth=depth,
+                       sampler=sampler)
+    toks, labs = toy_batch_dense(sess)
+    zn = np.ones(sess.n_approx * sess.batch, dtype=np.float32)
+    losses = []
+    for _ in range(steps):
+        loss, _ = sess.train_step(toks, labs, zn)
+        losses.append(loss)
+    return losses
+
+
+def run_glue_attn(task, steps, lr=1e-3, seed=0, data_seed=5,
+                  train_size=256, budget=0.3, depth=2):
+    spec = dict(glue.TASKS[task])
+    cfg = SIZES["tiny"]
+    train = glue.generate(task, cfg["vocab"], cfg["seq"], train_size, data_seed)
+    sess = AttnSession("tiny", budget, spec["n_out"], seed, lr, depth=depth)
+    cache = NormCache(sess.n_approx, len(train))
+    bat = glue.Batcher(len(train), sess.batch, seed)
+    losses = []
+    for _ in range(steps):
+        idxs = bat.next_indices()
+        toks = np.array([train[i][0] for i in idxs], dtype=np.int32)
+        li = [train[i][1][1] if train[i][1][0] == "c" else 0 for i in idxs]
+        zn = cache.gather(idxs)
+        loss, norms = sess.train_step(toks, li, zn)
+        cache.scatter(idxs, norms)
+        losses.append(loss)
+    return losses

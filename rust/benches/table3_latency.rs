@@ -89,6 +89,7 @@ fn main() {
                 depth: 4,
                 width: 128,
                 contraction: Contraction::Tokens { per_sample: 4 },
+                ..ModelSpec::default()
             };
             // Backends with compiled-in architectures (pjrt) reject the
             // deep spec; skip the section rather than abort the sweep.
@@ -122,6 +123,70 @@ fn main() {
             ]);
             out.push(json::obj(vec![
                 ("size", json::s("tiny-deep4")),
+                ("method", json::s(method)),
+                ("fwd_ms", json::num(fwd.mean_ms())),
+                ("step_ms", json::num(step.mean_ms())),
+                ("bwd_ms", json::num(bwd)),
+            ]));
+        }
+        t.print();
+    }
+
+    // The transformer stack (Arch::Transformer): 2 pre-norm residual
+    // blocks — q/k/v/proj + FFN as 6 sampled linears per block over
+    // batch×token rows — plus the sampled head.  The paper's actual
+    // workload shape: attention state is saved exactly, so the sampled
+    // step's win is concentrated in the linears' backward.
+    if !common::smoke_mode() {
+        use wtacrs::nn::{Arch, ModelSpec};
+        use wtacrs::ops::Contraction;
+        let dims = backend.model_dims("tiny").expect("model dims");
+        let corpus = Corpus::new(dims.vocab, 0);
+        println!("\n== transformer stack (tiny, 2 blocks, 4 heads, tokens/sample 4) ==");
+        let mut t = Table::new(&["method", "fwd ms", "step ms", "bwd+update ms"]);
+        for &method in ["full", "full-wtacrs30"].iter() {
+            let spec: wtacrs::ops::MethodSpec = method.parse().expect("method");
+            let mut scfg = SessionConfig::new("tiny", spec, 2);
+            scfg.lr = 1e-3;
+            scfg.model = ModelSpec {
+                depth: 2,
+                width: 0,
+                contraction: Contraction::Tokens { per_sample: 4 },
+                arch: Arch::Transformer,
+                heads: 4,
+            };
+            // Backends with compiled-in architectures (pjrt) reject the
+            // spec; skip the section rather than abort the sweep.
+            let mut session = match backend.open(&scfg) {
+                Ok(s) => s,
+                Err(e) => {
+                    eprintln!("transformer stack not supported by this backend ({e}); skipping");
+                    break;
+                }
+            };
+            let b = session.batch_size();
+            let seq = session.seq_len();
+            let zn = vec![1.0f32; session.n_approx_layers() * b];
+            let labels: Vec<i32> = (0..b as i32).map(|i| i % 2).collect();
+            let toks = corpus.batch(b, seq, 0);
+            let fwd = bench(&format!("tf_{method}_fwd"), &cfg, || {
+                session.eval_logits(&toks).expect("eval");
+            });
+            let mut step_i = 1u64;
+            let step = bench(&format!("tf_{method}_step"), &cfg, || {
+                let toks = corpus.batch(b, seq, step_i);
+                step_i += 1;
+                session.train_step(&toks, &labels, &[], &zn).expect("step");
+            });
+            let bwd = (step.mean_ms() - fwd.mean_ms()).max(0.0);
+            t.row(&[
+                method.into(),
+                format!("{:.3}", fwd.mean_ms()),
+                format!("{:.3}", step.mean_ms()),
+                format!("{bwd:.3}"),
+            ]);
+            out.push(json::obj(vec![
+                ("size", json::s("tiny-transformer2")),
                 ("method", json::s(method)),
                 ("fwd_ms", json::num(fwd.mean_ms())),
                 ("step_ms", json::num(step.mean_ms())),

@@ -10,7 +10,7 @@
 use wtacrs::bail;
 use wtacrs::coordinator::{self, ExperimentOptions, TrainOptions};
 use wtacrs::memsim::{self, tables, Scope, Workload};
-use wtacrs::nn::ModelSpec;
+use wtacrs::nn::{Arch, ModelSpec};
 use wtacrs::ops::{Contraction, MethodSpec};
 use wtacrs::runtime::{Backend, Manifest, NativeBackend};
 use wtacrs::util::bench::Table;
@@ -90,8 +90,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
         .opt("seed", "0", "seed")
         .opt("eval-every", "100", "eval cadence in steps (0 = end only)")
         .opt("patience", "0", "early-stop patience in evals (0 = off)")
-        .opt("depth", "0", "sampled trunk depth (0 = the classic family graph)")
-        .opt("width", "0", "trunk hidden width (0 = the size default)")
+        .opt("arch", "mlp", "trunk architecture (mlp|transformer)")
+        .opt(
+            "depth",
+            "0",
+            "trunk depth: mlp sampled linears (0 = classic graph) or transformer blocks",
+        )
+        .opt("width", "0", "trunk hidden / transformer FFN width (0 = size default)")
+        .opt("heads", "0", "attention heads (transformer arch; 0 = default 4)")
         .opt(
             "tokens-per-sample",
             "1",
@@ -118,6 +124,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
         depth: p.get_usize("depth")?,
         width: p.get_usize("width")?,
         contraction,
+        arch: p.get("arch").parse::<Arch>()?,
+        heads: p.get_usize("heads")?,
     };
     let opts = ExperimentOptions {
         train: TrainOptions {

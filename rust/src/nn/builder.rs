@@ -22,6 +22,7 @@ use crate::ops::{Contraction, Family, MethodSpec, SampledLinear};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
+use super::attention::{MultiHeadAttention, TransformerBlock};
 use super::layers::{Bias, Linear, LoraAdapter, MeanPool, MeanPoolEmbed, Relu};
 use super::sequential::Sequential;
 
@@ -29,23 +30,70 @@ use super::sequential::Sequential;
 pub const LORA_RANK: usize = 8;
 /// LST ladder width divisor (side width = trunk width / LST_FACTOR).
 pub const LST_FACTOR: usize = 4;
+/// Attention heads when [`ModelSpec::heads`] is 0.
+pub const DEFAULT_HEADS: usize = 4;
+
+/// Macro-architecture of the trunk the builder assembles.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Arch {
+    /// The classic family MLPs (`depth == 0`) or the deep
+    /// token-contracted linear stack (`depth >= 1`).
+    #[default]
+    Mlp,
+    /// `depth` pre-norm residual transformer blocks — multi-head
+    /// attention (q/k/v/proj as four sampled linears) plus a sampled
+    /// FFN, attention running within each sample's token rows.
+    Transformer,
+}
+
+impl std::fmt::Display for Arch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Arch::Mlp => "mlp",
+            Arch::Transformer => "transformer",
+        })
+    }
+}
+
+impl std::str::FromStr for Arch {
+    type Err = crate::util::error::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "mlp" => Ok(Arch::Mlp),
+            "transformer" => Ok(Arch::Transformer),
+            other => Err(crate::anyhow!("unknown arch {other:?} (mlp|transformer)")),
+        }
+    }
+}
 
 /// Architecture knobs carried on
 /// [`SessionConfig`](crate::runtime::SessionConfig).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ModelSpec {
-    /// Sampled trunk linears.  `0` = the classic two-hidden-layer MLP
-    /// family graphs; `>= 1` = the deep token-contracted stack.
+    /// Trunk depth: sampled linears ([`Arch::Mlp`]; `0` = the classic
+    /// two-hidden-layer family graphs) or transformer blocks
+    /// ([`Arch::Transformer`]; must be `>= 1`).
     pub depth: usize,
-    /// Trunk hidden width (`0` = the size table's d_ff).
+    /// Trunk hidden width — the MLP trunk width, or the transformer
+    /// FFN width (`0` = the size table's d_ff).
     pub width: usize,
     /// Contraction axis of the trunk's sampled weight-gradient GEMMs.
     pub contraction: Contraction,
+    /// Macro architecture of the trunk.
+    pub arch: Arch,
+    /// Attention heads (`Arch::Transformer` only; 0 = [`DEFAULT_HEADS`]).
+    pub heads: usize,
 }
 
 impl Default for ModelSpec {
     fn default() -> Self {
-        ModelSpec { depth: 0, width: 0, contraction: Contraction::Rows }
+        ModelSpec {
+            depth: 0,
+            width: 0,
+            contraction: Contraction::Rows,
+            arch: Arch::Mlp,
+            heads: 0,
+        }
     }
 }
 
@@ -89,6 +137,16 @@ impl ModelBuilder {
         let ps = self.spec.contraction.per_sample();
         if ps == 0 {
             bail!("Tokens {{ per_sample: 0 }} is not a valid contraction");
+        }
+        if self.spec.arch == Arch::Transformer {
+            if self.dims.seq % ps != 0 {
+                bail!(
+                    "transformer stack: seq {} not divisible into {ps} token \
+                     chunks per sample",
+                    self.dims.seq
+                );
+            }
+            return self.build_transformer(rng);
         }
         if self.spec.depth == 0 {
             if ps != 1 {
@@ -252,6 +310,66 @@ impl ModelBuilder {
         let n_approx = graph.n_approx();
         Ok(BuiltModel { graph, n_approx })
     }
+
+    /// The pre-norm transformer stack (`Arch::Transformer`): `depth`
+    /// residual blocks of multi-head attention (q/k/v/proj as four
+    /// sampled linears over batch×token rows) plus a sampled FFN, then
+    /// mean-pool and a `Rows`-contracted sampled head.  6 norm-cache
+    /// layer slots per block, plus one for the head.
+    fn build_transformer(&self, rng: &mut Rng) -> Result<BuiltModel> {
+        let StackDims { vocab, seq, d_model: d, d_ff, n_out } = self.dims;
+        if self.method.family != Family::Full {
+            bail!(
+                "transformer arch supports the full family only for now \
+                 (got {}); lora/lst adapters over attention are future work",
+                self.method.family
+            );
+        }
+        let depth = self.spec.depth;
+        if depth == 0 {
+            bail!("transformer arch needs depth >= 1 (residual blocks)");
+        }
+        let ps = self.spec.contraction.per_sample();
+        let heads = if self.spec.heads > 0 { self.spec.heads } else { DEFAULT_HEADS };
+        if d % heads != 0 {
+            bail!("d_model {d} not divisible into {heads} heads");
+        }
+        let f = if self.spec.width > 0 { self.spec.width } else { d_ff };
+        let op = SampledLinear::new(self.method.sampler, self.spec.contraction);
+        let head_op = SampledLinear::new(self.method.sampler, Contraction::Rows);
+
+        // Draw order: embed, per block (wq, wk, wv, wproj, ff1, ff2),
+        // head — mirrored by python/mirror/nn_attention.py.
+        let embed = Mat::randn(vocab, d, rng);
+        let attn_scale = (1.0 / d as f64).sqrt() as f32;
+        let ff1_scale = (2.0 / d as f64).sqrt() as f32;
+        let ff2_scale = (1.0 / f as f64).sqrt() as f32;
+        let mut graph = Sequential::new().push(MeanPoolEmbed::new(embed, seq, ps)?);
+        for b in 0..depth {
+            let base = b * 6;
+            let wq = Mat::randn(d, d, rng).scale(attn_scale);
+            let wk = Mat::randn(d, d, rng).scale(attn_scale);
+            let wv = Mat::randn(d, d, rng).scale(attn_scale);
+            let wp = Mat::randn(d, d, rng).scale(attn_scale);
+            let w1 = Mat::randn(d, f, rng).scale(ff1_scale);
+            let w2 = Mat::randn(f, d, rng).scale(ff2_scale);
+            let mha = MultiHeadAttention::new([wq, wk, wv, wp], op, base, heads, ps)?;
+            let ffn = Sequential::new()
+                .push(Linear::new(w1, op, base + 4, true))
+                .push(Bias::new(f))
+                .push(Relu)
+                .push(Linear::new(w2, op, base + 5, true))
+                .push(Bias::new(d));
+            graph = graph.push(TransformerBlock::new(mha, ffn));
+        }
+        let head = Mat::randn(d, n_out, rng).scale((1.0 / d as f64).sqrt() as f32);
+        let graph = graph
+            .push(MeanPool::new(ps)?)
+            .push(Linear::new(head, head_op, depth * 6, true))
+            .push(Bias::new(n_out));
+        let n_approx = graph.n_approx();
+        Ok(BuiltModel { graph, n_approx })
+    }
 }
 
 #[cfg(test)]
@@ -285,6 +403,7 @@ mod tests {
                 depth,
                 width: 16,
                 contraction: Contraction::Tokens { per_sample: 4 },
+                ..ModelSpec::default()
             };
             let b = ModelBuilder::new(dims(), m("full-wtacrs30"), spec);
             let built = b.build(&mut Rng::new(0)).unwrap();
@@ -300,6 +419,7 @@ mod tests {
             depth: 2,
             width: 16,
             contraction: Contraction::Tokens { per_sample: 2 },
+            ..ModelSpec::default()
         };
         let lora = ModelBuilder::new(dims(), m("lora-wtacrs30"), spec)
             .build(&mut Rng::new(0))
@@ -321,6 +441,7 @@ mod tests {
                 depth: 0,
                 width: 0,
                 contraction: Contraction::Tokens { per_sample: 4 },
+                ..ModelSpec::default()
             },
         );
         let e = b.build(&mut Rng::new(0)).unwrap_err().to_string();
@@ -333,6 +454,7 @@ mod tests {
                 depth: 2,
                 width: 0,
                 contraction: Contraction::Tokens { per_sample: 3 },
+                ..ModelSpec::default()
             },
         );
         let e = b.build(&mut Rng::new(0)).unwrap_err().to_string();
@@ -344,8 +466,71 @@ mod tests {
                 depth: 1,
                 width: 0,
                 contraction: Contraction::Tokens { per_sample: 0 },
+                ..ModelSpec::default()
             },
         );
         assert!(b.build(&mut Rng::new(0)).is_err());
+    }
+
+    fn tf_spec(depth: usize, heads: usize, per_sample: usize) -> ModelSpec {
+        ModelSpec {
+            depth,
+            width: 0,
+            contraction: Contraction::Tokens { per_sample },
+            arch: Arch::Transformer,
+            heads,
+        }
+    }
+
+    #[test]
+    fn arch_parses_and_round_trips() {
+        for (s, a) in [("mlp", Arch::Mlp), ("transformer", Arch::Transformer)] {
+            assert_eq!(s.parse::<Arch>().unwrap(), a);
+            assert_eq!(a.to_string(), s);
+        }
+        assert!("mamba".parse::<Arch>().is_err());
+        assert_eq!(ModelSpec::default().arch, Arch::Mlp);
+    }
+
+    #[test]
+    fn transformer_stack_counts() {
+        // dims(): d_model 16, seq 8.  Depth-2, 4 tokens/sample: each
+        // block holds 6 sampled linears (q/k/v/proj + 2 ffn), the head
+        // adds one more; params: 6 weights + 2 ffn biases per block,
+        // plus head weight + bias.
+        for depth in [1, 2] {
+            let b = ModelBuilder::new(dims(), m("full-wtacrs30"), tf_spec(depth, 4, 4));
+            let built = b.build(&mut Rng::new(0)).unwrap();
+            assert_eq!(built.n_approx, 6 * depth + 1, "depth {depth}");
+            assert_eq!(built.graph.n_params(), 8 * depth + 2, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn transformer_rejects_bad_specs() {
+        // depth 0
+        let e = ModelBuilder::new(dims(), m("full-wtacrs30"), tf_spec(0, 4, 4))
+            .build(&mut Rng::new(0))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("depth >= 1"), "{e}");
+        // d_model 16 not divisible into 3 heads
+        let e = ModelBuilder::new(dims(), m("full-wtacrs30"), tf_spec(1, 3, 4))
+            .build(&mut Rng::new(0))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("heads"), "{e}");
+        // seq 8 not divisible into 3 token chunks
+        let e = ModelBuilder::new(dims(), m("full-wtacrs30"), tf_spec(1, 4, 3))
+            .build(&mut Rng::new(0))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("not divisible"), "{e}");
+        // lora over attention is future work
+        let e = ModelBuilder::new(dims(), m("lora-wtacrs30"), tf_spec(1, 4, 4))
+            .build(&mut Rng::new(0))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("full family"), "{e}");
     }
 }

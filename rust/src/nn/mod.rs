@@ -14,18 +14,30 @@
 //! * Concrete modules — [`Linear`], [`Bias`], [`Relu`],
 //!   [`LoraAdapter`], [`MeanPoolEmbed`], [`MeanPool`] — and the
 //!   [`Sequential`] container.
-//! * [`ModelBuilder`] — assembles the full/lora/lst family graphs and
-//!   arbitrary-depth token-contracted stacks from a [`ModelSpec`].
+//! * Attention-shaped modules — [`LayerNorm`] (tape cost: two floats
+//!   per row), [`Softmax`] (saves its output),
+//!   [`ScaledDotProductAttention`], [`MultiHeadAttention`] (q/k/v/proj
+//!   as four sampled [`Linear`]s) and the residual [`TransformerBlock`].
+//! * [`ModelBuilder`] — assembles the full/lora/lst family graphs,
+//!   arbitrary-depth token-contracted MLP stacks, and pre-norm
+//!   transformer stacks from a [`ModelSpec`] (the [`Arch`] knob).
 //!
 //! A custom stack is a few lines:
 //!
 //! ```text
 //! let spec = ModelSpec { depth: 4, width: 128,
-//!                        contraction: Contraction::Tokens { per_sample: 4 } };
+//!                        contraction: Contraction::Tokens { per_sample: 4 },
+//!                        ..ModelSpec::default() };
 //! let built = ModelBuilder::new(dims, "full-wtacrs30".parse()?, spec)
 //!     .build(&mut Rng::new(0))?;
 //! // built.graph: MeanPoolEmbed -> [Linear/Bias/Relu] x4 -> MeanPool
 //! //              -> Linear head -> Bias; built.n_approx == 5
+//!
+//! // ... and with `arch: Arch::Transformer`, depth counts pre-norm
+//! // residual blocks (MHA + FFN, 6 sampled linears each):
+//! let spec = ModelSpec { depth: 2, arch: Arch::Transformer, heads: 4,
+//!                        contraction: Contraction::Tokens { per_sample: 4 },
+//!                        ..ModelSpec::default() };   // built.n_approx == 13
 //! ```
 //!
 //! or, fully manual, `Sequential::new().push(MeanPoolEmbed::new(..)?)
@@ -33,13 +45,19 @@
 //! its own norm-cache layer slot, so the Algorithm-1 cache follows the
 //! graph instead of a fixed architecture.
 
+pub mod attention;
 pub mod builder;
 pub mod layers;
 pub mod module;
 pub mod sequential;
 pub mod tape;
 
-pub use builder::{BuiltModel, ModelBuilder, ModelSpec, StackDims, LORA_RANK, LST_FACTOR};
+pub use attention::{
+    LayerNorm, MultiHeadAttention, ScaledDotProductAttention, Softmax, TransformerBlock,
+};
+pub use builder::{
+    Arch, BuiltModel, ModelBuilder, ModelSpec, StackDims, LORA_RANK, LST_FACTOR,
+};
 pub use layers::{Bias, Linear, LoraAdapter, MeanPool, MeanPoolEmbed, Relu};
 pub use module::{BackwardCtx, ForwardCtx, Module, Param};
 pub use sequential::Sequential;

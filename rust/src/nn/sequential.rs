@@ -45,14 +45,8 @@ impl Sequential {
         self.visit_params(&mut |_| n += 1);
         n
     }
-}
 
-impl Module for Sequential {
-    fn name(&self) -> &'static str {
-        "sequential"
-    }
-
-    fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+    fn forward_inner(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
         let mut h = x;
         for (i, m) in self.mods.iter().enumerate() {
             h = m
@@ -62,7 +56,7 @@ impl Module for Sequential {
         Ok(h)
     }
 
-    fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+    fn backward_inner(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
         let mut d = dy;
         for (i, m) in self.mods.iter_mut().enumerate().rev() {
             d = m
@@ -70,6 +64,32 @@ impl Module for Sequential {
                 .with_context(|| format!("backward of module #{i} ({})", m.name()))?;
         }
         Ok(d)
+    }
+}
+
+impl Module for Sequential {
+    fn name(&self) -> &'static str {
+        "sequential"
+    }
+
+    fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        // Bracket the children in a tape scope so every saved entry is
+        // attributed to its container path (tape mismatch forensics).
+        if let Some(t) = ctx.tape.as_deref_mut() {
+            t.enter(self.name());
+        }
+        let r = self.forward_inner(x, ctx);
+        if let Some(t) = ctx.tape.as_deref_mut() {
+            t.exit();
+        }
+        r
+    }
+
+    fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        ctx.tape.enter(self.name());
+        let r = self.backward_inner(dy, ctx);
+        ctx.tape.exit();
+        r
     }
 
     fn visit_params(&self, f: &mut dyn FnMut(&Param)) {
@@ -136,6 +156,41 @@ mod tests {
         });
         assert_eq!(with_grads, 4);
         assert!(norms.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    /// A deliberately misordered module: saves nothing in forward but
+    /// pops in backward, desynchronizing the tape.
+    struct Misordered;
+    impl Module for Misordered {
+        fn name(&self) -> &'static str {
+            "misordered"
+        }
+        fn forward(&self, x: Mat, _ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+            Ok(x)
+        }
+        fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+            ctx.tape.pop(self.name())?;
+            Ok(dy)
+        }
+        fn visit_params(&self, _f: &mut dyn FnMut(&Param)) {}
+        fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
+    }
+
+    #[test]
+    fn misordered_module_reports_nested_paths() {
+        // The pop lands on the ReLU mask pushed two scopes deep; the
+        // error must name both full module paths, not just "misordered".
+        let inner = Sequential::new().push(Relu).push(Misordered);
+        let mut seq = Sequential::new().push(inner);
+        let x = Mat { rows: 1, cols: 2, data: vec![1.0, -1.0] };
+        let mut tape = Tape::new();
+        let mut fctx = ForwardCtx::train(&mut tape, &[], 0, Rng::new(0));
+        seq.forward(x, &mut fctx).unwrap();
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut [], slots: 0 };
+        let dy = Mat { rows: 1, cols: 2, data: vec![1.0, 1.0] };
+        let e = seq.backward(dy, &mut bctx).unwrap_err().to_string();
+        assert!(e.contains("sequential/sequential/misordered"), "{e}");
+        assert!(e.contains("sequential/sequential/relu"), "{e}");
     }
 
     #[test]

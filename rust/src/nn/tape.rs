@@ -84,6 +84,9 @@ pub enum Saved {
     Acts(Mat),
     /// A packed ReLU sign mask.
     Mask(BitMask),
+    /// Per-row normalization statistics (mean, inv-std) — 2 floats per
+    /// row instead of the d-float row a full input save would cost.
+    Norm { mean: Vec<f32>, inv_std: Vec<f32> },
 }
 
 impl Saved {
@@ -93,15 +96,22 @@ impl Saved {
             Saved::Linear { ctx, .. } => ctx.saved_bytes(),
             Saved::Acts(m) => m.data.len() * std::mem::size_of::<f32>(),
             Saved::Mask(b) => b.bytes(),
+            Saved::Norm { mean, inv_std } => {
+                (mean.len() + inv_std.len()) * std::mem::size_of::<f32>()
+            }
         }
     }
 }
 
-/// A labelled tape entry (the label is the pushing module's name, so a
-/// mismatched pop reports *which* layer desynchronized).
+/// A labelled tape entry.  The label is the pushing module's name and
+/// `path` is the full container path at push time (e.g.
+/// `sequential/transformer_block/mha/linear`), so a mismatched pop
+/// reports *which* nested module desynchronized, not just a bare leaf
+/// label shared by every linear in the graph.
 #[derive(Debug, Clone)]
 pub struct TapeEntry {
     pub label: &'static str,
+    pub path: String,
     pub saved: Saved,
 }
 
@@ -117,30 +127,65 @@ pub struct TapeStats {
 }
 
 /// LIFO store of module-saved state for one forward/backward pass.
+///
+/// Containers ([`Sequential`](super::Sequential), the attention
+/// composites) bracket their children with [`Tape::enter`] /
+/// [`Tape::exit`], so every entry records the module path it was pushed
+/// under and every pop error names the full path on both sides of the
+/// mismatch.
 #[derive(Debug, Clone, Default)]
 pub struct Tape {
     entries: Vec<TapeEntry>,
+    scope: Vec<&'static str>,
 }
 
 impl Tape {
     pub fn new() -> Self {
-        Tape { entries: Vec::new() }
+        Tape { entries: Vec::new(), scope: Vec::new() }
+    }
+
+    /// Enter a container scope; subsequent pushes/pops are attributed
+    /// under it.  Containers call this in *both* walks, so the path at
+    /// pop time describes where backward currently is.
+    pub fn enter(&mut self, scope: &'static str) {
+        self.scope.push(scope);
+    }
+
+    /// Leave the innermost container scope.
+    pub fn exit(&mut self) {
+        self.scope.pop();
+    }
+
+    /// The current container path joined with `label` (the would-be
+    /// path of a push issued right now).
+    fn path(&self, label: &str) -> String {
+        let mut p = String::new();
+        for s in &self.scope {
+            p.push_str(s);
+            p.push('/');
+        }
+        p.push_str(label);
+        p
     }
 
     pub fn push(&mut self, label: &'static str, saved: Saved) {
-        self.entries.push(TapeEntry { label, saved });
+        let path = self.path(label);
+        self.entries.push(TapeEntry { label, path, saved });
     }
 
     /// Pop the top entry, checking it was pushed by `label` — a
     /// mismatch means the graph's forward and backward walked different
-    /// module sequences.
+    /// module sequences, and the error names both full module paths.
     pub fn pop(&mut self, label: &'static str) -> Result<Saved> {
-        let e = self
-            .entries
-            .pop()
-            .ok_or_else(|| anyhow!("tape underflow: {label} has nothing to pop"))?;
+        let e = self.entries.pop().ok_or_else(|| {
+            anyhow!("tape underflow: {} has nothing to pop", self.path(label))
+        })?;
         if e.label != label {
-            bail!("tape mismatch: {label} popped an entry pushed by {}", e.label);
+            bail!(
+                "tape mismatch: {} popped an entry pushed by {}",
+                self.path(label),
+                e.path
+            );
         }
         Ok(e.saved)
     }
@@ -218,9 +263,29 @@ mod tests {
         let mut t = Tape::new();
         t.push("acts", Saved::Acts(Mat::zeros(4, 8))); // 128 bytes
         t.push("mask", Saved::Mask(BitMask::positive(&Mat::zeros(4, 8)))); // 8
-        assert_eq!(t.saved_bytes(), 4 * 8 * 4 + 8);
+        t.push("norm", Saved::Norm { mean: vec![0.0; 4], inv_std: vec![1.0; 4] }); // 32
+        assert_eq!(t.saved_bytes(), 4 * 8 * 4 + 8 + 32);
         let stats = t.stats(2);
         assert_eq!(stats.per_layer, vec![0, 0]);
         assert_eq!(stats.total, t.saved_bytes());
+    }
+
+    #[test]
+    fn mismatch_errors_name_the_full_module_path() {
+        let mut t = Tape::new();
+        t.enter("sequential");
+        t.enter("transformer_block");
+        t.push("linear", Saved::Acts(Mat::zeros(1, 1)));
+        t.exit();
+        // Backward walks a different nesting and pops the wrong label:
+        // the error must attribute both sides by path, not bare label.
+        t.enter("mha");
+        let e = t.pop("relu").unwrap_err().to_string();
+        assert!(e.contains("sequential/mha/relu"), "{e}");
+        assert!(e.contains("sequential/transformer_block/linear"), "{e}");
+        t.exit();
+        t.exit();
+        let e = t.pop("head").unwrap_err().to_string();
+        assert!(e.contains("tape underflow") && e.contains("head"), "{e}");
     }
 }

@@ -346,7 +346,7 @@ impl TrainSession for NativeSession {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::nn::ModelSpec;
+    use crate::nn::{Arch, ModelSpec};
     use crate::ops::Contraction;
 
     fn cfg(method: &str, n_out: usize) -> SessionConfig {
@@ -363,6 +363,22 @@ mod tests {
             depth: 4,
             width: 128,
             contraction: Contraction::Tokens { per_sample: 4 },
+            ..ModelSpec::default()
+        };
+        c
+    }
+
+    /// The attention stack: 2 pre-norm transformer blocks (q/k/v/proj +
+    /// FFN as sampled linears over batch×token rows, 6 cache layers per
+    /// block) plus the Rows-contracted sampled head — 13 cache layers.
+    fn tf_cfg(method: &str, n_out: usize) -> SessionConfig {
+        let mut c = cfg(method, n_out);
+        c.model = ModelSpec {
+            depth: 2,
+            width: 0,
+            contraction: Contraction::Tokens { per_sample: 4 },
+            arch: Arch::Transformer,
+            heads: 4,
         };
         c
     }
@@ -664,6 +680,7 @@ mod tests {
                 depth: 2,
                 width: 128,
                 contraction: Contraction::Tokens { per_sample: 2 },
+                ..ModelSpec::default()
             };
             let mut sess = NativeSession::new(&c).unwrap();
             assert_eq!(sess.n_approx_layers(), 3, "{method}");
@@ -673,6 +690,124 @@ mod tests {
             assert!(loss.is_finite(), "{method}");
             assert_eq!(norms.len(), 3 * sess.batch, "{method}");
         }
+    }
+
+    #[test]
+    fn transformer_stack_trains_under_token_contraction() {
+        // The PR-4 acceptance workload: 2 pre-norm transformer blocks
+        // whose q/k/v/proj and FFN linears are all wtacrs30-sampled
+        // over batch×token rows, plus the sampled head — 13 norm-cache
+        // layers — trained end-to-end.  Threshold calibrated with the
+        // committed mirror (python/mirror/check_pr4.py): the toy loss
+        // collapses by ~5 orders of magnitude in 30 steps at lr 1e-3;
+        // asserting a 2x drop leaves enormous margin.
+        let mut sess = NativeSession::new(&tf_cfg("full-wtacrs30", 2)).unwrap();
+        assert_eq!(sess.n_approx_layers(), 13);
+        let (toks, labs) = toy_batch_dense(&sess);
+        let zn = vec![1.0f32; sess.n_approx_layers() * sess.batch];
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..30 {
+            let (loss, norms) = sess.train_step(&toks, &labs, &[], &zn).unwrap();
+            assert!(loss.is_finite(), "step {step}");
+            assert_eq!(norms.len(), 13 * sess.batch);
+            assert!(norms.iter().all(|v| v.is_finite() && *v >= 0.0));
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < 0.5 * first, "transformer did not learn: {first} -> {last}");
+        // Deterministic given the seed: a fresh session replays step 0.
+        let mut again = NativeSession::new(&tf_cfg("full-wtacrs30", 2)).unwrap();
+        let (l0, _) = again.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert_eq!(l0, first);
+        // Eval path agrees on shape.
+        let logits = sess.eval_logits(&toks).unwrap();
+        assert_eq!(logits.len(), sess.batch * 2);
+    }
+
+    #[test]
+    fn transformer_tape_pin_under_half_of_full() {
+        // Table 2, measured on a real transformer shape: at a 30%
+        // budget each sampled linear keeps k = round(0.3*128) = 38 of
+        // 128 token rows (head: 10 of 32), while the attention block
+        // honestly keeps its softmax weights, one shared input copy and
+        // the residual stream exactly — so the whole-tape ratio is
+        // weaker than the MLP stack's ~0.33x, but must stay under 0.5x.
+        // Byte counts are deterministic in the budget (mirror
+        // re-derives them: sampled 575776 / full 1224704 = 0.4701).
+        let (toks, labs) = {
+            let s = NativeSession::new(&tf_cfg("full", 2)).unwrap();
+            toy_batch_dense(&s)
+        };
+        let mut exact = NativeSession::new(&tf_cfg("full", 2)).unwrap();
+        let mut sampled = NativeSession::new(&tf_cfg("full-wtacrs30", 2)).unwrap();
+        let zn = vec![1.0f32; 13 * 32];
+        exact.train_step(&toks, &labs, &[], &zn).unwrap();
+        sampled.train_step(&toks, &labs, &[], &zn).unwrap();
+        let (es, ss) = (exact.tape_stats(), sampled.tape_stats());
+        assert_eq!(es.per_layer.len(), 13);
+        assert_eq!(ss.per_layer.len(), 13);
+        // Every sampled linear's context sits under 0.35x its full
+        // save: q/k/v/proj and ffn1 contract 128 token rows of width
+        // 128, ffn2 contracts 128 rows of width 256, the head 32
+        // pooled rows of width 128.
+        let full_widths = [128usize, 128, 128, 128, 128, 256];
+        for block in 0..2 {
+            for (j, &w) in full_widths.iter().enumerate() {
+                let l = block * 6 + j;
+                assert_eq!(es.per_layer[l], 128 * w * 4, "exact layer {l}");
+                let ratio = ss.per_layer[l] as f64 / es.per_layer[l] as f64;
+                assert!(ratio < 0.35, "layer {l}: ratio {ratio:.3}");
+            }
+        }
+        assert_eq!(es.per_layer[12], 32 * 128 * 4);
+        assert!(ss.per_layer[12] < es.per_layer[12]);
+        // The acceptance pin: whole-tape sampled bytes < 0.5x the
+        // full-activation baseline (attention state saved exactly).
+        let ratio = ss.total as f64 / es.total as f64;
+        assert!(
+            ratio < 0.5,
+            "transformer whole-tape ratio {ratio:.3} (sampled {} / full {})",
+            ss.total,
+            es.total
+        );
+        // The deterministic byte totals re-derived by the mirror.
+        assert_eq!(ss.total, 575_776);
+        assert_eq!(es.total, 1_224_704);
+    }
+
+    #[test]
+    fn transformer_state_roundtrip_resumes_identically() {
+        let mut s1 = NativeSession::new(&tf_cfg("full-wtacrs30", 2)).unwrap();
+        let (toks, labs) = toy_batch_dense(&s1);
+        let zn = vec![1.0f32; s1.n_approx_layers() * s1.batch];
+        for _ in 0..2 {
+            s1.train_step(&toks, &labs, &[], &zn).unwrap();
+        }
+        let snap = s1.state();
+        // 13 sampled linears don't all own params: per block 8 tensors
+        // (4 attention weights + 2 ffn weights + 2 biases) + head pair,
+        // and the snapshot carries (w, m, v) each plus the step scalar.
+        assert_eq!(snap.len(), 1 + 3 * (8 * 2 + 2));
+        let mut s2 = NativeSession::new(&tf_cfg("full-wtacrs30", 2)).unwrap();
+        s2.restore_state(snap).unwrap();
+        let (l1, _) = s1.train_step(&toks, &labs, &[], &zn).unwrap();
+        let (l2, _) = s2.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn transformer_rejects_lora_and_bad_heads() {
+        let mut c = tf_cfg("lora-wtacrs30", 2);
+        assert!(NativeSession::new(&c).is_err());
+        c = tf_cfg("full-wtacrs30", 2);
+        c.model.heads = 3; // 128 % 3 != 0
+        assert!(NativeSession::new(&c).is_err());
+        c = tf_cfg("full-wtacrs30", 2);
+        c.model.depth = 0;
+        assert!(NativeSession::new(&c).is_err());
     }
 
     #[test]

@@ -7,7 +7,7 @@
 use wtacrs::coordinator::{checkpoint, run_glue, ExperimentOptions, TrainOptions, Trainer};
 use wtacrs::data::{glue, Batcher};
 use wtacrs::metrics::MetricKind;
-use wtacrs::nn::ModelSpec;
+use wtacrs::nn::{Arch, ModelSpec};
 use wtacrs::ops::{Contraction, MethodSpec};
 use wtacrs::runtime::{Backend, NativeBackend};
 
@@ -53,6 +53,7 @@ fn deep_token_contracted_stack_through_run_glue() {
         depth: 4,
         width: 128,
         contraction: Contraction::Tokens { per_sample: 4 },
+        ..ModelSpec::default()
     };
     let r = run_glue(&backend, "sst2", "tiny", &m("full-wtacrs30"), &o).unwrap();
     assert!(r.report.losses.iter().all(|l| l.is_finite()));
@@ -63,6 +64,36 @@ fn deep_token_contracted_stack_through_run_glue() {
         &r.report.losses[..5]
     );
     assert_eq!(r.report.saved_bytes_per_layer.len(), 5);
+    assert!(r.report.tape_bytes > 0);
+    assert!(r.report.peak_saved_bytes >= r.report.tape_bytes);
+    assert!(r.report.norm_cache_coverage > 0.9);
+}
+
+#[test]
+fn transformer_stack_through_run_glue() {
+    // Arch::Transformer rides ExperimentOptions end-to-end: run_glue
+    // opens a 2-block attention stack (13 norm-cache layers) and the
+    // report carries its per-layer and whole-tape measurements.
+    // Loss-decrease threshold mirror-calibrated (check_pr4.py):
+    // margins 0.40-1.52 across 5 seeds at lr 1e-3 over 60 steps.
+    let backend = NativeBackend::new();
+    let mut o = opts(60, 1e-3, 512, 128);
+    o.model = ModelSpec {
+        depth: 2,
+        width: 0,
+        contraction: Contraction::Tokens { per_sample: 4 },
+        arch: Arch::Transformer,
+        heads: 4,
+    };
+    let r = run_glue(&backend, "sst2", "tiny", &m("full-wtacrs30"), &o).unwrap();
+    assert!(r.report.losses.iter().all(|l| l.is_finite()));
+    let tail = |ls: &[f32]| ls[ls.len() - 10..].iter().sum::<f32>() / 10.0;
+    assert!(
+        tail(&r.report.losses) < *r.report.losses.first().unwrap(),
+        "transformer run_glue did not learn: {:?}",
+        &r.report.losses[..5]
+    );
+    assert_eq!(r.report.saved_bytes_per_layer.len(), 13);
     assert!(r.report.tape_bytes > 0);
     assert!(r.report.peak_saved_bytes >= r.report.tape_bytes);
     assert!(r.report.norm_cache_coverage > 0.9);

@@ -10,6 +10,10 @@ use wtacrs::data::Batcher;
 use wtacrs::estimator::{colrow_probs, select, wtacrs_csize, Mat, Sampler};
 use wtacrs::memsim::{self, MethodMem, Scope, Workload};
 use wtacrs::metrics;
+use wtacrs::nn::{
+    BackwardCtx, ForwardCtx, LayerNorm, Module, MultiHeadAttention, Softmax, Tape,
+};
+use wtacrs::ops::{Contraction, SampledLinear, SamplerSpec};
 use wtacrs::testing::prop::{check, Gen, Pair, UsizeIn, VecF64};
 use wtacrs::util::rng::Rng;
 
@@ -196,6 +200,118 @@ fn prop_memsim_budget_monotone() {
         let p100 = memsim::peak_bytes(&dims, &MethodMem::full(), &w, Scope::Paper);
         p10 <= p30 && p30 <= p100
     });
+}
+
+/// `Σ c ⊙ module(x)` with f64 accumulation — the scalar probe the
+/// finite-difference gradchecks differentiate.
+fn probe_loss<M: Module>(m: &M, x: &Mat, c: &Mat) -> f64 {
+    let y = m.forward(x.clone(), &mut ForwardCtx::eval()).unwrap();
+    y.data.iter().zip(&c.data).map(|(&a, &b)| a as f64 * b as f64).sum()
+}
+
+/// Central-difference check of a stateless module's backward against
+/// its forward (h = 1e-2; float32 forward, f64 loss accumulation).
+/// Tolerances mirror-calibrated in check_pr4.py: observed max
+/// deviations ~2e-5, asserted at 5e-3.
+fn fd_gradcheck<M: Module>(m: &mut M, x: &Mat, c: &Mat, tol: f64, name: &str) {
+    let mut tape = Tape::new();
+    let dx = {
+        let mut fctx = ForwardCtx::train(&mut tape, &[], 0, Rng::new(0));
+        m.forward(x.clone(), &mut fctx).unwrap();
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut [], slots: 0 };
+        m.backward(c.clone(), &mut bctx).unwrap()
+    };
+    assert!(tape.is_empty(), "{name}: backward must drain the tape");
+    let h = 1e-2f32;
+    for i in 0..x.rows {
+        for j in 0..x.cols {
+            let mut xp = x.clone();
+            *xp.at_mut(i, j) += h;
+            let mut xm = x.clone();
+            *xm.at_mut(i, j) -= h;
+            let fd = (probe_loss(&*m, &xp, c) - probe_loss(&*m, &xm, c))
+                / (2.0 * h as f64);
+            let a = dx.at(i, j) as f64;
+            assert!(
+                (a - fd).abs() < tol,
+                "{name} d[{i},{j}]: analytic {a} vs finite-difference {fd}"
+            );
+        }
+    }
+}
+
+#[test]
+fn layer_norm_backward_matches_finite_differences() {
+    let mut rng = Rng::new(31);
+    let x = Mat::randn(4, 16, &mut rng);
+    let c = Mat::randn(4, 16, &mut rng);
+    fd_gradcheck(&mut LayerNorm::new(), &x, &c, 5e-3, "layer_norm");
+}
+
+#[test]
+fn softmax_backward_matches_finite_differences() {
+    let mut rng = Rng::new(32);
+    let x = Mat::randn(4, 9, &mut rng);
+    let c = Mat::randn(4, 9, &mut rng);
+    fd_gradcheck(&mut Softmax, &x, &c, 5e-3, "softmax");
+}
+
+#[test]
+fn mha_sampled_proj_gradient_is_unbiased() {
+    // The attention analogue of the ops-layer unbiasedness pins: the
+    // Monte-Carlo mean of the wtacrs30-sampled proj weight gradient
+    // over repeated forward selections must approach the exact
+    // attn_outᵀ dZ (the attention output is deterministic, so only the
+    // column-row selection randomizes).  Mirror-calibrated
+    // (check_pr4.py): rel ~0.08 at 400 trials; band 0.2.
+    let (b, t, d) = (16usize, 4usize, 32usize);
+    let n = b * t;
+    let mut rng = Rng::new(7);
+    // Draw order matches the mirror: x, wq, wk, wv, dy, then wproj
+    // (which the estimate does not depend on).
+    let x = Mat::randn(n, d, &mut rng);
+    let wscale = (1.0 / d as f64).sqrt() as f32;
+    let wq = Mat::randn(d, d, &mut rng).scale(wscale);
+    let wk = Mat::randn(d, d, &mut rng).scale(wscale);
+    let wv = Mat::randn(d, d, &mut rng).scale(wscale);
+    let dy = Mat::randn(n, d, &mut rng);
+    let wp = Mat::randn(d, d, &mut rng).scale(wscale);
+
+    let proj_grad = |op: SampledLinear, seed: u64| -> Mat {
+        let mut mha = MultiHeadAttention::new(
+            [wq.clone(), wk.clone(), wv.clone(), wp.clone()],
+            op,
+            0,
+            4,
+            t,
+        )
+        .unwrap();
+        let zn = vec![1.0f32; 4 * b];
+        let mut tape = Tape::new();
+        let mut fctx = ForwardCtx::train(&mut tape, &zn, b, Rng::new(seed));
+        mha.forward(x.clone(), &mut fctx).unwrap();
+        let mut norms = vec![0.0f32; 4 * b];
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut norms, slots: b };
+        mha.backward(dy.clone(), &mut bctx).unwrap();
+        let mut grads: Vec<Mat> = vec![];
+        mha.visit_params(&mut |p| grads.push(p.g.clone().expect("grad deposited")));
+        grads.pop().expect("proj is the last attention param")
+    };
+
+    // The exact baseline must share the Tokens contraction so its cache
+    // slots broadcast over each sample's token rows like the sampled op.
+    let exact = proj_grad(SampledLinear::new(None, Contraction::Tokens { per_sample: t }), 0);
+    let op = SampledLinear::new(
+        Some(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }),
+        Contraction::Tokens { per_sample: t },
+    );
+    let mut acc = Mat::zeros(d, d);
+    for trial in 0..400 {
+        acc.add_assign(&proj_grad(op, 1000 + trial));
+    }
+    let mean = acc.scale(1.0 / 400.0);
+    let rel = mean.sub(&exact).frob_norm() / exact.frob_norm();
+    assert!(rel < 0.2, "sampled proj gradient biased: rel {rel}");
 }
 
 #[test]
