@@ -1,0 +1,312 @@
+"""Calibrate the PR-5 causal-LM thresholds before committing Rust.
+
+Scenarios mirrored:
+  * native.rs `causal_lm_trains_on_the_synthetic_corpus` — 30 steps on
+    fresh corpus batches at lr 1e-3, all-ones cache; pins tail-mean(15:)
+    < first across 5 seeds.
+  * native_smoke `causal_lm_learns_through_trainer` — 30 Batcher-epoch
+    steps over a 256-doc corpus dataset with the live norm cache; pins
+    tail-mean < first across 5 seeds.
+  * coordinator_integration `causal_lm_through_run_lm` — 60 steps over
+    a 512-doc dataset + held-out next-token NLL over 128 docs; pins the
+    train tail below the first loss and the trained eval NLL below the
+    *untrained* eval NLL on the same split (the pooled-chunk next-token
+    task has high conditional entropy, so ln(V) is not the right bar).
+  * property_suite `causal_masked_softmax_backward_matches_finite_
+    differences` — fd-checks the causally-masked SDPA input gradient
+    (mask respected: the finite difference at masked K/V entries is
+    exactly zero) so the Rust tolerance is set with margin.
+  * property_suite `lm_head_sampled_gradient_is_unbiased_under_tokens`
+    — Monte-Carlo mean of the Tokens-contracted sampled head gradient
+    vs the exact Hᵀ dZ; prints the relative error for the Rust band.
+  * a whole-model fd check of the causal backward (exact sampler) on a
+    real corpus batch — attention, mask, LayerNorm sharing, residuals,
+    LM head, shifted loss — the gradient-correctness guard for the
+    mirror and the Rust modules alike.
+
+Plus the deterministic tape-byte arithmetic for the causal-stack pin:
+the trunk matches the pooled transformer byte-for-byte and the head
+contracts all 128 token rows, so sampled/full = 590560 / 1273856 =
+0.4636 (< 0.5) at budget 30.
+
+Usage: python3 check_pr5.py
+"""
+import math
+import time
+
+import numpy as np
+
+import nn_attention as na
+import nn_causal as nc
+from estimator import select
+from native import randn_mat
+from rng import Rng
+
+
+def banner(name):
+    print(f"\n== {name} ==")
+
+
+def tape_arithmetic():
+    banner("causal-LM tape byte arithmetic (deterministic)")
+
+    def ctx_bytes(k, d_in):
+        return k * d_in * 4 + k * 8 + k * 8  # rows + usize idx + f64 scales
+
+    def mask_bytes(elems):
+        return ((elems + 63) // 64) * 8
+
+    # tiny causal stack: B=32 samples x T=4 tokens -> n=128 rows, d=128,
+    # f=256, heads=4; k = round(0.3*128) = 38 everywhere (the head now
+    # contracts token rows too, unlike the pooled stack's k_head=10).
+    b, t, d, f, h = 32, 4, 128, 256, 4
+    n = b * t
+    kt = na.k_for(0.3, n)
+    ln_stats = 2 * n * 4          # (mean, inv-std) per row, f32
+    attn = b * h * t * t * 4      # softmaxed scores (masked zeros included)
+    shared = n * d * 4            # MHA's kept input / the block's x2
+    mask = mask_bytes(n * f)
+
+    def block(ctx_d, ctx_f):
+        return 2 * ln_stats + 4 * ctx_d + attn + 2 * shared \
+            + ctx_d + mask + ctx_f
+
+    sampled_block = block(ctx_bytes(kt, d), ctx_bytes(kt, f))
+    full_block = block(n * d * 4, n * f * 4)
+    sampled = 2 * sampled_block + ctx_bytes(kt, d)  # token-axis LM head
+    full = 2 * full_block + n * d * 4
+    ratio = sampled / full
+    print(f"  k={kt} (head contracts all {n} token rows)")
+    print(f"  per-block: sampled {sampled_block} / full {full_block} "
+          f"({sampled_block / full_block:.4f})")
+    print(f"  whole tape: sampled {sampled} / full {full} ({ratio:.4f}, "
+          f"pin < 0.5)")
+    head_ratio = ctx_bytes(kt, d) / (n * d * 4)
+    print(f"  lm head: {ctx_bytes(kt, d)} / {n * d * 4} ({head_ratio:.4f}, "
+          f"pin < 0.35)")
+    assert sampled == 590_560, sampled
+    assert full == 1_273_856, full
+    assert ratio < 0.5
+    assert head_ratio < 0.35
+
+
+def masked_softmax_semantics():
+    banner("masked softmax: fully-masked rows are zero, never NaN")
+    x = np.array([[-np.inf, -np.inf, -np.inf], [0.0, -np.inf, 1.0]])
+    # The Rust softmax_rows rule: all -inf -> zero row; else standard.
+    out = np.zeros_like(x)
+    for r in range(2):
+        m = x[r].max()
+        if m == -np.inf:
+            continue
+        e = np.exp(x[r] - m)
+        out[r] = e / e.sum()
+    assert np.isfinite(out).all()
+    assert (out[0] == 0).all()
+    assert out[1, 1] == 0 and abs(out[1].sum() - 1) < 1e-12
+    print(f"  rows: {out.tolist()}")
+
+
+def causal_sdpa_fd_check():
+    banner("causal SDPA backward vs finite differences (h=1e-2, f32)")
+    heads, t, d = 2, 4, 8
+    n = 2 * t
+    rng = Rng(33)
+    x = randn_mat(n, 3 * d, rng)
+    c = randn_mat(n, d, rng)
+
+    def split(xv):
+        return xv[:, :d], xv[:, d:2 * d], xv[:, 2 * d:]
+
+    def loss(xv):
+        q, k, v = split(xv)
+        out, _ = nc.sdpa_forward_causal(q, k, v, heads, t)
+        return float((c.astype(np.float64) * out.astype(np.float64)).sum())
+
+    q, k, v = split(x)
+    out, attn = nc.sdpa_forward_causal(q, k, v, heads, t)
+    dq, dk, dv = na.sdpa_backward(c, q, k, v, attn, heads, t)
+    analytic = np.concatenate([dq, dk, dv], axis=1).astype(np.float64)
+    h = 1e-2
+    worst = 0.0
+    masked_dev = 0.0
+    for i in range(n):
+        for j in range(3 * d):
+            xp = x.copy()
+            xp[i, j] += np.float32(h)
+            xm = x.copy()
+            xm[i, j] -= np.float32(h)
+            fd = (loss(xp) - loss(xm)) / (2 * h)
+            dev = abs(analytic[i, j] - fd)
+            worst = max(worst, dev)
+            # Future K/V of a sample's later tokens when only earlier
+            # queries probe them: both sides must be exactly 0 there
+            # whenever the analytic grad is 0.
+            if analytic[i, j] == 0.0:
+                masked_dev = max(masked_dev, abs(fd))
+    print(f"  worst |analytic - fd|: {worst:.2e} (Rust tol 5e-3)")
+    print(f"  worst fd where analytic == 0 (masked paths): {masked_dev:.2e}")
+    assert worst < 5e-3
+
+
+def lm_head_unbiasedness(trials=400):
+    banner(f"LM-head sampled gradient unbiasedness ({trials} trials)")
+    # Mirrors the property_suite setup: B=16 samples x T=4 tokens,
+    # d=32, vocab 48, wtacrs30 (k = round(0.3*64) = 19), zn all-ones.
+    b, t, d, v = 16, 4, 32, 48
+    n = b * t
+    rng = Rng(9)
+    x = randn_mat(n, d, rng)
+    _w = randn_mat(d, v, rng, math.sqrt(1.0 / d))  # drawn, unused by dW
+    dy = randn_mat(n, v, rng)
+    kk = na.k_for(0.3, n)
+    anorm = np.sqrt((x.astype(np.float64) ** 2).sum(axis=1))
+    probs = list(np.maximum(anorm, 1e-12) / np.maximum(anorm, 1e-12).sum())
+    exact = x.astype(np.float64).T @ dy.astype(np.float64)
+    acc = np.zeros_like(exact)
+    for trial in range(trials):
+        r = Rng(2000 + trial)
+        idx, sc = select("wtacrs", probs, kk, r)
+        g = np.zeros((d, v), dtype=np.float32)
+        for i, s in zip(idx, sc):
+            g += np.outer(x[i] * np.float32(s), dy[i]).astype(np.float32)
+        acc += g
+    rel = float(np.linalg.norm(acc / trials - exact) / np.linalg.norm(exact))
+    print(f"  rel err of MC mean: {rel:.4f} (Rust band 0.2)")
+
+
+def forward_loss(sess, toks, zn):
+    """Forward-only LM loss of a CausalSession (no update)."""
+    x_tok = sess.chunk_pool(toks)
+    rngd = Rng(sess.seed ^ na.SAMPLE_STREAM).fold_in(sess.step)
+    _, _, _, _, logits = sess.forward(x_tok, zn, rngd)
+    tg = sess.lm_targets(toks)
+    sup = tg >= 0
+    z = logits - logits.max(axis=1, keepdims=True)
+    e = np.exp(z.astype(np.float64))
+    p = e / e.sum(axis=1, keepdims=True)
+    rows = np.arange(logits.shape[0])
+    return float(-np.mean(np.log(np.maximum(p[rows[sup], tg[sup]], 1e-12))))
+
+
+def grads_of(sess, toks, zn):
+    """Replicates CausalSession.train_step's backward, no update."""
+    B, ps = sess.batch, sess.ps
+    x_tok = sess.chunk_pool(toks)
+    rngd = Rng(sess.seed ^ na.SAMPLE_STREAM).fold_in(sess.step)
+    caches, sels, xtop, sel_head, logits = sess.forward(x_tok, zn, rngd)
+    tg = sess.lm_targets(toks)
+    sup = tg >= 0
+    counted = int(sup.sum())
+    z = logits - logits.max(axis=1, keepdims=True)
+    e = np.exp(z.astype(np.float64))
+    p = e / e.sum(axis=1, keepdims=True)
+    rows = np.arange(B * ps)
+    dl = p.copy()
+    dl[rows[sup], tg[sup]] -= 1.0
+    dl[~sup] = 0.0
+    dlogits = (dl / counted).astype(np.float32)
+    grads = {}
+    norms = np.zeros(sess.n_approx * B, dtype=np.float32)
+    grads["head"] = sess.grad_from(xtop, dlogits, sel_head)
+    grads["head_b"] = dlogits.sum(axis=0)
+    d = (dlogits @ sess.head.T).astype(np.float32)
+    for l in range(sess.depth - 1, -1, -1):
+        d = sess.backward_block(sess.blocks[l], caches[l], sels[l], d,
+                                grads, norms, l)
+    return grads
+
+
+def full_model_fd_check():
+    """fd-check the whole causal backward on an exact depth-2 session.
+
+    A real corpus batch varies tokens within each sample, so the causal
+    attention rows differ and q/k gradients are exercised (unlike the
+    uniform-token toy of check_pr4).
+    """
+    import copy
+
+    banner("whole-model causal backward vs finite differences (exact)")
+    sess = nc.CausalSession("tiny", 0.3, seed=0, lr=1e-3, depth=2,
+                            sampler=None)
+    toks = nc.Corpus(sess.vocab, 0).batch(sess.batch, sess.seq, 0)
+    zn = np.ones(sess.n_approx * sess.batch, dtype=np.float32)
+    g = grads_of(sess, toks, zn)
+    h = 1e-3
+    checks = [("0.wq", 3, 5), ("0.wk", 6, 2), ("0.wv", 7, 2), ("0.wp", 1, 1),
+              ("0.w1", 0, 0), ("0.w2", 5, 3), ("0.b1", None, 4),
+              ("1.wq", 2, 8), ("1.wv", 0, 9), ("1.wp", 4, 4), ("1.w1", 3, 3),
+              ("head", 0, 1), ("head_b", None, 0)]
+
+    def param(s, name):
+        if "." in name:
+            l, pn = name.split(".")
+            return s.blocks[int(l)][pn]
+        return getattr(s, name)
+
+    worst = 0.0
+    for name, i, j in checks:
+        sp, sm = copy.deepcopy(sess), copy.deepcopy(sess)
+        if i is None:
+            param(sp, name)[j] += np.float32(h)
+            param(sm, name)[j] -= np.float32(h)
+            an = float(g[name][j])
+        else:
+            param(sp, name)[i, j] += np.float32(h)
+            param(sm, name)[i, j] -= np.float32(h)
+            an = float(g[name][i, j])
+        fd = (forward_loss(sp, toks, zn)
+              - forward_loss(sm, toks, zn)) / (2 * h)
+        worst = max(worst, abs(an - fd))
+    print(f"  worst |analytic - fd| over {len(checks)} params: {worst:.2e} "
+          f"(bound 2e-3)")
+    assert worst < 2e-3
+
+
+def main():
+    tape_arithmetic()
+    masked_softmax_semantics()
+
+    banner("native.rs causal-LM corpus toy (30 steps, wtacrs30, lr 1e-3)")
+    t0 = time.time()
+    for seed in (0, 1, 2, 3, 4):
+        losses = nc.run_corpus_toy(budget=0.3, steps=30, lr=1e-3, seed=seed)
+        tail = float(np.mean(losses[15:]))
+        print(f"  seed {seed}: first {losses[0]:.4f} tail-mean {tail:.4f} "
+              f"(pin tail < first; margin {losses[0] - tail:.4f})")
+    print(f"  [{time.time() - t0:.0f}s]")
+
+    banner("native_smoke causal-LM trainer (30 steps, live cache)")
+    t0 = time.time()
+    for seed in (0, 1, 2, 3, 4):
+        losses = nc.run_trainer(steps=30, lr=1e-3, seed=seed, data_seed=5,
+                                train_size=256)
+        tail = float(np.mean(losses[15:]))
+        print(f"  seed {seed}: first {losses[0]:.4f} tail-mean {tail:.4f} "
+              f"(pin tail < first; margin {losses[0] - tail:.4f})")
+    print(f"  [{time.time() - t0:.0f}s]")
+
+    banner("coordinator run_lm (60 steps + held-out NLL, 512/128 docs)")
+    t0 = time.time()
+    val = nc.Corpus(1024, 5).dataset(128, 64, split=1)
+    for seed in (0, 1, 2, 3, 4):
+        base = nc.CausalSession("tiny", 0.3, seed=seed, lr=1e-3,
+                                depth=2).eval_nll(val)
+        losses, nll = nc.run_lm(steps=60, lr=1e-3, seed=seed, data_seed=5,
+                                train_size=512, val_size=128)
+        tail10 = float(np.mean(losses[-10:]))
+        print(f"  seed {seed}: first {losses[0]:.4f} tail10 {tail10:.4f} "
+              f"eval-nll {nll:.4f} vs untrained {base:.4f} "
+              f"(pins tail10 < first, nll < untrained; "
+              f"margins {losses[0] - tail10:.4f} / {base - nll:.4f})")
+    print(f"  [{time.time() - t0:.0f}s]")
+
+    lm_head_unbiasedness()
+    causal_sdpa_fd_check()
+    full_model_fd_check()
+
+    print("\nall scenarios printed; compare margins before trusting pins")
+
+
+if __name__ == "__main__":
+    main()

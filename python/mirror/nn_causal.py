@@ -1,0 +1,306 @@
+"""Mirror of the causal-LM stack (PR 5) for threshold calibration.
+
+Replicates `nn::ModelBuilder::build_transformer` under `Arch::CausalLm`
+for the `full` family: the chunked mean-pool embed, `depth` pre-norm
+residual blocks whose attention cores are *causally masked* (query t
+sees keys 0..=t; future scores are -inf and the masked softmax zeroes
+them — a fully-masked row would come back as an exact zero row, never
+NaN), and a token-axis LM head: one column-row-sampled linear under
+`Contraction::Tokens { per_sample }` emitting per-token vocabulary
+logits plus a bias row.  No pooling.
+
+Supervision is the shifted token stream itself (the Rust
+`data::lm_shift_targets` rule): the target of token row (sample, c)
+is the first raw token of chunk c+1; each sample's last chunk and PAD
+targets are excluded, and the loss is the mean cross-entropy over the
+supervised rows.
+
+Parameter draw order matches the Rust builder bit-for-bit: embed, per
+block (wq, wk, wv, wproj, ff1, ff2), head.  Per-step selections are
+drawn at forward time in module order (q, k, v, proj, ff1, ff2 per
+block, then the head).  The synthetic corpus mirror reproduces
+`data/corpus.rs` exactly (integer parity through the shared Rng).
+
+Float math is numpy float32 — statistically faithful, not bitwise.
+"""
+import math
+
+import numpy as np
+
+import nn_attention as na
+from native import NormCache
+from rng import Rng
+
+
+class Corpus:
+    """Exact mirror of `data::Corpus` (class-bigram Zipfian language)."""
+
+    def __init__(self, vocab, seed):
+        self.vocab, self.seed = vocab, seed
+        self.n_classes = min(max(vocab // 64, 8), 128)
+        rng = Rng(seed)
+        usable = list(range(4, vocab))
+        per = len(usable) // self.n_classes
+        self.members = [usable[c * per:(c + 1) * per]
+                        for c in range(self.n_classes)]
+        self.transitions = []
+        for _ in range(self.n_classes):
+            k = 2 + rng.usize_below(3)
+            self.transitions.append(
+                [rng.usize_below(self.n_classes) for _ in range(k)])
+
+    def pick_word(self, cls, rng):
+        m = self.members[cls]
+        u = rng.f64()
+        hm = sum(1.0 / r for r in range(1, len(m) + 1))
+        acc = 0.0
+        for r, w in enumerate(m):
+            acc += 1.0 / ((r + 1) * hm)
+            if u <= acc:
+                return w
+        return m[-1]
+
+    def sample_sequence(self, length, rng):
+        cls = rng.usize_below(self.n_classes)
+        out = []
+        for _ in range(length):
+            out.append(self.pick_word(cls, rng))
+            nxt = self.transitions[cls]
+            cls = nxt[rng.usize_below(len(nxt))]
+        return out
+
+    def batch(self, batch, seq, index):
+        rng = Rng(self.seed ^ 0xBEEF).fold_in(index)
+        return np.array([self.sample_sequence(seq, rng) for _ in range(batch)],
+                        dtype=np.int32)
+
+    def dataset(self, n, seq, split=0):
+        """Split tags draw disjoint document streams from ONE language
+        (mirrors `Corpus::dataset_split`; a differently-seeded Corpus is
+        a different language and never a held-out split)."""
+        rng = Rng(self.seed ^ 0xD0C5).fold_in(split)
+        return [self.sample_sequence(seq, rng) for _ in range(n)]
+
+
+def sdpa_forward_causal(q, k, v, heads, per_sample):
+    """Causally-masked per-head attention (mirror of the Rust mask)."""
+    n, d = q.shape
+    t = per_sample
+    b, dh = n // t, d // heads
+    scale = 1.0 / math.sqrt(dh)
+    q4 = q.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    k4 = k.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    v4 = v.reshape(b, t, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    s = q4 @ k4.transpose(0, 1, 3, 2) * scale
+    mask = np.triu(np.ones((t, t), dtype=bool), k=1)
+    s[:, :, mask] = -np.inf
+    s -= s.max(axis=3, keepdims=True)
+    e = np.exp(s)  # exp(-inf) = 0: masked weights are exact zeros
+    a = e / e.sum(axis=3, keepdims=True)
+    out = (a @ v4).astype(np.float32)
+    out = out.transpose(0, 2, 1, 3).reshape(n, d)
+    return out, a.astype(np.float32)
+
+
+class CausalSession(na.AttnSession):
+    """Mirror of NativeSession over the Arch::CausalLm graph.
+
+    The head AttnSession draws last is exactly the LM head here
+    (n_out = vocab), so the parameter stream matches the Rust builder.
+    """
+
+    def __init__(self, size, budget, seed, lr, depth=2, width=0,
+                 per_sample=4, heads=4, sampler="wtacrs"):
+        vocab = na.SIZES[size]["vocab"]
+        super().__init__(size, budget, vocab, seed, lr, depth=depth,
+                         width=width, per_sample=per_sample, heads=heads,
+                         sampler=sampler)
+
+    def forward_block(self, blk, x):
+        """Pre-norm block with the causal attention core."""
+        h1, _, s1 = na.layer_norm(x)
+        q = (h1 @ blk["wq"]).astype(np.float32)
+        k = (h1 @ blk["wk"]).astype(np.float32)
+        v = (h1 @ blk["wv"]).astype(np.float32)
+        ao, attn = sdpa_forward_causal(q, k, v, self.heads, self.ps)
+        p_out = (ao @ blk["wp"]).astype(np.float32)
+        x2 = (x + p_out).astype(np.float32)
+        h2, _, s2 = na.layer_norm(x2)
+        z1 = (h2 @ blk["w1"] + blk["b1"]).astype(np.float32)
+        a1 = np.maximum(z1, 0)
+        z2 = (a1 @ blk["w2"] + blk["b2"]).astype(np.float32)
+        out = (x2 + z2).astype(np.float32)
+        cache = dict(h1=h1, s1=s1, q=q, k=k, v=v, attn=attn, ao=ao,
+                     x2=x2, h2=h2, s2=s2, z1=z1, a1=a1)
+        return out, cache
+
+    def forward(self, x_tok, zn, rng):
+        """Full forward: blocks, then the token-axis head (no pooling).
+
+        Selections consume the per-step stream in Rust module order —
+        per block q, k, v, proj, ff1, ff2, then the Tokens-contracted
+        head over the final token rows.
+        """
+        x = x_tok
+        caches, sels = [], []
+        for l, blk in enumerate(self.blocks):
+            out, c = self.forward_block(blk, x)
+            base = 6 * l
+            sel = dict(
+                q=self.select_for(c["h1"], base, zn, rng, self.ps),
+                k=self.select_for(c["h1"], base + 1, zn, rng, self.ps),
+                v=self.select_for(c["h1"], base + 2, zn, rng, self.ps),
+                p=self.select_for(c["ao"], base + 3, zn, rng, self.ps),
+                f1=self.select_for(c["h2"], base + 4, zn, rng, self.ps),
+                f2=self.select_for(c["a1"], base + 5, zn, rng, self.ps),
+            )
+            c["x"] = x
+            caches.append(c)
+            sels.append(sel)
+            x = out
+        sel_head = self.select_for(x, 6 * self.depth, zn, rng, self.ps)
+        logits = (x @ self.head + self.head_b).astype(np.float32)
+        return caches, sels, x, sel_head, logits
+
+    def lm_targets(self, tokens):
+        """Shifted targets: row (r, c) predicts chunk c+1's first token."""
+        B, ps = tokens.shape[0], self.ps
+        chunk = self.seq // ps
+        tg = -np.ones((B, ps), dtype=np.int64)
+        for c in range(ps - 1):
+            tg[:, c] = tokens[:, (c + 1) * chunk]
+        tg[tg <= 0] = -1  # PAD targets are unsupervised
+        return tg.reshape(-1)
+
+    def train_step(self, tokens, zn):
+        B, ps = self.batch, self.ps
+        x_tok = self.chunk_pool(tokens)
+        rng = Rng(self.seed ^ na.SAMPLE_STREAM).fold_in(self.step)
+        caches, sels, xtop, sel_head, logits = self.forward(x_tok, zn, rng)
+        tg = self.lm_targets(tokens)
+        sup = tg >= 0
+        counted = int(sup.sum())
+        z = logits - logits.max(axis=1, keepdims=True)
+        e = np.exp(z.astype(np.float64))
+        p = e / e.sum(axis=1, keepdims=True)
+        rows = np.arange(B * ps)
+        loss = float(-np.mean(np.log(np.maximum(
+            p[rows[sup], tg[sup]], 1e-12))))
+        dl = p.copy()
+        dl[rows[sup], tg[sup]] -= 1.0
+        dl[~sup] = 0.0
+        dlogits = (dl / counted).astype(np.float32)
+
+        grads = {}
+        norms = np.zeros(self.n_approx * B, dtype=np.float32)
+        grads["head"] = self.grad_from(xtop, dlogits, sel_head)
+        grads["head_b"] = dlogits.sum(axis=0)
+        # Tokens contraction: refreshed norms collapse per sample.
+        norms[6 * self.depth * B:] = np.sqrt(
+            (dlogits.astype(np.float64) ** 2).reshape(B, ps, -1).sum(axis=(1, 2)))
+        d = (dlogits @ self.head.T).astype(np.float32)
+        for l in range(self.depth - 1, -1, -1):
+            d = self.backward_block(self.blocks[l], caches[l], sels[l], d,
+                                    grads, norms, l)
+        self.step += 1
+        t = self.step
+        for l, blk in enumerate(self.blocks):
+            for name in ("wq", "wk", "wv", "wp", "w1", "b1", "w2", "b2"):
+                blk[name] = self.opt[f"{l}.{name}"].update(
+                    blk[name], grads[f"{l}.{name}"], self.lr, t)
+        self.head = self.opt["head"].update(self.head, grads["head"], self.lr, t)
+        self.head_b = self.opt["head_b"].update(
+            self.head_b, grads["head_b"], self.lr, t)
+        return loss, norms
+
+    def eval_logits(self, tokens):
+        """Exact forward-only per-token logits (no sampling, no tape)."""
+        x = self.chunk_pool(tokens)
+        for blk in self.blocks:
+            x, _ = self.forward_block(blk, x)
+        return (x @ self.head + self.head_b).astype(np.float32)
+
+    def eval_nll(self, token_rows):
+        """Held-out mean next-token NLL over full batches (+ padded tail),
+        mirroring `coordinator::experiment::lm_nll_sum`."""
+        n = len(token_rows)
+        total, count = 0.0, 0
+        i = 0
+        while i < n:
+            valid = min(n - i, self.batch)
+            idxs = list(range(i, i + valid)) + [n - 1] * (self.batch - valid)
+            toks = np.array([token_rows[j] for j in idxs], dtype=np.int32)
+            logits = self.eval_logits(toks).astype(np.float64)
+            tg = self.lm_targets(toks)
+            z = logits - logits.max(axis=1, keepdims=True)
+            p = np.exp(z)
+            p /= p.sum(axis=1, keepdims=True)
+            for r in range(valid):
+                for c in range(self.ps - 1):
+                    y = tg[r * self.ps + c]
+                    if y < 0:
+                        continue
+                    total -= math.log(max(p[r * self.ps + c, y], 1e-12))
+                    count += 1
+            i += self.batch
+        return total / count
+
+
+def run_corpus_toy(budget=0.3, steps=30, lr=1e-3, seed=0, data_seed=0,
+                   depth=2, sampler="wtacrs"):
+    """Mirror of native.rs `causal_lm_trains_on_the_synthetic_corpus`:
+    fresh corpus batches per step, all-ones cache."""
+    sess = CausalSession("tiny", budget, seed=seed, lr=lr, depth=depth,
+                         sampler=sampler)
+    corpus = Corpus(sess.vocab, data_seed)
+    zn = np.ones(sess.n_approx * sess.batch, dtype=np.float32)
+    losses = []
+    for step in range(steps):
+        toks = corpus.batch(sess.batch, sess.seq, step)
+        loss, _ = sess.train_step(toks, zn)
+        losses.append(loss)
+    return losses
+
+
+def run_trainer(steps=30, lr=1e-3, seed=0, data_seed=5, train_size=256,
+                budget=0.3):
+    """Mirror of native_smoke `causal_lm_learns_through_trainer`:
+    Batcher epochs over a corpus dataset with the live norm cache."""
+    import glue
+    corpus = Corpus(1024, data_seed)
+    ds = corpus.dataset(train_size, 64)
+    sess = CausalSession("tiny", budget, seed=seed, lr=lr, depth=2)
+    cache = NormCache(sess.n_approx, len(ds))
+    bat = glue.Batcher(len(ds), sess.batch, seed)
+    losses = []
+    for _ in range(steps):
+        idxs = bat.next_indices()
+        toks = np.array([ds[i] for i in idxs], dtype=np.int32)
+        zn = cache.gather(idxs)
+        loss, norms = sess.train_step(toks, zn)
+        cache.scatter(idxs, norms)
+        losses.append(loss)
+    return losses
+
+
+def run_lm(steps=60, lr=1e-3, seed=0, data_seed=5, train_size=512,
+           val_size=128, budget=0.3):
+    """Mirror of `coordinator::run_lm` (the coordinator_integration and
+    CLI scenario): train over Batcher epochs, then held-out NLL on a
+    second document split of the same corpus."""
+    import glue
+    corpus = Corpus(1024, data_seed)
+    train = corpus.dataset(train_size, 64)
+    val = corpus.dataset(val_size, 64, split=1)
+    sess = CausalSession("tiny", budget, seed=seed, lr=lr, depth=2)
+    cache = NormCache(sess.n_approx, len(train))
+    bat = glue.Batcher(len(train), sess.batch, seed)
+    losses = []
+    for _ in range(steps):
+        idxs = bat.next_indices()
+        toks = np.array([train[i] for i in idxs], dtype=np.int32)
+        zn = cache.gather(idxs)
+        loss, norms = sess.train_step(toks, zn)
+        cache.scatter(idxs, norms)
+        losses.append(loss)
+    return losses, sess.eval_nll(val)

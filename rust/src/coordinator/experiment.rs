@@ -4,11 +4,14 @@
 //! synthetic splits, runs the trainer, and returns structured results
 //! that the benches print as paper-style rows and serialize as JSON.
 
+use std::time::Instant;
+
 use crate::bail;
 use crate::data::glue::{self, TaskSpec};
-use crate::nn::ModelSpec;
+use crate::data::{Batcher, Corpus};
+use crate::nn::{Arch, ModelSpec};
 use crate::ops::{Family, MethodSpec};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, SessionConfig};
 use crate::util::error::Result;
 use crate::util::json::{self, Json};
 
@@ -150,20 +153,193 @@ pub fn run_glue(
     })
 }
 
-/// Append results to a JSON-lines file under `results/`.
-pub fn write_results(path: &str, results: &[TaskResult]) -> Result<()> {
+/// One causal-LM run's outcome (the LM counterpart of [`TaskResult`]).
+#[derive(Debug, Clone)]
+pub struct LmResult {
+    pub size: String,
+    pub method: String,
+    /// Per-step training next-token loss (nats).
+    pub losses: Vec<f32>,
+    /// Held-out mean next-token NLL after training (nats; perplexity
+    /// is `exp` of this).
+    pub eval_nll: f64,
+    pub train_seconds: f64,
+    /// Sentences (batch rows) per second of train-step time.
+    pub throughput: f64,
+    pub norm_cache_coverage: f64,
+    pub saved_bytes_per_layer: Vec<usize>,
+    pub tape_bytes: usize,
+    pub peak_saved_bytes: usize,
+}
+
+impl LmResult {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("task", json::s("lm")),
+            ("method", json::s(&self.method)),
+            ("size", json::s(&self.size)),
+            ("metric", json::s("nll")),
+            ("score", json::num(self.eval_nll)),
+            ("ppl", json::num(self.eval_nll.exp())),
+            ("steps", json::num(self.losses.len() as f64)),
+            ("train_seconds", json::num(self.train_seconds)),
+            ("throughput", json::num(self.throughput)),
+            (
+                "losses",
+                json::arr(self.losses.iter().map(|&l| json::num(l as f64))),
+            ),
+        ])
+    }
+}
+
+/// Summed next-token NLL and supervised-position count for one eval
+/// batch of per-token logits — the coordinator-side LM eval path.
+/// Targets come from the same
+/// [`lm_shift_targets`](crate::data::lm_shift_targets) rule the
+/// session's training loss uses, so the two objectives cannot drift.
+/// Only the first `valid` samples of a padded tail batch count; an
+/// out-of-vocab target (corrupted data — training would have bailed)
+/// is skipped rather than scored.
+pub fn lm_nll_sum(
+    logits: &[f32],
+    tokens: &[i32],
+    seq: usize,
+    per_sample: usize,
+    vocab: usize,
+    valid: usize,
+) -> (f64, usize) {
+    let ps = per_sample.max(1);
+    let batch = tokens.len() / seq.max(1);
+    let targets = crate::data::lm_shift_targets(tokens, batch, seq, ps);
+    let mut sum = 0.0f64;
+    let mut count = 0usize;
+    for (row, &y) in targets.iter().enumerate().take(valid * ps) {
+        if y < 0 || y as usize >= vocab {
+            continue;
+        }
+        let lrow = &logits[row * vocab..(row + 1) * vocab];
+        let maxv = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut denom = 0.0f64;
+        for &x in lrow {
+            denom += ((x - maxv) as f64).exp();
+        }
+        let p = ((lrow[y as usize] - maxv) as f64).exp() / denom;
+        sum -= p.max(1e-12).ln();
+        count += 1;
+    }
+    (sum, count)
+}
+
+/// Run one causal language-modeling experiment on a backend: open an
+/// [`Arch::CausalLm`] session, train over [`Batcher`] epochs of the
+/// synthetic [`Corpus`] with the live gradient-norm cache, then score
+/// held-out next-token NLL — §5's protocol transplanted from the
+/// pooled classifier to token-level supervision.
+pub fn run_lm(
+    backend: &dyn Backend,
+    size: &str,
+    method: &MethodSpec,
+    opts: &ExperimentOptions,
+) -> Result<LmResult> {
+    if opts.model.arch != Arch::CausalLm {
+        bail!(
+            "run_lm drives Arch::CausalLm graphs (got {}); use run_glue for \
+             classifier stacks",
+            opts.model.arch
+        );
+    }
+    let dims = backend.model_dims(size)?;
+    let mut cfg = SessionConfig::new(size, *method, dims.vocab);
+    cfg.seed = opts.train.seed;
+    cfg.lr = opts.train.lr;
+    cfg.model = opts.model;
+    let session = backend.open(&cfg)?;
+
+    let train_n = if opts.train_size > 0 { opts.train_size } else { 2048 };
+    let val_n = if opts.val_size > 0 { opts.val_size } else { 256 };
+    // Train and held-out documents are different splits of the SAME
+    // corpus: a differently-seeded Corpus would plant different class
+    // transitions — a different language — and the eval NLL would score
+    // a distribution the model never saw.
+    let corpus = Corpus::new(dims.vocab, opts.data_seed);
+    let train_ds = corpus.dataset(train_n, dims.seq_len);
+    let val_ds = corpus.dataset_split(val_n, dims.seq_len, 1);
+
+    let mut trainer = Trainer::from_session(session, train_ds.len(), opts.train.clone());
+    let mut batcher = Batcher::new(&train_ds, trainer.batch_size(), opts.train.seed);
+    let t0 = Instant::now();
+    let mut train_time = 0.0f64;
+    let mut losses = Vec::with_capacity(opts.train.max_steps);
+    for step in 0..opts.train.max_steps {
+        let batch = batcher.next_batch();
+        let ts = Instant::now();
+        let loss = trainer.train_step(&batch)?;
+        train_time += ts.elapsed().as_secs_f64();
+        if !loss.is_finite() {
+            bail!("lm loss diverged (non-finite) at step {step}");
+        }
+        losses.push(loss);
+    }
+
+    // Held-out eval: per-token logits -> shifted next-token NLL.
+    let ps = opts.model.contraction.per_sample();
+    let mut nll = 0.0f64;
+    let mut count = 0usize;
+    for (batch, valid) in Batcher::eval_batches(&val_ds, trainer.batch_size()) {
+        let logits = trainer.eval_logits(&batch.tokens)?;
+        let (s, c) = lm_nll_sum(&logits, &batch.tokens, batch.seq, ps, dims.vocab, valid);
+        nll += s;
+        count += c;
+    }
+    if count == 0 {
+        bail!("lm eval: no supervised positions in the held-out split");
+    }
+    let eval_nll = nll / count as f64;
+    let stats = trainer.tape_stats();
+    let steps = losses.len();
+    crate::log_info!(
+        "lm/{size}/{method}: eval nll {eval_nll:.4} (ppl {:.1}) after {steps} steps",
+        eval_nll.exp()
+    );
+    Ok(LmResult {
+        size: size.to_string(),
+        method: method.to_string(),
+        losses,
+        eval_nll,
+        train_seconds: t0.elapsed().as_secs_f64(),
+        throughput: steps as f64 * trainer.batch_size() as f64 / train_time.max(1e-9),
+        norm_cache_coverage: trainer.norm_cache.coverage(),
+        saved_bytes_per_layer: stats.per_layer,
+        tape_bytes: stats.total,
+        peak_saved_bytes: trainer.peak_saved_bytes(),
+    })
+}
+
+/// Append pre-serialized rows to a JSON-lines file, creating parents.
+fn append_jsonl(path: &str, rows: Vec<Json>) -> Result<()> {
     if let Some(dir) = std::path::Path::new(path).parent() {
         std::fs::create_dir_all(dir)?;
     }
     let mut body = String::new();
-    for r in results {
-        body.push_str(&json::write(&r.to_json()));
+    for r in &rows {
+        body.push_str(&json::write(r));
         body.push('\n');
     }
     use std::io::Write;
     let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
     f.write_all(body.as_bytes())?;
     Ok(())
+}
+
+/// Append GLUE results to a JSON-lines file under `results/`.
+pub fn write_results(path: &str, results: &[TaskResult]) -> Result<()> {
+    append_jsonl(path, results.iter().map(TaskResult::to_json).collect())
+}
+
+/// Append causal-LM results to a JSON-lines file (`wtacrs train
+/// --arch causal-lm --out ...`).
+pub fn write_lm_results(path: &str, results: &[LmResult]) -> Result<()> {
+    append_jsonl(path, results.iter().map(LmResult::to_json).collect())
 }
 
 #[cfg(test)]
@@ -191,6 +367,26 @@ mod tests {
     fn methods_cover_paper_table1() {
         for m in ["full", "lora", "lst", "full-wtacrs30", "lora-wtacrs30"] {
             assert!(METHODS.contains(&m));
+        }
+    }
+
+    #[test]
+    fn lm_result_serializes_core_fields() {
+        let r = LmResult {
+            size: "tiny".into(),
+            method: "full-wtacrs30".into(),
+            losses: vec![1.5, 1.0],
+            eval_nll: 2.0,
+            train_seconds: 0.1,
+            throughput: 10.0,
+            norm_cache_coverage: 1.0,
+            saved_bytes_per_layer: vec![],
+            tape_bytes: 0,
+            peak_saved_bytes: 0,
+        };
+        let s = json::write(&r.to_json());
+        for needle in ["\"task\"", "\"lm\"", "\"nll\"", "\"ppl\"", "full-wtacrs30"] {
+            assert!(s.contains(needle), "{needle} missing from {s}");
         }
     }
 }

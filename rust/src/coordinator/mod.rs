@@ -9,6 +9,6 @@ pub mod normcache;
 pub mod sweep;
 pub mod trainer;
 
-pub use experiment::{run_glue, ExperimentOptions, TaskResult};
+pub use experiment::{run_glue, run_lm, ExperimentOptions, LmResult, TaskResult};
 pub use normcache::NormCache;
 pub use trainer::{TrainOptions, TrainReport, Trainer};

@@ -166,6 +166,14 @@ impl Trainer {
         self.peak_saved_bytes
     }
 
+    /// Forward-only logits for one token batch — the raw eval surface
+    /// the causal-LM NLL scorer
+    /// ([`lm_nll_sum`](super::experiment::lm_nll_sum)) consumes, where
+    /// classification metrics do not apply.
+    pub fn eval_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>> {
+        self.session.eval_logits(tokens)
+    }
+
     /// Run forward-only evaluation over a dataset; returns the metric.
     pub fn evaluate(&mut self, ds: &Dataset, metric: MetricKind) -> Result<f64> {
         let n_out = self.session.n_out();

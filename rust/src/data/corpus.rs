@@ -8,6 +8,8 @@
 
 use crate::util::rng::Rng;
 
+use super::glue::{Dataset, Example, Label};
+
 #[derive(Debug)]
 pub struct Corpus {
     pub vocab: usize,
@@ -84,6 +86,65 @@ impl Corpus {
     pub fn n_classes(&self) -> usize {
         self.n_classes
     }
+
+    /// Materialize `n` documents as a [`Dataset`] so the GLUE-shaped
+    /// front-end — [`Batcher`](crate::data::Batcher) epochs, the
+    /// gradient-norm cache keyed by sample index — drives causal-LM
+    /// training unchanged.  Labels are `Class(0)` placeholders: LM
+    /// supervision is the shifted token stream itself, derived by the
+    /// session (mirrored by `python/mirror/nn_causal.py`).
+    ///
+    /// Equivalent to [`Self::dataset_split`] with split tag 0.
+    pub fn dataset(&self, n: usize, seq: usize) -> Dataset {
+        self.dataset_split(n, seq, 0)
+    }
+
+    /// Like [`Self::dataset`], but drawing the document stream for
+    /// split tag `split` — disjoint streams from the *same* planted
+    /// language.  Train/val splits must share the seeded transition
+    /// structure (a differently-seeded `Corpus` is a different
+    /// language), so held-out evaluation uses another split of one
+    /// corpus, never a second corpus.
+    pub fn dataset_split(&self, n: usize, seq: usize, split: u64) -> Dataset {
+        let mut rng = Rng::new(self.seed ^ 0xD0C5).fold_in(split);
+        let examples = (0..n)
+            .map(|_| Example {
+                tokens: self.sample_sequence(seq, &mut rng),
+                label: Label::Class(0),
+            })
+            .collect();
+        Dataset { examples, n_out: self.vocab, seq_len: seq }
+    }
+}
+
+/// Shifted next-token targets for a causal-LM batch over chunked token
+/// rows: the target of token row `(sample, c)` is the first raw token
+/// of the sample's chunk `c + 1`; each sample's last chunk and PAD
+/// targets are unsupervised (`-1`).  `tokens` is row-major
+/// `(batch, seq)` and `seq` must be a multiple of `per_sample` (the
+/// model builder validates this).
+///
+/// This is the single encoding of the shift rule — the session's
+/// training loss and the coordinator's eval NLL both call it, so the
+/// two can never drift apart.
+pub fn lm_shift_targets(
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+    per_sample: usize,
+) -> Vec<i32> {
+    let ps = per_sample.max(1);
+    let chunk = seq / ps;
+    let mut targets = vec![-1i32; batch * ps];
+    for r in 0..batch {
+        for c in 0..ps.saturating_sub(1) {
+            let y = tokens[r * seq + (c + 1) * chunk];
+            if y > 0 {
+                targets[r * ps + c] = y;
+            }
+        }
+    }
+    targets
 }
 
 #[cfg(test)]
@@ -118,6 +179,37 @@ mod tests {
         let avg: f64 = succ.values().map(|s| s.len() as f64).sum::<f64>()
             / succ.len() as f64;
         assert!(avg < 200.0, "no structure: avg distinct successors {avg}");
+    }
+
+    #[test]
+    fn dataset_adapter_is_deterministic_and_batcher_ready() {
+        let c = Corpus::new(1024, 3);
+        let a = c.dataset(16, 32);
+        let b = c.dataset(16, 32);
+        assert_eq!(a.len(), 16);
+        assert_eq!(a.seq_len, 32);
+        assert_eq!(a.n_out, 1024);
+        for (x, y) in a.examples.iter().zip(&b.examples) {
+            assert_eq!(x.tokens, y.tokens);
+            assert_eq!(x.tokens.len(), 32);
+            assert!(x.tokens.iter().all(|&t| t >= 4 && (t as usize) < 1024));
+        }
+        // Split tags draw different documents from the same language.
+        let v = c.dataset_split(16, 32, 1);
+        assert!(
+            a.examples.iter().zip(&v.examples).any(|(x, y)| x.tokens != y.tokens),
+            "split 1 must not replay split 0's documents"
+        );
+    }
+
+    #[test]
+    fn shift_targets_skip_last_chunk_and_pad() {
+        // 2 samples x seq 8 in 4 chunks of 2: target of chunk c is the
+        // first token of chunk c+1; chunk 3 has no successor, and a PAD
+        // leading token (sample 1, chunk 1) is unsupervised.
+        let tokens = [5, 6, 7, 8, 9, 10, 11, 12, 20, 21, 0, 23, 24, 25, 26, 27];
+        let t = lm_shift_targets(&tokens, 2, 8, 4);
+        assert_eq!(t, vec![7, 9, 11, -1, -1, 24, 26, -1]);
     }
 
     #[test]

@@ -5,6 +5,6 @@ pub mod glue;
 pub mod tokenizer;
 
 pub use batcher::{Batch, Batcher};
-pub use corpus::Corpus;
+pub use corpus::{lm_shift_targets, Corpus};
 pub use glue::{Dataset, Example, Label, TaskSpec, TASKS};
 pub use tokenizer::Tokenizer;

@@ -47,6 +47,12 @@
 //!    let spec = ModelSpec { depth: 2, arch: Arch::Transformer, heads: 4,
 //!                           contraction: Contraction::Tokens { per_sample: 4 },
 //!                           ..ModelSpec::default() };  // n_approx == 13
+//!
+//!    // ... and `arch: Arch::CausalLm` masks every attention core
+//!    // autoregressively and ends in the token-axis `nn::LmHead` (a
+//!    // sampled linear under Tokens emitting per-token vocab logits,
+//!    // no pooling) — shifted next-token supervision over the token
+//!    // axis, trained from the synthetic LM corpus.
 //!    ```
 //!
 //!    or hand-rolled: `Sequential::new().push(MeanPoolEmbed::new(..)?)
@@ -59,7 +65,10 @@
 //!    row (its backward shares a neighboring tensor), attention weights
 //!    are saved exactly, and the MHA keeps *one* input copy from which
 //!    Q/K/V are recomputed in backward — measured whole-tape ratio
-//!    ~0.47x at budget 30 versus the MLP stack's ~0.33x.
+//!    ~0.47x at budget 30 versus the MLP stack's ~0.33x (the causal-LM
+//!    stack lands at ~0.46x: its token-axis head contracts all token
+//!    rows).  Masked softmax is total: `-inf` scores get probability 0
+//!    and a fully-masked row is a zero row, never NaN.
 //! 3. **[`runtime`] / [`coordinator`] — execution and training.**
 //!    [`runtime::NativeBackend`] (default) drives the module graph
 //!    pure-Rust: [`runtime::SessionConfig`] carries the
@@ -91,6 +100,9 @@
 //! cargo run --release -- train --task sst2 --method full-wtacrs30 \
 //!     --arch transformer --depth 2 --heads 4 \
 //!     --tokens-per-sample 4                  # pre-norm attention stack
+//! cargo run --release -- train --method full-wtacrs30 \
+//!     --arch causal-lm --depth 2 --heads 4 \
+//!     --tokens-per-sample 4                  # causal LM on the corpus
 //! ```
 //!
 //! [`memsim`] reproduces the paper's analytic memory tables;

@@ -8,17 +8,22 @@
 //!   the input [`MultiHeadAttention`] keeps anyway) instead of being
 //!   duplicated.  Standalone, the module keeps its normalized output.
 //! * [`Softmax`] — row-wise softmax saving its output, the only thing
-//!   the exact softmax backward needs.
+//!   the exact softmax backward needs.  Masked-softmax semantics: `-inf`
+//!   entries get probability 0 and a fully-masked (all `-inf`) row is a
+//!   *zero* row, never NaN — see [`softmax_rows`].
 //! * [`ScaledDotProductAttention`] — per-head attention over each
 //!   sample's token rows, as a standalone module over a packed
-//!   `[Q | K | V]` input.
+//!   `[Q | K | V]` input; [`ScaledDotProductAttention::causal`] applies
+//!   the autoregressive mask before the score softmax.
 //! * [`MultiHeadAttention`] — four sampled [`Linear`]s (q/k/v/proj,
 //!   each with its own norm-cache layer slot) around the attention
 //!   core.  It saves its input *once* and recomputes Q/K/V in backward
 //!   (three cheap GEMMs), instead of keeping three full activations
 //!   alive; the attention weights are saved exactly — which is why the
 //!   attention tape ratio is honestly weaker than the MLP's (~0.46x vs
-//!   ~0.33x at budget 30).
+//!   ~0.33x at budget 30).  [`MultiHeadAttention::with_causal`] turns on
+//!   the autoregressive mask (the causal-LM stack); only the forward
+//!   needs the flag, because masked weights are saved as exact zeros.
 //! * [`TransformerBlock`] — the pre-norm residual block
 //!   `x + MHA(LN(x))` → `x₂ + FFN(LN(x₂))`, orchestrating the
 //!   LayerNorm tensor-sharing described above.
@@ -176,12 +181,23 @@ impl Module for LayerNorm {
 pub struct Softmax;
 
 /// Row-wise softmax of `x` (max-subtracted, f64 accumulation).
+///
+/// Masked-softmax semantics: a `-inf` entry (a masked position) gets
+/// probability 0, and a *fully* masked row — every entry `-inf`, e.g. a
+/// row a causal mask excludes entirely — is defined to produce a zero
+/// row rather than the `exp(-inf - (-inf)) = 0/0` NaNs of the naive
+/// formula.  A zero row is the limit of "no support": it contributes
+/// nothing downstream and its exact backward (`dx = y ⊙ (…)`) is
+/// identically zero, so no gradient leaks through masked rows.
 pub(crate) fn softmax_rows(x: &Mat) -> Mat {
     let (n, d) = (x.rows, x.cols);
     let mut out = Mat::zeros(n, d);
     for r in 0..n {
         let row = x.row(r);
         let maxv = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        if maxv == f32::NEG_INFINITY {
+            continue; // fully-masked row: defined as all-zero
+        }
         let mut denom = 0.0f64;
         for &v in row {
             denom += ((v - maxv) as f64).exp();
@@ -246,12 +262,19 @@ impl Module for Softmax {
 /// `per_sample` token rows.  Returns `(out, attn)`: `out` is `(n, d)`
 /// like `q`, `attn` holds the softmaxed scores with row layout
 /// `(sample·heads + head)·T + query` and `T` columns.
+///
+/// `causal` applies the autoregressive mask before the score softmax:
+/// query `tq` sees keys `tk <= tq` only (future scores are `-inf`, so
+/// [`softmax_rows`]'s masked-softmax semantics zero them out).  The
+/// backward needs no mask of its own — masked attention weights are
+/// exactly zero, which annihilates every gradient path through them.
 pub(crate) fn sdpa_forward(
     q: &Mat,
     k: &Mat,
     v: &Mat,
     heads: usize,
     per_sample: usize,
+    causal: bool,
 ) -> (Mat, Mat) {
     let (n, d, t) = (q.rows, q.cols, per_sample);
     debug_assert!(t > 0 && heads > 0 && n % t == 0 && d % heads == 0);
@@ -268,6 +291,10 @@ pub(crate) fn sdpa_forward(
             for tq in 0..t {
                 let qrow = &q.row(s * t + tq)[c0..c0 + dh];
                 for tk in 0..t {
+                    if causal && tk > tq {
+                        scores.data[tk] = f32::NEG_INFINITY;
+                        continue;
+                    }
                     let krow = &k.row(s * t + tk)[c0..c0 + dh];
                     let dot: f64 = qrow
                         .iter()
@@ -397,6 +424,7 @@ fn pack3(a: &Mat, b: &Mat, c: &Mat) -> Mat {
 pub struct ScaledDotProductAttention {
     heads: usize,
     per_sample: usize,
+    causal: bool,
 }
 
 impl ScaledDotProductAttention {
@@ -404,7 +432,14 @@ impl ScaledDotProductAttention {
         if heads == 0 || per_sample == 0 {
             bail!("attention: heads and per_sample must be >= 1");
         }
-        Ok(ScaledDotProductAttention { heads, per_sample })
+        Ok(ScaledDotProductAttention { heads, per_sample, causal: false })
+    }
+
+    /// Causally-masked variant: query `t` attends to keys `0..=t` only.
+    pub fn causal(heads: usize, per_sample: usize) -> Result<Self> {
+        let mut a = Self::new(heads, per_sample)?;
+        a.causal = true;
+        Ok(a)
     }
 
     fn split(&self, x: &Mat) -> Result<(Mat, Mat, Mat)> {
@@ -433,7 +468,8 @@ impl Module for ScaledDotProductAttention {
 
     fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
         let (q, k, v) = self.split(&x)?;
-        let (out, attn) = sdpa_forward(&q, &k, &v, self.heads, self.per_sample);
+        let (out, attn) =
+            sdpa_forward(&q, &k, &v, self.heads, self.per_sample, self.causal);
         if let Some(tape) = ctx.tape.as_deref_mut() {
             tape.push(self.name(), Saved::Acts(x));
             tape.push(self.name(), Saved::Acts(attn));
@@ -475,6 +511,7 @@ pub struct MultiHeadAttention {
     proj: Linear,
     heads: usize,
     per_sample: usize,
+    causal: bool,
 }
 
 impl MultiHeadAttention {
@@ -508,7 +545,18 @@ impl MultiHeadAttention {
             proj: Linear::new(wp, op, base + 3, true),
             heads,
             per_sample,
+            causal: false,
         })
+    }
+
+    /// Toggle the autoregressive mask (builder style): with `causal`
+    /// set, each query attends to its own and earlier token positions
+    /// only.  Only the forward needs the flag — masked attention
+    /// weights are saved as exact zeros, so the shared backward flows
+    /// no gradient through them.
+    pub fn with_causal(mut self, causal: bool) -> Self {
+        self.causal = causal;
+        self
     }
 
     /// Width the module operates at.
@@ -520,7 +568,8 @@ impl MultiHeadAttention {
         let qm = self.q.forward(x.clone(), ctx)?;
         let km = self.k.forward(x.clone(), ctx)?;
         let vm = self.v.forward(x.clone(), ctx)?;
-        let (ao, attn) = sdpa_forward(&qm, &km, &vm, self.heads, self.per_sample);
+        let (ao, attn) =
+            sdpa_forward(&qm, &km, &vm, self.heads, self.per_sample, self.causal);
         if let Some(tape) = ctx.tape.as_deref_mut() {
             tape.push(self.name(), Saved::Acts(attn));
         }
@@ -814,6 +863,123 @@ mod tests {
         for r in 0..dx.rows {
             let s: f64 = dx.row(r).iter().map(|&v| v as f64).sum();
             assert!(s.abs() < 1e-5, "row {r} gradient sum {s}");
+        }
+    }
+
+    #[test]
+    fn softmax_handles_masked_and_fully_masked_rows() {
+        // Regression: exp(-inf - (-inf)) used to turn a fully-masked row
+        // into NaNs.  Masked entries must get probability 0 and a fully
+        // masked row must come back as an exact zero row — forward and
+        // backward.
+        let ninf = f32::NEG_INFINITY;
+        let x = Mat {
+            rows: 2,
+            cols: 3,
+            data: vec![ninf, ninf, ninf, 0.0, ninf, 1.0],
+        };
+        let y = softmax_rows(&x);
+        assert!(y.data.iter().all(|v| v.is_finite()), "{:?}", y.data);
+        assert_eq!(&y.data[..3], &[0.0, 0.0, 0.0], "fully-masked row is zero");
+        assert_eq!(y.at(1, 1), 0.0, "masked position has zero probability");
+        let s: f64 = y.row(1).iter().map(|&v| v as f64).sum();
+        assert!((s - 1.0).abs() < 1e-6, "unmasked row still normalizes: {s}");
+
+        // Through the module: backward from the saved output must flow
+        // zero gradient to every masked position (and stay finite).
+        let mut tape = Tape::new();
+        let mut fctx = train_ctx(&mut tape, &[], 0, 0);
+        Softmax.forward(x, &mut fctx).unwrap();
+        let mut sm = Softmax;
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut [], slots: 0 };
+        let dy = Mat { rows: 2, cols: 3, data: vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0] };
+        let dx = sm.backward(dy, &mut bctx).unwrap();
+        assert!(dx.data.iter().all(|v| v.is_finite()), "{:?}", dx.data);
+        assert_eq!(&dx.data[..3], &[0.0, 0.0, 0.0]);
+        assert_eq!(dx.at(1, 1), 0.0);
+    }
+
+    #[test]
+    fn causal_sdpa_masks_future_positions() {
+        let (heads, t, d) = (2usize, 4usize, 8usize);
+        let b = 2usize;
+        let n = b * t;
+        let mut rng = Rng::new(11);
+        let x = Mat::randn(n, 3 * d, &mut rng);
+        let sdpa = ScaledDotProductAttention::causal(heads, t).unwrap();
+        let mut tape = Tape::new();
+        let mut fctx = train_ctx(&mut tape, &[], 0, 0);
+        let y = sdpa.forward(x.clone(), &mut fctx).unwrap();
+        assert!(y.data.iter().all(|v| v.is_finite()));
+        // The saved attention weights are strictly lower-triangular plus
+        // the diagonal: future keys carry exactly zero weight, rows
+        // still normalize, and the first query attends only to itself.
+        let Saved::Acts(attn) = tape.pop("sdpa").unwrap() else { panic!() };
+        assert_eq!((attn.rows, attn.cols), (b * heads * t, t));
+        for r in 0..attn.rows {
+            let tq = r % t;
+            let row = attn.row(r);
+            for (tk, &a) in row.iter().enumerate() {
+                assert!(a.is_finite());
+                if tk > tq {
+                    assert_eq!(a, 0.0, "attn[{r}][{tk}] leaks the future");
+                }
+            }
+            let s: f64 = row.iter().map(|&v| v as f64).sum();
+            assert!((s - 1.0).abs() < 1e-6, "row {r} sums to {s}");
+            if tq == 0 {
+                assert!((row[0] - 1.0).abs() < 1e-6);
+            }
+        }
+        // Query 0's output is exactly its own V row.
+        for r in (0..n).step_by(t) {
+            for c in 0..d {
+                assert!((y.at(r, c) - x.at(r, 2 * d + c)).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn causal_sdpa_no_gradient_reaches_future_keys_and_values() {
+        // Mask respected in backward: probing only the token-0 outputs
+        // must leave zero gradient on every later token's K and V (and
+        // on token 0's own K/Q, whose one-hot softmax row is flat to
+        // first order).
+        let (heads, t, d) = (2usize, 4usize, 8usize);
+        let n = 2 * t;
+        let mut rng = Rng::new(12);
+        let x = Mat::randn(n, 3 * d, &mut rng);
+        let sdpa = ScaledDotProductAttention::causal(heads, t).unwrap();
+        let mut tape = Tape::new();
+        let mut fctx = train_ctx(&mut tape, &[], 0, 0);
+        sdpa.forward(x, &mut fctx).unwrap();
+        let mut m = sdpa;
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut [], slots: 0 };
+        // dy nonzero only on each sample's first token row.
+        let dy = Mat::from_fn(n, d, |r, c| {
+            if r % t == 0 {
+                (1 + c) as f32 * 0.1
+            } else {
+                0.0
+            }
+        });
+        let dx = m.backward(dy, &mut bctx).unwrap();
+        assert!(tape.is_empty());
+        assert!(dx.data.iter().all(|v| v.is_finite()));
+        for r in 0..n {
+            let tq = r % t;
+            if tq == 0 {
+                // Token 0's V receives the probe verbatim (attn weight 1).
+                for c in 0..d {
+                    assert!((dx.at(r, 2 * d + c) - (1 + c) as f32 * 0.1).abs() < 1e-6);
+                }
+            } else {
+                // Future tokens: no gradient through K or V.
+                for c in 0..d {
+                    assert_eq!(dx.at(r, d + c), 0.0, "dK row {r} col {c}");
+                    assert_eq!(dx.at(r, 2 * d + c), 0.0, "dV row {r} col {c}");
+                }
+            }
         }
     }
 

@@ -23,7 +23,7 @@ use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 use super::attention::{MultiHeadAttention, TransformerBlock};
-use super::layers::{Bias, Linear, LoraAdapter, MeanPool, MeanPoolEmbed, Relu};
+use super::layers::{Bias, Linear, LmHead, LoraAdapter, MeanPool, MeanPoolEmbed, Relu};
 use super::sequential::Sequential;
 
 /// LoRA adapter rank.
@@ -42,8 +42,15 @@ pub enum Arch {
     Mlp,
     /// `depth` pre-norm residual transformer blocks — multi-head
     /// attention (q/k/v/proj as four sampled linears) plus a sampled
-    /// FFN, attention running within each sample's token rows.
+    /// FFN, attention running within each sample's token rows — into a
+    /// mean-pool and a `Rows`-contracted classifier head.
     Transformer,
+    /// The [`Arch::Transformer`] trunk with the autoregressive mask on
+    /// every attention core and a token-axis [`LmHead`] (a sampled
+    /// linear under `Contraction::Tokens` emitting per-token vocabulary
+    /// logits — no pooling): the causal language-modeling workload with
+    /// shifted next-token supervision.
+    CausalLm,
 }
 
 impl std::fmt::Display for Arch {
@@ -51,6 +58,7 @@ impl std::fmt::Display for Arch {
         f.write_str(match self {
             Arch::Mlp => "mlp",
             Arch::Transformer => "transformer",
+            Arch::CausalLm => "causal-lm",
         })
     }
 }
@@ -61,7 +69,10 @@ impl std::str::FromStr for Arch {
         match s {
             "mlp" => Ok(Arch::Mlp),
             "transformer" => Ok(Arch::Transformer),
-            other => Err(crate::anyhow!("unknown arch {other:?} (mlp|transformer)")),
+            "causal-lm" | "causal_lm" => Ok(Arch::CausalLm),
+            other => Err(crate::anyhow!(
+                "unknown arch {other:?} (mlp|transformer|causal-lm)"
+            )),
         }
     }
 }
@@ -72,7 +83,7 @@ impl std::str::FromStr for Arch {
 pub struct ModelSpec {
     /// Trunk depth: sampled linears ([`Arch::Mlp`]; `0` = the classic
     /// two-hidden-layer family graphs) or transformer blocks
-    /// ([`Arch::Transformer`]; must be `>= 1`).
+    /// ([`Arch::Transformer`] / [`Arch::CausalLm`]; must be `>= 1`).
     pub depth: usize,
     /// Trunk hidden width — the MLP trunk width, or the transformer
     /// FFN width (`0` = the size table's d_ff).
@@ -81,7 +92,10 @@ pub struct ModelSpec {
     pub contraction: Contraction,
     /// Macro architecture of the trunk.
     pub arch: Arch,
-    /// Attention heads (`Arch::Transformer` only; 0 = [`DEFAULT_HEADS`]).
+    /// Attention heads (`Arch::Transformer` / [`Arch::CausalLm`]; 0 =
+    /// [`DEFAULT_HEADS`]).  Must divide the model width — validated
+    /// with a named error at build time, never a shape panic inside the
+    /// attention core.
     pub heads: usize,
 }
 
@@ -138,11 +152,12 @@ impl ModelBuilder {
         if ps == 0 {
             bail!("Tokens {{ per_sample: 0 }} is not a valid contraction");
         }
-        if self.spec.arch == Arch::Transformer {
+        if matches!(self.spec.arch, Arch::Transformer | Arch::CausalLm) {
             if self.dims.seq % ps != 0 {
                 bail!(
-                    "transformer stack: seq {} not divisible into {ps} token \
+                    "{} stack: seq {} not divisible into {ps} token \
                      chunks per sample",
+                    self.spec.arch,
                     self.dims.seq
                 );
             }
@@ -311,35 +326,51 @@ impl ModelBuilder {
         Ok(BuiltModel { graph, n_approx })
     }
 
-    /// The pre-norm transformer stack (`Arch::Transformer`): `depth`
-    /// residual blocks of multi-head attention (q/k/v/proj as four
-    /// sampled linears over batch×token rows) plus a sampled FFN, then
-    /// mean-pool and a `Rows`-contracted sampled head.  6 norm-cache
-    /// layer slots per block, plus one for the head.
+    /// The pre-norm transformer stack (`Arch::Transformer` and
+    /// `Arch::CausalLm`): `depth` residual blocks of multi-head
+    /// attention (q/k/v/proj as four sampled linears over batch×token
+    /// rows) plus a sampled FFN.  `Transformer` pools the token rows
+    /// and classifies with a `Rows`-contracted sampled head;
+    /// `CausalLm` masks every attention core causally and ends in a
+    /// token-axis [`LmHead`] (sampled under the trunk's `Tokens`
+    /// contraction, per-token logits, no pooling).  6 norm-cache layer
+    /// slots per block, plus one for whichever head.
     fn build_transformer(&self, rng: &mut Rng) -> Result<BuiltModel> {
         let StackDims { vocab, seq, d_model: d, d_ff, n_out } = self.dims;
+        let arch = self.spec.arch;
+        let causal = arch == Arch::CausalLm;
         if self.method.family != Family::Full {
             bail!(
-                "transformer arch supports the full family only for now \
+                "{arch} arch supports the full family only for now \
                  (got {}); lora/lst adapters over attention are future work",
                 self.method.family
             );
         }
         let depth = self.spec.depth;
         if depth == 0 {
-            bail!("transformer arch needs depth >= 1 (residual blocks)");
+            bail!("{arch} arch needs depth >= 1 (residual blocks)");
         }
         let ps = self.spec.contraction.per_sample();
+        if causal && ps < 2 {
+            bail!(
+                "causal-lm stack: Tokens {{ per_sample: {ps} }} leaves no next \
+                 token to predict; pass --tokens-per-sample >= 2"
+            );
+        }
         let heads = if self.spec.heads > 0 { self.spec.heads } else { DEFAULT_HEADS };
         if d % heads != 0 {
-            bail!("d_model {d} not divisible into {heads} heads");
+            bail!(
+                "{arch} stack: {heads} heads do not divide d_model {d} \
+                 (pass --heads to a divisor of the model width)"
+            );
         }
         let f = if self.spec.width > 0 { self.spec.width } else { d_ff };
         let op = SampledLinear::new(self.method.sampler, self.spec.contraction);
         let head_op = SampledLinear::new(self.method.sampler, Contraction::Rows);
 
         // Draw order: embed, per block (wq, wk, wv, wproj, ff1, ff2),
-        // head — mirrored by python/mirror/nn_attention.py.
+        // head — mirrored by python/mirror/nn_attention.py (pooled) and
+        // python/mirror/nn_causal.py (causal).
         let embed = Mat::randn(vocab, d, rng);
         let attn_scale = (1.0 / d as f64).sqrt() as f32;
         let ff1_scale = (2.0 / d as f64).sqrt() as f32;
@@ -353,7 +384,8 @@ impl ModelBuilder {
             let wp = Mat::randn(d, d, rng).scale(attn_scale);
             let w1 = Mat::randn(d, f, rng).scale(ff1_scale);
             let w2 = Mat::randn(f, d, rng).scale(ff2_scale);
-            let mha = MultiHeadAttention::new([wq, wk, wv, wp], op, base, heads, ps)?;
+            let mha = MultiHeadAttention::new([wq, wk, wv, wp], op, base, heads, ps)?
+                .with_causal(causal);
             let ffn = Sequential::new()
                 .push(Linear::new(w1, op, base + 4, true))
                 .push(Bias::new(f))
@@ -363,10 +395,17 @@ impl ModelBuilder {
             graph = graph.push(TransformerBlock::new(mha, ffn));
         }
         let head = Mat::randn(d, n_out, rng).scale((1.0 / d as f64).sqrt() as f32);
-        let graph = graph
-            .push(MeanPool::new(ps)?)
-            .push(Linear::new(head, head_op, depth * 6, true))
-            .push(Bias::new(n_out));
+        let graph = if causal {
+            // Token-axis LM head: per-token logits straight off the
+            // token rows, sampled under the same Tokens contraction as
+            // the trunk (cache slot depth*6 broadcasts per sample).
+            graph.push(LmHead::new(head, op, depth * 6))
+        } else {
+            graph
+                .push(MeanPool::new(ps)?)
+                .push(Linear::new(head, head_op, depth * 6, true))
+                .push(Bias::new(n_out))
+        };
         let n_approx = graph.n_approx();
         Ok(BuiltModel { graph, n_approx })
     }
@@ -484,10 +523,15 @@ mod tests {
 
     #[test]
     fn arch_parses_and_round_trips() {
-        for (s, a) in [("mlp", Arch::Mlp), ("transformer", Arch::Transformer)] {
+        for (s, a) in [
+            ("mlp", Arch::Mlp),
+            ("transformer", Arch::Transformer),
+            ("causal-lm", Arch::CausalLm),
+        ] {
             assert_eq!(s.parse::<Arch>().unwrap(), a);
             assert_eq!(a.to_string(), s);
         }
+        assert_eq!("causal_lm".parse::<Arch>().unwrap(), Arch::CausalLm);
         assert!("mamba".parse::<Arch>().is_err());
         assert_eq!(ModelSpec::default().arch, Arch::Mlp);
     }
@@ -504,6 +548,45 @@ mod tests {
             assert_eq!(built.n_approx, 6 * depth + 1, "depth {depth}");
             assert_eq!(built.graph.n_params(), 8 * depth + 2, "depth {depth}");
         }
+    }
+
+    fn lm_spec(depth: usize, heads: usize, per_sample: usize) -> ModelSpec {
+        ModelSpec { arch: Arch::CausalLm, ..tf_spec(depth, heads, per_sample) }
+    }
+
+    #[test]
+    fn causal_lm_stack_counts() {
+        // Same trunk as the transformer; the head is a token-axis
+        // LmHead (one sampled linear + bias, no MeanPool), so the
+        // approx-layer and parameter counts match the pooled stack.
+        for depth in [1, 2] {
+            let b = ModelBuilder::new(dims(), m("full-wtacrs30"), lm_spec(depth, 4, 4));
+            let built = b.build(&mut Rng::new(0)).unwrap();
+            assert_eq!(built.n_approx, 6 * depth + 1, "depth {depth}");
+            assert_eq!(built.graph.n_params(), 8 * depth + 2, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn causal_lm_rejects_bad_specs() {
+        // per_sample 1 leaves nothing to shift onto.
+        let e = ModelBuilder::new(dims(), m("full-wtacrs30"), lm_spec(1, 4, 1))
+            .build(&mut Rng::new(0))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("next") && e.contains("per_sample"), "{e}");
+        // heads must divide the width, same as the pooled stack.
+        let e = ModelBuilder::new(dims(), m("full-wtacrs30"), lm_spec(1, 3, 4))
+            .build(&mut Rng::new(0))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("heads") && e.contains("divide"), "{e}");
+        // full family only, like the transformer.
+        let e = ModelBuilder::new(dims(), m("lora-wtacrs30"), lm_spec(1, 4, 4))
+            .build(&mut Rng::new(0))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("full family"), "{e}");
     }
 
     #[test]

@@ -160,7 +160,7 @@ impl Module for Linear {
     fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
         if ctx.training() {
             let zn = ctx.layer_norms(self.layer)?;
-            let (z, sctx) = self.op.forward(&x, &self.p.w, zn, &mut ctx.rng);
+            let (z, sctx) = self.op.forward(&x, &self.p.w, zn, &mut ctx.rng)?;
             if let Some(tape) = ctx.tape.as_deref_mut() {
                 tape.push(self.name(), Saved::Linear { layer: self.layer, ctx: sctx });
             }
@@ -322,7 +322,7 @@ impl Module for LoraAdapter {
         let xa = x.matmul(&self.a.w);
         if ctx.training() {
             let zn = ctx.layer_norms(self.layer)?;
-            let (adj, sctx) = self.op.forward(&xa, &self.b.w, zn, &mut ctx.rng);
+            let (adj, sctx) = self.op.forward(&xa, &self.b.w, zn, &mut ctx.rng)?;
             z.add_assign(&adj);
             if let Some(tape) = ctx.tape.as_deref_mut() {
                 tape.push(self.name(), Saved::Linear { layer: self.layer, ctx: sctx });
@@ -434,6 +434,76 @@ impl Module for MeanPool {
 
     fn visit_params(&self, _f: &mut dyn FnMut(&Param)) {}
     fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
+}
+
+/// Token-axis language-model head: one sampled [`Linear`] applied to
+/// every token row (producing per-token vocabulary logits) plus a
+/// trainable bias row — *no* pooling, because causal-LM supervision is
+/// per token.
+///
+/// The linear's weight-gradient GEMM contracts over `batch × seq`
+/// token rows, so the op should run under
+/// [`Contraction::Tokens`](crate::ops::Contraction) with the trunk's
+/// `per_sample`; it claims one norm-cache layer slot like any other
+/// op-run linear.
+#[derive(Debug, Clone)]
+pub struct LmHead {
+    lin: Linear,
+    bias: Bias,
+}
+
+impl LmHead {
+    /// `w` is `(d_model, vocab)`; `layer` is the head's norm-cache slot.
+    pub fn new(w: Mat, op: SampledLinear, layer: usize) -> Self {
+        let n_out = w.cols;
+        LmHead { lin: Linear::new(w, op, layer, true), bias: Bias::new(n_out) }
+    }
+
+    fn forward_inner(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        let h = self.lin.forward(x, ctx)?;
+        self.bias.forward(h, ctx)
+    }
+
+    fn backward_inner(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        let d = self.bias.backward(dy, ctx)?;
+        self.lin.backward(d, ctx)
+    }
+}
+
+impl Module for LmHead {
+    fn name(&self) -> &'static str {
+        "lm_head"
+    }
+
+    fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        if let Some(t) = ctx.tape.as_deref_mut() {
+            t.enter(self.name());
+        }
+        let r = self.forward_inner(x, ctx);
+        if let Some(t) = ctx.tape.as_deref_mut() {
+            t.exit();
+        }
+        r
+    }
+
+    fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        ctx.tape.enter(self.name());
+        let r = self.backward_inner(dy, ctx);
+        ctx.tape.exit();
+        r
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&Param)) {
+        self.lin.visit_params(f);
+        self.bias.visit_params(f);
+    }
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        self.lin.visit_params_mut(f);
+        self.bias.visit_params_mut(f);
+    }
+    fn n_approx(&self) -> usize {
+        1
+    }
 }
 
 #[cfg(test)]
@@ -578,5 +648,44 @@ mod tests {
         let mut want_dx = dy.matmul(&wf.transpose());
         want_dx.add_assign(&dh.matmul(&a.transpose()));
         assert_eq!(dx, want_dx);
+    }
+
+    #[test]
+    fn lm_head_produces_per_token_logits_and_drains_tape() {
+        let mut rng = Rng::new(5);
+        let (b, t, d, v) = (4usize, 2usize, 8usize, 16usize);
+        let n = b * t;
+        let w = Mat::randn(d, v, &mut rng);
+        let op = SampledLinear::new(
+            None,
+            crate::ops::Contraction::Tokens { per_sample: t },
+        );
+        let head = LmHead::new(w.clone(), op, 0);
+        let x = Mat::randn(n, d, &mut rng);
+        let want = x.matmul(&w); // zero bias at init
+        let y = head.forward(x.clone(), &mut ForwardCtx::eval()).unwrap();
+        assert_eq!(y, want);
+        let zn = vec![1.0f32; b];
+        let mut tape = Tape::new();
+        let mut fctx = ForwardCtx::train(&mut tape, &zn, b, Rng::new(1));
+        let y2 = head.forward(x, &mut fctx).unwrap();
+        assert_eq!(y2, want);
+        assert_eq!(tape.len(), 1); // the linear context; the bias saves nothing
+        let mut m = head;
+        let mut norms = vec![0.0f32; b];
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut norms, slots: b };
+        let dy = Mat::randn(n, v, &mut rng);
+        let dx = m.backward(dy, &mut bctx).unwrap();
+        assert!(tape.is_empty(), "lm head backward must drain its tape entries");
+        assert_eq!((dx.rows, dx.cols), (n, d));
+        let mut grads = 0;
+        m.visit_params(&mut |p| {
+            if p.g.is_some() {
+                grads += 1;
+            }
+        });
+        assert_eq!(grads, 2); // head weight + bias row
+        // Tokens contraction: refreshed norms collapse back per sample.
+        assert!(norms.iter().all(|v| v.is_finite() && *v >= 0.0));
     }
 }

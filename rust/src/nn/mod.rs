@@ -15,12 +15,21 @@
 //!   [`LoraAdapter`], [`MeanPoolEmbed`], [`MeanPool`] — and the
 //!   [`Sequential`] container.
 //! * Attention-shaped modules — [`LayerNorm`] (tape cost: two floats
-//!   per row), [`Softmax`] (saves its output),
+//!   per row), [`Softmax`] (saves its output; masked-softmax semantics
+//!   define a fully-masked row as zero, never NaN),
 //!   [`ScaledDotProductAttention`], [`MultiHeadAttention`] (q/k/v/proj
-//!   as four sampled [`Linear`]s) and the residual [`TransformerBlock`].
+//!   as four sampled [`Linear`]s, optionally causally masked via
+//!   [`MultiHeadAttention::with_causal`]) and the residual
+//!   [`TransformerBlock`].
+//! * [`LmHead`] — the token-axis language-model head: a sampled linear
+//!   under `Contraction::Tokens` emitting per-token vocabulary logits
+//!   (no pooling), for the [`Arch::CausalLm`] shifted next-token
+//!   workload.
 //! * [`ModelBuilder`] — assembles the full/lora/lst family graphs,
 //!   arbitrary-depth token-contracted MLP stacks, and pre-norm
-//!   transformer stacks from a [`ModelSpec`] (the [`Arch`] knob).
+//!   transformer stacks — pooled classifier ([`Arch::Transformer`]) or
+//!   causal LM ([`Arch::CausalLm`]) — from a [`ModelSpec`] (the
+//!   [`Arch`] knob).
 //!
 //! A custom stack is a few lines:
 //!
@@ -58,7 +67,7 @@ pub use attention::{
 pub use builder::{
     Arch, BuiltModel, ModelBuilder, ModelSpec, StackDims, LORA_RANK, LST_FACTOR,
 };
-pub use layers::{Bias, Linear, LoraAdapter, MeanPool, MeanPoolEmbed, Relu};
+pub use layers::{Bias, Linear, LmHead, LoraAdapter, MeanPool, MeanPoolEmbed, Relu};
 pub use module::{BackwardCtx, ForwardCtx, Module, Param};
 pub use sequential::Sequential;
 pub use tape::{BitMask, Saved, Tape, TapeEntry, TapeStats};

@@ -23,7 +23,9 @@
 //! batch×seq-token scope — broadcasting the cached norm over each
 //! sample's tokens and collapsing the refreshed norms back per sample.
 
+use crate::bail;
 use crate::estimator::{select, Mat};
+use crate::util::error::Result;
 use crate::util::rng::Rng;
 
 use super::spec::SamplerSpec;
@@ -75,19 +77,48 @@ impl SampledLinear {
     /// `znorms` holds the cached gradient norms, one per cache slot
     /// (`H.rows / per_sample` entries); `rng` drives the column-row
     /// selection (consumed only when the op actually samples).
+    ///
+    /// Shape and contraction violations are reported as `Err` like the
+    /// rest of the ops API (never a release-mode panic): per-layer
+    /// budget/shape schedules hit these paths with data-dependent
+    /// values, so they must surface as recoverable errors.
     pub fn forward(
         &self,
         h: &Mat,
         w: &Mat,
         znorms: &[f32],
         rng: &mut Rng,
-    ) -> (Mat, SavedContext) {
-        assert_eq!(h.cols, w.rows, "H (.. x {}) @ W ({} x ..)", h.cols, w.rows);
+    ) -> Result<(Mat, SavedContext)> {
+        if h.cols != w.rows {
+            bail!(
+                "ops::SampledLinear::forward: H (.. x {}) does not contract \
+                 against W ({} x ..)",
+                h.cols,
+                w.rows
+            );
+        }
         let n = h.rows;
         let ps = self.contraction.per_sample();
-        assert!(ps > 0, "Tokens {{ per_sample: 0 }} is not a valid contraction");
-        assert!(n > 0 && n % ps == 0, "H rows {n} not a multiple of per_sample {ps}");
-        assert_eq!(znorms.len(), n / ps, "znorms: one entry per cache slot");
+        if ps == 0 {
+            bail!(
+                "ops::SampledLinear::forward: Tokens {{ per_sample: 0 }} is not \
+                 a valid contraction"
+            );
+        }
+        if n == 0 || n % ps != 0 {
+            bail!(
+                "ops::SampledLinear::forward: H rows {n} not a (non-zero) \
+                 multiple of per_sample {ps}"
+            );
+        }
+        if znorms.len() != n / ps {
+            bail!(
+                "ops::SampledLinear::forward: {} znorms entries for {} cache \
+                 slots (one per contraction sample)",
+                znorms.len(),
+                n / ps
+            );
+        }
         let z = h.matmul(w);
         let saved = match self.sampler {
             Some(spec) if spec.k_for(n) < n => {
@@ -128,7 +159,7 @@ impl SampledLinear {
             d_in: h.cols,
             d_out: w.cols,
         };
-        (z, ctx)
+        Ok((z, ctx))
     }
 }
 
@@ -316,7 +347,7 @@ mod tests {
         let h = Mat::randn(32, 16, &mut rng);
         let w = Mat::randn(16, 8, &mut rng);
         let zn = vec![1.0f32; 32];
-        let (z, _ctx) = wta(30).forward(&h, &w, &zn, &mut rng);
+        let (z, _ctx) = wta(30).forward(&h, &w, &zn, &mut rng).unwrap();
         assert_eq!(z, h.matmul(&w), "forward GEMM must stay exact");
     }
 
@@ -327,7 +358,7 @@ mod tests {
         let w = Mat::randn(12, 4, &mut rng);
         let dz = Mat::randn(16, 4, &mut rng);
         let zn = vec![1.0f32; 16];
-        let (_, ctx) = SampledLinear::exact().forward(&h, &w, &zn, &mut rng);
+        let (_, ctx) = SampledLinear::exact().forward(&h, &w, &zn, &mut rng).unwrap();
         let bw = ctx.backward(&dz, &w);
         assert_eq!(bw.dw, h.transpose().matmul(&dz));
         assert_eq!(bw.dh, dz.matmul(&w.transpose()));
@@ -348,7 +379,7 @@ mod tests {
         let w = Mat::randn(6, 3, &mut rng);
         let dz = Mat::randn(8, 3, &mut rng);
         let zn = vec![1.0f32; 8];
-        let (_, ctx) = wta(100).forward(&h, &w, &zn, &mut rng);
+        let (_, ctx) = wta(100).forward(&h, &w, &zn, &mut rng).unwrap();
         assert_eq!(ctx.saved_bytes(), ctx.full_bytes());
         assert_eq!(ctx.backward(&dz, &w).dw, h.transpose().matmul(&dz));
     }
@@ -361,7 +392,7 @@ mod tests {
         let h = Mat::randn(64, 64, &mut rng);
         let w = Mat::randn(64, 8, &mut rng);
         let zn = vec![1.0f32; 64];
-        let (_, ctx) = wta(30).forward(&h, &w, &zn, &mut rng);
+        let (_, ctx) = wta(30).forward(&h, &w, &zn, &mut rng).unwrap();
         assert_eq!(ctx.k(), 19); // round(0.3 * 64)
         let (idx, sc) = ctx.selection().expect("sampled context has a selection");
         assert_eq!((idx.len(), sc.len()), (19, 19));
@@ -391,7 +422,7 @@ mod tests {
         let mut acc = Mat::zeros(32, 8);
         let mut draw = Rng::new(3);
         for _ in 0..600 {
-            let (_, ctx) = op.forward(&h, &w, &zn, &mut draw);
+            let (_, ctx) = op.forward(&h, &w, &zn, &mut draw).unwrap();
             acc.add_assign(&ctx.backward(&dz, &w).dw);
         }
         let mean = acc.scale(1.0 / 600.0);
@@ -413,7 +444,7 @@ mod tests {
             Some(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }),
             Contraction::Tokens { per_sample: 4 },
         );
-        let (z, ctx) = op.forward(&h, &w, &zn, &mut rng);
+        let (z, ctx) = op.forward(&h, &w, &zn, &mut rng).unwrap();
         assert_eq!(z, h.matmul(&w));
         assert_eq!(ctx.k(), 10); // round(0.3 * 32)
         let bw = ctx.backward(&dz, &w);
@@ -444,7 +475,7 @@ mod tests {
         let mut acc = Mat::zeros(32, 8);
         let mut draw = Rng::new(4);
         for _ in 0..600 {
-            let (_, ctx) = op.forward(&h, &w, &zn, &mut draw);
+            let (_, ctx) = op.forward(&h, &w, &zn, &mut draw).unwrap();
             acc.add_assign(&ctx.backward(&dz, &w).dw);
         }
         let mean = acc.scale(1.0 / 600.0);
@@ -466,8 +497,8 @@ mod tests {
         );
         let mut r1 = Rng::new(9);
         let mut r2 = Rng::new(9);
-        let (za, ca) = rows_op.forward(&h, &w, &zn, &mut r1);
-        let (zb, cb) = tok_op.forward(&h, &w, &zn, &mut r2);
+        let (za, ca) = rows_op.forward(&h, &w, &zn, &mut r1).unwrap();
+        let (zb, cb) = tok_op.forward(&h, &w, &zn, &mut r2).unwrap();
         assert_eq!(za, zb);
         let (ba, bb) = (ca.backward(&dz, &w), cb.backward(&dz, &w));
         assert_eq!(ba.dw, bb.dw);
@@ -484,8 +515,40 @@ mod tests {
         let dz = Mat::randn(32, 4, &mut rng);
         let zn = vec![1.0f32; 32];
         let op = wta(30);
-        let (_, c1) = op.forward(&h, &w, &zn, &mut Rng::new(42));
-        let (_, c2) = op.forward(&h, &w, &zn, &mut Rng::new(42));
+        let (_, c1) = op.forward(&h, &w, &zn, &mut Rng::new(42)).unwrap();
+        let (_, c2) = op.forward(&h, &w, &zn, &mut Rng::new(42)).unwrap();
         assert_eq!(c1.backward(&dz, &w).dw, c2.backward(&dz, &w).dw);
+    }
+
+    #[test]
+    fn forward_reports_shape_and_contraction_violations() {
+        // The former release-mode panics: every violation must come
+        // back as an Err naming the op path, leaving the caller usable.
+        let mut rng = Rng::new(8);
+        let h = Mat::randn(6, 4, &mut rng);
+        let w = Mat::randn(4, 3, &mut rng);
+        let op = SampledLinear::new(None, Contraction::Tokens { per_sample: 0 });
+        let e = op.forward(&h, &w, &[1.0; 6], &mut rng).unwrap_err().to_string();
+        assert!(
+            e.contains("ops::SampledLinear::forward") && e.contains("per_sample: 0"),
+            "{e}"
+        );
+        // 6 rows do not split into per_sample = 4 token blocks.
+        let op = SampledLinear::new(None, Contraction::Tokens { per_sample: 4 });
+        let e = op.forward(&h, &w, &[1.0; 1], &mut rng).unwrap_err().to_string();
+        assert!(e.contains("multiple of per_sample"), "{e}");
+        // Inner dimensions disagree.
+        let wt = Mat::randn(5, 3, &mut rng);
+        let e = SampledLinear::exact()
+            .forward(&h, &wt, &[1.0; 6], &mut rng)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("does not contract"), "{e}");
+        // Wrong cache-slot count.
+        let e = SampledLinear::exact()
+            .forward(&h, &w, &[1.0; 5], &mut rng)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("cache") && e.contains("slots"), "{e}");
     }
 }

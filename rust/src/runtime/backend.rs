@@ -83,6 +83,8 @@ pub trait TrainSession {
     /// `znorms` is the gathered gradient-norm cache block, laid out
     /// `[layer * batch + row]`; the returned vector is the refreshed
     /// block in the same layout (scattered back by the coordinator).
+    /// Causal-LM sessions (`Arch::CausalLm`) derive shifted next-token
+    /// targets from `tokens` itself and ignore both label slots.
     /// Returns `(loss, refreshed_znorms)`.
     fn train_step(
         &mut self,
@@ -92,7 +94,9 @@ pub trait TrainSession {
         znorms: &[f32],
     ) -> Result<(f32, Vec<f32>)>;
 
-    /// Forward-only logits, row-major (batch, n_out).
+    /// Forward-only logits, row-major (batch, n_out) — or, for
+    /// causal-LM sessions, per-token rows (batch · tokens_per_sample,
+    /// vocab).
     fn eval_logits(&mut self, tokens: &[i32]) -> Result<Vec<f32>>;
 
     /// Measured saved-for-backward memory of the last train step: bytes

@@ -21,7 +21,7 @@
 
 use crate::estimator::Mat;
 use crate::nn::{
-    BackwardCtx, ForwardCtx, ModelBuilder, Module, Sequential, StackDims, Tape,
+    Arch, BackwardCtx, ForwardCtx, ModelBuilder, Module, Sequential, StackDims, Tape,
     TapeStats,
 };
 use crate::ops::MethodSpec;
@@ -78,6 +78,11 @@ pub struct NativeSession {
     seq: usize,
     batch: usize,
     n_out: usize,
+    /// Causal-LM mode: per-token shifted next-token supervision over
+    /// the token axis instead of per-sample labels.
+    lm: bool,
+    /// Token rows per sample (the `Tokens` contraction's chunk count).
+    per_sample: usize,
     seed: u64,
     lr: f32,
     step: i32,
@@ -88,8 +93,9 @@ pub struct NativeSession {
 impl NativeSession {
     pub fn new(cfg: &SessionConfig) -> Result<Self> {
         // Invalid method/spec combinations (LST + sampler, bad
-        // contractions) are rejected by ModelBuilder::build below — the
-        // single validation point every session goes through.
+        // contractions, heads not dividing the width) are rejected by
+        // ModelBuilder::build below — the single validation point every
+        // session goes through.
         let method: MethodSpec = cfg.method;
         let (vocab, seq, def_batch, d, f) = size_dims(&cfg.size)
             .ok_or_else(|| anyhow!("native backend: unknown model size {:?}", cfg.size))?;
@@ -97,8 +103,11 @@ impl NativeSession {
         if cfg.n_out == 0 {
             bail!("n_out must be >= 1");
         }
-        let dims =
-            StackDims { vocab, seq, d_model: d, d_ff: f, n_out: cfg.n_out };
+        // Causal LM predicts over the vocabulary: the LmHead width is
+        // the vocab size, whatever classifier width the config carries.
+        let lm = cfg.model.arch == Arch::CausalLm;
+        let n_out = if lm { vocab } else { cfg.n_out };
+        let dims = StackDims { vocab, seq, d_model: d, d_ff: f, n_out };
         let mut rng = Rng::new(cfg.seed);
         let built = ModelBuilder::new(dims, method, cfg.model)
             .build(&mut rng)
@@ -108,7 +117,9 @@ impl NativeSession {
             n_approx: built.n_approx,
             seq,
             batch,
-            n_out: cfg.n_out,
+            n_out,
+            lm,
+            per_sample: cfg.model.contraction.per_sample().max(1),
             seed: cfg.seed,
             lr: cfg.lr,
             step: 0,
@@ -181,6 +192,57 @@ impl NativeSession {
         }
     }
 
+    /// Causal-LM loss: mean softmax cross-entropy of each supervised
+    /// token row against its shifted next-token target (the shared
+    /// [`lm_shift_targets`](crate::data::lm_shift_targets) rule — the
+    /// eval NLL applies the same one), plus dlogits (zero rows for
+    /// unsupervised positions, so no gradient flows through them).
+    fn lm_loss_and_dlogits(&self, logits: &Mat, tokens: &[i32]) -> Result<(f32, Mat)> {
+        let (b, ps, v) = (self.batch, self.per_sample, self.n_out);
+        if (logits.rows, logits.cols) != (b * ps, v) {
+            bail!(
+                "causal lm: logits are {}x{}, expected {}x{v} per-token rows",
+                logits.rows,
+                logits.cols,
+                b * ps
+            );
+        }
+        let targets = crate::data::lm_shift_targets(tokens, b, self.seq, ps);
+        let counted = targets.iter().filter(|&&y| y >= 0).count();
+        if counted == 0 {
+            bail!(
+                "causal lm: no supervised token positions in the batch \
+                 (every next-chunk leading token is PAD)"
+            );
+        }
+        let mut dl = Mat::zeros(b * ps, v);
+        let mut loss = 0.0f64;
+        for (row, &y) in targets.iter().enumerate() {
+            if y < 0 {
+                continue;
+            }
+            if y as usize >= v {
+                bail!("causal lm: target token {y} out of vocab {v}");
+            }
+            let lrow = logits.row(row);
+            let maxv = lrow.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut denom = 0.0f64;
+            for &x in lrow {
+                denom += ((x - maxv) as f64).exp();
+            }
+            let dst = &mut dl.data[row * v..(row + 1) * v];
+            for (j, (o, &x)) in dst.iter_mut().zip(lrow).enumerate() {
+                let p = ((x - maxv) as f64).exp() / denom;
+                let t = if j == y as usize { 1.0 } else { 0.0 };
+                *o = ((p - t) / counted as f64) as f32;
+                if j == y as usize {
+                    loss -= p.max(1e-12).ln();
+                }
+            }
+        }
+        Ok(((loss / counted as f64) as f32, dl))
+    }
+
     /// One Adam update over every parameter the backward walk left a
     /// gradient on (bias-corrected, matching the historical kernels).
     fn adam_step(&mut self) {
@@ -244,7 +306,13 @@ impl TrainSession for NativeSession {
             let mut fctx = ForwardCtx::train(&mut tape, znorms, b, rng);
             self.graph.forward(x, &mut fctx)?
         };
-        let (loss, dlogits) = self.loss_and_dlogits(&logits, labels_i32, labels_f32)?;
+        let (loss, dlogits) = if self.lm {
+            // Per-token shifted supervision comes from the tokens
+            // themselves; the label slots are ignored.
+            self.lm_loss_and_dlogits(&logits, tokens)?
+        } else {
+            self.loss_and_dlogits(&logits, labels_i32, labels_f32)?
+        };
         // Measure the tape at its fullest — backward pops it empty.
         self.last_stats = tape.stats(self.n_approx);
 
@@ -378,6 +446,22 @@ mod tests {
             width: 0,
             contraction: Contraction::Tokens { per_sample: 4 },
             arch: Arch::Transformer,
+            heads: 4,
+        };
+        c
+    }
+
+    /// The causal-LM stack: 2 causally-masked pre-norm blocks plus the
+    /// token-axis LmHead over the vocabulary — 13 norm-cache layers,
+    /// shifted next-token supervision straight from the token stream
+    /// (the config's n_out is overridden by the vocab).
+    fn lm_cfg(method: &str) -> SessionConfig {
+        let mut c = cfg(method, 2);
+        c.model = ModelSpec {
+            depth: 2,
+            width: 0,
+            contraction: Contraction::Tokens { per_sample: 4 },
+            arch: Arch::CausalLm,
             heads: 4,
         };
         c
@@ -796,6 +880,133 @@ mod tests {
         let (l1, _) = s1.train_step(&toks, &labs, &[], &zn).unwrap();
         let (l2, _) = s2.train_step(&toks, &labs, &[], &zn).unwrap();
         assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn causal_lm_trains_on_the_synthetic_corpus() {
+        // The PR-5 acceptance workload: a depth-2 causally-masked
+        // transformer with the token-axis sampled LmHead, trained on
+        // the structured synthetic corpus with fresh batches per step.
+        // Next-token loss must decrease; threshold calibrated with the
+        // committed mirror (python/mirror/check_pr5.py): tail-mean sits
+        // 1.2-1.8 nats below the first loss over 5 seeds at lr 1e-3, so
+        // pinning tail < first leaves wide room.
+        use crate::data::Corpus;
+        let mut sess = NativeSession::new(&lm_cfg("full-wtacrs30")).unwrap();
+        assert_eq!(sess.n_approx_layers(), 13);
+        assert_eq!(sess.n_out(), 1024, "LM head predicts over the vocab");
+        let corpus = Corpus::new(1024, 0);
+        let zn = vec![1.0f32; 13 * sess.batch];
+        let mut losses = Vec::with_capacity(30);
+        for step in 0..30 {
+            let toks = corpus.batch(sess.batch, sess.seq, step as u64);
+            let (loss, norms) = sess.train_step(&toks, &[], &[], &zn).unwrap();
+            assert!(loss.is_finite(), "step {step}");
+            assert_eq!(norms.len(), 13 * sess.batch);
+            assert!(norms.iter().all(|v| v.is_finite() && *v >= 0.0));
+            losses.push(loss);
+        }
+        let first = losses[0];
+        let tail = losses[15..].iter().sum::<f32>() / 15.0;
+        assert!(
+            tail < first,
+            "causal lm did not learn: start {first} tail mean {tail} ({losses:?})"
+        );
+        // Deterministic given the seed: a fresh session replays step 0.
+        let mut again = NativeSession::new(&lm_cfg("full-wtacrs30")).unwrap();
+        let toks0 = corpus.batch(again.batch, again.seq, 0);
+        let (l0, _) = again.train_step(&toks0, &[], &[], &zn).unwrap();
+        assert_eq!(l0, first);
+        // The eval path emits per-token vocabulary logits (no pooling).
+        let logits = sess.eval_logits(&toks0).unwrap();
+        assert_eq!(logits.len(), sess.batch * 4 * 1024);
+        assert!(logits.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn causal_lm_tape_pin_below_full_baseline() {
+        // Table 2 on the causal stack, measured: the trunk matches the
+        // pooled transformer byte-for-byte, and the head's context now
+        // contracts 128 token rows instead of 32 pooled rows.  Byte
+        // counts are deterministic in the budget (k is fixed), so the
+        // pin is arithmetic — check_pr5.py re-derives the exact totals.
+        use crate::data::Corpus;
+        let corpus = Corpus::new(1024, 0);
+        let toks = corpus.batch(32, 64, 0);
+        let mut exact = NativeSession::new(&lm_cfg("full")).unwrap();
+        let mut sampled = NativeSession::new(&lm_cfg("full-wtacrs30")).unwrap();
+        let zn = vec![1.0f32; 13 * 32];
+        exact.train_step(&toks, &[], &[], &zn).unwrap();
+        sampled.train_step(&toks, &[], &[], &zn).unwrap();
+        let (es, ss) = (exact.tape_stats(), sampled.tape_stats());
+        assert_eq!(es.per_layer.len(), 13);
+        assert_eq!(ss.per_layer.len(), 13);
+        // Trunk layers as in the pooled transformer; the LM head (slot
+        // 12) contracts the full 128 token rows of width 128.
+        let full_widths = [128usize, 128, 128, 128, 128, 256];
+        for block in 0..2 {
+            for (j, &w) in full_widths.iter().enumerate() {
+                let l = block * 6 + j;
+                assert_eq!(es.per_layer[l], 128 * w * 4, "exact layer {l}");
+                let ratio = ss.per_layer[l] as f64 / es.per_layer[l] as f64;
+                assert!(ratio < 0.35, "layer {l}: ratio {ratio:.3}");
+            }
+        }
+        assert_eq!(es.per_layer[12], 128 * 128 * 4);
+        let head_ratio = ss.per_layer[12] as f64 / es.per_layer[12] as f64;
+        assert!(head_ratio < 0.35, "lm head ratio {head_ratio:.3}");
+        // The acceptance pin: whole-tape sampled bytes below the
+        // full-activation baseline (deterministic totals, re-derived by
+        // the mirror: 590560 / 1273856 = 0.4636).
+        let ratio = ss.total as f64 / es.total as f64;
+        assert!(
+            ratio < 0.5,
+            "causal whole-tape ratio {ratio:.3} (sampled {} / full {})",
+            ss.total,
+            es.total
+        );
+        assert_eq!(ss.total, 590_560);
+        assert_eq!(es.total, 1_273_856);
+    }
+
+    #[test]
+    fn causal_lm_state_roundtrip_resumes_identically() {
+        use crate::data::Corpus;
+        let corpus = Corpus::new(1024, 3);
+        let mut s1 = NativeSession::new(&lm_cfg("full-wtacrs30")).unwrap();
+        let zn = vec![1.0f32; 13 * s1.batch];
+        for step in 0..2 {
+            let toks = corpus.batch(s1.batch, s1.seq, step);
+            s1.train_step(&toks, &[], &[], &zn).unwrap();
+        }
+        let snap = s1.state();
+        let mut s2 = NativeSession::new(&lm_cfg("full-wtacrs30")).unwrap();
+        s2.restore_state(snap).unwrap();
+        let toks = corpus.batch(s1.batch, s1.seq, 2);
+        let (l1, _) = s1.train_step(&toks, &[], &[], &zn).unwrap();
+        let (l2, _) = s2.train_step(&toks, &[], &[], &zn).unwrap();
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn causal_lm_rejects_bad_specs_and_empty_supervision() {
+        // per_sample 1 leaves no next chunk to shift onto.
+        let mut c = lm_cfg("full-wtacrs30");
+        c.model.contraction = Contraction::Tokens { per_sample: 1 };
+        let e = NativeSession::new(&c).unwrap_err().to_string();
+        assert!(e.contains("next"), "{e}");
+        // heads not dividing d_model reports by name, no shape panic.
+        c = lm_cfg("full-wtacrs30");
+        c.model.heads = 3;
+        let e = NativeSession::new(&c).unwrap_err().to_string();
+        assert!(e.contains("heads") && e.contains("divide"), "{e}");
+        // An all-PAD batch has no supervised position: a named error,
+        // not a NaN loss.
+        let mut sess = NativeSession::new(&lm_cfg("full-wtacrs30")).unwrap();
+        let zn = vec![1.0f32; 13 * sess.batch];
+        let toks = vec![0i32; sess.batch * sess.seq];
+        let e = sess.train_step(&toks, &[], &[], &zn).unwrap_err().to_string();
+        assert!(e.contains("no supervised"), "{e}");
     }
 
     #[test]

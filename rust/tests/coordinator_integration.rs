@@ -4,7 +4,9 @@
 //! default features (no artifacts, no XLA); thresholds are calibrated
 //! against the planted synthetic-GLUE generative processes.
 
-use wtacrs::coordinator::{checkpoint, run_glue, ExperimentOptions, TrainOptions, Trainer};
+use wtacrs::coordinator::{
+    checkpoint, run_glue, run_lm, ExperimentOptions, TrainOptions, Trainer,
+};
 use wtacrs::data::{glue, Batcher};
 use wtacrs::metrics::MetricKind;
 use wtacrs::nn::{Arch, ModelSpec};
@@ -97,6 +99,71 @@ fn transformer_stack_through_run_glue() {
     assert!(r.report.tape_bytes > 0);
     assert!(r.report.peak_saved_bytes >= r.report.tape_bytes);
     assert!(r.report.norm_cache_coverage > 0.9);
+}
+
+#[test]
+fn causal_lm_through_run_lm() {
+    // The causal-LM workload rides ExperimentOptions end-to-end:
+    // run_lm opens the Arch::CausalLm stack, trains on Batcher epochs
+    // of the synthetic corpus, and scores held-out next-token NLL via
+    // the per-token eval path.  Thresholds mirror-calibrated
+    // (check_pr5.py) at lr 1e-3 over 60 steps across 5 seeds: train
+    // tail sits 3.5-4.2 nats below the first loss, and held-out NLL
+    // (a second document split of the same corpus) improves on the
+    // untrained baseline by 1.3-1.8 nats.
+    let backend = NativeBackend::new();
+    let mut o = opts(60, 1e-3, 512, 128);
+    o.model = ModelSpec {
+        depth: 2,
+        width: 0,
+        contraction: Contraction::Tokens { per_sample: 4 },
+        arch: Arch::CausalLm,
+        heads: 4,
+    };
+    // Untrained baseline first: zero steps, same data seeds, so the
+    // held-out split is identical.
+    let mut o0 = o.clone();
+    o0.train.max_steps = 0;
+    let base = run_lm(&backend, "tiny", &m("full-wtacrs30"), &o0).unwrap();
+    assert!(base.losses.is_empty());
+    assert!(base.eval_nll.is_finite());
+
+    let r = run_lm(&backend, "tiny", &m("full-wtacrs30"), &o).unwrap();
+    assert_eq!(r.losses.len(), 60);
+    assert!(r.losses.iter().all(|l| l.is_finite()));
+    let first = r.losses[0];
+    let tail = r.losses[50..].iter().sum::<f32>() / 10.0;
+    assert!(
+        tail < first,
+        "lm run did not learn: first {first} tail {tail} ({:?})",
+        &r.losses[..5]
+    );
+    // Held-out NLL: finite and below the untrained baseline (the
+    // pooled-chunk next-token task has high conditional entropy, so
+    // the win shows up against init, not against ln(V)).
+    assert!(r.eval_nll.is_finite());
+    assert!(
+        r.eval_nll < base.eval_nll,
+        "eval nll {} did not improve on the untrained {}",
+        r.eval_nll,
+        base.eval_nll
+    );
+    // Measured tape accounting: 13 sampled linears, deterministic
+    // whole-tape bytes (re-derived by check_pr5.py).
+    assert_eq!(r.saved_bytes_per_layer.len(), 13);
+    assert_eq!(r.tape_bytes, 590_560);
+    assert!(r.peak_saved_bytes >= r.tape_bytes);
+    assert!(r.norm_cache_coverage > 0.9);
+}
+
+#[test]
+fn run_lm_rejects_non_lm_specs() {
+    let backend = NativeBackend::new();
+    // Default arch (Mlp) is not an LM graph.
+    let e = run_lm(&backend, "tiny", &m("full-wtacrs30"), &opts(5, 1e-3, 64, 32))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("CausalLm"), "{e}");
 }
 
 #[test]

@@ -11,7 +11,8 @@ use wtacrs::estimator::{colrow_probs, select, wtacrs_csize, Mat, Sampler};
 use wtacrs::memsim::{self, MethodMem, Scope, Workload};
 use wtacrs::metrics;
 use wtacrs::nn::{
-    BackwardCtx, ForwardCtx, LayerNorm, Module, MultiHeadAttention, Softmax, Tape,
+    BackwardCtx, ForwardCtx, LayerNorm, LmHead, Module, MultiHeadAttention,
+    ScaledDotProductAttention, Softmax, Tape,
 };
 use wtacrs::ops::{Contraction, SampledLinear, SamplerSpec};
 use wtacrs::testing::prop::{check, Gen, Pair, UsizeIn, VecF64};
@@ -254,6 +255,71 @@ fn softmax_backward_matches_finite_differences() {
     let x = Mat::randn(4, 9, &mut rng);
     let c = Mat::randn(4, 9, &mut rng);
     fd_gradcheck(&mut Softmax, &x, &c, 5e-3, "softmax");
+}
+
+#[test]
+fn causal_masked_softmax_backward_matches_finite_differences() {
+    // The masked-softmax backward through the causal attention core:
+    // the analytic input gradient of the causally-masked SDPA must
+    // match central differences entry-for-entry.  Masked (future)
+    // positions carry zero attention weight, so the check also verifies
+    // that *no* gradient flows to any K/V entry the mask excludes (the
+    // finite difference there is exactly zero).  Tolerance
+    // mirror-calibrated in check_pr5.py (observed max deviation ~1e-4).
+    let (heads, t, d) = (2usize, 4usize, 8usize);
+    let n = 2 * t;
+    let mut rng = Rng::new(33);
+    let x = Mat::randn(n, 3 * d, &mut rng);
+    let c = Mat::randn(n, d, &mut rng);
+    let mut sdpa = ScaledDotProductAttention::causal(heads, t).unwrap();
+    fd_gradcheck(&mut sdpa, &x, &c, 5e-3, "causal_sdpa");
+}
+
+#[test]
+fn lm_head_sampled_gradient_is_unbiased_under_tokens() {
+    // The LM-head analogue of the proj-gradient pin: the token-axis
+    // head contracts batch×seq token rows (Contraction::Tokens) into a
+    // (d, vocab) weight gradient, and the Monte-Carlo mean of the
+    // wtacrs30-sampled estimate over repeated forward selections must
+    // approach the exact Hᵀ dZ.  Mirror-calibrated (check_pr5.py):
+    // rel ~0.09 at 400 trials; band 0.2.
+    let (b, t, d, v) = (16usize, 4usize, 32usize, 48usize);
+    let n = b * t;
+    let mut rng = Rng::new(9);
+    let x = Mat::randn(n, d, &mut rng);
+    let w = Mat::randn(d, v, &mut rng).scale((1.0 / d as f64).sqrt() as f32);
+    let dy = Mat::randn(n, v, &mut rng);
+
+    let head_grad = |op: SampledLinear, seed: u64| -> Mat {
+        let mut m = LmHead::new(w.clone(), op, 0);
+        let zn = vec![1.0f32; b];
+        let mut tape = Tape::new();
+        let mut fctx = ForwardCtx::train(&mut tape, &zn, b, Rng::new(seed));
+        m.forward(x.clone(), &mut fctx).unwrap();
+        let mut norms = vec![0.0f32; b];
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut norms, slots: b };
+        m.backward(dy.clone(), &mut bctx).unwrap();
+        let mut grads: Vec<Mat> = vec![];
+        m.visit_params(&mut |p| grads.push(p.g.clone().expect("grad deposited")));
+        grads.swap_remove(0) // weight grad; the bias row is second
+    };
+
+    let exact = head_grad(
+        SampledLinear::new(None, Contraction::Tokens { per_sample: t }),
+        0,
+    );
+    assert_eq!(exact, x.transpose().matmul(&dy), "exact path is the closed form");
+    let op = SampledLinear::new(
+        Some(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }),
+        Contraction::Tokens { per_sample: t },
+    );
+    let mut acc = Mat::zeros(d, v);
+    for trial in 0..400 {
+        acc.add_assign(&head_grad(op, 2000 + trial));
+    }
+    let mean = acc.scale(1.0 / 400.0);
+    let rel = mean.sub(&exact).frob_norm() / exact.frob_norm();
+    assert!(rel < 0.2, "sampled lm-head gradient biased: rel {rel}");
 }
 
 #[test]
