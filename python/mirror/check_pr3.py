@@ -30,7 +30,7 @@ def tape_arithmetic():
     banner("tape byte arithmetic (deterministic)")
 
     def ctx_bytes(k, d_in):
-        return k * d_in * 4 + k * 8 + k * 8  # rows + usize idx + f64 scales
+        return k * d_in * 4 + k * 4 + k * 4  # rows + u32 idx + f32 scales
 
     def mask_bytes(elems):
         return ((elems + 63) // 64) * 8

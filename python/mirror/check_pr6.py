@@ -1,0 +1,146 @@
+"""PR 6 calibration: u32-index / f32-scale saved contexts + BENCH baselines.
+
+The kernel overhaul itself (persistent-pool blocked matmul, fused nt/tn
+backward, blocked sampled-dW gather) is bitwise-identical to the serial
+reference by construction and proven by rust/tests/kernel_identity.rs —
+nothing numeric to calibrate there.  What this PR *does* move are the
+deterministic tape-byte pins: SavedContext now stores u32 indices and
+f32 scales (8 bytes/pair, down from the 16 bytes/pair usize/f64 pair
+that inflated saved_bytes), so every committed byte total shrinks by
+8*k per sampled context.
+
+Re-derived pins (asserted below, mirrored in the Rust tests):
+  - transformer whole tape: 572048 / 1224704 = 0.4671  (< 0.5)
+  - causal-LM whole tape:   586608 / 1273856 = 0.4605  (< 0.5)
+  - ops unit context (64x64 H, wta30): 5016 / 16384 = 0.3062 in (0.25, 0.35)
+
+Plus the committed-baseline workflow: BENCH_table3.json / BENCH_fig9.json
+at the repo root must satisfy the schema util::bench::validate_baseline
+enforces (re-implemented here so the mirror can check the files without
+a Rust toolchain) and carry the measured wtacrs30 pre/post band.
+"""
+import json
+import math
+import os
+
+
+def banner(name):
+    print(f"\n== {name} ==")
+
+
+def ctx_bytes(k, d_in):
+    return k * d_in * 4 + k * 4 + k * 4  # rows + u32 idx + f32 scales
+
+
+def mask_bytes(elems):
+    return ((elems + 63) // 64) * 8
+
+
+def k_for(budget, n):
+    return int(math.floor(budget * n + 0.5))
+
+
+def transformer_tape():
+    banner("transformer tape pin (deterministic)")
+    b, t, d, f, h = 32, 4, 128, 256, 4
+    n = b * t
+    kt, kh = k_for(0.3, n), k_for(0.3, b)
+    ln_stats = 2 * n * 4
+    attn = b * h * t * t * 4
+    shared = n * d * 4
+    mask = mask_bytes(n * f)
+    sampled_block = (2 * ln_stats + 4 * ctx_bytes(kt, d) + attn + 2 * shared
+                     + ctx_bytes(kt, d) + mask + ctx_bytes(kt, f))
+    full_block = (2 * ln_stats + 4 * n * d * 4 + attn + 2 * shared
+                  + n * d * 4 + mask + n * f * 4)
+    sampled = 2 * sampled_block + ctx_bytes(kh, d)
+    full = 2 * full_block + b * d * 4
+    print(f"  sampled {sampled} / full {full} ({sampled / full:.4f})")
+    assert sampled == 572_048, sampled
+    assert full == 1_224_704, full
+    assert sampled / full < 0.5
+
+
+def causal_tape():
+    banner("causal-LM tape pin (deterministic)")
+    b, t, d, f, h = 32, 4, 128, 256, 4
+    n = b * t
+    kt = k_for(0.3, n)
+    ln_stats = 2 * n * 4
+    attn = b * h * t * t * 4
+    shared = n * d * 4
+    mask = mask_bytes(n * f)
+    sampled_block = (2 * ln_stats + 4 * ctx_bytes(kt, d) + attn + 2 * shared
+                     + ctx_bytes(kt, d) + mask + ctx_bytes(kt, f))
+    full_block = (2 * ln_stats + 4 * n * d * 4 + attn + 2 * shared
+                  + n * d * 4 + mask + n * f * 4)
+    # The LM head contracts all n = 128 token rows (not the pooled b).
+    sampled = 2 * sampled_block + ctx_bytes(kt, d)
+    full = 2 * full_block + n * d * 4
+    print(f"  sampled {sampled} / full {full} ({sampled / full:.4f})")
+    assert sampled == 586_608, sampled
+    assert full == 1_273_856, full
+    assert sampled / full < 0.5
+
+
+def ops_unit_context():
+    banner("ops unit-test context pin (64x64 H, wta30)")
+    k = k_for(0.3, 64)
+    saved, full = ctx_bytes(k, 64), 64 * 64 * 4
+    ratio = saved / full
+    print(f"  k={k}: {saved} / {full} ({ratio:.4f})")
+    assert (saved, full) == (5016, 16384), (saved, full)
+    assert 0.25 < ratio < 0.35
+
+
+def validate_baseline(doc, name):
+    # Mirror of rust util::bench::validate_baseline.
+    for key in ("bench", "mode", "provenance"):
+        assert isinstance(doc.get(key), str) and doc[key], f"{name}: {key}"
+    entries = doc.get("entries")
+    assert isinstance(entries, list) and entries, f"{name}: entries"
+    for i, e in enumerate(entries):
+        assert isinstance(e.get("name"), str), f"{name}: entries[{i}].name"
+        lat = [k for k in e if k.endswith("_ms")]
+        assert lat, f"{name}: entries[{i}] has no *_ms"
+        for k in lat:
+            v = e[k]
+            assert isinstance(v, (int, float)) and math.isfinite(v) and v > 0, \
+                f"{name}: entries[{i}].{k} = {v}"
+    base = doc.get("baseline")
+    assert isinstance(base, dict), f"{name}: baseline"
+    assert isinstance(base.get("workload"), str), f"{name}: workload"
+    assert isinstance(base.get("band"), str), f"{name}: band"
+    for key in ("pre_change_ms", "post_change_ms", "speedup"):
+        v = base.get(key)
+        assert isinstance(v, (int, float)) and math.isfinite(v) and v > 0, \
+            f"{name}: baseline.{key} = {v}"
+
+
+def committed_baselines():
+    banner("committed BENCH_*.json baselines")
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    for name in ("BENCH_table3.json", "BENCH_fig9.json"):
+        with open(os.path.join(root, name)) as f:
+            doc = json.load(f)
+        validate_baseline(doc, name)
+        base = doc["baseline"]
+        assert "wtacrs30" in base["workload"], f"{name}: workload"
+        assert "x" in base["band"], f"{name}: band"
+        rel = abs(base["speedup"] - base["pre_change_ms"] / base["post_change_ms"])
+        assert rel < 1e-6 * base["speedup"], f"{name}: speedup inconsistent"
+        print(f"  {name}: {len(doc['entries'])} entries, provenance "
+              f"{doc['provenance']}, speedup {base['speedup']:.2f}x "
+              f"({base['band']})")
+
+
+def main():
+    transformer_tape()
+    causal_tape()
+    ops_unit_context()
+    committed_baselines()
+    print("\nall PR6 checks passed")
+
+
+if __name__ == "__main__":
+    main()

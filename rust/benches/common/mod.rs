@@ -3,8 +3,11 @@
 
 use std::path::Path;
 
+use wtacrs::estimator::Mat;
 use wtacrs::runtime::{Backend, NativeBackend};
+use wtacrs::util::bench::{self, bench, BenchConfig, BenchMode};
 use wtacrs::util::json::{self, Json};
+use wtacrs::util::rng::Rng;
 
 /// Execution backend for the benches: the pure-Rust native backend by
 /// default; with the `pjrt` feature, `WTACRS_BENCH_BACKEND=pjrt` swaps
@@ -21,13 +24,25 @@ pub fn backend() -> Box<dyn Backend> {
 
 /// Workload scaling: WTACRS_BENCH_MODE = full | quick (default) | smoke.
 /// `full` runs the paper-sized grids; `smoke` is a single-core-friendly
-/// pass (~1 min/bench) that still exercises every code path.
+/// pass (~1 min/bench) that still exercises every code path.  An
+/// unknown value (e.g. the typo "Full") aborts the bench instead of
+/// silently running in quick mode.
+pub fn mode() -> BenchMode {
+    match bench::bench_mode() {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 pub fn full_mode() -> bool {
-    wtacrs::util::bench::bench_mode_full()
+    mode() == BenchMode::Full
 }
 
 pub fn smoke_mode() -> bool {
-    std::env::var("WTACRS_BENCH_MODE").map(|v| v == "smoke").unwrap_or(false)
+    mode() == BenchMode::Smoke
 }
 
 /// Steps per fine-tuning run for GLUE-style benches.
@@ -62,13 +77,84 @@ pub fn write_json(name: &str, value: &Json) {
     }
 }
 
+/// True when this run should (re)write its committed `BENCH_*.json`
+/// baseline (`WTACRS_BENCH_BASELINE=1`; the output directory comes
+/// from `WTACRS_BENCH_BASELINE_DIR`, default the current directory).
+pub fn baseline_requested() -> bool {
+    std::env::var("WTACRS_BENCH_BASELINE").as_deref() == Ok("1")
+}
+
+/// Measure the pre/post improvement band of the GEMM hot-path overhaul
+/// in-process, at a wtacrs30-step-dominant GEMM shape.
+///
+/// Pre-change path (kept in-tree exactly for this measurement):
+/// `Mat::matmul_spawning` (a fresh `thread::scope` per call) for the
+/// forward product plus `dz.matmul(&w.transpose())` (materialized
+/// transposed weight) for the backward input gradient.  Post-change
+/// path: the persistent-pool blocked `Mat::matmul` plus the fused
+/// `dz.matmul_nt(&w)`.  Both paths produce bitwise-identical numbers;
+/// only dispatch and memory traffic differ.
+pub fn kernel_baseline(cfg: &BenchConfig, workload: &str) -> Json {
+    let (n, m, q) = if full_mode() { (256, 512, 256) } else { (96, 256, 128) };
+    let mut rng = Rng::new(17);
+    let h = Mat::randn(n, m, &mut rng);
+    let w = Mat::randn(m, q, &mut rng);
+    let dz = Mat::randn(n, q, &mut rng);
+    let pre = bench("kernel_pre", cfg, || {
+        let z = h.matmul_spawning(&w);
+        let dh = dz.matmul(&w.transpose());
+        std::hint::black_box((z, dh));
+    });
+    let post = bench("kernel_post", cfg, || {
+        let z = h.matmul(&w);
+        let dh = dz.matmul_nt(&w);
+        std::hint::black_box((z, dh));
+    });
+    let speedup = pre.mean_ms() / post.mean_ms();
+    let lo = pre.p50.as_secs_f64() / post.p99.as_secs_f64();
+    let hi = pre.p99.as_secs_f64() / post.p50.as_secs_f64();
+    println!(
+        "\nkernel baseline ({n}x{m}x{q}): pre {:.3} ms -> post {:.3} ms \
+         ({speedup:.2}x, band {lo:.2}x-{hi:.2}x)",
+        pre.mean_ms(),
+        post.mean_ms()
+    );
+    json::obj(vec![
+        ("workload", json::s(workload)),
+        ("gemm_shape", json::s(&format!("{n}x{m}x{q}"))),
+        ("pre_change_ms", json::num(pre.mean_ms())),
+        ("post_change_ms", json::num(post.mean_ms())),
+        ("speedup", json::num(speedup)),
+        ("band", json::s(&format!("{lo:.2}x-{hi:.2}x"))),
+    ])
+}
+
+/// Assemble and write `BENCH_{short}.json` (schema-validated; a
+/// malformed document aborts the bench instead of rotting the file).
+pub fn write_baseline_doc(short: &str, entries: Vec<Json>, baseline: Json) {
+    let doc = json::obj(vec![
+        ("bench", json::s(short)),
+        ("mode", json::s(mode().as_str())),
+        ("provenance", json::s("rust-native")),
+        ("entries", Json::Arr(entries)),
+        ("baseline", baseline),
+    ]);
+    match bench::write_baseline(short, &doc) {
+        Ok(p) => println!("[baseline -> {}]", p.display()),
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    }
+}
+
 /// Banner shared by all benches.
 pub fn banner(id: &str, paper_ref: &str) {
     println!("==============================================================");
     println!("{id} — reproduces {paper_ref}");
     println!(
         "mode: {} (set WTACRS_BENCH_MODE=full for the full grid)",
-        if full_mode() { "full" } else { "quick" }
+        mode().as_str()
     );
     println!("==============================================================");
 }

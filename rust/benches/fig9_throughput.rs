@@ -39,6 +39,7 @@ fn main() {
         &[4, 16, 64]
     };
     let mut out = vec![];
+    let mut base = vec![];
     let mut t = Table::new(&["method", "batch", "step ms", "sentences/s"]);
     for &method in methods {
         let spec: wtacrs::ops::MethodSpec = method.parse().expect("method");
@@ -85,6 +86,11 @@ fn main() {
                 ("step_ms", json::num(r.mean_ms())),
                 ("sentences_per_s", json::num(sps)),
             ]));
+            base.push(json::obj(vec![
+                ("name", json::s(&format!("{method}/b{b}"))),
+                ("step_ms", json::num(r.mean_ms())),
+                ("sentences_per_s", json::num(sps)),
+            ]));
         }
     }
     t.print();
@@ -111,4 +117,16 @@ fn main() {
          the per-step overhead."
     );
     common::write_json("fig9_throughput", &Json::Arr(out));
+
+    // WTACRS_BENCH_BASELINE=1: rewrite the committed BENCH_fig9.json
+    // baseline (throughput entries + the kernel pre/post band).
+    if common::baseline_requested() {
+        let baseline = common::kernel_baseline(
+            &cfg,
+            "tiny/full-wtacrs30 train_step GEMMs at throughput batch sizes \
+             (pre: spawn-per-call matmul + transposed-copy backward; post: \
+             persistent-pool blocked matmul + fused nt backward)",
+        );
+        common::write_baseline_doc("fig9", base, baseline);
+    }
 }

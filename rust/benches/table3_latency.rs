@@ -20,6 +20,9 @@ fn main() {
     let backend = common::backend();
     let cfg = if common::full_mode() { BenchConfig::default() } else { BenchConfig::quick() };
     let mut out = vec![];
+    // BENCH_table3.json entries: strictly-positive latencies only (the
+    // derived bwd share can measure 0.0 and would fail the schema).
+    let mut base = vec![];
 
     let sizes: &[&str] = if common::full_mode() { &["tiny", "small"] } else { &["tiny"] };
     let methods: &[&str] = if common::smoke_mode() {
@@ -66,6 +69,11 @@ fn main() {
                 ("fwd_ms", json::num(fwd.mean_ms())),
                 ("step_ms", json::num(step.mean_ms())),
                 ("bwd_ms", json::num(bwd)),
+            ]));
+            base.push(json::obj(vec![
+                ("name", json::s(&format!("{size}/{method}"))),
+                ("fwd_ms", json::num(fwd.mean_ms())),
+                ("step_ms", json::num(step.mean_ms())),
             ]));
         }
         t.print();
@@ -127,6 +135,11 @@ fn main() {
                 ("fwd_ms", json::num(fwd.mean_ms())),
                 ("step_ms", json::num(step.mean_ms())),
                 ("bwd_ms", json::num(bwd)),
+            ]));
+            base.push(json::obj(vec![
+                ("name", json::s(&format!("tiny-deep4/{method}"))),
+                ("fwd_ms", json::num(fwd.mean_ms())),
+                ("step_ms", json::num(step.mean_ms())),
             ]));
         }
         t.print();
@@ -192,6 +205,11 @@ fn main() {
                 ("step_ms", json::num(step.mean_ms())),
                 ("bwd_ms", json::num(bwd)),
             ]));
+            base.push(json::obj(vec![
+                ("name", json::s(&format!("tiny-transformer2/{method}"))),
+                ("fwd_ms", json::num(fwd.mean_ms())),
+                ("step_ms", json::num(step.mean_ms())),
+            ]));
         }
         t.print();
     }
@@ -201,4 +219,17 @@ fn main() {
          backward; the end-to-end win comes from bigger batches (Fig 9)."
     );
     common::write_json("table3_latency", &Json::Arr(out));
+
+    // WTACRS_BENCH_BASELINE=1: re-measure the kernel-overhaul pre/post
+    // band and rewrite the committed BENCH_table3.json baseline that
+    // later PRs must beat.
+    if common::baseline_requested() {
+        let baseline = common::kernel_baseline(
+            &cfg,
+            "tiny/full-wtacrs30 train_step GEMMs (pre: spawn-per-call matmul + \
+             transposed-copy backward; post: persistent-pool blocked matmul + \
+             fused nt backward)",
+        );
+        common::write_baseline_doc("table3", base, baseline);
+    }
 }

@@ -69,7 +69,9 @@ where
     };
 
     let scores: Vec<Result<f64>> = match pool {
-        Some(p) => p.map(jobs, run_one),
+        // `map` itself errors if a seed's job panicked or was dropped;
+        // per-seed experiment failures come back inside the Vec.
+        Some(p) => p.map(jobs, run_one)?,
         None => jobs.into_iter().map(run_one).collect(),
     };
 

@@ -8,6 +8,7 @@
 pub mod analysis;
 pub mod variance;
 
+use crate::util::pool;
 use crate::util::rng::Rng;
 
 /// Row-major matrix, the minimal thing the estimator math needs.
@@ -46,11 +47,12 @@ impl Mat {
         &self.data[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// GEMM: self (n x m) * other (m x q) — k-blocked for cache reuse and
-    /// row-parallel across std threads once the problem is large enough
-    /// to amortize spawning.  Each output row is accumulated in ascending
-    /// k order regardless of the worker count, so results are bitwise
-    /// identical to the serial kernel.
+    /// GEMM: self (n x m) * other (m x q) — cache-blocked microkernel,
+    /// row-parallel across the persistent [`crate::util::pool::global`]
+    /// worker pool once the problem is large enough to amortize
+    /// dispatch.  Each output element is accumulated in ascending k
+    /// order regardless of the worker count or blocking, so results are
+    /// bitwise identical to [`Self::matmul_serial`].
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows);
         let (n, m, q) = (self.rows, self.cols, other.cols);
@@ -58,10 +60,56 @@ impl Mat {
         if n == 0 || m == 0 || q == 0 {
             return out;
         }
-        // Threads are spawned per call (no pool), so demand enough work
-        // per worker (~4M flops) to amortize spawn cost; small GEMMs —
-        // including every per-step product of the tiny native model —
-        // stay serial.
+        let workers = plan_workers(n, m, q, n);
+        if workers <= 1 {
+            matmul_rows(self, other, 0, &mut out.data);
+            return out;
+        }
+        let rows_per = n.div_ceil(workers);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .data
+            .chunks_mut(rows_per * q)
+            .enumerate()
+            .map(|(w, chunk)| {
+                let r0 = w * rows_per;
+                Box::new(move || matmul_rows(self, other, r0, chunk))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        if pool::global().scope_run(jobs).is_err() {
+            // Pool unavailable (shut down / job dropped): recompute the
+            // whole product serially from a clean accumulator — partial
+            // worker output must not leak into the result.
+            out.data.iter_mut().for_each(|v| *v = 0.0);
+            matmul_rows(self, other, 0, &mut out.data);
+        }
+        out
+    }
+
+    /// The single-threaded reference kernel `matmul` must match
+    /// bitwise.  Same blocked microkernel, no pool dispatch.
+    pub fn matmul_serial(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (n, m, q) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, q);
+        if n == 0 || m == 0 || q == 0 {
+            return out;
+        }
+        matmul_rows(self, other, 0, &mut out.data);
+        out
+    }
+
+    /// The pre-pool reference path: identical math, but a fresh
+    /// `thread::scope` spawned per call.  Kept (not wired to anything)
+    /// so the benches can measure the dispatch overhead the persistent
+    /// pool removes — the committed `BENCH_*.json` baseline band.
+    pub fn matmul_spawning(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows);
+        let (n, m, q) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(n, q);
+        if n == 0 || m == 0 || q == 0 {
+            return out;
+        }
         let flops = n.saturating_mul(m).saturating_mul(q);
         let by_work = (flops >> 22).max(1);
         let workers = std::thread::available_parallelism()
@@ -80,6 +128,85 @@ impl Mat {
                 s.spawn(move || matmul_rows(self, other, r0, chunk));
             }
         });
+        out
+    }
+
+    /// Fused `self · otherᵀ` (other stays row-major, read row-wise in
+    /// place): `out[i][j] = Σ_k self[i][k] · other[j][k]` — the backward
+    /// input-gradient GEMM `dH = dZ Wᵀ` without materializing a
+    /// transposed copy of the weight.  Accumulation per output element
+    /// is ascending-k with the same zero-skip as [`Self::matmul`], so
+    /// the result is bitwise identical to
+    /// `self.matmul(&other.transpose())`.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "nt: inner (column) dims must agree");
+        let (n, m, q) = (self.rows, self.cols, other.rows);
+        let mut out = Mat::zeros(n, q);
+        if n == 0 || q == 0 {
+            return out;
+        }
+        if m == 0 {
+            return out;
+        }
+        let workers = plan_workers(n, m, q, n);
+        if workers <= 1 {
+            matmul_nt_rows(self, other, 0, &mut out.data);
+            return out;
+        }
+        let rows_per = n.div_ceil(workers);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .data
+            .chunks_mut(rows_per * q)
+            .enumerate()
+            .map(|(w, chunk)| {
+                let r0 = w * rows_per;
+                Box::new(move || matmul_nt_rows(self, other, r0, chunk))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        if pool::global().scope_run(jobs).is_err() {
+            out.data.iter_mut().for_each(|v| *v = 0.0);
+            matmul_nt_rows(self, other, 0, &mut out.data);
+        }
+        out
+    }
+
+    /// Fused `selfᵀ · other` (self read column-wise in place):
+    /// `out[c][d] = Σ_r self[r][c] · other[r][d]` — the full-path weight
+    /// gradient `dW = Hᵀ dZ` without materializing `Hᵀ`.  Accumulation
+    /// per output element is ascending-r with the same zero-skip, so
+    /// the result is bitwise identical to
+    /// `self.transpose().matmul(other)`.
+    pub fn matmul_tn(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows, "tn: contraction (row) dims must agree");
+        let (n, m, q) = (self.rows, self.cols, other.cols);
+        let mut out = Mat::zeros(m, q);
+        if m == 0 || q == 0 {
+            return out;
+        }
+        if n == 0 {
+            return out;
+        }
+        let workers = plan_workers(n, m, q, m);
+        if workers <= 1 {
+            matmul_tn_cols(self, other, 0, &mut out.data);
+            return out;
+        }
+        let cols_per = m.div_ceil(workers);
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .data
+            .chunks_mut(cols_per * q)
+            .enumerate()
+            .map(|(w, chunk)| {
+                let c0 = w * cols_per;
+                Box::new(move || matmul_tn_cols(self, other, c0, chunk))
+                    as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        if pool::global().scope_run(jobs).is_err() {
+            out.data.iter_mut().for_each(|v| *v = 0.0);
+            matmul_tn_cols(self, other, 0, &mut out.data);
+        }
         out
     }
 
@@ -120,28 +247,161 @@ impl Mat {
 /// handful of output rows at the model widths this repo uses).
 const KBLOCK: usize = 64;
 
-/// Compute `out` = rows `r0..r0+out.len()/q` of `a * b`, k-blocked.
-/// Per-row accumulation stays in ascending-k order (determinism).
+/// How many worker jobs a GEMM of this shape should split into.
+/// `split` caps the split at the number of independent output chunks
+/// (rows for nn/nt, columns of the transposed operand for tn).  Returns
+/// 1 — serial — when the work would not amortize dispatch (~4M flops
+/// per worker) or when we are already *on* a pool worker, where
+/// blocking on the pool's own queue could deadlock.
+fn plan_workers(n: usize, m: usize, q: usize, split: usize) -> usize {
+    let flops = n.saturating_mul(m).saturating_mul(q);
+    let by_work = (flops >> 22).max(1);
+    if by_work <= 1 || split <= 1 || pool::on_pool_worker() {
+        return 1;
+    }
+    // Only touch (and thereby lazily spawn) the global pool once the
+    // shape has already justified parallel dispatch.
+    pool::global().size().min(by_work).min(split)
+}
+
+/// `y += s * x`, 4x unrolled.  Each element sees exactly one fused
+/// `+= s*x[j]` per call — bitwise identical to the rolled loop.
+#[inline]
+fn axpy(s: f32, x: &[f32], y: &mut [f32]) {
+    let n = y.len();
+    let x = &x[..n];
+    let mut j = 0;
+    while j + 4 <= n {
+        y[j] += s * x[j];
+        y[j + 1] += s * x[j + 1];
+        y[j + 2] += s * x[j + 2];
+        y[j + 3] += s * x[j + 3];
+        j += 4;
+    }
+    while j < n {
+        y[j] += s * x[j];
+        j += 1;
+    }
+}
+
+/// Two-destination axpy sharing one streamed source row (the register
+/// blocking of the microkernel): `y0 += s0*x`, `y1 += s1*x`.
+#[inline]
+fn axpy2(s0: f32, s1: f32, x: &[f32], y0: &mut [f32], y1: &mut [f32]) {
+    let n = y0.len();
+    let x = &x[..n];
+    let y1 = &mut y1[..n];
+    let mut j = 0;
+    while j + 4 <= n {
+        y0[j] += s0 * x[j];
+        y1[j] += s1 * x[j];
+        y0[j + 1] += s0 * x[j + 1];
+        y1[j + 1] += s1 * x[j + 1];
+        y0[j + 2] += s0 * x[j + 2];
+        y1[j + 2] += s1 * x[j + 2];
+        y0[j + 3] += s0 * x[j + 3];
+        y1[j + 3] += s1 * x[j + 3];
+        j += 4;
+    }
+    while j < n {
+        y0[j] += s0 * x[j];
+        y1[j] += s1 * x[j];
+        j += 1;
+    }
+}
+
+/// Compute `out` = rows `r0..r0+out.len()/q` of `a * b`.
+///
+/// Cache-blocked microkernel: KBLOCK k-blocks, two output rows per pass
+/// (each streamed `b` row feeds both), 4x-unrolled axpy.  Every output
+/// element still receives its `+= a[i][k]*b[k][j]` terms in ascending-k
+/// order with the same `a[i][k] == 0.0` skip, so the result is bitwise
+/// identical to the naive ascending-k serial loop.
 fn matmul_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f32]) {
     let (m, q) = (a.cols, b.cols);
     let rows = out.len() / q;
     let mut kb = 0;
     while kb < m {
         let kend = (kb + KBLOCK).min(m);
-        for i in 0..rows {
-            let arow = a.row(r0 + i);
+        let mut i = 0;
+        while i + 2 <= rows {
+            let (d0, d1) = out[i * q..(i + 2) * q].split_at_mut(q);
+            let arow0 = a.row(r0 + i);
+            let arow1 = a.row(r0 + i + 1);
+            for k in kb..kend {
+                let a0 = arow0[k];
+                let a1 = arow1[k];
+                if a0 == 0.0 && a1 == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                if a0 != 0.0 && a1 != 0.0 {
+                    axpy2(a0, a1, brow, d0, d1);
+                } else if a0 != 0.0 {
+                    axpy(a0, brow, d0);
+                } else {
+                    axpy(a1, brow, d1);
+                }
+            }
+            i += 2;
+        }
+        if i < rows {
             let dst = &mut out[i * q..(i + 1) * q];
-            for (k, &aik) in arow[kb..kend].iter().enumerate() {
+            let arow = a.row(r0 + i);
+            for k in kb..kend {
+                let aik = arow[k];
                 if aik == 0.0 {
                     continue;
                 }
-                let brow = b.row(kb + k);
-                for (d, &bv) in dst.iter_mut().zip(brow) {
-                    *d += aik * bv;
-                }
+                axpy(aik, b.row(k), dst);
             }
         }
         kb = kend;
+    }
+}
+
+/// Rows `r0..r0+out.len()/q` of `a · bᵀ` with `b` read row-wise in
+/// place (q = b.rows).  Per element: ascending-k accumulation with the
+/// `a[i][k] == 0.0` skip — bitwise identical to
+/// `a.matmul(&b.transpose())`, minus the transposed allocation.
+fn matmul_nt_rows(a: &Mat, b: &Mat, r0: usize, out: &mut [f32]) {
+    let q = b.rows;
+    let rows = out.len() / q;
+    for i in 0..rows {
+        let arow = a.row(r0 + i);
+        let dst = &mut out[i * q..(i + 1) * q];
+        for (j, d) in dst.iter_mut().enumerate() {
+            let brow = b.row(j);
+            let mut acc = *d;
+            for (&x, &y) in arow.iter().zip(brow) {
+                if x == 0.0 {
+                    continue;
+                }
+                acc += x * y;
+            }
+            *d = acc;
+        }
+    }
+}
+
+/// Rows `c0..c0+out.len()/q` of `aᵀ · b` with `a` read row-major in
+/// place (out row c is column c of `a` contracted against `b`).  The
+/// contraction index r ascends in the outer loop, so each output
+/// element accumulates in ascending-r order with the
+/// `a[r][c] == 0.0` skip — bitwise identical to
+/// `a.transpose().matmul(b)`, minus the transposed allocation.
+fn matmul_tn_cols(a: &Mat, b: &Mat, c0: usize, out: &mut [f32]) {
+    let q = b.cols;
+    for r in 0..a.rows {
+        let arow = a.row(r);
+        let brow = b.row(r);
+        for (ci, dst) in out.chunks_mut(q).enumerate() {
+            let s = arow[c0 + ci];
+            if s == 0.0 {
+                continue;
+            }
+            axpy(s, brow, dst);
+        }
     }
 }
 

@@ -108,6 +108,45 @@
 //! [`memsim`] reproduces the paper's analytic memory tables;
 //! [`estimator`] is the pure-Rust estimator math shared by the ops
 //! layer, the property tests and the Fig. 3 analyses.
+//!
+//! ## Performance: the GEMM hot path and the committed baselines
+//!
+//! Every GEMM in the stack routes through four kernels on
+//! [`estimator::Mat`], all bitwise-identical to the serial reference
+//! (`tests/kernel_identity.rs` proves it, so no trained-loss or
+//! byte-count pin moves with the kernel):
+//!
+//! * [`estimator::Mat::matmul`] — cache-blocked, unrolled microkernel,
+//!   row-parallel across the lazily-spawned persistent
+//!   [`util::pool::global`] worker pool once the problem amortizes
+//!   dispatch (no per-call thread spawns; nested calls from pool
+//!   workers degrade to serial instead of deadlocking).
+//! * [`estimator::Mat::matmul_nt`] / [`estimator::Mat::matmul_tn`] —
+//!   fused `A·Bᵀ` / `Aᵀ·B` that read the transposed operand in place:
+//!   the backward `dH = dZ Wᵀ` and full-path `dW = Hᵀ dZ` no longer
+//!   materialize a transposed copy per layer per step.
+//! * The sampled `dW` gather in [`ops::SavedContext::backward_dw`] is
+//!   blocked over output columns so one block stays hot while all k
+//!   pairs stream through it.
+//!
+//! The improvement is *measured and committed*: `BENCH_table3.json` and
+//! `BENCH_fig9.json` at the repo root record latency entries plus the
+//! pre/post band of this overhaul (the pre-change spawn-per-call
+//! dispatch survives as `Mat::matmul_spawning` purely so the band stays
+//! measurable).  Regenerate them natively with
+//!
+//! ```text
+//! WTACRS_BENCH_BASELINE=1 WTACRS_BENCH_BASELINE_DIR=$(git rev-parse --show-toplevel) \
+//!     cargo bench --bench table3_latency --bench fig9_throughput
+//! ```
+//!
+//! (`WTACRS_BENCH_MODE` in {`quick`, `smoke`, `full`} scales the grids;
+//! unknown values are an error, not a silent quick run.  On hosts
+//! without a Rust toolchain, `python/mirror/bench_baseline.py` emits
+//! the same schema with provenance `"python-mirror-numpy"`.)  CI's
+//! `bench-smoke` job re-emits the schema every PR and
+//! `tests/bench_baseline.rs` validates the committed files — every
+//! later PR must beat the baselines they record.
 // Numeric-kernel style: index loops over matrix dims read as the math
 // they implement, and coordinator plumbing passes wide tuples; the
 // pedantic rewrites clippy suggests would obscure both.  Everything

@@ -346,11 +346,12 @@ impl Module for LoraAdapter {
         let bw = sctx.backward(&dy, &self.b.w);
         ctx.store_norms(self.layer, &bw.refreshed_norms)?;
         self.b.set_grad(bw.dw);
-        self.a.set_grad(x.transpose().matmul(&bw.dh));
+        self.a.set_grad(x.matmul_tn(&bw.dh));
         if self.input_grad {
-            // dx flows through both the frozen trunk and the adapter.
-            let mut dx = dy.matmul(&self.frozen_w.transpose());
-            dx.add_assign(&bw.dh.matmul(&self.a.w.transpose()));
+            // dx flows through both the frozen trunk and the adapter —
+            // fused nt GEMMs, no transposed weight copies.
+            let mut dx = dy.matmul_nt(&self.frozen_w);
+            dx.add_assign(&bw.dh.matmul_nt(&self.a.w));
             Ok(dx)
         } else {
             Ok(Mat::zeros(0, 0))

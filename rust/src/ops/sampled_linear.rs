@@ -30,6 +30,11 @@ use crate::util::rng::Rng;
 
 use super::spec::SamplerSpec;
 
+/// Output-column block of the sampled `dW` gather: 128 f32 columns
+/// (512 B) of each destination row stay resident while all k pairs
+/// stream through the block.
+const DW_JBLOCK: usize = 128;
+
 /// Which axis of `H` the weight-gradient GEMM contracts over, and how
 /// contraction rows map to gradient-norm-cache slots.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -138,14 +143,29 @@ impl SampledLinear {
                     total += *wi;
                 }
                 let probs: Vec<f64> = wts.iter().map(|v| v / total).collect();
-                let (indices, scales) = select(spec.kind, &probs, k, rng);
+                if n > u32::MAX as usize {
+                    bail!(
+                        "ops::SampledLinear::forward: contraction length {n} \
+                         exceeds the u32 index range of the saved context"
+                    );
+                }
+                let (sel_idx, sel_sc) = select(spec.kind, &probs, k, rng);
                 // Store only the k selected rows, pre-scaled (s_i · H_i).
+                // Indices narrow to u32 and scales to f32 — the paper's
+                // f32 memory model — and the f32 scale is exactly the
+                // value the pre-scaling below multiplies by, so nothing
+                // downstream changes.
                 let mut rows = Mat::zeros(k, h.cols);
-                for (j, (&i, &s)) in indices.iter().zip(&scales).enumerate() {
+                let mut indices = Vec::with_capacity(k);
+                let mut scales = Vec::with_capacity(k);
+                for (j, (&i, &s)) in sel_idx.iter().zip(&sel_sc).enumerate() {
+                    let s32 = s as f32;
+                    indices.push(i as u32);
+                    scales.push(s32);
                     let src = h.row(i);
                     let dst = &mut rows.data[j * h.cols..(j + 1) * h.cols];
                     for (d, &v) in dst.iter_mut().zip(src) {
-                        *d = v * s as f32;
+                        *d = v * s32;
                     }
                 }
                 SavedActs::Sampled { indices, rows, scales }
@@ -175,14 +195,17 @@ impl SampledLinear {
 enum SavedActs {
     /// Exact path: the whole activation matrix, owned.
     Full(Mat),
-    /// Sub-sampled path: only the k selected column-row pairs.
+    /// Sub-sampled path: only the k selected column-row pairs, in the
+    /// paper's f32 memory model — 4-byte `u32` indices and 4-byte `f32`
+    /// scales, not the 8-byte `usize`/`f64` that used to inflate
+    /// [`SavedContext::saved_bytes`].
     Sampled {
         /// Selected contraction-row indices (selection order).
-        indices: Vec<usize>,
+        indices: Vec<u32>,
         /// Selected `H` rows, pre-scaled by the selection scale (k × d_in).
         rows: Mat,
         /// The selection scales (1.0 on deterministic WTA slots).
-        scales: Vec<f64>,
+        scales: Vec<f32>,
     },
 }
 
@@ -227,7 +250,9 @@ impl SavedContext {
             "backward weight must match the forward weight's shape"
         );
         let (dw, refreshed_norms) = self.backward_dw(dz);
-        let dh = dz.matmul(&w.transpose());
+        // Fused nt GEMM: reads W row-wise in place — no transposed copy
+        // of the weight per layer per step.
+        let dh = dz.matmul_nt(w);
         LinearBackward { dw, dh, refreshed_norms }
     }
 
@@ -238,22 +263,34 @@ impl SavedContext {
         assert_eq!(dz.rows, self.n, "dZ rows must match the contraction length");
         assert_eq!(dz.cols, self.d_out, "dZ cols must match the output width");
         let dw = match &self.saved {
-            SavedActs::Full(h) => h.transpose().matmul(dz),
+            // Fused tn GEMM: contracts over H's rows in place — no Hᵀ
+            // copy on the exact path.
+            SavedActs::Full(h) => h.matmul_tn(dz),
             SavedActs::Sampled { indices, rows, .. } => {
                 let (din, dout) = (self.d_in, dz.cols);
                 let mut out = Mat::zeros(din, dout);
-                for (j, &i) in indices.iter().enumerate() {
-                    let drow = dz.row(i);
-                    let hrow = rows.row(j);
-                    for (ci, &hv) in hrow.iter().enumerate() {
-                        if hv == 0.0 {
-                            continue;
-                        }
-                        let dst = &mut out.data[ci * dout..(ci + 1) * dout];
-                        for (d, &dv) in dst.iter_mut().zip(drow) {
-                            *d += hv * dv;
+                // Blocked over d_out: one block of output columns stays
+                // hot while all k pairs stream through it.  Per output
+                // element the ascending-j (selection-order) accumulation
+                // and the `hv == 0.0` skip are unchanged, so results
+                // match the unblocked gather bitwise.
+                let mut cb = 0;
+                while cb < dout {
+                    let cend = (cb + DW_JBLOCK).min(dout);
+                    for (j, &i) in indices.iter().enumerate() {
+                        let drow = &dz.row(i as usize)[cb..cend];
+                        let hrow = rows.row(j);
+                        for (ci, &hv) in hrow.iter().enumerate() {
+                            if hv == 0.0 {
+                                continue;
+                            }
+                            let dst = &mut out.data[ci * dout + cb..ci * dout + cend];
+                            for (d, &dv) in dst.iter_mut().zip(drow) {
+                                *d += hv * dv;
+                            }
                         }
                     }
+                    cb = cend;
                 }
                 out
             }
@@ -285,8 +322,8 @@ impl SavedContext {
             SavedActs::Full(h) => h.data.len() * std::mem::size_of::<f32>(),
             SavedActs::Sampled { indices, rows, scales } => {
                 rows.data.len() * std::mem::size_of::<f32>()
-                    + indices.len() * std::mem::size_of::<usize>()
-                    + scales.len() * std::mem::size_of::<f64>()
+                    + indices.len() * std::mem::size_of::<u32>()
+                    + scales.len() * std::mem::size_of::<f32>()
             }
         }
     }
@@ -306,7 +343,7 @@ impl SavedContext {
 
     /// The selection (indices, scales) — `None` on the exact path.
     /// Diagnostics surface for sampling analyses (Fig. 3/12-style).
-    pub fn selection(&self) -> Option<(&[usize], &[f64])> {
+    pub fn selection(&self) -> Option<(&[u32], &[f32])> {
         match &self.saved {
             SavedActs::Full(_) => None,
             SavedActs::Sampled { indices, scales, .. } => {

@@ -2,11 +2,18 @@
 //! offline; `cargo bench` targets use `harness = false` and this module).
 //!
 //! Features: warmup, adaptive iteration count targeting a measurement
-//! budget, mean/std/percentiles, throughput units, and aligned table
-//! printing shared by the paper-reproduction benches.
+//! budget, mean/std/percentiles, throughput units, aligned table
+//! printing shared by the paper-reproduction benches, and — for the
+//! committed-baseline workflow — [`BenchResult::to_json`] plus
+//! [`write_baseline`]/[`validate_baseline`] for the `BENCH_*.json`
+//! files `table3_latency` and `fig9_throughput` maintain at the repo
+//! root.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
+use super::error::{Context, Result};
+use super::json::{self, Json};
 use super::stats::{percentile, Summary};
 
 #[derive(Debug, Clone)]
@@ -58,6 +65,18 @@ impl BenchResult {
     /// items/sec given items processed per iteration.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.mean.as_secs_f64()
+    }
+    /// Serialize the timing stats as a `BENCH_*.json` entry.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("name", json::s(&self.name)),
+            ("iters", json::num(self.iters as f64)),
+            ("mean_ms", json::num(self.mean.as_secs_f64() * 1e3)),
+            ("std_ms", json::num(self.std.as_secs_f64() * 1e3)),
+            ("p50_ms", json::num(self.p50.as_secs_f64() * 1e3)),
+            ("p99_ms", json::num(self.p99.as_secs_f64() * 1e3)),
+            ("min_ms", json::num(self.min.as_secs_f64() * 1e3)),
+        ])
     }
 }
 
@@ -142,10 +161,132 @@ impl Table {
     }
 }
 
-/// Reads WTACRS_BENCH_MODE ("quick"|"full", default quick) — the paper
-/// benches scale their workloads by this.
-pub fn bench_mode_full() -> bool {
-    std::env::var("WTACRS_BENCH_MODE").map(|v| v == "full").unwrap_or(false)
+/// Workload scaling of the paper benches, parsed strictly from
+/// `WTACRS_BENCH_MODE` by [`bench_mode`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchMode {
+    /// Default: trimmed grids, ~seconds per bench.
+    Quick,
+    /// Single-core-friendly CI pass that still hits every code path.
+    Smoke,
+    /// The paper-sized grids.
+    Full,
+}
+
+impl BenchMode {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BenchMode::Quick => "quick",
+            BenchMode::Smoke => "smoke",
+            BenchMode::Full => "full",
+        }
+    }
+}
+
+/// Reads `WTACRS_BENCH_MODE` ("quick" | "smoke" | "full"; unset
+/// defaults to quick).  Any other value — e.g. the typo `"Full"` — is
+/// an error naming the variable, not a silent quick run.
+pub fn bench_mode() -> Result<BenchMode> {
+    match std::env::var("WTACRS_BENCH_MODE") {
+        Err(std::env::VarError::NotPresent) => Ok(BenchMode::Quick),
+        Err(std::env::VarError::NotUnicode(_)) => {
+            Err(crate::anyhow!("WTACRS_BENCH_MODE: value is not valid unicode"))
+        }
+        Ok(v) => match v.as_str() {
+            "quick" => Ok(BenchMode::Quick),
+            "smoke" => Ok(BenchMode::Smoke),
+            "full" => Ok(BenchMode::Full),
+            other => Err(crate::anyhow!(
+                "WTACRS_BENCH_MODE: unknown value {other:?} (expected \
+                 \"quick\", \"smoke\" or \"full\")"
+            )),
+        },
+    }
+}
+
+/// Write a validated baseline document as `BENCH_{short}.json` in the
+/// directory `WTACRS_BENCH_BASELINE_DIR` names (default: the current
+/// directory — the repo root, where the committed baselines live).
+pub fn write_baseline(short: &str, v: &Json) -> Result<PathBuf> {
+    // Never let a malformed document replace a committed baseline.
+    validate_baseline(v)
+        .with_context(|| format!("BENCH_{short}.json: refusing to write"))?;
+    let dir = std::env::var("WTACRS_BENCH_BASELINE_DIR")
+        .unwrap_or_else(|_| ".".to_string());
+    let path = Path::new(&dir).join(format!("BENCH_{short}.json"));
+    let mut body = json::write(v);
+    body.push('\n');
+    std::fs::write(&path, body)
+        .with_context(|| format!("writing {}", path.display()))?;
+    Ok(path)
+}
+
+/// Schema check for a `BENCH_*.json` baseline document:
+///
+/// - `bench`, `mode`, `provenance`: non-empty strings;
+/// - `entries`: non-empty array, each entry an object with a `name`
+///   string and at least one `*_ms` latency, every `*_ms` field finite
+///   and positive;
+/// - `baseline`: object with a `workload` string, a `band` string, and
+///   finite positive `pre_change_ms` / `post_change_ms` / `speedup` —
+///   the measured pre/post improvement band of the kernel change.
+pub fn validate_baseline(v: &Json) -> Result<()> {
+    for key in ["bench", "mode", "provenance"] {
+        let s = v
+            .get(key)
+            .and_then(Json::as_str)
+            .with_context(|| format!("baseline: missing string key {key:?}"))?;
+        crate::ensure!(!s.is_empty(), "baseline: key {key:?} is empty");
+    }
+    let entries = v
+        .get("entries")
+        .and_then(Json::as_arr)
+        .context("baseline: missing array key \"entries\"")?;
+    crate::ensure!(!entries.is_empty(), "baseline: \"entries\" is empty");
+    for (i, e) in entries.iter().enumerate() {
+        let obj = e
+            .as_obj()
+            .with_context(|| format!("baseline: entries[{i}] is not an object"))?;
+        obj.get("name")
+            .and_then(Json::as_str)
+            .with_context(|| format!("baseline: entries[{i}] has no name"))?;
+        let mut latencies = 0usize;
+        for (k, val) in obj {
+            if !k.ends_with("_ms") {
+                continue;
+            }
+            latencies += 1;
+            let ms = val.as_f64().with_context(|| {
+                format!("baseline: entries[{i}].{k} is not a number")
+            })?;
+            crate::ensure!(
+                ms.is_finite() && ms > 0.0,
+                "baseline: entries[{i}].{k} = {ms} is not finite and positive"
+            );
+        }
+        crate::ensure!(
+            latencies > 0,
+            "baseline: entries[{i}] carries no *_ms latency"
+        );
+    }
+    let base = v.get("baseline").context("baseline: missing key \"baseline\"")?;
+    base.get("workload")
+        .and_then(Json::as_str)
+        .context("baseline: baseline.workload missing")?;
+    base.get("band")
+        .and_then(Json::as_str)
+        .context("baseline: baseline.band missing")?;
+    for key in ["pre_change_ms", "post_change_ms", "speedup"] {
+        let n = base
+            .get(key)
+            .and_then(Json::as_f64)
+            .with_context(|| format!("baseline: baseline.{key} missing"))?;
+        crate::ensure!(
+            n.is_finite() && n > 0.0,
+            "baseline: baseline.{key} = {n} is not finite and positive"
+        );
+    }
+    Ok(())
 }
 
 pub fn fmt_ms(d: Duration) -> String {
@@ -194,5 +335,144 @@ mod tests {
         let mut t = Table::new(&["a", "bb"]);
         t.row_strs(&["1", "2"]);
         t.print(); // just exercise the alignment code
+    }
+
+    #[test]
+    fn bench_mode_parses_strictly() {
+        // One sequential test owns the env var: parallel test threads
+        // must not race on process-global state.
+        std::env::remove_var("WTACRS_BENCH_MODE");
+        assert_eq!(bench_mode().unwrap(), BenchMode::Quick);
+        for (v, want) in [
+            ("quick", BenchMode::Quick),
+            ("smoke", BenchMode::Smoke),
+            ("full", BenchMode::Full),
+        ] {
+            std::env::set_var("WTACRS_BENCH_MODE", v);
+            assert_eq!(bench_mode().unwrap(), want);
+            assert_eq!(want.as_str(), v);
+        }
+        // The motivating bug: "Full" used to run silently in quick
+        // mode.  Unknown values must error, naming the variable.
+        for bad in ["Full", "QUICK", "fast", ""] {
+            std::env::set_var("WTACRS_BENCH_MODE", bad);
+            let e = bench_mode().unwrap_err().to_string();
+            assert!(
+                e.contains("WTACRS_BENCH_MODE") && e.contains(bad),
+                "{bad:?}: {e}"
+            );
+        }
+        std::env::remove_var("WTACRS_BENCH_MODE");
+    }
+
+    fn valid_baseline() -> Json {
+        json::obj(vec![
+            ("bench", json::s("table3_latency")),
+            ("mode", json::s("quick")),
+            ("provenance", json::s("rust-native")),
+            (
+                "entries",
+                json::arr(vec![json::obj(vec![
+                    ("name", json::s("tiny/wtacrs30/step")),
+                    ("mean_ms", json::num(3.25)),
+                    ("p50_ms", json::num(3.1)),
+                ])]),
+            ),
+            (
+                "baseline",
+                json::obj(vec![
+                    ("workload", json::s("tiny/wtacrs30/step")),
+                    ("band", json::s("1.1-1.4x")),
+                    ("pre_change_ms", json::num(4.2)),
+                    ("post_change_ms", json::num(3.25)),
+                    ("speedup", json::num(4.2 / 3.25)),
+                ]),
+            ),
+        ])
+    }
+
+    #[test]
+    fn baseline_schema_accepts_valid_and_names_defects() {
+        validate_baseline(&valid_baseline()).unwrap();
+
+        // Each required piece, removed or corrupted, must be named.
+        let mut m = match valid_baseline() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.remove("provenance");
+        let e = validate_baseline(&Json::Obj(m)).unwrap_err().to_string();
+        assert!(e.contains("provenance"), "{e}");
+
+        let mut m = match valid_baseline() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        m.insert("entries".into(), json::arr(vec![]));
+        let e = validate_baseline(&Json::Obj(m)).unwrap_err().to_string();
+        assert!(e.contains("entries"), "{e}");
+
+        // A NaN / non-positive latency is the rot the CI job guards
+        // against.
+        for bad in [f64::NAN, 0.0, -1.0] {
+            let mut m = match valid_baseline() {
+                Json::Obj(m) => m,
+                _ => unreachable!(),
+            };
+            m.insert(
+                "entries".into(),
+                json::arr(vec![json::obj(vec![
+                    ("name", json::s("x")),
+                    ("mean_ms", json::num(bad)),
+                ])]),
+            );
+            let e = validate_baseline(&Json::Obj(m)).unwrap_err().to_string();
+            assert!(e.contains("mean_ms"), "{bad}: {e}");
+        }
+
+        let mut m = match valid_baseline() {
+            Json::Obj(m) => m,
+            _ => unreachable!(),
+        };
+        let Some(Json::Obj(mut b)) = m.remove("baseline") else { unreachable!() };
+        b.insert("speedup".into(), json::num(f64::INFINITY));
+        m.insert("baseline".into(), Json::Obj(b));
+        let e = validate_baseline(&Json::Obj(m)).unwrap_err().to_string();
+        assert!(e.contains("speedup"), "{e}");
+    }
+
+    #[test]
+    fn bench_result_serializes_and_roundtrips() {
+        let r = BenchResult {
+            name: "k".into(),
+            iters: 12,
+            mean: Duration::from_millis(3),
+            std: Duration::from_micros(40),
+            p50: Duration::from_millis(3),
+            p99: Duration::from_millis(4),
+            min: Duration::from_millis(2),
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("name").and_then(Json::as_str), Some("k"));
+        assert_eq!(j.get("iters").and_then(Json::as_f64), Some(12.0));
+        assert!((j.get("mean_ms").and_then(Json::as_f64).unwrap() - 3.0).abs() < 1e-9);
+        let text = json::write(&j);
+        assert_eq!(json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn write_baseline_refuses_malformed_documents() {
+        let dir = std::env::temp_dir().join("wtacrs_bench_baseline_test");
+        let _ = std::fs::create_dir_all(&dir);
+        std::env::set_var("WTACRS_BENCH_BASELINE_DIR", &dir);
+        let path = write_baseline("selftest", &valid_baseline()).unwrap();
+        let back = json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        validate_baseline(&back).unwrap();
+        let e = write_baseline("selftest", &json::obj(vec![]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("refusing to write"), "{e}");
+        std::env::remove_var("WTACRS_BENCH_BASELINE_DIR");
+        let _ = std::fs::remove_file(path);
     }
 }

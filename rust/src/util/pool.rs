@@ -1,14 +1,53 @@
-//! Fixed-size worker thread pool over std::sync::mpsc (no tokio offline).
+//! Persistent worker thread pool over std::sync::mpsc (no tokio offline).
 //!
-//! The coordinator uses it for parallel data generation, multi-seed
-//! experiment fan-out, and async metric evaluation; `scope`-style joins
-//! keep lifetimes simple.
+//! Two dispatch surfaces share one set of long-lived workers:
+//!
+//! - [`ThreadPool::map`] — order-preserving parallel map over owned
+//!   (`'static`) items, used by the coordinator for multi-seed sweep
+//!   fan-out.  A panicking job is caught on the worker, reported as a
+//!   named [`util::error`](crate::util::error) value, and the surviving
+//!   workers stay usable — one bad seed no longer poisons the pool.
+//! - [`ThreadPool::scope_run`] — scoped dispatch of *borrowing* jobs
+//!   (non-`'static` closures over caller-owned slices), which is what
+//!   lets the GEMM hot path ([`crate::estimator::Mat::matmul`]) split an
+//!   output buffer across the persistent workers instead of paying a
+//!   `thread::spawn` per call.  The call does not return until every
+//!   dispatched job has finished (or been dropped unrun), so the
+//!   borrows can never outlive the caller's frame.
+//!
+//! The GEMM path goes through the lazily-initialized process-wide
+//! [`global`] pool; [`on_pool_worker`] lets nested code detect that it
+//! is already running *on* a pool worker and fall back to serial work
+//! rather than deadlocking on its own queue.
 
+use std::cell::Cell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::mpsc;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock};
 use std::thread;
 
+use crate::util::error::Result;
+
 type Job = Box<dyn FnOnce() + Send + 'static>;
+
+thread_local! {
+    static ON_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// True when the current thread is a pool worker (any [`ThreadPool`]).
+/// Blocking on pool completion from a worker can deadlock a saturated
+/// pool, so nested parallel work must run serially instead.
+pub fn on_pool_worker() -> bool {
+    ON_POOL_WORKER.with(|f| f.get())
+}
+
+/// The process-wide pool the GEMM hot path dispatches to.  Initialized
+/// lazily on the first large-enough matmul, sized to the machine, and
+/// never torn down (workers park in `recv` between calls).
+pub fn global() -> &'static ThreadPool {
+    static GLOBAL: OnceLock<ThreadPool> = OnceLock::new();
+    GLOBAL.get_or_init(ThreadPool::with_default_parallelism)
+}
 
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
@@ -25,14 +64,30 @@ impl ThreadPool {
                 let rx = Arc::clone(&rx);
                 thread::Builder::new()
                     .name(format!("wtacrs-worker-{i}"))
-                    .spawn(move || loop {
-                        let job = {
-                            let guard = rx.lock().unwrap();
-                            guard.recv()
-                        };
-                        match job {
-                            Ok(job) => job(),
-                            Err(_) => break, // channel closed
+                    .spawn(move || {
+                        ON_POOL_WORKER.with(|f| f.set(true));
+                        loop {
+                            let job = {
+                                let guard = match rx.lock() {
+                                    Ok(g) => g,
+                                    // A sibling worker panicked while
+                                    // holding the receiver lock; the
+                                    // queue itself is still sound.
+                                    Err(poisoned) => poisoned.into_inner(),
+                                };
+                                guard.recv()
+                            };
+                            match job {
+                                // A panicking job must not take the
+                                // worker down with it: catch it here and
+                                // let the dispatch surface (map /
+                                // scope_run) report it — the pool keeps
+                                // serving later jobs.
+                                Ok(job) => {
+                                    let _ = catch_unwind(AssertUnwindSafe(job));
+                                }
+                                Err(_) => break, // channel closed
+                            }
                         }
                     })
                     .expect("spawn worker")
@@ -46,16 +101,35 @@ impl ThreadPool {
         Self::new(n)
     }
 
-    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
-        self.tx
-            .as_ref()
-            .expect("pool shut down")
-            .send(Box::new(f))
-            .expect("worker channel closed");
+    /// Worker count (fixed at construction).
+    pub fn size(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Enqueue a fire-and-forget job.  Errors (instead of panicking) if
+    /// the pool has been shut down.
+    pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) -> Result<()> {
+        self.send_job(Box::new(f))
+    }
+
+    fn send_job(&self, job: Job) -> Result<()> {
+        let tx = match self.tx.as_ref() {
+            Some(tx) => tx,
+            None => crate::bail!("util::pool::ThreadPool: pool is shut down"),
+        };
+        if tx.send(job).is_err() {
+            crate::bail!("util::pool::ThreadPool: worker channel closed");
+        }
+        Ok(())
     }
 
     /// Map `f` over `items` in parallel, preserving order.
-    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    ///
+    /// A panicking invocation of `f` is caught on the worker and
+    /// surfaced here as an error naming the item index and the panic
+    /// payload; the workers survive and the pool remains usable for
+    /// subsequent `map`/`execute`/`scope_run` calls.
+    pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Result<Vec<R>>
     where
         T: Send + 'static,
         R: Send + 'static,
@@ -63,21 +137,130 @@ impl ThreadPool {
     {
         let n = items.len();
         let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        let (rtx, rrx) = mpsc::channel::<(usize, std::result::Result<R, String>)>();
         for (i, item) in items.into_iter().enumerate() {
             let f = Arc::clone(&f);
             let rtx = rtx.clone();
             self.execute(move || {
-                let r = f(item);
+                let r = catch_unwind(AssertUnwindSafe(|| f(item)))
+                    .map_err(|p| panic_message(p.as_ref()));
                 let _ = rtx.send((i, r));
-            });
+            })?;
         }
         drop(rtx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        let mut first_panic: Option<(usize, String)> = None;
         for (i, r) in rrx {
-            out[i] = Some(r);
+            match r {
+                Ok(v) => out[i] = Some(v),
+                Err(msg) => {
+                    if first_panic.is_none() {
+                        first_panic = Some((i, msg));
+                    }
+                }
+            }
         }
-        out.into_iter().map(|o| o.expect("worker panicked")).collect()
+        if let Some((i, msg)) = first_panic {
+            crate::bail!("util::pool::ThreadPool::map: job {i} panicked: {msg}");
+        }
+        let mut res = Vec::with_capacity(n);
+        for (i, o) in out.into_iter().enumerate() {
+            match o {
+                Some(v) => res.push(v),
+                // A job was dropped unrun (workers gone mid-flight).
+                None => crate::bail!(
+                    "util::pool::ThreadPool::map: job {i} was dropped before running"
+                ),
+            }
+        }
+        Ok(res)
+    }
+
+    /// Scoped dispatch: run borrowing jobs on the pool and wait for all
+    /// of them to finish before returning (panicked jobs count as
+    /// finished and are reported in the error).  Because this blocks
+    /// until every job has either run to completion, panicked, or been
+    /// dropped unrun, the jobs may safely borrow from the caller's
+    /// stack frame — the `'scope` lifetime never escapes the call.
+    ///
+    /// Do not call from within a pool job of the *same* pool: with all
+    /// workers busy the queued jobs can never start and the wait blocks
+    /// forever.  Hot-path callers check [`on_pool_worker`] and run
+    /// serially instead.
+    pub fn scope_run<'scope>(
+        &self,
+        jobs: Vec<Box<dyn FnOnce() + Send + 'scope>>,
+    ) -> Result<()> {
+        let total = jobs.len();
+        let (done_tx, done_rx) = mpsc::channel::<std::result::Result<(), String>>();
+        let mut send_err = None;
+        let mut sent = 0usize;
+        for job in jobs {
+            let tx = done_tx.clone();
+            let wrapped: Box<dyn FnOnce() + Send + 'scope> = Box::new(move || {
+                let r = catch_unwind(AssertUnwindSafe(job))
+                    .map_err(|p| panic_message(p.as_ref()));
+                let _ = tx.send(r);
+            });
+            // SAFETY: the job borrows data living at least for 'scope.
+            // This function does not return until the completion loop
+            // below has observed every dispatched wrapper either signal
+            // completion or be dropped unrun (its channel clone closes),
+            // so no borrow is ever used after the caller's frame ends.
+            let wrapped: Job = unsafe {
+                std::mem::transmute::<
+                    Box<dyn FnOnce() + Send + 'scope>,
+                    Box<dyn FnOnce() + Send + 'static>,
+                >(wrapped)
+            };
+            if let Err(e) = self.send_job(wrapped) {
+                send_err = Some(e);
+                break;
+            }
+            sent += 1;
+        }
+        drop(done_tx);
+        let mut finished = 0usize;
+        let mut first_panic: Option<String> = None;
+        while finished < sent {
+            match done_rx.recv() {
+                Ok(Ok(())) => finished += 1,
+                Ok(Err(msg)) => {
+                    finished += 1;
+                    if first_panic.is_none() {
+                        first_panic = Some(msg);
+                    }
+                }
+                // All live senders gone: every remaining wrapper was
+                // dropped unrun (queue destroyed), so no borrow is
+                // outstanding and it is safe to return.
+                Err(_) => break,
+            }
+        }
+        if let Some(e) = send_err {
+            return Err(e.wrap("util::pool::ThreadPool::scope_run"));
+        }
+        if sent < total {
+            crate::bail!(
+                "util::pool::ThreadPool::scope_run: {} of {total} jobs dispatched",
+                sent
+            );
+        }
+        if let Some(msg) = first_panic {
+            crate::bail!("util::pool::ThreadPool::scope_run: job panicked: {msg}");
+        }
+        Ok(())
+    }
+}
+
+/// Best-effort extraction of a panic payload message.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
     }
 }
 
@@ -103,7 +286,8 @@ mod tests {
             let c = Arc::clone(&counter);
             pool.execute(move || {
                 c.fetch_add(1, Ordering::SeqCst);
-            });
+            })
+            .unwrap();
         }
         drop(pool); // join
         assert_eq!(counter.load(Ordering::SeqCst), 100);
@@ -112,14 +296,118 @@ mod tests {
     #[test]
     fn map_preserves_order() {
         let pool = ThreadPool::new(3);
-        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * x);
+        let out = pool.map((0..50).collect::<Vec<u64>>(), |x| x * x).unwrap();
         assert_eq!(out, (0..50).map(|x| x * x).collect::<Vec<u64>>());
     }
 
     #[test]
     fn map_empty() {
         let pool = ThreadPool::new(2);
-        let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| x);
+        let out: Vec<u32> = pool.map(Vec::<u32>::new(), |x| x).unwrap();
         assert!(out.is_empty());
+    }
+
+    #[test]
+    fn panicking_job_is_reported_and_pool_survives() {
+        // The former panic path: one bad job used to poison the whole
+        // pool ("worker panicked" expect).  Now the panic comes back as
+        // a named error and the same pool still completes normal work.
+        let pool = ThreadPool::new(2);
+        let e = pool
+            .map(vec![0u32, 1, 2, 3], |x| {
+                if x == 2 {
+                    panic!("boom at {x}");
+                }
+                x * 10
+            })
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("util::pool::ThreadPool::map") && e.contains("panicked"),
+            "{e}"
+        );
+        assert!(e.contains("boom at 2"), "payload lost: {e}");
+        // Surviving workers keep serving both dispatch surfaces.
+        let out = pool.map(vec![1u32, 2, 3], |x| x + 1).unwrap();
+        assert_eq!(out, vec![2, 3, 4]);
+        let mut acc = vec![0u64; 4];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = acc
+            .iter_mut()
+            .enumerate()
+            .map(|(i, slot)| {
+                Box::new(move || *slot = i as u64 + 7) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope_run(jobs).unwrap();
+        assert_eq!(acc, vec![7, 8, 9, 10]);
+    }
+
+    #[test]
+    fn scope_run_borrows_caller_data() {
+        let pool = ThreadPool::new(3);
+        let input: Vec<u64> = (0..64).collect();
+        let mut out = vec![0u64; 64];
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = out
+            .chunks_mut(16)
+            .enumerate()
+            .map(|(w, chunk)| {
+                let src = &input[w * 16..(w + 1) * 16];
+                Box::new(move || {
+                    for (d, s) in chunk.iter_mut().zip(src) {
+                        *d = s * s;
+                    }
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        pool.scope_run(jobs).unwrap();
+        assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn scope_run_reports_panics_and_completes_siblings() {
+        let pool = ThreadPool::new(2);
+        let flags: Vec<AtomicUsize> = (0..8).map(|_| AtomicUsize::new(0)).collect();
+        let jobs: Vec<Box<dyn FnOnce() + Send + '_>> = flags
+            .iter()
+            .enumerate()
+            .map(|(i, f)| {
+                Box::new(move || {
+                    if i == 3 {
+                        panic!("scoped boom");
+                    }
+                    f.store(1, Ordering::SeqCst);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        let e = pool.scope_run(jobs).unwrap_err().to_string();
+        assert!(e.contains("scope_run") && e.contains("scoped boom"), "{e}");
+        // Every non-panicking sibling still ran to completion.
+        for (i, f) in flags.iter().enumerate() {
+            if i != 3 {
+                assert_eq!(f.load(Ordering::SeqCst), 1, "job {i} skipped");
+            }
+        }
+        // And the pool is still alive afterwards.
+        assert_eq!(pool.map(vec![5u32], |x| x).unwrap(), vec![5]);
+    }
+
+    #[test]
+    fn worker_flag_is_set_on_pool_threads_only() {
+        assert!(!on_pool_worker());
+        let pool = ThreadPool::new(1);
+        let seen = pool.map(vec![()], |_| on_pool_worker()).unwrap();
+        assert_eq!(seen, vec![true]);
+        assert!(!on_pool_worker());
+    }
+
+    #[test]
+    fn global_pool_is_persistent_and_sized() {
+        let p = global();
+        assert!(p.size() >= 1);
+        // Two dispatches hit the same worker set (no respawn between
+        // calls): both complete, and the pointer identity is stable.
+        assert_eq!(p.map(vec![1u32, 2], |x| x * 2).unwrap(), vec![2, 4]);
+        assert!(std::ptr::eq(p, global()));
+        assert_eq!(p.map(vec![3u32], |x| x + 1).unwrap(), vec![4]);
     }
 }

@@ -1,0 +1,61 @@
+//! The committed `BENCH_table3.json` / `BENCH_fig9.json` baselines at
+//! the repo root must always parse and satisfy the schema
+//! [`wtacrs::util::bench::validate_baseline`] enforces — CI runs this
+//! so a hand-edit or a broken regeneration can't silently rot the
+//! numbers later PRs are measured against.
+
+use std::path::Path;
+
+use wtacrs::util::bench::validate_baseline;
+use wtacrs::util::json::{self, Json};
+
+fn load(name: &str) -> Json {
+    // CARGO_MANIFEST_DIR is rust/; the baselines live at the repo root.
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name);
+    let body = std::fs::read_to_string(&path)
+        .unwrap_or_else(|e| panic!("{}: {e}", path.display()));
+    json::parse(&body).unwrap_or_else(|e| panic!("{name}: parse error: {e:?}"))
+}
+
+#[test]
+fn committed_baselines_satisfy_schema() {
+    for name in ["BENCH_table3.json", "BENCH_fig9.json"] {
+        let doc = load(name);
+        validate_baseline(&doc).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn committed_baselines_record_the_wtacrs30_band() {
+    // The acceptance artifact: each baseline carries the measured
+    // pre/post band of the kernel overhaul on the wtacrs30 step
+    // workload, with speedup consistent with the recorded latencies.
+    for name in ["BENCH_table3.json", "BENCH_fig9.json"] {
+        let doc = load(name);
+        let base = doc.get("baseline").expect("baseline block");
+        let workload = base.get("workload").and_then(Json::as_str).unwrap();
+        assert!(
+            workload.contains("wtacrs30"),
+            "{name}: workload {workload:?} does not name the wtacrs30 step"
+        );
+        let pre = base.get("pre_change_ms").and_then(Json::as_f64).unwrap();
+        let post = base.get("post_change_ms").and_then(Json::as_f64).unwrap();
+        let speedup = base.get("speedup").and_then(Json::as_f64).unwrap();
+        assert!(
+            (speedup - pre / post).abs() < 1e-6 * speedup.abs(),
+            "{name}: speedup {speedup} inconsistent with {pre}/{post}"
+        );
+        let band = base.get("band").and_then(Json::as_str).unwrap();
+        assert!(band.contains('x'), "{name}: band {band:?} has no x multiplier");
+        // Entries must include a wtacrs30 workload row.
+        let entries = doc.get("entries").and_then(Json::as_arr).unwrap();
+        assert!(
+            entries.iter().any(|e| {
+                e.get("name")
+                    .and_then(Json::as_str)
+                    .is_some_and(|n| n.contains("wtacrs30"))
+            }),
+            "{name}: no wtacrs30 entry"
+        );
+    }
+}

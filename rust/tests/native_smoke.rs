@@ -166,7 +166,7 @@ fn transformer_stack_learns_through_trainer() {
         let ratio = stats.per_layer[l] as f64 / full_trunk as f64;
         assert!(ratio < 0.35, "layer {l}: ratio {ratio:.3}");
     }
-    assert_eq!(stats.total, 575_776);
+    assert_eq!(stats.total, 572_048);
     assert!(trainer.peak_saved_bytes() >= stats.total);
 }
 
@@ -225,7 +225,7 @@ fn causal_lm_learns_through_trainer() {
         let ratio = stats.per_layer[l] as f64 / full_rows as f64;
         assert!(ratio < 0.35, "layer {l}: ratio {ratio:.3}");
     }
-    assert_eq!(stats.total, 590_560);
+    assert_eq!(stats.total, 586_608);
     assert!(trainer.peak_saved_bytes() >= stats.total);
 }
 
