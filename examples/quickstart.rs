@@ -17,6 +17,11 @@
 //!    next-token loss on the synthetic corpus — the paper's
 //!    language-model scope with per-token supervision.
 //! 6. Compare with the analytic memory model (the paper's Table 2).
+//! 7. Serve the trained LM: snapshot it, reload it forward-only with
+//!    `serve::ServeModel` (no tape, no optimizer state), check the
+//!    KV-cache incremental decode is bitwise-identical to the full
+//!    recompute, and answer a few requests through the batched
+//!    `serve::Engine`.
 //!
 //! Runs fully offline — no artifacts, no XLA.
 //!
@@ -230,5 +235,54 @@ fn main() -> Result<()> {
         wta / 1e9,
         full / wta
     );
+
+    // 7. Serving: snapshot the trained LM and answer traffic with the
+    //    forward-only engine.  The snapshot manifest (typed meta +
+    //    named tensor table) rebuilds the graph skeleton; only the
+    //    param{p}.w weights are read back — no tape, no Adam moments,
+    //    no sampling RNG.  Incremental KV-cache decode is
+    //    bitwise-identical to the full-context recompute.
+    let snap = std::env::temp_dir().join("wtacrs-quickstart.snapshot");
+    let meta = wtacrs::coordinator::SnapshotMeta {
+        size: "tiny".to_string(),
+        method: cfg.method,
+        n_out: cfg.n_out,
+        seed: cfg.seed,
+        spec: lm_spec,
+    };
+    wtacrs::coordinator::save_snapshot(&snap, &meta, &lm_sess.state())?;
+    let model = wtacrs::serve::ServeModel::from_snapshot(&snap)?;
+    let (seq, vocab, steps) = (model.seq(), model.vocab(), model.per_sample());
+    let toks = corpus.batch(2, seq, 99);
+    let full = model.eval_full(&toks, 2)?;
+    let next = model.decode_batch(&toks, 2)?;
+    assert_eq!(next.row(0), full.row(steps - 1), "decode != full recompute");
+    println!(
+        "\nserving: snapshot at {} rebuilt {} decode steps of {vocab} logits each; \
+         last step bitwise == full recompute",
+        snap.display(),
+        steps
+    );
+    let engine =
+        wtacrs::serve::Engine::start(model, wtacrs::serve::EngineConfig::default())?;
+    let h = engine.handle();
+    let prompts = corpus.batch(4, seq, 123);
+    let rxs = (0..4)
+        .map(|r| h.submit(prompts[r * seq..(r + 1) * seq].to_vec()))
+        .collect::<Result<Vec<_>>>()?;
+    for rx in rxs {
+        let c = rx.recv().expect("dispatcher alive")?;
+        assert_eq!(c.logits.len(), vocab);
+    }
+    let report = engine.shutdown()?;
+    if let Some(stats) = report.latency {
+        println!(
+            "  engine: {} requests in {} batches; p50 {:.2} ms p99 {:.2} ms, \
+             {:.0} req/s",
+            report.completed, report.batches, stats.p50_ms, stats.p99_ms,
+            report.throughput_rps
+        );
+    }
+    std::fs::remove_file(&snap).ok();
     Ok(())
 }

@@ -1,0 +1,152 @@
+"""PR 7 mirror checks: KV-cache decode identity + serve baseline.
+
+Two families:
+
+1. `decode_identity` re-implements the serving subsystem's incremental
+   KV-cache decode (`nn::forward_decode` over `nn::DecodeState`) on the
+   numpy mirror of the causal-LM stack and asserts it reproduces the
+   full-context tape-free forward (`CausalSession.eval_logits`) exactly
+   — the same contract rust/tests/decode_identity.rs pins bitwise on
+   the native backend.  The cache is a layout change, not an
+   approximation: a new chunk row is the latest position, so attending
+   over exactly the cached keys equals the causally-masked softmax
+   whose future entries exp(-inf) to literal zeros.
+
+2. `committed_serve_baseline` validates the committed BENCH_serve.json
+   at the repo root against the util::bench schema mirror plus the
+   PR-7 acceptance shape (bench "serve", batched-vs-unbatched band on
+   the causal-lm decode workload, serve-unbatched / serve-batched
+   entries, speedup consistent with the recorded walls) — the same
+   assertions rust/tests/bench_baseline.rs makes natively.
+
+`decode_logits` is also the measurement kernel serve_bench.py times to
+regenerate the committed baseline.
+"""
+import json
+import math
+import os
+
+import numpy as np
+
+import nn_attention as na
+from check_pr6 import banner, validate_baseline
+from nn_causal import CausalSession, Corpus
+
+
+def embed_chunk(sess, tokens, p):
+    """`chunk_pool` restricted to chunk p: (B, seq) ids -> (B, d)."""
+    B, chunk = tokens.shape[0], sess.seq // sess.ps
+    out = np.zeros((B, sess.d), dtype=np.float32)
+    for r in range(B):
+        seg = tokens[r, p * chunk:(p + 1) * chunk]
+        nz = seg[seg != 0]
+        if len(nz):
+            out[r] = (sess.embed[nz].sum(axis=0, dtype=np.float32)
+                      / np.float32(len(nz)))
+    return out
+
+
+def sdpa_decode_step(q, k_cache, v_cache, heads):
+    """One new query row per sample against every cached key.
+
+    No mask: the new chunk is the latest position and legally sees the
+    whole cache.  Float64 softmax like `sdpa_forward_causal`; the full
+    forward's masked entries are exact zeros there, so dropping them
+    from the contraction changes nothing.
+    """
+    n, d = q.shape
+    dh = d // heads
+    scale = 1.0 / math.sqrt(dh)
+    q4 = q.reshape(n, 1, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    s = q4 @ k_cache.transpose(0, 1, 3, 2) * scale
+    s -= s.max(axis=3, keepdims=True)
+    e = np.exp(s)
+    a = e / e.sum(axis=3, keepdims=True)
+    out = (a @ v_cache).astype(np.float32)
+    return out.transpose(0, 2, 1, 3).reshape(n, d)
+
+
+def forward_block_decode(sess, blk, x, cache):
+    """`forward_block` on one chunk row per sample, appending K/V."""
+    h1, _, _ = na.layer_norm(x)
+    q = (h1 @ blk["wq"]).astype(np.float32)
+    k = (h1 @ blk["wk"]).astype(np.float32)
+    v = (h1 @ blk["wv"]).astype(np.float32)
+    B, d = x.shape
+    heads, dh = sess.heads, d // sess.heads
+    k4 = k.reshape(B, 1, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    v4 = v.reshape(B, 1, heads, dh).transpose(0, 2, 1, 3).astype(np.float64)
+    cache["k"] = (k4 if cache["k"] is None
+                  else np.concatenate([cache["k"], k4], axis=2))
+    cache["v"] = (v4 if cache["v"] is None
+                  else np.concatenate([cache["v"], v4], axis=2))
+    ao = sdpa_decode_step(q, cache["k"], cache["v"], heads)
+    p_out = (ao @ blk["wp"]).astype(np.float32)
+    x2 = (x + p_out).astype(np.float32)
+    h2, _, _ = na.layer_norm(x2)
+    z1 = (h2 @ blk["w1"] + blk["b1"]).astype(np.float32)
+    a1 = np.maximum(z1, 0)
+    z2 = (a1 @ blk["w2"] + blk["b2"]).astype(np.float32)
+    return (x2 + z2).astype(np.float32)
+
+
+def decode_logits(sess, tokens):
+    """Incremental decode of (B, seq) prompts -> (B * ps, n_out) logits
+    in `eval_logits` row order (sample-major, chunk within sample)."""
+    B, ps = tokens.shape[0], sess.ps
+    caches = [dict(k=None, v=None) for _ in sess.blocks]
+    out = np.zeros((B * ps, sess.n_out), dtype=np.float32)
+    for p in range(ps):
+        x = embed_chunk(sess, tokens, p)
+        for blk, cache in zip(sess.blocks, caches):
+            x = forward_block_decode(sess, blk, x, cache)
+        logits = (x @ sess.head + sess.head_b).astype(np.float32)
+        for r in range(B):
+            out[r * ps + p] = logits[r]
+    return out
+
+
+def decode_identity():
+    banner("KV-cache decode == full-context forward")
+    # Step 0 decodes from empty caches each time (the empty-prompt
+    # edge); ps=8 exercises a longer cache, heads 2/4 two head widths,
+    # depth 1/2 per-block cache slots.
+    for depth, heads, ps, seed in [(2, 4, 4, 0), (1, 2, 8, 3)]:
+        sess = CausalSession("tiny", 0.3, seed=seed, lr=1e-3, depth=depth,
+                             per_sample=ps, heads=heads)
+        toks = Corpus(sess.vocab, seed ^ 0x51).batch(4, sess.seq, 0)
+        full = sess.eval_logits(toks)
+        dec = decode_logits(sess, toks)
+        gap = float(np.abs(full.astype(np.float64)
+                           - dec.astype(np.float64)).max())
+        print(f"  depth={depth} heads={heads} ps={ps}: "
+              f"max |full - decode| = {gap:.3g}")
+        assert np.array_equal(full, dec), gap
+
+
+def committed_serve_baseline():
+    banner("committed BENCH_serve.json")
+    root = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    with open(os.path.join(root, "BENCH_serve.json")) as f:
+        doc = json.load(f)
+    validate_baseline(doc, "BENCH_serve.json")
+    assert doc["bench"] == "serve", doc["bench"]
+    base = doc["baseline"]
+    assert "causal-lm" in base["workload"], base["workload"]
+    assert base["band"] == "batched-vs-unbatched", base["band"]
+    rel = abs(base["speedup"] - base["pre_change_ms"] / base["post_change_ms"])
+    assert rel < 1e-6 * base["speedup"], "speedup inconsistent"
+    names = {e["name"] for e in doc["entries"]}
+    assert {"serve-unbatched", "serve-batched"} <= names, names
+    print(f"  {len(doc['entries'])} entries, provenance "
+          f"{doc['provenance']}, batched speedup {base['speedup']:.2f}x")
+
+
+def main():
+    decode_identity()
+    committed_serve_baseline()
+    print("\nall PR7 checks passed")
+
+
+if __name__ == "__main__":
+    main()

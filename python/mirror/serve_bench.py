@@ -1,0 +1,108 @@
+"""Generate the committed BENCH_serve.json baseline.
+
+The container this repo grows in has no Rust toolchain, so the
+committed serving numbers are measured on the numpy mirror of the
+KV-cache decode (`check_pr7.decode_logits`) and stamped with
+provenance "python-mirror-numpy".  On a toolchain host the same file
+is regenerated natively through the real engine with
+
+    WTACRS_BENCH_BASELINE=1 WTACRS_BENCH_BASELINE_DIR=$(git rev-parse \
+        --show-toplevel) cargo run --release -- serve
+
+which overwrites it with rust-native measurements of the identical
+schema (see cmd_serve in rust/src/main.rs).
+
+The `baseline` block records the PR's batching band: the pre-change
+wall answers the request stream one prompt per decode pass (the only
+mode a tape-free forward without an engine offers), the post-change
+wall batches max-batch prompts per pass the way `serve::Engine`'s
+dispatcher does.  The numpy analogue batches along the decode's row
+axis — exactly the axis the engine batches — so the measured ratio is
+the amortization of per-pass overhead over batched rows; the queueing
+and thread-handoff costs the engine adds on top are rust-only.
+
+Usage: python3 serve_bench.py [out_dir]   (default: the repo root)
+"""
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+from check_pr6 import validate_baseline
+from check_pr7 import decode_logits
+from nn_causal import CausalSession, Corpus
+
+REQUESTS = 64
+MAX_BATCH = 8
+
+
+def serve_pass(sess, prompts, batch):
+    """Answer every prompt in groups of `batch`; a request's latency is
+    its group's wall clock (a batched request completes with its batch,
+    which is what the engine's per-completion latency records too)."""
+    lat, batches = [], 0
+    t0 = time.perf_counter()
+    for i in range(0, len(prompts), batch):
+        group = prompts[i:i + batch]
+        s0 = time.perf_counter()
+        decode_logits(sess, group)
+        ms = (time.perf_counter() - s0) * 1e3
+        lat.extend([ms] * len(group))
+        batches += 1
+    wall = (time.perf_counter() - t0) * 1e3
+    a = np.asarray(lat)
+    return {
+        "requests": len(prompts),
+        "batches": batches,
+        "wall_ms": float(wall),
+        "throughput_rps": len(prompts) / (wall / 1e3),
+        "mean_ms": float(a.mean()),
+        "p50_ms": float(np.percentile(a, 50)),
+        "p99_ms": float(np.percentile(a, 99)),
+    }
+
+
+def serve_doc():
+    sess = CausalSession("tiny", 0.3, seed=0, lr=1e-3, depth=2)
+    prompts = Corpus(sess.vocab, 0).batch(REQUESTS, sess.seq, 0)
+    decode_logits(sess, prompts[:MAX_BATCH])  # warm the BLAS paths
+    un = dict(serve_pass(sess, prompts, 1), name="serve-unbatched")
+    ba = dict(serve_pass(sess, prompts, MAX_BATCH), name="serve-batched")
+    base = {
+        "workload": (f"tiny/causal-lm/{REQUESTS}req-b{MAX_BATCH} "
+                     "(python-mirror KV decode; pre answers one prompt "
+                     "per pass, post batches rows like serve::Engine)"),
+        "band": "batched-vs-unbatched",
+        "pre_change_ms": un["wall_ms"],
+        "post_change_ms": ba["wall_ms"],
+        "speedup": un["wall_ms"] / ba["wall_ms"],
+    }
+    return {
+        "bench": "serve",
+        "mode": "quick",
+        "provenance": "python-mirror-numpy",
+        "entries": [un, ba],
+        "baseline": base,
+    }
+
+
+def main():
+    out_dir = sys.argv[1] if len(sys.argv) > 1 else os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..", "..")
+    print("== BENCH_serve.json ==")
+    doc = serve_doc()
+    validate_baseline(doc, "BENCH_serve.json")
+    b = doc["baseline"]
+    print(f"  band: unbatched {b['pre_change_ms']:.1f} ms -> batched "
+          f"{b['post_change_ms']:.1f} ms ({b['speedup']:.2f}x)")
+    path = os.path.join(out_dir, "BENCH_serve.json")
+    with open(path, "w") as f:
+        json.dump(doc, f, sort_keys=True, separators=(",", ":"))
+        f.write("\n")
+    print(f"  -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,5 +1,13 @@
 //! Checkpointing: serialize the trainer's positional state to a compact
 //! binary file (magic + tensor table) and restore it bit-exactly.
+//!
+//! The magic doubles as the format version (`WTACRS01`): readers reject
+//! anything else up front, and every per-tensor read is length-checked
+//! and attributed — a truncated or bit-flipped file reports *which*
+//! tensor record broke instead of a bare I/O error.  (The serving
+//! subsystem's richer manifest format lives in
+//! [`super::snapshot`]; this one stays the compact positional
+//! trainer-state format.)
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -55,35 +63,55 @@ pub fn load(path: impl AsRef<Path>) -> Result<Vec<HostTensor>> {
             .with_context(|| format!("open {:?}", path.as_ref()))?,
     );
     let mut magic = [0u8; 8];
-    f.read_exact(&mut magic)?;
+    f.read_exact(&mut magic)
+        .context("checkpoint header truncated (no magic)")?;
     if &magic != MAGIC {
         bail!("not a wtacrs checkpoint (bad magic)");
     }
     let mut n8 = [0u8; 8];
-    f.read_exact(&mut n8)?;
+    f.read_exact(&mut n8)
+        .context("checkpoint header truncated (no tensor count)")?;
     let n = u64::from_le_bytes(n8) as usize;
     if n > 1_000_000 {
         bail!("implausible tensor count {n}");
     }
     let mut out = Vec::with_capacity(n);
-    for _ in 0..n {
+    for i in 0..n {
         let mut b1 = [0u8; 1];
-        f.read_exact(&mut b1)?;
+        f.read_exact(&mut b1)
+            .with_context(|| format!("checkpoint: tensor {i}/{n}: truncated dtype tag"))?;
         let dtype = match b1[0] {
             0 => DType::F32,
             1 => DType::I32,
-            other => bail!("bad dtype tag {other}"),
+            other => bail!("checkpoint: tensor {i}/{n}: bad dtype tag {other}"),
         };
-        f.read_exact(&mut b1)?;
+        f.read_exact(&mut b1)
+            .with_context(|| format!("checkpoint: tensor {i}/{n}: truncated rank"))?;
         let ndim = b1[0] as usize;
+        if ndim > 8 {
+            bail!("checkpoint: tensor {i}/{n}: implausible rank {ndim}");
+        }
         let mut shape = Vec::with_capacity(ndim);
-        for _ in 0..ndim {
-            f.read_exact(&mut n8)?;
+        for a in 0..ndim {
+            f.read_exact(&mut n8).with_context(|| {
+                format!("checkpoint: tensor {i}/{n}: truncated dim {a}/{ndim}")
+            })?;
             shape.push(u64::from_le_bytes(n8) as usize);
         }
-        let numel: usize = shape.iter().product();
+        let numel: usize = shape.iter().try_fold(1usize, |acc, &d| acc.checked_mul(d))
+            .filter(|&numel| numel <= (u32::MAX as usize))
+            .ok_or_else(|| {
+                crate::anyhow!(
+                    "checkpoint: tensor {i}/{n}: implausible element count (shape {shape:?})"
+                )
+            })?;
         let mut bytes = vec![0u8; numel * 4];
-        f.read_exact(&mut bytes)?;
+        f.read_exact(&mut bytes).with_context(|| {
+            format!(
+                "checkpoint: tensor {i}/{n}: payload truncated (wanted {} bytes)",
+                numel * 4
+            )
+        })?;
         let t = match dtype {
             DType::F32 => HostTensor::f32(
                 shape,
@@ -141,6 +169,59 @@ mod tests {
         let p = tmpfile("empty");
         save(&p, &[]).unwrap();
         assert!(load(&p).unwrap().is_empty());
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_file_names_the_offending_tensor() {
+        let tensors = vec![
+            HostTensor::scalar_i32(3),
+            HostTensor::f32(vec![4, 8], (0..32).map(|i| i as f32).collect()),
+        ];
+        let p = tmpfile("trunc");
+        save(&p, &tensors).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        // Chop mid-way through tensor 1's payload.
+        std::fs::write(&p, &full[..full.len() - 10]).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(
+            e.contains("tensor 1/2") && e.contains("payload truncated"),
+            "{e}"
+        );
+        // Chop inside tensor 1's header (right after tensor 0's record:
+        // magic 8 + count 8 + tag 1 + rank 1 + scalar payload 4 = 22).
+        std::fs::write(&p, &full[..23]).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("tensor 1/2"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bit_flipped_dtype_tag_names_the_offending_tensor() {
+        let tensors = vec![HostTensor::scalar_i32(3), HostTensor::scalar_f32(0.5)];
+        let p = tmpfile("flip");
+        save(&p, &tensors).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        // Tensor 1's dtype tag sits after magic 8 + count 8 + tensor 0's
+        // (tag 1 + rank 1 + payload 4) = byte 22.
+        bytes[22] ^= 0x40;
+        std::fs::write(&p, &bytes).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("tensor 1/2") && e.contains("bad dtype tag"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupt_rank_is_rejected_not_allocated() {
+        // A flipped rank byte must error with the tensor index, not try
+        // to read 2^50 dims.
+        let p = tmpfile("rank");
+        save(&p, &[HostTensor::scalar_f32(1.0)]).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[17] = 0xFF; // tensor 0's rank byte (after magic 8 + count 8 + tag 1)
+        std::fs::write(&p, &bytes).unwrap();
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("tensor 0/1") && e.contains("implausible rank"), "{e}");
         std::fs::remove_file(&p).ok();
     }
 }

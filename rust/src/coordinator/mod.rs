@@ -6,9 +6,13 @@
 pub mod checkpoint;
 pub mod experiment;
 pub mod normcache;
+pub mod snapshot;
 pub mod sweep;
 pub mod trainer;
 
 pub use experiment::{run_glue, run_lm, ExperimentOptions, LmResult, TaskResult};
 pub use normcache::NormCache;
+pub use snapshot::{
+    save_snapshot, SnapshotManifest, SnapshotMeta, SnapshotReader, TensorEntry,
+};
 pub use trainer::{TrainOptions, TrainReport, Trainer};

@@ -1,0 +1,631 @@
+//! Versioned model snapshots for the serving subsystem.
+//!
+//! [`super::checkpoint`] is the trainer's compact *positional* format:
+//! restoring it requires an already-configured session that knows the
+//! tensor layout.  Serving wants the opposite: a snapshot that carries
+//! enough typed metadata to rebuild the model from the file alone —
+//! size, method, seed, the full [`ModelSpec`] — plus a tensor table
+//! with names, dtypes, shapes and byte offsets, so a reader can map
+//! individual tensors lazily instead of slurping the whole file.
+//!
+//! Wire format (version 2, magic `WTACRSS2`):
+//!
+//! ```text
+//! magic[8] | manifest_len u64 LE | manifest JSON (UTF-8) | payload
+//! ```
+//!
+//! The manifest is a [`SnapshotManifest`] — [`std::fmt::Display`] /
+//! [`std::str::FromStr`] round-trip it through [`crate::util::json`] —
+//! listing every tensor's `(name, dtype, shape, offset, bytes)` with
+//! offsets relative to the payload start, plus an FNV-1a 64 checksum of
+//! the payload.  [`SnapshotReader`] validates the header eagerly and
+//! reads tensors on demand ([`SnapshotReader::tensor`]), so `wtacrs
+//! serve` starts without loading optimizer moments it never uses; any
+//! length mismatch or short read names the offending tensor index and
+//! name.
+//!
+//! Tensor naming follows the trainer's positional state layout
+//! (`NativeSession::state`): index 0 is `"step"`, then `param{p}.w` /
+//! `param{p}.m` / `param{p}.v` per trainable parameter in graph order —
+//! the serving loader picks out exactly the `*.w` entries.
+
+use std::fmt;
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::Path;
+use std::str::FromStr;
+
+use crate::nn::{Arch, ModelSpec};
+use crate::ops::{Contraction, MethodSpec};
+use crate::runtime::{DType, HostTensor, TensorData};
+use crate::util::error::{Context, Error, Result};
+use crate::util::json::{self, Json};
+use crate::{anyhow, bail};
+
+/// Format magic; the trailing `2` is the format version.
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"WTACRSS2";
+
+/// Manifest version recorded inside the JSON (kept in lockstep with the
+/// magic; a reader checks both).
+pub const SNAPSHOT_VERSION: u64 = 2;
+
+/// Upper bound on the manifest length field — anything larger is a
+/// corrupt or hostile header, not a real manifest.
+const MAX_MANIFEST_BYTES: u64 = 16 * 1024 * 1024;
+
+/// FNV-1a 64 over a byte stream (the payload checksum).
+fn fnv1a64(state: u64, bytes: &[u8]) -> u64 {
+    let mut h = state;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// FNV-1a 64 offset basis.
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Everything needed to rebuild the model a snapshot holds: the session
+/// configuration that trained it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotMeta {
+    /// Model size name ("tiny", "small").
+    pub size: String,
+    /// Tuning method the weights were trained with.
+    pub method: MethodSpec,
+    /// Classifier width the session was opened with (causal-LM sessions
+    /// override it with the vocab internally, same as `SessionConfig`).
+    pub n_out: usize,
+    /// Parameter-init seed (the graph skeleton is rebuilt from it).
+    pub seed: u64,
+    /// Architecture knobs.
+    pub spec: ModelSpec,
+}
+
+/// One tensor record in the manifest table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorEntry {
+    pub name: String,
+    pub dtype: DType,
+    pub shape: Vec<usize>,
+    /// Byte offset relative to the payload start.
+    pub offset: u64,
+    /// Payload bytes (= product(shape) · 4, validated on both ends).
+    pub bytes: u64,
+}
+
+/// The typed, versioned snapshot manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SnapshotManifest {
+    pub version: u64,
+    pub meta: SnapshotMeta,
+    pub tensors: Vec<TensorEntry>,
+    /// FNV-1a 64 of the payload, as a 16-digit lowercase hex string
+    /// (JSON numbers are f64 and cannot hold a u64 exactly).
+    pub checksum: String,
+}
+
+impl SnapshotManifest {
+    /// Total payload size the table accounts for.
+    pub fn payload_bytes(&self) -> u64 {
+        self.tensors.iter().map(|t| t.offset + t.bytes).max().unwrap_or(0)
+    }
+
+    /// Index of the named tensor.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.tensors.iter().position(|t| t.name == name)
+    }
+
+    fn to_json(&self) -> Json {
+        let spec = &self.meta.spec;
+        json::obj(vec![
+            ("kind", json::s("wtacrs-snapshot")),
+            ("version", json::num(self.version as f64)),
+            ("size", json::s(&self.meta.size)),
+            ("method", json::s(&self.meta.method.to_string())),
+            ("n_out", json::num(self.meta.n_out as f64)),
+            ("seed", json::num(self.meta.seed as f64)),
+            (
+                "model",
+                json::obj(vec![
+                    ("depth", json::num(spec.depth as f64)),
+                    ("width", json::num(spec.width as f64)),
+                    ("per_sample", json::num(spec.contraction.per_sample() as f64)),
+                    ("arch", json::s(&spec.arch.to_string())),
+                    ("heads", json::num(spec.heads as f64)),
+                ]),
+            ),
+            (
+                "tensors",
+                json::arr(self.tensors.iter().map(|t| {
+                    json::obj(vec![
+                        ("name", json::s(&t.name)),
+                        ("dtype", json::s(t.dtype.name())),
+                        (
+                            "shape",
+                            json::arr(t.shape.iter().map(|&d| json::num(d as f64))),
+                        ),
+                        ("offset", json::num(t.offset as f64)),
+                        ("bytes", json::num(t.bytes as f64)),
+                    ])
+                })),
+            ),
+            ("checksum_fnv1a64", json::s(&self.checksum)),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let field = |k: &str| {
+            j.get(k).ok_or_else(|| anyhow!("snapshot manifest: missing field {k:?}"))
+        };
+        match field("kind")?.as_str() {
+            Some("wtacrs-snapshot") => {}
+            other => bail!("snapshot manifest: kind {other:?} is not wtacrs-snapshot"),
+        }
+        let version = field("version")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("snapshot manifest: version is not a number"))?
+            as u64;
+        if version != SNAPSHOT_VERSION {
+            bail!(
+                "snapshot manifest: version {version} unsupported \
+                 (this build reads version {SNAPSHOT_VERSION})"
+            );
+        }
+        let size = field("size")?
+            .as_str()
+            .ok_or_else(|| anyhow!("snapshot manifest: size is not a string"))?
+            .to_string();
+        let method: MethodSpec = field("method")?
+            .as_str()
+            .ok_or_else(|| anyhow!("snapshot manifest: method is not a string"))?
+            .parse()
+            .context("snapshot manifest: method")?;
+        let n_out = field("n_out")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("snapshot manifest: n_out is not a number"))?;
+        let seed = field("seed")?
+            .as_usize()
+            .ok_or_else(|| anyhow!("snapshot manifest: seed is not a number"))?
+            as u64;
+        let model = field("model")?;
+        let mfield = |k: &str| {
+            model
+                .get(k)
+                .and_then(Json::as_usize)
+                .ok_or_else(|| anyhow!("snapshot manifest: model.{k} missing or not a number"))
+        };
+        let per_sample = mfield("per_sample")?;
+        let arch: Arch = model
+            .get("arch")
+            .and_then(Json::as_str)
+            .ok_or_else(|| anyhow!("snapshot manifest: model.arch missing"))?
+            .parse()
+            .context("snapshot manifest: model.arch")?;
+        let spec = ModelSpec {
+            depth: mfield("depth")?,
+            width: mfield("width")?,
+            contraction: if per_sample == 1 {
+                Contraction::Rows
+            } else {
+                Contraction::Tokens { per_sample }
+            },
+            arch,
+            heads: mfield("heads")?,
+        };
+        let mut tensors = Vec::new();
+        for (i, t) in field("tensors")?
+            .as_arr()
+            .ok_or_else(|| anyhow!("snapshot manifest: tensors is not an array"))?
+            .iter()
+            .enumerate()
+        {
+            let tfield = |k: &str| {
+                t.get(k).ok_or_else(|| {
+                    anyhow!("snapshot manifest: tensor {i}: missing field {k:?}")
+                })
+            };
+            let name = tfield("name")?
+                .as_str()
+                .ok_or_else(|| anyhow!("snapshot manifest: tensor {i}: name not a string"))?
+                .to_string();
+            let dtype = DType::parse(
+                tfield("dtype")?.as_str().ok_or_else(|| {
+                    anyhow!("snapshot manifest: tensor {i}: dtype not a string")
+                })?,
+            )
+            .with_context(|| format!("snapshot manifest: tensor {i} ({name})"))?;
+            let shape = tfield("shape")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("snapshot manifest: tensor {i}: shape not an array"))?
+                .iter()
+                .map(|d| {
+                    d.as_usize().ok_or_else(|| {
+                        anyhow!("snapshot manifest: tensor {i}: bad shape entry")
+                    })
+                })
+                .collect::<Result<Vec<usize>>>()?;
+            let offset = tfield("offset")?.as_usize().ok_or_else(|| {
+                anyhow!("snapshot manifest: tensor {i}: offset not a number")
+            })? as u64;
+            let bytes = tfield("bytes")?.as_usize().ok_or_else(|| {
+                anyhow!("snapshot manifest: tensor {i}: bytes not a number")
+            })? as u64;
+            let numel: usize = shape.iter().product();
+            if bytes != (numel * dtype.bytes()) as u64 {
+                bail!(
+                    "snapshot manifest: tensor {i} ({name}): {bytes} bytes \
+                     disagree with shape {shape:?}"
+                );
+            }
+            tensors.push(TensorEntry { name, dtype, shape, offset, bytes });
+        }
+        let checksum = field("checksum_fnv1a64")?
+            .as_str()
+            .ok_or_else(|| anyhow!("snapshot manifest: checksum_fnv1a64 not a string"))?
+            .to_string();
+        u64::from_str_radix(&checksum, 16)
+            .map_err(|_| anyhow!("snapshot manifest: checksum {checksum:?} is not hex"))?;
+        let meta = SnapshotMeta { size, method, n_out, seed, spec };
+        Ok(SnapshotManifest { version, meta, tensors, checksum })
+    }
+}
+
+impl fmt::Display for SnapshotManifest {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&json::write(&self.to_json()))
+    }
+}
+
+impl FromStr for SnapshotManifest {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        let j = json::parse(s).map_err(|e| anyhow!("snapshot manifest: {e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+/// Name for state-layout slot `i` (`NativeSession::state` order).
+pub fn state_tensor_name(i: usize) -> String {
+    if i == 0 {
+        "step".to_string()
+    } else {
+        let p = (i - 1) / 3;
+        let slot = ["w", "m", "v"][(i - 1) % 3];
+        format!("param{p}.{slot}")
+    }
+}
+
+/// Raw LE bytes of one tensor's payload.
+fn tensor_bytes(t: &HostTensor) -> Vec<u8> {
+    match &t.data {
+        TensorData::F32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+        TensorData::I32(v) => v.iter().flat_map(|x| x.to_le_bytes()).collect(),
+    }
+}
+
+/// Write a versioned snapshot: `state` is a trainer state vector
+/// (`TrainSession::state` layout — `[step, (w, m, v) per param]`), and
+/// `meta` the configuration that produced it.  Atomic (tmp + rename).
+pub fn save_snapshot(
+    path: impl AsRef<Path>,
+    meta: &SnapshotMeta,
+    state: &[HostTensor],
+) -> Result<()> {
+    if state.is_empty() || (state.len() - 1) % 3 != 0 {
+        bail!(
+            "snapshot: state vector has {} tensors, expected 1 + 3·params \
+             (the trainer state layout)",
+            state.len()
+        );
+    }
+    let mut tensors = Vec::with_capacity(state.len());
+    let mut offset = 0u64;
+    let mut checksum = FNV_OFFSET;
+    let mut payload: Vec<u8> = Vec::new();
+    for (i, t) in state.iter().enumerate() {
+        let bytes = tensor_bytes(t);
+        checksum = fnv1a64(checksum, &bytes);
+        tensors.push(TensorEntry {
+            name: state_tensor_name(i),
+            dtype: t.dtype(),
+            shape: t.shape.clone(),
+            offset,
+            bytes: bytes.len() as u64,
+        });
+        offset += bytes.len() as u64;
+        payload.extend_from_slice(&bytes);
+    }
+    let manifest = SnapshotManifest {
+        version: SNAPSHOT_VERSION,
+        meta: meta.clone(),
+        tensors,
+        checksum: format!("{checksum:016x}"),
+    };
+    let mtext = manifest.to_string();
+    let path = path.as_ref();
+    let tmp = path.with_extension("tmp");
+    {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?,
+        );
+        f.write_all(SNAPSHOT_MAGIC)?;
+        f.write_all(&(mtext.len() as u64).to_le_bytes())?;
+        f.write_all(mtext.as_bytes())?;
+        f.write_all(&payload)?;
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("rename to {path:?}"))?;
+    Ok(())
+}
+
+/// Lazy snapshot reader: the header and manifest are parsed eagerly (a
+/// few KB), tensor payloads are seeked to and read on demand.
+pub struct SnapshotReader {
+    file: std::fs::File,
+    manifest: SnapshotManifest,
+    payload_start: u64,
+}
+
+impl SnapshotReader {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let mut file = std::fs::File::open(path)
+            .with_context(|| format!("open snapshot {path:?}"))?;
+        let mut magic = [0u8; 8];
+        file.read_exact(&mut magic).context("snapshot header truncated (no magic)")?;
+        if &magic != SNAPSHOT_MAGIC {
+            bail!(
+                "not a wtacrs snapshot (bad magic; trainer checkpoints use the \
+                 positional WTACRS01 format)"
+            );
+        }
+        let mut n8 = [0u8; 8];
+        file.read_exact(&mut n8)
+            .context("snapshot header truncated (no manifest length)")?;
+        let mlen = u64::from_le_bytes(n8);
+        if mlen == 0 || mlen > MAX_MANIFEST_BYTES {
+            bail!("snapshot: implausible manifest length {mlen}");
+        }
+        let mut mbytes = vec![0u8; mlen as usize];
+        file.read_exact(&mut mbytes).with_context(|| {
+            format!("snapshot: manifest truncated (wanted {mlen} bytes)")
+        })?;
+        let mtext = std::str::from_utf8(&mbytes)
+            .map_err(|_| anyhow!("snapshot: manifest is not UTF-8"))?;
+        let manifest: SnapshotManifest = mtext.parse()?;
+        let payload_start = 16 + mlen;
+        // Cheap end-of-file length check up front: a truncated payload
+        // should fail at open, not on the first unlucky tensor read.
+        let total = file
+            .seek(SeekFrom::End(0))
+            .context("snapshot: seeking payload end")?;
+        let want = payload_start + manifest.payload_bytes();
+        if total < want {
+            bail!(
+                "snapshot: payload truncated ({total} bytes on disk, manifest \
+                 accounts for {want})"
+            );
+        }
+        Ok(SnapshotReader { file, manifest, payload_start })
+    }
+
+    pub fn manifest(&self) -> &SnapshotManifest {
+        &self.manifest
+    }
+
+    /// Read one tensor by manifest index (lazy: seeks and reads exactly
+    /// that record's bytes).
+    pub fn tensor(&mut self, idx: usize) -> Result<HostTensor> {
+        let n = self.manifest.tensors.len();
+        let entry = self
+            .manifest
+            .tensors
+            .get(idx)
+            .ok_or_else(|| anyhow!("snapshot: tensor index {idx} out of range ({n} tensors)"))?
+            .clone();
+        self.file
+            .seek(SeekFrom::Start(self.payload_start + entry.offset))
+            .with_context(|| format!("snapshot: tensor {idx} ({}): seek", entry.name))?;
+        let mut bytes = vec![0u8; entry.bytes as usize];
+        self.file.read_exact(&mut bytes).with_context(|| {
+            format!(
+                "snapshot: tensor {idx} ({}): payload truncated (wanted {} bytes)",
+                entry.name, entry.bytes
+            )
+        })?;
+        Ok(match entry.dtype {
+            DType::F32 => HostTensor::f32(
+                entry.shape,
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+            DType::I32 => HostTensor::i32(
+                entry.shape,
+                bytes
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                    .collect(),
+            ),
+        })
+    }
+
+    /// Read the whole payload and compare its FNV-1a 64 against the
+    /// manifest — the one deliberately-eager operation, for integrity
+    /// audits (`wtacrs serve` skips it on the hot path).
+    pub fn verify_checksum(&mut self) -> Result<()> {
+        self.file
+            .seek(SeekFrom::Start(self.payload_start))
+            .context("snapshot: seeking payload start")?;
+        let mut h = FNV_OFFSET;
+        let mut buf = vec![0u8; 64 * 1024];
+        let mut remaining = self.manifest.payload_bytes();
+        while remaining > 0 {
+            let take = (buf.len() as u64).min(remaining) as usize;
+            self.file
+                .read_exact(&mut buf[..take])
+                .context("snapshot: payload truncated during checksum")?;
+            h = fnv1a64(h, &buf[..take]);
+            remaining -= take as u64;
+        }
+        let got = format!("{h:016x}");
+        if got != self.manifest.checksum {
+            bail!(
+                "snapshot: payload checksum mismatch (manifest {}, computed {got}) \
+                 — the file is corrupt",
+                self.manifest.checksum
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::Family;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("wtacrs-snap-{}-{name}", std::process::id()))
+    }
+
+    fn meta() -> SnapshotMeta {
+        SnapshotMeta {
+            size: "tiny".to_string(),
+            method: "full-wtacrs30".parse().unwrap(),
+            n_out: 2,
+            seed: 7,
+            spec: ModelSpec {
+                depth: 2,
+                width: 0,
+                contraction: Contraction::Tokens { per_sample: 4 },
+                arch: Arch::CausalLm,
+                heads: 4,
+            },
+        }
+    }
+
+    fn state() -> Vec<HostTensor> {
+        vec![
+            HostTensor::scalar_i32(5),
+            HostTensor::f32(vec![2, 3], vec![1.0, -2.0, 0.5, 3.0, -0.25, 8.0]),
+            HostTensor::f32(vec![2, 3], vec![0.0; 6]),
+            HostTensor::f32(vec![2, 3], vec![0.1; 6]),
+        ]
+    }
+
+    #[test]
+    fn manifest_display_fromstr_roundtrip() {
+        let m = SnapshotManifest {
+            version: SNAPSHOT_VERSION,
+            meta: meta(),
+            tensors: vec![
+                TensorEntry {
+                    name: "step".into(),
+                    dtype: DType::I32,
+                    shape: vec![],
+                    offset: 0,
+                    bytes: 4,
+                },
+                TensorEntry {
+                    name: "param0.w".into(),
+                    dtype: DType::F32,
+                    shape: vec![2, 3],
+                    offset: 4,
+                    bytes: 24,
+                },
+            ],
+            checksum: format!("{FNV_OFFSET:016x}"),
+        };
+        let text = m.to_string();
+        let back: SnapshotManifest = text.parse().unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.meta.method.family, Family::Full);
+        assert_eq!(back.index_of("param0.w"), Some(1));
+        assert_eq!(back.payload_bytes(), 28);
+    }
+
+    #[test]
+    fn save_open_roundtrips_tensors_and_meta() {
+        let p = tmpfile("rt");
+        save_snapshot(&p, &meta(), &state()).unwrap();
+        let mut r = SnapshotReader::open(&p).unwrap();
+        assert_eq!(r.manifest().meta, meta());
+        assert_eq!(r.manifest().tensors.len(), 4);
+        assert_eq!(r.manifest().tensors[0].name, "step");
+        assert_eq!(r.manifest().tensors[1].name, "param0.w");
+        assert_eq!(r.manifest().tensors[3].name, "param0.v");
+        for (i, want) in state().iter().enumerate() {
+            assert_eq!(&r.tensor(i).unwrap(), want, "tensor {i}");
+        }
+        // Lazy access works out of order too.
+        assert_eq!(&r.tensor(1).unwrap(), &state()[1]);
+        r.verify_checksum().unwrap();
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn truncated_payload_fails_at_open() {
+        let p = tmpfile("trunc");
+        save_snapshot(&p, &meta(), &state()).unwrap();
+        let full = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &full[..full.len() - 8]).unwrap();
+        let e = SnapshotReader::open(&p).unwrap_err().to_string();
+        assert!(e.contains("payload truncated"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bit_flip_in_payload_fails_checksum() {
+        let p = tmpfile("flip");
+        save_snapshot(&p, &meta(), &state()).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        let n = bytes.len();
+        bytes[n - 3] ^= 0x10; // inside param0.v's payload
+        std::fs::write(&p, &bytes).unwrap();
+        let mut r = SnapshotReader::open(&p).unwrap();
+        let e = r.verify_checksum().unwrap_err().to_string();
+        assert!(e.contains("checksum mismatch"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn wrong_magic_points_at_the_other_format() {
+        let p = tmpfile("magic");
+        std::fs::write(&p, b"WTACRS01xxxxxxxxxxxxxxxx").unwrap();
+        let e = SnapshotReader::open(&p).unwrap_err().to_string();
+        assert!(e.contains("not a wtacrs snapshot"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupt_manifest_reports_offending_tensor() {
+        // Rewrite the manifest with a bytes field that disagrees with
+        // the shape: the parse must name the tensor.
+        let p = tmpfile("badbytes");
+        save_snapshot(&p, &meta(), &state()).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        let mlen = u64::from_le_bytes(bytes[8..16].try_into().unwrap()) as usize;
+        let mtext = std::str::from_utf8(&bytes[16..16 + mlen]).unwrap();
+        let bad = mtext.replacen("\"bytes\":24", "\"bytes\":20", 1);
+        let e = bad.parse::<SnapshotManifest>().unwrap_err().to_string();
+        assert!(e.contains("tensor 1") && e.contains("disagree"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn state_layout_names() {
+        assert_eq!(state_tensor_name(0), "step");
+        assert_eq!(state_tensor_name(1), "param0.w");
+        assert_eq!(state_tensor_name(3), "param0.v");
+        assert_eq!(state_tensor_name(4), "param1.w");
+    }
+
+    #[test]
+    fn malformed_state_vector_is_rejected() {
+        let p = tmpfile("short");
+        let e = save_snapshot(&p, &meta(), &state()[..3]).unwrap_err().to_string();
+        assert!(e.contains("1 + 3·params"), "{e}");
+    }
+}

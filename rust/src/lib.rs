@@ -109,6 +109,28 @@
 //! [`estimator`] is the pure-Rust estimator math shared by the ops
 //! layer, the property tests and the Fig. 3 analyses.
 //!
+//! ## Serving: tape-free inference and the batched engine
+//!
+//! Training artifacts graduate to serving through [`serve`], a
+//! forward-only subsystem with no tape, no sampling RNG draws, and no
+//! optimizer state in memory:
+//!
+//! * **Snapshots** — [`coordinator::snapshot`] writes a versioned
+//!   manifest format (`WTACRSS2`: typed meta + named tensor table +
+//!   payload checksum) over the trainer's state vector;
+//!   [`serve::ServeModel::from_snapshot`] rebuilds the graph from the
+//!   manifest alone and lazily reads only the `param{p}.w` weights.
+//! * **KV-cache decoding** — [`nn::DecodeState`] holds per-attention
+//!   K/V caches so [`serve::ServeModel::decode_batch`] feeds prompts
+//!   chunk by chunk; each step's logits are *bitwise-identical* to the
+//!   full-context recompute (`tests/decode_identity.rs` pins it).
+//! * **Batched engine** — [`serve::Engine`] drains a bounded request
+//!   queue on a dedicated dispatcher thread (max-batch / max-wait
+//!   gathering) and reports p50/p99 latency and throughput through
+//!   [`metrics::LatencyHistogram`]; `wtacrs serve` is the CLI driver
+//!   with a synthetic traffic generator and the `BENCH_serve.json`
+//!   baseline emitter.
+//!
 //! ## Performance: the GEMM hot path and the committed baselines
 //!
 //! Every GEMM in the stack routes through four kernels on
@@ -162,5 +184,6 @@ pub mod metrics;
 pub mod nn;
 pub mod ops;
 pub mod runtime;
+pub mod serve;
 pub mod testing;
 pub mod util;

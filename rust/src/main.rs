@@ -6,17 +6,28 @@
 //!   lm        train the decoder LM (PJRT artifacts; `pjrt` feature)
 //!   memsim    reproduce the paper's memory tables for a model
 //!   inspect   list artifacts / models from the manifest (pure parser)
+//!   serve     batched forward-only serving from a snapshot (KV-cache
+//!             decode, synthetic traffic, p50/p99 + throughput)
 
-use wtacrs::bail;
-use wtacrs::coordinator::{self, ExperimentOptions, TrainOptions};
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use wtacrs::coordinator::{
+    self, save_snapshot, ExperimentOptions, SnapshotMeta, SnapshotReader, TrainOptions,
+};
+use wtacrs::data::Corpus;
 use wtacrs::memsim::{self, tables, Scope, Workload};
 use wtacrs::nn::{Arch, ModelSpec};
 use wtacrs::ops::{Contraction, MethodSpec};
-use wtacrs::runtime::{Backend, Manifest, NativeBackend};
-use wtacrs::util::bench::Table;
+use wtacrs::runtime::native::{size_dims, NativeSession};
+use wtacrs::runtime::{Backend, Manifest, NativeBackend, SessionConfig, TrainSession};
+use wtacrs::serve::{Engine, EngineConfig, EngineReport, ServeModel};
+use wtacrs::util::bench::{self, Table};
 use wtacrs::util::cli::Cli;
 use wtacrs::util::error::Result;
+use wtacrs::util::json::{self, Json};
 use wtacrs::util::logging;
+use wtacrs::{anyhow, bail};
 
 fn main() {
     logging::init();
@@ -42,6 +53,7 @@ fn run(args: &[String]) -> Result<()> {
         "lm" => cmd_lm(rest),
         "memsim" => cmd_memsim(rest),
         "inspect" => cmd_inspect(rest),
+        "serve" => cmd_serve(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -58,7 +70,8 @@ fn print_usage() {
          \x20 train    fine-tune on a synthetic GLUE task\n\
          \x20 lm       train the decoder LM (loss curve; needs the pjrt feature)\n\
          \x20 memsim   paper memory tables (Table 2 / Fig 2 / Fig 6)\n\
-         \x20 inspect  list compiled artifacts and models\n\n\
+         \x20 inspect  list compiled artifacts and models\n\
+         \x20 serve    batched forward-only serving from a snapshot\n\n\
          run `wtacrs <subcommand> --help` for options"
     );
 }
@@ -442,6 +455,249 @@ fn analyze_artifact(manifest: &Manifest, id: &str) -> Result<()> {
     Ok(())
 }
 
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "wtacrs serve",
+        "batched forward-only serving: snapshot + KV-cache decode + synthetic traffic",
+    )
+    .opt(
+        "snapshot",
+        "",
+        "snapshot file to serve (empty: quick-train a tiny causal-lm to a temp snapshot)",
+    )
+    .opt("size", "tiny", "model size for the quick-trained snapshot (tiny/small)")
+    .opt("train-steps", "5", "training steps behind the quick-trained snapshot")
+    .opt(
+        "requests",
+        "0",
+        "requests per pass (0 = by WTACRS_BENCH_MODE: quick 64, smoke 256, full 1024)",
+    )
+    .opt("max-batch", "8", "largest number of requests per model pass")
+    .opt("max-wait-ms", "5", "batching window (ms) once the oldest request is pending")
+    .opt("clients", "4", "concurrent synthetic client threads")
+    .opt("seed", "0", "traffic seed")
+    .flag("help", "show options");
+    let p = cli.parse(args)?;
+    if p.get_flag("help") {
+        println!("{}", cli.usage());
+        return Ok(());
+    }
+    let max_batch = p.get_usize("max-batch")?;
+    if max_batch == 0 {
+        bail!("--max-batch must be >= 1");
+    }
+    let mode = bench::bench_mode()?;
+    let requests = match p.get_usize("requests")? {
+        0 => match mode {
+            bench::BenchMode::Quick => 64,
+            bench::BenchMode::Smoke => 256,
+            bench::BenchMode::Full => 1024,
+        },
+        n => n,
+    };
+    let clients = p.get_usize("clients")?.max(1);
+    let max_wait = Duration::from_millis(p.get_u64("max-wait-ms")?);
+    let seed = p.get_u64("seed")?;
+    let (snap_path, temp) = if p.get("snapshot").is_empty() {
+        (quick_train_snapshot(p.get("size"), p.get_usize("train-steps")?)?, true)
+    } else {
+        (PathBuf::from(p.get("snapshot")), false)
+    };
+    let size = SnapshotReader::open(&snap_path)?.manifest().meta.size.clone();
+    println!(
+        "serving {size}/causal-lm from {}: {requests} requests, {clients} clients, \
+         max-batch {max_batch}, max-wait {max_wait:?}",
+        snap_path.display()
+    );
+    // Two passes over the same snapshot and traffic: max_batch 1 is the
+    // one-request-per-model-pass reference the batched pass is measured
+    // against in BENCH_serve.json.
+    let unbatched = serve_pass(
+        &snap_path,
+        "unbatched",
+        requests,
+        clients,
+        EngineConfig { max_batch: 1, max_wait: Duration::ZERO, queue_cap: requests },
+        seed,
+    )?;
+    let batched = serve_pass(
+        &snap_path,
+        "batched",
+        requests,
+        clients,
+        EngineConfig { max_batch, max_wait, queue_cap: requests.max(max_batch) },
+        seed,
+    )?;
+    if std::env::var("WTACRS_BENCH_BASELINE").is_ok() {
+        let doc = serve_baseline_doc(mode, &size, requests, max_batch, &unbatched, &batched)?;
+        let path = bench::write_baseline("serve", &doc)?;
+        println!("wrote {}", path.display());
+    }
+    if temp {
+        std::fs::remove_file(&snap_path).ok();
+    }
+    Ok(())
+}
+
+/// Quick-train a causal-LM and snapshot it, so `wtacrs serve` works out
+/// of the box with no prior training run.
+fn quick_train_snapshot(size: &str, steps: usize) -> Result<PathBuf> {
+    let Some((vocab, _seq, _batch, _d_model, _d_ff)) = size_dims(size) else {
+        bail!("unknown model size {size:?} (tiny|small)");
+    };
+    let mut cfg = SessionConfig::new(size, "full-wtacrs30".parse()?, 2);
+    cfg.model = ModelSpec {
+        depth: 2,
+        width: 0,
+        contraction: Contraction::Tokens { per_sample: 4 },
+        arch: Arch::CausalLm,
+        heads: 4,
+    };
+    let mut sess = NativeSession::new(&cfg)?;
+    let corpus = Corpus::new(vocab, cfg.seed);
+    let zn = vec![1.0f32; sess.n_approx_layers() * sess.batch_size()];
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let toks = corpus.batch(sess.batch_size(), sess.seq_len(), step as u64);
+        sess.train_step(&toks, &[], &[], &zn)?;
+    }
+    let meta = SnapshotMeta {
+        size: cfg.size.clone(),
+        method: cfg.method,
+        n_out: cfg.n_out,
+        seed: cfg.seed,
+        spec: cfg.model,
+    };
+    let path = std::env::temp_dir()
+        .join(format!("wtacrs-serve-cli-{}.snapshot", std::process::id()));
+    save_snapshot(&path, &meta, &sess.state())?;
+    println!(
+        "quick-trained {size}/causal-lm for {steps} steps in {:.1}s; snapshot at {}",
+        t0.elapsed().as_secs_f64(),
+        path.display()
+    );
+    Ok(path)
+}
+
+/// Drive one engine pass with `clients` synchronous client threads and
+/// print its latency/throughput line.
+fn serve_pass(
+    snapshot: &Path,
+    label: &str,
+    requests: usize,
+    clients: usize,
+    cfg: EngineConfig,
+    seed: u64,
+) -> Result<EngineReport> {
+    let model = ServeModel::from_snapshot(snapshot)?;
+    let seq = model.seq();
+    let prompts = Corpus::new(model.vocab(), seed).batch(requests, seq, 0);
+    let engine = Engine::start(model, cfg)?;
+    // Synthetic clients are plain threads: the dispatcher owns the GEMM
+    // pool, and a client blocked in `infer` must never occupy a
+    // `util::pool` worker.
+    let mut joined = Vec::with_capacity(clients);
+    for c in 0..clients {
+        let h = engine.handle();
+        let mine: Vec<Vec<i32>> = (c..requests)
+            .step_by(clients)
+            .map(|r| prompts[r * seq..(r + 1) * seq].to_vec())
+            .collect();
+        joined.push(std::thread::spawn(move || -> Result<usize> {
+            let mut done = 0usize;
+            for t in mine {
+                h.infer(t)?;
+                done += 1;
+            }
+            Ok(done)
+        }));
+    }
+    let mut answered = 0usize;
+    for j in joined {
+        answered += j.join().map_err(|_| anyhow!("serve: a client thread panicked"))??;
+    }
+    let report = engine.shutdown()?;
+    if answered != requests || report.completed != requests {
+        bail!(
+            "serve[{label}]: {answered} answered / {} completed of {requests} requests",
+            report.completed
+        );
+    }
+    let stats = report
+        .latency
+        .ok_or_else(|| anyhow!("serve[{label}]: no latency samples"))?;
+    println!(
+        "serve[{label}]: {requests} requests in {} batches, {:.1} ms wall, \
+         {:.1} req/s; latency mean {:.2} ms p50 {:.2} ms p99 {:.2} ms",
+        report.batches,
+        report.wall_ms,
+        report.throughput_rps,
+        stats.mean_ms,
+        stats.p50_ms,
+        stats.p99_ms
+    );
+    Ok(report)
+}
+
+/// Assemble the validated `BENCH_serve.json` document: latency entries
+/// for both passes, plus the batched-vs-unbatched wall-clock band.
+fn serve_baseline_doc(
+    mode: bench::BenchMode,
+    size: &str,
+    requests: usize,
+    max_batch: usize,
+    unbatched: &EngineReport,
+    batched: &EngineReport,
+) -> Result<Json> {
+    let entry = |name: &str, r: &EngineReport| -> Result<Json> {
+        let s = r
+            .latency
+            .ok_or_else(|| anyhow!("serve bench: {name}: no latency stats"))?;
+        Ok(json::obj(vec![
+            ("name", json::s(name)),
+            ("requests", json::num(r.completed as f64)),
+            ("batches", json::num(r.batches as f64)),
+            ("wall_ms", json::num(r.wall_ms)),
+            ("throughput_rps", json::num(r.throughput_rps)),
+            ("mean_ms", json::num(s.mean_ms)),
+            ("p50_ms", json::num(s.p50_ms)),
+            ("p99_ms", json::num(s.p99_ms)),
+        ]))
+    };
+    if unbatched.wall_ms <= 0.0 || batched.wall_ms <= 0.0 {
+        bail!(
+            "serve bench: degenerate wall-clock (unbatched {} ms, batched {} ms)",
+            unbatched.wall_ms,
+            batched.wall_ms
+        );
+    }
+    Ok(json::obj(vec![
+        ("bench", json::s("serve")),
+        ("mode", json::s(mode.as_str())),
+        ("provenance", json::s("rust-native")),
+        (
+            "entries",
+            json::arr(vec![
+                entry("serve-unbatched", unbatched)?,
+                entry("serve-batched", batched)?,
+            ]),
+        ),
+        (
+            "baseline",
+            json::obj(vec![
+                (
+                    "workload",
+                    json::s(&format!("{size}/causal-lm/{requests}req-b{max_batch}")),
+                ),
+                ("band", json::s("batched-vs-unbatched")),
+                ("pre_change_ms", json::num(unbatched.wall_ms)),
+                ("post_change_ms", json::num(batched.wall_ms)),
+                ("speedup", json::num(unbatched.wall_ms / batched.wall_ms)),
+            ]),
+        ),
+    ]))
+}
+
 #[cfg(test)]
 mod tests {
     fn args(a: &[&str]) -> Vec<String> {
@@ -480,5 +736,34 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("mlp|transformer|causal-lm"), "{e}");
+    }
+
+    #[test]
+    fn serve_rejects_zero_max_batch() {
+        // Checked before any training happens: a zero batch can never
+        // drain the queue.
+        let e = super::run(&args(&["serve", "--max-batch", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("max-batch"), "{e}");
+    }
+
+    #[test]
+    fn serve_reports_a_missing_snapshot_path() {
+        let e = super::run(&args(&[
+            "serve", "--snapshot", "/nonexistent/wtacrs-missing.snapshot",
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("snapshot"), "{e}");
+    }
+
+    #[test]
+    fn serve_rejects_unknown_quick_train_size() {
+        // The size is validated before the quick-train spends any time.
+        let e = super::run(&args(&["serve", "--size", "huge"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("huge"), "{e}");
     }
 }

@@ -1,6 +1,10 @@
 //! GLUE evaluation metrics (paper §5.1): accuracy, F1, Matthews
-//! correlation, Pearson and Spearman correlation — one per task family.
+//! correlation, Pearson and Spearman correlation — one per task family —
+//! plus the serving-side [`LatencyHistogram`] (p50/p99/throughput for
+//! `wtacrs serve` and the [`crate::serve::Engine`] report).
 
+use crate::bail;
+use crate::util::error::Result;
 use crate::util::stats;
 
 /// Which metric a task reports (mirrors the paper's protocol).
@@ -98,6 +102,75 @@ pub fn evaluate(
     }
 }
 
+/// Collected request latencies (milliseconds) for a serving run.
+///
+/// Samples are kept raw and summarized on demand — the serve workloads
+/// are a few thousand requests at most, so exact percentiles beat a
+/// bucketed sketch and cost nothing.
+#[derive(Debug, Clone, Default)]
+pub struct LatencyHistogram {
+    samples_ms: Vec<f64>,
+}
+
+/// Point summary of a [`LatencyHistogram`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+    pub min_ms: f64,
+    pub max_ms: f64,
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram::default()
+    }
+
+    /// Record one latency sample.
+    pub fn record(&mut self, latency: std::time::Duration) {
+        self.samples_ms.push(latency.as_secs_f64() * 1e3);
+    }
+
+    /// Record a latency already expressed in milliseconds.
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_ms.push(ms);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples_ms.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples_ms.is_empty()
+    }
+
+    /// Merge another histogram's samples into this one.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        self.samples_ms.extend_from_slice(&other.samples_ms);
+    }
+
+    /// Exact summary (errors on an empty histogram rather than
+    /// inventing a zero percentile).
+    pub fn stats(&self) -> Result<LatencyStats> {
+        if self.samples_ms.is_empty() {
+            bail!("latency histogram: no samples recorded");
+        }
+        let mut s = stats::Summary::new();
+        s.extend(self.samples_ms.iter().copied());
+        let mut xs = self.samples_ms.clone();
+        Ok(LatencyStats {
+            count: self.samples_ms.len(),
+            mean_ms: s.mean(),
+            p50_ms: stats::percentile(&mut xs, 50.0),
+            p99_ms: stats::percentile(&mut xs, 99.0),
+            min_ms: s.min(),
+            max_ms: s.max(),
+        })
+    }
+}
+
 /// Argmax over a row-major (n, c) logits buffer.
 pub fn argmax_rows(logits: &[f32], n: usize, c: usize) -> Vec<usize> {
     assert_eq!(logits.len(), n * c);
@@ -157,5 +230,29 @@ mod tests {
         let logits = [0.1f32, 0.9, 0.8, 0.2, 0.3, 0.3];
         let p = argmax_rows(&logits, 3, 2);
         assert_eq!(p, vec![1, 0, 0]);
+    }
+
+    #[test]
+    fn latency_histogram_percentiles() {
+        let mut h = LatencyHistogram::new();
+        assert!(h.is_empty());
+        assert!(h.stats().is_err(), "empty histogram must not summarize");
+        for ms in [10.0, 20.0, 30.0, 40.0] {
+            h.record_ms(ms);
+        }
+        h.record(std::time::Duration::from_millis(50));
+        let s = h.stats().unwrap();
+        assert_eq!(s.count, 5);
+        assert!((s.mean_ms - 30.0).abs() < 1e-9);
+        assert!((s.p50_ms - 30.0).abs() < 1e-9);
+        assert!((s.p99_ms - 49.6).abs() < 1e-9);
+        assert_eq!(s.min_ms, 10.0);
+        assert_eq!(s.max_ms, 50.0);
+
+        let mut other = LatencyHistogram::new();
+        other.record_ms(100.0);
+        h.merge(&other);
+        assert_eq!(h.len(), 6);
+        assert_eq!(h.stats().unwrap().max_ms, 100.0);
     }
 }

@@ -32,6 +32,7 @@ use crate::bail;
 use crate::estimator::Mat;
 use crate::util::error::Result;
 
+use super::decode::DecodeState;
 use super::layers::Linear;
 use super::module::{BackwardCtx, ForwardCtx, Module, Param};
 use super::sequential::Sequential;
@@ -665,6 +666,68 @@ impl Module for MultiHeadAttention {
     fn n_approx(&self) -> usize {
         4
     }
+
+    /// Incremental decode: `x` is one `(batch, d)` position.  Projects
+    /// the step's Q/K/V, appends K/V to this module's [`KvCache`]
+    /// (claimed from `st` in graph order), and attends each sample's
+    /// query over its cached prefix.
+    ///
+    /// Bitwise identity with the full-context forward comes from
+    /// replaying `sdpa_forward`'s arithmetic exactly per query: the
+    /// same f64 dot-and-scale cast to f32 scores, the same
+    /// [`softmax_rows`] over a prefix-only score row (the full forward's
+    /// future positions are `-inf`, which contribute exactly `0.0` to
+    /// its f64 denominator — so the prefix-only sum is the same bits),
+    /// and the same ascending-position f32 accumulation of the V rows.
+    /// Full-context attention never couples one query row to another,
+    /// so dropping the future columns changes nothing.
+    fn forward_decode(&self, x: Mat, st: &mut DecodeState) -> Result<Mat> {
+        if !self.causal {
+            bail!("mha decode: incremental decode requires the causal mask");
+        }
+        let d = self.d_model();
+        if x.cols != d {
+            bail!("mha decode: input has {} cols, weights expect {d}", x.cols);
+        }
+        let b = x.rows;
+        let qm = self.q.forward(x.clone(), &mut ForwardCtx::eval())?;
+        let km = self.k.forward(x.clone(), &mut ForwardCtx::eval())?;
+        let vm = self.v.forward(x, &mut ForwardCtx::eval())?;
+        let cache = st.claim(b, d)?;
+        cache.append(&km, &vm)?;
+        let t = cache.len();
+        let (heads, dh) = (self.heads, d / self.heads);
+        let scale = 1.0 / (dh as f64).sqrt();
+        let mut ao = Mat::zeros(b, d);
+        let mut scores = Mat::zeros(1, t);
+        for s in 0..b {
+            for g in 0..heads {
+                let c0 = g * dh;
+                let qrow = &qm.row(s)[c0..c0 + dh];
+                for tk in 0..t {
+                    let krow = &cache.k_row(s, tk)[c0..c0 + dh];
+                    let dot: f64 = qrow
+                        .iter()
+                        .zip(krow)
+                        .map(|(&a, &bv)| a as f64 * bv as f64)
+                        .sum();
+                    scores.data[tk] = (dot * scale) as f32;
+                }
+                let arow = softmax_rows(&scores);
+                let dst = &mut ao.data[s * d + c0..s * d + c0 + dh];
+                for (tk, &a) in arow.data.iter().enumerate() {
+                    if a == 0.0 {
+                        continue;
+                    }
+                    let vrow = &cache.v_row(s, tk)[c0..c0 + dh];
+                    for (o, &vv) in dst.iter_mut().zip(vrow) {
+                        *o += a * vv;
+                    }
+                }
+            }
+        }
+        self.proj.forward(ao, &mut ForwardCtx::eval())
+    }
 }
 
 /// Pre-norm residual transformer block:
@@ -766,6 +829,29 @@ impl Module for TransformerBlock {
 
     fn n_approx(&self) -> usize {
         self.mha.n_approx() + self.ffn.n_approx()
+    }
+
+    /// Incremental decode: the same residual dataflow as the eval
+    /// forward (`forward_shared` with an eval context pushes nothing),
+    /// with the attention hop routed through the KV cache.
+    fn forward_decode(&self, x: Mat, st: &mut DecodeState) -> Result<Mat> {
+        let h1 = self.ln1.forward_shared(&x, &mut ForwardCtx::eval())?;
+        let a = self.mha.forward_decode(h1, st)?;
+        let mut x2 = x;
+        x2.add_assign(&a);
+        let h2 = self.ln2.forward_shared(&x2, &mut ForwardCtx::eval())?;
+        let f = self.ffn.forward_decode(h2, st)?;
+        if (f.rows, f.cols) != (x2.rows, x2.cols) {
+            bail!(
+                "transformer block: ffn emitted {}x{}, residual stream is {}x{}",
+                f.rows,
+                f.cols,
+                x2.rows,
+                x2.cols
+            );
+        }
+        x2.add_assign(&f);
+        Ok(x2)
     }
 }
 
@@ -1058,6 +1144,45 @@ mod tests {
         });
         assert_eq!(grads, 4);
         assert!(norms.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn mha_incremental_decode_matches_full_context_bitwise() {
+        use crate::nn::decode::DecodeState;
+        let (b, t, d, heads) = (3, 5, 16, 4);
+        let n = b * t;
+        let mut rng = Rng::new(21);
+        let w: [Mat; 4] = std::array::from_fn(|_| Mat::randn(d, d, &mut rng).scale(0.3));
+        let mha = MultiHeadAttention::new(w, exact_tokens(t), 0, heads, t)
+            .unwrap()
+            .with_causal(true);
+        let x = Mat::randn(n, d, &mut rng);
+        let full = mha.forward(x.clone(), &mut ForwardCtx::eval()).unwrap();
+
+        let mut st = DecodeState::new();
+        for pos in 0..t {
+            // One (b, d) block: every sample's row at this position.
+            let step = Mat::from_fn(b, d, |s, c| x.at(s * t + pos, c));
+            st.begin_step();
+            let y = mha.forward_decode(step, &mut st).unwrap();
+            assert_eq!(st.positions(), pos + 1);
+            for s in 0..b {
+                assert_eq!(
+                    y.row(s),
+                    full.row(s * t + pos),
+                    "sample {s} position {pos} diverged from full-context"
+                );
+            }
+        }
+
+        // Non-causal attention cannot decode incrementally.
+        let w: [Mat; 4] = std::array::from_fn(|_| Mat::randn(d, d, &mut rng));
+        let plain = MultiHeadAttention::new(w, exact_tokens(t), 0, heads, t).unwrap();
+        let e = plain
+            .forward_decode(Mat::zeros(b, d), &mut DecodeState::new())
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("causal mask"), "{e}");
     }
 
     #[test]

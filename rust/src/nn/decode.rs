@@ -1,0 +1,201 @@
+//! KV-cache state for incremental (one-position-per-step) decoding.
+//!
+//! Training and full-context eval feed a whole `(batch, seq)` token
+//! block through the graph at once.  Serving a causal LM wants the
+//! opposite shape: one new token position per step, attending over the
+//! keys/values of every position already decoded.  [`DecodeState`]
+//! carries that cross-step state — one [`KvCache`] per
+//! [`MultiHeadAttention`](super::MultiHeadAttention) in the graph — so
+//! the modules themselves stay stateless and a single graph can serve
+//! many concurrent decode streams (one `DecodeState` each).
+//!
+//! The caches are claimed in *graph order*: every decode step calls
+//! [`DecodeState::begin_step`] and then walks the graph with
+//! [`Module::forward_decode`](super::Module::forward_decode), and each
+//! attention module claims the next cache slot as the walk reaches it.
+//! The first step creates the caches; later steps re-claim and extend
+//! them.  Because the walk order is the graph order, the association is
+//! deterministic without the modules knowing their own index.
+//!
+//! Layout: each cache stores rows *position-major* — appending position
+//! `p` pushes the step's `(batch, d)` K and V blocks, and the row for
+//! `(sample s, position p)` lives at offset `(p·batch + s)·d`.  Reads
+//! during attention walk positions in ascending order per sample, which
+//! is exactly the accumulation order of the full-context
+//! `sdpa_forward`, so incremental decode reproduces its logits
+//! *bitwise* (pinned by `tests/decode_identity.rs`).
+
+use crate::bail;
+use crate::estimator::Mat;
+use crate::util::error::Result;
+
+/// Per-attention-module key/value cache for one decode stream.
+///
+/// Grows by one position per [`KvCache::append`]; rows are
+/// position-major (`(pos * batch + sample) * d`).
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    d: usize,
+    batch: usize,
+    len: usize,
+}
+
+impl KvCache {
+    fn new(batch: usize, d: usize) -> Self {
+        KvCache { k: Vec::new(), v: Vec::new(), d, batch, len: 0 }
+    }
+
+    /// Decoded positions so far.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Samples per step (fixed at creation).
+    pub fn batch(&self) -> usize {
+        self.batch
+    }
+
+    /// Append one position: `k` and `v` are the step's `(batch, d)`
+    /// projection outputs.
+    pub fn append(&mut self, k: &Mat, v: &Mat) -> Result<()> {
+        for (name, m) in [("k", k), ("v", v)] {
+            if (m.rows, m.cols) != (self.batch, self.d) {
+                bail!(
+                    "kv cache: {name} block is {}x{}, cache expects {}x{}",
+                    m.rows,
+                    m.cols,
+                    self.batch,
+                    self.d
+                );
+            }
+        }
+        self.k.extend_from_slice(&k.data);
+        self.v.extend_from_slice(&v.data);
+        self.len += 1;
+        Ok(())
+    }
+
+    /// Cached key row of `(sample, pos)`.
+    pub fn k_row(&self, sample: usize, pos: usize) -> &[f32] {
+        debug_assert!(sample < self.batch && pos < self.len);
+        let o = (pos * self.batch + sample) * self.d;
+        &self.k[o..o + self.d]
+    }
+
+    /// Cached value row of `(sample, pos)`.
+    pub fn v_row(&self, sample: usize, pos: usize) -> &[f32] {
+        debug_assert!(sample < self.batch && pos < self.len);
+        let o = (pos * self.batch + sample) * self.d;
+        &self.v[o..o + self.d]
+    }
+
+    /// Cached floats (K + V), for memory accounting.
+    pub fn cached_floats(&self) -> usize {
+        self.k.len() + self.v.len()
+    }
+}
+
+/// Cross-step decode state for one stream: the K/V caches of every
+/// attention module in the graph, claimed in graph order each step.
+#[derive(Debug, Default)]
+pub struct DecodeState {
+    caches: Vec<KvCache>,
+    cursor: usize,
+}
+
+impl DecodeState {
+    pub fn new() -> Self {
+        DecodeState::default()
+    }
+
+    /// Start a decode step: the next graph walk claims caches from the
+    /// beginning again.
+    pub fn begin_step(&mut self) {
+        self.cursor = 0;
+    }
+
+    /// Claim the next cache in graph order, creating it on the first
+    /// step.  The `(batch, d)` shape must stay fixed across steps — a
+    /// mismatch means the stream is being fed a different batch.
+    pub fn claim(&mut self, batch: usize, d: usize) -> Result<&mut KvCache> {
+        if self.cursor == self.caches.len() {
+            self.caches.push(KvCache::new(batch, d));
+        }
+        let cache = &mut self.caches[self.cursor];
+        if (cache.batch, cache.d) != (batch, d) {
+            bail!(
+                "decode state: cache #{} was created for batch {} width {}, \
+                 step wants batch {batch} width {d}",
+                self.cursor,
+                cache.batch,
+                cache.d
+            );
+        }
+        self.cursor += 1;
+        Ok(cache)
+    }
+
+    /// Positions decoded so far (0 before the first step).
+    pub fn positions(&self) -> usize {
+        self.caches.first().map(|c| c.len()).unwrap_or(0)
+    }
+
+    /// Total cached K/V floats across every attention module.
+    pub fn cached_floats(&self) -> usize {
+        self.caches.iter().map(|c| c.cached_floats()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cache_layout_is_position_major() {
+        let mut c = KvCache::new(2, 3);
+        assert!(c.is_empty());
+        let k0 = Mat { rows: 2, cols: 3, data: (0..6).map(|i| i as f32).collect() };
+        let v0 = Mat { rows: 2, cols: 3, data: (10..16).map(|i| i as f32).collect() };
+        c.append(&k0, &v0).unwrap();
+        let k1 = Mat { rows: 2, cols: 3, data: (20..26).map(|i| i as f32).collect() };
+        let v1 = Mat { rows: 2, cols: 3, data: (30..36).map(|i| i as f32).collect() };
+        c.append(&k1, &v1).unwrap();
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.batch(), 2);
+        // Sample 1's rows in ascending position order.
+        assert_eq!(c.k_row(1, 0), &[3.0, 4.0, 5.0]);
+        assert_eq!(c.k_row(1, 1), &[23.0, 24.0, 25.0]);
+        assert_eq!(c.v_row(0, 1), &[30.0, 31.0, 32.0]);
+        assert_eq!(c.cached_floats(), 2 * 2 * 2 * 3);
+    }
+
+    #[test]
+    fn append_rejects_wrong_shapes() {
+        let mut c = KvCache::new(2, 3);
+        let bad = Mat::zeros(3, 3);
+        let ok = Mat::zeros(2, 3);
+        let e = c.append(&bad, &ok).unwrap_err().to_string();
+        assert!(e.contains("kv cache") && e.contains("3x3"), "{e}");
+        assert_eq!(c.len(), 0, "failed append must not grow the cache");
+    }
+
+    #[test]
+    fn claim_walks_graph_order_and_pins_shape() {
+        let mut st = DecodeState::new();
+        assert_eq!(st.positions(), 0);
+        st.begin_step();
+        st.claim(2, 4).unwrap();
+        st.claim(2, 8).unwrap();
+        // Next step re-claims the same caches in order.
+        st.begin_step();
+        assert_eq!(st.claim(2, 4).unwrap().batch(), 2);
+        let e = st.claim(3, 8).unwrap_err().to_string();
+        assert!(e.contains("cache #1") && e.contains("batch 3"), "{e}");
+    }
+}

@@ -19,6 +19,7 @@ use crate::estimator::Mat;
 use crate::ops::SampledLinear;
 use crate::util::error::Result;
 
+use super::decode::DecodeState;
 use super::module::{BackwardCtx, ForwardCtx, Module, Param};
 use super::tape::{BitMask, Saved};
 
@@ -131,6 +132,49 @@ impl Module for MeanPoolEmbed {
 
     fn visit_params(&self, _f: &mut dyn FnMut(&Param)) {}
     fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
+
+    /// Decode step: one `(batch, seq/per_sample)` token *chunk* per
+    /// call — the tokens of a single chunk position — pooled to one
+    /// `(batch, d)` row block.  The pooling loop (ascending-`j` f32
+    /// accumulation, PAD skip, count-floored mean) is the full
+    /// forward's inner loop verbatim, so each decode step reproduces
+    /// the corresponding full-context output rows bitwise.
+    fn forward_decode(&self, x: Mat, _st: &mut DecodeState) -> Result<Mat> {
+        let chunk = self.seq / self.per_sample;
+        let (b, d) = (x.rows, self.embed.cols);
+        if x.cols != chunk {
+            bail!(
+                "mean-pool embed decode: expected one {chunk}-token chunk per \
+                 row, got {} columns",
+                x.cols
+            );
+        }
+        let mut out = Mat::zeros(b, d);
+        for r in 0..b {
+            let mut count = 0usize;
+            for j in 0..chunk {
+                let tf = x.at(r, j);
+                if tf == 0.0 {
+                    continue; // PAD
+                }
+                let t = tf as i64;
+                if t < 0 || t as usize >= self.embed.rows {
+                    bail!("token id {tf} out of vocab {}", self.embed.rows);
+                }
+                let erow = self.embed.row(t as usize);
+                let dst = &mut out.data[r * d..(r + 1) * d];
+                for (xd, &ev) in dst.iter_mut().zip(erow) {
+                    *xd += ev;
+                }
+                count += 1;
+            }
+            let inv = 1.0 / count.max(1) as f32;
+            for xd in &mut out.data[r * d..(r + 1) * d] {
+                *xd *= inv;
+            }
+        }
+        Ok(out)
+    }
 }
 
 /// A trainable linear whose weight-gradient GEMM runs through
@@ -166,7 +210,9 @@ impl Module for Linear {
             }
             Ok(z)
         } else {
-            Ok(x.matmul(&self.p.w))
+            // Serving path: the op's no-save forward — same GEMM, no
+            // context allocation, no RNG draw.
+            self.op.forward_infer(&x, &self.p.w)
         }
     }
 
@@ -329,7 +375,7 @@ impl Module for LoraAdapter {
                 tape.push(self.name(), Saved::Acts(x));
             }
         } else {
-            z.add_assign(&xa.matmul(&self.b.w));
+            z.add_assign(&self.op.forward_infer(&xa, &self.b.w)?);
         }
         Ok(z)
     }

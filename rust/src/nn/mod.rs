@@ -25,6 +25,10 @@
 //!   under `Contraction::Tokens` emitting per-token vocabulary logits
 //!   (no pooling), for the [`Arch::CausalLm`] shifted next-token
 //!   workload.
+//! * [`DecodeState`] / [`KvCache`] — cross-step serving state for
+//!   incremental causal-LM decoding: one position per
+//!   [`Module::forward_decode`] step, bitwise-identical to the
+//!   full-context eval forward.
 //! * [`ModelBuilder`] — assembles the full/lora/lst family graphs,
 //!   arbitrary-depth token-contracted MLP stacks, and pre-norm
 //!   transformer stacks — pooled classifier ([`Arch::Transformer`]) or
@@ -56,6 +60,7 @@
 
 pub mod attention;
 pub mod builder;
+pub mod decode;
 pub mod layers;
 pub mod module;
 pub mod sequential;
@@ -67,6 +72,7 @@ pub use attention::{
 pub use builder::{
     Arch, BuiltModel, ModelBuilder, ModelSpec, StackDims, LORA_RANK, LST_FACTOR,
 };
+pub use decode::{DecodeState, KvCache};
 pub use layers::{Bias, Linear, LmHead, LoraAdapter, MeanPool, MeanPoolEmbed, Relu};
 pub use module::{BackwardCtx, ForwardCtx, Module, Param};
 pub use sequential::Sequential;

@@ -13,6 +13,7 @@ use crate::util::error::Result;
 use crate::util::rng::Rng;
 use crate::{anyhow, bail};
 
+use super::decode::DecodeState;
 use super::tape::Tape;
 
 /// One trainable tensor with its Adam state and (after a backward walk)
@@ -121,7 +122,11 @@ impl BackwardCtx<'_> {
 /// output gradient and produces the input gradient, popping exactly
 /// what forward pushed.  Modules whose input needs no gradient (first
 /// trainable layer over a frozen encoder) return an empty `Mat`.
-pub trait Module {
+///
+/// `Send` is a supertrait so a built graph can move onto a serving
+/// thread (the `serve::Engine` dispatcher owns the model); every
+/// module is plain owned data, so the bound is free.
+pub trait Module: Send {
     /// Display name; doubles as the tape label.
     fn name(&self) -> &'static str;
 
@@ -142,5 +147,20 @@ pub trait Module {
     /// Approximated (op-run, norm-cache-slotted) linears in this module.
     fn n_approx(&self) -> usize {
         0
+    }
+
+    /// Incremental-decode forward: one token position per call, with
+    /// cross-step attention state carried in `st` (see
+    /// [`DecodeState`]).
+    ///
+    /// The default delegates to the tape-free inference forward, which
+    /// is exact for every *row-local* module (linears, biases, ReLU,
+    /// layer norm, the LM head): their per-row outputs don't depend on
+    /// which other rows share the call.  Modules whose output couples
+    /// token positions — attention, the chunked embed front-end, and
+    /// containers that route to them — override this.
+    fn forward_decode(&self, x: Mat, st: &mut DecodeState) -> Result<Mat> {
+        let _ = st;
+        self.forward(x, &mut ForwardCtx::eval())
     }
 }

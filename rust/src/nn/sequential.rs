@@ -6,6 +6,7 @@
 use crate::estimator::Mat;
 use crate::util::error::{Context, Result};
 
+use super::decode::DecodeState;
 use super::module::{BackwardCtx, ForwardCtx, Module, Param};
 
 /// An ordered chain of boxed modules, itself a [`Module`].
@@ -106,6 +107,16 @@ impl Module for Sequential {
 
     fn n_approx(&self) -> usize {
         self.mods.iter().map(|m| m.n_approx()).sum()
+    }
+
+    fn forward_decode(&self, x: Mat, st: &mut DecodeState) -> Result<Mat> {
+        let mut h = x;
+        for (i, m) in self.mods.iter().enumerate() {
+            h = m
+                .forward_decode(h, st)
+                .with_context(|| format!("decode of module #{i} ({})", m.name()))?;
+        }
+        Ok(h)
     }
 }
 

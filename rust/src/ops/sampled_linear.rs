@@ -181,6 +181,27 @@ impl SampledLinear {
         };
         Ok((z, ctx))
     }
+
+    /// Inference forward: the same exact `Z = H W` GEMM as
+    /// [`Self::forward`], with *nothing* saved — no [`SavedContext`]
+    /// allocation, no activation clone, no sampling RNG draw, no
+    /// norm-cache read.  The serving path's operator: the training
+    /// forward computes `Z` before any saving happens, so this output
+    /// is bitwise identical to it (pinned by test).
+    ///
+    /// Contraction-axis bookkeeping does not apply (there is no
+    /// backward), so only the GEMM shape is validated.
+    pub fn forward_infer(&self, h: &Mat, w: &Mat) -> Result<Mat> {
+        if h.cols != w.rows {
+            bail!(
+                "ops::SampledLinear::forward_infer: H (.. x {}) does not \
+                 contract against W ({} x ..)",
+                h.cols,
+                w.rows
+            );
+        }
+        Ok(h.matmul(w))
+    }
 }
 
 /// What forward saved for the weight-gradient GEMM.
@@ -386,6 +407,42 @@ mod tests {
         let zn = vec![1.0f32; 32];
         let (z, _ctx) = wta(30).forward(&h, &w, &zn, &mut rng).unwrap();
         assert_eq!(z, h.matmul(&w), "forward GEMM must stay exact");
+    }
+
+    #[test]
+    fn inference_forward_is_bitwise_equal_to_training_z() {
+        // The serving-path pin: forward_infer's output must be the
+        // training forward's Z bit for bit, on both the sampled and the
+        // exact operator — and it must not consume the RNG (a second
+        // training forward from the same RNG state draws the same
+        // selection whether or not forward_infer ran in between).
+        let mut rng = Rng::new(21);
+        let h = Mat::randn(32, 16, &mut rng);
+        let w = Mat::randn(16, 8, &mut rng);
+        let zn = vec![1.0f32; 32];
+        for op in [wta(30), SampledLinear::exact()] {
+            let (z_train, _ctx) = op.forward(&h, &w, &zn, &mut Rng::new(7)).unwrap();
+            let z_infer = op.forward_infer(&h, &w).unwrap();
+            assert_eq!(z_infer, z_train, "inference forward diverged from Z");
+        }
+        let mut draw = Rng::new(9);
+        let (_, c1) = wta(30).forward(&h, &w, &zn, &mut draw).unwrap();
+        let mut draw = Rng::new(9);
+        wta(30).forward_infer(&h, &w).unwrap();
+        let (_, c2) = wta(30).forward(&h, &w, &zn, &mut draw).unwrap();
+        assert_eq!(
+            c1.selection().unwrap().0,
+            c2.selection().unwrap().0,
+            "forward_infer must not advance the sampling stream"
+        );
+        // Shape violations report under the inference op's own name.
+        let wt = Mat::randn(5, 3, &mut rng);
+        let e = wta(30).forward_infer(&h, &wt).unwrap_err().to_string();
+        assert!(
+            e.contains("ops::SampledLinear::forward_infer")
+                && e.contains("does not contract"),
+            "{e}"
+        );
     }
 
     #[test]

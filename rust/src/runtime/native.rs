@@ -35,8 +35,9 @@ use super::tensor::HostTensor;
 /// Stream-splitting constant for the per-step sampling RNG.
 const SAMPLE_STREAM: u64 = 0xA11CE;
 
-/// (vocab, seq, batch, d_model, d_ff) for a size name.
-fn size_dims(size: &str) -> Option<(usize, usize, usize, usize, usize)> {
+/// (vocab, seq, batch, d_model, d_ff) for a size name.  Public so the
+/// serving loader can rebuild a graph from a snapshot's size string.
+pub fn size_dims(size: &str) -> Option<(usize, usize, usize, usize, usize)> {
     match size {
         "tiny" => Some((1024, 64, 32, 128, 256)),
         "small" => Some((2048, 64, 32, 192, 384)),

@@ -1,0 +1,680 @@
+//! Forward-only serving subsystem: snapshot-backed models, KV-cache
+//! batch decoding, and a bounded-queue batching engine.
+//!
+//! [`ServeModel::from_snapshot`] rebuilds a trained causal-LM graph
+//! from a versioned [`crate::coordinator::snapshot`] file: the
+//! manifest's [`SnapshotMeta`] re-runs
+//! [`ModelBuilder`](crate::nn::ModelBuilder) with the recorded seed
+//! (recovering the frozen embedding table and the graph skeleton), and
+//! only the `param{p}.w` weight tensors are read — lazily, one
+//! [`SnapshotReader::tensor`] seek each — so the step scalar and the
+//! Adam moments never leave the disk.
+//!
+//! [`ServeModel::decode_batch`] is the tape-free incremental decode:
+//! one [`DecodeState`] per batch, one `forward_decode` call per token
+//! chunk, each step reading and extending the per-block K/V caches.
+//! The produced logits are bitwise-identical to a full-context
+//! recompute (pinned by `tests/decode_identity.rs` and the unit tests
+//! here).
+//!
+//! [`Engine`] is the request layer: clients [`EngineHandle::submit`]
+//! single-prompt requests into a bounded queue; a dedicated dispatcher
+//! thread gathers them into batches (up to `max_batch` requests,
+//! waiting at most `max_wait` once work is pending), decodes each
+//! batch in one model pass, and answers every request with its
+//! next-token logits.  Per-request latencies land in a
+//! [`LatencyHistogram`] and [`Engine::shutdown`] returns the run's
+//! [`EngineReport`] (p50/p99/throughput) — the numbers `wtacrs serve`
+//! prints and pins in `BENCH_serve.json`.
+//!
+//! Threading: the dispatcher is its own `std::thread`, *not* a
+//! [`crate::util::pool`] worker — pool workers degrade the GEMM hot
+//! path to serial ([`crate::util::pool::on_pool_worker`]), and the
+//! dispatcher blocks on the queue, which a shared pool must never do.
+
+use std::collections::VecDeque;
+use std::path::Path;
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::snapshot::{SnapshotMeta, SnapshotReader};
+use crate::estimator::Mat;
+use crate::metrics::{LatencyHistogram, LatencyStats};
+use crate::nn::{Arch, DecodeState, ForwardCtx, ModelBuilder, Module, Sequential, StackDims};
+use crate::runtime::native::size_dims;
+use crate::util::error::{Context, Result};
+use crate::util::rng::Rng;
+use crate::{anyhow, bail};
+
+/// A loaded, forward-only model: the rebuilt graph plus the decode
+/// geometry (`seq` token columns split into `per_sample` chunks).
+pub struct ServeModel {
+    graph: Sequential,
+    meta: SnapshotMeta,
+    seq: usize,
+    per_sample: usize,
+    vocab: usize,
+}
+
+impl ServeModel {
+    /// Load a model from a versioned snapshot: rebuild the graph
+    /// skeleton from the manifest's meta, then read exactly the weight
+    /// tensors (`param{p}.w`) the graph owns.
+    pub fn from_snapshot(path: impl AsRef<Path>) -> Result<Self> {
+        let mut reader = SnapshotReader::open(path)?;
+        let meta = reader.manifest().meta.clone();
+        if meta.spec.arch != Arch::CausalLm {
+            bail!(
+                "serve: snapshot holds a {} model; incremental decoding serves \
+                 causal-lm snapshots",
+                meta.spec.arch
+            );
+        }
+        let (vocab, seq, _def_batch, d_model, d_ff) = size_dims(&meta.size)
+            .ok_or_else(|| anyhow!("serve: unknown model size {:?} in snapshot", meta.size))?;
+        // The causal-LM head predicts over the vocabulary, whatever
+        // classifier width the training config carried (same override
+        // as `NativeSession::new`).
+        let dims = StackDims { vocab, seq, d_model, d_ff, n_out: vocab };
+        let mut rng = Rng::new(meta.seed);
+        let built = ModelBuilder::new(dims, meta.method, meta.spec)
+            .build(&mut rng)
+            .context("serve: rebuilding the snapshot's model graph")?;
+        let mut graph = built.graph;
+        let mut shapes: Vec<(usize, usize)> = Vec::new();
+        graph.visit_params(&mut |p| shapes.push((p.w.rows, p.w.cols)));
+        // Lazy weight load: only the param{p}.w manifest entries are
+        // read; optimizer moments and the step scalar stay on disk.
+        let mut mats: Vec<Mat> = Vec::with_capacity(shapes.len());
+        for (p, &(rows, cols)) in shapes.iter().enumerate() {
+            let name = format!("param{p}.w");
+            let idx = reader.manifest().index_of(&name).ok_or_else(|| {
+                anyhow!(
+                    "serve: snapshot has no tensor {name:?} (the rebuilt graph \
+                     wants {} params)",
+                    shapes.len()
+                )
+            })?;
+            let t = reader.tensor(idx)?;
+            if t.shape != [rows, cols] {
+                bail!(
+                    "serve: {name} has shape {:?}, the graph expects [{rows}, {cols}]",
+                    t.shape
+                );
+            }
+            let data =
+                t.as_f32().with_context(|| format!("serve: {name} dtype"))?.to_vec();
+            mats.push(Mat { rows, cols, data });
+        }
+        let mut it = mats.into_iter();
+        graph.visit_params_mut(&mut |p| {
+            if let Some(w) = it.next() {
+                p.w = w;
+                p.g = None;
+            }
+        });
+        let per_sample = meta.spec.contraction.per_sample().max(1);
+        Ok(ServeModel { graph, meta, seq, per_sample, vocab })
+    }
+
+    /// Prompt length in token ids (one request row).
+    pub fn seq(&self) -> usize {
+        self.seq
+    }
+
+    /// Vocabulary width of the emitted logits.
+    pub fn vocab(&self) -> usize {
+        self.vocab
+    }
+
+    /// Token chunks per prompt (= decode steps per request).
+    pub fn per_sample(&self) -> usize {
+        self.per_sample
+    }
+
+    /// The snapshot meta the model was rebuilt from.
+    pub fn meta(&self) -> &SnapshotMeta {
+        &self.meta
+    }
+
+    /// Incremental decode, all steps: feed the `batch` prompts chunk by
+    /// chunk through `forward_decode` over one shared [`DecodeState`],
+    /// returning each step's `(batch, vocab)` logits.  Step `p` covers
+    /// token columns `p·chunk..(p+1)·chunk`, and its sample-`s` row is
+    /// bitwise-identical to row `s·per_sample + p` of
+    /// [`ServeModel::eval_full`].
+    pub fn decode_steps(&self, tokens: &[i32], batch: usize) -> Result<Vec<Mat>> {
+        if batch == 0 {
+            bail!("serve decode: empty batch");
+        }
+        let (s, ps) = (self.seq, self.per_sample);
+        if tokens.len() != batch * s {
+            bail!(
+                "serve decode: expected {batch}x{s} = {} token ids, got {}",
+                batch * s,
+                tokens.len()
+            );
+        }
+        let chunk = s / ps;
+        let mut st = DecodeState::new();
+        let mut out = Vec::with_capacity(ps);
+        for p in 0..ps {
+            let mut x = Mat::zeros(batch, chunk);
+            for r in 0..batch {
+                for j in 0..chunk {
+                    x.data[r * chunk + j] = tokens[r * s + p * chunk + j] as f32;
+                }
+            }
+            st.begin_step();
+            out.push(self.graph.forward_decode(x, &mut st)?);
+        }
+        Ok(out)
+    }
+
+    /// Last-step logits only — the serving hot path (next-token
+    /// prediction for each prompt's final position).
+    pub fn decode_batch(&self, tokens: &[i32], batch: usize) -> Result<Mat> {
+        let mut steps = self.decode_steps(tokens, batch)?;
+        steps.pop().ok_or_else(|| anyhow!("serve decode: produced no steps"))
+    }
+
+    /// Full-context recompute — the identity reference: every
+    /// `(batch·per_sample, vocab)` per-token logit row in one tape-free
+    /// forward.
+    pub fn eval_full(&self, tokens: &[i32], batch: usize) -> Result<Mat> {
+        let s = self.seq;
+        if tokens.len() != batch * s {
+            bail!(
+                "serve eval: expected {batch}x{s} = {} token ids, got {}",
+                batch * s,
+                tokens.len()
+            );
+        }
+        let x = Mat {
+            rows: batch,
+            cols: s,
+            data: tokens.iter().map(|&t| t as f32).collect(),
+        };
+        self.graph.forward(x, &mut ForwardCtx::eval())
+    }
+}
+
+/// Batching knobs for the [`Engine`].
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Largest number of requests decoded in one model pass.
+    pub max_batch: usize,
+    /// How long the dispatcher waits for the batch to fill once the
+    /// oldest pending request arrived.
+    pub max_wait: Duration,
+    /// Bound on the pending queue; [`EngineHandle::submit`] blocks (back
+    /// pressure) while the queue is at capacity.
+    pub queue_cap: usize,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 64,
+        }
+    }
+}
+
+/// One answered request: the prompt's next-token logits plus how the
+/// engine handled it.
+#[derive(Debug, Clone)]
+pub struct Completion {
+    /// `(vocab)` logits for the position after the prompt's last token.
+    pub logits: Vec<f32>,
+    /// Enqueue-to-answer time.
+    pub latency: Duration,
+    /// How many requests shared the model pass.
+    pub batch_size: usize,
+}
+
+/// End-of-run summary returned by [`Engine::shutdown`].
+#[derive(Debug, Clone)]
+pub struct EngineReport {
+    /// Requests answered successfully.
+    pub completed: usize,
+    /// Model passes the dispatcher ran.
+    pub batches: usize,
+    /// Wall-clock from the first batch's start to the last completion.
+    pub wall_ms: f64,
+    /// Completed requests per second of busy wall-clock.
+    pub throughput_rps: f64,
+    /// Latency summary; `None` when no request completed.
+    pub latency: Option<LatencyStats>,
+}
+
+struct Pending {
+    tokens: Vec<i32>,
+    enqueued: Instant,
+    tx: mpsc::Sender<Result<Completion>>,
+}
+
+struct QueueState {
+    q: VecDeque<Pending>,
+    closed: bool,
+}
+
+struct Shared {
+    queue: Mutex<QueueState>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+fn lock(m: &Mutex<QueueState>) -> MutexGuard<'_, QueueState> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Cloneable client handle: submit requests, block for completions.
+#[derive(Clone)]
+pub struct EngineHandle {
+    shared: Arc<Shared>,
+    seq: usize,
+    queue_cap: usize,
+}
+
+impl EngineHandle {
+    /// Enqueue one prompt (exactly `seq` token ids).  Blocks while the
+    /// queue is at capacity; the returned receiver yields the
+    /// completion (or the decode error) when the dispatcher answers.
+    pub fn submit(&self, tokens: Vec<i32>) -> Result<mpsc::Receiver<Result<Completion>>> {
+        if tokens.len() != self.seq {
+            bail!(
+                "serve request: expected {} token ids (one prompt row), got {}",
+                self.seq,
+                tokens.len()
+            );
+        }
+        let (tx, rx) = mpsc::channel();
+        let mut st = lock(&self.shared.queue);
+        while st.q.len() >= self.queue_cap && !st.closed {
+            st = self.shared.not_full.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+        if st.closed {
+            bail!("serve engine: submitting to a shut-down engine");
+        }
+        st.q.push_back(Pending { tokens, enqueued: Instant::now(), tx });
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(rx)
+    }
+
+    /// Submit and block for the answer — the synchronous client path.
+    pub fn infer(&self, tokens: Vec<i32>) -> Result<Completion> {
+        let rx = self.submit(tokens)?;
+        rx.recv()
+            .map_err(|_| anyhow!("serve engine: the dispatcher dropped the request"))?
+    }
+}
+
+/// The batched request engine: a bounded queue drained by a dedicated
+/// dispatcher thread that owns the [`ServeModel`].
+pub struct Engine {
+    handle: EngineHandle,
+    dispatcher: Option<thread::JoinHandle<EngineReport>>,
+}
+
+impl Engine {
+    /// Spawn the dispatcher and start serving.
+    pub fn start(model: ServeModel, cfg: EngineConfig) -> Result<Engine> {
+        if cfg.max_batch == 0 {
+            bail!("serve engine: max_batch must be >= 1");
+        }
+        if cfg.queue_cap < cfg.max_batch {
+            bail!(
+                "serve engine: queue_cap {} below max_batch {} (a full batch \
+                 could never form)",
+                cfg.queue_cap,
+                cfg.max_batch
+            );
+        }
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(QueueState { q: VecDeque::new(), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+        });
+        let handle = EngineHandle {
+            shared: Arc::clone(&shared),
+            seq: model.seq,
+            queue_cap: cfg.queue_cap,
+        };
+        let dispatcher = thread::Builder::new()
+            .name("wtacrs-serve-dispatch".to_string())
+            .spawn(move || run_dispatcher(model, shared, cfg))
+            .context("serve engine: spawning the dispatcher thread")?;
+        Ok(Engine { handle, dispatcher: Some(dispatcher) })
+    }
+
+    /// A cloneable client handle (usable from any thread).
+    pub fn handle(&self) -> EngineHandle {
+        self.handle.clone()
+    }
+
+    fn close(&self) {
+        let mut st = lock(&self.handle.shared.queue);
+        st.closed = true;
+        drop(st);
+        self.handle.shared.not_empty.notify_all();
+        self.handle.shared.not_full.notify_all();
+    }
+
+    /// Stop accepting requests, drain what is queued, and return the
+    /// run's latency/throughput report.
+    pub fn shutdown(mut self) -> Result<EngineReport> {
+        self.close();
+        let h = self
+            .dispatcher
+            .take()
+            .ok_or_else(|| anyhow!("serve engine: already shut down"))?;
+        h.join().map_err(|_| anyhow!("serve engine: dispatcher thread panicked"))
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        if let Some(h) = self.dispatcher.take() {
+            self.close();
+            let _ = h.join();
+        }
+    }
+}
+
+/// Dispatcher loop: gather a batch (block for the first request, then
+/// wait up to `max_wait` for the batch to fill), decode it in one model
+/// pass, answer every request, repeat until closed and drained.
+fn run_dispatcher(model: ServeModel, shared: Arc<Shared>, cfg: EngineConfig) -> EngineReport {
+    let mut hist = LatencyHistogram::new();
+    let mut completed = 0usize;
+    let mut batches = 0usize;
+    let mut first_work: Option<Instant> = None;
+    let mut last_done: Option<Instant> = None;
+    loop {
+        let drained: Vec<Pending> = {
+            let mut st = lock(&shared.queue);
+            while st.q.is_empty() && !st.closed {
+                st = shared.not_empty.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            if st.q.is_empty() {
+                break; // closed and fully drained
+            }
+            let deadline = st
+                .q
+                .front()
+                .map(|p| p.enqueued + cfg.max_wait)
+                .unwrap_or_else(Instant::now);
+            while st.q.len() < cfg.max_batch && !st.closed {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
+                }
+                let (g, _) = shared
+                    .not_empty
+                    .wait_timeout(st, deadline - now)
+                    .unwrap_or_else(|e| e.into_inner());
+                st = g;
+            }
+            let take = st.q.len().min(cfg.max_batch);
+            st.q.drain(..take).collect()
+        };
+        shared.not_full.notify_all();
+        let nb = drained.len();
+        if first_work.is_none() {
+            first_work = Some(Instant::now());
+        }
+        let mut tokens = Vec::with_capacity(nb * model.seq);
+        for p in &drained {
+            tokens.extend_from_slice(&p.tokens);
+        }
+        let result = model.decode_batch(&tokens, nb);
+        let done = Instant::now();
+        batches += 1;
+        match result {
+            Ok(logits) => {
+                for (i, p) in drained.into_iter().enumerate() {
+                    let latency = done.saturating_duration_since(p.enqueued);
+                    hist.record(latency);
+                    completed += 1;
+                    let _ = p.tx.send(Ok(Completion {
+                        logits: logits.row(i).to_vec(),
+                        latency,
+                        batch_size: nb,
+                    }));
+                }
+            }
+            Err(e) => {
+                for p in drained {
+                    let _ = p
+                        .tx
+                        .send(Err(anyhow!("serve engine: batch decode failed: {e}")));
+                }
+            }
+        }
+        last_done = Some(done);
+    }
+    let wall = match (first_work, last_done) {
+        (Some(a), Some(b)) => b.saturating_duration_since(a),
+        _ => Duration::ZERO,
+    };
+    let wall_ms = wall.as_secs_f64() * 1e3;
+    let throughput_rps =
+        if wall_ms > 0.0 { completed as f64 / (wall_ms / 1e3) } else { 0.0 };
+    EngineReport {
+        completed,
+        batches,
+        wall_ms,
+        throughput_rps,
+        latency: hist.stats().ok(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::snapshot::save_snapshot;
+    use crate::data::Corpus;
+    use crate::nn::ModelSpec;
+    use crate::ops::Contraction;
+    use crate::runtime::native::NativeSession;
+    use crate::runtime::{HostTensor, SessionConfig, TrainSession};
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("wtacrs-serve-{}-{name}", std::process::id()))
+    }
+
+    fn lm_cfg() -> SessionConfig {
+        let mut c = SessionConfig::new("tiny", "full-wtacrs30".parse().unwrap(), 2);
+        c.model = ModelSpec {
+            depth: 2,
+            width: 0,
+            contraction: Contraction::Tokens { per_sample: 4 },
+            arch: Arch::CausalLm,
+            heads: 4,
+        };
+        c
+    }
+
+    /// Train a tiny causal-LM for `steps` and snapshot it.
+    fn trained_snapshot(name: &str, steps: usize) -> (std::path::PathBuf, NativeSession) {
+        let cfg = lm_cfg();
+        let mut sess = NativeSession::new(&cfg).unwrap();
+        let corpus = Corpus::new(1024, 0);
+        let zn = vec![1.0f32; sess.n_approx_layers() * sess.batch_size()];
+        for step in 0..steps {
+            let toks = corpus.batch(sess.batch_size(), sess.seq_len(), step as u64);
+            sess.train_step(&toks, &[], &[], &zn).unwrap();
+        }
+        let meta = SnapshotMeta {
+            size: cfg.size.clone(),
+            method: cfg.method,
+            n_out: cfg.n_out,
+            seed: cfg.seed,
+            spec: cfg.model,
+        };
+        let p = tmpfile(name);
+        save_snapshot(&p, &meta, &sess.state()).unwrap();
+        (p, sess)
+    }
+
+    #[test]
+    fn serve_model_matches_training_session_logits_bitwise() {
+        let (p, mut sess) = trained_snapshot("logits", 2);
+        let model = ServeModel::from_snapshot(&p).unwrap();
+        assert_eq!(model.vocab(), 1024);
+        assert_eq!(model.seq(), 64);
+        assert_eq!(model.per_sample(), 4);
+        assert_eq!(model.meta().seed, 0);
+        let b = sess.batch_size();
+        let toks = Corpus::new(1024, 9).batch(b, sess.seq_len(), 0);
+        // Tape-free serve forward == the training session's eval path.
+        let want = sess.eval_logits(&toks).unwrap();
+        let full = model.eval_full(&toks, b).unwrap();
+        assert_eq!(full.data, want, "serve forward != session eval");
+        // Incremental decode: step p's sample-s row is full-context row
+        // s*per_sample + p, bitwise.
+        let steps = model.decode_steps(&toks, b).unwrap();
+        assert_eq!(steps.len(), 4);
+        for (pi, y) in steps.iter().enumerate() {
+            assert_eq!((y.rows, y.cols), (b, 1024), "step {pi}");
+            for s in 0..b {
+                assert_eq!(y.row(s), full.row(s * 4 + pi), "step {pi} sample {s}");
+            }
+        }
+        // decode_batch is exactly the last step.
+        let last = model.decode_batch(&toks, b).unwrap();
+        assert_eq!(last.data, steps[3].data);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn engine_batches_requests_and_reports_latency() {
+        let (p, _sess) = trained_snapshot("engine", 1);
+        let model = ServeModel::from_snapshot(&p).unwrap();
+        let (seq, vocab) = (model.seq(), model.vocab());
+        let cfg = EngineConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(20),
+            queue_cap: 16,
+        };
+        let engine = Engine::start(model, cfg).unwrap();
+        let h = engine.handle();
+        let prompts = Corpus::new(1024, 5).batch(8, seq, 0);
+        let rxs: Vec<_> = (0..8)
+            .map(|r| h.submit(prompts[r * seq..(r + 1) * seq].to_vec()).unwrap())
+            .collect();
+        for rx in rxs {
+            let c = rx.recv().unwrap().unwrap();
+            assert_eq!(c.logits.len(), vocab);
+            assert!(c.batch_size >= 1 && c.batch_size <= 4);
+            assert!(c.logits.iter().all(|v| v.is_finite()));
+        }
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.completed, 8);
+        assert!(
+            report.batches >= 2 && report.batches <= 8,
+            "batches {}",
+            report.batches
+        );
+        let stats = report.latency.expect("latency stats for a non-empty run");
+        assert_eq!(stats.count, 8);
+        assert!(stats.p50_ms <= stats.p99_ms);
+        assert!(report.throughput_rps > 0.0);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn engine_rejects_bad_requests_and_idle_shutdown_is_clean() {
+        let (p, _sess) = trained_snapshot("idle", 1);
+        let model = ServeModel::from_snapshot(&p).unwrap();
+        let seq = model.seq();
+        let engine = Engine::start(model, EngineConfig::default()).unwrap();
+        let h = engine.handle();
+        let e = h.submit(vec![1, 2, 3]).unwrap_err().to_string();
+        assert!(e.contains("token ids"), "{e}");
+        let report = engine.shutdown().unwrap();
+        assert_eq!(report.completed, 0);
+        assert_eq!(report.batches, 0);
+        assert!(report.latency.is_none());
+        // A handle outliving the engine reports instead of hanging.
+        let e = h.submit(vec![0; seq]).unwrap_err().to_string();
+        assert!(e.contains("shut-down"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_engine_configs_are_rejected() {
+        let (p, _sess) = trained_snapshot("cfg", 1);
+        let model = ServeModel::from_snapshot(&p).unwrap();
+        let cfg = EngineConfig { max_batch: 0, ..EngineConfig::default() };
+        let e = Engine::start(model, cfg).unwrap_err().to_string();
+        assert!(e.contains("max_batch"), "{e}");
+        let model = ServeModel::from_snapshot(&p).unwrap();
+        let cfg = EngineConfig { max_batch: 8, queue_cap: 4, ..EngineConfig::default() };
+        let e = Engine::start(model, cfg).unwrap_err().to_string();
+        assert!(e.contains("queue_cap"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn non_causal_snapshot_is_rejected() {
+        let meta = SnapshotMeta {
+            size: "tiny".to_string(),
+            method: "full-wtacrs30".parse().unwrap(),
+            n_out: 2,
+            seed: 0,
+            spec: ModelSpec {
+                depth: 2,
+                width: 0,
+                contraction: Contraction::Tokens { per_sample: 4 },
+                arch: Arch::Transformer,
+                heads: 4,
+            },
+        };
+        let state = vec![
+            HostTensor::scalar_i32(0),
+            HostTensor::f32(vec![1, 1], vec![0.0]),
+            HostTensor::f32(vec![1, 1], vec![0.0]),
+            HostTensor::f32(vec![1, 1], vec![0.0]),
+        ];
+        let p = tmpfile("notcausal");
+        save_snapshot(&p, &meta, &state).unwrap();
+        let e = ServeModel::from_snapshot(&p).unwrap_err().to_string();
+        assert!(e.contains("causal-lm"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn snapshot_missing_weights_names_the_tensor() {
+        // A causal-lm manifest whose state carries fewer params than
+        // the rebuilt graph owns: the loader names the missing tensor.
+        let meta = SnapshotMeta {
+            size: "tiny".to_string(),
+            method: "full-wtacrs30".parse().unwrap(),
+            n_out: 2,
+            seed: 3,
+            spec: ModelSpec {
+                depth: 2,
+                width: 0,
+                contraction: Contraction::Tokens { per_sample: 4 },
+                arch: Arch::CausalLm,
+                heads: 4,
+            },
+        };
+        let state = vec![
+            HostTensor::scalar_i32(0),
+            HostTensor::f32(vec![1, 1], vec![0.0]),
+            HostTensor::f32(vec![1, 1], vec![0.0]),
+            HostTensor::f32(vec![1, 1], vec![0.0]),
+        ];
+        let p = tmpfile("shortstate");
+        save_snapshot(&p, &meta, &state).unwrap();
+        let e = ServeModel::from_snapshot(&p).unwrap_err().to_string();
+        assert!(e.contains("param0.w") || e.contains("param1.w"), "{e}");
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -1,4 +1,5 @@
-//! The committed `BENCH_table3.json` / `BENCH_fig9.json` baselines at
+//! The committed `BENCH_table3.json` / `BENCH_fig9.json` /
+//! `BENCH_serve.json` baselines at
 //! the repo root must always parse and satisfy the schema
 //! [`wtacrs::util::bench::validate_baseline`] enforces — CI runs this
 //! so a hand-edit or a broken regeneration can't silently rot the
@@ -19,9 +20,39 @@ fn load(name: &str) -> Json {
 
 #[test]
 fn committed_baselines_satisfy_schema() {
-    for name in ["BENCH_table3.json", "BENCH_fig9.json"] {
+    for name in ["BENCH_table3.json", "BENCH_fig9.json", "BENCH_serve.json"] {
         let doc = load(name);
         validate_baseline(&doc).unwrap_or_else(|e| panic!("{name}: {e}"));
+    }
+}
+
+#[test]
+fn committed_serve_baseline_records_the_batching_band() {
+    // PR-7 acceptance artifact: the serve baseline pins the measured
+    // batched-vs-unbatched wall-clock of the engine on the causal-LM
+    // decode workload, with entries for both passes.
+    let doc = load("BENCH_serve.json");
+    assert_eq!(doc.get("bench").and_then(Json::as_str), Some("serve"));
+    let base = doc.get("baseline").expect("baseline block");
+    let workload = base.get("workload").and_then(Json::as_str).unwrap();
+    assert!(
+        workload.contains("causal-lm"),
+        "workload {workload:?} does not name the causal-lm decode"
+    );
+    assert_eq!(base.get("band").and_then(Json::as_str), Some("batched-vs-unbatched"));
+    let pre = base.get("pre_change_ms").and_then(Json::as_f64).unwrap();
+    let post = base.get("post_change_ms").and_then(Json::as_f64).unwrap();
+    let speedup = base.get("speedup").and_then(Json::as_f64).unwrap();
+    assert!(
+        (speedup - pre / post).abs() < 1e-6 * speedup.abs(),
+        "speedup {speedup} inconsistent with {pre}/{post}"
+    );
+    let entries = doc.get("entries").and_then(Json::as_arr).unwrap();
+    for want in ["serve-unbatched", "serve-batched"] {
+        assert!(
+            entries.iter().any(|e| e.get("name").and_then(Json::as_str) == Some(want)),
+            "no {want} entry"
+        );
     }
 }
 

@@ -1,0 +1,100 @@
+//! KV-cache decode identity: incremental `forward_decode` over a
+//! [`wtacrs::nn::DecodeState`] must be *bitwise* identical to the
+//! full-context tape-free forward, for every step (= every prompt
+//! prefix length), across head counts, chunk sizes (down to
+//! single-token steps), sequence lengths and stack depths.  Step 0 is
+//! the empty-prompt edge: the first chunk decodes from empty caches.
+//!
+//! This is the contract `serve::ServeModel::decode_batch` sells — no
+//! tolerance, no "close enough": the cache is a layout change, not an
+//! approximation.
+
+use wtacrs::data::Corpus;
+use wtacrs::estimator::Mat;
+use wtacrs::nn::{Arch, DecodeState, ForwardCtx, ModelBuilder, ModelSpec, Module, StackDims};
+use wtacrs::ops::{Contraction, MethodSpec};
+use wtacrs::util::rng::Rng;
+
+/// Build a causal-LM stack, run the full-context eval forward, then
+/// decode chunk by chunk and compare every step's logits bitwise.
+fn check_decode_identity(heads: usize, per_sample: usize, seq: usize, depth: usize, seed: u64) {
+    let vocab = 256usize;
+    let dims = StackDims { vocab, seq, d_model: 64, d_ff: 128, n_out: vocab };
+    let spec = ModelSpec {
+        depth,
+        width: 0,
+        contraction: Contraction::Tokens { per_sample },
+        arch: Arch::CausalLm,
+        heads,
+    };
+    let method: MethodSpec = "full-wtacrs30".parse().unwrap();
+    let built = ModelBuilder::new(dims, method, spec)
+        .build(&mut Rng::new(seed))
+        .unwrap();
+    let graph = built.graph;
+    let batch = 3usize;
+    let toks = Corpus::new(vocab, seed ^ 0x9e37).batch(batch, seq, 0);
+    let x = Mat {
+        rows: batch,
+        cols: seq,
+        data: toks.iter().map(|&t| t as f32).collect(),
+    };
+    let full = graph.forward(x, &mut ForwardCtx::eval()).unwrap();
+    assert_eq!((full.rows, full.cols), (batch * per_sample, vocab));
+
+    let chunk = seq / per_sample;
+    let mut st = DecodeState::new();
+    for p in 0..per_sample {
+        let mut xc = Mat::zeros(batch, chunk);
+        for r in 0..batch {
+            for j in 0..chunk {
+                xc.data[r * chunk + j] = toks[r * seq + p * chunk + j] as f32;
+            }
+        }
+        st.begin_step();
+        let y = graph.forward_decode(xc, &mut st).unwrap();
+        assert_eq!((y.rows, y.cols), (batch, vocab), "step {p}");
+        for s in 0..batch {
+            assert_eq!(
+                y.row(s),
+                full.row(s * per_sample + p),
+                "heads {heads} per_sample {per_sample} seq {seq} depth {depth} \
+                 step {p} sample {s}"
+            );
+        }
+    }
+}
+
+#[test]
+fn decode_is_bitwise_identical_across_head_counts() {
+    // d_model 64: 2/4/8 heads all divide, exercising different
+    // per-head widths in the cached attention core.
+    for heads in [2, 4, 8] {
+        check_decode_identity(heads, 4, 16, 2, 7);
+    }
+}
+
+#[test]
+fn decode_is_bitwise_identical_at_single_token_chunks() {
+    // per_sample == seq: every decode step feeds exactly one token per
+    // sample — the smallest chunk the cache layout supports.
+    check_decode_identity(4, 16, 16, 2, 11);
+    // And a two-token chunk for the in-between shape.
+    check_decode_identity(4, 8, 16, 2, 13);
+}
+
+#[test]
+fn decode_is_bitwise_identical_across_prompt_lengths() {
+    // Each step p checks the length-(p+1)-chunks prefix, so sweeping
+    // seq sweeps the whole family of prompt lengths, step 0 being the
+    // empty-cache edge each time.
+    for seq in [8usize, 16, 32] {
+        check_decode_identity(4, 4, seq, 1, seq as u64);
+    }
+}
+
+#[test]
+fn decode_is_bitwise_identical_on_a_deeper_stack() {
+    // Three blocks: cache slots must stay per-block, not shared.
+    check_decode_identity(2, 2, 8, 3, 5);
+}
