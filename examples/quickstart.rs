@@ -22,12 +22,19 @@
 //!    KV-cache incremental decode is bitwise-identical to the full
 //!    recompute, and answer a few requests through the batched
 //!    `serve::Engine`.
+//! 8. Run a sharded sweep: plan a (task × size × method × seed) grid
+//!    into a crash-safe manifest, fan it over work-stealing shard
+//!    workers, kill it mid-run (fault injection), resume it, and print
+//!    the merged mean±std tables — the paper's Table-1 pipeline in
+//!    miniature.
 //!
 //! Runs fully offline — no artifacts, no XLA.
 //!
 //! Run with:  cargo run --release --example quickstart
 
-use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::coordinator::{
+    run_glue, run_sweep, ExperimentOptions, GridSpec, SweepConfig, TrainOptions,
+};
 use wtacrs::estimator::Mat;
 use wtacrs::memsim::{self, Scope, Workload};
 use wtacrs::nn::{Arch, ModelBuilder, ModelSpec, StackDims};
@@ -284,5 +291,59 @@ fn main() -> Result<()> {
         );
     }
     std::fs::remove_file(&snap).ok();
+
+    // 8. The sweep coordinator: the paper's Table-1 grid, sharded and
+    //    crash-safe.  The grid is planned into a versioned manifest,
+    //    cells are stolen by shard workers (plain threads — their
+    //    matmuls still use the global pool), and every completed cell
+    //    lands as one atomic JSONL row.  Here we inject a kill after
+    //    two cells, then resume: done cells are skipped, in-flight
+    //    cells re-queued, and the merged table comes out identical to
+    //    an uninterrupted run's.  (The CLI driver for the same flow is
+    //    `wtacrs sweep --tasks rte --methods full,full-wtacrs30
+    //    --seeds 2 --shards 2 --resume`.)
+    let out = std::env::temp_dir().join("wtacrs-quickstart-sweep");
+    std::fs::remove_dir_all(&out).ok();
+    let grid = GridSpec {
+        tasks: vec!["rte".to_string()],
+        sizes: vec!["tiny".to_string()],
+        methods: vec!["full".parse()?, "full-wtacrs30".parse()?],
+        seeds: vec![0, 1],
+    };
+    let mut base = ExperimentOptions::default();
+    base.train.max_steps = 40;
+    base.train.lr = 1e-3;
+    base.train_size = 64;
+    base.val_size = 32;
+    let make = || Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>);
+    let mut cfg = SweepConfig::new(&out);
+    cfg.shards = 2;
+    cfg.halt_after = Some(2); // fault injection: "kill" after two cells
+    let err = run_sweep(make, &grid, &base, &cfg).unwrap_err();
+    println!("\nsweep interrupted on purpose: {err}");
+    let mut cfg = SweepConfig::new(&out);
+    cfg.shards = 2;
+    cfg.resume = true;
+    let report = run_sweep(make, &grid, &base, &cfg)?;
+    println!(
+        "  resumed: {} skipped, {} executed of {} cells in {:.1}s -> {}",
+        report.skipped,
+        report.executed,
+        report.total,
+        report.wall_seconds,
+        report.merged_path.display()
+    );
+    for cell in &report.cells {
+        println!(
+            "  {}/{} {:<16} {} = {} (n={})",
+            cell.task,
+            cell.size,
+            cell.method,
+            cell.metric,
+            cell.display(),
+            cell.n
+        );
+    }
+    std::fs::remove_dir_all(&out).ok();
     Ok(())
 }

@@ -1,0 +1,368 @@
+"""PR 8 mirror checks: sharded sweep schemas + aggregation re-derivation.
+
+Stdlib-only (no numpy) so CI's sweep-smoke job can point it at a live
+`wtacrs sweep` output directory with a bare python3:
+
+    python3 check_pr8.py [sweep_out_dir]
+
+Two families:
+
+1. `validate_sweep_dir` independently re-derives everything the Rust
+   side promises about a sweep `--out` directory:
+
+   * `manifest.json` — kind/version tags, grid axes, and that the
+     stored cell list matches a from-scratch re-enumeration of the
+     grid product (task -> size -> method, seeds innermost;
+     `cells[i].id == i`), with every status in the legal lifecycle and
+     every quarantined cell carrying a named error.
+   * `results.jsonl` — tolerant read (absent file = empty; a truncated
+     or unparseable FINAL line is dropped; corruption anywhere else is
+     an error), then every row's (task, size, method, seed) is checked
+     against the enumeration at its cell id and every `done` manifest
+     cell must own at least one row.
+   * `merged.json` — rebuilt from scratch: rows dedupe keep-last by
+     cell id, fold into (task, size, method) groups in grid order with
+     seeds in grid order, groups with no completed seed are omitted,
+     and each group's mean/sample-std (n-1 denominator, 0 for n < 2)
+     is re-derived with the same Welford recurrence `util::stats`
+     uses.  The committed document must match the rebuild exactly
+     (scores/seeds/n) and numerically (mean/std to 1e-12 relative —
+     `util::json` prints shortest-round-trip floats, so parsed values
+     are the Rust f64s bit-for-bit).
+
+2. With no argument, a synthetic fixture is generated into a temp dir
+   — including a duplicate row (keep-last), a quarantined cell and a
+   truncated trailing line — validated end to end, and then mutated
+   (drifted mean, mid-file corruption, permuted cell enumeration) to
+   prove the validator actually rejects each breakage.  Pure
+   aggregation checks pin Welford == two-pass on reference vectors.
+"""
+import json
+import math
+import os
+import sys
+import tempfile
+
+MANIFEST_KIND = "wtacrs-sweep-manifest"
+MERGED_KIND = "wtacrs-sweep-merged"
+VERSION = 1
+STATUSES = ("pending", "in-flight", "done", "quarantined")
+REL_TOL = 1e-12
+
+
+def banner(name):
+    print(f"== {name}")
+
+
+# ---------------------------------------------------------------------------
+# Aggregation mirror (util::stats::Summary)
+# ---------------------------------------------------------------------------
+
+def summary(scores):
+    """Welford mean + sample std (n-1; 0 for n < 2), like Summary."""
+    mean, m2, n = 0.0, 0.0, 0
+    for x in scores:
+        n += 1
+        d = x - mean
+        mean += d / n
+        m2 += d * (x - mean)
+    var = m2 / (n - 1) if n >= 2 else 0.0
+    return mean, math.sqrt(var)
+
+
+def close(a, b):
+    return math.isclose(a, b, rel_tol=REL_TOL, abs_tol=REL_TOL)
+
+
+# ---------------------------------------------------------------------------
+# Grid enumeration mirror (GridSpec::cells)
+# ---------------------------------------------------------------------------
+
+def enumerate_cells(grid):
+    """Task -> size -> method nesting, seeds innermost; id == index."""
+    cells = []
+    for task in grid["tasks"]:
+        for size in grid["sizes"]:
+            for method in grid["methods"]:
+                for seed in grid["seeds"]:
+                    cells.append({
+                        "id": len(cells), "task": task, "size": size,
+                        "method": method, "seed": seed,
+                    })
+    return cells
+
+
+def load_results_tolerant(path):
+    """Mirror shard::load_results: drop only a broken FINAL line."""
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        content = f.read()
+    # Anything after the last newline is a truncated tail; drop it.
+    lines = content[:content.rfind("\n")].split("\n") if "\n" in content else []
+    rows = []
+    for i, line in enumerate(lines):
+        if not line.strip():
+            continue
+        try:
+            rows.append(json.loads(line))
+        except ValueError:
+            if i + 1 == len(lines):
+                print(f"   (dropping unparseable final line {i + 1})")
+            else:
+                raise AssertionError(
+                    f"results line {i + 1} is corrupt mid-file: {line[:60]!r}")
+    return rows
+
+
+def merge_rows(cells, rows):
+    """Mirror shard::merge_rows: dedupe keep-last, fold in grid order."""
+    by_id = {}
+    for r in rows:
+        by_id[r["cell"]] = r
+    groups = []
+    seen = set()
+    for c in cells:
+        key = (c["task"], c["size"], c["method"])
+        if key in seen:
+            continue
+        seen.add(key)
+        seeds, scores, metric = [], [], ""
+        for d in cells:
+            if (d["task"], d["size"], d["method"]) != key:
+                continue
+            r = by_id.get(d["id"])
+            if r is not None:
+                seeds.append(d["seed"])
+                scores.append(r["score"])
+                metric = metric or r["metric"]
+        if scores:
+            mean, std = summary(scores)
+            groups.append({
+                "task": key[0], "size": key[1], "method": key[2],
+                "metric": metric, "mean": mean, "std": std,
+                "n": len(scores), "seeds": seeds, "scores": scores,
+            })
+    return groups, by_id
+
+
+# ---------------------------------------------------------------------------
+# Directory validator
+# ---------------------------------------------------------------------------
+
+def validate_sweep_dir(out):
+    banner(f"validate_sweep_dir {out}")
+    with open(os.path.join(out, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["kind"] == MANIFEST_KIND, manifest.get("kind")
+    assert manifest["version"] == VERSION, manifest["version"]
+    grid = manifest["grid"]
+    for axis in ("tasks", "sizes", "methods", "seeds"):
+        assert isinstance(grid[axis], list) and grid[axis], f"empty {axis}"
+    cells = enumerate_cells(grid)
+    stored = manifest["cells"]
+    assert len(stored) == len(cells), (
+        f"manifest lists {len(stored)} cells, grid enumerates {len(cells)}")
+    for i, (sj, cj) in enumerate(zip(stored, cells)):
+        for key in ("id", "task", "size", "method", "seed"):
+            assert sj[key] == cj[key], (
+                f"cell {i} {key}: stored {sj[key]!r} != enumerated {cj[key]!r}")
+        assert sj["status"] in STATUSES, f"cell {i}: status {sj['status']!r}"
+        assert isinstance(sj["attempts"], int) and sj["attempts"] >= 0
+        if sj["status"] in ("done", "quarantined"):
+            assert sj["attempts"] >= 1, f"cell {i}: {sj['status']} at 0 attempts"
+        if sj["status"] == "quarantined":
+            assert sj.get("error"), f"cell {i}: quarantined without an error"
+    print(f"   manifest: {len(cells)} cells match the re-enumerated grid")
+
+    rows = load_results_tolerant(os.path.join(out, "results.jsonl"))
+    for r in rows:
+        c = cells[r["cell"]]
+        for key in ("task", "size", "method", "seed"):
+            assert r[key] == c[key], (
+                f"row for cell {r['cell']}: {key} {r[key]!r} != {c[key]!r}")
+        assert isinstance(r["metric"], str) and r["metric"]
+        assert math.isfinite(r["score"]), r
+        assert r["seconds"] >= 0 and r["shard"] >= 0 and r["attempt"] >= 1
+    expect_groups, by_id = merge_rows(cells, rows)
+    for sj in stored:
+        if sj["status"] == "done":
+            assert sj["id"] in by_id, (
+                f"cell {sj['id']} is done in the manifest but has no row")
+    print(f"   results: {len(rows)} rows, {len(by_id)} distinct cells, all "
+          "match their enumerated coordinates")
+
+    with open(os.path.join(out, "merged.json")) as f:
+        merged = json.load(f)
+    assert merged["kind"] == MERGED_KIND, merged.get("kind")
+    assert merged["version"] == VERSION
+    got = merged["cells"]
+    assert len(got) == len(expect_groups), (
+        f"merged has {len(got)} groups, rebuild has {len(expect_groups)}")
+    for g, e in zip(got, expect_groups):
+        where = f"{e['task']}/{e['size']}/{e['method']}"
+        for key in ("task", "size", "method", "metric", "n", "seeds", "scores"):
+            assert g[key] == e[key], (
+                f"{where} {key}: committed {g[key]!r} != rebuilt {e[key]!r}")
+        assert close(g["mean"], e["mean"]), (
+            f"{where} mean: committed {g['mean']!r} != re-derived {e['mean']!r}")
+        assert close(g["std"], e["std"]), (
+            f"{where} std: committed {g['std']!r} != re-derived {e['std']!r}")
+        assert len(g["seeds"]) == len(g["scores"]) == g["n"]
+    quarantined_manifest = {s["id"] for s in stored
+                            if s["status"] == "quarantined"}
+    quarantined_merged = {q["id"] for q in merged["quarantined"]}
+    assert quarantined_merged == quarantined_manifest, (
+        f"quarantine drift: merged {quarantined_merged} vs manifest "
+        f"{quarantined_manifest}")
+    for q in merged["quarantined"]:
+        assert q.get("error"), f"quarantined cell {q['id']} without an error"
+    print(f"   merged: {len(got)} groups re-derived bit-for-bit, "
+          f"{len(quarantined_merged)} quarantined cross-checked")
+
+
+# ---------------------------------------------------------------------------
+# Self-contained fixture + negative checks (no-argument mode)
+# ---------------------------------------------------------------------------
+
+FIXTURE_GRID = {
+    "tasks": ["rte", "sst2"],
+    "sizes": ["tiny"],
+    "methods": ["full", "full-wtacrs30"],
+    "seeds": [0, 1, 2],
+}
+
+
+def write_fixture(out):
+    """A sweep directory with a duplicate row, a quarantined cell and a
+    truncated trailing line — the exact residue the Rust side leaves."""
+    cells = enumerate_cells(FIXTURE_GRID)
+    quarantined_id = 11  # sst2/full-wtacrs30 seed 2
+    rows = []
+    for c in cells:
+        if c["id"] == quarantined_id:
+            continue
+        rows.append({
+            "cell": c["id"], "task": c["task"], "size": c["size"],
+            "method": c["method"], "seed": c["seed"], "metric": "accuracy",
+            "score": 0.5 + 0.03 * c["id"] + 0.001 * c["seed"],
+            "seconds": 0.25, "shard": c["id"] % 2, "attempt": 1,
+        })
+    # A superseded first attempt for cell 2: keep-last must win.
+    dup = dict(rows[2])
+    dup["score"], dup["attempt"] = 0.0, 1
+    rows[2]["attempt"] = 2
+    stream = [dup] + rows
+
+    states = []
+    for c in cells:
+        if c["id"] == quarantined_id:
+            states.append({**c, "status": "quarantined", "attempts": 2,
+                           "error": f"cell {c['id']} attempt 2/2: boom"})
+        else:
+            states.append({**c, "status": "done", "attempts": 1, "error": None})
+    os.makedirs(out, exist_ok=True)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump({"kind": MANIFEST_KIND, "version": VERSION,
+                   "grid": FIXTURE_GRID, "options": {"steps": 5},
+                   "cells": states}, f)
+    with open(os.path.join(out, "results.jsonl"), "w") as f:
+        for r in stream:
+            f.write(json.dumps(r) + "\n")
+        f.write('{"cell": 99, "task": "rte"')  # kill residue, no newline
+    groups, _ = merge_rows(cells, stream)
+    quarantined = [{"id": quarantined_id,
+                    "task": cells[quarantined_id]["task"],
+                    "size": cells[quarantined_id]["size"],
+                    "method": cells[quarantined_id]["method"],
+                    "seed": cells[quarantined_id]["seed"],
+                    "error": "cell 11 attempt 2/2: boom"}]
+    with open(os.path.join(out, "merged.json"), "w") as f:
+        json.dump({"kind": MERGED_KIND, "version": VERSION,
+                   "cells": groups, "quarantined": quarantined}, f)
+
+
+def expect_rejection(out, mutate, name):
+    """The validator must fail after `mutate` corrupts the directory."""
+    mutate(out)
+    try:
+        validate_sweep_dir(out)
+    except AssertionError as e:
+        print(f"   rejected as required ({name}): {str(e)[:72]}")
+        return
+    raise AssertionError(f"validator accepted a broken directory: {name}")
+
+
+def drift_mean(out):
+    p = os.path.join(out, "merged.json")
+    with open(p) as f:
+        doc = json.load(f)
+    doc["cells"][0]["mean"] += 1e-6
+    with open(p, "w") as f:
+        json.dump(doc, f)
+
+
+def corrupt_mid_file(out):
+    p = os.path.join(out, "results.jsonl")
+    with open(p) as f:
+        lines = f.read().split("\n")
+    lines[0] = "garbage"
+    with open(p, "w") as f:
+        f.write("\n".join(lines))
+
+
+def permute_cells(out):
+    p = os.path.join(out, "manifest.json")
+    with open(p) as f:
+        doc = json.load(f)
+    doc["cells"][0], doc["cells"][1] = doc["cells"][1], doc["cells"][0]
+    with open(p, "w") as f:
+        json.dump(doc, f)
+
+
+def aggregation_pins():
+    banner("aggregation_pins")
+    # Welford must equal the two-pass closed form on reference vectors.
+    for scores in ([0.7, 0.72, 0.68], [0.5], [1.0, 1.0, 1.0, 1.0],
+                   [0.1, 0.9, 0.5, 0.3, 0.7]):
+        mean, std = summary(scores)
+        naive_mean = sum(scores) / len(scores)
+        assert close(mean, naive_mean), (scores, mean, naive_mean)
+        if len(scores) >= 2:
+            naive_var = sum((x - naive_mean) ** 2
+                            for x in scores) / (len(scores) - 1)
+            assert close(std, math.sqrt(naive_var)), (scores, std)
+        else:
+            assert std == 0.0, "n=1 must aggregate with std exactly 0"
+    # Enumeration shape: product size, id == index, seeds innermost.
+    cells = enumerate_cells(FIXTURE_GRID)
+    assert len(cells) == 12
+    assert [c["id"] for c in cells] == list(range(12))
+    assert [c["seed"] for c in cells[:3]] == [0, 1, 2]
+    assert cells[3]["method"] == "full-wtacrs30"
+    assert cells[6]["task"] == "sst2"
+    print("   Welford == two-pass on all reference vectors; enumeration "
+          "order pinned")
+
+
+def main():
+    if len(sys.argv) > 1:
+        validate_sweep_dir(sys.argv[1])
+        print("OK: live sweep directory validated")
+        return
+    aggregation_pins()
+    with tempfile.TemporaryDirectory(prefix="wtacrs-check-pr8-") as d:
+        fixture = os.path.join(d, "good")
+        write_fixture(fixture)
+        validate_sweep_dir(fixture)
+        for name, mutate in (("drifted mean", drift_mean),
+                             ("mid-file corruption", corrupt_mid_file),
+                             ("permuted enumeration", permute_cells)):
+            broken = os.path.join(d, name.replace(" ", "-"))
+            write_fixture(broken)
+            expect_rejection(broken, mutate, name)
+    print("OK: fixture round trip + negative checks + aggregation pins")
+
+
+if __name__ == "__main__":
+    main()

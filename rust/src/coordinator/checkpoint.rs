@@ -9,51 +9,52 @@
 //! [`super::snapshot`]; this one stays the compact positional
 //! trainer-state format.)
 
-use std::io::{Read, Write};
+use std::io::Read;
 use std::path::Path;
 
 use crate::bail;
 use crate::util::error::{Context, Result};
+use crate::util::fsatomic;
 
 use crate::runtime::{DType, HostTensor, TensorData};
 
 const MAGIC: &[u8; 8] = b"WTACRS01";
 
-/// Write tensors to `path` (atomic: tmp + rename).
+/// Write tensors to `path` via [`fsatomic::atomic_write`]: the bytes
+/// are assembled in memory, staged into a uniquely-named temporary
+/// sibling, synced, and renamed — a kill at any instant leaves either
+/// the previous complete checkpoint or the new one, never a prefix.
 pub fn save(path: impl AsRef<Path>, tensors: &[HostTensor]) -> Result<()> {
     let path = path.as_ref();
-    let tmp = path.with_extension("tmp");
-    {
-        let mut f = std::io::BufWriter::new(
-            std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?,
-        );
-        f.write_all(MAGIC)?;
-        f.write_all(&(tensors.len() as u64).to_le_bytes())?;
-        for t in tensors {
-            f.write_all(&[match t.dtype() {
-                DType::F32 => 0u8,
-                DType::I32 => 1u8,
-            }])?;
-            f.write_all(&(t.shape.len() as u8).to_le_bytes())?;
-            for &d in &t.shape {
-                f.write_all(&(d as u64).to_le_bytes())?;
-            }
-            match &t.data {
-                TensorData::F32(v) => {
-                    for x in v {
-                        f.write_all(&x.to_le_bytes())?;
-                    }
+    let mut body = Vec::with_capacity(
+        16 + tensors.iter().map(|t| 2 + 8 * t.shape.len() + 4 * t.len()).sum::<usize>(),
+    );
+    body.extend_from_slice(MAGIC);
+    body.extend_from_slice(&(tensors.len() as u64).to_le_bytes());
+    for t in tensors {
+        body.push(match t.dtype() {
+            DType::F32 => 0u8,
+            DType::I32 => 1u8,
+        });
+        body.extend_from_slice(&(t.shape.len() as u8).to_le_bytes());
+        for &d in &t.shape {
+            body.extend_from_slice(&(d as u64).to_le_bytes());
+        }
+        match &t.data {
+            TensorData::F32(v) => {
+                for x in v {
+                    body.extend_from_slice(&x.to_le_bytes());
                 }
-                TensorData::I32(v) => {
-                    for x in v {
-                        f.write_all(&x.to_le_bytes())?;
-                    }
+            }
+            TensorData::I32(v) => {
+                for x in v {
+                    body.extend_from_slice(&x.to_le_bytes());
                 }
             }
         }
     }
-    std::fs::rename(&tmp, path).with_context(|| format!("rename to {path:?}"))?;
-    Ok(())
+    fsatomic::atomic_write(path, &body)
+        .with_context(|| format!("checkpoint: save {path:?}"))
 }
 
 /// Read tensors back.
@@ -153,6 +154,25 @@ mod tests {
         save(&p, &tensors).unwrap();
         let back = load(&p).unwrap();
         assert_eq!(tensors, back);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn concurrent_saves_never_collide_on_scratch_names() {
+        // The old fixed `.tmp` sibling let two writers interleave on the
+        // same scratch path; the fsatomic path gives each writer its own.
+        let p = tmpfile("conc");
+        std::thread::scope(|s| {
+            for t in 0..4i32 {
+                let p = p.clone();
+                s.spawn(move || {
+                    for _ in 0..8 {
+                        save(&p, &[HostTensor::scalar_i32(t)]).unwrap();
+                    }
+                });
+            }
+        });
+        assert_eq!(load(&p).unwrap().len(), 1);
         std::fs::remove_file(&p).ok();
     }
 

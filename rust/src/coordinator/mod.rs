@@ -1,18 +1,22 @@
 //! L3 coordinator: the fine-tuning framework around the WTA-CRS train
 //! step — trainer loop, Algorithm-1 gradient-norm cache, checkpointing,
-//! and the GLUE experiment runner.  Everything here is written against
+//! the GLUE experiment runner, and the sharded crash-safe sweep
+//! executor.  Everything here is written against
 //! [`crate::runtime::Backend`], so the same coordinator drives both the
 //! pure-Rust native kernels and (with the `pjrt` feature) the XLA engine.
 pub mod checkpoint;
 pub mod experiment;
 pub mod normcache;
+pub mod shard;
 pub mod snapshot;
 pub mod sweep;
 pub mod trainer;
 
 pub use experiment::{run_glue, run_lm, ExperimentOptions, LmResult, TaskResult};
 pub use normcache::NormCache;
+pub use shard::{run_sweep, GridSpec, SweepConfig, SweepManifest, SweepReport};
 pub use snapshot::{
     save_snapshot, SnapshotManifest, SnapshotMeta, SnapshotReader, TensorEntry,
 };
+pub use sweep::{sweep_seeds, SweepCell};
 pub use trainer::{TrainOptions, TrainReport, Trainer};

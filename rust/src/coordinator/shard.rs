@@ -1,0 +1,1257 @@
+//! Sharded crash-safe sweep executor.
+//!
+//! The paper's Table 1 (§5.1) is a (task × size × method × seed) grid,
+//! and ROADMAP items 4–5 need that grid rerun per estimator family —
+//! hours of work that must survive a mid-run kill.  This module is the
+//! substrate: a **grid planner** that enumerates cells into a
+//! deterministic, versioned manifest; a **work-stealing executor** that
+//! fans cells over N persistent shard workers; **crash-safe
+//! persistence** (every state transition lands via
+//! [`fsatomic::atomic_write`], every finished cell is one JSONL line);
+//! a bounded **retry policy** that quarantines poisoned cells instead
+//! of sinking the sweep; and a **merge step** that folds the result
+//! stream into aggregated [`SweepCell`] tables.
+//!
+//! Threading: shard workers are plain [`std::thread`]s that own their
+//! own backends — NEVER `util::pool::global()` workers.  A pool worker
+//! that blocked on pool completion would deadlock (the PR-6/PR-7 rule);
+//! a plain thread merely *submits* its matmuls to the pool, so every
+//! cell still gets the full data-parallel kernels, and the scores are
+//! bitwise-identical across shard counts because the pooled GEMMs are
+//! bitwise-identical to serial (PR 6).
+//!
+//! Crash model: the manifest is rewritten atomically on every
+//! transition (`pending → in-flight → done|quarantined`), and result
+//! rows are appended atomically, so a kill at any instant leaves (a)
+//! a complete manifest listing some cells `in-flight`, and (b) a result
+//! stream whose every line is complete.  `--resume` re-queues the
+//! in-flight cells, skips the done ones, and tolerates a truncated
+//! trailing JSONL line from foreign writers.  A cell marked done whose
+//! result row is missing is re-queued rather than silently dropped, so
+//! the merged table never loses a cell.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::{Path, PathBuf};
+use std::sync::{Mutex, MutexGuard};
+use std::time::Instant;
+
+use crate::metrics::LatencyHistogram;
+use crate::nn::Arch;
+use crate::ops::{Contraction, MethodSpec};
+use crate::runtime::Backend;
+use crate::util::error::{Context, Result};
+use crate::util::fsatomic;
+use crate::util::json::{self, Json};
+use crate::util::stats::Summary;
+use crate::{anyhow, bail};
+
+use super::experiment::{default_lr, run_glue, run_lm, ExperimentOptions};
+use super::sweep::SweepCell;
+
+/// Manifest schema version; bumped on incompatible layout changes.
+pub const MANIFEST_VERSION: u64 = 1;
+/// `kind` tag of the manifest document.
+pub const MANIFEST_KIND: &str = "wtacrs-sweep-manifest";
+/// `kind` tag of the merged-output document.
+pub const MERGED_KIND: &str = "wtacrs-sweep-merged";
+/// File names inside the sweep's `--out` directory.
+pub const MANIFEST_FILE: &str = "manifest.json";
+pub const RESULTS_FILE: &str = "results.jsonl";
+pub const MERGED_FILE: &str = "merged.json";
+
+/// The pseudo-task name that routes a cell through
+/// [`run_lm`] instead of [`run_glue`] (requires `Arch::CausalLm`).
+pub const LM_TASK: &str = "lm";
+
+// ---------------------------------------------------------------------------
+// Grid planner
+// ---------------------------------------------------------------------------
+
+/// The four sweep axes.  [`GridSpec::cells`] enumerates their product
+/// in a fixed nesting order (task, size, method, seed), so cell ids are
+/// deterministic and a manifest written by one run addresses the same
+/// cells in every later run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GridSpec {
+    pub tasks: Vec<String>,
+    pub sizes: Vec<String>,
+    pub methods: Vec<MethodSpec>,
+    pub seeds: Vec<u64>,
+}
+
+/// One unit of sweep work: a (task, size, method, seed) point with its
+/// position in the grid enumeration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellSpec {
+    pub id: usize,
+    pub task: String,
+    pub size: String,
+    pub method: MethodSpec,
+    pub seed: u64,
+}
+
+impl GridSpec {
+    /// Number of cells in the grid product.
+    pub fn len(&self) -> usize {
+        self.tasks.len() * self.sizes.len() * self.methods.len() * self.seeds.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Deterministic enumeration of the grid product; `cells()[i].id == i`.
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let mut out = Vec::with_capacity(self.len());
+        for task in &self.tasks {
+            for size in &self.sizes {
+                for method in &self.methods {
+                    for &seed in &self.seeds {
+                        out.push(CellSpec {
+                            id: out.len(),
+                            task: task.clone(),
+                            size: size.clone(),
+                            method: *method,
+                            seed,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Manifest: per-cell status, persisted atomically on every transition
+// ---------------------------------------------------------------------------
+
+/// Lifecycle of one cell inside the manifest.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CellStatus {
+    /// Queued, not yet claimed by a shard.
+    Pending,
+    /// Claimed by a shard when the process last wrote the manifest; a
+    /// manifest loaded with in-flight cells is evidence of a kill, and
+    /// `--resume` re-queues them.
+    InFlight,
+    /// Completed; its result row is in the JSONL stream.
+    Done,
+    /// Failed `max_attempts` times; carries the last named error and is
+    /// excluded from the merge instead of sinking the sweep.
+    Quarantined,
+}
+
+impl CellStatus {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            CellStatus::Pending => "pending",
+            CellStatus::InFlight => "in-flight",
+            CellStatus::Done => "done",
+            CellStatus::Quarantined => "quarantined",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "pending" => Ok(CellStatus::Pending),
+            "in-flight" => Ok(CellStatus::InFlight),
+            "done" => Ok(CellStatus::Done),
+            "quarantined" => Ok(CellStatus::Quarantined),
+            other => Err(anyhow!("unknown sweep cell status {other:?}")),
+        }
+    }
+}
+
+/// Mutable per-cell record: status, attempt count, last error.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellState {
+    pub status: CellStatus,
+    pub attempts: usize,
+    pub error: Option<String>,
+}
+
+impl Default for CellState {
+    fn default() -> Self {
+        CellState { status: CellStatus::Pending, attempts: 0, error: None }
+    }
+}
+
+/// A loaded sweep manifest: the grid it was planned from, the training
+/// options it was run with (as a canonical JSON digest), and one
+/// [`CellState`] per enumerated cell.
+#[derive(Debug, Clone)]
+pub struct SweepManifest {
+    pub version: u64,
+    pub grid: GridSpec,
+    pub options: Json,
+    pub states: Vec<CellState>,
+}
+
+/// Canonical JSON digest of the training knobs that must match between
+/// the planning run and any `--resume`.  Changing any of these would
+/// silently mix incomparable scores into one table.
+pub fn options_json(o: &ExperimentOptions) -> Json {
+    let contraction = match o.model.contraction {
+        Contraction::Rows => "rows".to_string(),
+        Contraction::Tokens { per_sample } => format!("tokens{per_sample}"),
+    };
+    json::obj(vec![
+        ("steps", json::num(o.train.max_steps as f64)),
+        ("lr", json::num(o.train.lr as f64)),
+        ("eval_every", json::num(o.train.eval_every as f64)),
+        ("patience", json::num(o.train.patience as f64)),
+        ("train_size", json::num(o.train_size as f64)),
+        ("val_size", json::num(o.val_size as f64)),
+        ("data_seed", json::num(o.data_seed as f64)),
+        (
+            "model",
+            json::obj(vec![
+                ("arch", json::s(&o.model.arch.to_string())),
+                ("depth", json::num(o.model.depth as f64)),
+                ("width", json::num(o.model.width as f64)),
+                ("heads", json::num(o.model.heads as f64)),
+                ("contraction", json::s(&contraction)),
+            ]),
+        ),
+    ])
+}
+
+fn req_str<'j>(j: &'j Json, key: &str, what: &str) -> Result<&'j str> {
+    j.get(key)
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow!("{what}: missing or non-string field {key:?}"))
+}
+
+fn req_num(j: &Json, key: &str, what: &str) -> Result<f64> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| anyhow!("{what}: missing or non-numeric field {key:?}"))
+}
+
+fn str_list(j: &Json, key: &str, what: &str) -> Result<Vec<String>> {
+    let arr = j
+        .get(key)
+        .and_then(Json::as_arr)
+        .ok_or_else(|| anyhow!("{what}: missing or non-array field {key:?}"))?;
+    arr.iter()
+        .map(|v| {
+            v.as_str()
+                .map(str::to_string)
+                .ok_or_else(|| anyhow!("{what}: non-string entry in {key:?}"))
+        })
+        .collect()
+}
+
+/// Serialize (grid, options, states) into the manifest document.
+fn manifest_json(
+    grid: &GridSpec,
+    options: &Json,
+    cells: &[CellSpec],
+    states: &[CellState],
+) -> Json {
+    json::obj(vec![
+        ("kind", json::s(MANIFEST_KIND)),
+        ("version", json::num(MANIFEST_VERSION as f64)),
+        (
+            "grid",
+            json::obj(vec![
+                ("tasks", json::arr(grid.tasks.iter().map(|t| json::s(t)))),
+                ("sizes", json::arr(grid.sizes.iter().map(|z| json::s(z)))),
+                (
+                    "methods",
+                    json::arr(grid.methods.iter().map(|m| json::s(&m.to_string()))),
+                ),
+                ("seeds", json::arr(grid.seeds.iter().map(|&s| json::num(s as f64)))),
+            ]),
+        ),
+        ("options", options.clone()),
+        (
+            "cells",
+            json::arr(cells.iter().zip(states).map(|(cell, st)| {
+                json::obj(vec![
+                    ("id", json::num(cell.id as f64)),
+                    ("task", json::s(&cell.task)),
+                    ("size", json::s(&cell.size)),
+                    ("method", json::s(&cell.method.to_string())),
+                    ("seed", json::num(cell.seed as f64)),
+                    ("status", json::s(st.status.as_str())),
+                    ("attempts", json::num(st.attempts as f64)),
+                    (
+                        "error",
+                        st.error.as_deref().map(json::s).unwrap_or(Json::Null),
+                    ),
+                ])
+            })),
+        ),
+    ])
+}
+
+impl SweepManifest {
+    /// Parse and self-validate a manifest file: kind/version tags, grid
+    /// axes, and that the stored cell list matches the grid's own
+    /// enumeration (a hand-edited or corrupted manifest fails loudly
+    /// here, not as a mis-addressed resume).
+    pub fn load(path: &Path) -> Result<SweepManifest> {
+        let what = format!("sweep manifest {path:?}");
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow!("{what}: read: {e}"))?;
+        let j = json::parse(text.trim()).map_err(|e| anyhow!("{what}: {e}"))?;
+
+        let kind = j.get("kind").and_then(Json::as_str).unwrap_or("");
+        if kind != MANIFEST_KIND {
+            bail!("{what}: kind {kind:?} (expected {MANIFEST_KIND:?})");
+        }
+        let version = req_num(&j, "version", &what)? as u64;
+        if version != MANIFEST_VERSION {
+            bail!(
+                "{what}: schema version {version} (this build reads \
+                 {MANIFEST_VERSION}); rerun the sweep from a fresh --out"
+            );
+        }
+
+        let gj = j
+            .get("grid")
+            .ok_or_else(|| anyhow!("{what}: missing \"grid\""))?;
+        let methods = str_list(gj, "methods", &what)?
+            .iter()
+            .map(|m| {
+                m.parse::<MethodSpec>()
+                    .with_context(|| format!("{what}: grid method {m:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let seeds = gj
+            .get("seeds")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{what}: missing \"grid.seeds\""))?
+            .iter()
+            .map(|v| {
+                v.as_f64()
+                    .map(|f| f as u64)
+                    .ok_or_else(|| anyhow!("{what}: non-numeric seed"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let grid = GridSpec {
+            tasks: str_list(gj, "tasks", &what)?,
+            sizes: str_list(gj, "sizes", &what)?,
+            methods,
+            seeds,
+        };
+
+        let options = j
+            .get("options")
+            .cloned()
+            .ok_or_else(|| anyhow!("{what}: missing \"options\""))?;
+
+        let expect = grid.cells();
+        let cells_json = j
+            .get("cells")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("{what}: missing \"cells\""))?;
+        if cells_json.len() != expect.len() {
+            bail!(
+                "{what}: lists {} cells but its grid enumerates {}",
+                cells_json.len(),
+                expect.len()
+            );
+        }
+        let mut states = Vec::with_capacity(expect.len());
+        for (idx, cj) in cells_json.iter().enumerate() {
+            let cwhat = format!("{what}: cell {idx}");
+            let id = req_num(cj, "id", &cwhat)? as usize;
+            let task = req_str(cj, "task", &cwhat)?;
+            let size = req_str(cj, "size", &cwhat)?;
+            let method = req_str(cj, "method", &cwhat)?;
+            let seed = req_num(cj, "seed", &cwhat)? as u64;
+            let e = &expect[idx];
+            if id != idx
+                || task != e.task
+                || size != e.size
+                || method != e.method.to_string()
+                || seed != e.seed
+            {
+                bail!(
+                    "{cwhat}: ({id} {task}/{size}/{method} seed {seed}) does \
+                     not match the grid enumeration ({} {}/{}/{} seed {})",
+                    e.id,
+                    e.task,
+                    e.size,
+                    e.method,
+                    e.seed
+                );
+            }
+            states.push(CellState {
+                status: CellStatus::parse(req_str(cj, "status", &cwhat)?)
+                    .with_context(|| cwhat.clone())?,
+                attempts: req_num(cj, "attempts", &cwhat)? as usize,
+                error: cj.get("error").and_then(Json::as_str).map(str::to_string),
+            });
+        }
+
+        Ok(SweepManifest { version, grid, options, states })
+    }
+
+    /// A `--resume` must target the exact grid and training options the
+    /// manifest was planned with — anything else would fold
+    /// incomparable scores into one table.
+    pub fn check_compatible(&self, grid: &GridSpec, options: &Json) -> Result<()> {
+        if self.grid != *grid {
+            let show = |g: &GridSpec| {
+                format!(
+                    "{} cells (tasks {:?} sizes {:?} methods {:?} seeds {:?})",
+                    g.len(),
+                    g.tasks,
+                    g.sizes,
+                    g.methods.iter().map(|m| m.to_string()).collect::<Vec<_>>(),
+                    g.seeds
+                )
+            };
+            bail!(
+                "sweep --resume: the manifest's grid differs from the \
+                 requested one: manifest {} vs requested {}; rerun with the \
+                 original axes or pick a fresh --out",
+                show(&self.grid),
+                show(grid)
+            );
+        }
+        if self.options != *options {
+            let diff: Vec<String> = match (self.options.as_obj(), options.as_obj()) {
+                (Some(a), Some(b)) => a
+                    .keys()
+                    .chain(b.keys())
+                    .filter(|k| a.get(*k) != b.get(*k))
+                    .cloned()
+                    .collect::<std::collections::BTreeSet<_>>()
+                    .into_iter()
+                    .collect(),
+                _ => vec!["options".to_string()],
+            };
+            bail!(
+                "sweep --resume: training options changed since the manifest \
+                 was planned (differing: {diff:?}); resume with the original \
+                 flags or pick a fresh --out"
+            );
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Result stream: one JSONL row per completed cell
+// ---------------------------------------------------------------------------
+
+/// One completed cell as recorded in `results.jsonl`.
+#[derive(Debug, Clone)]
+pub struct CellRow {
+    pub cell: usize,
+    pub task: String,
+    pub size: String,
+    pub method: String,
+    pub seed: u64,
+    pub metric: String,
+    pub score: f64,
+    /// Wall-clock seconds this attempt took (provenance only — the
+    /// merge excludes it so merged tables stay run-invariant).
+    pub seconds: f64,
+    pub shard: usize,
+    pub attempt: usize,
+}
+
+impl CellRow {
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("cell", json::num(self.cell as f64)),
+            ("task", json::s(&self.task)),
+            ("size", json::s(&self.size)),
+            ("method", json::s(&self.method)),
+            ("seed", json::num(self.seed as f64)),
+            ("metric", json::s(&self.metric)),
+            ("score", json::num(self.score)),
+            ("seconds", json::num(self.seconds)),
+            ("shard", json::num(self.shard as f64)),
+            ("attempt", json::num(self.attempt as f64)),
+        ])
+    }
+
+    pub fn from_json(j: &Json, what: &str) -> Result<CellRow> {
+        Ok(CellRow {
+            cell: req_num(j, "cell", what)? as usize,
+            task: req_str(j, "task", what)?.to_string(),
+            size: req_str(j, "size", what)?.to_string(),
+            method: req_str(j, "method", what)?.to_string(),
+            seed: req_num(j, "seed", what)? as u64,
+            metric: req_str(j, "metric", what)?.to_string(),
+            score: req_num(j, "score", what)?,
+            seconds: req_num(j, "seconds", what)?,
+            shard: req_num(j, "shard", what)? as usize,
+            attempt: req_num(j, "attempt", what)? as usize,
+        })
+    }
+}
+
+/// Read a result stream tolerantly: an absent file is an empty stream,
+/// and a truncated or unparseable FINAL line is dropped with a warning
+/// (a kill mid-append from a non-atomic writer leaves exactly that).
+/// Corruption anywhere else is a hard, line-numbered error.
+pub fn load_results(path: &Path) -> Result<Vec<CellRow>> {
+    let content = match std::fs::read_to_string(path) {
+        Ok(c) => c,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => return Err(anyhow!("sweep results {path:?}: read: {e}")),
+    };
+    if !content.is_empty() && !content.ends_with('\n') {
+        crate::log_warn!(
+            "sweep results {path:?}: dropping truncated unterminated final line"
+        );
+    }
+    let lines: Vec<&str> = match content.rfind('\n') {
+        Some(last) => content[..last].split('\n').collect(),
+        None => Vec::new(),
+    };
+    let mut rows = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let what = format!("sweep results {path:?} line {}", i + 1);
+        let parsed = json::parse(line)
+            .map_err(|e| anyhow!("{what}: {e}"))
+            .and_then(|j| CellRow::from_json(&j, &what));
+        match parsed {
+            Ok(r) => rows.push(r),
+            Err(e) if i + 1 == lines.len() => {
+                crate::log_warn!("{e} — dropping truncated final line");
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(rows)
+}
+
+/// Deduplicate rows keep-last by cell id (a retried append after a lost
+/// manifest write may record a cell twice; the last row is the one the
+/// manifest's `done` refers to).
+pub fn dedupe_rows(rows: &[CellRow]) -> BTreeMap<usize, CellRow> {
+    let mut by_id = BTreeMap::new();
+    for r in rows {
+        by_id.insert(r.cell, r.clone());
+    }
+    by_id
+}
+
+/// Fold deduplicated rows into aggregated [`SweepCell`] tables, one per
+/// (task, size, method) group, iterating the grid's own enumeration
+/// order with seeds in grid order.  The output is therefore a pure
+/// function of (grid, scores): identical for any shard count, any
+/// completion order, and any interrupted/resumed schedule.  Groups with
+/// no completed seed (all quarantined) are omitted.
+pub fn merge_rows(grid: &GridSpec, rows: &[CellRow]) -> Vec<SweepCell> {
+    let by_id = dedupe_rows(rows);
+    let cells = grid.cells();
+    let mut out = Vec::new();
+    for task in &grid.tasks {
+        for size in &grid.sizes {
+            for method in &grid.methods {
+                let mname = method.to_string();
+                let mut summary = Summary::new();
+                let mut seeds = Vec::new();
+                let mut scores = Vec::new();
+                let mut metric = String::new();
+                for c in &cells {
+                    if c.task != *task || c.size != *size || c.method != *method {
+                        continue;
+                    }
+                    if let Some(r) = by_id.get(&c.id) {
+                        summary.push(r.score);
+                        seeds.push(c.seed);
+                        scores.push(r.score);
+                        if metric.is_empty() {
+                            metric = r.metric.clone();
+                        }
+                    }
+                }
+                if scores.is_empty() {
+                    continue;
+                }
+                out.push(SweepCell {
+                    task: task.clone(),
+                    method: mname,
+                    size: size.clone(),
+                    metric,
+                    mean: summary.mean(),
+                    std: summary.std(),
+                    n: scores.len(),
+                    seeds,
+                    scores,
+                });
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Executor
+// ---------------------------------------------------------------------------
+
+/// Sweep execution knobs.
+#[derive(Debug, Clone)]
+pub struct SweepConfig {
+    /// Shard worker threads (each owns its backends; matmuls still use
+    /// the global pool).
+    pub shards: usize,
+    /// Attempts per cell before quarantine (>= 1).
+    pub max_attempts: usize,
+    /// Continue an existing manifest instead of refusing to overwrite.
+    pub resume: bool,
+    /// Output directory (`manifest.json`, `results.jsonl`, `merged.json`).
+    pub out: PathBuf,
+    /// Fault injection for tests/CI: abandon the run after this many
+    /// cells complete in THIS process.  In-flight cells stay in-flight
+    /// in the manifest and their results are dropped — exactly the
+    /// residue `kill -9` would leave — and [`run_sweep`] returns a
+    /// named error so a driving CLI exits nonzero.
+    pub halt_after: Option<usize>,
+}
+
+impl SweepConfig {
+    pub fn new(out: impl Into<PathBuf>) -> SweepConfig {
+        SweepConfig {
+            shards: 1,
+            max_attempts: 2,
+            resume: false,
+            out: out.into(),
+            halt_after: None,
+        }
+    }
+}
+
+/// Per-shard throughput over one `run_sweep` call (this process only).
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Cells this shard completed.
+    pub cells: usize,
+    pub wall_seconds: f64,
+    pub cells_per_second: f64,
+    pub mean_cell_ms: f64,
+    pub p50_cell_ms: f64,
+    pub p99_cell_ms: f64,
+}
+
+/// Outcome of a completed (not halted) sweep.
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    /// Aggregated tables in grid order (see [`merge_rows`]).
+    pub cells: Vec<SweepCell>,
+    /// Cells that exhausted their retries, with their last named error.
+    pub quarantined: Vec<(CellSpec, String)>,
+    pub shard_stats: Vec<ShardStats>,
+    /// Cells completed by THIS process.
+    pub executed: usize,
+    /// Cells already done in the resumed manifest.
+    pub skipped: usize,
+    /// Total cells in the grid.
+    pub total: usize,
+    pub wall_seconds: f64,
+    pub merged_path: PathBuf,
+}
+
+/// Run one cell: seed the options, default the LR per family when the
+/// caller left it unset, and dispatch to the GLUE or causal-LM runner.
+pub fn run_cell(
+    backend: &dyn Backend,
+    cell: &CellSpec,
+    base: &ExperimentOptions,
+) -> Result<(f64, String)> {
+    let mut o = base.clone();
+    o.train.seed = cell.seed;
+    if o.train.lr <= 0.0 {
+        o.train.lr = default_lr(&cell.method);
+    }
+    if cell.task == LM_TASK {
+        if o.model.arch != Arch::CausalLm {
+            bail!(
+                "sweep cell {}: task \"lm\" needs --arch causal-lm (got {})",
+                cell.id,
+                o.model.arch
+            );
+        }
+        let r = run_lm(backend, &cell.size, &cell.method, &o)?;
+        Ok((r.eval_nll, "nll".to_string()))
+    } else {
+        let r = run_glue(backend, &cell.task, &cell.size, &cell.method, &o)?;
+        Ok((r.score, r.metric_name.to_string()))
+    }
+}
+
+/// Shared coordinator state behind one mutex.
+struct Coord {
+    queue: VecDeque<usize>,
+    states: Vec<CellState>,
+    completed_this_run: usize,
+    halted: bool,
+    fatal: Option<String>,
+}
+
+struct Shared<'a> {
+    mu: Mutex<Coord>,
+    cells: &'a [CellSpec],
+    grid: &'a GridSpec,
+    options: &'a Json,
+    base: &'a ExperimentOptions,
+    make_backend: &'a (dyn Fn() -> Result<Box<dyn Backend>> + Send + Sync),
+    manifest_path: PathBuf,
+    results_path: PathBuf,
+    max_attempts: usize,
+    halt_after: Option<usize>,
+}
+
+fn lock(mu: &Mutex<Coord>) -> MutexGuard<'_, Coord> {
+    // A panic inside a cell is caught before the lock is touched, so a
+    // poisoned mutex only means another worker died mid-bookkeeping;
+    // the state itself is still consistent (every transition completes
+    // under the lock).
+    mu.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn persist(shared: &Shared<'_>, coord: &Coord) -> Result<()> {
+    let doc = manifest_json(shared.grid, shared.options, shared.cells, &coord.states);
+    fsatomic::atomic_write_str(&shared.manifest_path, &format!("{}\n", json::write(&doc)))
+}
+
+/// Best-effort extraction of a panic payload message.
+fn panic_message(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// One shard worker: steal a pending cell, run it sandboxed, record the
+/// outcome, repeat until the queue drains (or the run halts/fails).
+fn worker(shared: &Shared<'_>, shard: usize) -> ShardStats {
+    let t0 = Instant::now();
+    let mut hist = LatencyHistogram::new();
+    loop {
+        let (id, attempt) = {
+            let mut c = lock(&shared.mu);
+            if c.halted || c.fatal.is_some() {
+                break;
+            }
+            let Some(id) = c.queue.pop_front() else { break };
+            c.states[id].status = CellStatus::InFlight;
+            c.states[id].attempts += 1;
+            let attempt = c.states[id].attempts;
+            if let Err(e) = persist(shared, &c) {
+                c.fatal = Some(format!("persist manifest: {e}"));
+                break;
+            }
+            (id, attempt)
+        };
+        let cell = &shared.cells[id];
+
+        let tc = Instant::now();
+        let caught = catch_unwind(AssertUnwindSafe(|| -> Result<(f64, String)> {
+            let backend = (shared.make_backend)()?;
+            run_cell(backend.as_ref(), cell, shared.base)
+        }));
+        let seconds = tc.elapsed().as_secs_f64();
+        let outcome: Result<(f64, String)> = match caught {
+            Ok(r) => r,
+            Err(p) => Err(anyhow!("panicked: {}", panic_message(p.as_ref()))),
+        };
+
+        let mut c = lock(&shared.mu);
+        if c.halted {
+            // The run was abandoned while this cell was in flight: drop
+            // the result on the floor, exactly like a kill would.  The
+            // manifest keeps the cell in-flight for --resume.
+            break;
+        }
+        match outcome {
+            Ok((score, metric)) => {
+                let row = CellRow {
+                    cell: id,
+                    task: cell.task.clone(),
+                    size: cell.size.clone(),
+                    method: cell.method.to_string(),
+                    seed: cell.seed,
+                    metric,
+                    score,
+                    seconds,
+                    shard,
+                    attempt,
+                };
+                if let Err(e) =
+                    fsatomic::append_line(&shared.results_path, &json::write(&row.to_json()))
+                {
+                    c.fatal = Some(format!("record cell {id}: {e}"));
+                    break;
+                }
+                c.states[id].status = CellStatus::Done;
+                c.states[id].error = None;
+                c.completed_this_run += 1;
+                hist.record_ms(seconds * 1e3);
+                if shared.halt_after.is_some_and(|n| c.completed_this_run >= n) {
+                    c.halted = true;
+                }
+                if let Err(e) = persist(shared, &c) {
+                    c.fatal = Some(format!("persist manifest: {e}"));
+                    break;
+                }
+            }
+            Err(e) => {
+                let named = format!(
+                    "cell {id} ({}/{}/{} seed {}) attempt {attempt}/{}: {e}",
+                    cell.task, cell.size, cell.method, cell.seed, shared.max_attempts
+                );
+                crate::log_warn!("sweep shard {shard}: {named}");
+                c.states[id].error = Some(named);
+                if attempt >= shared.max_attempts {
+                    c.states[id].status = CellStatus::Quarantined;
+                } else {
+                    c.states[id].status = CellStatus::Pending;
+                    c.queue.push_back(id);
+                }
+                if let Err(e) = persist(shared, &c) {
+                    c.fatal = Some(format!("persist manifest: {e}"));
+                    break;
+                }
+            }
+        }
+    }
+
+    let wall = t0.elapsed().as_secs_f64();
+    let cells = hist.len();
+    let (mean_ms, p50_ms, p99_ms) = match hist.stats() {
+        Ok(s) => (s.mean_ms, s.p50_ms, s.p99_ms),
+        Err(_) => (0.0, 0.0, 0.0), // this shard completed no cell
+    };
+    ShardStats {
+        shard,
+        cells,
+        wall_seconds: wall,
+        cells_per_second: if wall > 0.0 { cells as f64 / wall } else { 0.0 },
+        mean_cell_ms: mean_ms,
+        p50_cell_ms: p50_ms,
+        p99_cell_ms: p99_ms,
+    }
+}
+
+fn merged_json(cells: &[SweepCell], quarantined: &[(CellSpec, String)]) -> Json {
+    json::obj(vec![
+        ("kind", json::s(MERGED_KIND)),
+        ("version", json::num(MANIFEST_VERSION as f64)),
+        ("cells", json::arr(cells.iter().map(SweepCell::to_json))),
+        (
+            "quarantined",
+            json::arr(quarantined.iter().map(|(c, e)| {
+                json::obj(vec![
+                    ("id", json::num(c.id as f64)),
+                    ("task", json::s(&c.task)),
+                    ("size", json::s(&c.size)),
+                    ("method", json::s(&c.method.to_string())),
+                    ("seed", json::num(c.seed as f64)),
+                    ("error", json::s(e)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// Plan (or resume) the manifest for `grid`, fan its pending cells over
+/// `cfg.shards` work-stealing workers, stream per-cell results to
+/// `results.jsonl`, and fold the stream into `merged.json`.
+///
+/// Crash safety: killed at any instant, the `--out` directory holds a
+/// complete manifest plus a prefix of the result stream; rerunning with
+/// `cfg.resume` completes the identical grid without re-running any
+/// done cell, and the merged table is bitwise-identical to an
+/// uninterrupted run's (training is deterministic per cell, and the
+/// merge is a pure function of the grid and the scores).
+pub fn run_sweep<F>(
+    make_backend: F,
+    grid: &GridSpec,
+    base: &ExperimentOptions,
+    cfg: &SweepConfig,
+) -> Result<SweepReport>
+where
+    F: Fn() -> Result<Box<dyn Backend>> + Send + Sync,
+{
+    if grid.is_empty() {
+        bail!(
+            "sweep grid is empty ({} tasks x {} sizes x {} methods x {} seeds)",
+            grid.tasks.len(),
+            grid.sizes.len(),
+            grid.methods.len(),
+            grid.seeds.len()
+        );
+    }
+    if cfg.shards == 0 {
+        bail!("sweep needs at least one shard (got --shards 0)");
+    }
+    if cfg.max_attempts == 0 {
+        bail!("sweep needs at least one attempt per cell (got max_attempts 0)");
+    }
+
+    let t0 = Instant::now();
+    let cells = grid.cells();
+    let options = options_json(base);
+    let manifest_path = cfg.out.join(MANIFEST_FILE);
+    let results_path = cfg.out.join(RESULTS_FILE);
+
+    let (states, skipped) = if manifest_path.exists() {
+        if !cfg.resume {
+            bail!(
+                "sweep: {:?} already holds a manifest; pass --resume to \
+                 continue it or pick a fresh --out",
+                cfg.out
+            );
+        }
+        let m = SweepManifest::load(&manifest_path)?;
+        m.check_compatible(grid, &options)?;
+        let have = dedupe_rows(&load_results(&results_path)?);
+        let mut states = m.states;
+        let mut skipped = 0usize;
+        for (id, st) in states.iter_mut().enumerate() {
+            match st.status {
+                CellStatus::Done if have.contains_key(&id) => skipped += 1,
+                // Done in the manifest but absent from the stream (lost
+                // or truncated row): re-run it or the merge would
+                // silently drop a cell.
+                CellStatus::Done => st.status = CellStatus::Pending,
+                // In-flight at the kill: the result never landed.
+                CellStatus::InFlight => st.status = CellStatus::Pending,
+                CellStatus::Pending | CellStatus::Quarantined => {}
+            }
+        }
+        (states, skipped)
+    } else {
+        if results_path.exists() {
+            bail!(
+                "sweep: {:?} has {RESULTS_FILE} but no {MANIFEST_FILE}; \
+                 refusing to guess — pick a fresh --out",
+                cfg.out
+            );
+        }
+        (vec![CellState::default(); cells.len()], 0)
+    };
+
+    let queue: VecDeque<usize> = states
+        .iter()
+        .enumerate()
+        .filter(|(_, s)| s.status == CellStatus::Pending)
+        .map(|(i, _)| i)
+        .collect();
+    let pending = queue.len();
+    crate::log_info!(
+        "sweep: {} cells ({} pending, {} done, {} quarantined) over {} shard(s) -> {:?}",
+        cells.len(),
+        pending,
+        skipped,
+        states.iter().filter(|s| s.status == CellStatus::Quarantined).count(),
+        cfg.shards,
+        cfg.out
+    );
+
+    let shared = Shared {
+        mu: Mutex::new(Coord {
+            queue,
+            states,
+            completed_this_run: 0,
+            halted: false,
+            fatal: None,
+        }),
+        cells: &cells,
+        grid,
+        options: &options,
+        base,
+        make_backend: &make_backend,
+        manifest_path,
+        results_path: results_path.clone(),
+        max_attempts: cfg.max_attempts,
+        halt_after: cfg.halt_after,
+    };
+    {
+        let c = lock(&shared.mu);
+        persist(&shared, &c)?;
+    }
+
+    let n_workers = cfg.shards.min(pending.max(1));
+    let mut shard_stats: Vec<ShardStats> = Vec::with_capacity(n_workers);
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let sh = &shared;
+            handles.push(scope.spawn(move || worker(sh, w)));
+        }
+        for h in handles {
+            let st = h.join().map_err(|_| {
+                anyhow!("sweep: a shard worker died outside the cell sandbox")
+            })?;
+            shard_stats.push(st);
+        }
+        Ok(())
+    })?;
+
+    let (halted, fatal, states, executed) = {
+        let c = lock(&shared.mu);
+        (c.halted, c.fatal.clone(), c.states.clone(), c.completed_this_run)
+    };
+    if let Some(f) = fatal {
+        bail!("sweep: {f}");
+    }
+    if halted {
+        bail!(
+            "sweep: halted by fault injection after {executed} completed \
+             cell(s); restart with --resume to finish the grid at {:?}",
+            cfg.out
+        );
+    }
+
+    let rows = load_results(&results_path)?;
+    let have = dedupe_rows(&rows);
+    let mut quarantined = Vec::new();
+    for (id, st) in states.iter().enumerate() {
+        match st.status {
+            CellStatus::Quarantined => quarantined.push((
+                cells[id].clone(),
+                st.error.clone().unwrap_or_else(|| "unknown error".to_string()),
+            )),
+            CellStatus::Done => {
+                if !have.contains_key(&id) {
+                    bail!(
+                        "sweep: cell {id} is marked done but has no row in \
+                         {RESULTS_FILE} (run again with --resume to repair)"
+                    );
+                }
+            }
+            s => bail!(
+                "sweep: cell {id} left {:?} after the run (internal \
+                 scheduling bug)",
+                s.as_str()
+            ),
+        }
+    }
+
+    let merged = merge_rows(grid, &rows);
+    let merged_path = cfg.out.join(MERGED_FILE);
+    fsatomic::atomic_write_str(
+        &merged_path,
+        &format!("{}\n", json::write(&merged_json(&merged, &quarantined))),
+    )?;
+
+    Ok(SweepReport {
+        cells: merged,
+        quarantined,
+        shard_stats,
+        executed,
+        skipped,
+        total: cells.len(),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        merged_path,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grid() -> GridSpec {
+        GridSpec {
+            tasks: vec!["rte".into(), "sst2".into()],
+            sizes: vec!["tiny".into()],
+            methods: vec!["full".parse().unwrap(), "full-wtacrs30".parse().unwrap()],
+            seeds: vec![0, 1, 2],
+        }
+    }
+
+    #[test]
+    fn grid_enumeration_is_deterministic_and_indexed() {
+        let g = grid();
+        let cells = g.cells();
+        assert_eq!(cells.len(), g.len());
+        assert_eq!(cells.len(), 12); // 2 tasks x 1 size x 2 methods x 3 seeds
+        for (i, c) in cells.iter().enumerate() {
+            assert_eq!(c.id, i);
+        }
+        // Seeds are the innermost axis.
+        assert_eq!(cells[0].seed, 0);
+        assert_eq!(cells[1].seed, 1);
+        assert_eq!(cells[2].seed, 2);
+        assert_eq!(cells[3].method.to_string(), "full-wtacrs30");
+        assert_eq!(cells[6].task, "sst2");
+        assert_eq!(g.cells(), cells);
+    }
+
+    #[test]
+    fn cell_status_round_trips() {
+        for s in [
+            CellStatus::Pending,
+            CellStatus::InFlight,
+            CellStatus::Done,
+            CellStatus::Quarantined,
+        ] {
+            assert_eq!(CellStatus::parse(s.as_str()).unwrap(), s);
+        }
+        let e = CellStatus::parse("zombie").unwrap_err().to_string();
+        assert!(e.contains("zombie"), "{e}");
+    }
+
+    #[test]
+    fn manifest_round_trips_through_disk() {
+        let g = grid();
+        let cells = g.cells();
+        let mut states = vec![CellState::default(); cells.len()];
+        states[0].status = CellStatus::Done;
+        states[0].attempts = 1;
+        states[1].status = CellStatus::Quarantined;
+        states[1].attempts = 2;
+        states[1].error = Some("cell 1: boom".to_string());
+        let opts = options_json(&ExperimentOptions::default());
+        let dir = std::env::temp_dir()
+            .join(format!("wtacrs-shard-manifest-{}", std::process::id()));
+        let path = dir.join(MANIFEST_FILE);
+        let doc = manifest_json(&g, &opts, &cells, &states);
+        fsatomic::atomic_write_str(&path, &format!("{}\n", json::write(&doc))).unwrap();
+
+        let m = SweepManifest::load(&path).unwrap();
+        assert_eq!(m.version, MANIFEST_VERSION);
+        assert_eq!(m.grid, g);
+        assert_eq!(m.options, opts);
+        assert_eq!(m.states, states);
+        m.check_compatible(&g, &opts).unwrap();
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_rejects_grid_and_option_drift() {
+        let g = grid();
+        let opts = options_json(&ExperimentOptions::default());
+        let m = SweepManifest {
+            version: MANIFEST_VERSION,
+            grid: g.clone(),
+            options: opts.clone(),
+            states: vec![CellState::default(); g.len()],
+        };
+        let mut g2 = g.clone();
+        g2.seeds.push(3);
+        let e = m.check_compatible(&g2, &opts).unwrap_err().to_string();
+        assert!(e.contains("grid differs"), "{e}");
+
+        let mut base2 = ExperimentOptions::default();
+        base2.train.max_steps = 7;
+        let e = m
+            .check_compatible(&g, &options_json(&base2))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("steps"), "missing changed key in: {e}");
+    }
+
+    #[test]
+    fn results_reader_tolerates_truncated_final_line_only() {
+        let dir = std::env::temp_dir()
+            .join(format!("wtacrs-shard-results-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(RESULTS_FILE);
+        let row = CellRow {
+            cell: 0,
+            task: "rte".into(),
+            size: "tiny".into(),
+            method: "full".into(),
+            seed: 0,
+            metric: "accuracy".into(),
+            score: 0.5,
+            seconds: 0.1,
+            shard: 0,
+            attempt: 1,
+        };
+        let line = json::write(&row.to_json());
+
+        // Complete line + truncated tail -> one row, no error.
+        std::fs::write(&p, format!("{line}\n{}", &line[..line.len() / 2])).unwrap();
+        let rows = load_results(&p).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].cell, 0);
+        assert_eq!(rows[0].metric, "accuracy");
+
+        // Corruption in the MIDDLE is a hard error naming the line.
+        std::fs::write(&p, format!("garbage\n{line}\n")).unwrap();
+        let e = load_results(&p).unwrap_err().to_string();
+        assert!(e.contains("line 1"), "{e}");
+
+        // Absent file is an empty stream.
+        std::fs::remove_file(&p).unwrap();
+        assert!(load_results(&p).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_is_invariant_to_row_order_and_duplicates() {
+        let g = grid();
+        let cells = g.cells();
+        let mk = |id: usize, score: f64, attempt: usize| CellRow {
+            cell: id,
+            task: cells[id].task.clone(),
+            size: cells[id].size.clone(),
+            method: cells[id].method.to_string(),
+            seed: cells[id].seed,
+            metric: "accuracy".into(),
+            score,
+            seconds: 0.01 * id as f64,
+            shard: id % 3,
+            attempt,
+        };
+        let mut rows: Vec<CellRow> =
+            (0..cells.len()).map(|i| mk(i, 0.1 * i as f64, 1)).collect();
+        let forward = merge_rows(&g, &rows);
+        rows.reverse();
+        // A duplicate row for cell 2 (keep-last) with the same score.
+        rows.push(mk(2, 0.2, 2));
+        let shuffled = merge_rows(&g, &rows);
+        assert_eq!(forward.len(), 4); // 2 tasks x 2 methods
+        assert_eq!(forward.len(), shuffled.len());
+        for (a, b) in forward.iter().zip(&shuffled) {
+            assert_eq!(a.task, b.task);
+            assert_eq!(a.method, b.method);
+            assert_eq!(a.scores, b.scores);
+            assert_eq!(a.seeds, b.seeds);
+            assert!((a.mean - b.mean).abs() == 0.0);
+            assert!((a.std - b.std).abs() == 0.0);
+        }
+        // Seeds come back in grid order regardless of row order.
+        assert_eq!(forward[0].seeds, vec![0, 1, 2]);
+        assert_eq!(forward[0].n, 3);
+    }
+
+    #[test]
+    fn merge_skips_missing_cells_but_keeps_partial_groups() {
+        let g = grid();
+        let cells = g.cells();
+        // Only seeds 0 and 2 of the first (task, method) group finished.
+        let rows: Vec<CellRow> = [0usize, 2]
+            .iter()
+            .map(|&id| CellRow {
+                cell: id,
+                task: cells[id].task.clone(),
+                size: cells[id].size.clone(),
+                method: cells[id].method.to_string(),
+                seed: cells[id].seed,
+                metric: "accuracy".into(),
+                score: 0.5,
+                seconds: 0.0,
+                shard: 0,
+                attempt: 1,
+            })
+            .collect();
+        let merged = merge_rows(&g, &rows);
+        assert_eq!(merged.len(), 1);
+        assert_eq!(merged[0].seeds, vec![0, 2]);
+        assert_eq!(merged[0].n, 2);
+    }
+}

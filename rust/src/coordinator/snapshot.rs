@@ -30,7 +30,7 @@
 //! the serving loader picks out exactly the `*.w` entries.
 
 use std::fmt;
-use std::io::{Read, Seek, SeekFrom, Write};
+use std::io::{Read, Seek, SeekFrom};
 use std::path::Path;
 use std::str::FromStr;
 
@@ -38,6 +38,7 @@ use crate::nn::{Arch, ModelSpec};
 use crate::ops::{Contraction, MethodSpec};
 use crate::runtime::{DType, HostTensor, TensorData};
 use crate::util::error::{Context, Error, Result};
+use crate::util::fsatomic;
 use crate::util::json::{self, Json};
 use crate::{anyhow, bail};
 
@@ -306,7 +307,9 @@ fn tensor_bytes(t: &HostTensor) -> Vec<u8> {
 
 /// Write a versioned snapshot: `state` is a trainer state vector
 /// (`TrainSession::state` layout — `[step, (w, m, v) per param]`), and
-/// `meta` the configuration that produced it.  Atomic (tmp + rename).
+/// `meta` the configuration that produced it.  Written via
+/// [`fsatomic::atomic_write`] (uniquely-named staged sibling, synced,
+/// renamed), so a kill mid-save never leaves a truncated snapshot.
 pub fn save_snapshot(
     path: impl AsRef<Path>,
     meta: &SnapshotMeta,
@@ -344,18 +347,13 @@ pub fn save_snapshot(
     };
     let mtext = manifest.to_string();
     let path = path.as_ref();
-    let tmp = path.with_extension("tmp");
-    {
-        let mut f = std::io::BufWriter::new(
-            std::fs::File::create(&tmp).with_context(|| format!("create {tmp:?}"))?,
-        );
-        f.write_all(SNAPSHOT_MAGIC)?;
-        f.write_all(&(mtext.len() as u64).to_le_bytes())?;
-        f.write_all(mtext.as_bytes())?;
-        f.write_all(&payload)?;
-    }
-    std::fs::rename(&tmp, path).with_context(|| format!("rename to {path:?}"))?;
-    Ok(())
+    let mut body = Vec::with_capacity(16 + mtext.len() + payload.len());
+    body.extend_from_slice(SNAPSHOT_MAGIC);
+    body.extend_from_slice(&(mtext.len() as u64).to_le_bytes());
+    body.extend_from_slice(mtext.as_bytes());
+    body.extend_from_slice(&payload);
+    fsatomic::atomic_write(path, &body)
+        .with_context(|| format!("snapshot: save {path:?}"))
 }
 
 /// Lazy snapshot reader: the header and manifest are parsed eagerly (a

@@ -1,40 +1,77 @@
-//! Multi-seed / multi-config sweep runner.
+//! Multi-seed sweep aggregation.
 //!
 //! The paper reports every Table-1 cell as mean ± std over three random
-//! trials (§5.1); this module fans seeds out over the worker pool and
-//! aggregates.  Each worker builds its own backend through the supplied
-//! factory (PJRT clients must not be shared across threads; native
-//! backends are cheap to construct), so the sweep also exercises the
-//! multi-process-style isolation a bigger deployment would use.
+//! trials (§5.1).  [`SweepCell`] is that aggregate; [`sweep_seeds`] is
+//! the lightweight no-persistence path that runs one (task, size,
+//! method) cell's seeds in this process and aggregates them.  The
+//! production-scale path — many cells, many shards, crash-safe resume —
+//! lives in [`shard`](super::shard) and folds its streamed results into
+//! the same `SweepCell` tables via
+//! [`merge_rows`](super::shard::merge_rows).
+//!
+//! A failed seed no longer sinks the whole cell silently: the error
+//! names the seed index and value, and callers that can tolerate holes
+//! (the shard layer) record the surviving seeds as partial results.
 
 use crate::ops::MethodSpec;
 use crate::runtime::Backend;
 use crate::util::error::Result;
+use crate::util::json::{self, Json};
 use crate::util::pool::ThreadPool;
 use crate::util::stats::Summary;
 
-use super::experiment::{run_glue, ExperimentOptions};
+use super::experiment::ExperimentOptions;
+use super::shard::{run_cell, CellSpec};
 
-/// One aggregated cell: mean ± std over seeds.
+/// One aggregated cell: mean ± std over seeds, with the per-seed
+/// scores kept for provenance (and for the python mirror to re-derive
+/// the aggregation bit-for-bit).
 #[derive(Debug, Clone)]
 pub struct SweepCell {
     pub task: String,
     pub method: String,
     pub size: String,
+    /// Metric name the scores are in ("accuracy", "f1", "nll", ...).
+    pub metric: String,
     pub mean: f64,
+    /// Sample standard deviation (n-1 denominator); 0 for n < 2.
     pub std: f64,
     pub n: usize,
+    /// Seeds that produced `scores`, in grid order.
+    pub seeds: Vec<u64>,
+    pub scores: Vec<f64>,
 }
 
 impl SweepCell {
     pub fn display(&self) -> String {
         format!("{:.1}±{:.2}", 100.0 * self.mean, 100.0 * self.std)
     }
+
+    /// Deterministic serialization for `merged.json`: no timing or
+    /// scheduling fields, so merged tables are invariant to shard
+    /// count, completion order, and kill/resume schedules.
+    pub fn to_json(&self) -> Json {
+        json::obj(vec![
+            ("task", json::s(&self.task)),
+            ("size", json::s(&self.size)),
+            ("method", json::s(&self.method)),
+            ("metric", json::s(&self.metric)),
+            ("mean", json::num(self.mean)),
+            ("std", json::num(self.std)),
+            ("n", json::num(self.n as f64)),
+            ("seeds", json::arr(self.seeds.iter().map(|&s| json::num(s as f64)))),
+            ("scores", json::arr(self.scores.iter().map(|&s| json::num(s)))),
+        ])
+    }
 }
 
-/// Run (task, size, method) across seeds; sequential fallback when no
-/// pool is given.  `make_backend` builds a fresh backend per run so
-/// workers never share execution state.
+/// Run (task, size, method) across seeds and aggregate; sequential
+/// fallback when no pool is given.  `make_backend` builds a fresh
+/// backend per run so workers never share execution state.  A failed
+/// seed aborts with an error naming the seed index and value — callers
+/// that need partial results instead go through
+/// [`shard::run_sweep`](super::shard::run_sweep), which records each
+/// surviving seed before aggregating.
 pub fn sweep_seeds<F>(
     make_backend: F,
     task: &str,
@@ -47,28 +84,25 @@ pub fn sweep_seeds<F>(
 where
     F: Fn() -> Result<Box<dyn Backend>> + Send + Sync + 'static,
 {
-    let jobs: Vec<(String, String, MethodSpec, ExperimentOptions)> = seeds
+    let jobs: Vec<CellSpec> = seeds
         .iter()
-        .map(|&s| {
-            let mut o = base.clone();
-            o.train.seed = s;
-            o.data_seed = base.data_seed; // same data, different init/sampling
-            (task.to_string(), size.to_string(), *method, o)
+        .enumerate()
+        .map(|(id, &seed)| CellSpec {
+            id,
+            task: task.to_string(),
+            size: size.to_string(),
+            method: *method,
+            seed,
         })
         .collect();
 
-    let run_one = move |(task, size, method, opts): (
-        String,
-        String,
-        MethodSpec,
-        ExperimentOptions,
-    )|
-          -> Result<f64> {
+    let base = base.clone();
+    let run_one = move |cell: CellSpec| -> Result<(f64, String)> {
         let backend = make_backend()?;
-        Ok(run_glue(backend.as_ref(), &task, &size, &method, &opts)?.score)
+        run_cell(backend.as_ref(), &cell, &base)
     };
 
-    let scores: Vec<Result<f64>> = match pool {
+    let outcomes: Vec<Result<(f64, String)>> = match pool {
         // `map` itself errors if a seed's job panicked or was dropped;
         // per-seed experiment failures come back inside the Vec.
         Some(p) => p.map(jobs, run_one)?,
@@ -76,16 +110,32 @@ where
     };
 
     let mut summary = Summary::new();
-    for s in scores {
-        summary.push(s?);
+    let mut scores = Vec::with_capacity(seeds.len());
+    let mut metric = String::new();
+    for (idx, outcome) in outcomes.into_iter().enumerate() {
+        let (score, m) = outcome.map_err(|e| {
+            crate::anyhow!(
+                "sweep {task}/{size}/{method}: seed {} (index {idx} of {}): {e}",
+                seeds[idx],
+                seeds.len()
+            )
+        })?;
+        summary.push(score);
+        scores.push(score);
+        if metric.is_empty() {
+            metric = m;
+        }
     }
     Ok(SweepCell {
         task: task.to_string(),
         method: method.to_string(),
         size: size.to_string(),
+        metric,
         mean: summary.mean(),
         std: summary.std(),
-        n: summary.count() as usize,
+        n: scores.len(),
+        seeds: seeds.to_vec(),
+        scores,
     })
 }
 
@@ -94,17 +144,34 @@ mod tests {
     use super::*;
     use crate::runtime::NativeBackend;
 
-    #[test]
-    fn cell_display_format() {
-        let c = SweepCell {
+    fn cell(mean: f64, std: f64) -> SweepCell {
+        SweepCell {
             task: "rte".into(),
             method: "full".into(),
             size: "tiny".into(),
-            mean: 0.7031,
-            std: 0.0123,
+            metric: "accuracy".into(),
+            mean,
+            std,
             n: 3,
-        };
-        assert_eq!(c.display(), "70.3±1.23");
+            seeds: vec![0, 1, 2],
+            scores: vec![mean, mean, mean],
+        }
+    }
+
+    #[test]
+    fn cell_display_format() {
+        assert_eq!(cell(0.7031, 0.0123).display(), "70.3±1.23");
+    }
+
+    #[test]
+    fn cell_serializes_without_timing_fields() {
+        let s = json::write(&cell(0.5, 0.0).to_json());
+        for needle in ["\"task\"", "\"metric\"", "\"seeds\"", "\"scores\""] {
+            assert!(s.contains(needle), "{needle} missing from {s}");
+        }
+        for forbidden in ["seconds", "shard", "attempt"] {
+            assert!(!s.contains(forbidden), "{forbidden} leaked into {s}");
+        }
     }
 
     #[test]
@@ -125,6 +192,9 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cell.n, 2);
+        assert_eq!(cell.seeds, vec![0, 1]);
+        assert_eq!(cell.scores.len(), 2);
+        assert_eq!(cell.metric, "accuracy");
         assert!(cell.mean.is_finite() && cell.std.is_finite());
     }
 
@@ -146,5 +216,27 @@ mod tests {
         )
         .unwrap();
         assert_eq!(cell.n, 3);
+    }
+
+    #[test]
+    fn failed_seed_is_named_in_the_error() {
+        let mut base = ExperimentOptions::default();
+        base.train.max_steps = 1;
+        base.train_size = 32;
+        base.val_size = 16;
+        let e = sweep_seeds(
+            || Ok(Box::new(NativeBackend::new()) as Box<dyn Backend>),
+            "not-a-task",
+            "tiny",
+            &"full".parse().unwrap(),
+            &base,
+            &[7, 8],
+            None,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("seed 7"), "seed value missing: {e}");
+        assert!(e.contains("index 0"), "seed index missing: {e}");
+        assert!(e.contains("not-a-task"), "task missing: {e}");
     }
 }

@@ -131,6 +131,53 @@
 //!   with a synthetic traffic generator and the `BENCH_serve.json`
 //!   baseline emitter.
 //!
+//! ## Sweeps: the sharded crash-safe grid coordinator
+//!
+//! The paper's Table 1 (§5.1) is a (task × size × method × seed) grid
+//! reported as mean ± std over seeds.  [`coordinator::shard`] runs that
+//! grid at production scale; `wtacrs sweep` is its CLI driver:
+//!
+//! * **Plan** — [`coordinator::GridSpec`] enumerates the axis product
+//!   in a fixed nesting order (seeds innermost) into a versioned
+//!   `manifest.json` that also pins a canonical digest of the training
+//!   options; a `--resume` against a different grid or different knobs
+//!   is refused by name rather than folding incomparable scores into
+//!   one table.
+//! * **Execute** — [`coordinator::run_sweep`] fans pending cells over N
+//!   work-stealing shard workers.  Workers are plain [`std::thread`]s,
+//!   never `util::pool::global()` workers (a pool worker blocking on
+//!   pool completion would deadlock — the PR-6/PR-7 rule); each worker
+//!   merely *submits* its matmuls to the pool, so per-cell scores are
+//!   bitwise-identical at any shard count.
+//! * **Persist** — every manifest transition
+//!   (`pending → in-flight → done|quarantined`) and every result row
+//!   lands through [`util::fsatomic`] (unique temp sibling + fsync +
+//!   rename), so a kill at any instant leaves a complete manifest plus
+//!   a result stream whose every line is complete.  Trainer checkpoints
+//!   and serving snapshots ride the same helper.
+//! * **Retry / quarantine** — a failing cell is retried up to
+//!   `--max-attempts` times with a named error
+//!   (`cell 7 (rte/tiny/full seed 1) attempt 2/2: ...`), then
+//!   quarantined: recorded in the manifest and `merged.json`, excluded
+//!   from aggregation, and never allowed to sink the sweep.
+//! * **Merge** — the JSONL stream folds into [`coordinator::SweepCell`]
+//!   tables (mean ± sample-std per (task, size, method), per-seed
+//!   scores kept for provenance).  The merge is a pure function of the
+//!   grid and the scores — no timing or scheduling fields — so the
+//!   merged table is bitwise-identical for any shard count, completion
+//!   order, or kill/resume schedule (`tests/sweep_shard.rs` pins the
+//!   killed-vs-uninterrupted byte equality; CI's `sweep-smoke` job
+//!   replays a kill-and-resume through the CLI, and
+//!   `python/mirror/check_pr8.py` re-derives the aggregation
+//!   independently).
+//!
+//! ```text
+//! cargo run --release -- sweep --tasks rte,sst2 --methods full,full-wtacrs30 \
+//!     --seeds 3 --shards 4 --out results/sweep      # plan + run + merge
+//! cargo run --release -- sweep --tasks rte,sst2 --methods full,full-wtacrs30 \
+//!     --seeds 3 --shards 4 --out results/sweep --resume   # after a kill
+//! ```
+//!
 //! ## Performance: the GEMM hot path and the committed baselines
 //!
 //! Every GEMM in the stack routes through four kernels on

@@ -8,14 +8,17 @@
 //!   inspect   list artifacts / models from the manifest (pure parser)
 //!   serve     batched forward-only serving from a snapshot (KV-cache
 //!             decode, synthetic traffic, p50/p99 + throughput)
+//!   sweep     sharded crash-safe (task x size x method x seed) grid
+//!             runner with resumable manifests and merged mean±std tables
 
 use std::path::{Path, PathBuf};
 use std::time::Duration;
 
 use wtacrs::coordinator::{
-    self, save_snapshot, ExperimentOptions, SnapshotMeta, SnapshotReader, TrainOptions,
+    self, save_snapshot, ExperimentOptions, GridSpec, SnapshotMeta, SnapshotReader,
+    SweepConfig, TrainOptions,
 };
-use wtacrs::data::Corpus;
+use wtacrs::data::{glue, Corpus};
 use wtacrs::memsim::{self, tables, Scope, Workload};
 use wtacrs::nn::{Arch, ModelSpec};
 use wtacrs::ops::{Contraction, MethodSpec};
@@ -54,6 +57,7 @@ fn run(args: &[String]) -> Result<()> {
         "memsim" => cmd_memsim(rest),
         "inspect" => cmd_inspect(rest),
         "serve" => cmd_serve(rest),
+        "sweep" => cmd_sweep(rest),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -71,7 +75,8 @@ fn print_usage() {
          \x20 lm       train the decoder LM (loss curve; needs the pjrt feature)\n\
          \x20 memsim   paper memory tables (Table 2 / Fig 2 / Fig 6)\n\
          \x20 inspect  list compiled artifacts and models\n\
-         \x20 serve    batched forward-only serving from a snapshot\n\n\
+         \x20 serve    batched forward-only serving from a snapshot\n\
+         \x20 sweep    sharded crash-safe grid runner (resume with --resume)\n\n\
          run `wtacrs <subcommand> --help` for options"
     );
 }
@@ -539,6 +544,171 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+fn cmd_sweep(args: &[String]) -> Result<()> {
+    let cli = Cli::new(
+        "wtacrs sweep",
+        "sharded crash-safe sweep over a (task x size x method x seed) grid",
+    )
+    .opt(
+        "tasks",
+        "rte",
+        "comma-separated GLUE tasks, plus \"lm\" for causal-lm cells \
+         (needs --arch causal-lm)",
+    )
+    .opt("sizes", "tiny", "comma-separated model sizes (tiny/small)")
+    .opt("methods", "full,full-wtacrs30", "comma-separated methods")
+    .opt("seeds", "3", "seeds per cell (runs seeds 0..K-1)")
+    .opt("shards", "2", "shard worker threads (each owns its backends)")
+    .opt("max-attempts", "2", "attempts per cell before quarantine")
+    .opt("steps", "40", "training steps per cell")
+    .opt("lr", "0", "learning rate (0 = per-family default)")
+    .opt("train-size", "64", "training examples per task (0 = task default)")
+    .opt("val-size", "32", "validation examples per task (0 = task default)")
+    .opt("data-seed", "17", "data-generation seed (shared across cells)")
+    .opt("backend", "native", "execution backend (native|pjrt)")
+    .opt("arch", "mlp", "trunk architecture (mlp|transformer|causal-lm)")
+    .opt("depth", "0", "trunk depth (0 = classic graph)")
+    .opt("width", "0", "trunk hidden width (0 = size default)")
+    .opt("heads", "0", "attention heads (0 = default)")
+    .opt(
+        "tokens-per-sample",
+        "1",
+        "token rows per sample for the Tokens contraction (causal-lm needs >= 2)",
+    )
+    .opt(
+        "out",
+        "results/sweep",
+        "output directory (manifest.json, results.jsonl, merged.json)",
+    )
+    .opt(
+        "kill-after",
+        "0",
+        "fault injection: abandon the run after N completed cells and exit \
+         nonzero, leaving in-flight cells in the manifest (0 = off)",
+    )
+    .flag("resume", "continue the manifest already in --out")
+    .flag("help", "show options");
+    let p = cli.parse(args)?;
+    if p.get_flag("help") {
+        println!("{}", cli.usage());
+        return Ok(());
+    }
+
+    let split = |key: &str| -> Vec<String> {
+        p.get(key)
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect()
+    };
+    let arch: Arch = p.get("arch").parse()?;
+    let tasks = split("tasks");
+    for t in &tasks {
+        if t == "lm" {
+            if arch != Arch::CausalLm {
+                bail!("sweep: task \"lm\" needs --arch causal-lm");
+            }
+        } else if glue::task(t).is_none() {
+            bail!(
+                "sweep: unknown task {t:?} \
+                 (cola/sst2/mrpc/qqp/mnli/qnli/rte/stsb, or \"lm\")"
+            );
+        }
+    }
+    let methods = split("methods")
+        .iter()
+        .map(|m| m.parse::<MethodSpec>())
+        .collect::<Result<Vec<_>>>()?;
+    let n_seeds = p.get_usize("seeds")?;
+    if n_seeds == 0 {
+        bail!("sweep: --seeds must be >= 1");
+    }
+    let grid = GridSpec {
+        tasks,
+        sizes: split("sizes"),
+        methods,
+        seeds: (0..n_seeds as u64).collect(),
+    };
+
+    let tps = p.get_usize("tokens-per-sample")?;
+    let contraction = match tps {
+        0 => bail!("--tokens-per-sample must be >= 1"),
+        1 => Contraction::Rows,
+        n => Contraction::Tokens { per_sample: n },
+    };
+    let base = ExperimentOptions {
+        train: TrainOptions {
+            lr: p.get_f64("lr")? as f32,
+            seed: 0, // overridden per cell
+            max_steps: p.get_usize("steps")?,
+            eval_every: 0,
+            patience: 0,
+        },
+        train_size: p.get_usize("train-size")?,
+        val_size: p.get_usize("val-size")?,
+        data_seed: p.get_u64("data-seed")?,
+        model: ModelSpec {
+            depth: p.get_usize("depth")?,
+            width: p.get_usize("width")?,
+            contraction,
+            arch,
+            heads: p.get_usize("heads")?,
+        },
+    };
+    let kill_after = p.get_usize("kill-after")?;
+    let cfg = SweepConfig {
+        shards: p.get_usize("shards")?,
+        max_attempts: p.get_usize("max-attempts")?,
+        resume: p.get_flag("resume"),
+        out: PathBuf::from(p.get("out")),
+        halt_after: if kill_after == 0 { None } else { Some(kill_after) },
+    };
+    let backend_name = p.get("backend").to_string();
+    // Fail on a bad backend name before planning the manifest, not
+    // inside every cell.
+    drop(make_backend(&backend_name)?);
+
+    let report = coordinator::run_sweep(
+        move || make_backend(&backend_name),
+        &grid,
+        &base,
+        &cfg,
+    )?;
+
+    let mut t = Table::new(&["task", "size", "method", "metric", "mean±std", "n"]);
+    for c in &report.cells {
+        t.row(&[
+            c.task.clone(),
+            c.size.clone(),
+            c.method.clone(),
+            c.metric.clone(),
+            c.display(),
+            c.n.to_string(),
+        ]);
+    }
+    t.print();
+    for (cell, err) in &report.quarantined {
+        println!("quarantined cell {}: {err}", cell.id);
+    }
+    for s in &report.shard_stats {
+        println!(
+            "shard {}: {} cells in {:.1}s ({:.2} cells/s; cell p50 {:.0} ms \
+             p99 {:.0} ms)",
+            s.shard, s.cells, s.wall_seconds, s.cells_per_second, s.p50_cell_ms, s.p99_cell_ms
+        );
+    }
+    println!(
+        "sweep: {} cells ({} run here, {} already done) in {:.1}s; merged \
+         table at {}",
+        report.total,
+        report.executed,
+        report.skipped,
+        report.wall_seconds,
+        report.merged_path.display()
+    );
+    Ok(())
+}
+
 /// Quick-train a causal-LM and snapshot it, so `wtacrs serve` works out
 /// of the box with no prior training run.
 fn quick_train_snapshot(size: &str, steps: usize) -> Result<PathBuf> {
@@ -736,6 +906,51 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("mlp|transformer|causal-lm"), "{e}");
+    }
+
+    #[test]
+    fn sweep_rejects_unknown_task() {
+        let e = super::run(&args(&["sweep", "--tasks", "rte,not-a-task"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("not-a-task"), "{e}");
+    }
+
+    #[test]
+    fn sweep_rejects_lm_task_without_causal_lm_arch() {
+        let e = super::run(&args(&["sweep", "--tasks", "lm"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("causal-lm"), "{e}");
+    }
+
+    #[test]
+    fn sweep_rejects_zero_shards_and_zero_seeds() {
+        let e = super::run(&args(&["sweep", "--shards", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("shard"), "{e}");
+        let e = super::run(&args(&["sweep", "--seeds", "0"]))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("--seeds"), "{e}");
+    }
+
+    #[test]
+    fn sweep_refuses_an_existing_out_without_resume() {
+        // The existence check fires before the manifest is parsed, so a
+        // placeholder file is enough to prove the guard.
+        let dir = std::env::temp_dir()
+            .join(format!("wtacrs-cli-sweep-guard-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), "{}").unwrap();
+        let e = super::run(&args(&[
+            "sweep", "--out", dir.to_str().unwrap(),
+        ]))
+        .unwrap_err()
+        .to_string();
+        assert!(e.contains("--resume"), "{e}");
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Crash-safe file writes: temp-file-plus-rename, in one place.
+//!
+//! A process killed mid-`write_all` leaves a truncated file that only
+//! fails at the *next* open — the failure surfaces far from its cause,
+//! usually in a different run.  Every durable artifact in this repo
+//! (trainer checkpoints, serving snapshots, sweep manifests and result
+//! streams) therefore goes through [`atomic_write`]: the bytes land in
+//! a uniquely-named temporary sibling first, are flushed to disk, and
+//! only then renamed over the destination.  `rename(2)` within one
+//! directory is atomic on every platform we target, so a reader sees
+//! either the old complete file or the new complete file — never a
+//! prefix.
+//!
+//! The temporary name embeds the pid and a process-global sequence
+//! number, so concurrent writers (sweep shard workers, parallel tests)
+//! can never interleave on the same scratch path the way a fixed
+//! `.tmp` extension would.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::util::error::{Context, Result};
+
+/// Process-global uniquifier for temporary siblings.
+static TMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// The uniquely-named temporary sibling `atomic_write` stages into.
+fn tmp_sibling(path: &Path) -> PathBuf {
+    let name = path
+        .file_name()
+        .map(|n| n.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "file".to_string());
+    let seq = TMP_SEQ.fetch_add(1, Ordering::Relaxed);
+    path.with_file_name(format!(
+        "{name}.tmp.{}.{seq}",
+        std::process::id()
+    ))
+}
+
+/// Write `bytes` to `path` atomically: create parent directories, stage
+/// into a uniquely-named temporary sibling, flush it to disk, rename
+/// over the destination.  On any error the destination is untouched
+/// (the scratch file is cleaned up best-effort).
+pub fn atomic_write(path: impl AsRef<Path>, bytes: &[u8]) -> Result<()> {
+    let path = path.as_ref();
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("atomic_write: create dir {dir:?}"))?;
+        }
+    }
+    let tmp = tmp_sibling(path);
+    let res = (|| -> Result<()> {
+        use std::io::Write;
+        let mut f = std::fs::File::create(&tmp)
+            .with_context(|| format!("atomic_write: create {tmp:?}"))?;
+        f.write_all(bytes)
+            .with_context(|| format!("atomic_write: write {tmp:?}"))?;
+        // Durability before visibility: the rename must never expose a
+        // file whose bytes are still in the page cache of a dying
+        // process.
+        f.sync_all()
+            .with_context(|| format!("atomic_write: sync {tmp:?}"))?;
+        drop(f);
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("atomic_write: rename {tmp:?} to {path:?}"))?;
+        Ok(())
+    })();
+    if res.is_err() {
+        std::fs::remove_file(&tmp).ok();
+    }
+    res
+}
+
+/// [`atomic_write`] for text content.
+pub fn atomic_write_str(path: impl AsRef<Path>, text: &str) -> Result<()> {
+    atomic_write(path, text.as_bytes())
+}
+
+/// Append one line to a line-oriented file crash-safely: read the
+/// current content (absent file = empty), append `line` plus a newline,
+/// and [`atomic_write`] the whole file back.  Readers therefore never
+/// observe a partially-written line from *this* writer; the cost is
+/// O(file) per append, which the sweep's few-hundred-line result
+/// streams never notice.  The caller serializes concurrent appenders
+/// (the shard executor holds its coordinator lock across the call).
+pub fn append_line(path: impl AsRef<Path>, line: &str) -> Result<()> {
+    let path = path.as_ref();
+    if line.contains('\n') {
+        crate::bail!("append_line: line contains an embedded newline");
+    }
+    let mut content = match std::fs::read(path) {
+        Ok(bytes) => bytes,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => Vec::new(),
+        Err(e) => {
+            return Err(crate::anyhow!("append_line: read {path:?}: {e}"));
+        }
+    };
+    // A truncated trailing record (no terminating newline — the residue
+    // a kill leaves in a non-atomic writer's file) is dropped rather
+    // than appended after: the tolerant readers already ignore it, and
+    // gluing a new record onto it would fuse two records into one
+    // corrupt line.
+    if !content.is_empty() && content.last() != Some(&b'\n') {
+        match content.iter().rposition(|&b| b == b'\n') {
+            Some(pos) => content.truncate(pos + 1),
+            None => content.clear(),
+        }
+    }
+    content.extend_from_slice(line.as_bytes());
+    content.push(b'\n');
+    atomic_write(path, &content)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("wtacrs-fsatomic-{}-{name}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn write_and_overwrite() {
+        let d = tmpdir("wo");
+        let p = d.join("a.txt");
+        atomic_write_str(&p, "one").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "one");
+        atomic_write_str(&p, "two").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "two");
+        // No scratch siblings left behind.
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().to_string_lossy().into_owned())
+            .filter(|n| n.contains(".tmp."))
+            .collect();
+        assert!(leftovers.is_empty(), "stale tmp files: {leftovers:?}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn creates_parent_directories() {
+        let d = tmpdir("mkdirs");
+        let p = d.join("deep/er/nested.json");
+        atomic_write_str(&p, "{}").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn append_line_builds_a_jsonl_stream() {
+        let d = tmpdir("append");
+        let p = d.join("rows.jsonl");
+        append_line(&p, "{\"a\":1}").unwrap();
+        append_line(&p, "{\"a\":2}").unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&p).unwrap(),
+            "{\"a\":1}\n{\"a\":2}\n"
+        );
+        let e = append_line(&p, "bad\nline").unwrap_err().to_string();
+        assert!(e.contains("embedded newline"), "{e}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn append_line_drops_a_truncated_trailing_record() {
+        let d = tmpdir("append-trunc");
+        let p = d.join("rows.jsonl");
+        std::fs::write(&p, "{\"a\":1}\n{\"a\":2").unwrap(); // killed mid-append
+        append_line(&p, "{\"a\":3}").unwrap();
+        assert_eq!(
+            std::fs::read_to_string(&p).unwrap(),
+            "{\"a\":1}\n{\"a\":3}\n"
+        );
+        // A file that is ALL partial record resets to just the new line.
+        std::fs::write(&p, "{\"a\":4").unwrap();
+        append_line(&p, "{\"a\":5}").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "{\"a\":5}\n");
+        std::fs::remove_dir_all(&d).ok();
+    }
+
+    #[test]
+    fn concurrent_writers_never_collide_on_scratch_names() {
+        let d = tmpdir("conc");
+        let p = d.join("shared.txt");
+        std::thread::scope(|s| {
+            for t in 0..8 {
+                let p = p.clone();
+                s.spawn(move || {
+                    for i in 0..16 {
+                        atomic_write_str(&p, &format!("writer {t} round {i}")).unwrap();
+                    }
+                });
+            }
+        });
+        // Whatever won, the file is one complete record.
+        let got = std::fs::read_to_string(&p).unwrap();
+        assert!(got.starts_with("writer ") && got.contains("round"), "{got}");
+        std::fs::remove_dir_all(&d).ok();
+    }
+}

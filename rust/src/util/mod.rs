@@ -4,6 +4,7 @@
 pub mod bench;
 pub mod cli;
 pub mod error;
+pub mod fsatomic;
 pub mod json;
 pub mod logging;
 pub mod plot;

@@ -1,0 +1,204 @@
+//! Fault-injection integration tests for the sharded sweep coordinator
+//! (`coordinator::shard`): kill-and-resume round trip, truncated
+//! trailing JSONL lines, per-cell retry exhaustion with quarantine, and
+//! the PR's acceptance criterion — a sweep killed mid-run and restarted
+//! with resume produces a merged table bitwise-identical to an
+//! uninterrupted single-shard run of the same manifest.
+//!
+//! All runs use the pure-Rust [`NativeBackend`] on tiny few-step
+//! workloads; training is deterministic per (cell, seed) across shard
+//! counts (the PR-6 pooled/serial kernel identity), which is what makes
+//! the bitwise comparisons meaningful.
+
+use std::path::PathBuf;
+
+use wtacrs::coordinator::shard::{
+    load_results, run_sweep, CellStatus, GridSpec, SweepConfig, SweepManifest,
+    MANIFEST_FILE, MERGED_FILE, RESULTS_FILE,
+};
+use wtacrs::coordinator::ExperimentOptions;
+use wtacrs::runtime::{Backend, NativeBackend};
+use wtacrs::util::error::Result;
+
+fn backend() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend::new()))
+}
+
+fn base() -> ExperimentOptions {
+    let mut b = ExperimentOptions::default();
+    b.train.max_steps = 3;
+    b.train.lr = 1e-3;
+    b.train_size = 48;
+    b.val_size = 24;
+    b
+}
+
+fn out_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("wtacrs-sweep-it-{}-{name}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+#[test]
+fn kill_and_resume_matches_uninterrupted_run_bitwise() {
+    let g = GridSpec {
+        tasks: vec!["rte".into()],
+        sizes: vec!["tiny".into()],
+        methods: vec!["full".parse().unwrap(), "full-wtacrs30".parse().unwrap()],
+        seeds: vec![0, 1],
+    };
+    let b = base();
+
+    // Reference: uninterrupted single shard.
+    let ref_out = out_dir("ref");
+    let mut cfg = SweepConfig::new(&ref_out);
+    cfg.shards = 1;
+    let ref_report = run_sweep(backend, &g, &b, &cfg).unwrap();
+    assert_eq!(ref_report.executed, 4);
+    assert_eq!(ref_report.skipped, 0);
+    assert!(ref_report.quarantined.is_empty());
+    let ref_merged = std::fs::read(ref_out.join(MERGED_FILE)).unwrap();
+
+    // Interrupted: two shards, test-injected kill after 2 cells.
+    let out = out_dir("killed");
+    let mut cfg = SweepConfig::new(&out);
+    cfg.shards = 2;
+    cfg.halt_after = Some(2);
+    let e = run_sweep(backend, &g, &b, &cfg).unwrap_err().to_string();
+    assert!(e.contains("fault injection"), "{e}");
+    assert!(e.contains("--resume"), "{e}");
+    let m = SweepManifest::load(&out.join(MANIFEST_FILE)).unwrap();
+    let done =
+        m.states.iter().filter(|s| s.status == CellStatus::Done).count();
+    assert_eq!(done, 2, "exactly halt_after cells are recorded done");
+    assert_eq!(load_results(&out.join(RESULTS_FILE)).unwrap().len(), 2);
+    assert!(
+        !out.join(MERGED_FILE).exists(),
+        "a halted run must not publish a merged table"
+    );
+
+    // Resume with a DIFFERENT shard count: completes the identical
+    // grid, re-runs no completed cell, and merges bitwise-identically
+    // to the uninterrupted single-shard reference.
+    let mut cfg = SweepConfig::new(&out);
+    cfg.shards = 3;
+    cfg.resume = true;
+    let report = run_sweep(backend, &g, &b, &cfg).unwrap();
+    assert_eq!(report.total, 4);
+    assert_eq!(report.skipped, 2, "completed cells are never re-run");
+    assert_eq!(report.executed, 2);
+    assert!(report.quarantined.is_empty());
+    assert_eq!(
+        std::fs::read(out.join(MERGED_FILE)).unwrap(),
+        ref_merged,
+        "merged tables diverged across kill/resume and shard counts"
+    );
+
+    std::fs::remove_dir_all(&ref_out).ok();
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn truncated_result_row_is_rerun_on_resume() {
+    let g = GridSpec {
+        tasks: vec!["rte".into()],
+        sizes: vec!["tiny".into()],
+        methods: vec!["full".parse().unwrap()],
+        seeds: vec![0, 1],
+    };
+    let b = base();
+    let out = out_dir("trunc");
+    let mut cfg = SweepConfig::new(&out);
+    cfg.shards = 1;
+    run_sweep(backend, &g, &b, &cfg).unwrap();
+    let ref_merged = std::fs::read(out.join(MERGED_FILE)).unwrap();
+
+    // Chop the final result line mid-way, no trailing newline — the
+    // residue a kill leaves in a non-atomic appender's file.
+    let rp = out.join(RESULTS_FILE);
+    let content = std::fs::read_to_string(&rp).unwrap();
+    let last_start = content.trim_end().rfind('\n').unwrap() + 1;
+    std::fs::write(&rp, &content[..last_start + 10]).unwrap();
+    assert_eq!(
+        load_results(&rp).unwrap().len(),
+        1,
+        "tolerant reader drops only the truncated tail"
+    );
+
+    // Resume: the cell whose row was lost is marked done in the
+    // manifest but absent from the stream — it must be re-run, and the
+    // merged table must come back bitwise identical.
+    let mut cfg = SweepConfig::new(&out);
+    cfg.resume = true;
+    let report = run_sweep(backend, &g, &b, &cfg).unwrap();
+    assert_eq!(report.skipped, 1);
+    assert_eq!(report.executed, 1, "done-but-missing cell is re-run");
+    assert_eq!(std::fs::read(out.join(MERGED_FILE)).unwrap(), ref_merged);
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn poisoned_cell_is_retried_then_quarantined_not_fatal() {
+    // The library does not pre-validate task names (the CLI does), so a
+    // bogus task is a deterministic per-attempt failure — the retry
+    // exhaustion vehicle.
+    let g = GridSpec {
+        tasks: vec!["rte".into(), "definitely-not-a-task".into()],
+        sizes: vec!["tiny".into()],
+        methods: vec!["full".parse().unwrap()],
+        seeds: vec![0],
+    };
+    let b = base();
+    let out = out_dir("quarantine");
+    let mut cfg = SweepConfig::new(&out);
+    cfg.shards = 2;
+    cfg.max_attempts = 2;
+    let report = run_sweep(backend, &g, &b, &cfg).unwrap();
+    assert_eq!(report.executed, 1);
+    assert_eq!(report.quarantined.len(), 1);
+    let (cell, err) = &report.quarantined[0];
+    assert_eq!(cell.task, "definitely-not-a-task");
+    assert!(err.contains("attempt 2/2"), "retry count missing: {err}");
+    assert!(err.contains("definitely-not-a-task"), "{err}");
+    assert_eq!(report.cells.len(), 1, "merged keeps the healthy group");
+    assert_eq!(report.cells[0].task, "rte");
+
+    let m = SweepManifest::load(&out.join(MANIFEST_FILE)).unwrap();
+    assert_eq!(m.states[1].status, CellStatus::Quarantined);
+    assert_eq!(m.states[1].attempts, 2);
+
+    // merged.json records the quarantined cell with its named error.
+    let merged = std::fs::read_to_string(out.join(MERGED_FILE)).unwrap();
+    assert!(merged.contains("quarantined"), "{merged}");
+    assert!(merged.contains("definitely-not-a-task"), "{merged}");
+
+    // A later resume leaves the quarantined cell alone: nothing to run.
+    let mut cfg = SweepConfig::new(&out);
+    cfg.resume = true;
+    let report = run_sweep(backend, &g, &b, &cfg).unwrap();
+    assert_eq!(report.executed, 0);
+    assert_eq!(report.skipped, 1);
+    assert_eq!(report.quarantined.len(), 1);
+    std::fs::remove_dir_all(&out).ok();
+}
+
+#[test]
+fn fresh_run_refuses_a_foreign_results_stream() {
+    // results.jsonl with no manifest means the directory is in a state
+    // this code never produces; refuse instead of guessing.
+    let g = GridSpec {
+        tasks: vec!["rte".into()],
+        sizes: vec!["tiny".into()],
+        methods: vec!["full".parse().unwrap()],
+        seeds: vec![0],
+    };
+    let out = out_dir("foreign");
+    std::fs::create_dir_all(&out).unwrap();
+    std::fs::write(out.join(RESULTS_FILE), "{}\n").unwrap();
+    let e = run_sweep(backend, &g, &base(), &SweepConfig::new(&out))
+        .unwrap_err()
+        .to_string();
+    assert!(e.contains("no manifest.json") || e.contains("refusing"), "{e}");
+    std::fs::remove_dir_all(&out).ok();
+}
