@@ -37,6 +37,7 @@ fn main() -> Result<()> {
             eval_every: p.get_usize("eval-every")?,
             patience: 0,
             seed: 0,
+            ..Default::default()
         },
         ..Default::default()
     };

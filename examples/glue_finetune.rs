@@ -57,6 +57,7 @@ fn main() -> Result<()> {
             eval_every: 0,
             patience: 0,
             seed: 0,
+            ..Default::default()
         },
         ..Default::default()
     };

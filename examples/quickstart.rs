@@ -27,6 +27,11 @@
 //!    workers, kill it mid-run (fault injection), resume it, and print
 //!    the merged mean±std tables — the paper's Table-1 pipeline in
 //!    miniature.
+//! 9. The pluggable estimator seam: drive the randomized-subspace
+//!    family (`full-subspace16`) through the same `ops::Estimator`
+//!    trait the backend uses, then retrain under the *adaptive* budget
+//!    schedule and print the realized per-layer budgets — the
+//!    walkthrough for adding your own estimator family.
 //!
 //! Runs fully offline — no artifacts, no XLA.
 //!
@@ -38,7 +43,7 @@ use wtacrs::coordinator::{
 use wtacrs::estimator::Mat;
 use wtacrs::memsim::{self, Scope, Workload};
 use wtacrs::nn::{Arch, ModelBuilder, ModelSpec, StackDims};
-use wtacrs::ops::{Contraction, MethodSpec, SampledLinear};
+use wtacrs::ops::{BudgetSchedule, Contraction, EstCtx, MethodSpec, SampledLinear};
 use wtacrs::runtime::{Backend, NativeBackend, SessionConfig, TrainSession};
 use wtacrs::util::error::Result;
 use wtacrs::util::rng::Rng;
@@ -48,8 +53,11 @@ fn main() -> Result<()> {
 
     // 1. The operator itself: forward saves only k column-row pairs.
     let method: MethodSpec = "full-wtacrs30".parse()?;
-    println!("method spec: {method} (family {}, sampler {:?})", method.family, method.sampler);
-    let op = SampledLinear::new(method.sampler, Contraction::Rows);
+    println!(
+        "method spec: {method} (family {}, estimator {})",
+        method.family, method.estimator
+    );
+    let op = SampledLinear::new(method.sampler(), Contraction::Rows);
     let mut rng = Rng::new(0);
     let h = Mat::randn(64, 128, &mut rng); // activations (64 rows)
     let w = Mat::randn(128, 32, &mut rng); // weight
@@ -82,6 +90,7 @@ fn main() -> Result<()> {
             max_steps: 150,
             eval_every: 50,
             patience: 0,
+            ..Default::default()
         },
         ..Default::default()
     };
@@ -345,5 +354,55 @@ fn main() -> Result<()> {
         );
     }
     std::fs::remove_dir_all(&out).ok();
+
+    // 9. The pluggable estimator seam.  Every family is an
+    //    `ops::Estimator` built from the parsed spec — adding your own
+    //    takes three steps: implement `Estimator` (forward computes the
+    //    exact Z = HW and decides what to save) and `Saved` (backward
+    //    rebuilds (dW, dH, refreshed norms) from the save and *measures*
+    //    its own `saved_bytes`), give the grammar a suffix arm so
+    //    `MethodSpec` parses/prints it, and map it in
+    //    `EstimatorSpec::build`.  The randomized-subspace family keeps
+    //    a rank-r Rademacher sketch of the activation instead of k
+    //    selected pairs:
+    let sub: MethodSpec = "full-subspace16".parse()?;
+    let est = sub.estimator.build(Contraction::Rows);
+    let mut rng = Rng::new(0);
+    let h = Mat::randn(64, 128, &mut rng);
+    let w = Mat::randn(128, 32, &mut rng);
+    let znorms = vec![1.0f32; 64];
+    let (z, saved) = est.forward(&h, &w, EstCtx::new(&znorms, &mut rng, None))?;
+    println!(
+        "\nsubspace estimator: Z is exact ({}x{}); sketch rank {} -> {} of {} bytes \
+         ({:.2}x)",
+        z.rows,
+        z.cols,
+        saved.k(),
+        saved.saved_bytes(),
+        saved.full_bytes(),
+        saved.full_bytes() as f64 / saved.saved_bytes() as f64,
+    );
+    let dz = Mat::randn(64, 32, &mut rng);
+    let bw = saved.backward(&dz, &w);
+    println!(
+        "  backward from the sketch: dW {}x{}, dH {}x{} (exact), {} refreshed norms",
+        bw.dw.rows, bw.dw.cols, bw.dh.rows, bw.dh.cols, bw.refreshed_norms.len(),
+    );
+    //    The budget schedule is orthogonal to the family: `adaptive`
+    //    re-apportions the same summed budget by each layer's share of
+    //    the cached gradient-norm mass (CLI: `wtacrs train
+    //    --budget-schedule adaptive`), and the report surfaces what
+    //    each layer actually got.
+    let mut aopts = ExperimentOptions::default();
+    aopts.train.max_steps = 20;
+    aopts.train.lr = 1e-3;
+    aopts.train.schedule = BudgetSchedule::Adaptive;
+    let r = run_glue(&backend, "rte", "tiny", &sub, &aopts)?;
+    println!(
+        "  adaptive subspace budgets after {} steps: {:?} (sum {})",
+        r.report.steps,
+        r.report.layer_budgets,
+        r.report.layer_budgets.iter().sum::<usize>(),
+    );
     Ok(())
 }

@@ -1,0 +1,241 @@
+"""PR 9 calibration: randomized-subspace estimator + adaptive budgets.
+
+Mirrors the two stochastic surfaces PR 9 adds behind the pluggable
+`ops::Estimator` interface, using the bit-exact `rng.Rng` mirror so the
+printed ratios are (up to f32 summation order) the ones the Rust tests
+will compute on the same seeds:
+
+1. Subspace sketch — rebuild the Rademacher estimate `X S^T S Y`
+   (signs drawn in row-major order, `next_u64() >> 63`, scale
+   `1/sqrt(r)`) on the Rust tests' `skewed()` instances and check:
+   unbiasedness of the Monte-Carlo mean, the closed-form variance
+   `(||XY||_F^2 + ||X||_F^2 ||Y||_F^2 - 2 sum a_i) / r` against MC
+   within the committed bands, and the measured family ordering
+   wtacrs < crs < subspace at equal budget (with the 1.5x margin the
+   Rust band uses).
+
+2. Adaptive budget schedule — a pure-python re-derivation of
+   `NativeSession::adaptive_budgets` (floor shares over the cached
+   norm mass + largest-mass leftover assignment), pinning the unit
+   vectors the Rust tests assert: uniform mass keeps the fixed plan,
+   the skewed 3-layer case lands on [1, 1, 28], degenerate caches fall
+   back to the fixed schedule, and the 13-layer transformer plan still
+   sums to the fixed total 466.
+
+3. Deterministic tape pins for the sketch save (`r*d_in*4 + 8` bytes):
+   the tiny classic `full-subspace16` stack stores [2568, 5128, 2568].
+"""
+import math
+
+import numpy as np
+
+from estimator import (
+    crs_variance,
+    estimate_matmul,
+    frob,
+    pair_sq_norms,
+    skewed_xy,
+    wtacrs_variance,
+)
+from rng import Rng
+
+
+def banner(name):
+    print(f"\n== {name} ==")
+
+
+def skewed(seed, n, m, q):
+    return skewed_xy(Rng(seed), n, m, q)
+
+
+def k_for(pct, m):
+    # SamplerSpec::k_for / SubspaceEstimator::rank_for: round half away
+    # from zero, clamp into 1..=m.
+    return min(max(int(math.floor(pct / 100.0 * m + 0.5)), 1), m)
+
+
+# ---------------------------------------------------------------------------
+# Subspace estimator mirror (ops::estimator + estimator::variance)
+# ---------------------------------------------------------------------------
+
+
+def subspace_variance(x, y, r):
+    xf = float(np.sum(x.astype(np.float64) ** 2))
+    yf = float(np.sum(y.astype(np.float64) ** 2))
+    cross = float(pair_sq_norms(x, y).sum())
+    exact = (x @ y).astype(np.float32)
+    return max((frob(exact) ** 2 + xf * yf - 2.0 * cross) / r, 0.0)
+
+
+def sketch_estimate(x, y, r, rng):
+    m = x.shape[1]
+    scale = np.float32(1.0 / math.sqrt(r))
+    bits = np.array([(rng.next_u64() >> 63) == 0 for _ in range(r * m)])
+    s = np.where(bits.reshape(r, m), scale, -scale).astype(np.float32)
+    return ((x @ s.T).astype(np.float32) @ (s @ y).astype(np.float32)).astype(
+        np.float32
+    )
+
+
+def mc_variance(draw, rows, cols, trials, seed):
+    rng = Rng(seed)
+    mean = np.zeros((rows, cols), dtype=np.float32)
+    samples = []
+    for _ in range(trials):
+        e = draw(rng)
+        mean += e
+        samples.append(e)
+    mean = (mean / np.float32(trials)).astype(np.float32)
+    return float(np.mean([frob(s - mean) ** 2 for s in samples]))
+
+
+def subspace_unbiased():
+    banner("subspace sketch unbiasedness (rust seeds 5/7, 6000 trials)")
+    x, y = skewed(5, 4, 48, 4)
+    k, trials = 16, 6000
+    rng = Rng(7)
+    acc = np.zeros((4, 4), dtype=np.float64)
+    for _ in range(trials):
+        acc += sketch_estimate(x, y, k, rng)
+    mean = acc / trials
+    exact = (x @ y).astype(np.float32)
+    rel = float(np.linalg.norm(mean - exact) / frob(exact))
+    tol = 4.0 * math.sqrt(subspace_variance(x, y, k) / trials) / frob(exact)
+    print(f"  relative bias {rel:.4f} (band max(tol={tol:.4f}, 0.05))")
+    assert rel < max(tol, 0.05), rel
+
+
+def subspace_closed_form():
+    banner("subspace closed-form vs MC (rust seeds 6/9, 2000 trials)")
+    x, y = skewed(6, 4, 48, 4)
+    k = 16
+    predicted = subspace_variance(x, y, k)
+    measured = mc_variance(lambda r: sketch_estimate(x, y, k, r), 4, 4, 2000, 9)
+    ratio = measured / predicted
+    print(f"  MC/closed-form = {ratio:.4f} (band 0.85..1.15)")
+    assert 0.85 < ratio < 1.15, ratio
+
+
+def family_ordering():
+    banner("measured family ordering at equal budget (rust seeds 2,3)")
+    k, trials = 20, 1200
+    for seed in (2, 3):
+        x, y = skewed(seed, 4, 64, 4)
+        v = {
+            name: mc_variance(
+                lambda r, n=name: (
+                    sketch_estimate(x, y, k, r)
+                    if n == "subspace"
+                    else estimate_matmul(n, x, y, k, r)
+                ),
+                4,
+                4,
+                trials,
+                42,
+            )
+            for name in ("crs", "wtacrs", "subspace")
+        }
+        predicted = subspace_variance(x, y, k)
+        ratio = v["subspace"] / predicted
+        print(
+            f"  seed {seed}: wtacrs {v['wtacrs']:.3e} < crs {v['crs']:.3e}"
+            f" < subspace {v['subspace']:.3e}"
+            f" (sub/crs {v['subspace'] / v['crs']:.2f}, MC/analytic {ratio:.3f})"
+        )
+        assert v["wtacrs"] < v["crs"], v
+        assert v["subspace"] > 1.5 * v["crs"], v
+        assert 0.8 < ratio < 1.2, ratio
+        # Sanity: the closed forms predict the same ordering.
+        assert wtacrs_variance(x, y, k)[0] < crs_variance(x, y, k) < predicted
+
+
+# ---------------------------------------------------------------------------
+# Adaptive budget schedule mirror (runtime::native::adaptive_budgets)
+# ---------------------------------------------------------------------------
+
+
+def adaptive_budgets(pct, slot_per_sample, batch, znorms):
+    """None means 'fall back to the fixed schedule', exactly as in Rust."""
+    layers = len(slot_per_sample)
+    if layers == 0:
+        return None
+    n = [batch * ps for ps in slot_per_sample]
+    total = sum(k_for(pct, m) for m in n)
+    if total < layers or total > sum(n):
+        return None
+    mass, msum = [], 0.0
+    for layer in range(layers):
+        s = float(
+            sum(max(float(v), 0.0) for v in znorms[layer * batch : (layer + 1) * batch])
+        )
+        mass.append(s)
+        msum += s
+    if not msum > 0.0 or not math.isfinite(msum):
+        return None
+    k = [1] * layers
+    spread = total - layers
+    for layer in range(layers):
+        share = int(math.floor(spread * mass[layer] / msum))
+        k[layer] += min(share, n[layer] - k[layer])
+    assigned = sum(k)
+    while assigned < total:
+        best = None
+        for layer in range(layers):
+            heavier = best is None or mass[layer] > mass[best]
+            if k[layer] < n[layer] and heavier:
+                best = layer
+        if best is None:
+            return None
+        k[best] += 1
+        assigned += 1
+    return k
+
+
+def adaptive_pins():
+    banner("adaptive apportionment pins (rust unit vectors)")
+    b = 32
+    # Uniform mass reproduces the fixed plan exactly: 27 * 32/96 = 9.0.
+    assert adaptive_budgets(30, [1, 1, 1], b, [1.0] * 96) == [10, 10, 10]
+    assert adaptive_budgets(16, [1, 1, 1], b, [1.0] * 96) == [5, 5, 5]
+    # The skewed 3-layer case concentrates the spread on layer 2.
+    zn = [0.1] * b + [0.1] * b + [10.0] * b
+    plan = adaptive_budgets(30, [1, 1, 1], b, zn)
+    print(f"  skewed classic plan: {plan}")
+    assert plan == [1, 1, 28], plan
+    assert sum(plan) == 30 and max(plan) == plan[2]
+    # Degenerate caches fall back to the fixed schedule.
+    assert adaptive_budgets(30, [1, 1, 1], b, [0.0] * 96) is None
+    assert adaptive_budgets(30, [1, 1, 1], b, [math.inf] + [1.0] * 95) is None
+    # Transformer shape: 12 token-contracted trunk linears (4 tokens
+    # per sample) + 1 pooled head; the plan must sum to the fixed
+    # total 12 * 38 + 10 = 466 and respect each layer's cap.
+    slots = [4] * 12 + [1]
+    n = [b * ps for ps in slots]
+    total = sum(k_for(30, m) for m in n)
+    assert total == 466, total
+    zn = []
+    for layer in range(13):
+        zn += [float(layer + 1)] * b
+    plan = adaptive_budgets(30, slots, b, zn)
+    print(f"  transformer plan: {plan} (sum {sum(plan)})")
+    assert sum(plan) == 466
+    assert all(1 <= ki <= m for ki, m in zip(plan, n))
+
+
+def subspace_tape_pins():
+    banner("subspace tape pins (tiny classic full-subspace16)")
+    b = 32
+    r = k_for(16, b)
+    assert r == 5, r
+    per_layer = [r * d_in * 4 + 8 for d_in in (128, 256, 128)]
+    print(f"  rank {r}, per-layer saved bytes {per_layer}")
+    assert per_layer == [2568, 5128, 2568], per_layer
+
+
+if __name__ == "__main__":
+    subspace_tape_pins()
+    adaptive_pins()
+    subspace_closed_form()
+    subspace_unbiased()
+    family_ordering()
+    print("\ncheck_pr9: all mirrors agree")

@@ -25,7 +25,7 @@ fn main() {
         &"full-wtacrs30".parse().expect("method"),
         spec.n_out,
         train_ds.len(),
-        TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 },
+        TrainOptions { lr: 1e-3, max_steps: 0, ..Default::default() },
     )
     .expect("trainer");
 

@@ -22,6 +22,7 @@ fn main() {
             max_steps: common::glue_steps(),
             eval_every: 0,
             patience: 0,
+            ..Default::default()
         },
         ..Default::default()
     };

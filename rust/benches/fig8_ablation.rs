@@ -5,8 +5,48 @@
 mod common;
 
 use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::estimator::variance::{
+    crs_variance, measured_family_variances, subspace_variance, wtacrs_variance,
+};
+use wtacrs::estimator::Mat;
 use wtacrs::util::bench::Table;
 use wtacrs::util::json::{self, Json};
+use wtacrs::util::rng::Rng;
+
+/// Measured (Monte-Carlo) vs closed-form variance of each estimator
+/// family at equal budget on a norm-skewed synthetic instance — the
+/// apples-to-apples comparison behind the Fig-8 curves.
+fn family_variance_report(out: &mut Vec<Json>) {
+    let (m, k, trials) = (64usize, 20usize, 2000usize);
+    let mut rng = Rng::new(8);
+    let x = Mat::randn(4, m, &mut rng);
+    let mut y = Mat::randn(m, 4, &mut rng);
+    for i in 0..m {
+        let s = (-(rng.f64().max(1e-12)).ln()).powf(2.0) as f32;
+        for c in 0..y.cols {
+            *y.at_mut(i, c) *= s;
+        }
+    }
+    let v = measured_family_variances(&x, &y, k, trials, 42);
+    let (wta_pred, csize) = wtacrs_variance(&x, &y, k);
+    println!("\n== estimator-family variance (k = {k} of {m} pairs / sketch rank {k}) ==");
+    let mut t = Table::new(&["family", "measured Var", "predicted Var"]);
+    for (name, measured, predicted) in [
+        ("crs", v.crs, crs_variance(&x, &y, k)),
+        ("wtacrs", v.wtacrs, wta_pred),
+        ("subspace", v.subspace, subspace_variance(&x, &y, k)),
+    ] {
+        t.row(&[name.to_string(), format!("{measured:.3e}"), format!("{predicted:.3e}")]);
+        out.push(json::obj(vec![
+            ("family", json::s(name)),
+            ("budget", json::num(k as f64)),
+            ("measured_var", json::num(measured)),
+            ("predicted_var", json::num(predicted)),
+        ]));
+    }
+    t.print();
+    println!("(wtacrs winner set |C| = {csize}; lower is better at equal budget)");
+}
 
 fn main() {
     common::banner("fig8_ablation", "Fig 8 (estimator ablation @ 0.1)");
@@ -25,11 +65,12 @@ fn main() {
     };
     let eval_every = steps / 8;
     let opts = ExperimentOptions {
-        train: TrainOptions { lr: 1e-3, seed: 0, max_steps: steps, eval_every, patience: 0 },
+        train: TrainOptions { lr: 1e-3, max_steps: steps, eval_every, ..Default::default() },
         ..Default::default()
     };
     let methods = ["full", "full-wtacrs10", "full-crs10", "full-det10"];
     let mut out = vec![];
+    family_variance_report(&mut out);
     for task in &tasks {
         println!("\n== {task} (tiny, {steps} steps, eval every {eval_every}) ==");
         let mut rows = vec![];

@@ -29,6 +29,7 @@ pub const METHODS: &[&str] = &[
     "lora-wtacrs10",
     "full-crs10",
     "full-det10",
+    "full-subspace16",
 ];
 
 /// Per-family default learning rate, mirroring the paper's Appendix F
@@ -75,6 +76,12 @@ impl TaskResult {
                 json::arr(self.report.evals.iter().map(|&(s, m)| {
                     json::arr([json::num(s as f64), json::num(m)])
                 })),
+            ),
+            (
+                "layer_budgets",
+                json::arr(
+                    self.report.layer_budgets.iter().map(|&k| json::num(k as f64)),
+                ),
             ),
         ])
     }
@@ -170,6 +177,9 @@ pub struct LmResult {
     pub saved_bytes_per_layer: Vec<usize>,
     pub tape_bytes: usize,
     pub peak_saved_bytes: usize,
+    /// Realized per-layer estimator budgets of the last step (what the
+    /// budget schedule actually assigned).
+    pub layer_budgets: Vec<usize>,
 }
 
 impl LmResult {
@@ -187,6 +197,10 @@ impl LmResult {
             (
                 "losses",
                 json::arr(self.losses.iter().map(|&l| json::num(l as f64))),
+            ),
+            (
+                "layer_budgets",
+                json::arr(self.layer_budgets.iter().map(|&k| json::num(k as f64))),
             ),
         ])
     }
@@ -253,6 +267,7 @@ pub fn run_lm(
     cfg.seed = opts.train.seed;
     cfg.lr = opts.train.lr;
     cfg.model = opts.model;
+    cfg.schedule = opts.train.schedule;
     let session = backend.open(&cfg)?;
 
     let train_n = if opts.train_size > 0 { opts.train_size } else { 2048 };
@@ -312,6 +327,7 @@ pub fn run_lm(
         saved_bytes_per_layer: stats.per_layer,
         tape_bytes: stats.total,
         peak_saved_bytes: trainer.peak_saved_bytes(),
+        layer_budgets: stats.budgets,
     })
 }
 
@@ -383,9 +399,12 @@ mod tests {
             saved_bytes_per_layer: vec![],
             tape_bytes: 0,
             peak_saved_bytes: 0,
+            layer_budgets: vec![10, 10, 10],
         };
         let s = json::write(&r.to_json());
-        for needle in ["\"task\"", "\"lm\"", "\"nll\"", "\"ppl\"", "full-wtacrs30"] {
+        for needle in
+            ["\"task\"", "\"lm\"", "\"nll\"", "\"ppl\"", "full-wtacrs30", "\"layer_budgets\""]
+        {
             assert!(s.contains(needle), "{needle} missing from {s}");
         }
     }

@@ -202,6 +202,7 @@ pub fn options_json(o: &ExperimentOptions) -> Json {
         ("lr", json::num(o.train.lr as f64)),
         ("eval_every", json::num(o.train.eval_every as f64)),
         ("patience", json::num(o.train.patience as f64)),
+        ("budget_schedule", json::s(&o.train.schedule.to_string())),
         ("train_size", json::num(o.train_size as f64)),
         ("val_size", json::num(o.val_size as f64)),
         ("data_seed", json::num(o.data_seed as f64)),
@@ -1151,6 +1152,16 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("steps"), "missing changed key in: {e}");
+
+        // Scores trained under different budget schedules are not
+        // comparable: a resume must refuse to mix them.
+        let mut base3 = ExperimentOptions::default();
+        base3.train.schedule = crate::ops::BudgetSchedule::Adaptive;
+        let e = m
+            .check_compatible(&g, &options_json(&base3))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("budget_schedule") || e.contains("options"), "{e}");
     }
 
     #[test]

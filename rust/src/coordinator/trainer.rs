@@ -14,7 +14,7 @@ use crate::data::batcher::{Batch, Batcher};
 use crate::data::glue::Dataset;
 use crate::metrics::{self, MetricKind};
 use crate::nn::{ModelSpec, TapeStats};
-use crate::ops::MethodSpec;
+use crate::ops::{BudgetSchedule, MethodSpec};
 use crate::runtime::{Backend, HostTensor, SessionConfig, TrainSession};
 use crate::util::error::Result;
 
@@ -30,11 +30,22 @@ pub struct TrainOptions {
     pub eval_every: usize,
     /// Stop early when the eval metric hasn't improved for N evals (0 = off).
     pub patience: usize,
+    /// How per-layer estimator budgets are assigned (`fixed` keeps the
+    /// paper's global fraction; `adaptive` re-apportions the same total
+    /// by each layer's share of the cached gradient-norm mass).
+    pub schedule: BudgetSchedule,
 }
 
 impl Default for TrainOptions {
     fn default() -> Self {
-        TrainOptions { lr: 3e-4, seed: 0, max_steps: 300, eval_every: 0, patience: 0 }
+        TrainOptions {
+            lr: 3e-4,
+            seed: 0,
+            max_steps: 300,
+            eval_every: 0,
+            patience: 0,
+            schedule: BudgetSchedule::Fixed,
+        }
     }
 }
 
@@ -60,6 +71,10 @@ pub struct TrainReport {
     pub tape_bytes: usize,
     /// Peak over steps of the whole-tape measured bytes.
     pub peak_saved_bytes: usize,
+    /// Realized per-layer estimator budgets of the last step (pairs
+    /// kept / sketch rank per approximated linear) — what the budget
+    /// schedule actually assigned (`TapeStats::budgets`).
+    pub layer_budgets: Vec<usize>,
 }
 
 /// A live training session bound to an execution backend.
@@ -100,6 +115,7 @@ impl Trainer {
         cfg.seed = opts.seed;
         cfg.lr = opts.lr;
         cfg.model = model;
+        cfg.schedule = opts.schedule;
         let session = backend.open(&cfg)?;
         Ok(Self::from_session(session, n_samples, opts))
     }
@@ -271,6 +287,7 @@ impl Trainer {
             saved_bytes_per_layer: stats.per_layer,
             tape_bytes: stats.total,
             peak_saved_bytes: self.peak_saved_bytes,
+            layer_budgets: stats.budgets,
         })
     }
 

@@ -82,10 +82,45 @@
 //!    does not compile — it additionally needs the vendored `xla`
 //!    crate plus `make artifacts`.
 //!
-//! Method strings (`"full"`, `"lora-wtacrs30"`, ...) are parsed in
-//! exactly one place: [`ops::MethodSpec`], a typed
-//! `{ family, sampler: Option<{kind, budget}> }` value implementing
-//! `FromStr`/`Display` (round-trip).
+//! Method strings (`"full"`, `"lora-wtacrs30"`, `"full-subspace16"`,
+//! ...) are parsed in exactly one place: [`ops::MethodSpec`], a typed
+//! `{ family, estimator: EstimatorSpec }` value implementing
+//! `FromStr`/`Display` (round-trip).  The suffix names the estimator
+//! family — no suffix is the exact dense save,
+//! `wtacrs<pct>`/`crs<pct>`/`det<pct>` are the column-row samplers,
+//! `subspace<pct>` the Rademacher sketch — and an unknown suffix is
+//! rejected with an error that lists the valid families.
+//!
+//! ## The pluggable estimator interface
+//!
+//! The WTA-CRS operator is one point in a family of unbiased
+//! weight-gradient estimators, and the ops layer exposes the seam:
+//!
+//! * [`ops::Estimator`] — `forward(&H, &W, ctx) -> (Z, BoxedSaved)`
+//!   computes the exact `Z = H W` (every family keeps the forward
+//!   exact; only the *backward* estimate varies) and decides what to
+//!   save; the default `infer` method is the single shared tape-free
+//!   serving forward.  [`ops::EstCtx`] carries the cached gradient
+//!   norms, the per-step sampling RNG, and an optional per-layer
+//!   budget override.
+//! * [`ops::Saved`] — the saved state as a tape object:
+//!   `backward(dZ, W)` rebuilds `(dW, dH, refreshed_norms)` and
+//!   `saved_bytes()` *measures* what the implementation actually
+//!   holds, so Table-2 numbers stay honest per family.
+//! * Implementations: [`ops::SampledLinear`] (exact dense and the
+//!   column-row samplers) and [`ops::SubspaceEstimator`] — a
+//!   randomized Rademacher-sketch family saving a dense `r × d_in`
+//!   sketch plus an 8-byte seed; `ops::EstimatorSpec::build` maps the
+//!   parsed grammar onto a boxed estimator.
+//!
+//! Orthogonal to the family, [`ops::BudgetSchedule`] picks how
+//! per-layer budgets are assigned: `Fixed` keeps the paper's global
+//! fraction (bitwise-identical to the pre-trait trainer), `Adaptive`
+//! re-apportions the same summed budget by each layer's share of the
+//! cached gradient-norm mass (`wtacrs train --budget-schedule
+//! adaptive`; the realized budgets surface in [`nn::TapeStats`] and
+//! the train report).  `examples/quickstart.rs` §9 walks through
+//! adding a new family end to end.
 //!
 //! Run the suite offline with default features:
 //!

@@ -122,6 +122,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "0",
             "early-stop patience in evals (0 = off; GLUE tasks only)",
         )
+        .opt(
+            "budget-schedule",
+            "fixed",
+            "per-layer estimator budgets: fixed (the method's global fraction) or \
+             adaptive (re-apportion the same total by cached gradient-norm mass)",
+        )
         .opt("arch", "mlp", "trunk architecture (mlp|transformer|causal-lm)")
         .opt(
             "depth",
@@ -172,6 +178,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             max_steps: p.get_usize("steps")?,
             eval_every: p.get_usize("eval-every")?,
             patience: p.get_usize("patience")?,
+            schedule: p.get("budget-schedule").parse()?,
         },
         model,
         ..Default::default()
@@ -202,6 +209,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
                 res.tape_bytes as f64 / 1024.0,
                 res.saved_bytes_per_layer,
             );
+            println!("realized per-layer budgets: {:?}", res.layer_budgets);
         }
         let out = p.get("out");
         if !out.is_empty() {
@@ -237,6 +245,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             res.report.tape_bytes as f64 / 1024.0,
             res.report.saved_bytes_per_layer,
         );
+        println!("realized per-layer budgets: {:?}", res.report.layer_budgets);
     }
     let out = p.get("out");
     if !out.is_empty() {
@@ -576,6 +585,12 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         "token rows per sample for the Tokens contraction (causal-lm needs >= 2)",
     )
     .opt(
+        "budget-schedule",
+        "fixed",
+        "per-layer estimator budgets: fixed (each method's global fraction) or \
+         adaptive (re-apportion the same total by cached gradient-norm mass)",
+    )
+    .opt(
         "out",
         "results/sweep",
         "output directory (manifest.json, results.jsonl, merged.json)",
@@ -643,6 +658,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             max_steps: p.get_usize("steps")?,
             eval_every: 0,
             patience: 0,
+            schedule: p.get("budget-schedule").parse()?,
         },
         train_size: p.get_usize("train-size")?,
         val_size: p.get_usize("val-size")?,

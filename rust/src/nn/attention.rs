@@ -30,6 +30,7 @@
 
 use crate::bail;
 use crate::estimator::Mat;
+use crate::ops::Estimator;
 use crate::util::error::Result;
 
 use super::decode::DecodeState;
@@ -495,16 +496,15 @@ impl Module for ScaledDotProductAttention {
     fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
 }
 
-/// Multi-head attention: four sampled [`Linear`]s (q, k, v, proj — norm
+/// Multi-head attention: four op-run [`Linear`]s (q, k, v, proj — norm
 /// cache layer slots `base..=base+3`) around the per-head attention
 /// core.
 ///
-/// Tape discipline: the four linears push their sampled
-/// [`SavedContext`](crate::ops::SavedContext)s as usual (the WTA-CRS
-/// weight-gradient estimates), the attention weights are saved exactly,
-/// and the module keeps *one* full copy of its input from which Q, K
-/// and V are recomputed in backward — three cheap GEMMs instead of
-/// three cached `n × d` activations.
+/// Tape discipline: the four linears push their estimator save states
+/// as usual (the WTA-CRS / subspace weight-gradient estimates), the
+/// attention weights are saved exactly, and the module keeps *one* full
+/// copy of its input from which Q, K and V are recomputed in backward —
+/// three cheap GEMMs instead of three cached `n × d` activations.
 pub struct MultiHeadAttention {
     q: Linear,
     k: Linear,
@@ -518,10 +518,11 @@ pub struct MultiHeadAttention {
 impl MultiHeadAttention {
     /// `weights` are `[wq, wk, wv, wproj]`, all `(d, d)`; the four
     /// linears claim norm-cache layer slots `base..=base+3` (four
-    /// slots) in that order.
+    /// slots) in that order.  All four share the same estimator
+    /// configuration (`Clone` because each linear owns its copy).
     pub fn new(
         weights: [Mat; 4],
-        op: crate::ops::SampledLinear,
+        op: impl Estimator + Clone + 'static,
         base: usize,
         heads: usize,
         per_sample: usize,
@@ -540,9 +541,9 @@ impl MultiHeadAttention {
             }
         }
         Ok(MultiHeadAttention {
-            q: Linear::new(wq, op, base, true),
-            k: Linear::new(wk, op, base + 1, true),
-            v: Linear::new(wv, op, base + 2, true),
+            q: Linear::new(wq, op.clone(), base, true),
+            k: Linear::new(wk, op.clone(), base + 1, true),
+            v: Linear::new(wv, op.clone(), base + 2, true),
             proj: Linear::new(wp, op, base + 3, true),
             heads,
             per_sample,

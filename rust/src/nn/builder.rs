@@ -18,7 +18,7 @@
 
 use crate::bail;
 use crate::estimator::Mat;
-use crate::ops::{Contraction, Family, MethodSpec, SampledLinear};
+use crate::ops::{Contraction, Family, MethodSpec};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
@@ -122,10 +122,18 @@ pub struct StackDims {
 }
 
 /// A built graph plus the derived approx-layer count (the norm cache's
-/// row count).
+/// row count) and per-layer contraction geometry.
 pub struct BuiltModel {
     pub graph: Sequential,
     pub n_approx: usize,
+    /// Contraction rows *per sample* for each approx layer (norm-cache
+    /// slot order): `per_sample` for a `Tokens`-contracted trunk
+    /// linear, `1` for a `Rows`-contracted (pooled) head.  A batch of
+    /// `b` samples therefore gives layer `l` a contraction of length
+    /// `b * slot_per_sample[l]` — what an adaptive
+    /// [`BudgetSchedule`](crate::ops::BudgetSchedule) needs to convert
+    /// budget percentages into per-layer pair/rank counts.
+    pub slot_per_sample: Vec<usize>,
 }
 
 /// Assembles family graphs and deep stacks from `(dims, method, spec)`.
@@ -145,7 +153,7 @@ impl ModelBuilder {
     /// first, then trunk weights in layer order, then the head, then
     /// any adapters — the layout seeds and checkpoints rely on).
     pub fn build(&self, rng: &mut Rng) -> Result<BuiltModel> {
-        if self.method.family == Family::Lst && self.method.sampler.is_some() {
+        if self.method.family == Family::Lst && self.method.estimator.is_approx() {
             bail!("LST does not compose with a sampler");
         }
         let ps = self.spec.contraction.per_sample();
@@ -188,7 +196,7 @@ impl ModelBuilder {
     fn build_classic(&self, rng: &mut Rng) -> Result<BuiltModel> {
         let StackDims { vocab, seq, d_model: d, d_ff, n_out } = self.dims;
         let f = if self.spec.width > 0 { self.spec.width } else { d_ff };
-        let op = SampledLinear::new(self.method.sampler, self.spec.contraction);
+        let op = self.method.estimator.build(self.spec.contraction);
         let embed = Mat::randn(vocab, d, rng);
         let he_d = (2.0 / d as f64).sqrt() as f32;
         let he_f = (2.0 / f as f64).sqrt() as f32;
@@ -200,13 +208,13 @@ impl ModelBuilder {
                 let w3 = Mat::randn(d, n_out, rng).scale(head_d);
                 Sequential::new()
                     .push(MeanPoolEmbed::new(embed, seq, 1)?)
-                    .push(Linear::new(w1, op, 0, false))
+                    .push(Linear::new(w1, op.clone(), 0, false))
                     .push(Bias::new(f))
                     .push(Relu)
-                    .push(Linear::new(w2, op, 1, true))
+                    .push(Linear::new(w2, op.clone(), 1, true))
                     .push(Bias::new(d))
                     .push(Relu)
-                    .push(Linear::new(w3, op, 2, true))
+                    .push(Linear::new(w3, op.clone(), 2, true))
                     .push(Bias::new(n_out))
             }
             Family::Lora => {
@@ -223,7 +231,7 @@ impl ModelBuilder {
                         Mat::zeros(1, f),
                         a1,
                         Mat::zeros(LORA_RANK, f),
-                        op,
+                        op.clone(),
                         0,
                         false,
                     ))
@@ -233,12 +241,12 @@ impl ModelBuilder {
                         Mat::zeros(1, d),
                         a2,
                         Mat::zeros(LORA_RANK, d),
-                        op,
+                        op.clone(),
                         1,
                         true,
                     ))
                     .push(Relu)
-                    .push(Linear::new(w3, op, 2, true))
+                    .push(Linear::new(w3, op.clone(), 2, true))
                     .push(Bias::new(n_out))
             }
             Family::Lst => {
@@ -248,15 +256,18 @@ impl ModelBuilder {
                     Mat::randn(ds, n_out, rng).scale((1.0 / ds as f64).sqrt() as f32);
                 Sequential::new()
                     .push(MeanPoolEmbed::new(embed, seq, 1)?)
-                    .push(Linear::new(s1, op, 0, false))
+                    .push(Linear::new(s1, op.clone(), 0, false))
                     .push(Bias::new(ds))
                     .push(Relu)
-                    .push(Linear::new(s2, op, 1, true))
+                    .push(Linear::new(s2, op.clone(), 1, true))
                     .push(Bias::new(n_out))
             }
         };
         let n_approx = graph.n_approx();
-        Ok(BuiltModel { graph, n_approx })
+        // Classic graphs contract over batch rows: one row per sample
+        // at every approx layer.
+        let slot_per_sample = vec![1; n_approx];
+        Ok(BuiltModel { graph, n_approx, slot_per_sample })
     }
 
     /// The token-contracted deep stack (`depth >= 1`).
@@ -268,8 +279,8 @@ impl ModelBuilder {
         if self.method.family == Family::Lst {
             width = (width / LST_FACTOR).max(1);
         }
-        let trunk_op = SampledLinear::new(self.method.sampler, self.spec.contraction);
-        let head_op = SampledLinear::new(self.method.sampler, Contraction::Rows);
+        let trunk_op = self.method.estimator.build(self.spec.contraction);
+        let head_op = self.method.estimator.build(Contraction::Rows);
 
         // Draw order: embed, trunk weights 0..depth, head, adapters.
         let embed = Mat::randn(vocab, d, rng);
@@ -290,7 +301,7 @@ impl ModelBuilder {
             Family::Full | Family::Lst => {
                 for (l, w) in trunk_w.into_iter().enumerate() {
                     graph = graph
-                        .push(Linear::new(w, trunk_op, l, l > 0))
+                        .push(Linear::new(w, trunk_op.clone(), l, l > 0))
                         .push(Bias::new(width))
                         .push(Relu);
                 }
@@ -310,7 +321,7 @@ impl ModelBuilder {
                             Mat::zeros(1, width),
                             a,
                             Mat::zeros(LORA_RANK, width),
-                            trunk_op,
+                            trunk_op.clone(),
                             l,
                             l > 0,
                         ))
@@ -323,7 +334,12 @@ impl ModelBuilder {
             .push(Linear::new(head, head_op, depth, true))
             .push(Bias::new(n_out));
         let n_approx = graph.n_approx();
-        Ok(BuiltModel { graph, n_approx })
+        // Trunk layers contract over token rows; the pooled head is
+        // back to one row per sample.
+        let mut slot_per_sample = vec![ps; depth];
+        slot_per_sample.push(1);
+        debug_assert_eq!(slot_per_sample.len(), n_approx);
+        Ok(BuiltModel { graph, n_approx, slot_per_sample })
     }
 
     /// The pre-norm transformer stack (`Arch::Transformer` and
@@ -365,8 +381,8 @@ impl ModelBuilder {
             );
         }
         let f = if self.spec.width > 0 { self.spec.width } else { d_ff };
-        let op = SampledLinear::new(self.method.sampler, self.spec.contraction);
-        let head_op = SampledLinear::new(self.method.sampler, Contraction::Rows);
+        let op = self.method.estimator.build(self.spec.contraction);
+        let head_op = self.method.estimator.build(Contraction::Rows);
 
         // Draw order: embed, per block (wq, wk, wv, wproj, ff1, ff2),
         // head — mirrored by python/mirror/nn_attention.py (pooled) and
@@ -384,13 +400,14 @@ impl ModelBuilder {
             let wp = Mat::randn(d, d, rng).scale(attn_scale);
             let w1 = Mat::randn(d, f, rng).scale(ff1_scale);
             let w2 = Mat::randn(f, d, rng).scale(ff2_scale);
-            let mha = MultiHeadAttention::new([wq, wk, wv, wp], op, base, heads, ps)?
-                .with_causal(causal);
+            let mha =
+                MultiHeadAttention::new([wq, wk, wv, wp], op.clone(), base, heads, ps)?
+                    .with_causal(causal);
             let ffn = Sequential::new()
-                .push(Linear::new(w1, op, base + 4, true))
+                .push(Linear::new(w1, op.clone(), base + 4, true))
                 .push(Bias::new(f))
                 .push(Relu)
-                .push(Linear::new(w2, op, base + 5, true))
+                .push(Linear::new(w2, op.clone(), base + 5, true))
                 .push(Bias::new(d));
             graph = graph.push(TransformerBlock::new(mha, ffn));
         }
@@ -399,7 +416,7 @@ impl ModelBuilder {
             // Token-axis LM head: per-token logits straight off the
             // token rows, sampled under the same Tokens contraction as
             // the trunk (cache slot depth*6 broadcasts per sample).
-            graph.push(LmHead::new(head, op, depth * 6))
+            graph.push(LmHead::new(head, op.clone(), depth * 6))
         } else {
             graph
                 .push(MeanPool::new(ps)?)
@@ -407,7 +424,13 @@ impl ModelBuilder {
                 .push(Bias::new(n_out))
         };
         let n_approx = graph.n_approx();
-        Ok(BuiltModel { graph, n_approx })
+        // Every trunk linear (q/k/v/proj + ffn) contracts over token
+        // rows; the pooled classifier head is one row per sample, the
+        // token-axis LM head keeps the token rows.
+        let mut slot_per_sample = vec![ps; 6 * depth];
+        slot_per_sample.push(if causal { ps } else { 1 });
+        debug_assert_eq!(slot_per_sample.len(), n_approx);
+        Ok(BuiltModel { graph, n_approx, slot_per_sample })
     }
 }
 
@@ -425,13 +448,19 @@ mod tests {
 
     #[test]
     fn classic_families_layer_counts() {
-        for (method, n_approx, n_params) in
-            [("full", 3, 6), ("full-wtacrs30", 3, 6), ("lora", 3, 6), ("lst", 2, 4)]
-        {
+        for (method, n_approx, n_params) in [
+            ("full", 3, 6),
+            ("full-wtacrs30", 3, 6),
+            ("full-subspace16", 3, 6),
+            ("lora", 3, 6),
+            ("lora-subspace30", 3, 6),
+            ("lst", 2, 4),
+        ] {
             let b = ModelBuilder::new(dims(), m(method), ModelSpec::default());
             let built = b.build(&mut Rng::new(0)).unwrap();
             assert_eq!(built.n_approx, n_approx, "{method}");
             assert_eq!(built.graph.n_params(), n_params, "{method}");
+            assert_eq!(built.slot_per_sample, vec![1; n_approx], "{method}");
         }
     }
 
@@ -449,6 +478,10 @@ mod tests {
             assert_eq!(built.n_approx, depth + 1);
             // depth * (linear + bias) + head linear + head bias
             assert_eq!(built.graph.n_params(), 2 * depth + 2);
+            // token-contracted trunk, pooled (per-sample) head
+            let mut want = vec![4usize; depth];
+            want.push(1);
+            assert_eq!(built.slot_per_sample, want);
         }
     }
 
@@ -547,6 +580,9 @@ mod tests {
             let built = b.build(&mut Rng::new(0)).unwrap();
             assert_eq!(built.n_approx, 6 * depth + 1, "depth {depth}");
             assert_eq!(built.graph.n_params(), 8 * depth + 2, "depth {depth}");
+            let mut want = vec![4usize; 6 * depth];
+            want.push(1); // pooled classifier head
+            assert_eq!(built.slot_per_sample, want, "depth {depth}");
         }
     }
 
@@ -564,6 +600,9 @@ mod tests {
             let built = b.build(&mut Rng::new(0)).unwrap();
             assert_eq!(built.n_approx, 6 * depth + 1, "depth {depth}");
             assert_eq!(built.graph.n_params(), 8 * depth + 2, "depth {depth}");
+            let mut want = vec![4usize; 6 * depth];
+            want.push(4); // token-axis LM head keeps the token rows
+            assert_eq!(built.slot_per_sample, want, "depth {depth}");
         }
     }
 

@@ -5,18 +5,19 @@
 //!   (the token front-end; `per_sample` chunks per row feed the
 //!   `Tokens` contraction, `per_sample = 1` is the classic pooled
 //!   encoder).
-//! * [`Linear`] — a (possibly sampled) [`SampledLinear`] weight GEMM
+//! * [`Linear`] — a weight GEMM run through a pluggable
+//!   [`Estimator`] (exact, WTA-CRS sampled, subspace sketched, ...)
 //!   holding one norm-cache layer slot.
 //! * [`Bias`], [`Relu`] — the elementwise pieces; ReLU saves a packed
 //!   1-bit sign mask instead of the float pre-activation.
 //! * [`LoraAdapter`] — frozen trunk linear + trainable low-rank side
-//!   path whose B GEMM runs through the sampled op.
+//!   path whose B GEMM runs through the estimator.
 //! * [`MeanPool`] — collapses each sample's token rows back to one row
 //!   ahead of the classifier head.
 
 use crate::bail;
 use crate::estimator::Mat;
-use crate::ops::SampledLinear;
+use crate::ops::{EstCtx, Estimator};
 use crate::util::error::Result;
 
 use super::decode::DecodeState;
@@ -177,12 +178,12 @@ impl Module for MeanPoolEmbed {
     }
 }
 
-/// A trainable linear whose weight-gradient GEMM runs through
-/// [`SampledLinear`], holding norm-cache layer slot `layer`.
+/// A trainable linear whose weight-gradient GEMM runs through a
+/// pluggable [`Estimator`], holding norm-cache layer slot `layer`.
 #[derive(Debug, Clone)]
 pub struct Linear {
     pub p: Param,
-    op: SampledLinear,
+    op: Box<dyn Estimator>,
     layer: usize,
     input_grad: bool,
 }
@@ -191,8 +192,8 @@ impl Linear {
     /// `input_grad: false` skips the `dZ Wᵀ` GEMM — for the first
     /// trainable layer over a frozen encoder, whose input gradient
     /// nothing consumes.
-    pub fn new(w: Mat, op: SampledLinear, layer: usize, input_grad: bool) -> Self {
-        Linear { p: Param::new(w), op, layer, input_grad }
+    pub fn new(w: Mat, op: impl Estimator + 'static, layer: usize, input_grad: bool) -> Self {
+        Linear { p: Param::new(w), op: Box::new(op), layer, input_grad }
     }
 }
 
@@ -204,15 +205,17 @@ impl Module for Linear {
     fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
         if ctx.training() {
             let zn = ctx.layer_norms(self.layer)?;
-            let (z, sctx) = self.op.forward(&x, &self.p.w, zn, &mut ctx.rng)?;
+            let budget = ctx.layer_budget(self.layer);
+            let ectx = EstCtx::new(zn, &mut ctx.rng, budget);
+            let (z, sctx) = self.op.forward(&x, &self.p.w, ectx)?;
             if let Some(tape) = ctx.tape.as_deref_mut() {
                 tape.push(self.name(), Saved::Linear { layer: self.layer, ctx: sctx });
             }
             Ok(z)
         } else {
-            // Serving path: the op's no-save forward — same GEMM, no
-            // context allocation, no RNG draw.
-            self.op.forward_infer(&x, &self.p.w)
+            // Serving path: the shared no-save estimator forward — same
+            // GEMM, no context allocation, no RNG draw.
+            self.op.infer(&x, &self.p.w)
         }
     }
 
@@ -317,7 +320,7 @@ impl Module for Relu {
 }
 
 /// Frozen trunk linear + trainable rank-r adapter (`y = x Wf + bf +
-/// (x A) B`), the B GEMM running through [`SampledLinear`].
+/// (x A) B`), the B GEMM running through a pluggable [`Estimator`].
 ///
 /// The adapter input is genuinely needed for `dA = xᵀ (dZ Bᵀ)`, so the
 /// tape keeps it as a full activation — measured honestly by
@@ -328,9 +331,9 @@ pub struct LoraAdapter {
     frozen_b: Mat,
     /// Down-projection (d_in, r); trained exactly.
     pub a: Param,
-    /// Up-projection (r, d_out); its weight-gradient GEMM is sampled.
+    /// Up-projection (r, d_out); its weight-gradient GEMM is estimated.
     pub b: Param,
-    op: SampledLinear,
+    op: Box<dyn Estimator>,
     layer: usize,
     input_grad: bool,
 }
@@ -341,7 +344,7 @@ impl LoraAdapter {
         frozen_b: Mat,
         a: Mat,
         b: Mat,
-        op: SampledLinear,
+        op: impl Estimator + 'static,
         layer: usize,
         input_grad: bool,
     ) -> Self {
@@ -350,7 +353,7 @@ impl LoraAdapter {
             frozen_b,
             a: Param::new(a),
             b: Param::new(b),
-            op,
+            op: Box::new(op),
             layer,
             input_grad,
         }
@@ -368,14 +371,16 @@ impl Module for LoraAdapter {
         let xa = x.matmul(&self.a.w);
         if ctx.training() {
             let zn = ctx.layer_norms(self.layer)?;
-            let (adj, sctx) = self.op.forward(&xa, &self.b.w, zn, &mut ctx.rng)?;
+            let budget = ctx.layer_budget(self.layer);
+            let ectx = EstCtx::new(zn, &mut ctx.rng, budget);
+            let (adj, sctx) = self.op.forward(&xa, &self.b.w, ectx)?;
             z.add_assign(&adj);
             if let Some(tape) = ctx.tape.as_deref_mut() {
                 tape.push(self.name(), Saved::Linear { layer: self.layer, ctx: sctx });
                 tape.push(self.name(), Saved::Acts(x));
             }
         } else {
-            z.add_assign(&self.op.forward_infer(&xa, &self.b.w)?);
+            z.add_assign(&self.op.infer(&xa, &self.b.w)?);
         }
         Ok(z)
     }
@@ -483,7 +488,7 @@ impl Module for MeanPool {
     fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
 }
 
-/// Token-axis language-model head: one sampled [`Linear`] applied to
+/// Token-axis language-model head: one op-run [`Linear`] applied to
 /// every token row (producing per-token vocabulary logits) plus a
 /// trainable bias row — *no* pooling, because causal-LM supervision is
 /// per token.
@@ -501,7 +506,7 @@ pub struct LmHead {
 
 impl LmHead {
     /// `w` is `(d_model, vocab)`; `layer` is the head's norm-cache slot.
-    pub fn new(w: Mat, op: SampledLinear, layer: usize) -> Self {
+    pub fn new(w: Mat, op: impl Estimator + 'static, layer: usize) -> Self {
         let n_out = w.cols;
         LmHead { lin: Linear::new(w, op, layer, true), bias: Bias::new(n_out) }
     }
@@ -557,6 +562,7 @@ impl Module for LmHead {
 mod tests {
     use super::*;
     use crate::nn::tape::Tape;
+    use crate::ops::SampledLinear;
     use crate::util::rng::Rng;
 
     fn eval_fwd(m: &dyn Module, x: Mat) -> Mat {

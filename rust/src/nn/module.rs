@@ -42,7 +42,8 @@ impl Param {
 }
 
 /// Forward-walk context: the tape (training only), the gathered
-/// gradient-norm cache block, and the per-step sampling RNG.
+/// gradient-norm cache block, the per-step sampling RNG, and an
+/// optional adaptive per-layer budget plan.
 pub struct ForwardCtx<'a> {
     /// `Some` = training (modules save state, sampled ops consume the
     /// RNG); `None` = inference (exact GEMMs, nothing saved).
@@ -53,21 +54,40 @@ pub struct ForwardCtx<'a> {
     pub slots: usize,
     /// Per-step sampling RNG (consumed only by sampling ops).
     pub rng: Rng,
+    /// Adaptive per-layer estimator budgets, indexed by approx-layer
+    /// slot.  `None` (the default, and always in eval mode) means every
+    /// layer applies its spec's own fixed budget — bitwise-identical to
+    /// the pre-schedule trainer.
+    pub budgets: Option<&'a [usize]>,
 }
 
 impl<'a> ForwardCtx<'a> {
     /// Training-mode context over a tape and a gathered norm block.
     pub fn train(tape: &'a mut Tape, znorms: &'a [f32], slots: usize, rng: Rng) -> Self {
-        ForwardCtx { tape: Some(tape), znorms, slots, rng }
+        ForwardCtx { tape: Some(tape), znorms, slots, rng, budgets: None }
+    }
+
+    /// Attach an adaptive per-layer budget plan (one entry per
+    /// approx-layer slot; layers beyond the plan fall back to their
+    /// fixed budget).
+    pub fn with_budgets(mut self, budgets: &'a [usize]) -> Self {
+        self.budgets = Some(budgets);
+        self
     }
 
     /// Inference-mode context: no tape, no norms, no sampling.
     pub fn eval() -> Self {
-        ForwardCtx { tape: None, znorms: &[], slots: 0, rng: Rng::new(0) }
+        ForwardCtx { tape: None, znorms: &[], slots: 0, rng: Rng::new(0), budgets: None }
     }
 
     pub fn training(&self) -> bool {
         self.tape.is_some()
+    }
+
+    /// The adaptive budget for one approx layer, if a plan is active
+    /// and covers that slot.
+    pub fn layer_budget(&self, layer: usize) -> Option<usize> {
+        self.budgets.and_then(|b| b.get(layer).copied())
     }
 
     /// The norm-cache slice for one approximated layer.  Returns the

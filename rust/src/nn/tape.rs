@@ -11,7 +11,7 @@
 //! packed 1-bit ReLU sign masks.
 
 use crate::estimator::Mat;
-use crate::ops::SavedContext;
+use crate::ops::BoxedSaved;
 use crate::util::error::Result;
 use crate::{anyhow, bail};
 
@@ -75,10 +75,11 @@ impl BitMask {
 /// One module's saved-for-backward state.
 #[derive(Debug, Clone)]
 pub enum Saved {
-    /// A linear op's saved context (sub-sampled pairs, or the full
-    /// activation on the exact path), tagged with its approx-layer slot
-    /// in the gradient-norm cache.
-    Linear { layer: usize, ctx: SavedContext },
+    /// A linear op's saved estimator state (sub-sampled pairs, a
+    /// sketch, or the full activation on the exact path) as a boxed
+    /// [`crate::ops::Saved`] trait object, tagged with its approx-layer
+    /// slot in the gradient-norm cache.
+    Linear { layer: usize, ctx: BoxedSaved },
     /// A full activation matrix a module genuinely has to keep (e.g.
     /// the input a LoRA adapter needs for its A-gradient).
     Acts(Mat),
@@ -118,12 +119,17 @@ pub struct TapeEntry {
 /// Measured memory accounting of one training step's tape.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct TapeStats {
-    /// `SavedContext::saved_bytes` per approximated (op-run) linear,
-    /// indexed by its norm-cache layer slot (forward order).
+    /// `Saved::saved_bytes` per approximated (op-run) linear, indexed
+    /// by its norm-cache layer slot (forward order).
     pub per_layer: Vec<usize>,
     /// Total bytes of *everything* saved for backward: linear contexts,
     /// kept activations, packed ReLU masks.
     pub total: usize,
+    /// Realized estimator budget per approximated linear (column-row
+    /// pairs kept, sketch rank, or the contraction length on an exact
+    /// save), same slot indexing as `per_layer` — what a
+    /// [`crate::ops::BudgetSchedule`] actually assigned this step.
+    pub budgets: Vec<usize>,
 }
 
 /// LIFO store of module-saved state for one forward/backward pass.
@@ -203,18 +209,21 @@ impl Tape {
         self.entries.iter().map(|e| e.saved.bytes()).sum()
     }
 
-    /// Full accounting snapshot: per approx-layer linear bytes (slots
-    /// beyond `n_layers` are ignored) plus the all-entries total.
+    /// Full accounting snapshot: per approx-layer linear bytes and
+    /// realized budgets (slots beyond `n_layers` are ignored) plus the
+    /// all-entries total.
     pub fn stats(&self, n_layers: usize) -> TapeStats {
         let mut per_layer = vec![0usize; n_layers];
+        let mut budgets = vec![0usize; n_layers];
         for e in &self.entries {
             if let Saved::Linear { layer, ctx } = &e.saved {
                 if *layer < n_layers {
                     per_layer[*layer] = ctx.saved_bytes();
+                    budgets[*layer] = ctx.k();
                 }
             }
         }
-        TapeStats { per_layer, total: self.saved_bytes() }
+        TapeStats { per_layer, total: self.saved_bytes(), budgets }
     }
 }
 

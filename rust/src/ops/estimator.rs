@@ -1,0 +1,587 @@
+//! Pluggable gradient-estimator interface — the ops layer's seam.
+//!
+//! The paper's WTA-CRS operator is one point in a design space of
+//! unbiased low-variance estimators for the backward weight-gradient
+//! GEMM `dW = Hᵀ dZ`.  This module turns that point into a family:
+//!
+//! * [`Estimator`] — `forward(&H, &W, ctx) -> (Z, BoxedSaved)` computes
+//!   the exact `Z = H W` and decides *what to save* for backward; the
+//!   default [`Estimator::infer`] method is the shared tape-free
+//!   serving forward (exact GEMM, nothing saved, no RNG draw).
+//! * [`Saved`] — what one forward saved, as a trait object on the tape:
+//!   `backward(dZ, W) -> (dH, dW, refreshed_norms)` rebuilds the
+//!   (estimated) weight gradient, and [`Saved::saved_bytes`] *measures*
+//!   the bytes the implementation actually holds.
+//! * Implementations: [`crate::ops::SampledLinear`] (exact dense when
+//!   `sampler: None`, WTA-CRS/CRS/Det column-row sampling otherwise)
+//!   and [`SubspaceEstimator`] here — a randomized Rademacher-sketch
+//!   family with a genuinely different save shape (a dense `r × d_in`
+//!   sketch plus an 8-byte seed instead of k selected pairs).
+//! * [`EstimatorSpec::build`] maps the parsed method grammar
+//!   (`full-wtacrs30`, `full-subspace16`, ...) onto a boxed estimator.
+//!
+//! [`EstCtx`] carries the per-call context: the layer's cached gradient
+//! norms, the sampling RNG, and an optional per-layer budget override
+//! `k` from an adaptive [`crate::ops::BudgetSchedule`] (`None` means
+//! the estimator applies its own spec-derived budget — the fixed
+//! schedule, bitwise-identical to the pre-trait operator).
+
+use crate::bail;
+use crate::estimator::Mat;
+use crate::util::error::Result;
+use crate::util::rng::Rng;
+
+use super::sampled_linear::{slot_norms, Contraction, LinearBackward, SampledLinear};
+use super::spec::EstimatorSpec;
+
+/// Per-call context an [`Estimator::forward`] runs under.
+///
+/// Borrows the caller's norm-cache slice and sampling RNG (the RNG
+/// stream position is part of the training state — estimators must
+/// consume draws only when they actually randomize).  `k` is an
+/// optional per-layer budget override from an adaptive schedule;
+/// `None` means "use the spec's own budget" and reproduces the fixed
+/// schedule bit for bit.
+#[derive(Debug)]
+pub struct EstCtx<'a> {
+    /// Cached gradient norms, one per contraction cache slot.
+    pub znorms: &'a [f32],
+    /// The per-step sampling RNG stream.
+    pub rng: &'a mut Rng,
+    /// Adaptive per-layer budget override (pairs / sketch rank).
+    pub k: Option<usize>,
+}
+
+impl<'a> EstCtx<'a> {
+    pub fn new(znorms: &'a [f32], rng: &'a mut Rng, k: Option<usize>) -> Self {
+        EstCtx { znorms, rng, k }
+    }
+}
+
+/// What one estimator forward saved for backward, as a tape object.
+///
+/// Mirrors the concrete `SavedContext` surface so the WTA-CRS path is
+/// a pure delegation; `selection` defaults to `None` for families
+/// (like the subspace sketch) that keep no per-pair selection.
+pub trait Saved: std::fmt::Debug + Send {
+    /// Reconstruct `(dW, dH, refreshed_norms)` from the saved state,
+    /// the upstream gradient, and the weight the forward ran with.
+    fn backward(&self, dz: &Mat, w: &Mat) -> LinearBackward;
+
+    /// Backward without the input gradient (`dH` GEMM skipped).
+    fn backward_dw(&self, dz: &Mat) -> (Mat, Vec<f32>);
+
+    /// Bytes of activation storage this save actually holds.
+    fn saved_bytes(&self) -> usize;
+
+    /// Bytes a full (unsampled) save of the same activation would take.
+    fn full_bytes(&self) -> usize;
+
+    /// Realized budget: column-row pairs kept, sketch rank, or the
+    /// whole contraction length on an exact save.
+    fn k(&self) -> usize;
+
+    /// The (indices, scales) selection, where one exists.
+    fn selection(&self) -> Option<(&[u32], &[f32])> {
+        None
+    }
+
+    /// Clone into a fresh box (trait objects cannot derive `Clone`).
+    fn clone_saved(&self) -> BoxedSaved;
+}
+
+/// A boxed [`Saved`] — the type the `nn` tape stores.
+pub type BoxedSaved = Box<dyn Saved>;
+
+impl Clone for BoxedSaved {
+    fn clone(&self) -> Self {
+        self.clone_saved()
+    }
+}
+
+/// A pluggable weight-gradient estimator behind one interface.
+///
+/// `forward` computes the exact `Z = H W` (every family keeps the
+/// forward exact — only the *backward* estimate varies) and returns
+/// the saved state for backward.  The default [`Self::infer`] is the
+/// single shared serving/eval forward: the exact GEMM with nothing
+/// saved and zero RNG draws.
+pub trait Estimator: std::fmt::Debug + Send {
+    /// Training forward: exact `Z = H W` plus the saved backward state.
+    fn forward(&self, h: &Mat, w: &Mat, ctx: EstCtx<'_>) -> Result<(Mat, BoxedSaved)>;
+
+    /// Inference forward: exact `Z = H W`, nothing saved, no RNG draw.
+    ///
+    /// Shared by every family — an estimator only overrides this to
+    /// keep an implementation-specific error path (the WTA-CRS op
+    /// reports under its historical `forward_infer` name).
+    fn infer(&self, h: &Mat, w: &Mat) -> Result<Mat> {
+        if h.cols != w.rows {
+            bail!(
+                "ops::Estimator::infer: H (.. x {}) does not contract against \
+                 W ({} x ..)",
+                h.cols,
+                w.rows
+            );
+        }
+        Ok(h.matmul(w))
+    }
+
+    /// Clone into a fresh box (trait objects cannot derive `Clone`).
+    fn clone_estimator(&self) -> Box<dyn Estimator>;
+}
+
+impl Clone for Box<dyn Estimator> {
+    fn clone(&self) -> Self {
+        self.clone_estimator()
+    }
+}
+
+/// A boxed estimator is itself an estimator, so constructors taking
+/// `impl Estimator` accept both concrete ops and `EstimatorSpec::build`
+/// output transparently.
+impl Estimator for Box<dyn Estimator> {
+    fn forward(&self, h: &Mat, w: &Mat, ctx: EstCtx<'_>) -> Result<(Mat, BoxedSaved)> {
+        (**self).forward(h, w, ctx)
+    }
+
+    fn infer(&self, h: &Mat, w: &Mat) -> Result<Mat> {
+        (**self).infer(h, w)
+    }
+
+    fn clone_estimator(&self) -> Box<dyn Estimator> {
+        (**self).clone_estimator()
+    }
+}
+
+impl EstimatorSpec {
+    /// Build the boxed estimator this spec names, over `contraction`.
+    pub fn build(self, contraction: Contraction) -> Box<dyn Estimator> {
+        match self {
+            EstimatorSpec::Exact => Box::new(SampledLinear::new(None, contraction)),
+            EstimatorSpec::Sampled(sp) => {
+                Box::new(SampledLinear::new(Some(sp), contraction))
+            }
+            EstimatorSpec::Subspace(sp) => {
+                Box::new(SubspaceEstimator::new(sp.budget, contraction))
+            }
+        }
+    }
+}
+
+/// Randomized-subspace estimator: sketch the contraction axis with a
+/// Rademacher matrix instead of selecting column-row pairs.
+///
+/// Forward draws one seed, materializes `S` (`r × n`, entries
+/// `±1/√r`) row by row from it, and saves only `S H` (`r × d_in`) plus
+/// the 8-byte seed.  Backward regenerates `S` from the seed and
+/// rebuilds `dW = (S H)ᵀ (S dZ)`; since `E[Sᵀ S] = I`, the estimate is
+/// unbiased: `E[dW] = Hᵀ dZ`.  `dH = dZ Wᵀ` stays exact, and the
+/// refreshed cache norms are computed exactly from `dZ` (the sketch
+/// compresses the *activation*, not the gradient, so Algorithm 1's
+/// cache loses nothing).
+///
+/// The budget is a percentage of the contraction length, exactly like
+/// the sampler families: `full-subspace16` sketches to
+/// `r = round(0.16 · n)` rows, so at equal budgets the sketch holds
+/// the same activation bytes as WTA-CRS holds pairs — a
+/// memory-matched comparison point with a genuinely different
+/// save/backward shape.
+#[derive(Debug, Clone, Copy)]
+pub struct SubspaceEstimator {
+    /// Sketch rank as a percentage of the contraction length (1..=100).
+    pub budget: u8,
+    pub contraction: Contraction,
+}
+
+impl SubspaceEstimator {
+    pub fn new(budget: u8, contraction: Contraction) -> Self {
+        SubspaceEstimator { budget, contraction }
+    }
+
+    /// Sketch rank for a contraction length of `m` (same rounding and
+    /// `>= 1` clamp rule as `SamplerSpec::k_for`).
+    pub fn rank_for(&self, m: usize) -> usize {
+        (((self.budget as f64 / 100.0) * m as f64).round() as usize).clamp(1, m)
+    }
+}
+
+/// Walk the Rademacher sketch rows of `S` (`r × rows(x)`, entries
+/// `±1/√r`) in a fixed row-major sign order from `seed`, accumulating
+/// `S · x`.  Forward (over `H`) and backward (over `dZ`) call this
+/// with the same seed, so they see the identical sketch without ever
+/// storing it.
+fn sketch_apply(seed: u64, r: usize, x: &Mat) -> Mat {
+    let scale = 1.0f32 / (r as f32).sqrt();
+    let mut srng = Rng::new(seed);
+    let mut out = Mat::zeros(r, x.cols);
+    for i in 0..r {
+        let dst = &mut out.data[i * x.cols..(i + 1) * x.cols];
+        for j in 0..x.rows {
+            let s = if srng.next_u64() >> 63 == 0 { scale } else { -scale };
+            for (d, &v) in dst.iter_mut().zip(x.row(j)) {
+                *d += s * v;
+            }
+        }
+    }
+    out
+}
+
+impl Estimator for SubspaceEstimator {
+    fn forward(&self, h: &Mat, w: &Mat, ctx: EstCtx<'_>) -> Result<(Mat, BoxedSaved)> {
+        if h.cols != w.rows {
+            bail!(
+                "ops::SubspaceEstimator::forward: H (.. x {}) does not contract \
+                 against W ({} x ..)",
+                h.cols,
+                w.rows
+            );
+        }
+        let n = h.rows;
+        let ps = self.contraction.per_sample();
+        if ps == 0 {
+            bail!(
+                "ops::SubspaceEstimator::forward: Tokens {{ per_sample: 0 }} is \
+                 not a valid contraction"
+            );
+        }
+        if n == 0 || n % ps != 0 {
+            bail!(
+                "ops::SubspaceEstimator::forward: H rows {n} not a (non-zero) \
+                 multiple of per_sample {ps}"
+            );
+        }
+        if ctx.znorms.len() != n / ps {
+            bail!(
+                "ops::SubspaceEstimator::forward: {} znorms entries for {} \
+                 cache slots (one per contraction sample)",
+                ctx.znorms.len(),
+                n / ps
+            );
+        }
+        let r = match ctx.k {
+            Some(0) => bail!(
+                "ops::SubspaceEstimator::forward: budget override k = 0 on a \
+                 contraction of length {n} (the sketch needs rank >= 1)"
+            ),
+            Some(k) => k.min(n),
+            None => self.rank_for(n),
+        };
+        let z = h.matmul(w);
+        // One draw for the sketch seed; the r*n signs come from a
+        // derived stream, so the per-step RNG advances by exactly one
+        // draw per layer regardless of the sketch rank.
+        let seed = ctx.rng.next_u64();
+        let sh = sketch_apply(seed, r, h);
+        let saved = SubspaceSaved {
+            sh,
+            seed,
+            contraction: self.contraction,
+            n,
+            d_out: w.cols,
+        };
+        Ok((z, Box::new(saved)))
+    }
+
+    fn clone_estimator(&self) -> Box<dyn Estimator> {
+        Box::new(*self)
+    }
+}
+
+/// The subspace estimator's saved state: the sketched activation plus
+/// the seed that regenerates the sketch in backward.
+#[derive(Debug, Clone)]
+pub struct SubspaceSaved {
+    /// `S H` — the sketched activation (`r × d_in`).
+    sh: Mat,
+    /// Seed regenerating the Rademacher signs of `S`.
+    seed: u64,
+    contraction: Contraction,
+    /// Contraction length (rows of the original `H`).
+    n: usize,
+    d_out: usize,
+}
+
+impl Saved for SubspaceSaved {
+    fn backward(&self, dz: &Mat, w: &Mat) -> LinearBackward {
+        assert_eq!(
+            (w.rows, w.cols),
+            (self.sh.cols, self.d_out),
+            "backward weight must match the forward weight's shape"
+        );
+        let (dw, refreshed_norms) = self.backward_dw(dz);
+        let dh = dz.matmul_nt(w);
+        LinearBackward { dw, dh, refreshed_norms }
+    }
+
+    fn backward_dw(&self, dz: &Mat) -> (Mat, Vec<f32>) {
+        assert_eq!(dz.rows, self.n, "dZ rows must match the contraction length");
+        assert_eq!(dz.cols, self.d_out, "dZ cols must match the output width");
+        // Regenerate S from the seed, sketch dZ with it, and contract:
+        // dW = (S H)ᵀ (S dZ), with E[Sᵀ S] = I giving unbiasedness.
+        let sdz = sketch_apply(self.seed, self.sh.rows, dz);
+        let dw = self.sh.matmul_tn(&sdz);
+        (dw, slot_norms(dz, self.contraction.per_sample()))
+    }
+
+    fn saved_bytes(&self) -> usize {
+        self.sh.data.len() * std::mem::size_of::<f32>() + std::mem::size_of::<u64>()
+    }
+
+    fn full_bytes(&self) -> usize {
+        self.n * self.sh.cols * std::mem::size_of::<f32>()
+    }
+
+    fn k(&self) -> usize {
+        self.sh.rows
+    }
+
+    fn clone_saved(&self) -> BoxedSaved {
+        Box::new(self.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::estimator::Sampler;
+    use crate::ops::spec::{SamplerSpec, SubspaceSpec};
+
+    fn subspace(budget: u8) -> SubspaceEstimator {
+        SubspaceEstimator::new(budget, Contraction::Rows)
+    }
+
+    #[test]
+    fn forward_z_is_exact_and_consumes_one_draw() {
+        let mut rng = Rng::new(1);
+        let h = Mat::randn(32, 16, &mut rng);
+        let w = Mat::randn(16, 8, &mut rng);
+        let zn = vec![1.0f32; 32];
+        let mut draw = Rng::new(7);
+        let (z, saved) = subspace(30)
+            .forward(&h, &w, EstCtx::new(&zn, &mut draw, None))
+            .unwrap();
+        assert_eq!(z, h.matmul(&w), "forward GEMM must stay exact");
+        assert_eq!(saved.k(), 10); // round(0.3 * 32)
+        // Exactly one u64 consumed, independent of the sketch rank.
+        let mut expect = Rng::new(7);
+        expect.next_u64();
+        assert_eq!(draw.next_u64(), expect.next_u64());
+    }
+
+    #[test]
+    fn sketch_memory_matches_budget() {
+        let mut rng = Rng::new(2);
+        let h = Mat::randn(64, 64, &mut rng);
+        let w = Mat::randn(64, 8, &mut rng);
+        let zn = vec![1.0f32; 64];
+        let (_, saved) = subspace(30)
+            .forward(&h, &w, EstCtx::new(&zn, &mut rng, None))
+            .unwrap();
+        assert_eq!(saved.k(), 19);
+        assert_eq!(saved.saved_bytes(), 19 * 64 * 4 + 8);
+        assert_eq!(saved.full_bytes(), 64 * 64 * 4);
+        assert!(saved.selection().is_none(), "a sketch keeps no selection");
+        let ratio = saved.saved_bytes() as f64 / saved.full_bytes() as f64;
+        assert!(ratio < 0.35, "subspace30 stored {ratio:.3} of full");
+    }
+
+    #[test]
+    fn backward_dw_is_unbiased() {
+        // Monte-Carlo mean of the sketched dW over repeated seeds must
+        // approach the exact Hᵀ dZ (mirror-calibrated via
+        // python/mirror/check_pr9.py: rel ~0.05-0.09 at 600 trials over
+        // 5 seeds; band 0.2, same as the WTA-CRS unbiasedness pins).
+        let mut rng = Rng::new(11);
+        let h = Mat::randn(64, 32, &mut rng);
+        let dz = Mat::randn(64, 8, &mut rng);
+        let w = Mat::randn(32, 8, &mut rng);
+        let zn = vec![1.0f32; 64];
+        let exact = h.transpose().matmul(&dz);
+        let op = subspace(30);
+        let mut acc = Mat::zeros(32, 8);
+        let mut draw = Rng::new(3);
+        for _ in 0..600 {
+            let (_, saved) =
+                op.forward(&h, &w, EstCtx::new(&zn, &mut draw, None)).unwrap();
+            acc.add_assign(&saved.backward(&dz, &w).dw);
+        }
+        let mean = acc.scale(1.0 / 600.0);
+        let rel = mean.sub(&exact).frob_norm() / exact.frob_norm();
+        assert!(rel < 0.2, "sketched dW biased: rel {rel}");
+    }
+
+    #[test]
+    fn backward_regenerates_the_forward_sketch() {
+        // Same saved state, two backward calls: bitwise-identical dW
+        // (the sketch is a pure function of the saved seed), and dH is
+        // the exact dZ Wᵀ.
+        let mut rng = Rng::new(5);
+        let h = Mat::randn(24, 12, &mut rng);
+        let w = Mat::randn(12, 4, &mut rng);
+        let dz = Mat::randn(24, 4, &mut rng);
+        let zn = vec![1.0f32; 24];
+        let (_, saved) = subspace(40)
+            .forward(&h, &w, EstCtx::new(&zn, &mut rng, None))
+            .unwrap();
+        let b1 = saved.backward(&dz, &w);
+        let b2 = saved.backward(&dz, &w);
+        assert_eq!(b1.dw, b2.dw);
+        assert_eq!(b1.dh, dz.matmul_nt(&w));
+        // Refreshed norms are exact per-slot ||dZ|| — the sketch does
+        // not touch the Algorithm-1 cache quality.
+        let expect: Vec<f32> = (0..24)
+            .map(|r| {
+                dz.row(r).iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>().sqrt()
+                    as f32
+            })
+            .collect();
+        assert_eq!(b1.refreshed_norms, expect);
+    }
+
+    #[test]
+    fn tokens_contraction_collapses_norms_per_sample() {
+        let mut rng = Rng::new(6);
+        let h = Mat::randn(32, 16, &mut rng);
+        let w = Mat::randn(16, 4, &mut rng);
+        let dz = Mat::randn(32, 4, &mut rng);
+        let zn = vec![1.0f32; 8];
+        let op = SubspaceEstimator::new(30, Contraction::Tokens { per_sample: 4 });
+        let (_, saved) =
+            op.forward(&h, &w, EstCtx::new(&zn, &mut rng, None)).unwrap();
+        let bw = saved.backward(&dz, &w);
+        assert_eq!(bw.refreshed_norms.len(), 8);
+        for (s, &got) in bw.refreshed_norms.iter().enumerate() {
+            let mut acc = 0.0f64;
+            for r in 4 * s..4 * (s + 1) {
+                for &v in dz.row(r) {
+                    acc += (v as f64) * (v as f64);
+                }
+            }
+            assert!((got - acc.sqrt() as f32).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn budget_override_sets_rank_and_rejects_zero() {
+        let mut rng = Rng::new(7);
+        let h = Mat::randn(32, 8, &mut rng);
+        let w = Mat::randn(8, 4, &mut rng);
+        let zn = vec![1.0f32; 32];
+        let (_, saved) = subspace(30)
+            .forward(&h, &w, EstCtx::new(&zn, &mut rng, Some(5)))
+            .unwrap();
+        assert_eq!(saved.k(), 5);
+        // Overrides beyond the contraction length clamp to it.
+        let (_, saved) = subspace(30)
+            .forward(&h, &w, EstCtx::new(&zn, &mut rng, Some(99)))
+            .unwrap();
+        assert_eq!(saved.k(), 32);
+        let e = subspace(30)
+            .forward(&h, &w, EstCtx::new(&zn, &mut rng, Some(0)))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("k = 0") && e.contains("rank >= 1"), "{e}");
+    }
+
+    #[test]
+    fn forward_reports_shape_and_contraction_violations() {
+        let mut rng = Rng::new(8);
+        let h = Mat::randn(6, 4, &mut rng);
+        let w = Mat::randn(4, 3, &mut rng);
+        let op = SubspaceEstimator::new(30, Contraction::Tokens { per_sample: 0 });
+        let e = op
+            .forward(&h, &w, EstCtx::new(&[1.0; 6], &mut rng, None))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("ops::SubspaceEstimator::forward")
+                && e.contains("per_sample: 0"),
+            "{e}"
+        );
+        let op = SubspaceEstimator::new(30, Contraction::Tokens { per_sample: 4 });
+        let e = op
+            .forward(&h, &w, EstCtx::new(&[1.0; 1], &mut rng, None))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("multiple of per_sample"), "{e}");
+        let wt = Mat::randn(5, 3, &mut rng);
+        let e = subspace(30)
+            .forward(&h, &wt, EstCtx::new(&[1.0; 6], &mut rng, None))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("does not contract"), "{e}");
+        let e = subspace(30)
+            .forward(&h, &w, EstCtx::new(&[1.0; 5], &mut rng, None))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("cache") && e.contains("slots"), "{e}");
+    }
+
+    #[test]
+    fn default_infer_is_exact_and_shape_checked() {
+        let mut rng = Rng::new(9);
+        let h = Mat::randn(16, 8, &mut rng);
+        let w = Mat::randn(8, 4, &mut rng);
+        assert_eq!(subspace(30).infer(&h, &w).unwrap(), h.matmul(&w));
+        let wt = Mat::randn(5, 3, &mut rng);
+        let e = subspace(30).infer(&h, &wt).unwrap_err().to_string();
+        assert!(
+            e.contains("ops::Estimator::infer") && e.contains("does not contract"),
+            "{e}"
+        );
+    }
+
+    #[test]
+    fn spec_builds_every_family_behind_one_interface() {
+        let mut rng = Rng::new(10);
+        let h = Mat::randn(16, 8, &mut rng);
+        let w = Mat::randn(8, 4, &mut rng);
+        let zn = vec![1.0f32; 16];
+        let specs = [
+            EstimatorSpec::Exact,
+            EstimatorSpec::Sampled(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }),
+            EstimatorSpec::Subspace(SubspaceSpec { budget: 30 }),
+        ];
+        for spec in specs {
+            let op = spec.build(Contraction::Rows);
+            let boxed: Box<dyn Estimator> = op.clone_estimator();
+            let mut draw = Rng::new(3);
+            let (z, saved) =
+                boxed.forward(&h, &w, EstCtx::new(&zn, &mut draw, None)).unwrap();
+            assert_eq!(z, h.matmul(&w), "{spec:?}: Z must stay exact");
+            assert_eq!(boxed.infer(&h, &w).unwrap(), z, "{spec:?}: infer == Z");
+            let dz = Mat::randn(16, 4, &mut Rng::new(4));
+            let bw = saved.backward(&dz, &w);
+            assert_eq!((bw.dw.rows, bw.dw.cols), (8, 4), "{spec:?}");
+            assert_eq!((bw.dh.rows, bw.dh.cols), (16, 8), "{spec:?}");
+            assert_eq!(bw.refreshed_norms.len(), 16, "{spec:?}");
+            assert!(saved.saved_bytes() > 0, "{spec:?}");
+            // The boxed save clones (the tape is Clone).
+            let copy = saved.clone();
+            assert_eq!(copy.backward(&dz, &w).dw, bw.dw, "{spec:?}");
+        }
+        // Exact saves everything; the estimated families save less.
+        let exact_bytes = {
+            let op = EstimatorSpec::Exact.build(Contraction::Rows);
+            let mut draw = Rng::new(3);
+            op.forward(&h, &w, EstCtx::new(&zn, &mut draw, None)).unwrap().1.saved_bytes()
+        };
+        for spec in [
+            EstimatorSpec::Sampled(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }),
+            EstimatorSpec::Subspace(SubspaceSpec { budget: 30 }),
+        ] {
+            let op = spec.build(Contraction::Rows);
+            let mut draw = Rng::new(3);
+            let saved = op
+                .forward(&h, &w, EstCtx::new(&zn, &mut draw, None))
+                .unwrap()
+                .1;
+            assert!(
+                saved.saved_bytes() < exact_bytes,
+                "{spec:?} saved {} >= exact {exact_bytes}",
+                saved.saved_bytes()
+            );
+        }
+    }
+}

@@ -1,15 +1,27 @@
-//! Operator layer: the typed method specification and the first-class
-//! sampled linear op every execution backend builds on.
+//! Operator layer: the typed method specification and the pluggable
+//! gradient-estimator interface every execution backend builds on.
 //!
-//! * [`MethodSpec`] / [`Family`] / [`SamplerSpec`] — the typed form of
-//!   method strings like `"lora-wtacrs30"`; the only module that parses
-//!   or formats them.
-//! * [`SampledLinear`] / [`SavedContext`] — `Z = H W` with sub-sampled
-//!   activation storage for the backward weight-gradient GEMM, plus
-//!   measured [`SavedContext::saved_bytes`] and the
-//!   [`Contraction`] (rows vs batch×seq tokens) knob.
+//! * [`MethodSpec`] / [`Family`] / [`EstimatorSpec`] / [`SamplerSpec`]
+//!   / [`SubspaceSpec`] — the typed form of method strings like
+//!   `"lora-wtacrs30"` or `"full-subspace16"`; the only module that
+//!   parses or formats them.  [`BudgetSchedule`] is the orthogonal
+//!   fixed/adaptive per-layer budget knob.
+//! * [`Estimator`] / [`Saved`] — the pluggable interface: `forward`
+//!   computes the exact `Z = H W` and decides what to save; the saved
+//!   trait object rebuilds `(dW, dH, refreshed_norms)` in backward and
+//!   *measures* its own [`Saved::saved_bytes`].  [`EstCtx`] carries
+//!   cached norms, the sampling RNG, and an adaptive budget override.
+//! * [`SampledLinear`] / [`SavedContext`] — the WTA-CRS/CRS/Det
+//!   column-row implementation (exact dense when `sampler: None`),
+//!   with the [`Contraction`] (rows vs batch×seq tokens) knob.
+//! * [`SubspaceEstimator`] — the randomized Rademacher-sketch sibling
+//!   family (`subspace<pct>`), saving a dense sketch plus a seed.
+pub mod estimator;
 pub mod sampled_linear;
 pub mod spec;
 
+pub use estimator::{BoxedSaved, EstCtx, Estimator, Saved, SubspaceEstimator};
 pub use sampled_linear::{Contraction, LinearBackward, SampledLinear, SavedContext};
-pub use spec::{Family, MethodSpec, SamplerSpec};
+pub use spec::{
+    BudgetSchedule, EstimatorSpec, Family, MethodSpec, SamplerSpec, SubspaceSpec,
+};

@@ -28,6 +28,7 @@ use crate::estimator::{select, Mat};
 use crate::util::error::Result;
 use crate::util::rng::Rng;
 
+use super::estimator::{BoxedSaved, EstCtx, Estimator, Saved};
 use super::spec::SamplerSpec;
 
 /// Output-column block of the sampled `dW` gather: 128 f32 columns
@@ -94,6 +95,26 @@ impl SampledLinear {
         znorms: &[f32],
         rng: &mut Rng,
     ) -> Result<(Mat, SavedContext)> {
+        self.forward_with(h, w, znorms, rng, None)
+    }
+
+    /// [`Self::forward`] with an optional per-layer budget override
+    /// from an adaptive [`crate::ops::BudgetSchedule`]: `Some(k)` keeps
+    /// exactly `k` column-row pairs (clamped to the contraction
+    /// length; `k == 0` is a named error — an estimator with nothing
+    /// saved cannot rebuild any gradient), `None` applies the spec's
+    /// own budget and reproduces the fixed schedule bit for bit.
+    ///
+    /// The override only affects a *sampling* operator; the exact
+    /// operator (`sampler: None`) always saves the full activation.
+    pub fn forward_with(
+        &self,
+        h: &Mat,
+        w: &Mat,
+        znorms: &[f32],
+        rng: &mut Rng,
+        k_override: Option<usize>,
+    ) -> Result<(Mat, SavedContext)> {
         if h.cols != w.rows {
             bail!(
                 "ops::SampledLinear::forward: H (.. x {}) does not contract \
@@ -125,9 +146,18 @@ impl SampledLinear {
             );
         }
         let z = h.matmul(w);
-        let saved = match self.sampler {
-            Some(spec) if spec.k_for(n) < n => {
-                let k = spec.k_for(n);
+        let k_eff = match (self.sampler, k_override) {
+            (Some(_), Some(0)) => bail!(
+                "ops::SampledLinear::forward: budget override k = 0 on a \
+                 contraction of length {n} (at least one column-row pair is \
+                 required; fixed budgets clamp to k = 1 instead)"
+            ),
+            (Some(_), Some(k)) => Some(k.min(n)),
+            (Some(spec), None) => Some(spec.k_for(n)),
+            (None, _) => None,
+        };
+        let saved = match (self.sampler, k_eff) {
+            (Some(spec), Some(k)) if k < n => {
                 // p_i ∝ ||H_i,:|| · cache_i, floored at a tiny positive
                 // mass: all-PAD rows pool to zero activations, and a
                 // zero-probability tail would leave the WTA-CRS
@@ -322,18 +352,7 @@ impl SavedContext {
     /// `||dZ||` per cache slot: per-row norms under `Rows`, per-sample
     /// norms over each sample's token block under `Tokens`.
     fn refreshed_norms(&self, dz: &Mat) -> Vec<f32> {
-        let ps = self.contraction.per_sample();
-        (0..self.n / ps)
-            .map(|s| {
-                let mut acc = 0.0f64;
-                for r in s * ps..(s + 1) * ps {
-                    for &v in dz.row(r) {
-                        acc += (v as f64) * (v as f64);
-                    }
-                }
-                acc.sqrt() as f32
-            })
-            .collect()
+        slot_norms(dz, self.contraction.per_sample())
     }
 
     /// Bytes of activation storage this context holds for backward —
@@ -371,6 +390,77 @@ impl SavedContext {
                 Some((indices.as_slice(), scales.as_slice()))
             }
         }
+    }
+}
+
+/// `||dZ||` per cache slot (`dz.rows / per_sample` slots): per-row
+/// norms at `per_sample == 1`, per-sample norms over each sample's
+/// token block otherwise.  Shared by every [`Saved`] implementation —
+/// the Algorithm-1 cache refresh is exact in all estimator families.
+pub(crate) fn slot_norms(dz: &Mat, per_sample: usize) -> Vec<f32> {
+    (0..dz.rows / per_sample)
+        .map(|s| {
+            let mut acc = 0.0f64;
+            for r in s * per_sample..(s + 1) * per_sample {
+                for &v in dz.row(r) {
+                    acc += (v as f64) * (v as f64);
+                }
+            }
+            acc.sqrt() as f32
+        })
+        .collect()
+}
+
+/// The WTA-CRS operator behind the pluggable estimator interface: the
+/// trait forward delegates to [`SampledLinear::forward_with`] (so an
+/// adaptive schedule's per-layer `k` flows through `EstCtx`), and
+/// `infer` keeps the historical `forward_infer` error path.  With
+/// `ctx.k == None` this is the inherent forward bit for bit — the
+/// default `full-wtacrs30` path is unchanged through the trait.
+impl Estimator for SampledLinear {
+    fn forward(&self, h: &Mat, w: &Mat, ctx: EstCtx<'_>) -> Result<(Mat, BoxedSaved)> {
+        let (z, saved) = self.forward_with(h, w, ctx.znorms, ctx.rng, ctx.k)?;
+        Ok((z, Box::new(saved)))
+    }
+
+    fn infer(&self, h: &Mat, w: &Mat) -> Result<Mat> {
+        self.forward_infer(h, w)
+    }
+
+    fn clone_estimator(&self) -> Box<dyn Estimator> {
+        Box::new(*self)
+    }
+}
+
+/// The concrete context as a tape object: pure delegation to the
+/// inherent methods (which remain the primary, directly-tested API).
+impl Saved for SavedContext {
+    fn backward(&self, dz: &Mat, w: &Mat) -> LinearBackward {
+        SavedContext::backward(self, dz, w)
+    }
+
+    fn backward_dw(&self, dz: &Mat) -> (Mat, Vec<f32>) {
+        SavedContext::backward_dw(self, dz)
+    }
+
+    fn saved_bytes(&self) -> usize {
+        SavedContext::saved_bytes(self)
+    }
+
+    fn full_bytes(&self) -> usize {
+        SavedContext::full_bytes(self)
+    }
+
+    fn k(&self) -> usize {
+        SavedContext::k(self)
+    }
+
+    fn selection(&self) -> Option<(&[u32], &[f32])> {
+        SavedContext::selection(self)
+    }
+
+    fn clone_saved(&self) -> BoxedSaved {
+        Box::new(self.clone())
     }
 }
 
@@ -612,6 +702,74 @@ mod tests {
         let (_, c1) = op.forward(&h, &w, &zn, &mut Rng::new(42)).unwrap();
         let (_, c2) = op.forward(&h, &w, &zn, &mut Rng::new(42)).unwrap();
         assert_eq!(c1.backward(&dz, &w).dw, c2.backward(&dz, &w).dw);
+    }
+
+    #[test]
+    fn budget_override_sets_k_and_rejects_zero() {
+        let mut rng = Rng::new(13);
+        let h = Mat::randn(32, 8, &mut rng);
+        let w = Mat::randn(8, 4, &mut rng);
+        let zn = vec![1.0f32; 32];
+        let op = wta(30);
+        // None reproduces the spec budget bit for bit.
+        let (_, c1) = op.forward(&h, &w, &zn, &mut Rng::new(42)).unwrap();
+        let (_, c2) =
+            op.forward_with(&h, &w, &zn, &mut Rng::new(42), None).unwrap();
+        assert_eq!(c1.selection(), c2.selection());
+        // An explicit k wins over the spec budget.
+        let (_, c) = op.forward_with(&h, &w, &zn, &mut Rng::new(42), Some(5)).unwrap();
+        assert_eq!(c.k(), 5);
+        // k >= n degrades to the exact save; k beyond n clamps.
+        let (_, c) = op.forward_with(&h, &w, &zn, &mut Rng::new(42), Some(99)).unwrap();
+        assert_eq!(c.k(), 32);
+        assert!(c.selection().is_none());
+        // k = 0 is a named error, never a silent empty save.
+        let e = op
+            .forward_with(&h, &w, &zn, &mut Rng::new(42), Some(0))
+            .unwrap_err()
+            .to_string();
+        assert!(
+            e.contains("ops::SampledLinear::forward")
+                && e.contains("k = 0")
+                && e.contains("clamp to k = 1"),
+            "{e}"
+        );
+        // The exact operator ignores overrides (nothing to sample).
+        let (_, c) = SampledLinear::exact()
+            .forward_with(&h, &w, &zn, &mut Rng::new(42), Some(0))
+            .unwrap();
+        assert_eq!(c.k(), 32);
+    }
+
+    #[test]
+    fn estimator_trait_delegates_to_the_inherent_operator() {
+        // The trait path must be the inherent forward bit for bit —
+        // the bitwise pins on the default wtacrs30 path survive the
+        // redesign because this delegation is exact.
+        let mut rng = Rng::new(14);
+        let h = Mat::randn(32, 16, &mut rng);
+        let w = Mat::randn(16, 8, &mut rng);
+        let dz = Mat::randn(32, 8, &mut rng);
+        let zn = vec![1.0f32; 32];
+        let op = wta(30);
+        let (z1, c1) = op.forward(&h, &w, &zn, &mut Rng::new(42)).unwrap();
+        let mut draw = Rng::new(42);
+        let (z2, saved) = Estimator::forward(
+            &op,
+            &h,
+            &w,
+            crate::ops::EstCtx::new(&zn, &mut draw, None),
+        )
+        .unwrap();
+        assert_eq!(z1, z2);
+        assert_eq!(saved.k(), c1.k());
+        assert_eq!(saved.saved_bytes(), c1.saved_bytes());
+        assert_eq!(saved.selection(), c1.selection());
+        let (b1, b2) = (c1.backward(&dz, &w), saved.backward(&dz, &w));
+        assert_eq!(b1.dw, b2.dw);
+        assert_eq!(b1.dh, b2.dh);
+        assert_eq!(b1.refreshed_norms, b2.refreshed_norms);
+        assert_eq!(Estimator::infer(&op, &h, &w).unwrap(), z1);
     }
 
     #[test]

@@ -1,12 +1,29 @@
-//! The typed method specification: tuning family + optional sampler.
+//! The typed method specification: tuning family + gradient estimator.
 //!
-//! Method strings (`"full"`, `"lora-wtacrs30"`, `"full-det10"`, ...)
-//! appear on the CLI, in experiment grids, result JSON and artifact
-//! ids.  This module is the *only* place they are parsed or formatted:
-//! [`MethodSpec`] implements [`FromStr`] and [`fmt::Display`] and
-//! round-trips exactly, so everything downstream — `SessionConfig`, the
-//! coordinator, benches, examples — passes the typed value around
-//! instead of re-splitting strings.
+//! Method strings (`"full"`, `"lora-wtacrs30"`, `"full-subspace16"`,
+//! ...) appear on the CLI, in experiment grids, result JSON and
+//! artifact ids.  This module is the *only* place they are parsed or
+//! formatted: [`MethodSpec`] implements [`FromStr`] and
+//! [`fmt::Display`] and round-trips exactly, so everything downstream —
+//! `SessionConfig`, the coordinator, benches, examples — passes the
+//! typed value around instead of re-splitting strings.
+//!
+//! The suffix names an [`EstimatorSpec`] — which
+//! [`crate::ops::Estimator`] family runs the layer's weight-gradient
+//! GEMM and at what budget: no suffix is the exact dense estimator,
+//! `wtacrs<pct>`/`crs<pct>`/`det<pct>` are the column-row sampler
+//! family, and `subspace<pct>` is the randomized Rademacher-sketch
+//! family.  Budgets are percentages in `1..=100`; a budget whose
+//! derived count would round to zero on a tiny contraction is clamped
+//! up to 1 (`SamplerSpec::k_for` / `SubspaceEstimator::rank_for` —
+//! the documented floor), while an *explicit* per-layer override of 0
+//! is a named error.
+//!
+//! [`BudgetSchedule`] is deliberately *not* part of the method string:
+//! it is an orthogonal training knob (`--budget-schedule`) carried on
+//! `SessionConfig`/`TrainOptions`, so the same method cell can run
+//! under either schedule without renaming itself in every results
+//! table.
 
 use std::fmt;
 use std::str::FromStr;
@@ -23,7 +40,7 @@ pub enum Family {
     /// Frozen trunk with rank-8 LoRA adapters + trained head.
     Lora,
     /// Ladder side network (its backward never runs the trunk GEMMs,
-    /// so it does not compose with a sampler).
+    /// so it does not compose with a gradient estimator).
     Lst,
 }
 
@@ -65,6 +82,11 @@ impl SamplerSpec {
     }
 
     /// Column-row pairs to keep for a contraction dimension of `m`.
+    ///
+    /// Clamped to `1..=m`: a budget that would round to zero pairs on
+    /// a tiny contraction keeps one pair instead of silently
+    /// degenerating (the documented floor; an explicit per-layer
+    /// override of 0 is rejected with a named error instead).
     pub fn k_for(self, m: usize) -> usize {
         ((self.fraction() * m as f64).round() as usize).clamp(1, m)
     }
@@ -84,36 +106,128 @@ impl fmt::Display for SamplerSpec {
     }
 }
 
-/// A fully-specified tuning method: `family[-sampler<budget>]`.
+/// Randomized-subspace (Rademacher sketch) estimator budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SubspaceSpec {
+    /// Sketch rank as a percentage of the contraction dim (1..=100).
+    pub budget: u8,
+}
+
+impl SubspaceSpec {
+    pub fn new(budget: u8) -> Result<Self> {
+        if budget == 0 || budget > 100 {
+            bail!("sampler budget must be in 1..=100, got {budget}");
+        }
+        Ok(SubspaceSpec { budget })
+    }
+}
+
+impl fmt::Display for SubspaceSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "subspace{}", self.budget)
+    }
+}
+
+/// Which gradient-estimator family runs the weight-gradient GEMMs —
+/// the typed form of the method-string suffix.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EstimatorSpec {
+    /// Exact dense estimator (no suffix): full activation save.
+    Exact,
+    /// Column-row sampling (`wtacrs<pct>`/`crs<pct>`/`det<pct>`).
+    Sampled(SamplerSpec),
+    /// Randomized Rademacher sketch (`subspace<pct>`).
+    Subspace(SubspaceSpec),
+}
+
+impl EstimatorSpec {
+    /// Whether this estimator approximates the weight gradient (i.e.
+    /// anything but the exact dense save).
+    pub fn is_approx(self) -> bool {
+        !matches!(self, EstimatorSpec::Exact)
+    }
+
+    /// The estimator's budget as a percentage (100 for exact).
+    pub fn budget_pct(self) -> u8 {
+        match self {
+            EstimatorSpec::Exact => 100,
+            EstimatorSpec::Sampled(sp) => sp.budget,
+            EstimatorSpec::Subspace(sp) => sp.budget,
+        }
+    }
+
+    /// Realized budget (pairs / sketch rank) for a contraction of `m`
+    /// under the fixed schedule — the per-layer count an adaptive
+    /// schedule redistributes.
+    pub fn k_for(self, m: usize) -> usize {
+        match self {
+            EstimatorSpec::Exact => m,
+            EstimatorSpec::Sampled(sp) => sp.k_for(m),
+            EstimatorSpec::Subspace(sp) => {
+                (((sp.budget as f64 / 100.0) * m as f64).round() as usize).clamp(1, m)
+            }
+        }
+    }
+}
+
+impl fmt::Display for EstimatorSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EstimatorSpec::Exact => Ok(()),
+            EstimatorSpec::Sampled(sp) => write!(f, "{sp}"),
+            EstimatorSpec::Subspace(sp) => write!(f, "{sp}"),
+        }
+    }
+}
+
+/// A fully-specified tuning method: `family[-estimator<budget>]`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MethodSpec {
     pub family: Family,
-    pub sampler: Option<SamplerSpec>,
+    pub estimator: EstimatorSpec,
 }
 
 impl MethodSpec {
     /// Exact (unsampled) variant of a family.
     pub fn exact(family: Family) -> Self {
-        MethodSpec { family, sampler: None }
+        MethodSpec { family, estimator: EstimatorSpec::Exact }
     }
 
-    /// Validated constructor (rejects LST + sampler).
+    /// Validated constructor from a sampler (rejects LST + sampler).
+    /// Compatibility shim over [`Self::with_estimator`].
     pub fn new(family: Family, sampler: Option<SamplerSpec>) -> Result<Self> {
-        if family == Family::Lst && sampler.is_some() {
+        let estimator = match sampler {
+            None => EstimatorSpec::Exact,
+            Some(sp) => EstimatorSpec::Sampled(sp),
+        };
+        Self::with_estimator(family, estimator)
+    }
+
+    /// Validated constructor (rejects LST + any non-exact estimator).
+    pub fn with_estimator(family: Family, estimator: EstimatorSpec) -> Result<Self> {
+        if family == Family::Lst && estimator.is_approx() {
             bail!(
                 "LST does not compose with a sampler (the ladder backward \
                  never runs the sampled trunk GEMMs)"
             );
         }
-        Ok(MethodSpec { family, sampler })
+        Ok(MethodSpec { family, estimator })
+    }
+
+    /// The column-row sampler, where the estimator is that family.
+    pub fn sampler(&self) -> Option<SamplerSpec> {
+        match self.estimator {
+            EstimatorSpec::Sampled(sp) => Some(sp),
+            _ => None,
+        }
     }
 }
 
 impl fmt::Display for MethodSpec {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self.sampler {
-            None => write!(f, "{}", self.family),
-            Some(sp) => write!(f, "{}-{}", self.family, sp),
+        match self.estimator {
+            EstimatorSpec::Exact => write!(f, "{}", self.family),
+            est => write!(f, "{}-{}", self.family, est),
         }
     }
 }
@@ -141,26 +255,73 @@ fn parse_method(method: &str) -> Result<MethodSpec> {
         }
     };
     let Some(suffix) = suffix else {
-        return Ok(MethodSpec { family, sampler: None });
+        return Ok(MethodSpec { family, estimator: EstimatorSpec::Exact });
     };
-    let (kind, digits) = if let Some(d) = suffix.strip_prefix("wtacrs") {
-        (Sampler::WtaCrs, d)
-    } else if let Some(d) = suffix.strip_prefix("crs") {
-        (Sampler::Crs, d)
-    } else if let Some(d) = suffix.strip_prefix("det") {
-        (Sampler::Det, d)
-    } else {
-        bail!(
-            "method {method:?}: unknown sampler suffix {suffix:?} \
-             (wtacrs<pct>|crs<pct>|det<pct>)"
-        );
-    };
+    let (make, digits): (fn(u8) -> Result<EstimatorSpec>, &str) =
+        if let Some(d) = suffix.strip_prefix("wtacrs") {
+            (|b| Ok(EstimatorSpec::Sampled(SamplerSpec::new(Sampler::WtaCrs, b)?)), d)
+        } else if let Some(d) = suffix.strip_prefix("crs") {
+            (|b| Ok(EstimatorSpec::Sampled(SamplerSpec::new(Sampler::Crs, b)?)), d)
+        } else if let Some(d) = suffix.strip_prefix("det") {
+            (|b| Ok(EstimatorSpec::Sampled(SamplerSpec::new(Sampler::Det, b)?)), d)
+        } else if let Some(d) = suffix.strip_prefix("subspace") {
+            (|b| Ok(EstimatorSpec::Subspace(SubspaceSpec::new(b)?)), d)
+        } else {
+            bail!(
+                "method {method:?}: unknown estimator suffix {suffix:?} \
+                 (wtacrs<pct>|crs<pct>|det<pct>|subspace<pct>)"
+            );
+        };
     let budget: u8 = digits
         .parse()
         .map_err(|_| anyhow!("method {method:?}: bad sampler budget {digits:?}"))?;
-    let sampler =
-        SamplerSpec::new(kind, budget).with_context(|| format!("method {method:?}"))?;
-    MethodSpec::new(family, Some(sampler)).with_context(|| format!("method {method:?}"))
+    let estimator = make(budget).with_context(|| format!("method {method:?}"))?;
+    MethodSpec::with_estimator(family, estimator)
+        .with_context(|| format!("method {method:?}"))
+}
+
+/// How per-layer estimator budgets are assigned during training: the
+/// paper's fixed global fraction, or an adaptive apportionment driven
+/// by the live gradient-norm cache (each layer's share of the cached
+/// norm mass buys its share of the total pair/rank budget).
+///
+/// Not part of the method string — an orthogonal knob on
+/// `SessionConfig` / `TrainOptions` / `wtacrs train --budget-schedule`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BudgetSchedule {
+    /// Every layer keeps its spec-derived budget (the paper's global
+    /// fraction) — bitwise-identical to the pre-schedule trainer.
+    #[default]
+    Fixed,
+    /// Redistribute the summed fixed budget across layers proportional
+    /// to each layer's share of the cached gradient-norm mass.
+    Adaptive,
+}
+
+impl BudgetSchedule {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BudgetSchedule::Fixed => "fixed",
+            BudgetSchedule::Adaptive => "adaptive",
+        }
+    }
+}
+
+impl fmt::Display for BudgetSchedule {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for BudgetSchedule {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "fixed" => Ok(BudgetSchedule::Fixed),
+            "adaptive" => Ok(BudgetSchedule::Adaptive),
+            other => bail!("unknown budget schedule {other:?} (fixed|adaptive)"),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -177,12 +338,15 @@ mod tests {
         assert_eq!(parse("lst"), MethodSpec::exact(Family::Lst));
         let m = parse("lora-wtacrs30");
         assert_eq!(m.family, Family::Lora);
-        assert_eq!(m.sampler, Some(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }));
+        assert_eq!(m.sampler(), Some(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }));
         let m = parse("full-crs10");
-        assert_eq!(m.sampler.unwrap().kind, Sampler::Crs);
-        assert!((m.sampler.unwrap().fraction() - 0.1).abs() < 1e-12);
-        assert_eq!(parse("full-det10").sampler.unwrap().kind, Sampler::Det);
-        assert_eq!(parse("full-wtacrs100").sampler.unwrap().budget, 100);
+        assert_eq!(m.sampler().unwrap().kind, Sampler::Crs);
+        assert!((m.sampler().unwrap().fraction() - 0.1).abs() < 1e-12);
+        assert_eq!(parse("full-det10").sampler().unwrap().kind, Sampler::Det);
+        assert_eq!(parse("full-wtacrs100").sampler().unwrap().budget, 100);
+        let m = parse("full-subspace16");
+        assert_eq!(m.estimator, EstimatorSpec::Subspace(SubspaceSpec { budget: 16 }));
+        assert_eq!(m.sampler(), None, "a sketch is not a column-row sampler");
     }
 
     #[test]
@@ -199,6 +363,9 @@ mod tests {
             "full-det10",
             "full-wtacrs100",
             "lora-det1",
+            "full-subspace16",
+            "full-subspace100",
+            "lora-subspace30",
         ] {
             assert_eq!(parse(s).to_string(), s, "round trip of {s:?}");
         }
@@ -209,35 +376,71 @@ mod tests {
         let e = "adapter".parse::<MethodSpec>().unwrap_err().to_string();
         assert!(e.contains("unknown tuning family"), "{e}");
         assert!(e.contains("adapter"), "{e}");
+        assert!(e.contains("full|lora|lst"), "valid families listed: {e}");
     }
 
     #[test]
-    fn bad_sampler_suffix_message() {
+    fn bad_estimator_suffix_message() {
         let e = "full-bogus10".parse::<MethodSpec>().unwrap_err().to_string();
-        assert!(e.contains("unknown sampler suffix"), "{e}");
+        assert!(e.contains("unknown estimator suffix"), "{e}");
+        assert!(e.contains("bogus10"), "unknown suffix named: {e}");
+        assert!(
+            e.contains("wtacrs<pct>|crs<pct>|det<pct>|subspace<pct>"),
+            "valid estimator suffixes listed: {e}"
+        );
         let e = "full-wtacrsXY".parse::<MethodSpec>().unwrap_err().to_string();
         assert!(e.contains("bad sampler budget"), "{e}");
     }
 
     #[test]
+    fn budget_edges_per_family() {
+        // Every estimator family × the budget edges: 0 rejected with
+        // the range named, 100 parses, missing digits rejected naming
+        // the empty budget.
+        for est in ["wtacrs", "crs", "det", "subspace"] {
+            let e = format!("full-{est}0").parse::<MethodSpec>().unwrap_err();
+            assert!(e.to_string().contains("must be in 1..=100"), "{est}0: {e}");
+            let m = format!("full-{est}100").parse::<MethodSpec>().unwrap();
+            assert_eq!(m.estimator.budget_pct(), 100, "{est}100");
+            assert_eq!(m.to_string(), format!("full-{est}100"));
+            let e = format!("full-{est}").parse::<MethodSpec>().unwrap_err();
+            assert!(
+                e.to_string().contains("bad sampler budget \"\""),
+                "{est} without digits: {e}"
+            );
+            let e = format!("full-{est}101").parse::<MethodSpec>().unwrap_err();
+            assert!(e.to_string().contains("must be in 1..=100"), "{est}101: {e}");
+        }
+        assert!(SamplerSpec::new(Sampler::WtaCrs, 0).is_err());
+        assert!(SamplerSpec::new(Sampler::WtaCrs, 101).is_err());
+        assert!(SubspaceSpec::new(0).is_err());
+        assert!(SubspaceSpec::new(101).is_err());
+    }
+
+    #[test]
     fn budget_out_of_range_messages() {
-        for s in ["full-wtacrs0", "full-crs0"] {
+        for s in ["full-wtacrs0", "full-crs0", "full-subspace0"] {
             let e = s.parse::<MethodSpec>().unwrap_err().to_string();
             assert!(e.contains("must be in 1..=100"), "{s}: {e}");
         }
         let e = "full-wtacrs101".parse::<MethodSpec>().unwrap_err().to_string();
         assert!(e.contains("must be in 1..=100") && e.contains("101"), "{e}");
-        assert!(SamplerSpec::new(Sampler::WtaCrs, 0).is_err());
-        assert!(SamplerSpec::new(Sampler::WtaCrs, 101).is_err());
     }
 
     #[test]
-    fn lst_rejects_sampler() {
-        let e = "lst-wtacrs30".parse::<MethodSpec>().unwrap_err().to_string();
-        assert!(e.contains("does not compose"), "{e}");
+    fn lst_rejects_estimators() {
+        for s in ["lst-wtacrs30", "lst-subspace16"] {
+            let e = s.parse::<MethodSpec>().unwrap_err().to_string();
+            assert!(e.contains("does not compose"), "{s}: {e}");
+        }
         assert!(MethodSpec::new(
             Family::Lst,
             Some(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 })
+        )
+        .is_err());
+        assert!(MethodSpec::with_estimator(
+            Family::Lst,
+            EstimatorSpec::Subspace(SubspaceSpec { budget: 16 })
         )
         .is_err());
     }
@@ -252,5 +455,21 @@ mod tests {
         assert_eq!(one.k_for(10), 1); // clamped to >= 1
         let all = SamplerSpec { kind: Sampler::Det, budget: 100 };
         assert_eq!(all.k_for(10), 10);
+        // EstimatorSpec::k_for agrees across families.
+        assert_eq!(EstimatorSpec::Exact.k_for(32), 32);
+        assert_eq!(EstimatorSpec::Sampled(sp).k_for(32), 10);
+        assert_eq!(EstimatorSpec::Subspace(SubspaceSpec { budget: 30 }).k_for(32), 10);
+        assert_eq!(EstimatorSpec::Subspace(SubspaceSpec { budget: 1 }).k_for(10), 1);
+    }
+
+    #[test]
+    fn budget_schedule_round_trips() {
+        for s in ["fixed", "adaptive"] {
+            let sched: BudgetSchedule = s.parse().unwrap();
+            assert_eq!(sched.to_string(), s);
+        }
+        assert_eq!(BudgetSchedule::default(), BudgetSchedule::Fixed);
+        let e = "always".parse::<BudgetSchedule>().unwrap_err().to_string();
+        assert!(e.contains("fixed|adaptive") && e.contains("always"), "{e}");
     }
 }

@@ -16,7 +16,7 @@
 //! norms the step returns.
 
 use crate::nn::{ModelSpec, TapeStats};
-use crate::ops::MethodSpec;
+use crate::ops::{BudgetSchedule, MethodSpec};
 
 use super::tensor::HostTensor;
 use crate::util::error::Result;
@@ -41,6 +41,12 @@ pub struct SessionConfig {
     /// contraction axis of the sampled weight-gradient GEMMs
     /// (`depth: 0` = the classic family graphs).
     pub model: ModelSpec,
+    /// Per-layer estimator budget schedule: `Fixed` (default — every
+    /// layer applies the method's own budget percentage, bitwise-
+    /// identical to the pre-schedule trainer) or `Adaptive` (the same
+    /// total budget re-apportioned across layers by their share of
+    /// cached gradient-norm mass each step).
+    pub schedule: BudgetSchedule,
 }
 
 impl SessionConfig {
@@ -53,6 +59,7 @@ impl SessionConfig {
             lr: 1e-3,
             batch: 0,
             model: ModelSpec::default(),
+            schedule: BudgetSchedule::default(),
         }
     }
 }

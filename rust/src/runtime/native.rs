@@ -24,7 +24,7 @@ use crate::nn::{
     Arch, BackwardCtx, ForwardCtx, ModelBuilder, Module, Sequential, StackDims, Tape,
     TapeStats,
 };
-use crate::ops::MethodSpec;
+use crate::ops::{BudgetSchedule, EstimatorSpec, MethodSpec};
 use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 use crate::{anyhow, bail};
@@ -89,6 +89,16 @@ pub struct NativeSession {
     step: i32,
     /// Tape accounting snapshot of the last train step.
     last_stats: TapeStats,
+    /// Per-layer budget schedule (`Fixed` leaves every estimator on its
+    /// spec-derived budget — the bitwise-pinned default path).
+    schedule: BudgetSchedule,
+    /// The method's estimator spec, kept to derive fixed per-layer
+    /// budgets when the adaptive schedule re-apportions them.
+    estimator: EstimatorSpec,
+    /// Per-sample contraction rows of each approximated layer, in
+    /// norm-cache slot order (from [`ModelBuilder`]); layer `l`
+    /// contracts `batch * slot_per_sample[l]` rows.
+    slot_per_sample: Vec<usize>,
 }
 
 impl NativeSession {
@@ -125,7 +135,78 @@ impl NativeSession {
             lr: cfg.lr,
             step: 0,
             last_stats: TapeStats::default(),
+            schedule: cfg.schedule,
+            estimator: method.estimator,
+            slot_per_sample: built.slot_per_sample,
         })
+    }
+
+    /// Adaptive per-layer budget plan for this step, or `None` to leave
+    /// every estimator on its spec-derived fixed budget.
+    ///
+    /// The plan spends the *same total* as the fixed schedule — the sum
+    /// over layers of the spec's `k_for(n_l)` where `n_l` is layer
+    /// `l`'s contraction length — but apportions it by each layer's
+    /// share of the cached gradient-norm mass (the sum of its `znorms`
+    /// block).  Every layer keeps at least 1 and at most `n_l`; the
+    /// floor-remainder goes one pair at a time to the heaviest layer
+    /// with headroom (ties to the lowest slot), so the plan is a pure
+    /// deterministic function of the norm cache.  Degenerate inputs
+    /// (zero/non-finite mass, no approximated layers) fall back to the
+    /// fixed schedule rather than guessing.
+    fn adaptive_budgets(&self, znorms: &[f32]) -> Option<Vec<usize>> {
+        if self.schedule != BudgetSchedule::Adaptive || !self.estimator.is_approx() {
+            return None;
+        }
+        let (l, b) = (self.n_approx, self.batch);
+        if l == 0 || self.slot_per_sample.len() != l {
+            return None;
+        }
+        let n: Vec<usize> = self.slot_per_sample.iter().map(|&ps| b * ps).collect();
+        let total: usize = n.iter().map(|&m| self.estimator.k_for(m)).sum();
+        let cap: usize = n.iter().sum();
+        if total < l || total > cap {
+            return None;
+        }
+        let mut mass = vec![0.0f64; l];
+        let mut msum = 0.0f64;
+        for (layer, m) in mass.iter_mut().enumerate() {
+            let s: f64 = znorms[layer * b..(layer + 1) * b]
+                .iter()
+                .map(|&v| f64::from(v.max(0.0)))
+                .sum();
+            *m = s;
+            msum += s;
+        }
+        if !(msum > 0.0) || !msum.is_finite() {
+            return None;
+        }
+        // Floor of 1 per layer, then the rest proportionally (floored,
+        // clamped by each layer's headroom), then the remainder one at
+        // a time to the heaviest layer that can still take a pair.
+        let mut k = vec![1usize; l];
+        let spread = total - l;
+        for layer in 0..l {
+            let share = ((spread as f64) * mass[layer] / msum).floor() as usize;
+            k[layer] += share.min(n[layer] - k[layer]);
+        }
+        let mut assigned: usize = k.iter().sum();
+        while assigned < total {
+            let mut best: Option<usize> = None;
+            for layer in 0..l {
+                let heavier = match best {
+                    None => true,
+                    Some(bst) => mass[layer] > mass[bst],
+                };
+                if k[layer] < n[layer] && heavier {
+                    best = Some(layer);
+                }
+            }
+            let layer = best?;
+            k[layer] += 1;
+            assigned += 1;
+        }
+        Some(k)
     }
 
     /// Token ids as the (batch, seq) f32 matrix the embed module reads.
@@ -302,9 +383,16 @@ impl TrainSession for NativeSession {
         let x = self.token_mat(tokens)?;
         let rng = Rng::new(self.seed ^ SAMPLE_STREAM).fold_in(self.step as u64);
 
+        // Under the adaptive schedule, re-apportion the step's total
+        // pair/rank budget across layers from the norm-cache block
+        // (None = every estimator keeps its fixed spec budget).
+        let plan = self.adaptive_budgets(znorms);
         let mut tape = Tape::new();
         let logits = {
             let mut fctx = ForwardCtx::train(&mut tape, znorms, b, rng);
+            if let Some(plan) = plan.as_deref() {
+                fctx = fctx.with_budgets(plan);
+            }
             self.graph.forward(x, &mut fctx)?
         };
         let (loss, dlogits) = if self.lm {
@@ -680,7 +768,7 @@ mod tests {
         let mut c = cfg("lst", 2);
         c.method = MethodSpec {
             family: Family::Lst,
-            sampler: Some(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }),
+            estimator: EstimatorSpec::Sampled(SamplerSpec { kind: Sampler::WtaCrs, budget: 30 }),
         };
         assert!(NativeSession::new(&c).is_err());
     }
@@ -1022,6 +1110,155 @@ mod tests {
         c = tf_cfg("full-wtacrs30", 2);
         c.model.depth = 0;
         assert!(NativeSession::new(&c).is_err());
+    }
+
+    #[test]
+    fn fixed_schedule_reports_spec_budgets_per_layer() {
+        // The realized-budget surface on the default path: every layer
+        // keeps its spec-derived k = round(0.3 * 32) = 10.
+        let mut sess = NativeSession::new(&cfg("full-wtacrs30", 2)).unwrap();
+        let (toks, labs) = toy_batch(&sess);
+        let zn = vec![1.0f32; 3 * sess.batch];
+        sess.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert_eq!(sess.tape_stats().budgets, vec![10, 10, 10]);
+        // The exact session reports the whole contraction per layer.
+        let mut exact = NativeSession::new(&cfg("full", 2)).unwrap();
+        exact.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert_eq!(exact.tape_stats().budgets, vec![32, 32, 32]);
+    }
+
+    #[test]
+    fn subspace_session_trains_with_sketch_sized_tape() {
+        // The second estimator family end-to-end: full-subspace16 on
+        // the classic MLP keeps an r x d_in sketch (r = round(0.16*32)
+        // = 5) plus an 8-byte seed per layer instead of selected pairs.
+        let mut sess = NativeSession::new(&cfg("full-subspace16", 2)).unwrap();
+        let (toks, labs) = toy_batch(&sess);
+        let zn = vec![1.0f32; 3 * sess.batch];
+        let mut first = f32::NAN;
+        let mut last = f32::NAN;
+        for step in 0..30 {
+            let (loss, norms) = sess.train_step(&toks, &labs, &[], &zn).unwrap();
+            assert!(loss.is_finite(), "step {step}");
+            assert_eq!(norms.len(), 3 * sess.batch);
+            assert!(norms.iter().all(|v| v.is_finite() && *v >= 0.0));
+            if step == 0 {
+                first = loss;
+            }
+            last = loss;
+        }
+        assert!(last < first, "subspace session did not learn: {first} -> {last}");
+        let stats = sess.tape_stats();
+        assert_eq!(stats.budgets, vec![5, 5, 5]);
+        assert_eq!(
+            stats.per_layer,
+            vec![5 * 128 * 4 + 8, 5 * 256 * 4 + 8, 5 * 128 * 4 + 8]
+        );
+        // Deterministic given the seed: a fresh session replays step 0.
+        let mut again = NativeSession::new(&cfg("full-subspace16", 2)).unwrap();
+        let (l0, _) = again.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert_eq!(l0, first);
+    }
+
+    #[test]
+    fn adaptive_schedule_redistributes_the_same_total() {
+        // Skewed norm cache: layer 2 holds ~98% of the mass, so the
+        // adaptive plan shifts pairs toward it while spending exactly
+        // the fixed schedule's total (3 * k_for(32) = 30).
+        let mut c = cfg("full-wtacrs30", 2);
+        c.schedule = BudgetSchedule::Adaptive;
+        let mut sess = NativeSession::new(&c).unwrap();
+        let (toks, labs) = toy_batch(&sess);
+        let b = sess.batch;
+        let mut zn = vec![0.1f32; 3 * b];
+        for v in &mut zn[2 * b..3 * b] {
+            *v = 10.0;
+        }
+        sess.train_step(&toks, &labs, &[], &zn).unwrap();
+        let budgets = sess.tape_stats().budgets;
+        assert_eq!(budgets.iter().sum::<usize>(), 30, "{budgets:?}");
+        assert!(budgets.iter().all(|&k| (1..=b).contains(&k)), "{budgets:?}");
+        assert!(
+            budgets[2] > budgets[0] && budgets[2] > budgets[1],
+            "mass did not attract budget: {budgets:?}"
+        );
+        // Uniform mass reproduces the fixed split exactly (each layer's
+        // share of 30 over 3 equal-length contractions is 10).
+        let mut sess = NativeSession::new(&c).unwrap();
+        let uniform = vec![1.0f32; 3 * b];
+        sess.train_step(&toks, &labs, &[], &uniform).unwrap();
+        assert_eq!(sess.tape_stats().budgets, vec![10, 10, 10]);
+        // Degenerate all-zero mass falls back to the fixed schedule.
+        let mut sess = NativeSession::new(&c).unwrap();
+        let zeros = vec![0.0f32; 3 * b];
+        sess.train_step(&toks, &labs, &[], &zeros).unwrap();
+        assert_eq!(sess.tape_stats().budgets, vec![10, 10, 10]);
+    }
+
+    #[test]
+    fn adaptive_schedule_is_deterministic() {
+        // Same seed, same cache block => the same per-layer plan and a
+        // bitwise-identical step, for both estimator families.
+        for method in ["full-wtacrs30", "full-subspace16"] {
+            let mut c = cfg(method, 2);
+            c.schedule = BudgetSchedule::Adaptive;
+            let mut s1 = NativeSession::new(&c).unwrap();
+            let mut s2 = NativeSession::new(&c).unwrap();
+            let (toks, labs) = toy_batch(&s1);
+            let b = s1.batch;
+            let mut zn = vec![0.5f32; 3 * b];
+            for v in &mut zn[..b] {
+                *v = 4.0;
+            }
+            for _ in 0..3 {
+                let (l1, n1) = s1.train_step(&toks, &labs, &[], &zn).unwrap();
+                let (l2, n2) = s2.train_step(&toks, &labs, &[], &zn).unwrap();
+                assert_eq!(l1, l2, "{method}");
+                assert_eq!(n1, n2, "{method}");
+                assert_eq!(s1.tape_stats(), s2.tape_stats(), "{method}");
+            }
+            let budgets = s1.tape_stats().budgets;
+            let total: usize = (0..3).map(|_| c.method.estimator.k_for(b)).sum();
+            assert_eq!(budgets.iter().sum::<usize>(), total, "{method}: {budgets:?}");
+        }
+        // Exact methods have nothing to re-apportion: the adaptive
+        // session is bitwise-identical to the fixed one.
+        let mut ca = cfg("full", 2);
+        ca.schedule = BudgetSchedule::Adaptive;
+        let mut fixed = NativeSession::new(&cfg("full", 2)).unwrap();
+        let mut adaptive = NativeSession::new(&ca).unwrap();
+        let (toks, labs) = toy_batch(&fixed);
+        let zn = vec![1.0f32; 3 * fixed.batch];
+        let (lf, nf) = fixed.train_step(&toks, &labs, &[], &zn).unwrap();
+        let (la, na) = adaptive.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert_eq!(lf, la);
+        assert_eq!(nf, na);
+    }
+
+    #[test]
+    fn adaptive_transformer_budgets_sum_to_the_fixed_total() {
+        // The deep geometry: 12 trunk layers contract 128 token rows
+        // and the pooled head contracts 32, so the fixed total is
+        // 12 * 38 + 10 = 466 pairs; the adaptive plan must spend
+        // exactly that across the 13 slots.
+        let mut c = tf_cfg("full-wtacrs30", 2);
+        c.schedule = BudgetSchedule::Adaptive;
+        let mut sess = NativeSession::new(&c).unwrap();
+        let (toks, labs) = toy_batch_dense(&sess);
+        let b = sess.batch;
+        let mut zn = vec![1.0f32; 13 * b];
+        for v in &mut zn[..2 * b] {
+            *v = 6.0;
+        }
+        let (loss, _) = sess.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert!(loss.is_finite());
+        let budgets = sess.tape_stats().budgets;
+        assert_eq!(budgets.len(), 13);
+        assert_eq!(budgets.iter().sum::<usize>(), 12 * 38 + 10, "{budgets:?}");
+        for (l, &k) in budgets.iter().enumerate() {
+            let cap = if l == 12 { 32 } else { 128 };
+            assert!((1..=cap).contains(&k), "layer {l}: k {k} vs cap {cap}");
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ fn m(s: &str) -> MethodSpec {
 
 fn opts(steps: usize, lr: f32, train_size: usize, val_size: usize) -> ExperimentOptions {
     ExperimentOptions {
-        train: TrainOptions { lr, seed: 0, max_steps: steps, eval_every: 0, patience: 0 },
+        train: TrainOptions { lr, max_steps: steps, ..Default::default() },
         train_size,
         val_size,
         data_seed: 5,
@@ -214,7 +214,7 @@ fn checkpoint_roundtrip_resumes_identically() {
     let ds = glue::generate(&spec, dims.vocab, dims.seq_len, 128, 3);
 
     let topts =
-        TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
+        TrainOptions { lr: 1e-3, max_steps: 0, ..Default::default() };
     let mut t1 = Trainer::new(&backend, "tiny", &m("full-wtacrs30"), 2, ds.len(), topts.clone())
         .unwrap();
     let mut batcher = Batcher::new(&ds, t1.batch_size(), 1);

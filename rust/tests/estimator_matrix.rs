@@ -1,0 +1,104 @@
+//! The (estimator family x budget schedule) smoke matrix: one tiny
+//! training cell per combination of {exact, wtacrs, subspace} and
+//! {fixed, adaptive}, asserting the realized per-layer budgets the
+//! report surfaces sum to the configured total — the budget schedule
+//! redistributes pairs/rank, it never changes how many the method
+//! string bought.  Plus the adaptive-sweep determinism pin: the same
+//! adaptive grid merged twice is byte-identical.
+
+use std::path::PathBuf;
+
+use wtacrs::coordinator::shard::{run_sweep, GridSpec, SweepConfig, MERGED_FILE};
+use wtacrs::coordinator::{run_glue, ExperimentOptions, TrainOptions};
+use wtacrs::ops::{BudgetSchedule, MethodSpec};
+use wtacrs::runtime::{Backend, NativeBackend};
+use wtacrs::util::error::Result;
+
+fn backend() -> Result<Box<dyn Backend>> {
+    Ok(Box::new(NativeBackend::new()))
+}
+
+fn opts(schedule: BudgetSchedule) -> ExperimentOptions {
+    ExperimentOptions {
+        train: TrainOptions { lr: 1e-3, max_steps: 6, schedule, ..Default::default() },
+        train_size: 128,
+        val_size: 32,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn every_family_times_schedule_cell_reports_budgets_summing_to_total() {
+    let backend = NativeBackend::new();
+    // The classic tiny stack: 3 approximated linears, one cache slot
+    // per batch row, so each layer's contraction length is the batch.
+    let n = backend.model_dims("tiny").unwrap().batch;
+    for method in ["full", "full-wtacrs30", "full-subspace16"] {
+        let spec: MethodSpec = method.parse().unwrap();
+        let expected_total = 3 * spec.estimator.k_for(n);
+        for schedule in [BudgetSchedule::Fixed, BudgetSchedule::Adaptive] {
+            let r = run_glue(&backend, "rte", "tiny", &spec, &opts(schedule)).unwrap();
+            assert!(r.report.losses.iter().all(|l| l.is_finite()), "{method}/{schedule}");
+            let budgets = &r.report.layer_budgets;
+            assert_eq!(budgets.len(), 3, "{method}/{schedule}: {budgets:?}");
+            assert!(
+                budgets.iter().all(|&k| (1..=n).contains(&k)),
+                "{method}/{schedule}: budget outside 1..={n}: {budgets:?}"
+            );
+            assert_eq!(
+                budgets.iter().sum::<usize>(),
+                expected_total,
+                "{method}/{schedule}: budgets {budgets:?} do not sum to the \
+                 configured total"
+            );
+            if !spec.estimator.is_approx() || schedule == BudgetSchedule::Fixed {
+                // Exact saves everything; a fixed schedule gives every
+                // layer the spec-derived per-layer count.
+                let per = spec.estimator.k_for(n);
+                assert_eq!(budgets, &vec![per; 3], "{method}/{schedule}");
+            }
+        }
+    }
+}
+
+fn out_dir(name: &str) -> PathBuf {
+    let d = std::env::temp_dir()
+        .join(format!("wtacrs-estmat-{}-{name}", std::process::id()));
+    std::fs::remove_dir_all(&d).ok();
+    d
+}
+
+#[test]
+fn adaptive_sweep_over_both_families_merges_byte_identically() {
+    // The acceptance sweep (`--methods full-wtacrs30,full-subspace16
+    // --budget-schedule adaptive`) at library level, run twice from
+    // scratch: the adaptive apportionment is a pure function of the
+    // norm cache, so merged.json must come out byte-identical.
+    let g = GridSpec {
+        tasks: vec!["rte".into()],
+        sizes: vec!["tiny".into()],
+        methods: vec!["full-wtacrs30".parse().unwrap(), "full-subspace16".parse().unwrap()],
+        seeds: vec![0, 1],
+    };
+    let mut b = ExperimentOptions::default();
+    b.train.max_steps = 4;
+    b.train.lr = 1e-3;
+    b.train.schedule = BudgetSchedule::Adaptive;
+    b.train_size = 48;
+    b.val_size = 24;
+
+    let mut merged = vec![];
+    for name in ["a", "b"] {
+        let out = out_dir(name);
+        let mut cfg = SweepConfig::new(&out);
+        cfg.shards = if name == "a" { 1 } else { 2 };
+        let report = run_sweep(backend, &g, &b, &cfg).unwrap();
+        assert_eq!(report.executed, 4);
+        assert!(report.quarantined.is_empty());
+        assert_eq!(report.cells.len(), 2, "one aggregated cell per method");
+        assert!(report.cells.iter().all(|c| c.scores.iter().all(|s| s.is_finite())));
+        merged.push(std::fs::read(out.join(MERGED_FILE)).unwrap());
+        std::fs::remove_dir_all(&out).ok();
+    }
+    assert_eq!(merged[0], merged[1], "adaptive merged tables diverged across runs");
+}

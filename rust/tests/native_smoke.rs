@@ -16,7 +16,7 @@ fn ten_steps_decrease_loss_on_synthetic_glue() {
     let spec = glue::task("sst2").unwrap();
     let ds = glue::generate(&spec, dims.vocab, dims.seq_len, 256, 5);
 
-    let opts = TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
+    let opts = TrainOptions { lr: 1e-3, max_steps: 0, ..Default::default() };
     let mut trainer = Trainer::new(
         &backend,
         "tiny",
@@ -77,7 +77,7 @@ fn deep_token_contracted_stack_learns_through_trainer() {
     };
     let session = backend.open(&cfg).unwrap();
     assert_eq!(session.n_approx_layers(), 5);
-    let opts = TrainOptions { lr: 2e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
+    let opts = TrainOptions { lr: 2e-3, max_steps: 0, ..Default::default() };
     let mut trainer = Trainer::from_session(session, ds.len(), opts);
     let mut batcher = Batcher::new(&ds, trainer.batch_size(), 0);
 
@@ -136,7 +136,7 @@ fn transformer_stack_learns_through_trainer() {
     };
     let session = backend.open(&cfg).unwrap();
     assert_eq!(session.n_approx_layers(), 13);
-    let opts = TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
+    let opts = TrainOptions { lr: 1e-3, max_steps: 0, ..Default::default() };
     let mut trainer = Trainer::from_session(session, ds.len(), opts);
     let mut batcher = Batcher::new(&ds, trainer.batch_size(), 0);
 
@@ -196,7 +196,7 @@ fn causal_lm_learns_through_trainer() {
     let session = backend.open(&cfg).unwrap();
     assert_eq!(session.n_approx_layers(), 13);
     assert_eq!(session.n_out(), dims.vocab, "LM head spans the vocab");
-    let opts = TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
+    let opts = TrainOptions { lr: 1e-3, max_steps: 0, ..Default::default() };
     let mut trainer = Trainer::from_session(session, ds.len(), opts);
     let mut batcher = Batcher::new(&ds, trainer.batch_size(), 0);
 
@@ -239,7 +239,7 @@ fn smoke_all_method_grid_one_step() {
     let ds = glue::generate(&spec, dims.vocab, dims.seq_len, 64, 7);
     for method in wtacrs::coordinator::experiment::METHODS {
         let spec_m: wtacrs::ops::MethodSpec = method.parse().unwrap();
-        let opts = TrainOptions { lr: 1e-3, seed: 0, max_steps: 0, eval_every: 0, patience: 0 };
+        let opts = TrainOptions { lr: 1e-3, max_steps: 0, ..Default::default() };
         let mut trainer =
             Trainer::new(&backend, "tiny", &spec_m, spec.n_out, ds.len(), opts).unwrap();
         let mut batcher = Batcher::new(&ds, trainer.batch_size(), 0);

@@ -381,6 +381,44 @@ fn mha_sampled_proj_gradient_is_unbiased() {
 }
 
 #[test]
+fn prop_zero_budget_named_error_and_fixed_clamp() {
+    use wtacrs::estimator::Sampler;
+    use wtacrs::ops::{EstCtx, Estimator, EstimatorSpec, SubspaceSpec};
+    // The documented floor: a fixed budget that would round to zero
+    // pairs/rank on a tiny contraction clamps up to 1 (never 0, never
+    // above the contraction length) — for every approximating family.
+    check("fixed budgets clamp into 1..=m", &UsizeIn(1, 60), |&m| {
+        let sampled = EstimatorSpec::Sampled(SamplerSpec::new(Sampler::WtaCrs, 1).unwrap());
+        let sketch = EstimatorSpec::Subspace(SubspaceSpec::new(1).unwrap());
+        [sampled, sketch].iter().all(|sp| (1..=m).contains(&sp.k_for(m)))
+    });
+    // ...while an explicit adaptive per-layer override of k = 0 is a
+    // *named* error, not a silent clamp, on both families.
+    let h = Mat::randn(6, 5, &mut Rng::new(1));
+    let w = Mat::randn(5, 4, &mut Rng::new(2));
+    let zn = vec![1.0f32; 6];
+    let cases = [
+        (
+            EstimatorSpec::Sampled(SamplerSpec::new(Sampler::WtaCrs, 30).unwrap()),
+            "at least one column-row pair is required; fixed budgets clamp to k = 1",
+        ),
+        (
+            EstimatorSpec::Subspace(SubspaceSpec::new(16).unwrap()),
+            "the sketch needs rank >= 1",
+        ),
+    ];
+    for (spec, needle) in cases {
+        let est = spec.build(Contraction::Rows);
+        let mut rng = Rng::new(3);
+        let e = est
+            .forward(&h, &w, EstCtx::new(&zn, &mut rng, Some(0)))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("k = 0") && e.contains(needle), "{e}");
+    }
+}
+
+#[test]
 fn prop_estimator_unbiased_small() {
     // Cheap statistical check over random instances: the Monte-Carlo mean
     // over 600 trials must land within a loose band of the exact product.
