@@ -1,0 +1,252 @@
+"""PR 10 calibration: pluggable optimizer seam + whole-footprint memory.
+
+Mirrors the numeric surfaces PR 10 adds behind `optim::OptimizerSpec`,
+in float32 like the Rust kernels:
+
+1. Adam kernel — the bias-corrected first step collapses to a signed
+   step of ~lr per element (m/sqrt(v) = 0.1g / 0.0316|g| times the
+   0.3162 correction), and the full trajectory drives a quadratic to
+   its minimum.  This is the kernel the Rust seam keeps bitwise from
+   the pre-seam trainer, so the mirror pins its closed forms.
+
+2. AdaFactored kernel — on a *constant rank-1* gradient the factored
+   reconstruction vr_i*vc_j / sum(vr) equals the dense second-moment
+   EMA exactly (all three EMAs share one time profile), so the
+   factored trajectory must match a dense-v reference elementwise.
+
+3. State-layout arithmetic — per-spec state shapes/bytes
+   (adam 2*4*r*c, adafactored 4*(r+c), sgd 0), the checkpoint stride
+   `1 + len(state_names)` and snapshot tensor count `1 + stride*P`.
+
+4. Whole-footprint arithmetic on the tiny depth-2 transformer — the
+   exact parameter shape list the builder draws, per-rule optimizer
+   bytes, the committed wtacrs30 tape pin (572,048 B), and the
+   identity `total == params + optimizer + tape` with
+   adafactored < 0.15x adam's optimizer bytes.  Plus the lora variant:
+   frozen trunk => only adapter + head parameters carry state.
+
+5. memsim's analytic factored term — re-derive `factored_state_count`
+   for a T5-3B-shaped encoder-decoder and check O(r+c) really is
+   <1% of the dense 2*r*c enumeration over the same trainable set.
+"""
+import math
+
+import numpy as np
+
+
+def banner(name):
+    print(f"\n== {name} ==")
+
+
+f32 = np.float32
+
+
+# ---------------------------------------------------------------------------
+# Optimizer kernels (optim::Adam / optim::AdaFactored mirrors)
+# ---------------------------------------------------------------------------
+
+
+def adam_step(w, m, v, g, step, lr):
+    """rust: m=0.9m+0.1g; v=0.999v+0.001g^2; w -= lr*bc * m/(sqrt(v)+1e-8)."""
+    bc = f32(math.sqrt(1.0 - 0.999**step) / (1.0 - 0.9**step))
+    m[:] = f32(0.9) * m + f32(0.1) * g
+    v[:] = f32(0.999) * v + f32(0.001) * g * g
+    w -= lr * bc * m / (np.sqrt(v) + f32(1e-8))
+
+
+def adafactored_step(w, vr, vc, g, step, lr):
+    """rust: row/col squared-mass EMAs, v_hat = vr_i*vc_j/sum(vr)/bc2."""
+    vr[:] = f32(0.999) * vr + f32(0.001) * (g * g).sum(axis=1, dtype=f32)
+    vc[:] = f32(0.999) * vc + f32(0.001) * (g * g).sum(axis=0, dtype=f32)
+    bc2 = f32(1.0 - 0.999**step)
+    denom = max(float(vr.sum(dtype=f32)), 1e-30)
+    vhat = np.maximum(np.outer(vr / f32(denom), vc) / bc2, f32(0.0))
+    w -= lr * g / (np.sqrt(vhat) + f32(1e-8))
+
+
+def adam_first_step_pin():
+    banner("adam first step ~= lr * sign(g) (bias-corrected closed form)")
+    g = np.array([[3.0, -0.25, 1e-3], [-40.0, 0.5, -7.0]], dtype=f32)
+    w = np.zeros_like(g)
+    m, v = np.zeros_like(g), np.zeros_like(g)
+    lr = f32(1e-3)
+    adam_step(w, m, v, g, 1, lr)
+    # step1: lr*bc * 0.1g / (sqrt(0.001)|g| + 1e-8), bc = sqrt(.001)/.1
+    # = lr * g/|g| up to the 1e-8 epsilon.
+    rel = np.abs(-w / (lr * np.sign(g)) - 1.0)
+    print(f"  max deviation from lr*sign(g): {rel.max():.2e}")
+    assert rel.max() < 1e-3, rel
+
+    # Trajectory: minimize 0.5*(w - t)^2 — must land on t.
+    t = np.array([[1.0, -2.0], [0.5, 3.0]], dtype=f32)
+    w = np.zeros_like(t)
+    m, v = np.zeros_like(t), np.zeros_like(t)
+    for step in range(1, 401):
+        adam_step(w, m, v, w - t, step, f32(0.05))
+    err = float(np.abs(w - t).max())
+    print(f"  quadratic after 400 steps: max |w - t| = {err:.4f}")
+    assert err < 0.05, err
+
+
+def factored_matches_dense_on_rank_one():
+    banner("adafactored == dense-v EMA on constant rank-1 gradients")
+    a = np.array([1.5, -0.5, 2.0, 0.25], dtype=f32)
+    b = np.array([0.5, 3.0, -1.0], dtype=f32)
+    g = np.outer(a, b).astype(f32)
+    lr = f32(1e-2)
+
+    wf = np.zeros_like(g)
+    vr = np.zeros(len(a), dtype=f32)
+    vc = np.zeros(len(b), dtype=f32)
+
+    wd = np.zeros_like(g)
+    v = np.zeros_like(g)
+    for step in range(1, 51):
+        adafactored_step(wf, vr, vc, g, step, lr)
+        # Dense reference: same second-moment EMA, no first moment.
+        v[:] = f32(0.999) * v + f32(0.001) * g * g
+        vhat = v / f32(1.0 - 0.999**step)
+        wd -= lr * g / (np.sqrt(vhat) + f32(1e-8))
+    rel = float(np.abs(wf - wd).max() / np.abs(wd).max())
+    print(f"  50-step trajectory divergence: {rel:.2e} (band < 1e-4)")
+    assert rel < 1e-4, rel
+    # Both walk every element at ~lr per step once v_hat ~ g^2.
+    assert np.all(np.sign(wf) == -np.sign(g))
+
+
+# ---------------------------------------------------------------------------
+# State layout + snapshot arithmetic (OptimizerSpec::state_* mirrors)
+# ---------------------------------------------------------------------------
+
+SPECS = {
+    "adam": {"names": ["m", "v"], "shapes": lambda r, c: [(r, c), (r, c)]},
+    "adafactored": {"names": ["vr", "vc"], "shapes": lambda r, c: [(r, 1), (1, c)]},
+    "sgd": {"names": [], "shapes": lambda r, c: []},
+}
+
+
+def state_bytes(spec, r, c):
+    return sum(4 * sr * sc for sr, sc in SPECS[spec]["shapes"](r, c))
+
+
+def layout_arithmetic():
+    banner("state shapes / checkpoint stride / snapshot tensor counts")
+    r, c = 512, 768
+    assert state_bytes("adam", r, c) == 2 * 4 * r * c
+    assert state_bytes("adafactored", r, c) == 4 * (r + c)
+    assert state_bytes("sgd", r, c) == 0
+    ratio = state_bytes("adafactored", r, c) / state_bytes("adam", r, c)
+    print(f"  512x768: factored/adam state ratio {ratio:.5f}")
+    assert ratio < 0.01
+
+    # State vector [step, (w, state...)*P]: stride 1 + names.
+    for spec, info in SPECS.items():
+        stride = 1 + len(info["names"])
+        for n_params in (18, 26):  # full / lora tiny depth-2 transformer
+            assert 1 + stride * n_params == {
+                ("adam", 18): 55,
+                ("adam", 26): 79,
+                ("adafactored", 18): 55,
+                ("adafactored", 26): 79,
+                ("sgd", 18): 19,
+                ("sgd", 26): 27,
+            }[(spec, n_params)]
+    print("  stride = 1 + len(state_names); tensors = 1 + stride*P  ok")
+
+
+# ---------------------------------------------------------------------------
+# Whole-footprint arithmetic (TrainSession::memory_footprint mirror)
+# ---------------------------------------------------------------------------
+
+# Builder shapes for the tiny (d=128, d_ff=256, n_out=2) transformer.
+D, FF, NOUT, LORA_RANK = 128, 256, 2, 8
+
+
+def full_param_shapes(depth):
+    shapes = []
+    for _ in range(depth):
+        shapes += [(D, D)] * 4  # wq wk wv wproj
+        shapes += [(D, FF), (1, FF), (FF, D), (1, D)]  # ffn w1 b1 w2 b2
+    shapes += [(D, NOUT), (1, NOUT)]  # head + bias
+    return shapes
+
+
+def lora_param_shapes(depth):
+    k = LORA_RANK
+    shapes = []
+    for _ in range(depth):
+        shapes += [(D, k), (k, D)] * 4  # q/k/v/proj adapter pairs
+        shapes += [(D, k), (k, FF), (FF, k), (k, D)]  # ffn adapter pairs
+    shapes += [(D, NOUT), (1, NOUT)]  # head stays fully trained
+    return shapes
+
+
+# Committed deterministic tape pin (PR 4/6): tiny depth-2 wtacrs30.
+TAPE_FULL_TF = 572_048
+
+
+def footprint_arithmetic():
+    banner("tiny depth-2 transformer whole-footprint table")
+    full = full_param_shapes(2)
+    lora = lora_param_shapes(2)
+    assert len(full) == 8 * 2 + 2 and len(lora) == 12 * 2 + 2
+
+    pb = {name: sum(4 * r * c for r, c in sh) for name, sh in
+          (("full", full), ("lora", lora))}
+    opt = {
+        (fam, spec): sum(state_bytes(spec, r, c) for r, c in sh)
+        for fam, sh in (("full", full), ("lora", lora))
+        for spec in SPECS
+    }
+    for fam in ("full", "lora"):
+        for spec in SPECS:
+            tape = TAPE_FULL_TF if fam == "full" else None
+            total = pb[fam] + opt[(fam, spec)] + (tape or 0)
+            line = f"  {fam:4} {spec:12} params {pb[fam]:>8} + opt {opt[(fam, spec)]:>8}"
+            if tape is not None:
+                line += f" + tape {tape} = {total}"
+            print(line)
+    # Adam doubles the parameter memory; factored stays under 15%.
+    assert opt[("full", "adam")] == 2 * pb["full"]
+    assert opt[("lora", "adam")] == 2 * pb["lora"]
+    assert opt[("full", "adafactored")] < 0.15 * opt[("full", "adam")]
+    assert opt[("full", "sgd")] == 0
+    # The lora trunk is frozen: its whole parameter+optimizer budget is
+    # a small fraction of full fine-tuning's.
+    assert pb["lora"] < 0.25 * pb["full"]
+    # total == params + optimizer + tape, the end-to-end identity.
+    assert pb["full"] + opt[("full", "adam")] + TAPE_FULL_TF == 3 * pb["full"] + TAPE_FULL_TF
+
+
+# ---------------------------------------------------------------------------
+# memsim analytic factored term (memsim::factored_state_count mirror)
+# ---------------------------------------------------------------------------
+
+
+def memsim_factored_ratio():
+    banner("memsim factored term on T5-3B dims (enc-dec)")
+    d, da, ff, nl, vocab = 1024, 4096, 16384, 48, 32128
+    n_dec = nl // 2
+    n_enc = nl - n_dec
+    attn_f = 3 * (d + da) + (da + d)
+    block_enc_f = attn_f + (d + ff) + (ff + d) + 4 * d
+    block_dec_f = block_enc_f + attn_f + 2 * d
+    factored = (vocab + d) + n_enc * block_enc_f + n_dec * block_dec_f + 2 * d
+
+    attn_d = 3 * d * da + da * d
+    block_enc_d = attn_d + d * ff + ff * d + 4 * d
+    block_dec_d = block_enc_d + attn_d + 2 * d
+    dense2 = 2 * ((vocab * d + d) + n_enc * block_enc_d + n_dec * block_dec_d + 2 * d)
+
+    ratio = factored / dense2
+    print(f"  factored {factored:,} vs adam {dense2:,} elements -> {ratio:.5f}")
+    assert ratio < 0.01, ratio
+
+
+if __name__ == "__main__":
+    adam_first_step_pin()
+    factored_matches_dense_on_rank_one()
+    layout_arithmetic()
+    footprint_arithmetic()
+    memsim_factored_ratio()
+    print("\ncheck_pr10: all mirrors agree")

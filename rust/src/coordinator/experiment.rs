@@ -11,6 +11,7 @@ use crate::data::glue::{self, TaskSpec};
 use crate::data::{Batcher, Corpus};
 use crate::nn::{Arch, ModelSpec};
 use crate::ops::{Family, MethodSpec};
+use crate::optim::MemoryFootprint;
 use crate::runtime::{Backend, SessionConfig};
 use crate::util::error::Result;
 use crate::util::json::{self, Json};
@@ -44,6 +45,19 @@ pub fn default_lr(method: &MethodSpec) -> f32 {
 
 // NOTE: the (size, method, n_out) -> artifact-id mapping lives with its
 // only consumer, `runtime::pjrt::artifact_ids` (feature `pjrt`).
+
+/// The measured memory footprint as a JSON object — the one
+/// serialization every result surface (train CLI `--out`, sweep rows)
+/// shares, so the `total == param + optimizer + tape` identity reads
+/// the same everywhere.
+pub fn footprint_json(fp: &MemoryFootprint) -> Json {
+    json::obj(vec![
+        ("param_bytes", json::num(fp.param_bytes as f64)),
+        ("optimizer_bytes", json::num(fp.optimizer_bytes as f64)),
+        ("tape_bytes", json::num(fp.tape_bytes as f64)),
+        ("total", json::num(fp.total as f64)),
+    ])
+}
 
 /// One (task, method) outcome.
 #[derive(Debug, Clone)]
@@ -83,6 +97,7 @@ impl TaskResult {
                     self.report.layer_budgets.iter().map(|&k| json::num(k as f64)),
                 ),
             ),
+            ("footprint", footprint_json(&self.report.footprint)),
         ])
     }
 }
@@ -180,6 +195,8 @@ pub struct LmResult {
     /// Realized per-layer estimator budgets of the last step (what the
     /// budget schedule actually assigned).
     pub layer_budgets: Vec<usize>,
+    /// Whole training-memory budget measured from the live session.
+    pub footprint: MemoryFootprint,
 }
 
 impl LmResult {
@@ -202,6 +219,7 @@ impl LmResult {
                 "layer_budgets",
                 json::arr(self.layer_budgets.iter().map(|&k| json::num(k as f64))),
             ),
+            ("footprint", footprint_json(&self.footprint)),
         ])
     }
 }
@@ -268,6 +286,7 @@ pub fn run_lm(
     cfg.lr = opts.train.lr;
     cfg.model = opts.model;
     cfg.schedule = opts.train.schedule;
+    cfg.optimizer = opts.train.optimizer;
     let session = backend.open(&cfg)?;
 
     let train_n = if opts.train_size > 0 { opts.train_size } else { 2048 };
@@ -328,6 +347,7 @@ pub fn run_lm(
         tape_bytes: stats.total,
         peak_saved_bytes: trainer.peak_saved_bytes(),
         layer_budgets: stats.budgets,
+        footprint: trainer.memory_footprint(),
     })
 }
 
@@ -400,11 +420,19 @@ mod tests {
             tape_bytes: 0,
             peak_saved_bytes: 0,
             layer_budgets: vec![10, 10, 10],
+            footprint: MemoryFootprint::new(100, 200, 0),
         };
         let s = json::write(&r.to_json());
-        for needle in
-            ["\"task\"", "\"lm\"", "\"nll\"", "\"ppl\"", "full-wtacrs30", "\"layer_budgets\""]
-        {
+        for needle in [
+            "\"task\"",
+            "\"lm\"",
+            "\"nll\"",
+            "\"ppl\"",
+            "full-wtacrs30",
+            "\"layer_budgets\"",
+            "\"footprint\"",
+            "\"optimizer_bytes\"",
+        ] {
             assert!(s.contains(needle), "{needle} missing from {s}");
         }
     }

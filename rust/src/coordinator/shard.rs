@@ -46,8 +46,9 @@ use crate::util::json::{self, Json};
 use crate::util::stats::Summary;
 use crate::{anyhow, bail};
 
-use super::experiment::{default_lr, run_glue, run_lm, ExperimentOptions};
+use super::experiment::{default_lr, footprint_json, run_glue, run_lm, ExperimentOptions};
 use super::sweep::SweepCell;
+use crate::optim::MemoryFootprint;
 
 /// Manifest schema version; bumped on incompatible layout changes.
 pub const MANIFEST_VERSION: u64 = 1;
@@ -203,6 +204,7 @@ pub fn options_json(o: &ExperimentOptions) -> Json {
         ("eval_every", json::num(o.train.eval_every as f64)),
         ("patience", json::num(o.train.patience as f64)),
         ("budget_schedule", json::s(&o.train.schedule.to_string())),
+        ("optimizer", json::s(&o.train.optimizer.to_string())),
         ("train_size", json::num(o.train_size as f64)),
         ("val_size", json::num(o.val_size as f64)),
         ("data_seed", json::num(o.data_seed as f64)),
@@ -457,6 +459,11 @@ pub struct CellRow {
     pub seconds: f64,
     pub shard: usize,
     pub attempt: usize,
+    /// Measured whole-footprint memory of the cell's session (weights +
+    /// optimizer state + last step's tape).  Deterministic per cell, so
+    /// it can ride in the row; absent in pre-PR-10 result streams and
+    /// read back as zeros there.
+    pub footprint: MemoryFootprint,
 }
 
 impl CellRow {
@@ -472,10 +479,18 @@ impl CellRow {
             ("seconds", json::num(self.seconds)),
             ("shard", json::num(self.shard as f64)),
             ("attempt", json::num(self.attempt as f64)),
+            ("footprint", footprint_json(&self.footprint)),
         ])
     }
 
     pub fn from_json(j: &Json, what: &str) -> Result<CellRow> {
+        // Footprint is tolerant: rows written before the field existed
+        // (or by foreign writers) read back as zeros instead of failing
+        // the whole stream.
+        let fp = j.get("footprint");
+        let fp_num = |k: &str| -> usize {
+            fp.and_then(|f| f.get(k)).and_then(Json::as_f64).unwrap_or(0.0) as usize
+        };
         Ok(CellRow {
             cell: req_num(j, "cell", what)? as usize,
             task: req_str(j, "task", what)?.to_string(),
@@ -487,6 +502,12 @@ impl CellRow {
             seconds: req_num(j, "seconds", what)?,
             shard: req_num(j, "shard", what)? as usize,
             attempt: req_num(j, "attempt", what)? as usize,
+            footprint: MemoryFootprint {
+                param_bytes: fp_num("param_bytes"),
+                optimizer_bytes: fp_num("optimizer_bytes"),
+                tape_bytes: fp_num("tape_bytes"),
+                total: fp_num("total"),
+            },
         })
     }
 }
@@ -665,7 +686,7 @@ pub fn run_cell(
     backend: &dyn Backend,
     cell: &CellSpec,
     base: &ExperimentOptions,
-) -> Result<(f64, String)> {
+) -> Result<(f64, String, MemoryFootprint)> {
     let mut o = base.clone();
     o.train.seed = cell.seed;
     if o.train.lr <= 0.0 {
@@ -680,10 +701,10 @@ pub fn run_cell(
             );
         }
         let r = run_lm(backend, &cell.size, &cell.method, &o)?;
-        Ok((r.eval_nll, "nll".to_string()))
+        Ok((r.eval_nll, "nll".to_string(), r.footprint))
     } else {
         let r = run_glue(backend, &cell.task, &cell.size, &cell.method, &o)?;
-        Ok((r.score, r.metric_name.to_string()))
+        Ok((r.score, r.metric_name.to_string(), r.report.footprint))
     }
 }
 
@@ -757,12 +778,13 @@ fn worker(shared: &Shared<'_>, shard: usize) -> ShardStats {
         let cell = &shared.cells[id];
 
         let tc = Instant::now();
-        let caught = catch_unwind(AssertUnwindSafe(|| -> Result<(f64, String)> {
-            let backend = (shared.make_backend)()?;
-            run_cell(backend.as_ref(), cell, shared.base)
-        }));
+        let caught =
+            catch_unwind(AssertUnwindSafe(|| -> Result<(f64, String, MemoryFootprint)> {
+                let backend = (shared.make_backend)()?;
+                run_cell(backend.as_ref(), cell, shared.base)
+            }));
         let seconds = tc.elapsed().as_secs_f64();
-        let outcome: Result<(f64, String)> = match caught {
+        let outcome: Result<(f64, String, MemoryFootprint)> = match caught {
             Ok(r) => r,
             Err(p) => Err(anyhow!("panicked: {}", panic_message(p.as_ref()))),
         };
@@ -775,7 +797,7 @@ fn worker(shared: &Shared<'_>, shard: usize) -> ShardStats {
             break;
         }
         match outcome {
-            Ok((score, metric)) => {
+            Ok((score, metric, footprint)) => {
                 let row = CellRow {
                     cell: id,
                     task: cell.task.clone(),
@@ -787,6 +809,7 @@ fn worker(shared: &Shared<'_>, shard: usize) -> ShardStats {
                     seconds,
                     shard,
                     attempt,
+                    footprint,
                 };
                 if let Err(e) =
                     fsatomic::append_line(&shared.results_path, &json::write(&row.to_json()))
@@ -1162,6 +1185,16 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("budget_schedule") || e.contains("options"), "{e}");
+
+        // Scores trained under different optimizers are likewise not
+        // comparable: the optimizer axis is part of the digest.
+        let mut base4 = ExperimentOptions::default();
+        base4.train.optimizer = crate::optim::OptimizerSpec::AdaFactored;
+        let e = m
+            .check_compatible(&g, &options_json(&base4))
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("optimizer") || e.contains("options"), "{e}");
     }
 
     #[test]
@@ -1181,6 +1214,7 @@ mod tests {
             seconds: 0.1,
             shard: 0,
             attempt: 1,
+            footprint: MemoryFootprint::new(100, 200, 300),
         };
         let line = json::write(&row.to_json());
 
@@ -1190,6 +1224,7 @@ mod tests {
         assert_eq!(rows.len(), 1);
         assert_eq!(rows[0].cell, 0);
         assert_eq!(rows[0].metric, "accuracy");
+        assert_eq!(rows[0].footprint, MemoryFootprint::new(100, 200, 300));
 
         // Corruption in the MIDDLE is a hard error naming the line.
         std::fs::write(&p, format!("garbage\n{line}\n")).unwrap();
@@ -1217,6 +1252,7 @@ mod tests {
             seconds: 0.01 * id as f64,
             shard: id % 3,
             attempt,
+            footprint: MemoryFootprint::default(),
         };
         let mut rows: Vec<CellRow> =
             (0..cells.len()).map(|i| mk(i, 0.1 * i as f64, 1)).collect();
@@ -1258,6 +1294,7 @@ mod tests {
                 seconds: 0.0,
                 shard: 0,
                 attempt: 1,
+                footprint: MemoryFootprint::default(),
             })
             .collect();
         let merged = merge_rows(&g, &rows);

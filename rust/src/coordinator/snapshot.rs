@@ -8,7 +8,7 @@
 //! with names, dtypes, shapes and byte offsets, so a reader can map
 //! individual tensors lazily instead of slurping the whole file.
 //!
-//! Wire format (version 2, magic `WTACRSS2`):
+//! Wire format (version 3, magic `WTACRSS3`):
 //!
 //! ```text
 //! magic[8] | manifest_len u64 LE | manifest JSON (UTF-8) | payload
@@ -25,9 +25,13 @@
 //! name.
 //!
 //! Tensor naming follows the trainer's positional state layout
-//! (`NativeSession::state`): index 0 is `"step"`, then `param{p}.w` /
-//! `param{p}.m` / `param{p}.v` per trainable parameter in graph order —
-//! the serving loader picks out exactly the `*.w` entries.
+//! (`NativeSession::state`): index 0 is `"step"`, then per trainable
+//! parameter in graph order `param{p}.w` followed by one
+//! `param{p}.opt.{name}` entry per optimizer-state tensor the
+//! snapshot's [`OptimizerSpec`] declares (`opt.m`/`opt.v` for Adam,
+//! `opt.vr`/`opt.vc` for the factored rule, nothing for SGD) — the
+//! serving loader picks out exactly the `*.w` entries, so it never
+//! touches (or depends on) the optimizer family.
 
 use std::fmt;
 use std::io::{Read, Seek, SeekFrom};
@@ -36,18 +40,21 @@ use std::str::FromStr;
 
 use crate::nn::{Arch, ModelSpec};
 use crate::ops::{Contraction, MethodSpec};
+use crate::optim::OptimizerSpec;
 use crate::runtime::{DType, HostTensor, TensorData};
 use crate::util::error::{Context, Error, Result};
 use crate::util::fsatomic;
 use crate::util::json::{self, Json};
 use crate::{anyhow, bail};
 
-/// Format magic; the trailing `2` is the format version.
-pub const SNAPSHOT_MAGIC: &[u8; 8] = b"WTACRSS2";
+/// Format magic; the trailing `3` is the format version (v3 added the
+/// optimizer family to the meta and generalized state-tensor names to
+/// `param{p}.opt.{name}`).
+pub const SNAPSHOT_MAGIC: &[u8; 8] = b"WTACRSS3";
 
 /// Manifest version recorded inside the JSON (kept in lockstep with the
 /// magic; a reader checks both).
-pub const SNAPSHOT_VERSION: u64 = 2;
+pub const SNAPSHOT_VERSION: u64 = 3;
 
 /// Upper bound on the manifest length field — anything larger is a
 /// corrupt or hostile header, not a real manifest.
@@ -79,6 +86,10 @@ pub struct SnapshotMeta {
     pub n_out: usize,
     /// Parameter-init seed (the graph skeleton is rebuilt from it).
     pub seed: u64,
+    /// Update rule whose state tensors ride in the payload — it decides
+    /// the `param{p}.opt.{name}` table entries, and a trainer restoring
+    /// this snapshot must be configured with the same spec.
+    pub optimizer: OptimizerSpec,
     /// Architecture knobs.
     pub spec: ModelSpec,
 }
@@ -126,6 +137,7 @@ impl SnapshotManifest {
             ("method", json::s(&self.meta.method.to_string())),
             ("n_out", json::num(self.meta.n_out as f64)),
             ("seed", json::num(self.meta.seed as f64)),
+            ("optimizer", json::s(self.meta.optimizer.as_str())),
             (
                 "model",
                 json::obj(vec![
@@ -189,6 +201,11 @@ impl SnapshotManifest {
             .as_usize()
             .ok_or_else(|| anyhow!("snapshot manifest: seed is not a number"))?
             as u64;
+        let optimizer: OptimizerSpec = field("optimizer")?
+            .as_str()
+            .ok_or_else(|| anyhow!("snapshot manifest: optimizer is not a string"))?
+            .parse()
+            .context("snapshot manifest: optimizer")?;
         let model = field("model")?;
         let mfield = |k: &str| {
             model
@@ -267,7 +284,7 @@ impl SnapshotManifest {
             .to_string();
         u64::from_str_radix(&checksum, 16)
             .map_err(|_| anyhow!("snapshot manifest: checksum {checksum:?} is not hex"))?;
-        let meta = SnapshotMeta { size, method, n_out, seed, spec };
+        let meta = SnapshotMeta { size, method, n_out, seed, optimizer, spec };
         Ok(SnapshotManifest { version, meta, tensors, checksum })
     }
 }
@@ -286,14 +303,18 @@ impl FromStr for SnapshotManifest {
     }
 }
 
-/// Name for state-layout slot `i` (`NativeSession::state` order).
-pub fn state_tensor_name(i: usize) -> String {
+/// Name for state-layout slot `i` (`NativeSession::state` order) under
+/// the given update rule: `step`, then per parameter `param{p}.w`
+/// followed by one `param{p}.opt.{name}` per optimizer-state tensor.
+pub fn state_tensor_name(optimizer: OptimizerSpec, i: usize) -> String {
     if i == 0 {
-        "step".to_string()
-    } else {
-        let p = (i - 1) / 3;
-        let slot = ["w", "m", "v"][(i - 1) % 3];
-        format!("param{p}.{slot}")
+        return "step".to_string();
+    }
+    let stride = 1 + optimizer.state_names().len();
+    let p = (i - 1) / stride;
+    match (i - 1) % stride {
+        0 => format!("param{p}.w"),
+        s => format!("param{p}.opt.{}", optimizer.state_names()[s - 1]),
     }
 }
 
@@ -306,8 +327,10 @@ fn tensor_bytes(t: &HostTensor) -> Vec<u8> {
 }
 
 /// Write a versioned snapshot: `state` is a trainer state vector
-/// (`TrainSession::state` layout — `[step, (w, m, v) per param]`), and
-/// `meta` the configuration that produced it.  Written via
+/// (`TrainSession::state` layout — `[step, per param: w plus the
+/// optimizer's named state tensors]`), and `meta` the configuration
+/// that produced it (its `optimizer` decides the expected stride and
+/// the `param{p}.opt.{name}` table entries).  Written via
 /// [`fsatomic::atomic_write`] (uniquely-named staged sibling, synced,
 /// renamed), so a kill mid-save never leaves a truncated snapshot.
 pub fn save_snapshot(
@@ -315,11 +338,13 @@ pub fn save_snapshot(
     meta: &SnapshotMeta,
     state: &[HostTensor],
 ) -> Result<()> {
-    if state.is_empty() || (state.len() - 1) % 3 != 0 {
+    let stride = 1 + meta.optimizer.state_names().len();
+    if state.is_empty() || (state.len() - 1) % stride != 0 {
         bail!(
-            "snapshot: state vector has {} tensors, expected 1 + 3·params \
-             (the trainer state layout)",
-            state.len()
+            "snapshot: state vector has {} tensors, expected 1 + {stride}·params \
+             (the {} trainer state layout)",
+            state.len(),
+            meta.optimizer
         );
     }
     let mut tensors = Vec::with_capacity(state.len());
@@ -330,7 +355,7 @@ pub fn save_snapshot(
         let bytes = tensor_bytes(t);
         checksum = fnv1a64(checksum, &bytes);
         tensors.push(TensorEntry {
-            name: state_tensor_name(i),
+            name: state_tensor_name(meta.optimizer, i),
             dtype: t.dtype(),
             shape: t.shape.clone(),
             offset,
@@ -494,6 +519,7 @@ mod tests {
             method: "full-wtacrs30".parse().unwrap(),
             n_out: 2,
             seed: 7,
+            optimizer: OptimizerSpec::Adam,
             spec: ModelSpec {
                 depth: 2,
                 width: 0,
@@ -553,7 +579,7 @@ mod tests {
         assert_eq!(r.manifest().tensors.len(), 4);
         assert_eq!(r.manifest().tensors[0].name, "step");
         assert_eq!(r.manifest().tensors[1].name, "param0.w");
-        assert_eq!(r.manifest().tensors[3].name, "param0.v");
+        assert_eq!(r.manifest().tensors[3].name, "param0.opt.v");
         for (i, want) in state().iter().enumerate() {
             assert_eq!(&r.tensor(i).unwrap(), want, "tensor {i}");
         }
@@ -614,10 +640,20 @@ mod tests {
 
     #[test]
     fn state_layout_names() {
-        assert_eq!(state_tensor_name(0), "step");
-        assert_eq!(state_tensor_name(1), "param0.w");
-        assert_eq!(state_tensor_name(3), "param0.v");
-        assert_eq!(state_tensor_name(4), "param1.w");
+        let adam = OptimizerSpec::Adam;
+        assert_eq!(state_tensor_name(adam, 0), "step");
+        assert_eq!(state_tensor_name(adam, 1), "param0.w");
+        assert_eq!(state_tensor_name(adam, 3), "param0.opt.v");
+        assert_eq!(state_tensor_name(adam, 4), "param1.w");
+        let fac = OptimizerSpec::AdaFactored;
+        assert_eq!(state_tensor_name(fac, 1), "param0.w");
+        assert_eq!(state_tensor_name(fac, 2), "param0.opt.vr");
+        assert_eq!(state_tensor_name(fac, 3), "param0.opt.vc");
+        assert_eq!(state_tensor_name(fac, 4), "param1.w");
+        // SGD keeps no state: every non-step slot is a weight.
+        let sgd = OptimizerSpec::Sgd;
+        assert_eq!(state_tensor_name(sgd, 1), "param0.w");
+        assert_eq!(state_tensor_name(sgd, 2), "param1.w");
     }
 
     #[test]
@@ -625,5 +661,19 @@ mod tests {
         let p = tmpfile("short");
         let e = save_snapshot(&p, &meta(), &state()[..3]).unwrap_err().to_string();
         assert!(e.contains("1 + 3·params"), "{e}");
+        // The stride follows the meta's optimizer: the same 3-tensor
+        // vector IS a valid 1-param sgd layout... but 4 tensors is not.
+        let mut m = meta();
+        m.optimizer = OptimizerSpec::Sgd;
+        save_snapshot(&p, &m, &state()[..3]).unwrap();
+        std::fs::remove_file(&p).ok();
+        let mut fac = meta();
+        fac.optimizer = OptimizerSpec::AdaFactored;
+        save_snapshot(&p, &fac, &state()).unwrap();
+        let mut r = SnapshotReader::open(&p).unwrap();
+        assert_eq!(r.manifest().tensors[2].name, "param0.opt.vr");
+        assert_eq!(r.manifest().meta.optimizer, OptimizerSpec::AdaFactored);
+        r.verify_checksum().unwrap();
+        std::fs::remove_file(&p).ok();
     }
 }

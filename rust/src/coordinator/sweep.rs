@@ -99,7 +99,8 @@ where
     let base = base.clone();
     let run_one = move |cell: CellSpec| -> Result<(f64, String)> {
         let backend = make_backend()?;
-        run_cell(backend.as_ref(), &cell, &base)
+        let (score, metric, _footprint) = run_cell(backend.as_ref(), &cell, &base)?;
+        Ok((score, metric))
     };
 
     let outcomes: Vec<Result<(f64, String)>> = match pool {

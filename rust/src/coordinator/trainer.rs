@@ -15,6 +15,7 @@ use crate::data::glue::Dataset;
 use crate::metrics::{self, MetricKind};
 use crate::nn::{ModelSpec, TapeStats};
 use crate::ops::{BudgetSchedule, MethodSpec};
+use crate::optim::{MemoryFootprint, OptimizerSpec};
 use crate::runtime::{Backend, HostTensor, SessionConfig, TrainSession};
 use crate::util::error::Result;
 
@@ -34,6 +35,9 @@ pub struct TrainOptions {
     /// paper's global fraction; `adaptive` re-apportions the same total
     /// by each layer's share of the cached gradient-norm mass).
     pub schedule: BudgetSchedule,
+    /// Update rule (`adam` is the bitwise-pinned default; `adafactored`
+    /// keeps O(r+c) second-moment state; `sgd` keeps none).
+    pub optimizer: OptimizerSpec,
 }
 
 impl Default for TrainOptions {
@@ -45,6 +49,7 @@ impl Default for TrainOptions {
             eval_every: 0,
             patience: 0,
             schedule: BudgetSchedule::Fixed,
+            optimizer: OptimizerSpec::Adam,
         }
     }
 }
@@ -75,6 +80,10 @@ pub struct TrainReport {
     /// kept / sketch rank per approximated linear) — what the budget
     /// schedule actually assigned (`TapeStats::budgets`).
     pub layer_budgets: Vec<usize>,
+    /// The whole training-memory budget measured from the live session
+    /// — weights + optimizer state + the last step's tape, with
+    /// `total` always the sum of the parts.
+    pub footprint: MemoryFootprint,
 }
 
 /// A live training session bound to an execution backend.
@@ -116,6 +125,7 @@ impl Trainer {
         cfg.lr = opts.lr;
         cfg.model = model;
         cfg.schedule = opts.schedule;
+        cfg.optimizer = opts.optimizer;
         let session = backend.open(&cfg)?;
         Ok(Self::from_session(session, n_samples, opts))
     }
@@ -169,6 +179,12 @@ impl Trainer {
     /// the first step, or when the backend cannot measure).
     pub fn tape_stats(&self) -> TapeStats {
         self.session.tape_stats()
+    }
+
+    /// Whole-footprint memory accounting of the live session (weights +
+    /// optimizer state + last step's tape).
+    pub fn memory_footprint(&self) -> MemoryFootprint {
+        self.session.memory_footprint()
     }
 
     /// Measured activation bytes the last step's sampled ops stored,
@@ -288,6 +304,7 @@ impl Trainer {
             tape_bytes: stats.total,
             peak_saved_bytes: self.peak_saved_bytes,
             layer_budgets: stats.budgets,
+            footprint: self.session.memory_footprint(),
         })
     }
 

@@ -73,9 +73,11 @@
 //!    [`runtime::NativeBackend`] (default) drives the module graph
 //!    pure-Rust: [`runtime::SessionConfig`] carries the
 //!    [`nn::ModelSpec`], the session derives `n_approx_layers` from the
-//!    graph, runs one Adam step over the graph's parameter visitors,
-//!    and surfaces measured [`nn::TapeStats`] through
-//!    `TrainSession::tape_stats`.  The [`coordinator`] owns data,
+//!    graph, runs one step of its configured [`optim::Optimizer`] over
+//!    the graph's parameter visitors, and surfaces measured
+//!    [`nn::TapeStats`] through `TrainSession::tape_stats` plus the
+//!    whole-footprint [`optim::MemoryFootprint`] through
+//!    `TrainSession::memory_footprint`.  The [`coordinator`] owns data,
 //!    evaluation, checkpoints and the gradient-norm cache.
 //!    `runtime::PjrtBackend` (behind the **`pjrt`** cargo feature)
 //!    executes AOT-lowered HLO artifacts instead; the feature alone
@@ -122,6 +124,37 @@
 //! the train report).  `examples/quickstart.rs` §9 walks through
 //! adding a new family end to end.
 //!
+//! ## The pluggable optimizer seam
+//!
+//! The update rule is the same kind of seam on the other side of the
+//! backward pass.  Parameters ([`nn::Param`]) hold only weight and
+//! gradient; all trainer state lives in session-owned
+//! `optim::OptState`s shaped by an [`optim::OptimizerSpec`]
+//! (`FromStr`/`Display`; `wtacrs train --optimizer
+//! adam|adafactored|sgd`, and `wtacrs sweep --optimizer a,b` runs the
+//! grid once per rule):
+//!
+//! * **`adam`** (default) — dense first/second moments, *bitwise
+//!   identical* to the historical hard-coded kernel
+//!   (`tests/optimizer_matrix.rs` pins implicit-default vs explicit).
+//! * **`adafactored`** — row/column-factored second moments in the
+//!   Adafactor style: `O(r + c)` state per matrix parameter instead of
+//!   Adam's `2·r·c`, with the first moment dropped.
+//! * **`sgd`** — stateless; the trivial exact reference.
+//!
+//! The spec, not the session, decides everything downstream: snapshot
+//! tensors are named `param{p}.opt.{name}` from
+//! `OptimizerSpec::state_names`, a restore under a different rule is
+//! refused naming *both* specs, [`memsim`]'s analytic `optimizer` term
+//! takes the same spec, and `TrainSession::memory_footprint` reports
+//! the whole training residency `params + optimizer + tape` (the
+//! train report and sweep rows carry it).  Tuning families compose
+//! with the rule: the lora/lst families now build transformer and
+//! causal-LM stacks too — a frozen [`nn::LoraAdapter`] trunk
+//! contributes no parameters and therefore no optimizer state, so both
+//! terms shrink to adapters + head.  `examples/quickstart.rs` §10
+//! walks through adding a new update rule.
+//!
 //! Run the suite offline with default features:
 //!
 //! ```text
@@ -151,7 +184,7 @@
 //! optimizer state in memory:
 //!
 //! * **Snapshots** — [`coordinator::snapshot`] writes a versioned
-//!   manifest format (`WTACRSS2`: typed meta + named tensor table +
+//!   manifest format (`WTACRSS3`: typed meta + named tensor table +
 //!   payload checksum) over the trainer's state vector;
 //!   [`serve::ServeModel::from_snapshot`] rebuilds the graph from the
 //!   manifest alone and lazily reads only the `param{p}.w` weights.
@@ -265,6 +298,7 @@ pub mod memsim;
 pub mod metrics;
 pub mod nn;
 pub mod ops;
+pub mod optim;
 pub mod runtime;
 pub mod serve;
 pub mod testing;

@@ -22,6 +22,7 @@ use wtacrs::data::{glue, Corpus};
 use wtacrs::memsim::{self, tables, Scope, Workload};
 use wtacrs::nn::{Arch, ModelSpec};
 use wtacrs::ops::{Contraction, MethodSpec};
+use wtacrs::optim::MemoryFootprint;
 use wtacrs::runtime::native::{size_dims, NativeSession};
 use wtacrs::runtime::{Backend, Manifest, NativeBackend, SessionConfig, TrainSession};
 use wtacrs::serve::{Engine, EngineConfig, EngineReport, ServeModel};
@@ -97,6 +98,21 @@ fn make_backend(name: &str) -> Result<Box<dyn Backend>> {
     }
 }
 
+/// Print the measured whole-footprint line `wtacrs train` reports for
+/// every run: weights + optimizer state + last step's tape, with the
+/// total always the sum of the parts.
+fn print_footprint(fp: &MemoryFootprint) {
+    let kib = |b: usize| b as f64 / 1024.0;
+    println!(
+        "memory footprint: params {:.1} KiB + optimizer {:.1} KiB + tape {:.1} KiB \
+         = {:.1} KiB",
+        kib(fp.param_bytes),
+        kib(fp.optimizer_bytes),
+        kib(fp.tape_bytes),
+        kib(fp.total),
+    );
+}
+
 fn cmd_train(args: &[String]) -> Result<()> {
     let cli = Cli::new("wtacrs train", "fine-tune on a synthetic GLUE task")
         .opt(
@@ -127,6 +143,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
             "fixed",
             "per-layer estimator budgets: fixed (the method's global fraction) or \
              adaptive (re-apportion the same total by cached gradient-norm mass)",
+        )
+        .opt(
+            "optimizer",
+            "adam",
+            "update rule: adam (bitwise-pinned default), adafactored (factored \
+             second moments, O(r+c) state), or sgd (stateless)",
         )
         .opt("arch", "mlp", "trunk architecture (mlp|transformer|causal-lm)")
         .opt(
@@ -179,6 +201,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             eval_every: p.get_usize("eval-every")?,
             patience: p.get_usize("patience")?,
             schedule: p.get("budget-schedule").parse()?,
+            optimizer: p.get("optimizer").parse()?,
         },
         model,
         ..Default::default()
@@ -211,6 +234,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
             );
             println!("realized per-layer budgets: {:?}", res.layer_budgets);
         }
+        print_footprint(&res.footprint);
         let out = p.get("out");
         if !out.is_empty() {
             coordinator::experiment::write_lm_results(out, std::slice::from_ref(&res))?;
@@ -247,6 +271,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         );
         println!("realized per-layer budgets: {:?}", res.report.layer_budgets);
     }
+    print_footprint(&res.report.footprint);
     let out = p.get("out");
     if !out.is_empty() {
         coordinator::experiment::write_results(out, std::slice::from_ref(&res))?;
@@ -360,6 +385,11 @@ fn cmd_memsim(args: &[String]) -> Result<()> {
         .opt("batch", "64", "batch size")
         .opt("seq", "128", "sequence length")
         .opt("budget-gb", "80", "GPU budget for max-batch (Fig 6)")
+        .opt(
+            "optimizer",
+            "adam",
+            "update rule behind the optimizer-state term (adam|adafactored|sgd)",
+        )
         .flag("help", "show options");
     let p = cli.parse(args)?;
     if p.get_flag("help") {
@@ -370,10 +400,20 @@ fn cmd_memsim(args: &[String]) -> Result<()> {
     let Some(dims) = memsim::Dims::paper(model) else {
         bail!("unknown model {model:?}");
     };
+    let optimizer: wtacrs::optim::OptimizerSpec = p.get("optimizer").parse()?;
     let w = Workload { batch: p.get_usize("batch")?, seq: p.get_usize("seq")?, bytes: 4 };
 
-    println!("# {} — params {:.0}M", model, dims.param_count() as f64 / 1e6);
-    let bd = memsim::breakdown(&dims, &memsim::MethodMem::full(), &w, Scope::Paper);
+    println!(
+        "# {} — params {:.0}M (optimizer: {optimizer})",
+        model,
+        dims.param_count() as f64 / 1e6
+    );
+    let bd = memsim::breakdown(
+        &dims,
+        &memsim::MethodMem::full().with_optimizer(optimizer),
+        &w,
+        Scope::Paper,
+    );
     println!(
         "breakdown (Full, B={}, S={}): params {:.2}GB grads {:.2}GB opt {:.2}GB act {:.2}GB ws {:.2}GB ({}% activations)",
         w.batch,
@@ -387,6 +427,7 @@ fn cmd_memsim(args: &[String]) -> Result<()> {
     );
     let mut t = Table::new(&["method", "peak GB", "ratio", "max batch @budget"]);
     for m in tables::table2_methods() {
+        let m = m.with_optimizer(optimizer);
         let (name, gb, ratio) = tables::table2_row(&dims, &m, &w, Scope::Paper);
         let mb = memsim::max_batch(&dims, &m, w.seq, 4, p.get_f64("budget-gb")? * 1e9, Scope::Paper);
         t.row(&[name, format!("{gb:.2}"), format!("{ratio:.2}x"), format!("{mb}")]);
@@ -591,6 +632,12 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
          adaptive (re-apportion the same total by cached gradient-norm mass)",
     )
     .opt(
+        "optimizer",
+        "adam",
+        "comma list of update rules (adam|adafactored|sgd); more than one runs \
+         one sweep per rule into <out>/<rule> subdirectories",
+    )
+    .opt(
         "out",
         "results/sweep",
         "output directory (manifest.json, results.jsonl, merged.json)",
@@ -651,6 +698,13 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
         1 => Contraction::Rows,
         n => Contraction::Tokens { per_sample: n },
     };
+    let optimizers = split("optimizer")
+        .iter()
+        .map(|s| s.parse::<wtacrs::optim::OptimizerSpec>())
+        .collect::<Result<Vec<_>>>()?;
+    if optimizers.is_empty() {
+        bail!("sweep: --optimizer needs at least one rule");
+    }
     let base = ExperimentOptions {
         train: TrainOptions {
             lr: p.get_f64("lr")? as f32,
@@ -659,6 +713,7 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
             eval_every: 0,
             patience: 0,
             schedule: p.get("budget-schedule").parse()?,
+            optimizer: optimizers[0],
         },
         train_size: p.get_usize("train-size")?,
         val_size: p.get_usize("val-size")?,
@@ -684,44 +739,58 @@ fn cmd_sweep(args: &[String]) -> Result<()> {
     // inside every cell.
     drop(make_backend(&backend_name)?);
 
-    let report = coordinator::run_sweep(
-        move || make_backend(&backend_name),
-        &grid,
-        &base,
-        &cfg,
-    )?;
+    // One full sweep per requested update rule: the rule is part of the
+    // manifest's options digest, so each rule owns its own directory
+    // (resume included) when more than one is swept.
+    let multi = optimizers.len() > 1;
+    for spec in &optimizers {
+        let mut base = base.clone();
+        base.train.optimizer = *spec;
+        let mut cfg = cfg.clone();
+        if multi {
+            cfg.out = cfg.out.join(spec.to_string());
+            println!("== optimizer {spec} -> {}", cfg.out.display());
+        }
+        let backend_name = backend_name.clone();
+        let report = coordinator::run_sweep(
+            move || make_backend(&backend_name),
+            &grid,
+            &base,
+            &cfg,
+        )?;
 
-    let mut t = Table::new(&["task", "size", "method", "metric", "mean±std", "n"]);
-    for c in &report.cells {
-        t.row(&[
-            c.task.clone(),
-            c.size.clone(),
-            c.method.clone(),
-            c.metric.clone(),
-            c.display(),
-            c.n.to_string(),
-        ]);
-    }
-    t.print();
-    for (cell, err) in &report.quarantined {
-        println!("quarantined cell {}: {err}", cell.id);
-    }
-    for s in &report.shard_stats {
+        let mut t = Table::new(&["task", "size", "method", "metric", "mean±std", "n"]);
+        for c in &report.cells {
+            t.row(&[
+                c.task.clone(),
+                c.size.clone(),
+                c.method.clone(),
+                c.metric.clone(),
+                c.display(),
+                c.n.to_string(),
+            ]);
+        }
+        t.print();
+        for (cell, err) in &report.quarantined {
+            println!("quarantined cell {}: {err}", cell.id);
+        }
+        for s in &report.shard_stats {
+            println!(
+                "shard {}: {} cells in {:.1}s ({:.2} cells/s; cell p50 {:.0} ms \
+                 p99 {:.0} ms)",
+                s.shard, s.cells, s.wall_seconds, s.cells_per_second, s.p50_cell_ms, s.p99_cell_ms
+            );
+        }
         println!(
-            "shard {}: {} cells in {:.1}s ({:.2} cells/s; cell p50 {:.0} ms \
-             p99 {:.0} ms)",
-            s.shard, s.cells, s.wall_seconds, s.cells_per_second, s.p50_cell_ms, s.p99_cell_ms
+            "sweep: {} cells ({} run here, {} already done) in {:.1}s; merged \
+             table at {}",
+            report.total,
+            report.executed,
+            report.skipped,
+            report.wall_seconds,
+            report.merged_path.display()
         );
     }
-    println!(
-        "sweep: {} cells ({} run here, {} already done) in {:.1}s; merged \
-         table at {}",
-        report.total,
-        report.executed,
-        report.skipped,
-        report.wall_seconds,
-        report.merged_path.display()
-    );
     Ok(())
 }
 
@@ -752,6 +821,7 @@ fn quick_train_snapshot(size: &str, steps: usize) -> Result<PathBuf> {
         method: cfg.method,
         n_out: cfg.n_out,
         seed: cfg.seed,
+        optimizer: cfg.optimizer,
         spec: cfg.model,
     };
     let path = std::env::temp_dir()

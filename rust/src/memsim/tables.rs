@@ -4,8 +4,11 @@
 use super::{breakdown, max_batch, peak_bytes, Breakdown, Dims, MethodMem, Scope, Workload};
 
 /// Table 2 row: (method name, peak GB, compression ratio vs Full).
+/// The Full baseline shares the row's update rule, so ratios compare
+/// methods, never optimizers (with the Adam default this is bitwise the
+/// historical baseline).
 pub fn table2_row(dims: &Dims, m: &MethodMem, w: &Workload, scope: Scope) -> (String, f64, f64) {
-    let full = peak_bytes(dims, &MethodMem::full(), w, scope);
+    let full = peak_bytes(dims, &MethodMem::full().with_optimizer(m.optimizer), w, scope);
     let peak = peak_bytes(dims, m, w, scope);
     (m.name.to_string(), peak / 1e9, full / peak)
 }

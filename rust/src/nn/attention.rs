@@ -15,9 +15,10 @@
 //!   sample's token rows, as a standalone module over a packed
 //!   `[Q | K | V]` input; [`ScaledDotProductAttention::causal`] applies
 //!   the autoregressive mask before the score softmax.
-//! * [`MultiHeadAttention`] — four sampled [`Linear`]s (q/k/v/proj,
-//!   each with its own norm-cache layer slot) around the attention
-//!   core.  It saves its input *once* and recomputes Q/K/V in backward
+//! * [`MultiHeadAttention`] — four sampled projections (q/k/v/proj,
+//!   each with its own norm-cache layer slot; fully-trained [`Linear`]s
+//!   or frozen-trunk [`LoraAdapter`]s) around the attention core.  It
+//!   saves its input *once* and recomputes Q/K/V in backward
 //!   (three cheap GEMMs), instead of keeping three full activations
 //!   alive; the attention weights are saved exactly — which is why the
 //!   attention tape ratio is honestly weaker than the MLP's (~0.46x vs
@@ -34,7 +35,7 @@ use crate::ops::Estimator;
 use crate::util::error::Result;
 
 use super::decode::DecodeState;
-use super::layers::Linear;
+use super::layers::{Linear, LoraAdapter};
 use super::module::{BackwardCtx, ForwardCtx, Module, Param};
 use super::sequential::Sequential;
 use super::tape::Saved;
@@ -496,20 +497,85 @@ impl Module for ScaledDotProductAttention {
     fn visit_params_mut(&mut self, _f: &mut dyn FnMut(&mut Param)) {}
 }
 
-/// Multi-head attention: four op-run [`Linear`]s (q, k, v, proj — norm
+/// One of the four attention projections: a fully-trained op-run
+/// [`Linear`] (the full family) or a frozen trunk weight with a
+/// trainable rank-r [`LoraAdapter`] (the lora family).  Both push their
+/// own tape entries through the shared [`Module`] discipline, so the
+/// MHA forward/backward orchestration is variant-agnostic; the enum
+/// additionally exposes the *effective* projection for the backward's
+/// Q/K/V recompute.
+enum Proj {
+    Dense(Linear),
+    Lora(LoraAdapter),
+}
+
+impl Proj {
+    /// Input width the projection consumes.
+    fn d_in(&self) -> usize {
+        match self {
+            Proj::Dense(l) => l.p.w.rows,
+            Proj::Lora(l) => l.a.w.rows,
+        }
+    }
+
+    /// The projection output recomputed without a tape — what the MHA
+    /// backward rebuilds Q/K/V from.  Dense stays the literal GEMM (the
+    /// historical recompute, bitwise); Lora replays the frozen trunk +
+    /// adapter inference forward, which equals its training-forward
+    /// value because estimators sample only the weight-gradient GEMM.
+    fn recompute(&self, x: &Mat) -> Result<Mat> {
+        match self {
+            Proj::Dense(l) => Ok(x.matmul(&l.p.w)),
+            Proj::Lora(l) => l.forward(x.clone(), &mut ForwardCtx::eval()),
+        }
+    }
+
+    fn forward(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
+        match self {
+            Proj::Dense(l) => l.forward(x, ctx),
+            Proj::Lora(l) => l.forward(x, ctx),
+        }
+    }
+
+    fn backward(&mut self, dy: Mat, ctx: &mut BackwardCtx<'_>) -> Result<Mat> {
+        match self {
+            Proj::Dense(l) => l.backward(dy, ctx),
+            Proj::Lora(l) => l.backward(dy, ctx),
+        }
+    }
+
+    fn visit_params(&self, f: &mut dyn FnMut(&Param)) {
+        match self {
+            Proj::Dense(l) => l.visit_params(f),
+            Proj::Lora(l) => l.visit_params(f),
+        }
+    }
+
+    fn visit_params_mut(&mut self, f: &mut dyn FnMut(&mut Param)) {
+        match self {
+            Proj::Dense(l) => l.visit_params_mut(f),
+            Proj::Lora(l) => l.visit_params_mut(f),
+        }
+    }
+}
+
+/// Multi-head attention: four op-run projections (q, k, v, proj — norm
 /// cache layer slots `base..=base+3`) around the per-head attention
-/// core.
+/// core.  Each projection is a fully-trained [`Linear`]
+/// ([`MultiHeadAttention::new`]) or a frozen weight plus trainable
+/// rank-r adapter ([`MultiHeadAttention::new_lora`]); see [`Proj`].
 ///
-/// Tape discipline: the four linears push their estimator save states
-/// as usual (the WTA-CRS / subspace weight-gradient estimates), the
-/// attention weights are saved exactly, and the module keeps *one* full
-/// copy of its input from which Q, K and V are recomputed in backward —
-/// three cheap GEMMs instead of three cached `n × d` activations.
+/// Tape discipline: the four projections push their estimator save
+/// states as usual (the WTA-CRS / subspace weight-gradient estimates),
+/// the attention weights are saved exactly, and the module keeps *one*
+/// full copy of its input from which Q, K and V are recomputed in
+/// backward — three cheap GEMMs instead of three cached `n × d`
+/// activations.
 pub struct MultiHeadAttention {
-    q: Linear,
-    k: Linear,
-    v: Linear,
-    proj: Linear,
+    q: Proj,
+    k: Proj,
+    v: Proj,
+    proj: Proj,
     heads: usize,
     per_sample: usize,
     causal: bool,
@@ -527,28 +593,85 @@ impl MultiHeadAttention {
         heads: usize,
         per_sample: usize,
     ) -> Result<Self> {
+        Self::check_weights(&weights, heads, per_sample)?;
         let [wq, wk, wv, wp] = weights;
-        let d = wq.rows;
+        Ok(MultiHeadAttention {
+            q: Proj::Dense(Linear::new(wq, op.clone(), base, true)),
+            k: Proj::Dense(Linear::new(wk, op.clone(), base + 1, true)),
+            v: Proj::Dense(Linear::new(wv, op.clone(), base + 2, true)),
+            proj: Proj::Dense(Linear::new(wp, op, base + 3, true)),
+            heads,
+            per_sample,
+            causal: false,
+        })
+    }
+
+    /// The lora-family constructor: the four trunk `weights` are frozen
+    /// and each projection trains only its `(A, B)` adapter pair from
+    /// `adapters` (q/k/v/proj order; `A` is `(d, r)`, `B` is `(r, d)`).
+    /// Norm-cache slot claims and the tape/recompute discipline match
+    /// [`Self::new`]; frozen weights are not [`Param`]s, so they carry
+    /// no gradient and no optimizer state.
+    pub fn new_lora(
+        weights: [Mat; 4],
+        adapters: [(Mat, Mat); 4],
+        op: impl Estimator + Clone + 'static,
+        base: usize,
+        heads: usize,
+        per_sample: usize,
+    ) -> Result<Self> {
+        let d = Self::check_weights(&weights, heads, per_sample)?;
+        for (slot, (a, b)) in adapters.iter().enumerate() {
+            if a.rows != d || a.cols == 0 || (b.rows, b.cols) != (a.cols, d) {
+                bail!(
+                    "mha lora: adapter {slot} must pair a {d}xr A with an rx{d} B, \
+                     got {}x{} and {}x{}",
+                    a.rows,
+                    a.cols,
+                    b.rows,
+                    b.cols
+                );
+            }
+        }
+        let [wq, wk, wv, wp] = weights;
+        let [aq, ak, av, ap] = adapters;
+        let mk = |w: Mat, (a, b): (Mat, Mat), slot: usize| {
+            Proj::Lora(LoraAdapter::new(
+                w,
+                Mat::zeros(1, d),
+                a,
+                b,
+                op.clone(),
+                slot,
+                true,
+            ))
+        };
+        Ok(MultiHeadAttention {
+            q: mk(wq, aq, base),
+            k: mk(wk, ak, base + 1),
+            v: mk(wv, av, base + 2),
+            proj: mk(wp, ap, base + 3),
+            heads,
+            per_sample,
+            causal: false,
+        })
+    }
+
+    /// Shared `[wq, wk, wv, wproj]` validation; returns `d_model`.
+    fn check_weights(weights: &[Mat; 4], heads: usize, per_sample: usize) -> Result<usize> {
+        let d = weights[0].rows;
         if heads == 0 || per_sample == 0 {
             bail!("mha: heads and per_sample must be >= 1");
         }
         if d == 0 || d % heads != 0 {
             bail!("mha: d_model {d} not divisible into {heads} heads");
         }
-        for (name, w) in [("wq", &wq), ("wk", &wk), ("wv", &wv), ("wproj", &wp)] {
+        for (name, w) in ["wq", "wk", "wv", "wproj"].iter().zip(weights) {
             if (w.rows, w.cols) != (d, d) {
                 bail!("mha: {name} must be {d}x{d}, got {}x{}", w.rows, w.cols);
             }
         }
-        Ok(MultiHeadAttention {
-            q: Linear::new(wq, op.clone(), base, true),
-            k: Linear::new(wk, op.clone(), base + 1, true),
-            v: Linear::new(wv, op.clone(), base + 2, true),
-            proj: Linear::new(wp, op, base + 3, true),
-            heads,
-            per_sample,
-            causal: false,
-        })
+        Ok(d)
     }
 
     /// Toggle the autoregressive mask (builder style): with `causal`
@@ -563,7 +686,7 @@ impl MultiHeadAttention {
 
     /// Width the module operates at.
     pub fn d_model(&self) -> usize {
-        self.q.p.w.rows
+        self.q.d_in()
     }
 
     fn forward_inner(&self, x: Mat, ctx: &mut ForwardCtx<'_>) -> Result<Mat> {
@@ -591,10 +714,11 @@ impl MultiHeadAttention {
         let Saved::Acts(attn) = ctx.tape.pop(self.name())? else {
             bail!("mha: expected the saved attention weights");
         };
-        // Recompute Q/K/V from the one saved input.
-        let qm = x.matmul(&self.q.p.w);
-        let km = x.matmul(&self.k.p.w);
-        let vm = x.matmul(&self.v.p.w);
+        // Recompute Q/K/V from the one saved input (the Dense arm is
+        // the historical literal GEMM, bitwise).
+        let qm = self.q.recompute(&x)?;
+        let km = self.k.recompute(&x)?;
+        let vm = self.v.recompute(&x)?;
         let (dq, dk, dv) =
             sdpa_backward(&d_ao, &qm, &km, &vm, &attn, self.heads, self.per_sample);
         let mut dx = self.v.backward(dv, ctx)?;
@@ -1145,6 +1269,64 @@ mod tests {
         });
         assert_eq!(grads, 4);
         assert!(norms.iter().all(|v| v.is_finite() && *v >= 0.0));
+    }
+
+    #[test]
+    fn mha_lora_adapters_train_and_match_dense_at_zero_b() {
+        let (b, t, d, heads) = (4, 4, 16, 4);
+        let n = b * t;
+        let mut rng = Rng::new(17);
+        let w: [Mat; 4] = std::array::from_fn(|_| Mat::randn(d, d, &mut rng).scale(0.3));
+        let adapters: [(Mat, Mat); 4] = std::array::from_fn(|_| {
+            (Mat::randn(d, 8, &mut rng).scale(0.25), Mat::zeros(8, d))
+        });
+        let dense =
+            MultiHeadAttention::new(w.clone(), exact_tokens(t), 0, heads, t).unwrap();
+        let lora =
+            MultiHeadAttention::new_lora(w, adapters, exact_tokens(t), 0, heads, t)
+                .unwrap();
+        assert_eq!(lora.d_model(), d);
+        let x = Mat::randn(n, d, &mut rng);
+        let want = dense.forward(x.clone(), &mut ForwardCtx::eval()).unwrap();
+        let at_zero = lora.forward(x.clone(), &mut ForwardCtx::eval()).unwrap();
+        assert_eq!(at_zero, want, "zero-initialized B must reproduce the trunk");
+
+        let zn = vec![1.0f32; 4 * b];
+        let mut tape = Tape::new();
+        let mut fctx = train_ctx(&mut tape, &zn, b, 7);
+        let y = lora.forward(x, &mut fctx).unwrap();
+        assert_eq!(y, want);
+        // 4 adapter (ctx + kept input) pairs + attention weights + the
+        // module's one kept input.
+        assert_eq!(tape.len(), 10);
+
+        let mut m = lora;
+        let mut norms = vec![0.0f32; 4 * b];
+        let mut bctx = BackwardCtx { tape: &mut tape, norms: &mut norms, slots: b };
+        let dy = Mat::randn(n, d, &mut rng);
+        let dx = m.backward(dy, &mut bctx).unwrap();
+        assert!(tape.is_empty(), "lora mha backward must drain its tape entries");
+        assert_eq!((dx.rows, dx.cols), (n, d));
+        assert!(dx.data.iter().all(|v| v.is_finite()));
+        let (mut params, mut grads) = (0, 0);
+        m.visit_params(&mut |p| {
+            params += 1;
+            if p.g.is_some() {
+                grads += 1;
+            }
+        });
+        assert_eq!(params, 8, "only the (a, b) adapter halves are trainable");
+        assert_eq!(grads, 8, "every adapter half receives a gradient");
+
+        // A mismatched adapter pair reports, never shape-panics.
+        let w: [Mat; 4] = std::array::from_fn(|_| Mat::randn(d, d, &mut rng));
+        let bad: [(Mat, Mat); 4] = std::array::from_fn(|_| {
+            (Mat::randn(d, 8, &mut rng), Mat::zeros(4, d))
+        });
+        let e = MultiHeadAttention::new_lora(w, bad, exact_tokens(t), 0, heads, t)
+            .unwrap_err()
+            .to_string();
+        assert!(e.contains("adapter"), "{e}");
     }
 
     #[test]

@@ -344,24 +344,24 @@ impl ModelBuilder {
 
     /// The pre-norm transformer stack (`Arch::Transformer` and
     /// `Arch::CausalLm`): `depth` residual blocks of multi-head
-    /// attention (q/k/v/proj as four sampled linears over batch×token
-    /// rows) plus a sampled FFN.  `Transformer` pools the token rows
-    /// and classifies with a `Rows`-contracted sampled head;
+    /// attention (q/k/v/proj as four sampled projections over
+    /// batch×token rows) plus a sampled FFN.  `Transformer` pools the
+    /// token rows and classifies with a `Rows`-contracted sampled head;
     /// `CausalLm` masks every attention core causally and ends in a
     /// token-axis [`LmHead`] (sampled under the trunk's `Tokens`
     /// contraction, per-token logits, no pooling).  6 norm-cache layer
     /// slots per block, plus one for whichever head.
+    ///
+    /// Families: `full` trains every trunk linear; `lora` freezes the
+    /// trunk (q/k/v/proj and both FFN linears each carry a trainable
+    /// rank-[`LORA_RANK`] adapter pair, the head trains as usual, and
+    /// frozen weights hold no gradient or optimizer state); `lst`
+    /// narrows the FFN — the only width the residual stream leaves
+    /// free — by [`LST_FACTOR`], training the slim stack exactly.
     fn build_transformer(&self, rng: &mut Rng) -> Result<BuiltModel> {
         let StackDims { vocab, seq, d_model: d, d_ff, n_out } = self.dims;
         let arch = self.spec.arch;
         let causal = arch == Arch::CausalLm;
-        if self.method.family != Family::Full {
-            bail!(
-                "{arch} arch supports the full family only for now \
-                 (got {}); lora/lst adapters over attention are future work",
-                self.method.family
-            );
-        }
         let depth = self.spec.depth;
         if depth == 0 {
             bail!("{arch} arch needs depth >= 1 (residual blocks)");
@@ -380,38 +380,118 @@ impl ModelBuilder {
                  (pass --heads to a divisor of the model width)"
             );
         }
-        let f = if self.spec.width > 0 { self.spec.width } else { d_ff };
+        let mut f = if self.spec.width > 0 { self.spec.width } else { d_ff };
+        if self.method.family == Family::Lst {
+            // The residual stream pins d_model, so the ladder narrows
+            // the one free width: the FFN.
+            f = (f / LST_FACTOR).max(1);
+        }
         let op = self.method.estimator.build(self.spec.contraction);
         let head_op = self.method.estimator.build(Contraction::Rows);
 
         // Draw order: embed, per block (wq, wk, wv, wproj, ff1, ff2),
-        // head — mirrored by python/mirror/nn_attention.py (pooled) and
-        // python/mirror/nn_causal.py (causal).
+        // head, then — lora only — the per-block adapter A matrices
+        // (q/k/v/proj/ff1/ff2 order; B starts at zero and draws
+        // nothing).  Mirrored by python/mirror/nn_attention.py (pooled)
+        // and python/mirror/nn_causal.py (causal).  Trunk and head
+        // draws are family-independent, so a seeded lora run freezes
+        // bit-for-bit the weights the full run trains.
         let embed = Mat::randn(vocab, d, rng);
         let attn_scale = (1.0 / d as f64).sqrt() as f32;
         let ff1_scale = (2.0 / d as f64).sqrt() as f32;
         let ff2_scale = (1.0 / f as f64).sqrt() as f32;
+        let block_w: Vec<[Mat; 6]> = (0..depth)
+            .map(|_| {
+                [
+                    Mat::randn(d, d, rng).scale(attn_scale),
+                    Mat::randn(d, d, rng).scale(attn_scale),
+                    Mat::randn(d, d, rng).scale(attn_scale),
+                    Mat::randn(d, d, rng).scale(attn_scale),
+                    Mat::randn(d, f, rng).scale(ff1_scale),
+                    Mat::randn(f, d, rng).scale(ff2_scale),
+                ]
+            })
+            .collect();
+        let head = Mat::randn(d, n_out, rng).scale((1.0 / d as f64).sqrt() as f32);
+        let mut adapters: Vec<[(Mat, Mat); 6]> = Vec::new();
+        if self.method.family == Family::Lora {
+            let pair = |din: usize, dout: usize, rng: &mut Rng| {
+                (
+                    Mat::randn(din, LORA_RANK, rng)
+                        .scale((1.0 / din as f64).sqrt() as f32),
+                    Mat::zeros(LORA_RANK, dout),
+                )
+            };
+            adapters = (0..depth)
+                .map(|_| {
+                    [
+                        pair(d, d, rng),
+                        pair(d, d, rng),
+                        pair(d, d, rng),
+                        pair(d, d, rng),
+                        pair(d, f, rng),
+                        pair(f, d, rng),
+                    ]
+                })
+                .collect();
+        }
+
         let mut graph = Sequential::new().push(MeanPoolEmbed::new(embed, seq, ps)?);
-        for b in 0..depth {
+        let mut ad = adapters.into_iter();
+        for (b, [wq, wk, wv, wp, w1, w2]) in block_w.into_iter().enumerate() {
             let base = b * 6;
-            let wq = Mat::randn(d, d, rng).scale(attn_scale);
-            let wk = Mat::randn(d, d, rng).scale(attn_scale);
-            let wv = Mat::randn(d, d, rng).scale(attn_scale);
-            let wp = Mat::randn(d, d, rng).scale(attn_scale);
-            let w1 = Mat::randn(d, f, rng).scale(ff1_scale);
-            let w2 = Mat::randn(f, d, rng).scale(ff2_scale);
-            let mha =
-                MultiHeadAttention::new([wq, wk, wv, wp], op.clone(), base, heads, ps)?
-                    .with_causal(causal);
-            let ffn = Sequential::new()
-                .push(Linear::new(w1, op.clone(), base + 4, true))
-                .push(Bias::new(f))
-                .push(Relu)
-                .push(Linear::new(w2, op.clone(), base + 5, true))
-                .push(Bias::new(d));
+            let (mha, ffn) = if self.method.family == Family::Lora {
+                let [aq, ak, av, ap, a1, a2] =
+                    ad.next().expect("one adapter set per block");
+                let mha = MultiHeadAttention::new_lora(
+                    [wq, wk, wv, wp],
+                    [aq, ak, av, ap],
+                    op.clone(),
+                    base,
+                    heads,
+                    ps,
+                )?
+                .with_causal(causal);
+                let ffn = Sequential::new()
+                    .push(LoraAdapter::new(
+                        w1,
+                        Mat::zeros(1, f),
+                        a1.0,
+                        a1.1,
+                        op.clone(),
+                        base + 4,
+                        true,
+                    ))
+                    .push(Relu)
+                    .push(LoraAdapter::new(
+                        w2,
+                        Mat::zeros(1, d),
+                        a2.0,
+                        a2.1,
+                        op.clone(),
+                        base + 5,
+                        true,
+                    ));
+                (mha, ffn)
+            } else {
+                let mha = MultiHeadAttention::new(
+                    [wq, wk, wv, wp],
+                    op.clone(),
+                    base,
+                    heads,
+                    ps,
+                )?
+                .with_causal(causal);
+                let ffn = Sequential::new()
+                    .push(Linear::new(w1, op.clone(), base + 4, true))
+                    .push(Bias::new(f))
+                    .push(Relu)
+                    .push(Linear::new(w2, op.clone(), base + 5, true))
+                    .push(Bias::new(d));
+                (mha, ffn)
+            };
             graph = graph.push(TransformerBlock::new(mha, ffn));
         }
-        let head = Mat::randn(d, n_out, rng).scale((1.0 / d as f64).sqrt() as f32);
         let graph = if causal {
             // Token-axis LM head: per-token logits straight off the
             // token rows, sampled under the same Tokens contraction as
@@ -620,12 +700,6 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("heads") && e.contains("divide"), "{e}");
-        // full family only, like the transformer.
-        let e = ModelBuilder::new(dims(), m("lora-wtacrs30"), lm_spec(1, 4, 4))
-            .build(&mut Rng::new(0))
-            .unwrap_err()
-            .to_string();
-        assert!(e.contains("full family"), "{e}");
     }
 
     #[test]
@@ -648,11 +722,51 @@ mod tests {
             .unwrap_err()
             .to_string();
         assert!(e.contains("not divisible"), "{e}");
-        // lora over attention is future work
-        let e = ModelBuilder::new(dims(), m("lora-wtacrs30"), tf_spec(1, 4, 4))
+    }
+
+    #[test]
+    fn transformer_lora_and_lst_counts() {
+        // lora: the trunk freezes; each block trains six adapter (a, b)
+        // pairs and whichever head keeps its linear + bias.
+        for depth in [1, 2] {
+            for spec in [tf_spec(depth, 4, 4), lm_spec(depth, 4, 4)] {
+                let b = ModelBuilder::new(dims(), m("lora-wtacrs30"), spec);
+                let built = b.build(&mut Rng::new(0)).unwrap();
+                assert_eq!(built.n_approx, 6 * depth + 1, "depth {depth}");
+                assert_eq!(built.graph.n_params(), 12 * depth + 2, "depth {depth}");
+            }
+        }
+        // lst narrows the FFN width only: module and param counts match
+        // the full stack (and LST composes with no sampler, as ever).
+        let built = ModelBuilder::new(dims(), m("lst"), tf_spec(2, 4, 4))
             .build(&mut Rng::new(0))
-            .unwrap_err()
-            .to_string();
-        assert!(e.contains("full family"), "{e}");
+            .unwrap();
+        assert_eq!(built.n_approx, 13);
+        assert_eq!(built.graph.n_params(), 8 * 2 + 2);
+        assert!(ModelBuilder::new(dims(), m("lst"), lm_spec(1, 4, 4))
+            .build(&mut Rng::new(0))
+            .is_ok());
+    }
+
+    #[test]
+    fn transformer_lora_at_init_matches_frozen_full_forward() {
+        use crate::nn::module::{ForwardCtx, Module};
+        // Zero-initialized B adapters leave the function exactly the
+        // frozen trunk, and trunk/head draws are family-independent —
+        // so fresh lora and full models from one seed emit identical
+        // logits (the lora run literally freezes the full run's
+        // weights).
+        for spec in [tf_spec(2, 4, 4), lm_spec(2, 4, 4)] {
+            let full = ModelBuilder::new(dims(), m("full"), spec)
+                .build(&mut Rng::new(7))
+                .unwrap();
+            let lora = ModelBuilder::new(dims(), m("lora"), spec)
+                .build(&mut Rng::new(7))
+                .unwrap();
+            let x = Mat::from_fn(3, 8, |r, c| ((r * 13 + c * 5) % 64) as f32);
+            let a = full.graph.forward(x.clone(), &mut ForwardCtx::eval()).unwrap();
+            let b = lora.graph.forward(x, &mut ForwardCtx::eval()).unwrap();
+            assert_eq!(a, b, "{spec:?}");
+        }
     }
 }

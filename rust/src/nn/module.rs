@@ -16,13 +16,14 @@ use crate::{anyhow, bail};
 use super::decode::DecodeState;
 use super::tape::Tape;
 
-/// One trainable tensor with its Adam state and (after a backward walk)
-/// its pending gradient.
+/// One trainable tensor and (after a backward walk) its pending
+/// gradient.  Optimizer state is *not* stored here: the session owns
+/// one [`crate::optim::OptState`] per parameter (in `visit_params`
+/// order), so the update rule — and its memory footprint — is pluggable
+/// per [`crate::optim::OptimizerSpec`].
 #[derive(Debug, Clone)]
 pub struct Param {
     pub w: Mat,
-    pub m: Mat,
-    pub v: Mat,
     /// Gradient deposited by the latest backward; `take()`n by the
     /// optimizer step.
     pub g: Option<Mat>,
@@ -30,9 +31,7 @@ pub struct Param {
 
 impl Param {
     pub fn new(w: Mat) -> Self {
-        let m = Mat::zeros(w.rows, w.cols);
-        let v = Mat::zeros(w.rows, w.cols);
-        Param { w, m, v, g: None }
+        Param { w, g: None }
     }
 
     pub fn set_grad(&mut self, g: Mat) {

@@ -1,0 +1,403 @@
+//! The pluggable optimizer seam: update rules behind a trait, state
+//! owned by the session, selected by a parse/format-round-tripping
+//! [`OptimizerSpec`] — the optimizer counterpart of the
+//! [`crate::ops::Estimator`] seam.
+//!
+//! The paper's thesis is that *activations* dominate fine-tuning
+//! memory, but Adam's dense first/second moments silently double the
+//! parameter footprint, invisible to the tape accounting.  This module
+//! makes optimizer state a first-class, measurable axis:
+//!
+//! * [`Optimizer`] — `init` allocates per-parameter state
+//!   ([`OptState`]), `update` applies one step in place, and the
+//!   state-shape surface (`state_names` / `state_shapes` /
+//!   `state_bytes`) is what checkpoints, snapshots and the memory
+//!   accountant reason over.
+//! * [`Adam`] — the default; bitwise-identical to the historical
+//!   hard-coded `adam_step` kernel (same f64 bias correction, same
+//!   fused update loop).
+//! * [`AdaFactored`] — row/column-factored second moments after
+//!   memory-efficient adaptive optimization (Anil et al.,
+//!   arXiv:1901.11150): `O(r + c)` state per `r x c` matrix instead of
+//!   Adam's `O(2·r·c)`.
+//! * [`Sgd`] — exact stateless reference.
+//!
+//! Sessions hold `Box<dyn Optimizer>` plus one [`OptState`] per
+//! trainable parameter (graph `visit_params` order); [`Param`]
+//! (`crate::nn::Param`) itself carries only the weight and the pending
+//! gradient.  [`MemoryFootprint`] is the whole-budget report — params,
+//! optimizer state, tape — measured from the live graph, not
+//! projected.
+//!
+//! [`Param`]: crate::nn::Param
+
+use std::fmt;
+use std::str::FromStr;
+
+use crate::bail;
+use crate::estimator::Mat;
+use crate::util::error::{Error, Result};
+
+/// Which update rule a session runs — the CLI-facing, round-tripping
+/// name (`--optimizer adam|adafactored|sgd`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum OptimizerSpec {
+    /// Dense-moment Adam (the historical default; bitwise-identical to
+    /// the pre-seam `adam_step` kernel).
+    #[default]
+    Adam,
+    /// Row/column-factored second moments (arXiv:1901.11150): state is
+    /// `O(r + c)` per matrix parameter instead of Adam's `2·r·c`.
+    AdaFactored,
+    /// Plain stateless SGD — the trivial exact reference.
+    Sgd,
+}
+
+impl OptimizerSpec {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OptimizerSpec::Adam => "adam",
+            OptimizerSpec::AdaFactored => "adafactored",
+            OptimizerSpec::Sgd => "sgd",
+        }
+    }
+
+    /// Every known spec (restore-mismatch diagnosis walks this).
+    pub fn all() -> [OptimizerSpec; 3] {
+        [OptimizerSpec::Adam, OptimizerSpec::AdaFactored, OptimizerSpec::Sgd]
+    }
+
+    /// Names of the per-parameter state tensors, in serialization order
+    /// (the `param{p}.opt.{name}` snapshot entries).
+    pub fn state_names(self) -> &'static [&'static str] {
+        match self {
+            OptimizerSpec::Adam => &["m", "v"],
+            OptimizerSpec::AdaFactored => &["vr", "vc"],
+            OptimizerSpec::Sgd => &[],
+        }
+    }
+
+    /// Shapes of the per-parameter state tensors for an `r x c` weight,
+    /// aligned with [`Self::state_names`].
+    pub fn state_shapes(self, rows: usize, cols: usize) -> Vec<(usize, usize)> {
+        match self {
+            OptimizerSpec::Adam => vec![(rows, cols), (rows, cols)],
+            OptimizerSpec::AdaFactored => vec![(rows, 1), (1, cols)],
+            OptimizerSpec::Sgd => vec![],
+        }
+    }
+
+    /// Optimizer-state bytes for one `r x c` parameter (f32 storage).
+    pub fn state_bytes(self, rows: usize, cols: usize) -> usize {
+        self.state_shapes(rows, cols).iter().map(|&(r, c)| 4 * r * c).sum()
+    }
+
+    /// Build the update-rule implementation this spec names.
+    pub fn build(self) -> Box<dyn Optimizer> {
+        match self {
+            OptimizerSpec::Adam => Box::new(Adam),
+            OptimizerSpec::AdaFactored => Box::new(AdaFactored),
+            OptimizerSpec::Sgd => Box::new(Sgd),
+        }
+    }
+}
+
+impl fmt::Display for OptimizerSpec {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl FromStr for OptimizerSpec {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "adam" => Ok(OptimizerSpec::Adam),
+            "adafactored" => Ok(OptimizerSpec::AdaFactored),
+            "sgd" => Ok(OptimizerSpec::Sgd),
+            other => bail!("unknown optimizer {other:?} (adam|adafactored|sgd)"),
+        }
+    }
+}
+
+/// Per-parameter optimizer state: the named tensors the spec's
+/// `state_shapes` describe, owned by the session (not the [`Param`]).
+///
+/// [`Param`]: crate::nn::Param
+#[derive(Debug, Clone, Default)]
+pub struct OptState {
+    /// State tensors in [`OptimizerSpec::state_names`] order.
+    pub tensors: Vec<Mat>,
+}
+
+impl OptState {
+    /// f32 storage bytes across all state tensors.
+    pub fn bytes(&self) -> usize {
+        self.tensors.iter().map(|t| 4 * t.data.len()).sum()
+    }
+}
+
+/// One update rule: allocates state, applies steps, and describes its
+/// state layout (the surface checkpoints and the memory accountant
+/// share).  `step` is the 1-based optimizer step counter — bias
+/// corrections are a pure function of it, so sessions need not thread
+/// extra scheduling state through.
+pub trait Optimizer: Send {
+    /// Which spec built this optimizer.
+    fn spec(&self) -> OptimizerSpec;
+
+    /// Fresh (zeroed) state for an `r x c` parameter.
+    fn init(&self, rows: usize, cols: usize) -> OptState {
+        OptState {
+            tensors: self
+                .spec()
+                .state_shapes(rows, cols)
+                .into_iter()
+                .map(|(r, c)| Mat::zeros(r, c))
+                .collect(),
+        }
+    }
+
+    /// Apply one step in place: consume gradient `g`, mutate `w` and
+    /// the parameter's state.
+    fn update(&self, w: &mut Mat, st: &mut OptState, g: &Mat, step: i32, lr: f32);
+
+    /// Names of the per-parameter state tensors (serialization order).
+    fn state_names(&self) -> &'static [&'static str] {
+        self.spec().state_names()
+    }
+
+    /// Optimizer-state bytes for one `r x c` parameter.
+    fn state_bytes(&self, rows: usize, cols: usize) -> usize {
+        self.spec().state_bytes(rows, cols)
+    }
+}
+
+/// Dense-moment Adam — bitwise-identical to the historical hard-coded
+/// `adam_step`: f64 bias correction folded into the learning rate, then
+/// one fused in-place loop per parameter.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Adam;
+
+impl Optimizer for Adam {
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Adam
+    }
+
+    fn update(&self, w: &mut Mat, st: &mut OptState, g: &Mat, step: i32, lr: f32) {
+        let bc = ((1.0 - 0.999f64.powi(step)).sqrt() / (1.0 - 0.9f64.powi(step))) as f32;
+        let lr_t = lr * bc;
+        let [m, v] = st.tensors.as_mut_slice() else {
+            unreachable!("adam state is [m, v]");
+        };
+        for ((w, m), (v, gv)) in w
+            .data
+            .iter_mut()
+            .zip(m.data.iter_mut())
+            .zip(v.data.iter_mut().zip(&g.data))
+        {
+            *m = 0.9 * *m + 0.1 * gv;
+            *v = 0.999 * *v + 0.001 * gv * gv;
+            *w -= lr_t * *m / (v.sqrt() + 1e-8);
+        }
+    }
+}
+
+/// Row/column-factored second moments (arXiv:1901.11150): keep an
+/// exponential moving average of the per-row and per-column squared
+/// gradient mass (`vr`: `r x 1`, `vc`: `1 x c`) and reconstruct the
+/// per-element second moment as their normalized outer product
+/// `v̂_ij = vr_i · vc_j / Σ vr` — `O(r + c)` state where Adam keeps
+/// `2·r·c`.  No first moment: the point of the factored family is
+/// sublinear state, and the momentum-free variant is the memory
+/// floor.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AdaFactored;
+
+impl Optimizer for AdaFactored {
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::AdaFactored
+    }
+
+    fn update(&self, w: &mut Mat, st: &mut OptState, g: &Mat, step: i32, lr: f32) {
+        let (rows, cols) = (w.rows, w.cols);
+        let [vr, vc] = st.tensors.as_mut_slice() else {
+            unreachable!("adafactored state is [vr, vc]");
+        };
+        // Per-row / per-column squared-gradient mass of this step.
+        for i in 0..rows {
+            let r: f32 = g.data[i * cols..(i + 1) * cols].iter().map(|x| x * x).sum();
+            vr.data[i] = 0.999 * vr.data[i] + 0.001 * r;
+        }
+        for j in 0..cols {
+            let mut c = 0f32;
+            for i in 0..rows {
+                let x = g.data[i * cols + j];
+                c += x * x;
+            }
+            vc.data[j] = 0.999 * vc.data[j] + 0.001 * c;
+        }
+        // Reconstruct v̂ = vr·vc / Σvr, bias-corrected like Adam's v.
+        let bc2 = (1.0 - 0.999f64.powi(step)) as f32;
+        let denom: f32 = vr.data.iter().sum::<f32>().max(1e-30);
+        for i in 0..rows {
+            let ri = vr.data[i] / denom;
+            for j in 0..cols {
+                let vhat = (ri * vc.data[j] / bc2).max(0.0);
+                w.data[i * cols + j] -= lr * g.data[i * cols + j] / (vhat.sqrt() + 1e-8);
+            }
+        }
+    }
+}
+
+/// Plain stateless SGD: `w -= lr · g`.  The trivial exact reference —
+/// zero optimizer bytes by construction.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Sgd;
+
+impl Optimizer for Sgd {
+    fn spec(&self) -> OptimizerSpec {
+        OptimizerSpec::Sgd
+    }
+
+    fn update(&self, w: &mut Mat, _st: &mut OptState, g: &Mat, _step: i32, lr: f32) {
+        for (w, gv) in w.data.iter_mut().zip(&g.data) {
+            *w -= lr * gv;
+        }
+    }
+}
+
+/// The whole training-memory budget, measured from a live session:
+/// weights, optimizer state, and the last step's saved-for-backward
+/// tape.  `total` is always the sum of the three parts — the identity
+/// the acceptance tests pin end-to-end (train CLI, sweep rows, memsim
+/// cross-check).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MemoryFootprint {
+    /// f32 bytes across every trainable weight tensor.
+    pub param_bytes: usize,
+    /// f32 bytes across every parameter's optimizer state
+    /// ([`OptState::bytes`] summed in `visit_params` order).
+    pub optimizer_bytes: usize,
+    /// Last train step's whole-tape saved-for-backward bytes
+    /// (`TapeStats::total`).
+    pub tape_bytes: usize,
+    /// `param_bytes + optimizer_bytes + tape_bytes`.
+    pub total: usize,
+}
+
+impl MemoryFootprint {
+    /// Assemble a footprint, deriving `total` as the sum of the parts.
+    pub fn new(param_bytes: usize, optimizer_bytes: usize, tape_bytes: usize) -> Self {
+        MemoryFootprint {
+            param_bytes,
+            optimizer_bytes,
+            tape_bytes,
+            total: param_bytes + optimizer_bytes + tape_bytes,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_round_trips_and_unknown_names_error() {
+        for s in ["adam", "adafactored", "sgd"] {
+            let spec: OptimizerSpec = s.parse().unwrap();
+            assert_eq!(spec.to_string(), s, "round trip of {s:?}");
+        }
+        assert_eq!(OptimizerSpec::default(), OptimizerSpec::Adam);
+        let e = "rmsprop".parse::<OptimizerSpec>().unwrap_err().to_string();
+        assert!(e.contains("rmsprop"), "unknown name echoed: {e}");
+        assert!(e.contains("adam|adafactored|sgd"), "valid names listed: {e}");
+    }
+
+    #[test]
+    fn state_shapes_and_bytes_per_spec() {
+        // Adam: two dense r x c moments; factored: r + c; sgd: nothing.
+        assert_eq!(OptimizerSpec::Adam.state_bytes(128, 256), 2 * 128 * 256 * 4);
+        assert_eq!(OptimizerSpec::AdaFactored.state_bytes(128, 256), (128 + 256) * 4);
+        assert_eq!(OptimizerSpec::Sgd.state_bytes(128, 256), 0);
+        assert_eq!(
+            OptimizerSpec::AdaFactored.state_shapes(128, 256),
+            vec![(128, 1), (1, 256)]
+        );
+        assert_eq!(OptimizerSpec::Adam.state_names(), &["m", "v"]);
+        assert_eq!(OptimizerSpec::Sgd.state_names(), &[] as &[&str]);
+        for spec in OptimizerSpec::all() {
+            let opt = spec.build();
+            assert_eq!(opt.spec(), spec);
+            let st = opt.init(16, 8);
+            assert_eq!(st.bytes(), spec.state_bytes(16, 8));
+            assert_eq!(st.tensors.len(), spec.state_names().len());
+        }
+    }
+
+    #[test]
+    fn adam_update_matches_the_reference_kernel() {
+        // The exact historical adam_step arithmetic, written out
+        // longhand, against the trait impl: bitwise equality.
+        let g = Mat { rows: 2, cols: 2, data: vec![0.5, -1.0, 2.0, 0.25] };
+        let mut w = Mat { rows: 2, cols: 2, data: vec![1.0, 2.0, 3.0, 4.0] };
+        let opt = Adam;
+        let mut st = opt.init(2, 2);
+        let (lr, t) = (1e-3f32, 1i32);
+        opt.update(&mut w, &mut st, &g, t, lr);
+
+        let mut wr = vec![1.0f32, 2.0, 3.0, 4.0];
+        let mut m = vec![0.0f32; 4];
+        let mut v = vec![0.0f32; 4];
+        let bc = ((1.0 - 0.999f64.powi(t)).sqrt() / (1.0 - 0.9f64.powi(t))) as f32;
+        let lr_t = lr * bc;
+        for k in 0..4 {
+            m[k] = 0.9 * m[k] + 0.1 * g.data[k];
+            v[k] = 0.999 * v[k] + 0.001 * g.data[k] * g.data[k];
+            wr[k] -= lr_t * m[k] / (v[k].sqrt() + 1e-8);
+        }
+        assert_eq!(w.data, wr, "adam kernel drifted from the reference");
+        assert_eq!(st.tensors[0].data, m);
+        assert_eq!(st.tensors[1].data, v);
+    }
+
+    #[test]
+    fn factored_update_moves_weights_and_keeps_sublinear_state() {
+        let g = Mat { rows: 3, cols: 4, data: (0..12).map(|i| (i as f32) - 5.0).collect() };
+        let mut w = Mat::zeros(3, 4);
+        let opt = AdaFactored;
+        let mut st = opt.init(3, 4);
+        for t in 1..=5 {
+            opt.update(&mut w, &mut st, &g, t, 1e-2);
+        }
+        assert!(w.data.iter().all(|x| x.is_finite()));
+        assert!(w.data.iter().any(|&x| x != 0.0), "update had no effect");
+        // Descent direction: each weight moved opposite its gradient
+        // (zero gradient leaves the weight at zero).
+        for (wv, gv) in w.data.iter().zip(&g.data) {
+            if *gv != 0.0 {
+                assert!(wv * gv < 0.0, "w {wv} vs g {gv} not a descent step");
+            }
+        }
+        assert_eq!(st.bytes(), (3 + 4) * 4);
+    }
+
+    #[test]
+    fn sgd_is_the_plain_rule() {
+        let g = Mat { rows: 1, cols: 3, data: vec![1.0, -2.0, 0.5] };
+        let mut w = Mat { rows: 1, cols: 3, data: vec![0.0; 3] };
+        let opt = Sgd;
+        let mut st = opt.init(1, 3);
+        opt.update(&mut w, &mut st, &g, 1, 0.1);
+        assert_eq!(w.data, vec![-0.1, 0.2, -0.05]);
+        assert_eq!(st.bytes(), 0);
+    }
+
+    #[test]
+    fn footprint_total_is_the_sum_of_parts() {
+        let fp = MemoryFootprint::new(100, 40, 7);
+        assert_eq!(fp.total, 147);
+        assert_eq!(fp.total, fp.param_bytes + fp.optimizer_bytes + fp.tape_bytes);
+        assert_eq!(MemoryFootprint::default().total, 0);
+    }
+}

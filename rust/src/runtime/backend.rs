@@ -17,6 +17,7 @@
 
 use crate::nn::{ModelSpec, TapeStats};
 use crate::ops::{BudgetSchedule, MethodSpec};
+use crate::optim::{MemoryFootprint, OptimizerSpec};
 
 use super::tensor::HostTensor;
 use crate::util::error::Result;
@@ -47,6 +48,10 @@ pub struct SessionConfig {
     /// total budget re-apportioned across layers by their share of
     /// cached gradient-norm mass each step).
     pub schedule: BudgetSchedule,
+    /// Update rule: `Adam` (default — bitwise-identical to the
+    /// pre-seam hard-coded kernel), factored-second-moment
+    /// `AdaFactored`, or stateless `Sgd`.
+    pub optimizer: OptimizerSpec,
 }
 
 impl SessionConfig {
@@ -60,6 +65,7 @@ impl SessionConfig {
             batch: 0,
             model: ModelSpec::default(),
             schedule: BudgetSchedule::default(),
+            optimizer: OptimizerSpec::default(),
         }
     }
 }
@@ -112,6 +118,14 @@ pub trait TrainSession {
     /// value is empty/zero — backends that cannot measure report that.
     fn tape_stats(&self) -> TapeStats {
         TapeStats::default()
+    }
+
+    /// The whole training-memory budget measured from the live session:
+    /// weights + optimizer state + the last step's tape, with `total`
+    /// always the sum of the parts.  Default (and pre-first-step tape
+    /// term) is zero — backends that cannot measure report that.
+    fn memory_footprint(&self) -> MemoryFootprint {
+        MemoryFootprint::default()
     }
 
     /// Positional state snapshot (checkpointing).

@@ -25,6 +25,7 @@ use crate::nn::{
     TapeStats,
 };
 use crate::ops::{BudgetSchedule, EstimatorSpec, MethodSpec};
+use crate::optim::{MemoryFootprint, OptState, Optimizer, OptimizerSpec};
 use crate::util::error::{Context, Result};
 use crate::util::rng::Rng;
 use crate::{anyhow, bail};
@@ -72,7 +73,8 @@ impl Backend for NativeBackend {
 }
 
 /// Live native training session: a module graph plus the train-step
-/// driver (loss, Adam, norm-cache plumbing, tape accounting).
+/// driver (loss, the pluggable optimizer step, norm-cache plumbing,
+/// tape accounting).
 pub struct NativeSession {
     graph: Sequential,
     n_approx: usize,
@@ -87,6 +89,11 @@ pub struct NativeSession {
     seed: u64,
     lr: f32,
     step: i32,
+    /// The update rule ([`crate::optim::OptimizerSpec::build`]).
+    optimizer: Box<dyn Optimizer>,
+    /// Per-parameter optimizer state, in graph `visit_params` order
+    /// (the session owns it; `Param` carries only weight + gradient).
+    opt_states: Vec<OptState>,
     /// Tape accounting snapshot of the last train step.
     last_stats: TapeStats,
     /// Per-layer budget schedule (`Fixed` leaves every estimator on its
@@ -123,6 +130,11 @@ impl NativeSession {
         let built = ModelBuilder::new(dims, method, cfg.model)
             .build(&mut rng)
             .context("native backend: building the model graph")?;
+        let optimizer = cfg.optimizer.build();
+        let mut opt_states = Vec::new();
+        built
+            .graph
+            .visit_params(&mut |p| opt_states.push(optimizer.init(p.w.rows, p.w.cols)));
         Ok(NativeSession {
             graph: built.graph,
             n_approx: built.n_approx,
@@ -134,6 +146,8 @@ impl NativeSession {
             seed: cfg.seed,
             lr: cfg.lr,
             step: 0,
+            optimizer,
+            opt_states,
             last_stats: TapeStats::default(),
             schedule: cfg.schedule,
             estimator: method.estimator,
@@ -325,27 +339,23 @@ impl NativeSession {
         Ok(((loss / counted as f64) as f32, dl))
     }
 
-    /// One Adam update over every parameter the backward walk left a
-    /// gradient on (bias-corrected, matching the historical kernels).
-    fn adam_step(&mut self) {
+    /// One optimizer update over every parameter the backward walk left
+    /// a gradient on — the configured [`Optimizer`] applied in graph
+    /// `visit_params` order (with the default Adam spec this is
+    /// bitwise-identical to the historical hard-coded `adam_step`).
+    fn optimizer_step(&mut self) {
         self.step += 1;
         let t = self.step;
-        let bc = ((1.0 - 0.999f64.powi(t)).sqrt() / (1.0 - 0.9f64.powi(t))) as f32;
-        let lr_t = self.lr * bc;
+        let lr = self.lr;
+        let opt = &*self.optimizer;
+        let states = &mut self.opt_states;
+        let mut idx = 0usize;
         self.graph.visit_params_mut(&mut |p| {
+            let i = idx;
+            idx += 1;
             let Some(g) = p.g.take() else { return };
             debug_assert_eq!((p.w.rows, p.w.cols), (g.rows, g.cols));
-            for ((w, m), (v, gv)) in p
-                .w
-                .data
-                .iter_mut()
-                .zip(p.m.data.iter_mut())
-                .zip(p.v.data.iter_mut().zip(&g.data))
-            {
-                *m = 0.9 * *m + 0.1 * gv;
-                *v = 0.999 * *v + 0.001 * gv * gv;
-                *w -= lr_t * *m / (v.sqrt() + 1e-8);
-            }
+            opt.update(&mut p.w, &mut states[i], &g, t, lr);
         });
     }
 }
@@ -417,7 +427,7 @@ impl TrainSession for NativeSession {
                 tape.len()
             );
         }
-        self.adam_step();
+        self.optimizer_step();
         Ok((loss, norms))
     }
 
@@ -427,73 +437,122 @@ impl TrainSession for NativeSession {
         Ok(logits.data)
     }
 
+    fn memory_footprint(&self) -> MemoryFootprint {
+        let mut param_bytes = 0usize;
+        self.graph.visit_params(&mut |p| param_bytes += 4 * p.w.data.len());
+        let optimizer_bytes = self.opt_states.iter().map(OptState::bytes).sum();
+        MemoryFootprint::new(param_bytes, optimizer_bytes, self.last_stats.total)
+    }
+
     fn state(&self) -> Vec<HostTensor> {
         let mut out = vec![HostTensor::scalar_i32(self.step)];
+        let states = &self.opt_states;
+        let mut idx = 0usize;
         self.graph.visit_params(&mut |p| {
-            for m in [&p.w, &p.m, &p.v] {
+            out.push(HostTensor::f32(vec![p.w.rows, p.w.cols], p.w.data.clone()));
+            for m in &states[idx].tensors {
                 out.push(HostTensor::f32(vec![m.rows, m.cols], m.data.clone()));
             }
+            idx += 1;
         });
         out
     }
 
     fn restore_state(&mut self, state: Vec<HostTensor>) -> Result<()> {
-        // Expected layout: [step, (w, m, v) per param in graph order].
+        // Expected layout: [step, (w, then the spec's named state
+        // tensors) per param in graph order].
+        let spec = self.optimizer.spec();
+        let names = spec.state_names();
         let mut shapes: Vec<(usize, usize)> = Vec::new();
         self.graph.visit_params(&mut |p| shapes.push((p.w.rows, p.w.cols)));
-        let expect = 1 + 3 * shapes.len();
+        let expect = 1 + (1 + names.len()) * shapes.len();
         if state.len() != expect {
+            // A tensor count that matches a *different* optimizer's
+            // layout means the checkpoint and the session disagree on
+            // the update rule — name both instead of a bare count.
+            for other in OptimizerSpec::all() {
+                let other_expect = 1 + (1 + other.state_names().len()) * shapes.len();
+                if other != spec && state.len() == other_expect {
+                    bail!(
+                        "native state: checkpoint was written under optimizer \
+                         {other} ({other_expect} tensors) but this session uses \
+                         {spec} (expects {expect}) — reopen with --optimizer \
+                         {other} to restore it"
+                    );
+                }
+            }
             bail!("native state: expected {expect} tensors, got {}", state.len());
         }
         let step = state[0].scalar_i32_value().context("state step slot")?;
         // Validate and materialize everything before touching the graph,
         // so a malformed snapshot reports instead of half-restoring.
         let mut it = state.into_iter().skip(1);
-        let mut packs: Vec<(Mat, Mat, Mat)> = Vec::with_capacity(shapes.len());
+        let mut weights: Vec<Mat> = Vec::with_capacity(shapes.len());
+        let mut opt_packs: Vec<Vec<Mat>> = Vec::with_capacity(shapes.len());
         for (pi, &(rows, cols)) in shapes.iter().enumerate() {
-            let mut mats: Vec<Mat> = Vec::with_capacity(3);
-            for what in ["w", "m", "v"] {
+            let state_shapes = spec.state_shapes(rows, cols);
+            let mut mats: Vec<Mat> = Vec::with_capacity(1 + names.len());
+            for (si, what) in std::iter::once("w").chain(names.iter().copied()).enumerate()
+            {
+                let (wr, wc) = if si == 0 { (rows, cols) } else { state_shapes[si - 1] };
                 let t = it.next().ok_or_else(|| {
                     anyhow!("native state: short state vector at param #{pi} {what}")
                 })?;
-                if t.shape != vec![rows, cols] {
+                if t.shape != vec![wr, wc] {
+                    // An optimizer-state slot whose shape matches a
+                    // *different* spec's layout: name both specs.
+                    if si > 0 {
+                        for other in OptimizerSpec::all() {
+                            if other == spec {
+                                continue;
+                            }
+                            let osh = other.state_shapes(rows, cols);
+                            if osh.get(si - 1).map(|&(r, c)| vec![r, c]) == Some(t.shape.clone())
+                            {
+                                bail!(
+                                    "native state: param #{pi} state tensor has the \
+                                     {other} optimizer's shape {:?}, but this session \
+                                     uses {spec} (expected [{wr}, {wc}]) — reopen with \
+                                     --optimizer {other} to restore it",
+                                    t.shape
+                                );
+                            }
+                        }
+                    }
                     bail!(
                         "native state: param #{pi} {what} shape {:?}, expected [{}, {}]",
                         t.shape,
-                        rows,
-                        cols
+                        wr,
+                        wc
                     );
                 }
                 let data = t
                     .as_f32()
                     .with_context(|| format!("native state: param #{pi} {what} dtype"))?
                     .to_vec();
-                mats.push(Mat { rows, cols, data });
+                mats.push(Mat { rows: wr, cols: wc, data });
             }
-            let v = mats
-                .pop()
-                .ok_or_else(|| anyhow!("native state: param #{pi} missing v slot"))?;
-            let m = mats
-                .pop()
-                .ok_or_else(|| anyhow!("native state: param #{pi} missing m slot"))?;
+            let mut mats = mats.into_iter();
             let w = mats
-                .pop()
+                .next()
                 .ok_or_else(|| anyhow!("native state: param #{pi} missing w slot"))?;
-            packs.push((w, m, v));
+            weights.push(w);
+            opt_packs.push(mats.collect());
         }
-        let mut packs = packs.into_iter();
+        let mut weights = weights.into_iter();
         let mut short = false;
-        self.graph.visit_params_mut(&mut |p| match packs.next() {
-            Some((w, m, v)) => {
+        self.graph.visit_params_mut(&mut |p| match weights.next() {
+            Some(w) => {
                 p.w = w;
-                p.m = m;
-                p.v = v;
                 p.g = None;
             }
             None => short = true,
         });
         if short {
             bail!("native state: fewer tensors than graph parameters");
+        }
+        for (dst, src) in self.opt_states.iter_mut().zip(opt_packs) {
+            dst.tensors = src;
         }
         self.step = step;
         Ok(())
@@ -1101,15 +1160,121 @@ mod tests {
     }
 
     #[test]
-    fn transformer_rejects_lora_and_bad_heads() {
+    fn transformer_lora_builds_and_bad_heads_reject() {
+        // lora over attention now builds: a frozen trunk with 12
+        // trainable adapter halves per block plus the trained head
+        // (linear + bias) — 26 params, each carrying adam's (m, v).
         let mut c = tf_cfg("lora-wtacrs30", 2);
-        assert!(NativeSession::new(&c).is_err());
+        let sess = NativeSession::new(&c).unwrap();
+        assert_eq!(sess.state().len(), 1 + 3 * (12 * 2 + 2));
         c = tf_cfg("full-wtacrs30", 2);
         c.model.heads = 3; // 128 % 3 != 0
         assert!(NativeSession::new(&c).is_err());
         c = tf_cfg("full-wtacrs30", 2);
         c.model.depth = 0;
         assert!(NativeSession::new(&c).is_err());
+    }
+
+    #[test]
+    fn footprint_identity_and_per_spec_state_bytes() {
+        use crate::optim::OptimizerSpec;
+        let mut adam_bytes = 0usize;
+        for spec in OptimizerSpec::all() {
+            let mut c = tf_cfg("full-wtacrs30", 2);
+            c.optimizer = spec;
+            let mut sess = NativeSession::new(&c).unwrap();
+            let (toks, labs) = toy_batch(&sess);
+            let zn = vec![1.0f32; sess.n_approx_layers() * sess.batch];
+            sess.train_step(&toks, &labs, &[], &zn).unwrap();
+            let fp = sess.memory_footprint();
+            assert_eq!(
+                fp.total,
+                fp.param_bytes + fp.optimizer_bytes + fp.tape_bytes,
+                "{spec}"
+            );
+            assert!(fp.param_bytes > 0 && fp.tape_bytes > 0, "{spec}");
+            match spec {
+                OptimizerSpec::Adam => {
+                    // m and v mirror every weight exactly.
+                    assert_eq!(fp.optimizer_bytes, 2 * fp.param_bytes);
+                    adam_bytes = fp.optimizer_bytes;
+                }
+                OptimizerSpec::AdaFactored => {
+                    // The factored second moment keeps O(r + c) per
+                    // matrix — far under the acceptance bound.
+                    assert!(fp.optimizer_bytes > 0);
+                    assert!(
+                        (fp.optimizer_bytes as f64) < 0.15 * adam_bytes as f64,
+                        "factored state {} vs adam {adam_bytes}",
+                        fp.optimizer_bytes
+                    );
+                }
+                OptimizerSpec::Sgd => assert_eq!(fp.optimizer_bytes, 0, "{spec}"),
+            }
+        }
+    }
+
+    #[test]
+    fn alternate_optimizers_learn_the_toy_task() {
+        use crate::optim::OptimizerSpec;
+        for spec in [OptimizerSpec::AdaFactored, OptimizerSpec::Sgd] {
+            let mut c = cfg("full-wtacrs30", 2);
+            c.optimizer = spec;
+            if spec == OptimizerSpec::Sgd {
+                // Raw SGD has no per-parameter scaling; give it a lr
+                // that moves the toy task in 30 steps.
+                c.lr = 0.05;
+            }
+            let mut sess = NativeSession::new(&c).unwrap();
+            let (toks, labs) = toy_batch(&sess);
+            let zn = vec![1.0f32; sess.n_approx_layers() * sess.batch];
+            let mut first = f32::NAN;
+            let mut last = f32::NAN;
+            for step in 0..30 {
+                let (loss, _) = sess.train_step(&toks, &labs, &[], &zn).unwrap();
+                assert!(loss.is_finite(), "{spec} step {step}");
+                if step == 0 {
+                    first = loss;
+                }
+                last = loss;
+            }
+            assert!(last < first, "{spec}: loss {first} -> {last}");
+        }
+    }
+
+    #[test]
+    fn restore_refuses_mismatched_optimizer_naming_both() {
+        use crate::optim::OptimizerSpec;
+        let mut s1 = NativeSession::new(&cfg("full-wtacrs30", 2)).unwrap();
+        let (toks, labs) = toy_batch(&s1);
+        let zn = vec![1.0f32; s1.n_approx_layers() * s1.batch];
+        s1.train_step(&toks, &labs, &[], &zn).unwrap();
+        let adam_state = s1.state();
+
+        // adam and adafactored share the tensor *count* (1 + 3·params);
+        // the state-slot shapes are what identify the writer.
+        let mut c = cfg("full-wtacrs30", 2);
+        c.optimizer = OptimizerSpec::AdaFactored;
+        let mut s2 = NativeSession::new(&c).unwrap();
+        let e = s2.restore_state(adam_state.clone()).unwrap_err().to_string();
+        assert!(e.contains("adam") && e.contains("adafactored"), "{e}");
+
+        // The reverse direction diagnoses the same way.
+        let mut fc = cfg("full-wtacrs30", 2);
+        fc.optimizer = OptimizerSpec::AdaFactored;
+        let mut f1 = NativeSession::new(&fc).unwrap();
+        f1.train_step(&toks, &labs, &[], &zn).unwrap();
+        let mut s3 = NativeSession::new(&cfg("full-wtacrs30", 2)).unwrap();
+        let e = s3.restore_state(f1.state()).unwrap_err().to_string();
+        assert!(e.contains("adafactored") && e.contains("adam"), "{e}");
+
+        // sgd keeps no per-param state, so the count check catches the
+        // mismatch first — still naming both specs.
+        let mut sc = cfg("full-wtacrs30", 2);
+        sc.optimizer = OptimizerSpec::Sgd;
+        let mut s4 = NativeSession::new(&sc).unwrap();
+        let e = s4.restore_state(adam_state).unwrap_err().to_string();
+        assert!(e.contains("adam") && e.contains("sgd"), "{e}");
     }
 
     #[test]

@@ -514,6 +514,7 @@ mod tests {
             method: cfg.method,
             n_out: cfg.n_out,
             seed: cfg.seed,
+            optimizer: cfg.optimizer,
             spec: cfg.model,
         };
         let p = tmpfile(name);
@@ -627,6 +628,7 @@ mod tests {
             method: "full-wtacrs30".parse().unwrap(),
             n_out: 2,
             seed: 0,
+            optimizer: Default::default(),
             spec: ModelSpec {
                 depth: 2,
                 width: 0,
@@ -657,6 +659,7 @@ mod tests {
             method: "full-wtacrs30".parse().unwrap(),
             n_out: 2,
             seed: 3,
+            optimizer: Default::default(),
             spec: ModelSpec {
                 depth: 2,
                 width: 0,

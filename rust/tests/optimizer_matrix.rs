@@ -1,0 +1,259 @@
+//! The optimizer matrix: every `OptimizerSpec` driven end-to-end
+//! through the public API — spec selection round-trips, the adam
+//! default stays bitwise-identical to an explicit `--optimizer adam`,
+//! adafactored learns the tiny transformer inside a loss band of adam
+//! at a fraction of its optimizer bytes, snapshots carry the
+//! spec-named `param{p}.opt.{name}` tensors and round-trip per spec,
+//! and a mismatched restore is refused naming both update rules.
+
+use std::path::PathBuf;
+
+use wtacrs::coordinator::{
+    run_glue, run_lm, save_snapshot, ExperimentOptions, SnapshotMeta, SnapshotReader,
+    TrainOptions,
+};
+use wtacrs::nn::{Arch, ModelSpec};
+use wtacrs::optim::OptimizerSpec;
+use wtacrs::ops::Contraction;
+use wtacrs::runtime::{Backend, NativeBackend, SessionConfig, TrainSession};
+
+fn tf_model(arch: Arch) -> ModelSpec {
+    ModelSpec {
+        depth: 2,
+        width: 0,
+        contraction: Contraction::Tokens { per_sample: 4 },
+        arch,
+        heads: 4,
+    }
+}
+
+fn tf_opts(optimizer: OptimizerSpec, arch: Arch) -> ExperimentOptions {
+    ExperimentOptions {
+        train: TrainOptions { lr: 1e-3, max_steps: 20, optimizer, ..Default::default() },
+        train_size: 64,
+        val_size: 32,
+        model: tf_model(arch),
+        ..Default::default()
+    }
+}
+
+#[test]
+fn spec_round_trips_and_state_bytes_are_sublinear() {
+    for spec in OptimizerSpec::all() {
+        let s = spec.to_string();
+        assert_eq!(s.parse::<OptimizerSpec>().unwrap(), spec);
+    }
+    assert_eq!(OptimizerSpec::default(), OptimizerSpec::Adam);
+    let e = "adamw".parse::<OptimizerSpec>().unwrap_err().to_string();
+    for name in ["adam", "adafactored", "sgd"] {
+        assert!(e.contains(name), "{e}");
+    }
+    // Factored second moments keep O(r + c) floats where adam keeps
+    // 2·r·c; sgd keeps none.
+    let (r, c) = (512usize, 768usize);
+    assert_eq!(OptimizerSpec::Adam.state_bytes(r, c), 2 * 4 * r * c);
+    assert_eq!(OptimizerSpec::AdaFactored.state_bytes(r, c), 4 * (r + c));
+    assert_eq!(OptimizerSpec::Sgd.state_bytes(r, c), 0);
+}
+
+#[test]
+fn default_options_are_bitwise_the_explicit_adam_run() {
+    let backend = NativeBackend::new();
+    let mut opts = ExperimentOptions::default();
+    opts.train.lr = 1e-3;
+    opts.train.max_steps = 4;
+    opts.train_size = 64;
+    opts.val_size = 32;
+    let spec = "full-wtacrs30".parse().unwrap();
+    let implicit = run_glue(&backend, "rte", "tiny", &spec, &opts).unwrap();
+    opts.train.optimizer = OptimizerSpec::Adam;
+    let explicit = run_glue(&backend, "rte", "tiny", &spec, &opts).unwrap();
+    assert_eq!(implicit.report.losses, explicit.report.losses);
+    assert_eq!(implicit.report.final_metric, explicit.report.final_metric);
+    assert_eq!(implicit.report.footprint, explicit.report.footprint);
+}
+
+#[test]
+fn adafactored_trains_the_tiny_transformer_inside_the_adam_loss_band() {
+    let backend = NativeBackend::new();
+    let spec = "full-wtacrs30".parse().unwrap();
+    let mut finals = Vec::new();
+    let mut opt_bytes = Vec::new();
+    for optimizer in [OptimizerSpec::Adam, OptimizerSpec::AdaFactored] {
+        let r = run_glue(
+            &backend,
+            "rte",
+            "tiny",
+            &spec,
+            &tf_opts(optimizer, Arch::Transformer),
+        )
+        .unwrap();
+        let losses = &r.report.losses;
+        assert!(losses.iter().all(|l| l.is_finite()), "{optimizer}");
+        assert!(
+            losses[losses.len() - 1] < losses[0],
+            "{optimizer}: loss {} -> {}",
+            losses[0],
+            losses[losses.len() - 1]
+        );
+        let fp = r.report.footprint;
+        assert_eq!(
+            fp.total,
+            fp.param_bytes + fp.optimizer_bytes + fp.tape_bytes,
+            "{optimizer}"
+        );
+        finals.push(losses[losses.len() - 1]);
+        opt_bytes.push(fp.optimizer_bytes);
+    }
+    // Same trajectory class: the factored rule lands near adam.
+    assert!(
+        (finals[1] - finals[0]).abs() < 0.2,
+        "adafactored final loss {} strayed from adam's {}",
+        finals[1],
+        finals[0]
+    );
+    // ... at a fraction of the optimizer footprint.
+    assert!(
+        (opt_bytes[1] as f64) < 0.15 * opt_bytes[0] as f64,
+        "adafactored bytes {} vs adam {}",
+        opt_bytes[1],
+        opt_bytes[0]
+    );
+}
+
+#[test]
+fn causal_lm_runs_report_the_footprint_identity_per_spec() {
+    let backend = NativeBackend::new();
+    let spec = "full-wtacrs30".parse().unwrap();
+    for optimizer in OptimizerSpec::all() {
+        let mut opts = tf_opts(optimizer, Arch::CausalLm);
+        opts.train.max_steps = 3;
+        let r = run_lm(&backend, "tiny", &spec, &opts).unwrap();
+        assert!(r.eval_nll.is_finite(), "{optimizer}");
+        let fp = r.footprint;
+        assert_eq!(
+            fp.total,
+            fp.param_bytes + fp.optimizer_bytes + fp.tape_bytes,
+            "{optimizer}"
+        );
+        match optimizer {
+            OptimizerSpec::Adam => assert_eq!(fp.optimizer_bytes, 2 * fp.param_bytes),
+            OptimizerSpec::AdaFactored => {
+                assert!(fp.optimizer_bytes > 0);
+                assert!(fp.optimizer_bytes < fp.param_bytes / 6, "{fp:?}");
+            }
+            OptimizerSpec::Sgd => assert_eq!(fp.optimizer_bytes, 0),
+        }
+    }
+}
+
+fn toy_batch(sess: &dyn TrainSession) -> (Vec<i32>, Vec<i32>) {
+    let (b, s) = (sess.batch_size(), sess.seq_len());
+    let mut toks = vec![0i32; b * s];
+    let mut labs = vec![0i32; b];
+    for r in 0..b {
+        let t = 4 + ((r * 37) % 1000) as i32;
+        for c in 0..8 {
+            toks[r * s + c] = t;
+        }
+        labs[r] = (t > 512) as i32;
+    }
+    (toks, labs)
+}
+
+fn snap_path(name: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("wtacrs-optmat-{}", std::process::id()));
+    std::fs::create_dir_all(&d).unwrap();
+    d.join(name)
+}
+
+#[test]
+fn snapshots_round_trip_per_spec_with_named_state_tensors() {
+    let backend = NativeBackend::new();
+    for optimizer in OptimizerSpec::all() {
+        let mut cfg = SessionConfig::new("tiny", "full-wtacrs30".parse().unwrap(), 2);
+        cfg.lr = 1e-3;
+        cfg.optimizer = optimizer;
+        let mut s1 = backend.open(&cfg).unwrap();
+        let (toks, labs) = toy_batch(s1.as_ref());
+        let zn = vec![1.0f32; s1.n_approx_layers() * s1.batch_size()];
+        for _ in 0..3 {
+            s1.train_step(&toks, &labs, &[], &zn).unwrap();
+        }
+        let meta = SnapshotMeta {
+            size: "tiny".into(),
+            method: cfg.method.clone(),
+            n_out: 2,
+            seed: cfg.seed,
+            optimizer,
+            spec: cfg.model,
+        };
+        let p = snap_path(&format!("{optimizer}.wtacrs"));
+        save_snapshot(&p, &meta, &s1.state()).unwrap();
+
+        let mut reader = SnapshotReader::open(&p).unwrap();
+        let manifest = reader.manifest().clone();
+        assert_eq!(manifest.meta.optimizer, optimizer, "{optimizer}");
+        assert!(manifest.index_of("param0.w").is_some(), "{optimizer}");
+        match optimizer {
+            OptimizerSpec::Adam => {
+                assert!(manifest.index_of("param0.opt.m").is_some());
+                assert!(manifest.index_of("param0.opt.v").is_some());
+            }
+            OptimizerSpec::AdaFactored => {
+                assert!(manifest.index_of("param0.opt.vr").is_some());
+                assert!(manifest.index_of("param0.opt.vc").is_some());
+                assert!(manifest.index_of("param0.opt.m").is_none());
+            }
+            OptimizerSpec::Sgd => {
+                assert!(manifest.tensors.iter().all(|t| !t.name.contains(".opt.")));
+            }
+        }
+
+        let state: Vec<_> = (0..manifest.tensors.len())
+            .map(|i| reader.tensor(i).unwrap())
+            .collect();
+        let mut s2 = backend.open(&cfg).unwrap();
+        s2.restore_state(state).unwrap();
+        let (l1, _) = s1.train_step(&toks, &labs, &[], &zn).unwrap();
+        let (l2, _) = s2.train_step(&toks, &labs, &[], &zn).unwrap();
+        assert_eq!(l1, l2, "{optimizer}: restored session diverged");
+        std::fs::remove_file(&p).ok();
+    }
+}
+
+#[test]
+fn mismatched_optimizer_layouts_are_refused_naming_both_specs() {
+    let backend = NativeBackend::new();
+    let mut cfg = SessionConfig::new("tiny", "full-wtacrs30".parse().unwrap(), 2);
+    cfg.lr = 1e-3;
+    cfg.optimizer = OptimizerSpec::AdaFactored;
+    let mut s1 = backend.open(&cfg).unwrap();
+    let (toks, labs) = toy_batch(s1.as_ref());
+    let zn = vec![1.0f32; s1.n_approx_layers() * s1.batch_size()];
+    s1.train_step(&toks, &labs, &[], &zn).unwrap();
+    let state = s1.state();
+
+    // The writer refuses a meta whose spec cannot account for the
+    // state-vector stride.
+    let meta = SnapshotMeta {
+        size: "tiny".into(),
+        method: cfg.method.clone(),
+        n_out: 2,
+        seed: cfg.seed,
+        optimizer: OptimizerSpec::Sgd,
+        spec: cfg.model,
+    };
+    let p = snap_path("mismatch.wtacrs");
+    let e = save_snapshot(&p, &meta, &state).unwrap_err().to_string();
+    assert!(e.contains("sgd"), "{e}");
+
+    // A trainer under a different rule refuses the restore, naming the
+    // writer's spec and its own.
+    let mut adam_cfg = cfg.clone();
+    adam_cfg.optimizer = OptimizerSpec::Adam;
+    let mut s2 = backend.open(&adam_cfg).unwrap();
+    let e = s2.restore_state(state).unwrap_err().to_string();
+    assert!(e.contains("adafactored") && e.contains("adam"), "{e}");
+    std::fs::remove_file(&p).ok();
+}
